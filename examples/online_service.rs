@@ -1,0 +1,101 @@
+//! Online-serving demo: start the coordinator service on a local TCP
+//! port, drive it with a concurrent stream of task submissions over the
+//! JSON-lines protocol, and report scheduling latency/throughput — the
+//! deployable form of the paper's Kubernetes score plugin.
+//!
+//! Run: `cargo run --release --example online_service -- [n_tasks] [n_clients]`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use repro::cluster::ClusterSpec;
+use repro::coordinator::{CoordinatorState, Server};
+use repro::sched::PolicyKind;
+use repro::trace::TraceSpec;
+use repro::util::stats;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_tasks: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let n_clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let spec = TraceSpec::default_trace();
+    let workload = spec.synthesize(7).workload();
+    let state = CoordinatorState::new(
+        ClusterSpec::paper_scaled(0.25).build(),
+        PolicyKind::PwrFgd { alpha: 0.1 },
+        workload,
+    );
+    let server = Server::bind("127.0.0.1:0", state).expect("bind");
+    let port = server.port();
+    let shared = server.state();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+    println!("coordinator on 127.0.0.1:{port} (policy PWR100+FGD900)");
+
+    let t0 = std::time::Instant::now();
+    let per_client = n_tasks / n_clients;
+    let clients: Vec<_> = (0..n_clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut sampler = TraceSpec::default_trace().sampler(100 + c as u64);
+                let conn = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+                conn.set_nodelay(true).unwrap();
+                let mut writer = conn.try_clone().unwrap();
+                let mut reader = BufReader::new(conn);
+                let mut latencies_us = Vec::with_capacity(per_client);
+                let mut scheduled = 0usize;
+                let mut line = String::new();
+                for i in 0..per_client {
+                    let task = sampler.next_task();
+                    let req = format!(
+                        "{{\"op\":\"submit\",\"id\":{},\"cpu\":{},\"mem\":{},\"gpu\":{}}}\n",
+                        (c * 1_000_000 + i),
+                        task.cpu,
+                        task.mem,
+                        task.gpu.units()
+                    );
+                    let t = std::time::Instant::now();
+                    writer.write_all(req.as_bytes()).unwrap();
+                    line.clear();
+                    reader.read_line(&mut line).unwrap();
+                    latencies_us.push(t.elapsed().as_micros() as f64);
+                    if line.contains("\"ok\":true") {
+                        scheduled += 1;
+                    }
+                }
+                (latencies_us, scheduled)
+            })
+        })
+        .collect();
+
+    let mut all_lat = Vec::new();
+    let mut total_sched = 0usize;
+    for c in clients {
+        let (lat, sched) = c.join().unwrap();
+        all_lat.extend(lat);
+        total_sched += sched;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!("\nsubmitted {n_tasks} tasks from {n_clients} clients in {dt:.2}s");
+    println!("  throughput  {:.0} decisions/s", n_tasks as f64 / dt);
+    println!(
+        "  latency     p50 {:.0} µs | p95 {:.0} µs | p99 {:.0} µs",
+        stats::percentile(&all_lat, 50.0),
+        stats::percentile(&all_lat, 95.0),
+        stats::percentile(&all_lat, 99.0)
+    );
+    println!("  scheduled   {total_sched} / {n_tasks}");
+    {
+        let st = shared.lock().unwrap();
+        let stats_json = st.stats();
+        println!("  server view {}", stats_json.dump());
+    }
+
+    // Shut the server down cleanly.
+    let mut conn = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    conn.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+    let mut line = String::new();
+    let _ = BufReader::new(conn).read_line(&mut line);
+    server_thread.join().unwrap();
+}

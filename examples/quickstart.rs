@@ -1,0 +1,68 @@
+//! Quickstart: build a small GPU cluster, schedule a handful of tasks
+//! with the paper's combined PWR+FGD policy, and inspect power and
+//! fragmentation.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use repro::cluster::ClusterSpec;
+use repro::frag;
+use repro::power;
+use repro::sched::{PolicyKind, Scheduler};
+use repro::tasks::{GpuDemand, Task};
+use repro::trace::TraceSpec;
+
+fn main() {
+    // A 16-node slice of the paper's datacenter mix.
+    let mut dc = ClusterSpec::paper_scaled(0.02).build();
+    println!(
+        "cluster: {} nodes, {} GPUs, {} vCPUs",
+        dc.nodes.len(),
+        dc.total_gpus(),
+        dc.total_vcpus()
+    );
+
+    // Target workload M (Table-I-calibrated trace).
+    let workload = TraceSpec::default_trace().synthesize(7).workload();
+    println!("workload classes: {}", workload.classes.len());
+
+    // The paper's sweet spot: alpha = 0.1 (PWR100+FGD900).
+    let mut sched = Scheduler::from_policy(PolicyKind::PwrFgd { alpha: 0.1 });
+
+    let tasks = vec![
+        Task::new(0, 8.0, 16_384.0, GpuDemand::Whole(1)),
+        Task::new(1, 4.0, 8_192.0, GpuDemand::Frac(0.5)),
+        Task::new(2, 4.0, 8_192.0, GpuDemand::Frac(0.5)), // should share with task 1
+        Task::new(3, 16.0, 32_768.0, GpuDemand::Whole(8)),
+        Task::new(4, 2.0, 4_096.0, GpuDemand::Zero),
+    ];
+
+    println!("\nidle EOPC: {:.2} kW", power::p_datacenter(&dc) / 1e3);
+    for task in &tasks {
+        match sched.schedule(&dc, &workload, task) {
+            Some(d) => {
+                println!(
+                    "task {} (cpu {:>4}, gpu {:?}) -> node {:>3} ({:?}) [{}]",
+                    task.id,
+                    task.cpu,
+                    task.gpu,
+                    d.node,
+                    d.placement,
+                    dc.nodes[d.node]
+                        .gpu_model
+                        .map(|m| m.to_string())
+                        .unwrap_or_else(|| "cpu-only".into()),
+                );
+                dc.allocate(task, d.node, &d.placement);
+                sched.notify_node_changed(d.node);
+            }
+            None => println!("task {} could not be scheduled", task.id),
+        }
+    }
+
+    let (cpu_w, gpu_w) = power::p_datacenter_split(&dc);
+    println!("\nafter scheduling:");
+    println!("  EOPC           {:.2} kW (cpu {:.2} / gpu {:.2})", (cpu_w + gpu_w) / 1e3, cpu_w / 1e3, gpu_w / 1e3);
+    println!("  active nodes   {}", dc.active_nodes());
+    println!("  active GPUs    {}", dc.active_gpus());
+    println!("  fragmentation  {:.3} GPU units", frag::f_datacenter(&dc, &workload));
+}

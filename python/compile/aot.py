@@ -1,0 +1,87 @@
+"""AOT lowering: JAX scoring graph → HLO **text** artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client. HLO text — *not* ``.serialize()`` — is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (per size variant)::
+
+    artifacts/<variant>/scorer.hlo.txt     the compiled scoring graph
+    artifacts/<variant>/scorer_meta.json   {"n":..,"g":..,"m":..}
+
+Variants: ``small`` (N=64 — integration tests, benches) and ``full``
+(N=1280 ≥ the paper's 1,213 nodes).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import make_scorer
+
+VARIANTS = {
+    "small": dict(n=64, g=8, m=64, block_n=32),
+    "full": dict(n=1280, g=8, m=64, block_n=32),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    Rust side unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(n: int, g: int, m: int, block_n: int, use_pallas: bool = True):
+    """Lower one artifact variant; returns the HLO text."""
+    scorer = make_scorer(n, g, m, use_pallas=use_pallas, block_n=block_n)
+    f32 = jnp.float32
+    specs = (
+        jax.ShapeDtypeStruct((n, g), f32),  # gpu_free
+        jax.ShapeDtypeStruct((n, 6), f32),  # node_aux
+        jax.ShapeDtypeStruct((m, 7), f32),  # classes
+        jax.ShapeDtypeStruct((8,), f32),    # task
+        jax.ShapeDtypeStruct((1,), f32),    # alpha
+    )
+    return to_hlo_text(jax.jit(scorer).lower(*specs))
+
+
+def build(out_root: str, variants=None) -> list:
+    written = []
+    for name, cfg in VARIANTS.items():
+        if variants and name not in variants:
+            continue
+        out_dir = os.path.join(out_root, name)
+        os.makedirs(out_dir, exist_ok=True)
+        text = lower_variant(cfg["n"], cfg["g"], cfg["m"], cfg["block_n"])
+        hlo_path = os.path.join(out_dir, "scorer.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        meta_path = os.path.join(out_dir, "scorer_meta.json")
+        with open(meta_path, "w") as f:
+            json.dump({"n": cfg["n"], "g": cfg["g"], "m": cfg["m"]}, f)
+        print(f"wrote {hlo_path} ({len(text)} chars) + {meta_path}")
+        written.extend([hlo_path, meta_path])
+    return written
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact root dir")
+    ap.add_argument("--variant", action="append", help="subset of variants")
+    args = ap.parse_args()
+    build(args.out, args.variant)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the L1 fragmentation kernel.
+
+Implements exactly the semantics of ``score.frag_pass`` without Pallas
+(straight broadcast jnp). pytest (`python/tests/test_kernel.py`)
+hypothesis-sweeps random cluster states, tasks and class tables and
+asserts the kernel matches this reference to f32 tolerance; the L2 model
+can also be built on this implementation (``use_pallas=False``) as an
+A/B oracle for the full scoring graph.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.score import EPS, f_node
+
+
+def frag_pass_ref(gpu_free, node_aux, classes, task):
+    """Reference implementation of ``score.frag_pass`` (same contract)."""
+    cpu_free = node_aux[:, 0]
+    mem_free = node_aux[:, 1]
+    model = node_aux[:, 3]
+    g = gpu_free.shape[-1]
+
+    frag_before = f_node(cpu_free, mem_free, model, gpu_free, classes)
+
+    t_cpu, t_mem, t_units = task[0], task[1], task[2]
+    t_iswhole, t_k = task[4], task[5]
+    cpu_after = cpu_free - t_cpu
+    mem_after = mem_free - t_mem
+
+    eye = jnp.eye(g, dtype=gpu_free.dtype)
+    free_var = gpu_free[:, None, :] - t_units * eye[None, :, :]
+    free_var = jnp.where((free_var < 0.0) & (free_var > -1e-3), 0.0, free_var)
+    frag_after_frac = f_node(
+        cpu_after[:, None], mem_after[:, None], model[:, None], free_var, classes
+    )
+
+    is_free = jnp.where(gpu_free >= 1.0 - EPS, 1.0, 0.0)
+    takeable = jnp.cumsum(is_free, axis=-1) <= t_k
+    take = (is_free > 0.0) & takeable & (t_iswhole > 0.0)
+    free_alt = jnp.where(take, 0.0, gpu_free)
+    frag_after_alt = f_node(cpu_after, mem_after, model, free_alt, classes)
+
+    return frag_before, frag_after_frac, frag_after_alt

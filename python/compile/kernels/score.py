@@ -1,0 +1,174 @@
+"""L1 — the Pallas fragmentation-scoring kernel.
+
+The scheduler's numeric hot-spot is the per-decision evaluation of the
+FGD expected-fragmentation metric over *every* node, *every* candidate
+GPU placement and *every* workload class: an ``[N, G, M]`` reduction
+(paper §II; Weng et al. ATC'23). This kernel computes, for one task and
+the dense-encoded cluster state:
+
+* ``frag_before[n]``      — ``F_n(M)`` of the current state,
+* ``frag_after_frac[n,g]`` — ``F_n(M)`` after hypothetically placing a
+  fractional task on GPU ``g`` (garbage where the placement is
+  infeasible; L2 masks it),
+* ``frag_after_alt[n]``   — ``F_n(M)`` after the canonical whole-GPU
+  placement (k lowest-indexed fully-free GPUs) for whole-GPU tasks, or
+  after the CPU/MEM-only update for CPU-only tasks.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the node axis is tiled
+into VMEM-sized blocks via ``BlockSpec`` — each block holds the
+``[BLOCK_N, G]`` GPU state plus the full ``[M, 7]`` class table resident
+in VMEM, and the ``[BLOCK_N, G, M]`` broadcast reduction feeds the VPU.
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO
+that the Rust runtime executes AOT.
+
+Encoding contract: see ``rust/src/runtime/scorer.rs`` (the Rust side is
+the source of truth; `python/tests/test_model.py` cross-checks it).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# f32 comparison slack (mirrors EPS in rust/src/cluster/node.rs, widened
+# for single precision).
+EPS = 1e-6
+
+# Default node-block size: [BLOCK_N, G, M] f32 intermediates stay well
+# under TPU VMEM (32·8·32·4 B = 32 KiB per broadcast array; the kernel
+# materializes ~6 of them plus the [BLOCK_N, G, G] placement variants).
+BLOCK_N = 32
+
+
+def f_node(cpu_free, mem_free, model, free, classes):
+    """Expected fragmentation ``F_n(M)`` for a batch of node states.
+
+    Args:
+      cpu_free:  [...]        free vCPUs (−1 ⇒ padding node slot).
+      mem_free:  [...]        free memory (MiB).
+      model:     [...]        GPU model index (−1 ⇒ CPU-only node).
+      free:      [..., G]     per-GPU free fraction (−1 ⇒ padding GPU).
+      classes:   [M, 7]       [cpu, mem, units, is_frac, is_whole, pop,
+                               constraint_idx].
+
+    Returns: [...] — ``Σ_m pop_m · F_n(m)`` (paper Eq. 4 per node).
+    """
+    valid = free >= 0.0
+    freec = jnp.where(valid, free, 0.0)
+
+    c_cpu = classes[:, 0]
+    c_mem = classes[:, 1]
+    c_units = classes[:, 2]
+    c_isfrac = classes[:, 3]
+    c_iswhole = classes[:, 4]
+    c_pop = classes[:, 5]
+    c_constr = classes[:, 6]
+
+    # Node-level reductions over the GPU axis.
+    maxfree = jnp.max(jnp.where(valid, free, -1.0), axis=-1)
+    nfull = jnp.sum(jnp.where((free >= 1.0 - EPS) & valid, 1.0, 0.0), axis=-1)
+    sumfree = jnp.sum(freec, axis=-1)  # case 1: everything is a fragment
+    # case 2 for whole-GPU classes: all partial residuals fragment.
+    partials = jnp.sum(
+        jnp.where((freec > EPS) & (freec < 1.0 - EPS), freec, 0.0), axis=-1
+    )
+
+    bx = lambda a: a[..., None]  # append the class axis
+
+    # Feasibility of class m on the node (Cond. 1–3 + constraint).
+    cpu_ok = bx(cpu_free) + EPS >= c_cpu
+    mem_ok = bx(mem_free) + EPS >= c_mem
+    has_gpu = bx(model) >= 0.0
+    constr_ok = (c_constr < 0.0) | (jnp.abs(bx(model) - c_constr) < 0.5)
+    frac_ok = bx(maxfree) >= c_units - EPS
+    whole_ok = bx(nfull) >= c_units - EPS
+    gpu_ok = jnp.where(c_isfrac > 0.0, frac_ok, whole_ok)
+    needs_gpu = c_units > 0.0
+    feas = cpu_ok & mem_ok & jnp.where(needs_gpu, has_gpu & constr_ok & gpu_ok, True)
+
+    # case 2 for fractional classes: residuals too small for d_m.
+    f_gm = freec[..., :, None]  # [..., G, M]
+    case2_frac = jnp.sum(
+        jnp.where((f_gm > EPS) & (f_gm < c_units - EPS), f_gm, 0.0), axis=-2
+    )
+    case2 = c_isfrac * case2_frac + c_iswhole * bx(partials)
+    frag_m = jnp.where(feas, case2, bx(sumfree))
+    return jnp.sum(c_pop * frag_m, axis=-1)
+
+
+def _score_kernel(gpu_free_ref, aux_ref, classes_ref, task_ref, fb_ref, fa_frac_ref, fa_alt_ref):
+    """Pallas kernel body for one node block."""
+    free = gpu_free_ref[...]  # [Bn, G]
+    aux = aux_ref[...]  # [Bn, 6]
+    classes = classes_ref[...]  # [M, 7]
+    task = task_ref[...]  # [8]
+
+    cpu_free = aux[:, 0]
+    mem_free = aux[:, 1]
+    model = aux[:, 3]
+    g = free.shape[-1]
+
+    # F_n(M) of the current state.
+    fb_ref[...] = f_node(cpu_free, mem_free, model, free, classes)
+
+    t_cpu, t_mem, t_units = task[0], task[1], task[2]
+    t_iswhole, t_k = task[4], task[5]
+    cpu_after = cpu_free - t_cpu
+    mem_after = mem_free - t_mem
+
+    # Fractional placement variants: state with GPU v reduced by d.
+    eye = jnp.eye(g, dtype=free.dtype)
+    free_var = free[:, None, :] - t_units * eye[None, :, :]
+    # Clamp the (feasible) modified entry's f32 underflow to 0; genuinely
+    # negative entries belong to infeasible placements L2 masks out.
+    free_var = jnp.where((free_var < 0.0) & (free_var > -1e-3), 0.0, free_var)
+    fa_frac_ref[...] = f_node(
+        cpu_after[:, None], mem_after[:, None], model[:, None], free_var, classes
+    )
+
+    # Alternative variant: whole-GPU task takes the k lowest-indexed
+    # fully-free GPUs; CPU-only task leaves GPUs untouched.
+    is_free = jnp.where(free >= 1.0 - EPS, 1.0, 0.0)
+    takeable = jnp.cumsum(is_free, axis=-1) <= t_k
+    take = (is_free > 0.0) & takeable & (t_iswhole > 0.0)
+    free_alt = jnp.where(take, 0.0, free)
+    fa_alt_ref[...] = f_node(cpu_after, mem_after, model, free_alt, classes)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def frag_pass(gpu_free, node_aux, classes, task, *, block_n=BLOCK_N):
+    """Run the fragmentation kernel over the whole cluster encoding.
+
+    Args:
+      gpu_free: [N, G] f32, node_aux: [N, 6] f32, classes: [M, 7] f32,
+      task: [8] f32. N must be a multiple of ``block_n``.
+
+    Returns: (frag_before [N], frag_after_frac [N, G], frag_after_alt [N]).
+    """
+    n, g = gpu_free.shape
+    m = classes.shape[0]
+    assert n % block_n == 0, f"N={n} not a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, g), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 6), lambda i: (i, 0)),
+            pl.BlockSpec((m, 7), lambda i: (0, 0)),
+            pl.BlockSpec((8,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, g), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n, g), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(gpu_free, node_aux, classes, task)

@@ -1,0 +1,142 @@
+"""L2 — the JAX scoring graph (Algorithm 1 + §IV-A, batched over nodes).
+
+``make_scorer(n, g, m)`` builds the full PWR⊕FGD scoring function:
+
+  filter (Cond. 1–3 + constraint)
+    → PWR score  (−Δ estimated node power, Eq. 1–2)
+    → FGD score  (−Δ expected fragmentation, via the L1 Pallas kernel)
+    → k8s NormalizeScore (min-max → [0, 100] over feasible nodes)
+    → weighted combine  α·PWR + (1−α)·FGD
+    → per-node best GPU placement (the bind step).
+
+The function is pure and jit-able; `aot.py` lowers it once to HLO text
+that the Rust runtime (rust/src/runtime/scorer.rs) executes via PJRT on
+every scheduling decision — Python never runs at serving time.
+
+Encoding contract: rust/src/runtime/scorer.rs (kept in lock-step; the
+Rust integration test `scorer_parity` enforces it end-to-end).
+"""
+
+import functools
+
+import jax.numpy as jnp
+
+from compile.kernels.score import EPS, frag_pass
+from compile.kernels.ref import frag_pass_ref
+
+# CPU power-model constants baked into the artifact (Xeon E5-2682 v4,
+# paper §V-B): 2 vCPU per physical core × 16 cores.
+VCPU_PER_SOCKET = 32.0
+CPU_P_MAX = 120.0
+CPU_P_IDLE = 15.0
+
+# Sentinel for infeasible nodes (mirrored in scorer.rs).
+NEG_INF_SCORE = -1.0e9
+
+
+def _normalize_k8s(raw, feas):
+    """k8s NormalizeScore: min-max → [0, 100] over feasible entries,
+    **rounded to integers** (framework scores are int64); all-equal maps
+    to 100 (matches rust normalize_scores)."""
+    big = 1.0e30
+    lo = jnp.min(jnp.where(feas, raw, big))
+    hi = jnp.max(jnp.where(feas, raw, -big))
+    spread = hi - lo
+    flat = spread < 1e-12
+    safe = jnp.where(flat, 1.0, spread)
+    return jnp.where(flat, 100.0, jnp.round(100.0 * (raw - lo) / safe))
+
+
+def score_cluster(gpu_free, node_aux, classes, task, alpha, *, use_pallas=True, block_n=32):
+    """Score every node for one task. See module docstring.
+
+    Returns (score [N], best_gpu [N], feasible [N]) — all f32.
+    """
+    cpu_free = node_aux[:, 0]
+    mem_free = node_aux[:, 1]
+    cpu_alloc = node_aux[:, 2]
+    model = node_aux[:, 3]
+    gpu_p_idle = node_aux[:, 4]
+    gpu_p_max = node_aux[:, 5]
+    alpha = alpha[0]
+
+    t_cpu, t_mem, t_units = task[0], task[1], task[2]
+    t_isfrac, t_iswhole, t_k, t_constr = task[3], task[4], task[5], task[6]
+
+    valid_node = cpu_free >= 0.0
+    valid_gpu = gpu_free >= 0.0
+
+    # ---- Filter: node feasibility (Cond. 1–3 + constraint). ----
+    cpu_ok = t_cpu <= cpu_free + EPS
+    mem_ok = t_mem <= mem_free + EPS
+    has_gpu = model >= 0.0
+    constr_ok = (t_constr < 0.0) | (jnp.abs(model - t_constr) < 0.5)
+    maxfree = jnp.max(jnp.where(valid_gpu, gpu_free, -1.0), axis=-1)
+    nfull = jnp.sum(jnp.where((gpu_free >= 1.0 - EPS) & valid_gpu, 1.0, 0.0), axis=-1)
+    gpu_ok = jnp.where(t_isfrac > 0.0, maxfree >= t_units - EPS, nfull >= t_units - EPS)
+    needs_gpu = t_units > 0.0
+    feas = valid_node & cpu_ok & mem_ok & jnp.where(needs_gpu, has_gpu & constr_ok & gpu_ok, True)
+
+    # ---- L1: fragmentation tensors. ----
+    frag_impl = functools.partial(frag_pass, block_n=block_n) if use_pallas else frag_pass_ref
+    fb, fa_frac, fa_alt = frag_impl(gpu_free, node_aux, classes, task)
+
+    # ---- PWR: power delta (Eq. 1–2). ----
+    cpu_delta = CPU_P_MAX * (
+        jnp.ceil((cpu_alloc + t_cpu) / VCPU_PER_SOCKET) - jnp.ceil(cpu_alloc / VCPU_PER_SOCKET)
+    ) + CPU_P_IDLE * (
+        jnp.floor((cpu_free - t_cpu) / VCPU_PER_SOCKET) - jnp.floor(cpu_free / VCPU_PER_SOCKET)
+    )
+    gpu_wake = gpu_p_max - gpu_p_idle  # idle → p_max promotion per GPU
+
+    # Fractional placements: per-GPU feasibility and deltas.
+    pf = valid_gpu & (gpu_free >= t_units - EPS)  # [N, G]
+    dp_frac = jnp.where(gpu_free >= 1.0 - EPS, gpu_wake[:, None], 0.0)  # [N, G]
+    df_frac = fa_frac - fb[:, None]  # [N, G]
+    big = 1.0e30
+    dp_frac_best = jnp.min(jnp.where(pf, dp_frac, big), axis=-1)
+    df_frac_best = jnp.min(jnp.where(pf, df_frac, big), axis=-1)
+
+    # Whole-GPU / CPU-only placement deltas.
+    dp_alt = jnp.where(t_iswhole > 0.0, t_k * gpu_wake, 0.0)
+    df_alt = fa_alt - fb
+
+    dp_node = jnp.where(t_isfrac > 0.0, dp_frac_best, dp_alt)
+    df_node = jnp.where(t_isfrac > 0.0, df_frac_best, df_alt)
+
+    # ---- NormalizeScore + combine (§IV-A). ----
+    pwr_raw = -(cpu_delta + dp_node)
+    fgd_raw = -df_node
+    pwr_norm = _normalize_k8s(pwr_raw, feas)
+    fgd_norm = _normalize_k8s(fgd_raw, feas)
+    score = alpha * pwr_norm + (1.0 - alpha) * fgd_norm
+    score = jnp.where(feas, score, NEG_INF_SCORE)
+
+    # ---- Bind: best GPU inside each node (fractional tasks). ----
+    def _norm_per_node(v):  # min-max over feasible placements, per node
+        lo = jnp.min(jnp.where(pf, v, big), axis=-1, keepdims=True)
+        hi = jnp.max(jnp.where(pf, v, -big), axis=-1, keepdims=True)
+        spread = hi - lo
+        flat = spread < 1e-12
+        return jnp.where(flat, 0.0, (v - lo) / jnp.where(flat, 1.0, spread))
+
+    cost = alpha * _norm_per_node(dp_frac) + (1.0 - alpha) * _norm_per_node(df_frac)
+    cost = jnp.where(pf, cost, big)
+    best_gpu = jnp.argmin(cost, axis=-1).astype(jnp.float32)  # first min = lowest idx
+    best_gpu = jnp.where((t_isfrac > 0.0) & feas, best_gpu, -1.0)
+
+    return score, best_gpu, jnp.where(feas, 1.0, 0.0)
+
+
+def make_scorer(n, g, m, *, use_pallas=True, block_n=32):
+    """Bind static shapes; returns `f(gpu_free, node_aux, classes, task,
+    alpha)` ready for `jax.jit(...).lower(...)`."""
+    del n, g, m  # shapes are carried by the example args at lower time
+
+    def scorer(gpu_free, node_aux, classes, task, alpha):
+        return score_cluster(
+            gpu_free, node_aux, classes, task, alpha,
+            use_pallas=use_pallas, block_n=block_n,
+        )
+
+    return scorer

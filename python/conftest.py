@@ -1,0 +1,8 @@
+"""Make `pytest python/tests/` work from the repo root by putting the
+`python/` directory (holding the `compile` and `tests` packages) on
+sys.path."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,92 @@
+"""Shared generators for the python test-suite: random dense-encoded
+cluster states, class tables and tasks matching the contract in
+rust/src/runtime/scorer.rs."""
+
+import numpy as np
+
+# GPU models as (index, p_idle, p_max) — Table II.
+GPU_MODELS = [
+    (0, 30.0, 300.0),  # V100M16
+    (1, 30.0, 300.0),  # V100M32
+    (2, 25.0, 250.0),  # P100
+    (3, 10.0, 70.0),   # T4
+    (4, 30.0, 150.0),  # A10
+    (5, 30.0, 150.0),  # G2
+    (6, 50.0, 400.0),  # G3
+]
+
+FRACTIONS = np.array([0.0, 0.1, 0.2, 0.25, 0.3, 0.4, 0.5, 0.6, 0.75, 0.8, 0.9, 1.0])
+
+
+def make_cluster(rng, n, g, n_real=None, cpu_only_frac=0.2):
+    """Random (gpu_free [n,g], node_aux [n,6]) encoding."""
+    n_real = n if n_real is None else n_real
+    gpu_free = np.full((n, g), -1.0, dtype=np.float32)
+    node_aux = np.zeros((n, 6), dtype=np.float32)
+    node_aux[n_real:, 0] = -1.0  # padding slots
+    for i in range(n_real):
+        cpu_total = float(rng.choice([64.0, 94.0, 96.0, 128.0]))
+        cpu_alloc = float(rng.choice(np.arange(0, cpu_total + 1, 2.0)))
+        mem_total = 262144.0
+        mem_alloc = float(rng.uniform(0, mem_total * 0.8))
+        if rng.random() < cpu_only_frac:
+            model = (-1, 0.0, 0.0)
+            ngpus = 0
+        else:
+            model = GPU_MODELS[rng.integers(len(GPU_MODELS))]
+            ngpus = int(rng.integers(1, g + 1))
+            alloc = rng.choice(FRACTIONS, size=ngpus)
+            gpu_free[i, :ngpus] = (1.0 - alloc).astype(np.float32)
+        node_aux[i] = [
+            cpu_total - cpu_alloc,
+            mem_total - mem_alloc,
+            cpu_alloc,
+            float(model[0]),
+            model[1],
+            model[2],
+        ]
+    return gpu_free, node_aux
+
+
+def make_classes(rng, m, m_real=None):
+    """Random class table [m, 7] with popularity summing to 1."""
+    m_real = m if m_real is None else m_real
+    classes = np.zeros((m, 7), dtype=np.float32)
+    pops = rng.random(m_real) + 0.05
+    pops /= pops.sum()
+    for j in range(m_real):
+        kind = rng.integers(3)  # 0 cpu-only, 1 frac, 2 whole
+        cpu = float(rng.choice([1.0, 2.0, 4.0, 8.0, 16.0]))
+        mem = cpu * 3072.0
+        if kind == 0:
+            units, isfrac, iswhole = 0.0, 0.0, 0.0
+        elif kind == 1:
+            units = float(rng.choice(FRACTIONS[1:-1]))
+            isfrac, iswhole = 1.0, 0.0
+        else:
+            units = float(rng.choice([1.0, 2.0, 4.0, 8.0]))
+            isfrac, iswhole = 0.0, 1.0
+        constr = float(rng.integers(7)) if rng.random() < 0.15 and units > 0 else -1.0
+        classes[j] = [cpu, mem, units, isfrac, iswhole, pops[j], constr]
+    return classes
+
+
+def make_task(rng, kind=None):
+    """Random task encoding [8]."""
+    kind = int(rng.integers(3)) if kind is None else kind
+    cpu = float(rng.choice([1.0, 2.0, 4.0, 8.0, 16.0]))
+    mem = cpu * 3072.0
+    task = np.zeros(8, dtype=np.float32)
+    task[0], task[1] = cpu, mem
+    task[6] = -1.0
+    if kind == 1:  # fractional
+        task[2] = float(rng.choice(FRACTIONS[1:-1]))
+        task[3] = 1.0
+    elif kind == 2:  # whole
+        k = float(rng.choice([1.0, 2.0, 4.0, 8.0]))
+        task[2] = k
+        task[4] = 1.0
+        task[5] = k
+        if rng.random() < 0.2:
+            task[6] = float(rng.integers(7))
+    return task

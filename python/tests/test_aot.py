@@ -1,0 +1,74 @@
+"""AOT path: lowering the scoring graph to HLO text and executing the
+text through jax's own XLA client must reproduce the jit outputs —
+the same text the Rust PJRT runtime loads."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import make_scorer
+from tests.helpers import make_classes, make_cluster, make_task
+
+
+@pytest.fixture(scope="module")
+def small_hlo(tmp_path_factory):
+    root = tmp_path_factory.mktemp("artifacts")
+    # Tiny variant for test speed (the real build uses aot.VARIANTS).
+    aot.VARIANTS_SAVED = aot.VARIANTS
+    text = aot.lower_variant(n=32, g=4, m=8, block_n=16)
+    path = root / "scorer.hlo.txt"
+    path.write_text(text)
+    return str(path), text
+
+
+def test_hlo_text_structure(small_hlo):
+    _, text = small_hlo
+    assert "HloModule" in text
+    assert "f32[32,4]" in text  # gpu_free param shape
+    # No TPU custom-calls: interpret-mode pallas lowers to plain HLO.
+    assert "mosaic" not in text.lower()
+
+
+def test_build_writes_meta(tmp_path):
+    files = aot.build(str(tmp_path), variants=["small"])
+    assert any(f.endswith("scorer.hlo.txt") for f in files)
+    meta_file = [f for f in files if f.endswith("scorer_meta.json")][0]
+    meta = json.load(open(meta_file))
+    assert meta == {"n": 64, "g": 8, "m": 64}
+
+
+def test_hlo_text_parses_back(small_hlo):
+    """The emitted text must re-parse with XLA's HLO parser — the same
+    parser the Rust runtime uses (`HloModuleProto::from_text_file`).
+    Full load-and-execute parity is asserted by the Rust integration
+    test `tests/scorer_parity.rs` and `repro scorer-check`."""
+    from jax._src.lib import xla_client as xc
+
+    _, text = small_hlo
+    mod = xc._xla.hlo_module_from_text(text)
+    # Round-trip: proto ids got reassigned, shapes preserved.
+    text2 = mod.to_string()
+    assert "f32[32,4]" in text2
+
+
+def test_lowered_compile_matches_eager(small_hlo):
+    """`jax.jit(...).lower(...).compile()` (the artifact's computation)
+    must equal the eager scorer on random inputs."""
+    import jax
+
+    n, g, m = 32, 4, 8
+    rng = np.random.default_rng(5)
+    gpu_free, node_aux = make_cluster(rng, n=n, g=g)
+    classes = make_classes(rng, m=m)
+    task = make_task(rng, kind=1)
+    alpha = np.array([0.1], dtype=np.float32)
+
+    scorer = make_scorer(n, g, m, use_pallas=True, block_n=16)
+    want = [np.asarray(x) for x in scorer(gpu_free, node_aux, classes, task, alpha)]
+    compiled = jax.jit(scorer).lower(gpu_free, node_aux, classes, task, alpha).compile()
+    got = [np.asarray(x) for x in compiled(gpu_free, node_aux, classes, task, alpha)]
+    for w, g_ in zip(want, got):
+        np.testing.assert_allclose(w, g_, rtol=1e-5, atol=1e-4)

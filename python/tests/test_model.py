@@ -1,0 +1,188 @@
+"""L2 correctness: the full scoring graph — feasibility filter, power
+deltas, k8s normalization, α-combination and GPU binding — checked
+against brute-force python and against itself (Pallas vs ref kernel)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from compile.model import NEG_INF_SCORE, score_cluster
+from tests.helpers import make_classes, make_cluster, make_task
+
+ALPHA = np.array([0.1], dtype=np.float32)
+
+
+def run(gpu_free, node_aux, classes, task, alpha=ALPHA, use_pallas=False):
+    s, b, f = score_cluster(
+        gpu_free, node_aux, classes, task, alpha, use_pallas=use_pallas, block_n=16
+    )
+    return np.asarray(s), np.asarray(b), np.asarray(f)
+
+
+def brute_force_feasible(gpu_free, node_aux, task):
+    """Independent python reimplementation of Cond. 1–3 + constraint."""
+    n, g = gpu_free.shape
+    out = np.zeros(n)
+    for i in range(n):
+        cpu_free, mem_free, _, model = node_aux[i, :4]
+        if cpu_free < 0:
+            continue
+        if task[0] > cpu_free + 1e-6 or task[1] > mem_free + 1e-6:
+            continue
+        if task[2] == 0:
+            out[i] = 1.0
+            continue
+        if model < 0:
+            continue
+        if task[6] >= 0 and abs(task[6] - model) > 0.5:
+            continue
+        frees = [gpu_free[i, j] for j in range(g) if gpu_free[i, j] >= 0]
+        if task[3] > 0:  # fractional
+            ok = any(fr >= task[2] - 1e-6 for fr in frees)
+        else:  # whole
+            ok = sum(1 for fr in frees if fr >= 1.0 - 1e-6) >= task[2] - 1e-6
+        out[i] = 1.0 if ok else 0.0
+    return out
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("kind", [0, 1, 2])
+def test_feasibility_matches_bruteforce(seed, kind):
+    rng = np.random.default_rng(seed)
+    gpu_free, node_aux = make_cluster(rng, n=32, g=6, n_real=30)
+    classes = make_classes(rng, m=16)
+    task = make_task(rng, kind=kind)
+    _, _, feas = run(gpu_free, node_aux, classes, task)
+    np.testing.assert_array_equal(feas, brute_force_feasible(gpu_free, node_aux, task))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_pallas_and_ref_graphs_agree(seed):
+    """The whole L2 graph must be identical whichever L1 backs it."""
+    rng = np.random.default_rng(100 + seed)
+    gpu_free, node_aux = make_cluster(rng, n=32, g=8)
+    classes = make_classes(rng, m=16)
+    task = make_task(rng)
+    sp, bp, fp = run(gpu_free, node_aux, classes, task, use_pallas=True)
+    sr, br, fr = run(gpu_free, node_aux, classes, task, use_pallas=False)
+    np.testing.assert_allclose(sp, sr, rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(bp, br)
+    np.testing.assert_array_equal(fp, fr)
+
+
+def test_scores_normalized_0_100():
+    rng = np.random.default_rng(7)
+    gpu_free, node_aux = make_cluster(rng, n=32, g=4)
+    classes = make_classes(rng, m=8)
+    task = make_task(rng, kind=1)
+    score, _, feas = run(gpu_free, node_aux, classes, task)
+    fs = score[feas > 0.5]
+    assert fs.size > 0
+    assert fs.min() >= -1e-3 and fs.max() <= 100.0 + 1e-3
+    assert np.all(score[feas < 0.5] == NEG_INF_SCORE)
+
+
+def test_alpha_extremes_pick_different_winners():
+    """Construct a state where PWR and FGD disagree and check the
+    α-extremes switch winners. Task: one whole GPU. Node 0 (T4, 60 W
+    wake) has exactly 4 free GPUs — taking one strands the node for the
+    whole-4 workload class (big ΔF). Node 1 (G3, 350 W wake) has 8 free
+    GPUs — taking one keeps the class schedulable (ΔF 0) but costs far
+    more power."""
+    gpu_free = np.array(
+        [[1.0, 1.0, 1.0, 1.0, -1.0, -1.0, -1.0, -1.0],
+         [1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]],
+        dtype=np.float32,
+    )
+    node_aux = np.array(
+        [
+            [64.0, 1e6, 0.0, 3.0, 10.0, 70.0],   # T4 node
+            [128.0, 1e6, 0.0, 6.0, 50.0, 400.0],  # G3 node
+        ],
+        dtype=np.float32,
+    )
+    classes = np.zeros((1, 7), dtype=np.float32)
+    classes[0] = [1.0, 0.0, 4.0, 0.0, 1.0, 1.0, -1.0]  # whole-4 class
+    task = np.array([1.0, 0.0, 1.0, 0.0, 1.0, 1.0, -1.0, 0.0], dtype=np.float32)
+
+    s_pwr, _, _ = run(gpu_free, node_aux, classes, task, alpha=np.array([1.0], np.float32))
+    s_fgd, _, _ = run(gpu_free, node_aux, classes, task, alpha=np.array([0.0], np.float32))
+    assert np.argmax(s_pwr) == 0, f"PWR should pick the cheap T4 node: {s_pwr}"
+    assert np.argmax(s_fgd) == 1, f"FGD should protect the 4-GPU node: {s_fgd}"
+    # A balanced α must sit between the extremes (both normalized 0/100).
+    s_mid, _, _ = run(gpu_free, node_aux, classes, task, alpha=np.array([0.5], np.float32))
+    assert s_mid[0] == pytest.approx(50.0) and s_mid[1] == pytest.approx(50.0)
+
+
+def test_power_delta_consolidation():
+    """Pure PWR: sharing an already-active GPU beats waking an idle one
+    on an otherwise identical node."""
+    gpu_free = np.array([[0.5, 1.0], [1.0, 1.0]], dtype=np.float32)
+    node_aux = np.array(
+        [
+            [94.0, 1e6, 2.0, 5.0, 30.0, 150.0],  # node 0 has an active GPU
+            [96.0, 1e6, 0.0, 5.0, 30.0, 150.0],
+        ],
+        dtype=np.float32,
+    )
+    classes = make_classes(np.random.default_rng(0), m=4)
+    task = np.array([1.0, 0.0, 0.25, 1.0, 0.0, 0.0, -1.0, 0.0], dtype=np.float32)
+    score, best_gpu, _ = run(gpu_free, node_aux, classes, task, alpha=np.array([1.0], np.float32))
+    assert np.argmax(score) == 0
+    assert best_gpu[0] == 0  # the occupied GPU, not the idle one
+
+
+def test_whole_task_best_gpu_is_minus_one():
+    rng = np.random.default_rng(3)
+    gpu_free, node_aux = make_cluster(rng, n=16, g=4, cpu_only_frac=0.0)
+    classes = make_classes(rng, m=8)
+    task = make_task(rng, kind=2)
+    _, best_gpu, feas = run(gpu_free, node_aux, classes, task)
+    assert np.all(best_gpu == -1.0)
+
+
+def test_all_infeasible_cluster():
+    gpu_free = np.full((4, 2), -1.0, dtype=np.float32)
+    node_aux = np.zeros((4, 6), dtype=np.float32)
+    node_aux[:, 0] = -1.0  # all padding
+    classes = make_classes(np.random.default_rng(0), m=4)
+    task = make_task(np.random.default_rng(0), kind=1)
+    score, _, feas = run(gpu_free, node_aux, classes, task)
+    assert np.all(feas == 0.0)
+    assert np.all(score == NEG_INF_SCORE)
+
+
+def test_cpu_power_delta_socket_boundary():
+    """CPU-only task crossing a socket boundary must cost a socket
+    promotion on the fuller node — PWR then prefers the node whose
+    ceiling doesn't move."""
+    gpu_free = np.full((2, 1), -1.0, dtype=np.float32)
+    node_aux = np.array(
+        [
+            # 30/96 vCPU used: +4 stays within ceil(34/32)=2? no: ceil(30/32)=1 -> ceil(34/32)=2 (promotes)
+            [66.0, 1e6, 30.0, -1.0, 0.0, 0.0],
+            # 2/96 used: ceil(2/32)=1 -> ceil(6/32)=1 (no promotion)
+            [94.0, 1e6, 2.0, -1.0, 0.0, 0.0],
+        ],
+        dtype=np.float32,
+    )
+    classes = make_classes(np.random.default_rng(0), m=4)
+    task = np.zeros(8, dtype=np.float32)
+    task[0], task[1], task[6] = 4.0, 0.0, -1.0
+    score, _, feas = run(gpu_free, node_aux, classes, task, alpha=np.array([1.0], np.float32))
+    assert feas.tolist() == [1.0, 1.0]
+    assert np.argmax(score) == 1
+
+
+def test_scores_are_finite_everywhere():
+    rng = np.random.default_rng(11)
+    for kind in (0, 1, 2):
+        gpu_free, node_aux = make_cluster(rng, n=32, g=8)
+        classes = make_classes(rng, m=32)
+        task = make_task(rng, kind=kind)
+        score, best_gpu, feas = run(gpu_free, node_aux, classes, task)
+        assert np.all(np.isfinite(score))
+        assert np.all(np.isfinite(best_gpu))
+        assert set(np.unique(feas)).issubset({0.0, 1.0})
+        assert not math.isnan(float(score.sum()))

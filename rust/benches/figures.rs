@@ -1,0 +1,46 @@
+//! End-to-end benches, one per paper table/figure: each times a
+//! scaled-down version of the experiment that regenerates it (the
+//! full-scale CSVs come from `repro experiment <id>`). Reported number:
+//! wall time of the complete figure pipeline at 3% cluster scale,
+//! 1 repetition.
+//!
+//! Run: `cargo bench --bench figures` (filter, e.g. `fig3`).
+
+use repro::experiments::{ExpConfig, Harness};
+use repro::util::benchkit::{black_box, Bencher};
+
+fn bench_figure(b: &mut Bencher, id: &'static str) {
+    let out = std::env::temp_dir().join("repro_bench_figs");
+    b.bench(&format!("bench_{id}"), move || {
+        let cfg = ExpConfig {
+            reps: 1,
+            seed: 9,
+            scale: 0.03,
+            target: 1.0,
+            out_dir: out.to_str().unwrap().to_string(),
+        };
+        // Fresh harness per iteration: measures the uncached pipeline.
+        let mut h = Harness::new(cfg);
+        black_box(h.run(id).expect(id));
+    });
+}
+
+fn main() {
+    // Macro-benchmark: iterations run a whole figure pipeline (seconds),
+    // so keep the sample floor low.
+    let mut b = Bencher::with_config(repro::util::benchkit::BenchConfig {
+        warmup: std::time::Duration::from_millis(50),
+        measure: std::time::Duration::from_secs(3),
+        max_samples: 10,
+        min_samples: 2,
+    });
+    println!("== figure pipelines (3% cluster scale, 1 rep) ==");
+    for id in [
+        "table1", "table2", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7",
+        "fig8", "fig9", "fig10",
+    ] {
+        bench_figure(&mut b, id);
+    }
+    b.write_csv("results/bench_figures.csv").ok();
+    println!("(csv: results/bench_figures.csv)");
+}

@@ -1,0 +1,54 @@
+//! Per-decision scheduling latency for every policy, at the paper's
+//! full cluster size (1,213 nodes) and a scaled size — the L3 hot path.
+//!
+//! Run: `cargo bench --bench policies` (filter with a substring arg).
+
+use repro::cluster::ClusterSpec;
+use repro::sched::{PolicyKind, Scheduler};
+use repro::sim::Simulation;
+use repro::trace::TraceSpec;
+use repro::util::benchkit::{black_box, Bencher};
+
+/// Pre-load a cluster to ~50% GPU capacity so the benchmark measures
+/// mid-inflation decisions (the realistic regime), then time steady
+/// scheduling.
+fn bench_policy(b: &mut Bencher, policy: PolicyKind, scale: f64, label: &str) {
+    let spec = TraceSpec::default_trace();
+    let cluster = if scale >= 1.0 {
+        ClusterSpec::paper_default()
+    } else {
+        ClusterSpec::paper_scaled(scale)
+    };
+    let dc = cluster.build();
+    let workload = spec.synthesize(1).workload();
+    let sched = Scheduler::from_policy(policy);
+    let mut sim = Simulation::with_spec(dc, sched, &spec, workload, 11);
+    sim.record_frag = false;
+    while sim.capacity_ratio() < 0.5 {
+        sim.step();
+    }
+    b.bench(&format!("{label}/{}", policy.label()), || black_box(sim.step()));
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== per-decision scheduling latency (cluster at ~50% load) ==");
+    for policy in [
+        PolicyKind::Fgd,
+        PolicyKind::Pwr,
+        PolicyKind::PwrFgd { alpha: 0.1 },
+        PolicyKind::BestFit,
+        PolicyKind::DotProd,
+        PolicyKind::GpuPacking,
+        PolicyKind::GpuClustering,
+        PolicyKind::FirstFit,
+        PolicyKind::Random,
+    ] {
+        bench_policy(&mut b, policy, 1.0, "full-1213-nodes");
+    }
+    for policy in [PolicyKind::Fgd, PolicyKind::PwrFgd { alpha: 0.1 }] {
+        bench_policy(&mut b, policy, 0.1, "scaled-121-nodes");
+    }
+    b.write_csv("results/bench_policies.csv").ok();
+    println!("(csv: results/bench_policies.csv)");
+}

@@ -1,0 +1,67 @@
+//! Native scorer vs the AOT-compiled XLA scorer (PJRT), per scheduling
+//! decision. Requires `make artifacts`; skips cleanly when artifacts
+//! are absent (e.g. a pure-Rust CI job).
+//!
+//! Run: `cargo bench --bench scorer`
+
+use repro::cluster::ClusterSpec;
+use repro::runtime::{artifacts_dir, Runtime};
+use repro::sched::{PolicyKind, Scheduler};
+use repro::trace::TraceSpec;
+use repro::util::benchkit::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let dir = artifacts_dir().join("small");
+    let spec = TraceSpec::default_trace();
+    let workload = spec.synthesize(1).workload();
+
+    // A cluster sized to the small artifact (64 node slots).
+    let dc = ClusterSpec::paper_scaled(0.04).build();
+    let mut sampler = spec.sampler(3);
+    println!("== scorer comparison ({} nodes) ==", dc.nodes.len());
+
+    // Native path.
+    {
+        let mut sched = Scheduler::from_policy(PolicyKind::PwrFgd { alpha: 0.1 });
+        let mut tasks = Vec::new();
+        for _ in 0..256 {
+            tasks.push(sampler.next_task());
+        }
+        let mut i = 0;
+        b.bench("native/pwrfgd-score-decision", || {
+            let t = &tasks[i % tasks.len()];
+            i += 1;
+            black_box(sched.schedule(&dc, &workload, t))
+        });
+    }
+
+    // XLA path (artifact-gated).
+    match Runtime::cpu().and_then(|rt| {
+        repro::runtime::scorer::XlaScorer::load(&rt, &dir).map(|s| (rt, s))
+    }) {
+        Ok((_rt, mut scorer)) => {
+            let mut tasks = Vec::new();
+            for _ in 0..256 {
+                tasks.push(sampler.next_task());
+            }
+            let mut i = 0;
+            // Split out the encode cost from the execute cost.
+            b.bench("xla/encode-cluster", || {
+                black_box(scorer.encode_cluster(&dc).unwrap())
+            });
+            scorer.encode_workload(&workload);
+            b.bench("xla/score-decision(encode+execute)", || {
+                let t = &tasks[i % tasks.len()];
+                i += 1;
+                scorer.encode_cluster(&dc).unwrap();
+                black_box(scorer.score(t, 0.1).unwrap())
+            });
+        }
+        Err(e) => {
+            println!("xla scorer skipped (run `make artifacts`): {e}");
+        }
+    }
+    b.write_csv("results/bench_scorer.csv").ok();
+    println!("(csv: results/bench_scorer.csv)");
+}

@@ -1,0 +1,155 @@
+//! Aggregate datacenter state: the node set plus cached cluster-level
+//! totals maintained incrementally across allocations.
+
+use crate::cluster::node::{Node, Placement};
+use crate::tasks::Task;
+
+/// The simulated datacenter.
+#[derive(Clone, Debug)]
+pub struct Datacenter {
+    pub nodes: Vec<Node>,
+    /// Cached: total GPUs installed.
+    total_gpus: usize,
+    /// Cached: total vCPUs installed.
+    total_vcpus: f64,
+    /// Cached: sum of allocated GPU units across nodes (for GRAR).
+    gpu_alloc_units: f64,
+    /// Cached: allocated vCPUs across nodes.
+    cpu_alloc_units: f64,
+    /// Tasks currently resident.
+    pub n_tasks: u64,
+}
+
+impl Datacenter {
+    /// Wrap a node list (normally via [`crate::cluster::ClusterSpec::build`]).
+    pub fn new(nodes: Vec<Node>) -> Datacenter {
+        let total_gpus = nodes.iter().map(|n| n.gpu_alloc.len()).sum();
+        let total_vcpus = nodes.iter().map(|n| n.vcpus).sum();
+        Datacenter {
+            nodes,
+            total_gpus,
+            total_vcpus,
+            gpu_alloc_units: 0.0,
+            cpu_alloc_units: 0.0,
+            n_tasks: 0,
+        }
+    }
+
+    /// Total installed GPUs (the cluster "GPU capacity" the paper's
+    /// x-axes are normalized by).
+    pub fn total_gpus(&self) -> usize {
+        self.total_gpus
+    }
+
+    /// GPU capacity in resource units (1.0 per GPU).
+    pub fn gpu_capacity(&self) -> f64 {
+        self.total_gpus as f64
+    }
+
+    /// Total installed vCPUs.
+    pub fn total_vcpus(&self) -> f64 {
+        self.total_vcpus
+    }
+
+    /// Sum of GPU units currently allocated (numerator of GRAR).
+    pub fn gpu_allocated_units(&self) -> f64 {
+        self.gpu_alloc_units
+    }
+
+    /// Sum of vCPUs currently allocated.
+    pub fn cpu_allocated_units(&self) -> f64 {
+        self.cpu_alloc_units
+    }
+
+    /// Fraction of GPU capacity allocated.
+    pub fn gpu_utilization(&self) -> f64 {
+        if self.total_gpus == 0 {
+            0.0
+        } else {
+            self.gpu_alloc_units / self.total_gpus as f64
+        }
+    }
+
+    /// Commit `task` to `node_id` at `placement`, maintaining caches.
+    pub fn allocate(&mut self, task: &Task, node_id: usize, placement: &Placement) {
+        self.nodes[node_id].allocate(task, placement);
+        self.gpu_alloc_units += task.gpu.units();
+        self.cpu_alloc_units += task.cpu;
+        self.n_tasks += 1;
+    }
+
+    /// Release `task` from `node_id`.
+    pub fn deallocate(&mut self, task: &Task, node_id: usize, placement: &Placement) {
+        self.nodes[node_id].deallocate(task, placement);
+        self.gpu_alloc_units = (self.gpu_alloc_units - task.gpu.units()).max(0.0);
+        self.cpu_alloc_units = (self.cpu_alloc_units - task.cpu).max(0.0);
+        self.n_tasks = self.n_tasks.saturating_sub(1);
+    }
+
+    /// Number of active (non-empty) nodes.
+    pub fn active_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_active()).count()
+    }
+
+    /// Number of GPUs with any allocation (drawing `p_max` in Eq. 2).
+    pub fn active_gpus(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| n.gpu_alloc.iter().filter(|&&a| a > 0.0).count())
+            .sum()
+    }
+
+    /// Recompute the allocation caches from scratch (integrity check —
+    /// tests call this to verify incremental maintenance).
+    pub fn recompute_caches(&self) -> (f64, f64) {
+        let gpu: f64 = self.nodes.iter().map(|n| n.gpu_alloc.iter().sum::<f64>()).sum();
+        let cpu: f64 = self.nodes.iter().map(|n| n.cpu_alloc).sum();
+        (gpu, cpu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::inventory::ClusterSpec;
+    use crate::tasks::GpuDemand;
+
+    #[test]
+    fn caches_track_allocations() {
+        let mut dc = ClusterSpec::tiny(2, 4, 1).build();
+        let t1 = Task::new(1, 8.0, 1024.0, GpuDemand::Whole(2));
+        let p1 = dc.nodes[0].candidate_placements(&t1).pop().unwrap();
+        dc.allocate(&t1, 0, &p1);
+        let t2 = Task::new(2, 4.0, 512.0, GpuDemand::Frac(0.5));
+        let p2 = dc.nodes[1].candidate_placements(&t2)[0].clone();
+        dc.allocate(&t2, 1, &p2);
+
+        assert!((dc.gpu_allocated_units() - 2.5).abs() < 1e-9);
+        assert!((dc.cpu_allocated_units() - 12.0).abs() < 1e-9);
+        assert_eq!(dc.n_tasks, 2);
+        assert_eq!(dc.active_nodes(), 2);
+        assert_eq!(dc.active_gpus(), 3);
+
+        // Incremental caches must equal a from-scratch recompute...
+        let (gpu, cpu) = dc.recompute_caches();
+        assert!((gpu - dc.gpu_allocated_units()).abs() < 1e-9);
+        assert!((cpu - dc.cpu_allocated_units()).abs() < 1e-9);
+
+        // ...including after deallocation.
+        dc.deallocate(&t1, 0, &p1);
+        let (gpu, cpu) = dc.recompute_caches();
+        assert!((gpu - dc.gpu_allocated_units()).abs() < 1e-9);
+        assert!((cpu - dc.cpu_allocated_units()).abs() < 1e-9);
+        assert_eq!(dc.n_tasks, 1);
+    }
+
+    #[test]
+    fn utilization_ratio() {
+        let mut dc = ClusterSpec::tiny(1, 4, 0).build();
+        assert_eq!(dc.gpu_utilization(), 0.0);
+        let t = Task::new(1, 1.0, 0.0, GpuDemand::Whole(2));
+        let p = dc.nodes[0].candidate_placements(&t).pop().unwrap();
+        dc.allocate(&t, 0, &p);
+        assert!((dc.gpu_utilization() - 0.5).abs() < 1e-9);
+    }
+}

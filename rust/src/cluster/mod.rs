@@ -1,0 +1,13 @@
+//! The simulated GPU datacenter: hardware types, node state, the
+//! cluster-inventory generator reproducing the paper's Table II, and the
+//! aggregate [`datacenter::Datacenter`] state.
+
+pub mod datacenter;
+pub mod inventory;
+pub mod node;
+pub mod types;
+
+pub use datacenter::Datacenter;
+pub use inventory::ClusterSpec;
+pub use node::{Node, Placement, ResourceView};
+pub use types::{CpuModel, GpuModel};

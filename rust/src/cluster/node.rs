@@ -1,0 +1,487 @@
+//! Node state: allocated/unallocated resource vectors (`R_n`, `Ra_n`),
+//! feasibility (Cond. 1–3 + constraints), placements and allocation.
+
+use crate::cluster::types::{CpuModel, GpuModel};
+use crate::tasks::{GpuDemand, Task, NUM_BUCKETS};
+
+/// Numerical slack for GPU-fraction comparisons (fractions arrive as
+/// sums of trace values like 0.25/0.5; we never want 0.7500000000000002
+/// to make a feasible placement infeasible).
+pub const EPS: f64 = 1e-9;
+
+/// Where a task lands inside a node.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// No GPU touched (CPU-only task).
+    CpuOnly,
+    /// Shares GPU `gpu` (fractional demand).
+    Shared { gpu: usize },
+    /// Takes these whole GPUs exclusively.
+    Whole { gpus: Vec<usize> },
+}
+
+/// Read-only view of a node's free resources. Implemented both by
+/// [`Node`] and by [`Hypothetical`], so the power/fragmentation models
+/// evaluate hypothetical assignments without cloning node state.
+pub trait ResourceView {
+    fn cpu_model(&self) -> CpuModel;
+    fn gpu_model(&self) -> Option<GpuModel>;
+    /// Total vCPUs installed.
+    fn cpu_capacity(&self) -> f64;
+    /// Allocated vCPUs (`Ra_n^CPU`).
+    fn cpu_alloc(&self) -> f64;
+    /// Total memory installed (MiB).
+    fn mem_capacity(&self) -> f64;
+    /// Allocated memory (MiB).
+    fn mem_alloc(&self) -> f64;
+    /// Number of GPUs installed.
+    fn n_gpus(&self) -> usize;
+    /// Allocated fraction of GPU `g` (`Ra_{n,g}^GPU ∈ [0,1]`).
+    fn gpu_alloc_of(&self, g: usize) -> f64;
+
+    /// Free vCPUs (`R_n^CPU`).
+    fn cpu_free(&self) -> f64 {
+        self.cpu_capacity() - self.cpu_alloc()
+    }
+    /// Free memory (`R_n^MEM`).
+    fn mem_free(&self) -> f64 {
+        self.mem_capacity() - self.mem_alloc()
+    }
+    /// Unallocated fraction of GPU `g` (`R_{n,g}^GPU`).
+    fn gpu_free_of(&self, g: usize) -> f64 {
+        1.0 - self.gpu_alloc_of(g)
+    }
+    /// Sum of unallocated GPU fractions on the node.
+    fn gpu_free_total(&self) -> f64 {
+        (0..self.n_gpus()).map(|g| self.gpu_free_of(g)).sum()
+    }
+    /// Count of fully-free GPUs.
+    fn gpus_fully_free(&self) -> usize {
+        (0..self.n_gpus()).filter(|&g| self.gpu_free_of(g) >= 1.0 - EPS).count()
+    }
+    /// Largest per-GPU free fraction strictly below 1.
+    fn largest_partial_free(&self) -> f64 {
+        (0..self.n_gpus())
+            .map(|g| self.gpu_free_of(g))
+            .filter(|&f| f < 1.0 - EPS)
+            .fold(0.0, f64::max)
+    }
+    /// Largest per-GPU free fraction (including fully-free GPUs).
+    fn largest_free(&self) -> f64 {
+        (0..self.n_gpus()).map(|g| self.gpu_free_of(g)).fold(0.0, f64::max)
+    }
+
+    /// The scalar `u_n` of §II: `Σ_g ⌊R_g⌋ + max_g (R_g − ⌊R_g⌋)`.
+    fn u_n(&self) -> f64 {
+        let whole: f64 = self.gpus_fully_free() as f64;
+        whole + self.largest_partial_free()
+    }
+
+    /// Feasibility of `task` on this node: Cond. 1 (CPU), Cond. 2 (MEM),
+    /// Cond. 3 (GPU), plus the `C_t^GPU` model constraint.
+    ///
+    /// Note on Cond. 3 for fractional demands: the paper states
+    /// `D ≤ u_n − ⌊u_n⌋`, which taken literally would reject a fractional
+    /// task on a node whose GPUs are all fully free. Following the FGD
+    /// reference implementation (and the paper's own deference to [19])
+    /// we use the intended semantics: some single GPU must have at least
+    /// `D` free.
+    fn can_fit(&self, task: &Task) -> bool {
+        if task.cpu > self.cpu_free() + EPS {
+            return false; // Cond. 1
+        }
+        if task.mem > self.mem_free() + EPS {
+            return false; // Cond. 2
+        }
+        match task.gpu {
+            GpuDemand::Zero => true,
+            _ => {
+                let Some(model) = self.gpu_model() else { return false };
+                if let Some(required) = task.gpu_model {
+                    if required != model {
+                        return false;
+                    }
+                }
+                match task.gpu {
+                    GpuDemand::Zero => unreachable!(),
+                    GpuDemand::Frac(d) => self.largest_free() >= d - EPS,
+                    GpuDemand::Whole(k) => self.gpus_fully_free() >= k as usize,
+                }
+            }
+        }
+    }
+}
+
+/// A datacenter node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: usize,
+    pub cpu_model: CpuModel,
+    pub gpu_model: Option<GpuModel>,
+    /// Total installed vCPUs.
+    pub vcpus: f64,
+    /// Total installed memory (MiB).
+    pub mem: f64,
+    /// Allocated vCPUs.
+    pub cpu_alloc: f64,
+    /// Allocated memory (MiB).
+    pub mem_alloc: f64,
+    /// Per-GPU allocated fraction.
+    pub gpu_alloc: Vec<f64>,
+    /// Number of resident tasks per Table-I bucket (used by the
+    /// GpuClustering policy and by node-activity checks).
+    pub bucket_mix: [u32; NUM_BUCKETS],
+    /// Total resident tasks.
+    pub n_tasks: u32,
+}
+
+impl Node {
+    /// Construct an empty node.
+    pub fn new(
+        id: usize,
+        cpu_model: CpuModel,
+        gpu_model: Option<GpuModel>,
+        vcpus: f64,
+        mem: f64,
+        n_gpus: usize,
+    ) -> Node {
+        assert!(gpu_model.is_some() || n_gpus == 0, "GPUs require a model");
+        Node {
+            id,
+            cpu_model,
+            gpu_model,
+            vcpus,
+            mem,
+            cpu_alloc: 0.0,
+            mem_alloc: 0.0,
+            gpu_alloc: vec![0.0; n_gpus],
+            bucket_mix: [0; NUM_BUCKETS],
+            n_tasks: 0,
+        }
+    }
+
+    /// True if any resource is allocated (an "active" node for the
+    /// GpuPacking policy's tiers).
+    pub fn is_active(&self) -> bool {
+        self.n_tasks > 0
+    }
+
+    /// Enumerate the placements `task` could take on this node.
+    /// * CPU-only → `[CpuOnly]`
+    /// * fractional → one `Shared{g}` per GPU with enough free fraction
+    /// * whole-k → a single canonical placement over the first k fully
+    ///   free GPUs (all whole-GPU subsets are equivalent: same model,
+    ///   same power, same fragmentation)
+    ///
+    /// Empty when the task does not fit.
+    pub fn candidate_placements(&self, task: &Task) -> Vec<Placement> {
+        if !self.can_fit(task) {
+            return Vec::new();
+        }
+        match task.gpu {
+            GpuDemand::Zero => vec![Placement::CpuOnly],
+            GpuDemand::Frac(d) => (0..self.gpu_alloc.len())
+                .filter(|&g| self.gpu_free_of(g) >= d - EPS)
+                .map(|g| Placement::Shared { gpu: g })
+                .collect(),
+            GpuDemand::Whole(k) => {
+                let free: Vec<usize> = (0..self.gpu_alloc.len())
+                    .filter(|&g| self.gpu_free_of(g) >= 1.0 - EPS)
+                    .take(k as usize)
+                    .collect();
+                debug_assert_eq!(free.len(), k as usize);
+                vec![Placement::Whole { gpus: free }]
+            }
+        }
+    }
+
+    /// Validate that `placement` is currently legal for `task`.
+    pub fn placement_fits(&self, task: &Task, placement: &Placement) -> bool {
+        if task.cpu > self.cpu_free() + EPS || task.mem > self.mem_free() + EPS {
+            return false;
+        }
+        match (task.gpu, placement) {
+            (GpuDemand::Zero, Placement::CpuOnly) => true,
+            (GpuDemand::Frac(d), Placement::Shared { gpu }) => {
+                *gpu < self.gpu_alloc.len() && self.gpu_free_of(*gpu) >= d - EPS
+            }
+            (GpuDemand::Whole(k), Placement::Whole { gpus }) => {
+                gpus.len() == k as usize
+                    && gpus.iter().all(|&g| {
+                        g < self.gpu_alloc.len() && self.gpu_free_of(g) >= 1.0 - EPS
+                    })
+            }
+            _ => false,
+        }
+    }
+
+    /// Commit an allocation. Panics (debug) on an illegal placement —
+    /// the scheduler must only bind placements from
+    /// [`Self::candidate_placements`].
+    pub fn allocate(&mut self, task: &Task, placement: &Placement) {
+        debug_assert!(self.placement_fits(task, placement), "illegal placement");
+        self.cpu_alloc += task.cpu;
+        self.mem_alloc += task.mem;
+        match placement {
+            Placement::CpuOnly => {}
+            Placement::Shared { gpu } => {
+                self.gpu_alloc[*gpu] = (self.gpu_alloc[*gpu] + task.gpu.units()).min(1.0);
+            }
+            Placement::Whole { gpus } => {
+                for &g in gpus {
+                    self.gpu_alloc[g] = 1.0;
+                }
+            }
+        }
+        self.bucket_mix[task.gpu.bucket()] += 1;
+        self.n_tasks += 1;
+    }
+
+    /// Release an allocation made with the same (task, placement) pair.
+    pub fn deallocate(&mut self, task: &Task, placement: &Placement) {
+        self.cpu_alloc = (self.cpu_alloc - task.cpu).max(0.0);
+        self.mem_alloc = (self.mem_alloc - task.mem).max(0.0);
+        match placement {
+            Placement::CpuOnly => {}
+            Placement::Shared { gpu } => {
+                self.gpu_alloc[*gpu] = (self.gpu_alloc[*gpu] - task.gpu.units()).max(0.0);
+            }
+            Placement::Whole { gpus } => {
+                for &g in gpus {
+                    self.gpu_alloc[g] = 0.0;
+                }
+            }
+        }
+        self.bucket_mix[task.gpu.bucket()] =
+            self.bucket_mix[task.gpu.bucket()].saturating_sub(1);
+        self.n_tasks = self.n_tasks.saturating_sub(1);
+    }
+
+    /// A zero-copy hypothetical view of this node after assigning
+    /// `(task, placement)` — used by every score plugin's what-if pass.
+    pub fn hypothetical<'a>(&'a self, task: &'a Task, placement: &'a Placement) -> Hypothetical<'a> {
+        debug_assert!(self.placement_fits(task, placement));
+        Hypothetical { node: self, task, placement }
+    }
+}
+
+impl ResourceView for Node {
+    fn cpu_model(&self) -> CpuModel {
+        self.cpu_model
+    }
+    fn gpu_model(&self) -> Option<GpuModel> {
+        self.gpu_model
+    }
+    fn cpu_capacity(&self) -> f64 {
+        self.vcpus
+    }
+    fn cpu_alloc(&self) -> f64 {
+        self.cpu_alloc
+    }
+    fn mem_capacity(&self) -> f64 {
+        self.mem
+    }
+    fn mem_alloc(&self) -> f64 {
+        self.mem_alloc
+    }
+    fn n_gpus(&self) -> usize {
+        self.gpu_alloc.len()
+    }
+    fn gpu_alloc_of(&self, g: usize) -> f64 {
+        self.gpu_alloc[g]
+    }
+}
+
+/// Zero-copy overlay representing a node *after* a hypothetical
+/// assignment (the `HYPASSIGNTONODE` of Algorithm 1).
+pub struct Hypothetical<'a> {
+    node: &'a Node,
+    task: &'a Task,
+    placement: &'a Placement,
+}
+
+impl ResourceView for Hypothetical<'_> {
+    fn cpu_model(&self) -> CpuModel {
+        self.node.cpu_model
+    }
+    fn gpu_model(&self) -> Option<GpuModel> {
+        self.node.gpu_model
+    }
+    fn cpu_capacity(&self) -> f64 {
+        self.node.vcpus
+    }
+    fn cpu_alloc(&self) -> f64 {
+        self.node.cpu_alloc + self.task.cpu
+    }
+    fn mem_capacity(&self) -> f64 {
+        self.node.mem
+    }
+    fn mem_alloc(&self) -> f64 {
+        self.node.mem_alloc + self.task.mem
+    }
+    fn n_gpus(&self) -> usize {
+        self.node.gpu_alloc.len()
+    }
+    fn gpu_alloc_of(&self, g: usize) -> f64 {
+        let base = self.node.gpu_alloc[g];
+        match self.placement {
+            Placement::CpuOnly => base,
+            Placement::Shared { gpu } if *gpu == g => {
+                (base + self.task.gpu.units()).min(1.0)
+            }
+            Placement::Shared { .. } => base,
+            Placement::Whole { gpus } => {
+                if gpus.contains(&g) {
+                    1.0
+                } else {
+                    base
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::types::{CpuModel, GpuModel};
+
+    fn node8() -> Node {
+        Node::new(0, CpuModel::XeonE5_2682V4, Some(GpuModel::G2), 96.0, 393_216.0, 8)
+    }
+
+    #[test]
+    fn fresh_node_is_free() {
+        let n = node8();
+        assert_eq!(n.cpu_free(), 96.0);
+        assert_eq!(n.gpu_free_total(), 8.0);
+        assert_eq!(n.gpus_fully_free(), 8);
+        assert_eq!(n.u_n(), 8.0);
+        assert!(!n.is_active());
+    }
+
+    #[test]
+    fn cond1_cpu() {
+        let n = node8();
+        assert!(n.can_fit(&Task::new(0, 96.0, 0.0, GpuDemand::Zero)));
+        assert!(!n.can_fit(&Task::new(0, 96.5, 0.0, GpuDemand::Zero)));
+    }
+
+    #[test]
+    fn cond2_mem() {
+        let n = node8();
+        assert!(!n.can_fit(&Task::new(0, 1.0, 400_000.0, GpuDemand::Zero)));
+    }
+
+    #[test]
+    fn cond3_whole_gpus() {
+        let mut n = node8();
+        assert!(n.can_fit(&Task::new(0, 1.0, 0.0, GpuDemand::Whole(8))));
+        // Occupy a slice of one GPU -> only 7 fully free.
+        let t = Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.25));
+        n.allocate(&t, &Placement::Shared { gpu: 0 });
+        assert!(!n.can_fit(&Task::new(0, 1.0, 0.0, GpuDemand::Whole(8))));
+        assert!(n.can_fit(&Task::new(0, 1.0, 0.0, GpuDemand::Whole(7))));
+        assert!((n.u_n() - 7.75).abs() < EPS);
+    }
+
+    #[test]
+    fn cond3_fractional_on_free_gpu() {
+        let n = node8();
+        // Intended semantics: a fractional task fits a fully free GPU.
+        assert!(n.can_fit(&Task::new(0, 1.0, 0.0, GpuDemand::Frac(0.9))));
+    }
+
+    #[test]
+    fn fractional_needs_single_gpu_with_room() {
+        let mut n = Node::new(0, CpuModel::XeonE5_2682V4, Some(GpuModel::T4), 64.0, 131_072.0, 2);
+        n.allocate(&Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.6)), &Placement::Shared { gpu: 0 });
+        n.allocate(&Task::new(2, 1.0, 0.0, GpuDemand::Frac(0.6)), &Placement::Shared { gpu: 1 });
+        // 0.4 + 0.4 free in aggregate, but no single GPU has 0.5.
+        assert!(!n.can_fit(&Task::new(3, 1.0, 0.0, GpuDemand::Frac(0.5))));
+        assert!(n.can_fit(&Task::new(3, 1.0, 0.0, GpuDemand::Frac(0.4))));
+    }
+
+    #[test]
+    fn constraint_filters_model() {
+        let n = node8(); // G2 node
+        let ok = Task::new(0, 1.0, 0.0, GpuDemand::Whole(1)).constrained(GpuModel::G2);
+        let bad = Task::new(0, 1.0, 0.0, GpuDemand::Whole(1)).constrained(GpuModel::T4);
+        assert!(n.can_fit(&ok));
+        assert!(!n.can_fit(&bad));
+    }
+
+    #[test]
+    fn cpu_only_node_rejects_gpu_tasks() {
+        let n = Node::new(0, CpuModel::XeonE5_2682V4, None, 94.0, 262_144.0, 0);
+        assert!(!n.can_fit(&Task::new(0, 1.0, 0.0, GpuDemand::Frac(0.1))));
+        assert!(n.can_fit(&Task::new(0, 1.0, 0.0, GpuDemand::Zero)));
+    }
+
+    #[test]
+    fn candidate_placements_fractional() {
+        let mut n = node8();
+        n.allocate(&Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.7)), &Placement::Shared { gpu: 3 });
+        let t = Task::new(2, 1.0, 0.0, GpuDemand::Frac(0.5));
+        let ps = n.candidate_placements(&t);
+        // GPU 3 has only 0.3 free -> 7 candidates.
+        assert_eq!(ps.len(), 7);
+        assert!(!ps.contains(&Placement::Shared { gpu: 3 }));
+    }
+
+    #[test]
+    fn candidate_placements_whole_is_canonical() {
+        let n = node8();
+        let ps = n.candidate_placements(&Task::new(0, 1.0, 0.0, GpuDemand::Whole(2)));
+        assert_eq!(ps, vec![Placement::Whole { gpus: vec![0, 1] }]);
+    }
+
+    #[test]
+    fn allocate_deallocate_roundtrip() {
+        let mut n = node8();
+        let t = Task::new(1, 8.0, 1024.0, GpuDemand::Whole(2));
+        let p = n.candidate_placements(&t).pop().unwrap();
+        n.allocate(&t, &p);
+        assert_eq!(n.cpu_alloc, 8.0);
+        assert_eq!(n.gpus_fully_free(), 6);
+        assert_eq!(n.n_tasks, 1);
+        n.deallocate(&t, &p);
+        assert_eq!(n.cpu_alloc, 0.0);
+        assert_eq!(n.gpus_fully_free(), 8);
+        assert_eq!(n.n_tasks, 0);
+    }
+
+    #[test]
+    fn hypothetical_matches_committed() {
+        let mut n = node8();
+        let t = Task::new(1, 4.0, 512.0, GpuDemand::Frac(0.5));
+        let p = Placement::Shared { gpu: 2 };
+        // Hypothetical view first...
+        {
+            let h = n.hypothetical(&t, &p);
+            assert_eq!(h.cpu_alloc(), 4.0);
+            assert!((h.gpu_alloc_of(2) - 0.5).abs() < EPS);
+            assert_eq!(h.gpu_alloc_of(1), 0.0);
+        }
+        // ...must equal the committed state.
+        n.allocate(&t, &p);
+        assert_eq!(n.cpu_alloc(), 4.0);
+        assert!((n.gpu_alloc_of(2) - 0.5).abs() < EPS);
+    }
+
+    #[test]
+    fn float_accumulation_tolerated() {
+        let mut n = node8();
+        // 10 × 0.1 fills a GPU exactly despite float error.
+        for i in 0..10 {
+            let t = Task::new(i, 0.5, 0.0, GpuDemand::Frac(0.1));
+            assert!(n.placement_fits(&t, &Placement::Shared { gpu: 0 }), "iter {i}");
+            n.allocate(&t, &Placement::Shared { gpu: 0 });
+        }
+        assert!(n.gpu_alloc[0] <= 1.0);
+        assert!(!n.placement_fits(
+            &Task::new(99, 0.5, 0.0, GpuDemand::Frac(0.1)),
+            &Placement::Shared { gpu: 0 }
+        ));
+    }
+}

@@ -1,0 +1,197 @@
+//! Hardware catalog: GPU and CPU models with the power profiles of the
+//! paper's Table II (GPUs) and §V-B (the Intel Xeon E5-2682 v4 CPU).
+
+use std::fmt;
+
+/// GPU models present in the 2023 Alibaba GPU trace (paper Table II).
+///
+/// `G2` and `G3` are the two classified Alibaba models; following the
+/// paper we map G2 → A10 and G3 → A100 power profiles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GpuModel {
+    V100M16,
+    V100M32,
+    P100,
+    T4,
+    A10,
+    G2,
+    G3,
+}
+
+impl GpuModel {
+    /// All models, in Table II order.
+    pub const ALL: [GpuModel; 7] = [
+        GpuModel::V100M16,
+        GpuModel::V100M32,
+        GpuModel::P100,
+        GpuModel::T4,
+        GpuModel::A10,
+        GpuModel::G2,
+        GpuModel::G3,
+    ];
+
+    /// Idle power draw in Watt (`p_idle` in Eq. 2).
+    pub fn p_idle(self) -> f64 {
+        match self {
+            GpuModel::V100M16 | GpuModel::V100M32 => 30.0,
+            GpuModel::P100 => 25.0,
+            GpuModel::T4 => 10.0,
+            GpuModel::A10 | GpuModel::G2 => 30.0,
+            GpuModel::G3 => 50.0,
+        }
+    }
+
+    /// Thermal Design Power in Watt (`p_max` in Eq. 2).
+    pub fn p_max(self) -> f64 {
+        match self {
+            GpuModel::V100M16 | GpuModel::V100M32 => 300.0,
+            GpuModel::P100 => 250.0,
+            GpuModel::T4 => 70.0,
+            GpuModel::A10 | GpuModel::G2 => 150.0,
+            GpuModel::G3 => 400.0,
+        }
+    }
+
+    /// Number of GPUs of this model in the paper's cluster (Table II).
+    pub fn paper_count(self) -> usize {
+        match self {
+            GpuModel::V100M16 => 195,
+            GpuModel::V100M32 => 204,
+            GpuModel::P100 => 265,
+            GpuModel::T4 => 842,
+            GpuModel::A10 => 2,
+            GpuModel::G2 => 4392,
+            GpuModel::G3 => 312,
+        }
+    }
+
+    /// Stable small integer id (used by the XLA scorer's dense encoding).
+    pub fn index(self) -> usize {
+        GpuModel::ALL.iter().position(|&m| m == self).unwrap()
+    }
+
+    /// Inverse of [`Self::index`].
+    pub fn from_index(i: usize) -> Option<GpuModel> {
+        GpuModel::ALL.get(i).copied()
+    }
+
+    /// Parse a model name (the CLI accepts these).
+    pub fn parse(s: &str) -> Option<GpuModel> {
+        match s.to_ascii_uppercase().as_str() {
+            "V100M16" => Some(GpuModel::V100M16),
+            "V100M32" => Some(GpuModel::V100M32),
+            "P100" => Some(GpuModel::P100),
+            "T4" => Some(GpuModel::T4),
+            "A10" => Some(GpuModel::A10),
+            "G2" => Some(GpuModel::G2),
+            "G3" => Some(GpuModel::G3),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for GpuModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            GpuModel::V100M16 => "V100M16",
+            GpuModel::V100M32 => "V100M32",
+            GpuModel::P100 => "P100",
+            GpuModel::T4 => "T4",
+            GpuModel::A10 => "A10",
+            GpuModel::G2 => "G2",
+            GpuModel::G3 => "G3",
+        };
+        f.write_str(s)
+    }
+}
+
+/// CPU models. The trace publishes none, so following the paper we use
+/// the Intel Xeon E5-2682 v4 everywhere (§V-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CpuModel {
+    XeonE5_2682V4,
+}
+
+impl CpuModel {
+    /// Physical cores per socket (`ncores(·)` in Eq. 1).
+    pub fn ncores(self) -> f64 {
+        match self {
+            CpuModel::XeonE5_2682V4 => 16.0,
+        }
+    }
+
+    /// Idle power of one socket in Watt (`p_idle` in Eq. 1).
+    pub fn p_idle(self) -> f64 {
+        match self {
+            CpuModel::XeonE5_2682V4 => 15.0,
+        }
+    }
+
+    /// TDP of one socket in Watt (`p_max` in Eq. 1).
+    pub fn p_max(self) -> f64 {
+        match self {
+            CpuModel::XeonE5_2682V4 => 120.0,
+        }
+    }
+
+    /// vCPUs served by one socket (2 vCPU per physical core, §II).
+    pub fn vcpus_per_socket(self) -> f64 {
+        2.0 * self.ncores()
+    }
+}
+
+impl fmt::Display for CpuModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CpuModel::XeonE5_2682V4 => f.write_str("Xeon-E5-2682v4"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_power_profiles() {
+        assert_eq!(GpuModel::V100M16.p_idle(), 30.0);
+        assert_eq!(GpuModel::V100M16.p_max(), 300.0);
+        assert_eq!(GpuModel::P100.p_idle(), 25.0);
+        assert_eq!(GpuModel::P100.p_max(), 250.0);
+        assert_eq!(GpuModel::T4.p_idle(), 10.0);
+        assert_eq!(GpuModel::T4.p_max(), 70.0);
+        assert_eq!(GpuModel::G2.p_max(), 150.0);
+        assert_eq!(GpuModel::G3.p_idle(), 50.0);
+        assert_eq!(GpuModel::G3.p_max(), 400.0);
+    }
+
+    #[test]
+    fn table2_counts_total_6212() {
+        let total: usize = GpuModel::ALL.iter().map(|m| m.paper_count()).sum();
+        assert_eq!(total, 6212);
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        for m in GpuModel::ALL {
+            assert_eq!(GpuModel::from_index(m.index()), Some(m));
+        }
+        assert_eq!(GpuModel::from_index(7), None);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(GpuModel::parse("t4"), Some(GpuModel::T4));
+        assert_eq!(GpuModel::parse("g3"), Some(GpuModel::G3));
+        assert_eq!(GpuModel::parse("H100"), None);
+    }
+
+    #[test]
+    fn cpu_profile() {
+        let c = CpuModel::XeonE5_2682V4;
+        assert_eq!(c.ncores(), 16.0);
+        assert_eq!(c.p_idle(), 15.0);
+        assert_eq!(c.p_max(), 120.0);
+        assert_eq!(c.vcpus_per_socket(), 32.0);
+    }
+}

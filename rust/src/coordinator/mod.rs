@@ -1,0 +1,353 @@
+//! The online scheduling coordinator: a long-running service that
+//! accepts task submissions and schedules them against the live cluster
+//! state — the deployable form of the paper's Kubernetes plugin.
+//!
+//! Scheduling is atomic (§II: "a new scheduling decision starts only
+//! after the previous one has completed"): all state sits behind one
+//! mutex and each request holds it for exactly one decision. The wire
+//! protocol is JSON-lines over TCP (the offline vendor set has no
+//! tokio; the server is a thread-per-connection std::net design, which
+//! comfortably sustains the paper-scale decision rates — see
+//! `benches/policies.rs`).
+//!
+//! ## Protocol
+//! ```text
+//! → {"op":"submit","id":1,"cpu":4,"mem":1024,"gpu":0.5}
+//! ← {"ok":true,"node":17,"gpu":3}
+//! → {"op":"release","id":1}
+//! ← {"ok":true}
+//! → {"op":"stats"}
+//! ← {"ok":true,"eopc_w":...,"grar":...,"tasks":...,"active_gpus":...}
+//! → {"op":"shutdown"}
+//! ```
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::node::Placement;
+use crate::cluster::Datacenter;
+use crate::power;
+use crate::sched::{PolicyKind, Scheduler};
+use crate::tasks::{GpuDemand, Task, Workload};
+use crate::util::json::{parse, Json};
+
+/// Shared coordinator state (one scheduling decision at a time).
+pub struct CoordinatorState {
+    pub dc: Datacenter,
+    pub sched: Scheduler,
+    pub workload: Workload,
+    /// Live allocations: task id → (task, node, placement).
+    allocations: HashMap<u64, (Task, usize, Placement)>,
+    /// Counters.
+    pub submitted: u64,
+    pub scheduled: u64,
+    pub failed: u64,
+    pub arrived_gpu_units: f64,
+}
+
+impl CoordinatorState {
+    pub fn new(dc: Datacenter, policy: PolicyKind, workload: Workload) -> CoordinatorState {
+        CoordinatorState {
+            dc,
+            sched: Scheduler::from_policy(policy),
+            workload,
+            allocations: HashMap::new(),
+            submitted: 0,
+            scheduled: 0,
+            failed: 0,
+            arrived_gpu_units: 0.0,
+        }
+    }
+
+    /// Submit a task: schedule, commit, register. Returns the decision.
+    pub fn submit(&mut self, task: Task) -> Option<(usize, Placement)> {
+        self.submitted += 1;
+        self.arrived_gpu_units += task.gpu.units();
+        match self.sched.schedule(&self.dc, &self.workload, &task) {
+            Some(d) => {
+                self.dc.allocate(&task, d.node, &d.placement);
+                self.sched.notify_node_changed(d.node);
+                self.allocations.insert(task.id, (task, d.node, d.placement.clone()));
+                self.scheduled += 1;
+                Some((d.node, d.placement))
+            }
+            None => {
+                self.failed += 1;
+                None
+            }
+        }
+    }
+
+    /// Release a previously scheduled task (departure).
+    pub fn release(&mut self, task_id: u64) -> bool {
+        match self.allocations.remove(&task_id) {
+            Some((task, node, placement)) => {
+                self.dc.deallocate(&task, node, &placement);
+                self.sched.notify_node_changed(node);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Current metrics snapshot as JSON.
+    pub fn stats(&self) -> Json {
+        let (cpu_w, gpu_w) = power::p_datacenter_split(&self.dc);
+        let grar = if self.arrived_gpu_units > 0.0 {
+            self.dc.gpu_allocated_units() / self.arrived_gpu_units
+        } else {
+            1.0
+        };
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("eopc_w", Json::Num(cpu_w + gpu_w)),
+            ("cpu_w", Json::Num(cpu_w)),
+            ("gpu_w", Json::Num(gpu_w)),
+            ("grar", Json::Num(grar)),
+            ("tasks", Json::Num(self.dc.n_tasks as f64)),
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("active_gpus", Json::Num(self.dc.active_gpus() as f64)),
+            ("active_nodes", Json::Num(self.dc.active_nodes() as f64)),
+        ])
+    }
+}
+
+/// Parse a `submit` request body into a [`Task`].
+fn task_from_json(v: &Json) -> Result<Task, String> {
+    let id = v.get("id").and_then(|x| x.as_u64()).ok_or("missing id")?;
+    let cpu = v.get("cpu").and_then(|x| x.as_f64()).ok_or("missing cpu")?;
+    let mem = v.get("mem").and_then(|x| x.as_f64()).unwrap_or(0.0);
+    let gpu_units = v.get("gpu").and_then(|x| x.as_f64()).unwrap_or(0.0);
+    let gpu = GpuDemand::from_units(gpu_units).ok_or("invalid gpu demand")?;
+    let gpu_model = match v.get("gpu_model").and_then(|x| x.as_str()) {
+        Some(s) => {
+            Some(crate::cluster::types::GpuModel::parse(s).ok_or("unknown gpu_model")?)
+        }
+        None => None,
+    };
+    Ok(Task { id, cpu, mem, gpu, gpu_model })
+}
+
+/// Handle one request line; returns (response, shutdown?).
+pub fn handle_request(state: &Mutex<CoordinatorState>, line: &str) -> (Json, bool) {
+    let err = |msg: &str| {
+        Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
+    };
+    let v = match parse(line) {
+        Ok(v) => v,
+        Err(e) => return (err(&format!("bad json: {e}")), false),
+    };
+    let op = v.get("op").and_then(|x| x.as_str()).unwrap_or("");
+    match op {
+        "submit" => match task_from_json(&v) {
+            Ok(task) => {
+                let mut st = state.lock().unwrap();
+                match st.submit(task) {
+                    Some((node, placement)) => {
+                        let gpu = match &placement {
+                            Placement::Shared { gpu } => Json::Num(*gpu as f64),
+                            Placement::Whole { gpus } => {
+                                Json::Arr(gpus.iter().map(|&g| Json::Num(g as f64)).collect())
+                            }
+                            Placement::CpuOnly => Json::Null,
+                        };
+                        (
+                            Json::obj(vec![
+                                ("ok", Json::Bool(true)),
+                                ("node", Json::Num(node as f64)),
+                                ("gpu", gpu),
+                            ]),
+                            false,
+                        )
+                    }
+                    None => (err("unschedulable"), false),
+                }
+            }
+            Err(e) => (err(&e), false),
+        },
+        "release" => {
+            let Some(id) = v.get("id").and_then(|x| x.as_u64()) else {
+                return (err("missing id"), false);
+            };
+            let ok = state.lock().unwrap().release(id);
+            if ok {
+                (Json::obj(vec![("ok", Json::Bool(true))]), false)
+            } else {
+                (err("unknown task"), false)
+            }
+        }
+        "stats" => (state.lock().unwrap().stats(), false),
+        "shutdown" => (Json::obj(vec![("ok", Json::Bool(true))]), true),
+        _ => (err("unknown op"), false),
+    }
+}
+
+/// The TCP server. Bind, then call [`Server::run`] (blocking) or use
+/// [`Server::port`] to connect a client first.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<Mutex<CoordinatorState>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind to `addr` (use port 0 for an ephemeral port).
+    pub fn bind(addr: &str, state: CoordinatorState) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Server {
+            listener,
+            state: Arc::new(Mutex::new(state)),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound port.
+    pub fn port(&self) -> u16 {
+        self.listener.local_addr().unwrap().port()
+    }
+
+    /// Shared state handle (for in-process inspection).
+    pub fn state(&self) -> Arc<Mutex<CoordinatorState>> {
+        self.state.clone()
+    }
+
+    /// Accept loop: one thread per connection; returns after a
+    /// `shutdown` request completes.
+    pub fn run(&self) -> std::io::Result<()> {
+        self.listener.set_nonblocking(false)?;
+        let mut workers = Vec::new();
+        for stream in self.listener.incoming() {
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = stream?;
+            let state = self.state.clone();
+            let shutdown = self.shutdown.clone();
+            workers.push(std::thread::spawn(move || {
+                let _ = serve_connection(stream, &state, &shutdown);
+            }));
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+}
+
+fn serve_connection(
+    stream: TcpStream,
+    state: &Mutex<CoordinatorState>,
+    shutdown: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true)?; // request/response protocol: defeat Nagle
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, quit) = handle_request(state, &line);
+        writer.write_all(resp.dump().as_bytes())?;
+        writer.write_all(b"\n")?;
+        if quit {
+            shutdown.store(true, Ordering::SeqCst);
+            // Nudge the accept loop with a dummy connection.
+            let _ = TcpStream::connect(writer.local_addr()?);
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+
+    fn state() -> Mutex<CoordinatorState> {
+        Mutex::new(CoordinatorState::new(
+            ClusterSpec::tiny(2, 4, 1).build(),
+            PolicyKind::PwrFgd { alpha: 0.1 },
+            Workload::default(),
+        ))
+    }
+
+    #[test]
+    fn submit_release_roundtrip() {
+        let st = state();
+        let (resp, _) =
+            handle_request(&st, r#"{"op":"submit","id":1,"cpu":4,"mem":1024,"gpu":0.5}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert!(resp.get("node").is_some());
+        {
+            let s = st.lock().unwrap();
+            assert_eq!(s.dc.n_tasks, 1);
+        }
+        let (resp, _) = handle_request(&st, r#"{"op":"release","id":1}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(st.lock().unwrap().dc.n_tasks, 0);
+    }
+
+    #[test]
+    fn unschedulable_reported() {
+        let st = state();
+        let (resp, _) =
+            handle_request(&st, r#"{"op":"submit","id":1,"cpu":4,"mem":0,"gpu":64}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(st.lock().unwrap().failed, 1);
+    }
+
+    #[test]
+    fn stats_reports_power() {
+        let st = state();
+        let (resp, _) = handle_request(&st, r#"{"op":"stats"}"#);
+        assert!(resp.get("eopc_w").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(resp.get("grar").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        let st = state();
+        let (resp, _) = handle_request(&st, "not json");
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let (resp, _) = handle_request(&st, r#"{"op":"nope"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let (resp, _) = handle_request(&st, r#"{"op":"submit","id":1,"cpu":1,"gpu":1.5}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        let server = Server::bind(
+            "127.0.0.1:0",
+            CoordinatorState::new(
+                ClusterSpec::tiny(2, 4, 1).build(),
+                PolicyKind::Pwr,
+                Workload::default(),
+            ),
+        )
+        .unwrap();
+        let port = server.port();
+        let handle = std::thread::spawn(move || server.run().unwrap());
+        let mut conn = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        conn.write_all(b"{\"op\":\"submit\",\"id\":7,\"cpu\":2,\"mem\":512,\"gpu\":1}\n")
+            .unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = parse(line.trim()).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+        conn.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        handle.join().unwrap();
+    }
+}

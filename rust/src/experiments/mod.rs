@@ -1,0 +1,538 @@
+//! Experiment harness: regenerates every table and figure of the
+//! paper's evaluation (§V–VI) as CSV files under `results/`.
+//!
+//! | id       | paper    | output                                        |
+//! |----------|----------|-----------------------------------------------|
+//! | `table1` | Table I  | trace bucket marginals                        |
+//! | `table2` | Table II | inventory + power profiles                    |
+//! | `fig1`   | Fig. 1   | FGD EOPC stacked CPU/GPU + GPU share          |
+//! | `fig2`   | Fig. 2   | α-sweep: savings vs FGD + GRAR                |
+//! | `fig3`   | Fig. 3   | savings vs FGD, Default trace                 |
+//! | `fig4`   | Fig. 4   | savings, sharing-GPU 100%                     |
+//! | `fig5`   | Fig. 5   | savings, multi-GPU 20% / 50%                  |
+//! | `fig6`   | Fig. 6   | savings, constrained-GPU 10% / 33%            |
+//! | `fig7`   | Fig. 7   | GRAR, Default trace                           |
+//! | `fig8`   | Fig. 8   | GRAR, sharing-GPU 40% / 100%                  |
+//! | `fig9`   | Fig. 9   | GRAR, multi-GPU 20% / 50%                     |
+//! | `fig10`  | Fig. 10  | GRAR, constrained-GPU 10% / 33%               |
+//!
+//! Runs are cached per (trace, policy) within a harness invocation, so
+//! `repro experiment all` shares the 10-repetition simulations between
+//! the savings figures (3–6) and the GRAR figures (7–10), exactly as the
+//! paper evaluates both metrics on the same runs.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::ClusterSpec;
+use crate::metrics::{average_on_grid, capacity_grid, savings_pct, Column};
+use crate::sched::PolicyKind;
+use crate::sim::{run_repetitions, RepeatConfig};
+use crate::trace::TraceSpec;
+use crate::util::csv::CsvWriter;
+
+/// Harness configuration (CLI-controlled).
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    /// Seeded repetitions per (trace, policy) — the paper uses 10.
+    pub reps: usize,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Cluster scale ∈ (0, 1]; 1.0 = the full 1,213-node datacenter.
+    pub scale: f64,
+    /// Inflation target (× GPU capacity).
+    pub target: f64,
+    /// Output directory for CSVs.
+    pub out_dir: String,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            reps: 10,
+            seed: 42,
+            scale: 1.0,
+            target: 1.02,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+/// The α values of the Fig. 2 sweep (legend shows α·1000).
+pub const FIG2_ALPHAS: [f64; 13] =
+    [0.02, 0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 0.93, 1.0];
+
+/// The three selected combinations (§VI-B) + the four competitors used
+/// in Figs. 3–10.
+pub fn comparison_policies() -> Vec<PolicyKind> {
+    vec![
+        PolicyKind::PwrFgd { alpha: 0.05 },
+        PolicyKind::PwrFgd { alpha: 0.1 },
+        PolicyKind::PwrFgd { alpha: 0.2 },
+        PolicyKind::BestFit,
+        PolicyKind::DotProd,
+        PolicyKind::GpuPacking,
+        PolicyKind::GpuClustering,
+    ]
+}
+
+/// Averaged (EOPC, GRAR) series for one (trace, policy) cell.
+#[derive(Clone, Debug)]
+pub struct CellSeries {
+    pub eopc: Vec<f64>,
+    pub cpu_w: Vec<f64>,
+    pub gpu_w: Vec<f64>,
+    pub grar: Vec<f64>,
+}
+
+/// The experiment harness with its run cache.
+pub struct Harness {
+    pub cfg: ExpConfig,
+    cluster: ClusterSpec,
+    grid: Vec<f64>,
+    cache: HashMap<(String, String), CellSeries>,
+}
+
+impl Harness {
+    pub fn new(cfg: ExpConfig) -> Harness {
+        let cluster = if cfg.scale >= 1.0 {
+            ClusterSpec::paper_default()
+        } else {
+            ClusterSpec::paper_scaled(cfg.scale)
+        };
+        let grid = capacity_grid(cfg.target, 0.01);
+        Harness { cfg, cluster, grid, cache: HashMap::new() }
+    }
+
+    /// The common capacity grid.
+    pub fn grid(&self) -> &[f64] {
+        &self.grid
+    }
+
+    /// Run (or fetch) the averaged series for a (trace, policy) cell.
+    pub fn cell(&mut self, trace: &TraceSpec, policy: PolicyKind) -> CellSeries {
+        let key = (trace.name.clone(), policy.label());
+        if let Some(c) = self.cache.get(&key) {
+            return c.clone();
+        }
+        eprintln!(
+            "[experiment] running {} / {} ({} reps, {} nodes)…",
+            trace.name,
+            policy.label(),
+            self.cfg.reps,
+            self.cluster.total_nodes()
+        );
+        let t0 = std::time::Instant::now();
+        let rcfg = RepeatConfig {
+            reps: self.cfg.reps,
+            base_seed: self.cfg.seed,
+            target_ratio: self.cfg.target,
+            record_frag: false,
+            deterministic_ties: false,
+        };
+        let runs = run_repetitions(&self.cluster, trace, policy, &rcfg);
+        let series: Vec<_> = runs.into_iter().map(|r| r.series).collect();
+        let cell = CellSeries {
+            eopc: average_on_grid(&series, Column::Eopc, &self.grid),
+            cpu_w: average_on_grid(&series, Column::CpuW, &self.grid),
+            gpu_w: average_on_grid(&series, Column::GpuW, &self.grid),
+            grar: average_on_grid(&series, Column::Grar, &self.grid),
+        };
+        eprintln!(
+            "[experiment]   done in {:.1}s (final GRAR {:.3})",
+            t0.elapsed().as_secs_f64(),
+            cell.grar.last().copied().unwrap_or(0.0)
+        );
+        self.cache.insert(key, cell.clone());
+        cell
+    }
+
+    fn out_path(&self, name: &str) -> String {
+        format!("{}/{}", self.cfg.out_dir, name)
+    }
+
+    /// Dispatch an experiment id; returns the written CSV paths.
+    pub fn run(&mut self, id: &str) -> Result<Vec<String>> {
+        match id {
+            "table1" => self.table1(),
+            "table2" => self.table2(),
+            "fig1" => self.fig1(),
+            "fig2" => self.fig2(),
+            "fig3" => self.savings_figure("fig3", &[TraceSpec::default_trace()]),
+            "fig4" => self.savings_figure("fig4", &[TraceSpec::sharing_gpu(1.0)]),
+            "fig5" => {
+                self.savings_figure("fig5", &[TraceSpec::multi_gpu(0.2), TraceSpec::multi_gpu(0.5)])
+            }
+            "fig6" => self.savings_figure(
+                "fig6",
+                &[TraceSpec::constrained_gpu(0.1), TraceSpec::constrained_gpu(0.33)],
+            ),
+            "fig7" => self.grar_figure("fig7", &[TraceSpec::default_trace()]),
+            "fig8" => self.grar_figure(
+                "fig8",
+                &[TraceSpec::sharing_gpu(0.4), TraceSpec::sharing_gpu(1.0)],
+            ),
+            "fig9" => {
+                self.grar_figure("fig9", &[TraceSpec::multi_gpu(0.2), TraceSpec::multi_gpu(0.5)])
+            }
+            "fig10" => self.grar_figure(
+                "fig10",
+                &[TraceSpec::constrained_gpu(0.1), TraceSpec::constrained_gpu(0.33)],
+            ),
+            "ext-dynalpha" => self.ext_dynalpha(),
+            "ext-steady" => self.ext_steady(),
+            "ablation-tiebreak" => self.ablation_tiebreak(),
+            "all" => {
+                let ids = [
+                    "table1", "table2", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
+                    "fig7", "fig8", "fig9", "fig10", "ext-dynalpha", "ext-steady",
+                    "ablation-tiebreak",
+                ];
+                let mut out = Vec::new();
+                for id in ids {
+                    out.extend(self.run(id)?);
+                }
+                Ok(out)
+            }
+            other => bail!("unknown experiment id '{other}'"),
+        }
+    }
+
+    /// Extension (paper §VII future work): load-adaptive α vs the best
+    /// static combinations — savings vs FGD and GRAR on one CSV.
+    fn ext_dynalpha(&mut self) -> Result<Vec<String>> {
+        let trace = TraceSpec::default_trace();
+        let fgd = self.cell(&trace, PolicyKind::Fgd);
+        let policies = [
+            PolicyKind::PwrFgd { alpha: 0.1 },
+            PolicyKind::PwrFgd { alpha: 0.5 },
+            PolicyKind::PwrFgdDynamic { alpha_empty: 0.5, alpha_full: 0.02 },
+            PolicyKind::PwrFgdDynamic { alpha_empty: 0.9, alpha_full: 0.05 },
+        ];
+        let mut headers = vec!["x".to_string()];
+        for p in &policies {
+            headers.push(format!("savings_{}", p.label()));
+            headers.push(format!("grar_{}", p.label()));
+        }
+        let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let path = self.out_path("ext_dynalpha.csv");
+        let mut w = CsvWriter::create(&path, &header_refs)?;
+        let cells: Vec<_> = policies.iter().map(|&p| self.cell(&trace, p)).collect();
+        for (i, &x) in self.grid.iter().enumerate() {
+            let mut row = vec![x];
+            for c in &cells {
+                row.push(savings_pct(&fgd.eopc[i..=i], &c.eopc[i..=i])[0]);
+                row.push(c.grar[i]);
+            }
+            w.row(&row)?;
+        }
+        w.flush()?;
+        Ok(vec![path])
+    }
+
+    /// Extension: steady-state churn (arrivals + departures, Poisson/
+    /// exponential) instead of monotone inflation — does the PWR⊕FGD
+    /// advantage survive, and how much extra does a DRS overlay (idle
+    /// nodes slept, Hu et al. [7]) gain on top of each policy?
+    fn ext_steady(&mut self) -> Result<Vec<String>> {
+        use crate::sim::events::{SteadyConfig, SteadySim};
+        let path = self.out_path("ext_steady.csv");
+        let mut w = CsvWriter::create(
+            &path,
+            &[
+                "policy", "offered_load", "steady_eopc_kw", "steady_eopc_drs_kw",
+                "steady_util", "failure_rate",
+            ],
+        )?;
+        let trace = TraceSpec::default_trace();
+        // Offered load knob: mean task duration at fixed arrival rate.
+        for &(label_load, duration) in &[(0.4, 2_500.0), (0.7, 4_500.0)] {
+            for policy in [
+                PolicyKind::Fgd,
+                PolicyKind::PwrFgd { alpha: 0.1 },
+                PolicyKind::Pwr,
+            ] {
+                let mut eopc = Vec::new();
+                let mut drs = Vec::new();
+                let mut util = Vec::new();
+                let mut fail = Vec::new();
+                for rep in 0..self.cfg.reps.min(5) {
+                    let cfg = SteadyConfig {
+                        mean_interarrival_s: 1.0,
+                        mean_duration_s: duration * self.cfg.scale.min(1.0),
+                        horizon_s: 30_000.0 * self.cfg.scale.min(1.0),
+                        sample_every_s: 250.0 * self.cfg.scale.min(1.0),
+                        seed: self.cfg.seed + rep as u64,
+                    };
+                    let dc = self.cluster.build();
+                    let sched = crate::sched::Scheduler::from_policy(policy);
+                    let mut sim = SteadySim::new(dc, sched, &trace, &cfg);
+                    let r = sim.run(&cfg);
+                    eopc.push(r.steady_eopc_w);
+                    drs.push(r.steady_eopc_drs_w);
+                    util.push(r.steady_util);
+                    fail.push(r.failed as f64 / r.arrivals.max(1) as f64);
+                }
+                let mean = crate::util::stats::mean;
+                w.row_str(&[
+                    policy.label(),
+                    format!("{label_load}"),
+                    format!("{:.1}", mean(&eopc) / 1e3),
+                    format!("{:.1}", mean(&drs) / 1e3),
+                    format!("{:.4}", mean(&util)),
+                    format!("{:.4}", mean(&fail)),
+                ])?;
+            }
+        }
+        w.flush()?;
+        Ok(vec![path])
+    }
+
+    /// Ablation: Kubernetes' random tie-break vs deterministic
+    /// lowest-id selection. Shows how much of both FGD's EOPC *and*
+    /// PWR's advantage rides on `selectHost` semantics.
+    fn ablation_tiebreak(&mut self) -> Result<Vec<String>> {
+        let trace = TraceSpec::default_trace();
+        let path = self.out_path("ablation_tiebreak.csv");
+        let mut w = CsvWriter::create(
+            &path,
+            &["x", "fgd_random_mw", "fgd_det_mw", "combo_random_mw", "combo_det_mw"],
+        )?;
+        let run = |h: &Harness, p: PolicyKind, det: bool| {
+            let rcfg = RepeatConfig {
+                reps: h.cfg.reps,
+                base_seed: h.cfg.seed,
+                target_ratio: h.cfg.target,
+                record_frag: false,
+                deterministic_ties: det,
+            };
+            let runs = run_repetitions(&h.cluster, &trace, p, &rcfg);
+            let series: Vec<_> = runs.into_iter().map(|r| r.series).collect();
+            average_on_grid(&series, Column::Eopc, &h.grid)
+        };
+        let combo = PolicyKind::PwrFgd { alpha: 0.1 };
+        let cols = [
+            run(self, PolicyKind::Fgd, false),
+            run(self, PolicyKind::Fgd, true),
+            run(self, combo, false),
+            run(self, combo, true),
+        ];
+        for (i, &x) in self.grid.clone().iter().enumerate() {
+            w.row(&[x, cols[0][i] / 1e6, cols[1][i] / 1e6, cols[2][i] / 1e6, cols[3][i] / 1e6])?;
+        }
+        w.flush()?;
+        Ok(vec![path])
+    }
+
+    /// Table I: per-bucket marginals for every trace family.
+    fn table1(&mut self) -> Result<Vec<String>> {
+        let path = self.out_path("table1.csv");
+        let mut w = CsvWriter::create(
+            &path,
+            &["trace", "bucket", "population_pct", "gpu_share_pct"],
+        )?;
+        let buckets = ["0", "(0,1)", "1", "2", "4", "8"];
+        let specs = [
+            TraceSpec::default_trace(),
+            TraceSpec::multi_gpu(0.2),
+            TraceSpec::multi_gpu(0.5),
+            TraceSpec::sharing_gpu(0.4),
+            TraceSpec::sharing_gpu(1.0),
+            TraceSpec::constrained_gpu(0.33),
+        ];
+        for spec in &specs {
+            let trace = spec.synthesize(self.cfg.seed);
+            let pop = trace.population_pct();
+            let share = trace.gpu_share_pct();
+            for b in 0..buckets.len() {
+                w.row_str(&[
+                    spec.name.clone(),
+                    buckets[b].to_string(),
+                    format!("{:.2}", pop[b]),
+                    format!("{:.2}", share[b]),
+                ])?;
+            }
+        }
+        w.flush()?;
+        Ok(vec![path])
+    }
+
+    /// Table II: GPU inventory + power profiles as built.
+    fn table2(&mut self) -> Result<Vec<String>> {
+        let path = self.out_path("table2.csv");
+        let mut w =
+            CsvWriter::create(&path, &["gpu_model", "amount", "power_idle_w", "tdp_w"])?;
+        for (model, count) in ClusterSpec::paper_default().gpus_by_model() {
+            w.row_str(&[
+                model.to_string(),
+                count.to_string(),
+                format!("{}", model.p_idle()),
+                format!("{}", model.p_max()),
+            ])?;
+        }
+        w.flush()?;
+        Ok(vec![path])
+    }
+
+    /// Fig. 1: FGD EOPC on the Default trace, CPU/GPU stacked + share.
+    fn fig1(&mut self) -> Result<Vec<String>> {
+        let cell = self.cell(&TraceSpec::default_trace(), PolicyKind::Fgd);
+        let path = self.out_path("fig1.csv");
+        let mut w = CsvWriter::create(
+            &path,
+            &["x", "eopc_mw", "cpu_mw", "gpu_mw", "gpu_share"],
+        )?;
+        for (i, &x) in self.grid.iter().enumerate() {
+            let share = if cell.eopc[i] > 0.0 { cell.gpu_w[i] / cell.eopc[i] } else { 0.0 };
+            w.row(&[
+                x,
+                cell.eopc[i] / 1e6,
+                cell.cpu_w[i] / 1e6,
+                cell.gpu_w[i] / 1e6,
+                share,
+            ])?;
+        }
+        w.flush()?;
+        Ok(vec![path])
+    }
+
+    /// Fig. 2: α-sweep — savings vs FGD (top) and GRAR (bottom).
+    fn fig2(&mut self) -> Result<Vec<String>> {
+        let trace = TraceSpec::default_trace();
+        let fgd = self.cell(&trace, PolicyKind::Fgd);
+        let mut headers = vec!["x".to_string()];
+        let mut cells = Vec::new();
+        for &alpha in &FIG2_ALPHAS {
+            let p = if alpha >= 1.0 {
+                PolicyKind::Pwr
+            } else {
+                PolicyKind::PwrFgd { alpha }
+            };
+            headers.push(p.label());
+            cells.push(self.cell(&trace, p));
+        }
+        let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+
+        let savings_path = self.out_path("fig2_savings.csv");
+        let mut w = CsvWriter::create(&savings_path, &header_refs)?;
+        for (i, &x) in self.grid.iter().enumerate() {
+            let mut row = vec![x];
+            for c in &cells {
+                row.push(savings_pct(&fgd.eopc[i..=i], &c.eopc[i..=i])[0]);
+            }
+            w.row(&row)?;
+        }
+        w.flush()?;
+
+        let grar_path = self.out_path("fig2_grar.csv");
+        let mut w = CsvWriter::create(&grar_path, &header_refs)?;
+        for (i, &x) in self.grid.iter().enumerate() {
+            let mut row = vec![x];
+            for c in &cells {
+                row.push(c.grar[i]);
+            }
+            w.row(&row)?;
+        }
+        w.flush()?;
+        Ok(vec![savings_path, grar_path])
+    }
+
+    /// Figs. 3–6: power savings vs plain FGD for the comparison set.
+    fn savings_figure(&mut self, id: &str, traces: &[TraceSpec]) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for trace in traces {
+            let fgd = self.cell(trace, PolicyKind::Fgd);
+            let policies = comparison_policies();
+            let mut headers = vec!["x".to_string()];
+            headers.extend(policies.iter().map(|p| p.label()));
+            let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+            let path = self.out_path(&format!("{id}_{}.csv", trace.name));
+            let mut w = CsvWriter::create(&path, &header_refs)?;
+            let cells: Vec<_> = policies.iter().map(|&p| self.cell(trace, p)).collect();
+            for (i, &x) in self.grid.iter().enumerate() {
+                let mut row = vec![x];
+                for c in &cells {
+                    row.push(savings_pct(&fgd.eopc[i..=i], &c.eopc[i..=i])[0]);
+                }
+                w.row(&row)?;
+            }
+            w.flush()?;
+            out.push(path);
+        }
+        Ok(out)
+    }
+
+    /// Figs. 7–10: GRAR for FGD + the comparison set.
+    fn grar_figure(&mut self, id: &str, traces: &[TraceSpec]) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for trace in traces {
+            let mut policies = vec![PolicyKind::Fgd];
+            policies.extend(comparison_policies());
+            let mut headers = vec!["x".to_string()];
+            headers.extend(policies.iter().map(|p| p.label()));
+            let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+            let path = self.out_path(&format!("{id}_{}.csv", trace.name));
+            let mut w = CsvWriter::create(&path, &header_refs)?;
+            let cells: Vec<_> = policies.iter().map(|&p| self.cell(trace, p)).collect();
+            for (i, &x) in self.grid.iter().enumerate() {
+                let mut row = vec![x];
+                for c in &cells {
+                    row.push(c.grar[i]);
+                }
+                w.row(&row)?;
+            }
+            w.flush()?;
+            out.push(path);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(dir: &str) -> ExpConfig {
+        ExpConfig {
+            reps: 2,
+            seed: 1,
+            scale: 0.03,
+            target: 0.6,
+            out_dir: dir.to_string(),
+        }
+    }
+
+    #[test]
+    fn table1_and_table2_write() {
+        let dir = std::env::temp_dir().join("repro_exp_tables");
+        let mut h = Harness::new(tiny_cfg(dir.to_str().unwrap()));
+        let files = h.run("table1").unwrap();
+        assert_eq!(files.len(), 1);
+        let text = std::fs::read_to_string(&files[0]).unwrap();
+        assert!(text.contains("default"));
+        let files = h.run("table2").unwrap();
+        let text = std::fs::read_to_string(&files[0]).unwrap();
+        assert!(text.contains("G2,4392,30,150"));
+    }
+
+    #[test]
+    fn fig1_writes_and_caches() {
+        let dir = std::env::temp_dir().join("repro_exp_fig1");
+        let mut h = Harness::new(tiny_cfg(dir.to_str().unwrap()));
+        let files = h.run("fig1").unwrap();
+        let (header, rows) =
+            crate::util::csv::read_csv(&std::fs::read_to_string(&files[0]).unwrap());
+        assert_eq!(header[0], "x");
+        assert!(rows.len() > 10);
+        // Cached: a second run must not re-simulate (same result).
+        let files2 = h.run("fig1").unwrap();
+        assert_eq!(files, files2);
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        let mut h = Harness::new(tiny_cfg("/tmp/repro_x"));
+        assert!(h.run("fig99").is_err());
+    }
+}

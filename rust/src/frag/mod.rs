@@ -1,0 +1,512 @@
+//! The FGD fragmentation metric (Weng et al., USENIX ATC'23; §II of the
+//! paper).
+//!
+//! For a node `n` and a task class `m`, `F_n(m)` measures how much of
+//! `n`'s *unallocated* GPU resource cannot be used by a task of class
+//! `m`. Two cases (the paper defers the definition to [19]):
+//!
+//! 1. `m` **cannot run** on `n` at all (Cond. 1–3 or a model-constraint
+//!    failure): every unallocated GPU fraction is a fragment —
+//!    `F_n(m) = Σ_g R_{n,g}`.
+//! 2. `m` **can run**: a GPU's free fraction is a fragment iff a task of
+//!    class `m` could not use that GPU:
+//!    * `D_m^GPU ∈ (0,1)`: fragment of GPU g is `R_g` when `0 < R_g < D`;
+//!    * `D_m^GPU ∈ Z+`: fragment is `R_g` when `0 < R_g < 1` (whole-GPU
+//!      tasks cannot use partial GPUs);
+//!    * `D_m^GPU = 0`: CPU-only tasks consume no GPU — no fragment.
+//!
+//! The node's expected fragmentation is `F_n(M) = Σ_m pop_m · F_n(m)`
+//! and the datacenter's is `F_dc = Σ_n F_n(M)` (Eq. 4).
+
+use crate::cluster::node::{ResourceView, EPS};
+use crate::cluster::Datacenter;
+use crate::tasks::{GpuDemand, TaskClass, Workload};
+
+/// `F_n(m)`: GPU fragmentation of a node view for one task class.
+pub fn f_node_class<V: ResourceView + ?Sized>(v: &V, class: &TaskClass) -> f64 {
+    let task = class.as_task();
+    if !v.can_fit(&task) {
+        // Case 1: all unallocated GPU resources are unusable by m.
+        return v.gpu_free_total();
+    }
+    // Case 2: count per-GPU residuals unusable by m.
+    match class.gpu {
+        GpuDemand::Zero => 0.0,
+        GpuDemand::Frac(d) => {
+            let mut frag = 0.0;
+            for g in 0..v.n_gpus() {
+                let r = v.gpu_free_of(g);
+                if r > EPS && r < d - EPS {
+                    frag += r;
+                }
+            }
+            frag
+        }
+        GpuDemand::Whole(_) => {
+            let mut frag = 0.0;
+            for g in 0..v.n_gpus() {
+                let r = v.gpu_free_of(g);
+                if r > EPS && r < 1.0 - EPS {
+                    frag += r;
+                }
+            }
+            frag
+        }
+    }
+}
+
+/// `F_n(M) = Σ_m pop_m · F_n(m)`: expected fragmentation of a node.
+pub fn f_node<V: ResourceView + ?Sized>(v: &V, workload: &Workload) -> f64 {
+    workload.classes.iter().map(|m| m.pop * f_node_class(v, m)).sum()
+}
+
+/// `F_dc = Σ_n F_n(M)` (Eq. 4), in GPU units.
+pub fn f_datacenter(dc: &Datacenter, workload: &Workload) -> f64 {
+    dc.nodes.iter().map(|n| f_node(n, workload)).sum()
+}
+
+// ---------------------------------------------------------------------------
+// Fast path (§Perf): the generic `f_node` above recomputes O(G) node
+// reductions *per class*. The scheduler's hot loop instead builds a
+// [`FragEval`] once per hypothetical state — O(G log G) — after which
+// every class costs O(1)–O(G): feasibility from precomputed stats,
+// whole-class fragments from a precomputed total, fractional-class
+// fragments from a sorted-residual linear scan (G ≤ 8). Combined with
+// [`PreparedWorkload`] (constraint/kind pre-decoded) this takes the FGD
+// decision from 1.33 ms to the ~100 µs class at 1,213 nodes.
+// ---------------------------------------------------------------------------
+
+/// Hard cap on GPUs per node (the paper's cluster maxes at 8).
+pub const MAX_GPUS: usize = 8;
+
+/// A workload class pre-decoded for the hot loop.
+#[derive(Clone, Copy, Debug)]
+struct PClass {
+    cpu: f64,
+    mem: f64,
+    /// Fractional demand (kind 1) or whole-GPU count (kind 2).
+    d: f64,
+    /// 0 = CPU-only, 1 = fractional, 2 = whole.
+    kind: u8,
+    /// GPU-model constraint as an index; -1 = unconstrained.
+    constraint: i8,
+    pop: f64,
+}
+
+/// The target workload `M`, pre-decoded.
+#[derive(Clone, Debug)]
+pub struct PreparedWorkload {
+    classes: Vec<PClass>,
+}
+
+impl PreparedWorkload {
+    pub fn new(w: &Workload) -> PreparedWorkload {
+        let classes = w
+            .classes
+            .iter()
+            .map(|c| {
+                let (kind, d) = match c.gpu {
+                    GpuDemand::Zero => (0, 0.0),
+                    GpuDemand::Frac(d) => (1, d),
+                    GpuDemand::Whole(k) => (2, k as f64),
+                };
+                PClass {
+                    cpu: c.cpu,
+                    mem: c.mem,
+                    d,
+                    kind,
+                    constraint: c.gpu_model.map(|m| m.index() as i8).unwrap_or(-1),
+                    pop: c.pop,
+                }
+            })
+            .collect();
+        PreparedWorkload { classes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+}
+
+/// Per-state fragmentation evaluator: build once per (node ×
+/// hypothetical placement), then evaluate all classes cheaply.
+#[derive(Clone, Copy, Debug)]
+pub struct FragEval {
+    sumfree: f64,
+    maxfree: f64,
+    nfull: f64,
+    /// Partial residuals (0 < r < 1), ascending.
+    partials: [f64; MAX_GPUS],
+    npart: usize,
+    partials_total: f64,
+}
+
+impl FragEval {
+    /// Build from the per-GPU free fractions of a (possibly
+    /// hypothetical) node state.
+    pub fn from_residuals(resid: &[f64]) -> FragEval {
+        debug_assert!(resid.len() <= MAX_GPUS);
+        let mut e = FragEval {
+            sumfree: 0.0,
+            maxfree: 0.0,
+            nfull: 0.0,
+            partials: [0.0; MAX_GPUS],
+            npart: 0,
+            partials_total: 0.0,
+        };
+        for &r in resid {
+            e.sumfree += r;
+            if r > e.maxfree {
+                e.maxfree = r;
+            }
+            if r >= 1.0 - EPS {
+                e.nfull += 1.0;
+            } else if r > EPS {
+                e.partials[e.npart] = r;
+                e.npart += 1;
+                e.partials_total += r;
+            }
+        }
+        // Insertion sort: npart ≤ 8.
+        for i in 1..e.npart {
+            let x = e.partials[i];
+            let mut j = i;
+            while j > 0 && e.partials[j - 1] > x {
+                e.partials[j] = e.partials[j - 1];
+                j -= 1;
+            }
+            e.partials[j] = x;
+        }
+        e
+    }
+
+    /// `Σ_g r_g · [EPS < r_g < d−EPS]` — fragments for a fractional
+    /// class (ascending scan, early exit).
+    #[inline]
+    fn frag_frac(&self, d: f64) -> f64 {
+        let mut acc = 0.0;
+        for &r in &self.partials[..self.npart] {
+            if r < d - EPS {
+                acc += r;
+            } else {
+                break;
+            }
+        }
+        acc
+    }
+
+    /// `F_n(M)` for a node state with these GPU residuals.
+    /// `model_idx` is the node's GPU model index (−1 = CPU-only).
+    pub fn f_node(&self, cpu_free: f64, mem_free: f64, model_idx: i8, pw: &PreparedWorkload) -> f64 {
+        let mut total = 0.0;
+        for c in &pw.classes {
+            let fits_basics = c.cpu <= cpu_free + EPS && c.mem <= mem_free + EPS;
+            let feas = fits_basics
+                && match c.kind {
+                    0 => true,
+                    _ => {
+                        model_idx >= 0
+                            && (c.constraint < 0 || c.constraint == model_idx)
+                            && if c.kind == 1 {
+                                self.maxfree >= c.d - EPS
+                            } else {
+                                self.nfull >= c.d - EPS
+                            }
+                    }
+                };
+            let f = if !feas {
+                self.sumfree
+            } else {
+                match c.kind {
+                    0 => 0.0,
+                    1 => self.frag_frac(c.d),
+                    _ => self.partials_total,
+                }
+            };
+            total += c.pop * f;
+        }
+        total
+    }
+}
+
+/// Fast `F_n(M)` of a node's *current* state.
+pub fn f_node_fast(node: &crate::cluster::node::Node, pw: &PreparedWorkload) -> f64 {
+    let g = node.gpu_alloc.len();
+    let mut resid = [0.0f64; MAX_GPUS];
+    for (j, r) in resid[..g].iter_mut().enumerate() {
+        *r = 1.0 - node.gpu_alloc[j];
+    }
+    let model_idx = node.gpu_model.map(|m| m.index() as i8).unwrap_or(-1);
+    FragEval::from_residuals(&resid[..g]).f_node(node.cpu_free(), node.mem_free(), model_idx, pw)
+}
+
+/// Fast `ΔF_n(M)` of a hypothetical `(task, placement)` assignment,
+/// given the cached `before = F_n(M)`.
+pub fn frag_delta_fast(
+    node: &crate::cluster::node::Node,
+    task: &crate::tasks::Task,
+    placement: &crate::cluster::node::Placement,
+    pw: &PreparedWorkload,
+    before: f64,
+) -> f64 {
+    use crate::cluster::node::Placement;
+    let g = node.gpu_alloc.len();
+    let mut resid = [0.0f64; MAX_GPUS];
+    for (j, r) in resid[..g].iter_mut().enumerate() {
+        *r = 1.0 - node.gpu_alloc[j];
+    }
+    match placement {
+        Placement::CpuOnly => {}
+        Placement::Shared { gpu } => {
+            resid[*gpu] = (resid[*gpu] - task.gpu.units()).max(0.0);
+        }
+        Placement::Whole { gpus } => {
+            for &j in gpus {
+                resid[j] = 0.0;
+            }
+        }
+    }
+    let model_idx = node.gpu_model.map(|m| m.index() as i8).unwrap_or(-1);
+    let after = FragEval::from_residuals(&resid[..g]).f_node(
+        node.cpu_free() - task.cpu,
+        node.mem_free() - task.mem,
+        model_idx,
+        pw,
+    );
+    after - before
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::{Node, Placement};
+    use crate::cluster::types::{CpuModel, GpuModel};
+    use crate::tasks::Task;
+
+    fn node(n_gpus: usize) -> Node {
+        Node::new(0, CpuModel::XeonE5_2682V4, Some(GpuModel::G2), 96.0, 393_216.0, n_gpus)
+    }
+
+    fn class(cpu: f64, gpu: GpuDemand, pop: f64) -> TaskClass {
+        TaskClass { cpu, mem: 0.0, gpu, gpu_model: None, pop }
+    }
+
+    #[test]
+    fn case1_infeasible_class_fragments_everything() {
+        let mut n = node(4);
+        // Exhaust CPU so nothing can run.
+        n.allocate(&Task::new(1, 96.0, 0.0, GpuDemand::Zero), &Placement::CpuOnly);
+        let m = class(1.0, GpuDemand::Frac(0.5), 1.0);
+        assert_eq!(f_node_class(&n, &m), 4.0); // all 4 free GPUs stranded
+    }
+
+    #[test]
+    fn case2_fractional_counts_small_residuals() {
+        let mut n = node(4);
+        // GPU0 left with 0.3 free, GPU1 with 0.6 free, GPU2/3 fully free.
+        n.allocate(&Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.7)), &Placement::Shared { gpu: 0 });
+        n.allocate(&Task::new(2, 1.0, 0.0, GpuDemand::Frac(0.4)), &Placement::Shared { gpu: 1 });
+        // Class wanting 0.5: GPU0's 0.3 is unusable; GPU1's 0.6 is fine.
+        let m = class(1.0, GpuDemand::Frac(0.5), 1.0);
+        assert!((f_node_class(&n, &m) - 0.3).abs() < 1e-9);
+        // Class wanting 0.2: nothing is unusable.
+        let m = class(1.0, GpuDemand::Frac(0.2), 1.0);
+        assert_eq!(f_node_class(&n, &m), 0.0);
+    }
+
+    #[test]
+    fn case2_whole_gpu_counts_all_partials() {
+        let mut n = node(4);
+        n.allocate(&Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.7)), &Placement::Shared { gpu: 0 });
+        n.allocate(&Task::new(2, 1.0, 0.0, GpuDemand::Frac(0.4)), &Placement::Shared { gpu: 1 });
+        // A 1-GPU class can't use the 0.3 and 0.6 residuals.
+        let m = class(1.0, GpuDemand::Whole(1), 1.0);
+        assert!((f_node_class(&n, &m) - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cpu_only_class_never_fragments_when_feasible() {
+        let mut n = node(4);
+        n.allocate(&Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.7)), &Placement::Shared { gpu: 0 });
+        let m = class(1.0, GpuDemand::Zero, 1.0);
+        assert_eq!(f_node_class(&n, &m), 0.0);
+    }
+
+    #[test]
+    fn constrained_class_on_wrong_model_is_case1() {
+        let n = node(4); // G2 node
+        let m = TaskClass {
+            cpu: 1.0,
+            mem: 0.0,
+            gpu: GpuDemand::Whole(1),
+            gpu_model: Some(GpuModel::T4),
+            pop: 1.0,
+        };
+        assert_eq!(f_node_class(&n, &m), 4.0);
+    }
+
+    #[test]
+    fn expected_frag_weights_by_popularity() {
+        let mut n = node(2);
+        n.allocate(&Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.8)), &Placement::Shared { gpu: 0 });
+        // free: GPU0 0.2, GPU1 1.0
+        let w = Workload {
+            classes: vec![
+                class(1.0, GpuDemand::Frac(0.5), 0.5), // frag 0.2
+                class(1.0, GpuDemand::Whole(1), 0.5),  // frag 0.2
+            ],
+        };
+        assert!((f_node(&n, &w) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fgd_intuition_packing_reduces_expected_frag() {
+        // Placing a 0.5 task on an already-half GPU (perfect fill) should
+        // increase fragmentation less than splitting a fresh GPU.
+        let mut n = node(2);
+        n.allocate(&Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.5)), &Placement::Shared { gpu: 0 });
+        let w = Workload {
+            classes: vec![
+                class(1.0, GpuDemand::Frac(0.5), 0.6),
+                class(1.0, GpuDemand::Whole(1), 0.4),
+            ],
+        };
+        let t = Task::new(2, 1.0, 0.0, GpuDemand::Frac(0.5));
+        let before = f_node(&n, &w);
+        let pack = {
+            let h = n.hypothetical(&t, &Placement::Shared { gpu: 0 });
+            f_node(&h, &w) - before
+        };
+        let split = {
+            let h = n.hypothetical(&t, &Placement::Shared { gpu: 1 });
+            f_node(&h, &w) - before
+        };
+        assert!(
+            pack < split,
+            "packing Δ ({pack}) should beat splitting Δ ({split})"
+        );
+    }
+
+    /// Property test (hand-rolled, seeded): the fast evaluator must
+    /// match the reference `f_node` on random node states, workloads
+    /// and hypothetical placements.
+    #[test]
+    fn fast_path_matches_reference() {
+        use crate::cluster::types::GpuModel;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xFA57);
+        let fracs = [0.1, 0.25, 0.3, 0.5, 0.6, 0.75, 0.8, 0.9];
+        for trial in 0..300 {
+            // Random node state.
+            let g = rng.range(1, MAX_GPUS + 1);
+            let model = *rng.choice(&GpuModel::ALL);
+            let mut n = Node::new(0, crate::cluster::types::CpuModel::XeonE5_2682V4,
+                Some(model), 96.0, 262_144.0, g);
+            n.cpu_alloc = rng.range_f64(0.0, 96.0);
+            n.mem_alloc = rng.range_f64(0.0, 200_000.0);
+            for j in 0..g {
+                n.gpu_alloc[j] = *rng.choice(&[0.0, 0.25, 0.5, 0.75, 1.0]);
+            }
+            // Random workload.
+            let mut classes = Vec::new();
+            for _ in 0..rng.range(1, 12) {
+                let gpu = match rng.below(3) {
+                    0 => GpuDemand::Zero,
+                    1 => GpuDemand::Frac(*rng.choice(&fracs)),
+                    _ => GpuDemand::Whole(*rng.choice(&[1u32, 2, 4, 8])),
+                };
+                classes.push(TaskClass {
+                    cpu: rng.range_f64(0.0, 64.0),
+                    mem: rng.range_f64(0.0, 300_000.0),
+                    gpu,
+                    gpu_model: if rng.bernoulli(0.2) {
+                        Some(*rng.choice(&GpuModel::ALL))
+                    } else {
+                        None
+                    },
+                    pop: rng.range_f64(0.01, 1.0),
+                });
+            }
+            let w = Workload { classes };
+            let pw = PreparedWorkload::new(&w);
+            // Current state.
+            let slow = f_node(&n, &w);
+            let fast = f_node_fast(&n, &pw);
+            assert!((slow - fast).abs() < 1e-9, "trial {trial}: {slow} vs {fast}");
+            // Hypothetical placements.
+            let task = Task::new(
+                trial,
+                rng.range_f64(0.0, 32.0),
+                rng.range_f64(0.0, 50_000.0),
+                GpuDemand::Frac(*rng.choice(&fracs)),
+            );
+            for p in n.candidate_placements(&task) {
+                let slow_d = {
+                    let h = n.hypothetical(&task, &p);
+                    f_node(&h, &w) - slow
+                };
+                let fast_d = frag_delta_fast(&n, &task, &p, &pw, fast);
+                assert!(
+                    (slow_d - fast_d).abs() < 1e-9,
+                    "trial {trial} {p:?}: {slow_d} vs {fast_d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fast_path_whole_and_cpu_placements() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xFA58);
+        for trial in 0..100 {
+            let mut n = node(4);
+            for j in 0..4 {
+                n.gpu_alloc[j] = *rng.choice(&[0.0, 0.5, 1.0]);
+            }
+            n.cpu_alloc = rng.range_f64(0.0, 90.0);
+            let w = Workload {
+                classes: vec![
+                    class(8.0, GpuDemand::Frac(0.5), 0.4),
+                    class(90.0, GpuDemand::Whole(2), 0.4),
+                    class(4.0, GpuDemand::Zero, 0.2),
+                ],
+            };
+            let pw = PreparedWorkload::new(&w);
+            let before_slow = f_node(&n, &w);
+            let before_fast = f_node_fast(&n, &pw);
+            assert!((before_slow - before_fast).abs() < 1e-9);
+            let k = n.gpus_fully_free().min(2) as u32;
+            let tasks = [
+                Task::new(trial, 4.0, 0.0, GpuDemand::Zero),
+                Task::new(trial, 4.0, 0.0, GpuDemand::Whole(k.max(1))),
+            ];
+            for t in &tasks {
+                for p in n.candidate_placements(t) {
+                    let slow_d = {
+                        let h = n.hypothetical(t, &p);
+                        f_node(&h, &w) - before_slow
+                    };
+                    let fast_d = frag_delta_fast(&n, t, &p, &pw, before_fast);
+                    assert!((slow_d - fast_d).abs() < 1e-9, "trial {trial} {t:?} {p:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f_datacenter_sums_nodes() {
+        let mut dc = crate::cluster::ClusterSpec::tiny(2, 2, 0).build();
+        let t = Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.9));
+        let p = dc.nodes[0].candidate_placements(&t)[0].clone();
+        dc.allocate(&t, 0, &p);
+        let w = Workload { classes: vec![class(1.0, GpuDemand::Frac(0.5), 1.0)] };
+        let total = f_datacenter(&dc, &w);
+        let by_hand: f64 = dc.nodes.iter().map(|n| f_node(n, &w)).sum();
+        assert_eq!(total, by_hand);
+        assert!((total - 0.1).abs() < 1e-9); // only the 0.1 residual fragments
+    }
+}

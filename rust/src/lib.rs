@@ -1,0 +1,54 @@
+//! # repro — Power- and Fragmentation-aware Online Scheduling for GPU Datacenters
+//!
+//! A full reproduction of the PWR + FGD scheduling system (Lettich et al.,
+//! CS.DC 2024): a simulated heterogeneous GPU datacenter, a
+//! Kubernetes-scheduling-framework analog with filter/score/normalize
+//! plugins, the paper's power model (Eq. 1–3), the FGD fragmentation
+//! metric of Weng et al. (USENIX ATC'23), seven scheduling policies, a
+//! Monte-Carlo workload-inflation simulator over Alibaba-trace-calibrated
+//! workloads, and an experiment harness regenerating every table and
+//! figure of the paper.
+//!
+//! The numeric hot-spot — batched node scoring (power delta + expected
+//! fragmentation delta over all nodes × GPUs × task classes) — is also
+//! implemented as a JAX/Pallas program AOT-lowered to HLO and executed
+//! from Rust through the PJRT C API (see [`runtime`] and
+//! `python/compile/`). The native scorer in [`sched`] and the XLA scorer
+//! must agree; integration tests assert this.
+//!
+//! ## Layer map
+//! * L3 (this crate): coordinator, simulator, policies, experiments.
+//! * L2 (`python/compile/model.py`): the scoring graph, lowered once to
+//!   `artifacts/*.hlo.txt`.
+//! * L1 (`python/compile/kernels/score.py`): the Pallas scoring kernel.
+//!
+//! ## Quickstart
+//! ```no_run
+//! use repro::cluster::inventory::ClusterSpec;
+//! use repro::sched::{Scheduler, PolicyKind};
+//! use repro::trace::TraceSpec;
+//! use repro::sim::Simulation;
+//!
+//! let dc = ClusterSpec::paper_default().build();
+//! let trace = TraceSpec::default_trace().synthesize(42);
+//! let sched = Scheduler::from_policy(PolicyKind::PwrFgd { alpha: 0.1 });
+//! let mut sim = Simulation::new(dc, sched, &trace, 42);
+//! let out = sim.run_inflation(1.02);
+//! println!("final EOPC = {:.1} kW", out.final_eopc() / 1e3);
+//! ```
+
+pub mod cluster;
+pub mod coordinator;
+pub mod experiments;
+pub mod frag;
+pub mod metrics;
+pub mod power;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod tasks;
+pub mod trace;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,227 @@
+//! `repro` — CLI for the PWR+FGD GPU-datacenter scheduling system.
+//!
+//! ```text
+//! repro simulate   --policy pwrfgd:0.1 --trace default --seed 42 [--scale 0.25] [--target 1.02]
+//! repro experiment <table1|table2|fig1..fig10|all> [--reps 10] [--scale 1.0] [--out results]
+//! repro trace      <default|multi-gpu-20|sharing-gpu-100|...> [--seed 42]
+//! repro inventory
+//! repro serve      [--addr 127.0.0.1:7077] [--policy pwrfgd:0.1]
+//! repro scorer-check [--artifacts artifacts] [--tasks 200]   (XLA vs native parity)
+//! ```
+
+use anyhow::{bail, Context, Result};
+use repro::cluster::ClusterSpec;
+use repro::coordinator::{CoordinatorState, Server};
+use repro::experiments::{ExpConfig, Harness};
+use repro::sched::{PolicyKind, Scheduler};
+use repro::sim::Simulation;
+use repro::trace::TraceSpec;
+use repro::util::cli::parse_args;
+
+const VALUE_KEYS: &[&str] = &[
+    "policy", "trace", "seed", "scale", "target", "reps", "out", "addr", "alpha",
+    "artifacts", "tasks",
+];
+
+fn main() -> Result<()> {
+    let args = parse_args(std::env::args().skip(1), VALUE_KEYS);
+    match args.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("inventory") => cmd_inventory(),
+        Some("serve") => cmd_serve(&args),
+        Some("scorer-check") => cmd_scorer_check(&args),
+        Some("plot") => cmd_plot(&args),
+        _ => {
+            eprintln!(
+                "usage: repro <simulate|experiment|trace|inventory|serve|scorer-check|plot> [options]\n\
+                 see rust/src/main.rs header for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Render experiment CSVs to SVG. With no positional args, plots every
+/// CSV under `--out` (default `results/`).
+fn cmd_plot(args: &repro::util::cli::Args) -> Result<()> {
+    use repro::util::plot::{plot_csv, PlotConfig};
+    let dir = args.get("out", "results");
+    let files: Vec<String> = if args.positional.is_empty() {
+        let mut v: Vec<String> = std::fs::read_dir(&dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path().display().to_string())
+            .filter(|p| p.ends_with(".csv") && !p.contains("bench_") && !p.contains("table"))
+            .collect();
+        v.sort();
+        v
+    } else {
+        args.positional.clone()
+    };
+    for f in files {
+        let text = std::fs::read_to_string(&f)?;
+        let stem = f.trim_end_matches(".csv");
+        let name = std::path::Path::new(stem)
+            .file_name()
+            .unwrap()
+            .to_string_lossy()
+            .to_string();
+        let mut cfg = PlotConfig { title: name.clone(), ..Default::default() };
+        // Figure-appropriate axes.
+        if name.starts_with("fig2_grar") || name.starts_with("fig7") || name.starts_with("fig8")
+            || name.starts_with("fig9") || name.starts_with("fig10")
+        {
+            cfg.y_label = "GRAR".into();
+            cfg.y_range = Some((0.82, 1.005));
+            cfg.x_range = Some((0.7, 1.02));
+        } else if name.starts_with("fig1") {
+            cfg.y_label = "EOPC (MW) / GPU share".into();
+        } else if name.contains("savings") || name.starts_with("fig3") || name.starts_with("fig4")
+            || name.starts_with("fig5") || name.starts_with("fig6")
+        {
+            cfg.y_label = "power savings vs FGD (%)".into();
+        }
+        let svg = plot_csv(&text, &cfg);
+        let out = format!("{stem}.svg");
+        std::fs::write(&out, svg)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cluster_for(scale: f64) -> ClusterSpec {
+    if scale >= 1.0 {
+        ClusterSpec::paper_default()
+    } else {
+        ClusterSpec::paper_scaled(scale)
+    }
+}
+
+fn policy_from(args: &repro::util::cli::Args) -> Result<PolicyKind> {
+    let name = args.get("policy", "pwrfgd:0.1");
+    PolicyKind::parse(&name).with_context(|| format!("unknown policy '{name}'"))
+}
+
+fn cmd_simulate(args: &repro::util::cli::Args) -> Result<()> {
+    let policy = policy_from(args)?;
+    let trace_name = args.get("trace", "default");
+    let spec = TraceSpec::by_name(&trace_name)
+        .with_context(|| format!("unknown trace '{trace_name}'"))?;
+    let seed = args.get_u64("seed", 42);
+    let scale = args.get_f64("scale", 1.0);
+    let target = args.get_f64("target", 1.02);
+
+    let dc = cluster_for(scale).build();
+    eprintln!(
+        "cluster: {} nodes / {} GPUs / {} vCPUs; policy {}; trace {}",
+        dc.nodes.len(),
+        dc.total_gpus(),
+        dc.total_vcpus(),
+        policy.label(),
+        spec.name
+    );
+    let workload = spec.synthesize(seed ^ 0x57AB1E).workload();
+    let sched = Scheduler::from_policy(policy);
+    let mut sim = Simulation::with_spec(dc, sched, &spec, workload, seed);
+    sim.record_frag = false;
+    let t0 = std::time::Instant::now();
+    let out = sim.run_inflation(target);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "submitted {} scheduled {} failed {} in {:.1}s ({:.0} decisions/s)",
+        out.submitted,
+        out.scheduled,
+        out.failed,
+        dt,
+        out.submitted as f64 / dt
+    );
+    println!(
+        "final EOPC {:.1} kW | GRAR {:.4} | arrived {:.0} GPU units",
+        out.final_eopc() / 1e3,
+        out.final_grar(),
+        out.arrived_gpu_units
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &repro::util::cli::Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let cfg = ExpConfig {
+        reps: args.get_usize("reps", 10),
+        seed: args.get_u64("seed", 42),
+        scale: args.get_f64("scale", 1.0),
+        target: args.get_f64("target", 1.02),
+        out_dir: args.get("out", "results"),
+    };
+    let mut harness = Harness::new(cfg);
+    let files = harness.run(&id)?;
+    for f in files {
+        println!("wrote {f}");
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &repro::util::cli::Args) -> Result<()> {
+    let name = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "default".to_string());
+    let spec = TraceSpec::by_name(&name).with_context(|| format!("unknown trace '{name}'"))?;
+    let trace = spec.synthesize(args.get_u64("seed", 42));
+    println!("trace {} ({} tasks)", trace.name, trace.tasks.len());
+    println!("bucket       population%   gpu-share%");
+    let pop = trace.population_pct();
+    let share = trace.gpu_share_pct();
+    for (i, b) in ["0", "(0,1)", "1", "2", "4", "8"].iter().enumerate() {
+        println!("{b:<12} {:>10.2} {:>12.2}", pop[i], share[i]);
+    }
+    let w = trace.workload();
+    println!("workload classes: {}", w.classes.len());
+    Ok(())
+}
+
+fn cmd_inventory() -> Result<()> {
+    let spec = ClusterSpec::paper_default();
+    println!(
+        "nodes {} | GPUs {} | vCPUs {}",
+        spec.total_nodes(),
+        spec.total_gpus(),
+        spec.total_vcpus()
+    );
+    println!("model     amount  idle W  TDP W");
+    for (m, count) in spec.gpus_by_model() {
+        println!("{:<9} {:>6} {:>7} {:>6}", m.to_string(), count, m.p_idle(), m.p_max());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &repro::util::cli::Args) -> Result<()> {
+    let policy = policy_from(args)?;
+    let addr = args.get("addr", "127.0.0.1:7077");
+    let scale = args.get_f64("scale", 1.0);
+    let spec = TraceSpec::default_trace();
+    let workload = spec.synthesize(7).workload();
+    let state = CoordinatorState::new(cluster_for(scale).build(), policy, workload);
+    let server = Server::bind(&addr, state)?;
+    eprintln!("coordinator listening on {addr} (policy {})", policy.label());
+    server.run()?;
+    Ok(())
+}
+
+fn cmd_scorer_check(args: &repro::util::cli::Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get("artifacts", "artifacts"));
+    let n_tasks = args.get_usize("tasks", 200);
+    let alpha = args.get_f64("alpha", 0.1);
+    let report = repro::runtime::scorer::parity_check(&dir, n_tasks, alpha, 42)?;
+    println!("{report}");
+    if !report.passed() {
+        bail!("parity check failed");
+    }
+    Ok(())
+}

@@ -1,0 +1,160 @@
+//! Evaluation metrics (§V-C) and series aggregation.
+//!
+//! * **EOPC** — Estimated Overall Power Consumption (Eq. 3), in Watt,
+//!   split into CPU and GPU components (Fig. 1).
+//! * **GRAR** — GPU Resource Allocation Ratio: GPU units allocated to
+//!   scheduled tasks ÷ GPU units requested by *arrived* tasks.
+//!
+//! All figures plot metrics against the *requested GPU capacity ratio*
+//! (cumulative arrived GPU requests ÷ cluster GPU capacity). Runs are
+//! recorded as [`SeriesPoint`]s and resampled onto a common grid so the
+//! paper's 10-repetition averages and the savings-vs-FGD curves can be
+//! computed point-wise.
+
+use crate::util::stats;
+
+/// One sample of the simulation state.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SeriesPoint {
+    /// Arrived GPU requests ÷ cluster GPU capacity (the x-axis).
+    pub x: f64,
+    /// EOPC in Watt (Eq. 3).
+    pub eopc: f64,
+    /// CPU component of EOPC (Watt).
+    pub cpu_w: f64,
+    /// GPU component of EOPC (Watt).
+    pub gpu_w: f64,
+    /// GPU Resource Allocation Ratio ∈ [0, 1].
+    pub grar: f64,
+    /// Expected datacenter fragmentation `F_dc(M)` in GPU units (Eq. 4).
+    pub frag: f64,
+    /// Cumulative scheduling failures.
+    pub failures: f64,
+    /// GPUs drawing `p_max` (any allocation).
+    pub active_gpus: f64,
+    /// Nodes with any allocation.
+    pub active_nodes: f64,
+}
+
+/// Column selector for series extraction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Column {
+    Eopc,
+    CpuW,
+    GpuW,
+    Grar,
+    Frag,
+    Failures,
+    ActiveGpus,
+    ActiveNodes,
+}
+
+impl Column {
+    pub fn of(self, p: &SeriesPoint) -> f64 {
+        match self {
+            Column::Eopc => p.eopc,
+            Column::CpuW => p.cpu_w,
+            Column::GpuW => p.gpu_w,
+            Column::Grar => p.grar,
+            Column::Frag => p.frag,
+            Column::Failures => p.failures,
+            Column::ActiveGpus => p.active_gpus,
+            Column::ActiveNodes => p.active_nodes,
+        }
+    }
+}
+
+/// A recorded run: monotone-x sequence of samples.
+#[derive(Clone, Debug, Default)]
+pub struct RunSeries {
+    pub points: Vec<SeriesPoint>,
+}
+
+impl RunSeries {
+    /// Extract one column as (xs, ys).
+    pub fn column(&self, col: Column) -> (Vec<f64>, Vec<f64>) {
+        (
+            self.points.iter().map(|p| p.x).collect(),
+            self.points.iter().map(|p| col.of(p)).collect(),
+        )
+    }
+
+    /// Value of a column at capacity ratio `x` (linear interpolation).
+    pub fn at(&self, col: Column, x: f64) -> f64 {
+        let (xs, ys) = self.column(col);
+        stats::interp(&xs, &ys, x)
+    }
+
+    /// Last sample (end of inflation).
+    pub fn last(&self) -> Option<&SeriesPoint> {
+        self.points.last()
+    }
+}
+
+/// The common x-grid every figure uses.
+pub fn capacity_grid(max_x: f64, step: f64) -> Vec<f64> {
+    let n = (max_x / step).round() as usize;
+    (0..=n).map(|i| i as f64 * step).collect()
+}
+
+/// Average multiple repetitions of a run column onto `grid`.
+pub fn average_on_grid(runs: &[RunSeries], col: Column, grid: &[f64]) -> Vec<f64> {
+    grid.iter()
+        .map(|&x| {
+            let vals: Vec<f64> = runs.iter().map(|r| r.at(col, x)).collect();
+            stats::mean(&vals)
+        })
+        .collect()
+}
+
+/// Power savings (%) of `policy` vs `baseline` on `grid`:
+/// `100·(EOPC_base − EOPC_policy)/EOPC_base` — the y-axis of Figs. 2–6.
+pub fn savings_pct(baseline: &[f64], policy: &[f64]) -> Vec<f64> {
+    baseline
+        .iter()
+        .zip(policy)
+        .map(|(&b, &p)| if b > 0.0 { 100.0 * (b - p) / b } else { 0.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series(points: &[(f64, f64)]) -> RunSeries {
+        RunSeries {
+            points: points
+                .iter()
+                .map(|&(x, eopc)| SeriesPoint { x, eopc, ..Default::default() })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn grid_covers_range() {
+        let g = capacity_grid(1.0, 0.25);
+        assert_eq!(g, vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+    }
+
+    #[test]
+    fn interpolated_lookup() {
+        let r = series(&[(0.0, 100.0), (1.0, 200.0)]);
+        assert_eq!(r.at(Column::Eopc, 0.5), 150.0);
+        assert_eq!(r.at(Column::Eopc, 2.0), 200.0); // clamped
+    }
+
+    #[test]
+    fn averaging_across_reps() {
+        let a = series(&[(0.0, 100.0), (1.0, 200.0)]);
+        let b = series(&[(0.0, 300.0), (1.0, 400.0)]);
+        let grid = vec![0.0, 0.5, 1.0];
+        let avg = average_on_grid(&[a, b], Column::Eopc, &grid);
+        assert_eq!(avg, vec![200.0, 250.0, 300.0]);
+    }
+
+    #[test]
+    fn savings_formula() {
+        let s = savings_pct(&[100.0, 200.0], &[90.0, 220.0]);
+        assert_eq!(s, vec![10.0, -10.0]);
+    }
+}

@@ -1,0 +1,198 @@
+//! The paper's power model (§II, Eq. 1–3).
+//!
+//! * Eq. 1 — CPU power of a node: sockets with *any* allocation draw
+//!   `p_max`, fully idle sockets draw `p_idle`:
+//!   `p_CPU(n) = p_max·⌈Ra/(2·ncores)⌉ + p_idle·⌊R/(2·ncores)⌋`.
+//! * Eq. 2 — GPU power: a GPU with any allocation draws `p_max`
+//!   (GPU-sharing tasks may opportunistically use the whole device),
+//!   otherwise `p_idle`.
+//! * Eq. 3 — datacenter power: `P = Σ_n p(n)` — the EOPC metric.
+
+use crate::cluster::node::ResourceView;
+use crate::cluster::Datacenter;
+
+/// CPU power of a node view (Eq. 1), in Watt.
+pub fn p_cpu<V: ResourceView + ?Sized>(v: &V) -> f64 {
+    let model = v.cpu_model();
+    let per_socket = model.vcpus_per_socket(); // 2 · ncores
+    let used_sockets = (v.cpu_alloc() / per_socket).ceil();
+    let idle_sockets = (v.cpu_free() / per_socket).floor();
+    model.p_max() * used_sockets + model.p_idle() * idle_sockets
+}
+
+/// GPU power of a node view (Eq. 2), in Watt.
+pub fn p_gpu<V: ResourceView + ?Sized>(v: &V) -> f64 {
+    let Some(model) = v.gpu_model() else { return 0.0 };
+    let (p_max, p_idle) = (model.p_max(), model.p_idle());
+    let mut total = 0.0;
+    for g in 0..v.n_gpus() {
+        total += if v.gpu_alloc_of(g) > 0.0 { p_max } else { p_idle };
+    }
+    total
+}
+
+/// Node power `p(n) = p_CPU(n) + p_GPU(n)`.
+pub fn p_node<V: ResourceView + ?Sized>(v: &V) -> f64 {
+    p_cpu(v) + p_gpu(v)
+}
+
+/// Datacenter power split into (CPU watts, GPU watts). Eq. 3 is the sum.
+pub fn p_datacenter_split(dc: &Datacenter) -> (f64, f64) {
+    let mut cpu = 0.0;
+    let mut gpu = 0.0;
+    for n in &dc.nodes {
+        cpu += p_cpu(n);
+        gpu += p_gpu(n);
+    }
+    (cpu, gpu)
+}
+
+/// Datacenter power (Eq. 3) — the EOPC metric, in Watt.
+pub fn p_datacenter(dc: &Datacenter) -> f64 {
+    let (c, g) = p_datacenter_split(dc);
+    c + g
+}
+
+/// EOPC under a DRS (Dynamic Resource Sleep, Hu et al. [7]) overlay:
+/// fully-idle nodes are assumed powered down (0 W) instead of drawing
+/// idle power. The paper argues PWR composes with hardware-level
+/// techniques like DRS — consolidation frees whole nodes, which is
+/// exactly what DRS can then switch off (`ext-steady` experiment).
+pub fn p_datacenter_drs(dc: &Datacenter) -> f64 {
+    dc.nodes.iter().filter(|n| n.is_active()).map(|n| p_node(n)).sum()
+}
+
+/// Lower bound of the cluster's power (everything idle). Useful as the
+/// baseline the Fig. 1 curve starts from.
+pub fn p_datacenter_idle(dc: &Datacenter) -> f64 {
+    dc.nodes
+        .iter()
+        .map(|n| {
+            let cpu = n.cpu_model.p_idle() * (n.vcpus / n.cpu_model.vcpus_per_socket()).floor();
+            let gpu = n
+                .gpu_model
+                .map(|m| m.p_idle() * n.gpu_alloc.len() as f64)
+                .unwrap_or(0.0);
+            cpu + gpu
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::{Node, Placement};
+    use crate::cluster::types::{CpuModel, GpuModel};
+    use crate::cluster::ClusterSpec;
+    use crate::tasks::{GpuDemand, Task};
+
+    fn g2_node() -> Node {
+        Node::new(0, CpuModel::XeonE5_2682V4, Some(GpuModel::G2), 96.0, 393_216.0, 8)
+    }
+
+    #[test]
+    fn idle_node_power() {
+        let n = g2_node();
+        // 96 vCPU = 3 sockets idle -> 3·15 W; 8 idle G2 -> 8·30 W.
+        assert_eq!(p_cpu(&n), 45.0);
+        assert_eq!(p_gpu(&n), 240.0);
+        assert_eq!(p_node(&n), 285.0);
+    }
+
+    #[test]
+    fn eq1_ceil_floor_behaviour() {
+        let mut n = g2_node();
+        // 1 vCPU used: ceil(1/32)=1 socket maxed, floor(95/32)=2 idle.
+        n.allocate(&Task::new(1, 1.0, 0.0, GpuDemand::Zero), &Placement::CpuOnly);
+        assert_eq!(p_cpu(&n), 120.0 + 2.0 * 15.0);
+        // 32 vCPU used: 1 maxed, 2 idle (boundary: exactly one socket).
+        n.allocate(&Task::new(2, 31.0, 0.0, GpuDemand::Zero), &Placement::CpuOnly);
+        assert_eq!(p_cpu(&n), 120.0 + 2.0 * 15.0);
+        // 33 vCPU used: 2 maxed, floor(63/32)=1 idle.
+        n.allocate(&Task::new(3, 1.0, 0.0, GpuDemand::Zero), &Placement::CpuOnly);
+        assert_eq!(p_cpu(&n), 240.0 + 15.0);
+        // Fully allocated: 3 maxed, 0 idle.
+        n.allocate(&Task::new(4, 63.0, 0.0, GpuDemand::Zero), &Placement::CpuOnly);
+        assert_eq!(p_cpu(&n), 360.0);
+    }
+
+    #[test]
+    fn eq2_partial_gpu_draws_max() {
+        let mut n = g2_node();
+        let t = Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.1));
+        n.allocate(&t, &Placement::Shared { gpu: 0 });
+        // One GPU at p_max (opportunistic full use), 7 idle.
+        assert_eq!(p_gpu(&n), 150.0 + 7.0 * 30.0);
+    }
+
+    #[test]
+    fn eq2_whole_gpus() {
+        let mut n = g2_node();
+        let t = Task::new(1, 1.0, 0.0, GpuDemand::Whole(8));
+        let p = n.candidate_placements(&t).pop().unwrap();
+        n.allocate(&t, &p);
+        assert_eq!(p_gpu(&n), 8.0 * 150.0);
+    }
+
+    #[test]
+    fn hypothetical_delta_matches_commit() {
+        let mut n = g2_node();
+        let t = Task::new(1, 8.0, 1024.0, GpuDemand::Frac(0.5));
+        let p = Placement::Shared { gpu: 4 };
+        let before = p_node(&n);
+        let delta = {
+            let h = n.hypothetical(&t, &p);
+            p_node(&h) - before
+        };
+        n.allocate(&t, &p);
+        assert!((p_node(&n) - before - delta).abs() < 1e-9);
+        // Δ = one GPU idle->max (120) + one socket idle->max (105).
+        assert_eq!(delta, 120.0 + 105.0);
+    }
+
+    #[test]
+    fn cpu_only_node_has_no_gpu_power() {
+        let n = Node::new(0, CpuModel::XeonE5_2682V4, None, 94.0, 262_144.0, 0);
+        assert_eq!(p_gpu(&n), 0.0);
+        // 94 vCPU -> floor(94/32)=2 idle sockets... (2.9375 sockets: the
+        // fractional socket is neither ceil'd as used nor floor'd idle).
+        assert_eq!(p_cpu(&n), 30.0);
+    }
+
+    #[test]
+    fn idle_cluster_eopc_magnitude() {
+        // Fig. 1: FGD EOPC starts just above 200 kW on the empty cluster.
+        let dc = ClusterSpec::paper_default().build();
+        let (cpu_w, gpu_w) = p_datacenter_split(&dc);
+        let total = cpu_w + gpu_w;
+        assert!(total > 150_000.0 && total < 260_000.0, "idle EOPC = {total} W");
+        assert_eq!(total, p_datacenter(&dc));
+        assert_eq!(p_datacenter_idle(&dc), total);
+    }
+
+    #[test]
+    fn full_cluster_eopc_magnitude() {
+        // Fig. 1: EOPC peaks around 1.4 MW near saturation. Saturate
+        // every node and check the ballpark.
+        let mut dc = ClusterSpec::paper_default().build();
+        for i in 0..dc.nodes.len() {
+            let n = &dc.nodes[i];
+            let gpus = n.gpu_alloc.len() as u32;
+            let cpu = n.vcpus;
+            let mem = 0.0;
+            let t = if gpus > 0 {
+                Task::new(i as u64, cpu, mem, GpuDemand::Whole(gpus))
+            } else {
+                Task::new(i as u64, cpu, mem, GpuDemand::Zero)
+            };
+            let p = dc.nodes[i].candidate_placements(&t).pop().unwrap();
+            dc.allocate(&t, i, &p);
+        }
+        let total = p_datacenter(&dc);
+        assert!(total > 1_100_000.0 && total < 1_700_000.0, "full EOPC = {total} W");
+        // GPU share of power should sit in the paper's 72–76% band.
+        let (_, gpu_w) = p_datacenter_split(&dc);
+        let share = gpu_w / total;
+        assert!(share > 0.65 && share < 0.85, "gpu share = {share}");
+    }
+}

@@ -1,0 +1,92 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! the Rust hot path (no Python at runtime).
+//!
+//! `python/compile/aot.py` lowers the L2 JAX scoring graph (which calls
+//! the L1 Pallas kernel) to **HLO text** — the interchange format that
+//! survives the jax≥0.5 ↔ xla_extension 0.5.1 proto-id mismatch — and
+//! this module compiles it once with the PJRT CPU client and executes it
+//! per scheduling decision.
+
+pub mod scorer;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Wrapper over the PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled HLO artifact ready for execution.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Create a PJRT CPU client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform name (e.g. `"cpu"`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it (once; execution is then
+    /// Python-free).
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<Artifact> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Artifact { exe })
+    }
+}
+
+impl Artifact {
+    /// Execute with literal inputs; returns the elements of the result
+    /// tuple (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut result = self.exe.execute::<xla::Literal>(inputs)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        match result.decompose_tuple() {
+            Ok(elems) => Ok(elems),
+            Err(_) => Ok(vec![result]),
+        }
+    }
+}
+
+/// Default artifact directory (`artifacts/` at the repo root, or
+/// `$REPRO_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("REPRO_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_starts() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_errors_cleanly() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load_hlo_text("/nonexistent/x.hlo.txt").is_err());
+    }
+}

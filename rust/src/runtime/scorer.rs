@@ -1,0 +1,394 @@
+//! The XLA batch scorer: the PWR⊕FGD node-scoring pass executed as an
+//! AOT-compiled HLO program (L2 JAX graph + L1 Pallas kernel) through
+//! PJRT.
+//!
+//! ## Dense encoding contract (must match `python/compile/model.py`)
+//!
+//! All tensors are `f32`. With `N` node slots, `G` GPU slots per node
+//! and `M` workload-class slots (padded; shapes are baked at AOT time
+//! and published in `artifacts/scorer_meta.json`):
+//!
+//! * `gpu_free   [N, G]` — free fraction per GPU; `-1` marks a padding
+//!   GPU slot (also used for CPU-only nodes).
+//! * `node_aux   [N, 6]` — `[cpu_free, mem_free, cpu_alloc, model_idx,
+//!   gpu_p_idle, gpu_p_max]`; `model_idx = -1` for CPU-only nodes.
+//!   Padding node slots have `cpu_free = -1`.
+//! * `classes    [M, 7]` — `[cpu, mem, gpu_units, is_frac, is_whole,
+//!   pop, constraint_idx]`; padding classes have `pop = 0`.
+//! * `task       [8]` — `[cpu, mem, gpu_units, is_frac, is_whole,
+//!   whole_k, constraint_idx, 0]`.
+//! * `alpha      [1]` — the PWR weight α.
+//!
+//! Outputs: `(score [N], best_gpu [N], feasible [N])` where `score` is
+//! the k8s-normalized weighted combination (`-1e9` for infeasible
+//! slots), `best_gpu` the placement arg-min for fractional tasks (`-1`
+//! otherwise) and `feasible` a 0/1 mask.
+//!
+//! The CPU power model constants (Xeon E5-2682 v4: 32 vCPU/socket,
+//! 15 W idle, 120 W max) are baked into the artifact.
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::node::{Placement, ResourceView, EPS};
+use crate::cluster::types::GpuModel;
+use crate::cluster::Datacenter;
+use crate::runtime::{Artifact, Runtime};
+use crate::sched::framework::Decision;
+use crate::tasks::{GpuDemand, Task, Workload};
+use crate::util::json;
+
+/// Shapes of a compiled scorer artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScorerConfig {
+    /// Node slots.
+    pub n: usize,
+    /// GPU slots per node.
+    pub g: usize,
+    /// Workload-class slots.
+    pub m: usize,
+}
+
+impl ScorerConfig {
+    /// Parse `scorer_meta.json` produced by `aot.py`.
+    pub fn from_meta(text: &str) -> Result<ScorerConfig> {
+        let v = json::parse(text).context("parsing scorer_meta.json")?;
+        let get = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(|x| x.as_u64())
+                .map(|x| x as usize)
+                .with_context(|| format!("meta key {k}"))
+        };
+        Ok(ScorerConfig { n: get("n")?, g: get("g")?, m: get("m")? })
+    }
+}
+
+/// Sentinel score for infeasible nodes (mirrors the Python side).
+pub const NEG_INF_SCORE: f32 = -1.0e9;
+
+/// The XLA-backed scorer with reusable host buffers.
+pub struct XlaScorer {
+    artifact: Artifact,
+    pub config: ScorerConfig,
+    // Reused encode buffers (hot path: no per-decision allocation).
+    gpu_free: Vec<f32>,
+    node_aux: Vec<f32>,
+    classes: Vec<f32>,
+    task_buf: Vec<f32>,
+}
+
+/// Decoded scorer outputs.
+#[derive(Clone, Debug)]
+pub struct ScoreOutput {
+    pub score: Vec<f32>,
+    pub best_gpu: Vec<f32>,
+    pub feasible: Vec<f32>,
+}
+
+impl XlaScorer {
+    /// Load `scorer.hlo.txt` + `scorer_meta.json` from `dir`.
+    pub fn load(rt: &Runtime, dir: &std::path::Path) -> Result<XlaScorer> {
+        let meta_path = dir.join("scorer_meta.json");
+        let meta = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let config = ScorerConfig::from_meta(&meta)?;
+        let artifact = rt.load_hlo_text(dir.join("scorer.hlo.txt"))?;
+        Ok(XlaScorer {
+            artifact,
+            config,
+            gpu_free: vec![0.0; config.n * config.g],
+            node_aux: vec![0.0; config.n * 6],
+            classes: vec![0.0; config.m * 7],
+            task_buf: vec![0.0; 8],
+        })
+    }
+
+    /// Encode the datacenter into the dense node tensors.
+    pub fn encode_cluster(&mut self, dc: &Datacenter) -> Result<()> {
+        let (n, g) = (self.config.n, self.config.g);
+        if dc.nodes.len() > n {
+            bail!("cluster has {} nodes but artifact supports {n}", dc.nodes.len());
+        }
+        self.gpu_free.iter_mut().for_each(|x| *x = -1.0);
+        self.node_aux.iter_mut().for_each(|x| *x = 0.0);
+        for slot in dc.nodes.len()..n {
+            self.node_aux[slot * 6] = -1.0; // padding: cpu_free = -1
+        }
+        for (i, node) in dc.nodes.iter().enumerate() {
+            if node.gpu_alloc.len() > g {
+                bail!("node {} has {} GPUs but artifact supports {g}", i, node.gpu_alloc.len());
+            }
+            for (j, _) in node.gpu_alloc.iter().enumerate() {
+                self.gpu_free[i * g + j] = node.gpu_free_of(j) as f32;
+            }
+            let aux = &mut self.node_aux[i * 6..i * 6 + 6];
+            aux[0] = node.cpu_free() as f32;
+            aux[1] = node.mem_free() as f32;
+            aux[2] = node.cpu_alloc as f32;
+            aux[3] = node.gpu_model.map(|m| m.index() as f32).unwrap_or(-1.0);
+            aux[4] = node.gpu_model.map(|m| m.p_idle() as f32).unwrap_or(0.0);
+            aux[5] = node.gpu_model.map(|m| m.p_max() as f32).unwrap_or(0.0);
+        }
+        Ok(())
+    }
+
+    /// Encode the target workload `M` (truncated to the top `m` classes).
+    pub fn encode_workload(&mut self, workload: &Workload) {
+        let m = self.config.m;
+        let top = workload.top_k(m);
+        self.classes.iter_mut().for_each(|x| *x = 0.0);
+        for (i, c) in top.classes.iter().enumerate() {
+            let row = &mut self.classes[i * 7..i * 7 + 7];
+            row[0] = c.cpu as f32;
+            row[1] = c.mem as f32;
+            row[2] = c.gpu.units() as f32;
+            row[3] = matches!(c.gpu, GpuDemand::Frac(_)) as u8 as f32;
+            row[4] = matches!(c.gpu, GpuDemand::Whole(_)) as u8 as f32;
+            row[5] = c.pop as f32;
+            row[6] = c.gpu_model.map(|mm| mm.index() as f32).unwrap_or(-1.0);
+        }
+    }
+
+    fn encode_task(&mut self, task: &Task) {
+        let t = &mut self.task_buf;
+        t.iter_mut().for_each(|x| *x = 0.0);
+        t[0] = task.cpu as f32;
+        t[1] = task.mem as f32;
+        t[2] = task.gpu.units() as f32;
+        t[3] = matches!(task.gpu, GpuDemand::Frac(_)) as u8 as f32;
+        t[4] = matches!(task.gpu, GpuDemand::Whole(_)) as u8 as f32;
+        t[5] = if let GpuDemand::Whole(k) = task.gpu { k as f32 } else { 0.0 };
+        t[6] = task.gpu_model.map(|m| m.index() as f32).unwrap_or(-1.0);
+    }
+
+    /// Run the compiled scoring pass for one task.
+    pub fn score(&mut self, task: &Task, alpha: f64) -> Result<ScoreOutput> {
+        self.encode_task(task);
+        let (n, g, m) = (self.config.n as i64, self.config.g as i64, self.config.m as i64);
+        let inputs = [
+            xla::Literal::vec1(&self.gpu_free).reshape(&[n, g])?,
+            xla::Literal::vec1(&self.node_aux).reshape(&[n, 6])?,
+            xla::Literal::vec1(&self.classes).reshape(&[m, 7])?,
+            xla::Literal::vec1(&self.task_buf).reshape(&[8])?,
+            xla::Literal::vec1(&[alpha as f32]).reshape(&[1])?,
+        ];
+        let out = self.artifact.execute(&inputs)?;
+        if out.len() != 3 {
+            bail!("scorer returned {} outputs, expected 3", out.len());
+        }
+        Ok(ScoreOutput {
+            score: out[0].to_vec::<f32>()?,
+            best_gpu: out[1].to_vec::<f32>()?,
+            feasible: out[2].to_vec::<f32>()?,
+        })
+    }
+
+    /// Full decision: encode state, execute, arg-max (ties → lowest node
+    /// id) and reconstruct the placement.
+    pub fn schedule(
+        &mut self,
+        dc: &Datacenter,
+        workload: &Workload,
+        task: &Task,
+        alpha: f64,
+    ) -> Result<Option<Decision>> {
+        self.encode_cluster(dc)?;
+        self.encode_workload(workload);
+        let out = self.score(task, alpha)?;
+        Ok(decode_decision(dc, task, &out))
+    }
+}
+
+/// Pick the arg-max feasible node and rebuild the concrete placement.
+pub fn decode_decision(dc: &Datacenter, task: &Task, out: &ScoreOutput) -> Option<Decision> {
+    let mut best: Option<usize> = None;
+    for i in 0..dc.nodes.len() {
+        if out.feasible[i] < 0.5 {
+            continue;
+        }
+        match best {
+            None => best = Some(i),
+            Some(b) if out.score[i] > out.score[b] + 1e-6 => best = Some(i),
+            _ => {}
+        }
+    }
+    let node_id = best?;
+    let node = &dc.nodes[node_id];
+    let placement = match task.gpu {
+        GpuDemand::Zero => Placement::CpuOnly,
+        GpuDemand::Frac(d) => {
+            let g = out.best_gpu[node_id];
+            let g = if g >= 0.0 { g as usize } else { 0 };
+            // Guard against f32 rounding: fall back to first feasible GPU.
+            if node.gpu_free_of(g) >= d - EPS {
+                Placement::Shared { gpu: g }
+            } else {
+                let g = (0..node.gpu_alloc.len())
+                    .find(|&j| node.gpu_free_of(j) >= d - EPS)?;
+                Placement::Shared { gpu: g }
+            }
+        }
+        GpuDemand::Whole(k) => {
+            let gpus: Vec<usize> = (0..node.gpu_alloc.len())
+                .filter(|&j| node.gpu_free_of(j) >= 1.0 - EPS)
+                .take(k as usize)
+                .collect();
+            if gpus.len() != k as usize {
+                return None;
+            }
+            Placement::Whole { gpus }
+        }
+    };
+    Some(Decision { node: node_id, placement })
+}
+
+/// Result of a native-vs-XLA parity run.
+#[derive(Clone, Debug, Default)]
+pub struct ParityReport {
+    pub decisions: usize,
+    /// Same node chosen by both paths.
+    pub exact_matches: usize,
+    /// Different node, but XLA's combined score for the native node is
+    /// within tolerance of its own choice (an f32-rounding near-tie).
+    pub near_ties: usize,
+    /// Genuine disagreements.
+    pub mismatches: usize,
+    /// Both infeasible.
+    pub both_infeasible: usize,
+}
+
+impl ParityReport {
+    /// Pass criterion: zero genuine disagreements.
+    pub fn passed(&self) -> bool {
+        self.mismatches == 0 && self.decisions > 0
+    }
+}
+
+impl std::fmt::Display for ParityReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "parity: {} decisions | {} exact | {} near-ties | {} mismatches | {} infeasible -> {}",
+            self.decisions,
+            self.exact_matches,
+            self.near_ties,
+            self.mismatches,
+            self.both_infeasible,
+            if self.passed() { "PASS" } else { "FAIL" }
+        )
+    }
+}
+
+/// Drive a seeded inflation on a small cluster, scheduling every task
+/// with both the native `PwrFgd(α)` scheduler and the XLA scorer on the
+/// identical state, committing the native decision. Near-ties (k8s
+/// scores within 0.05 of each other, i.e. f32 rounding) are tolerated;
+/// anything else is a mismatch.
+pub fn parity_check(
+    artifacts: &std::path::Path,
+    n_tasks: usize,
+    alpha: f64,
+    seed: u64,
+) -> Result<ParityReport> {
+    use crate::sched::{PolicyKind, Scheduler};
+    use crate::trace::TraceSpec;
+
+    let rt = Runtime::cpu()?;
+    let mut scorer = XlaScorer::load(&rt, artifacts)?;
+    // A cluster that fits the artifact's node capacity (paper_scaled
+    // rounds per pool with a floor of 1 node, so leave ~20% headroom).
+    let spec = crate::cluster::ClusterSpec::paper_scaled(
+        (scorer.config.n as f64 / 1500.0).min(1.0),
+    );
+    let mut dc = spec.build();
+    if dc.nodes.len() > scorer.config.n {
+        anyhow::bail!("scaled cluster still exceeds artifact capacity");
+    }
+    let trace = TraceSpec::default_trace();
+    // Truncate the workload to the artifact's class capacity so both
+    // paths score against the identical target workload M.
+    let workload = trace.synthesize(seed ^ 0x57AB1E).workload().top_k(scorer.config.m);
+    let mut sampler = trace.sampler(seed);
+    let mut native = Scheduler::from_policy(PolicyKind::PwrFgd { alpha });
+
+    let mut report = ParityReport::default();
+    for _ in 0..n_tasks {
+        let task = sampler.next_task();
+        let nd = native.schedule(&dc, &workload, &task);
+        scorer.encode_cluster(&dc)?;
+        scorer.encode_workload(&workload);
+        let out = scorer.score(&task, alpha)?;
+        let xd = decode_decision(&dc, &task, &out);
+        report.decisions += 1;
+        match (&nd, &xd) {
+            (None, None) => report.both_infeasible += 1,
+            (Some(n), Some(x)) if n.node == x.node => report.exact_matches += 1,
+            (Some(n), Some(x)) => {
+                // Tolerate f32 near-ties: the XLA score of the native
+                // node must be close to the XLA score of its own pick.
+                let diff = (out.score[x.node] - out.score[n.node]).abs();
+                if diff <= 0.05 {
+                    report.near_ties += 1;
+                } else {
+                    report.mismatches += 1;
+                    eprintln!(
+                        "mismatch task {} ({:?}): native -> node {} (xla score {}), xla -> node {} (score {})",
+                        task.id, task.gpu, n.node, out.score[n.node], x.node, out.score[x.node]
+                    );
+                }
+            }
+            _ => {
+                report.mismatches += 1;
+                eprintln!(
+                    "feasibility mismatch task {} ({:?}): native {:?}, xla {:?}",
+                    task.id,
+                    task.gpu,
+                    nd.as_ref().map(|d| d.node),
+                    xd.as_ref().map(|d| d.node)
+                );
+            }
+        }
+        if let Some(d) = nd {
+            dc.allocate(&task, d.node, &d.placement);
+            native.notify_node_changed(d.node);
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses() {
+        let c = ScorerConfig::from_meta(r#"{"n": 64, "g": 8, "m": 32}"#).unwrap();
+        assert_eq!(c, ScorerConfig { n: 64, g: 8, m: 32 });
+        assert!(ScorerConfig::from_meta("{}").is_err());
+    }
+
+    #[test]
+    fn decode_prefers_highest_score_lowest_id() {
+        let dc = crate::cluster::ClusterSpec::tiny(3, 2, 0).build();
+        let t = Task::new(0, 1.0, 0.0, GpuDemand::Frac(0.5));
+        let out = ScoreOutput {
+            score: vec![50.0, 90.0, 90.0],
+            best_gpu: vec![0.0, 1.0, 0.0],
+            feasible: vec![1.0, 1.0, 1.0],
+        };
+        let d = decode_decision(&dc, &t, &out).unwrap();
+        assert_eq!(d.node, 1); // ties → lowest id among the 90s
+        assert_eq!(d.placement, Placement::Shared { gpu: 1 });
+    }
+
+    #[test]
+    fn decode_none_when_all_infeasible() {
+        let dc = crate::cluster::ClusterSpec::tiny(2, 2, 0).build();
+        let t = Task::new(0, 1.0, 0.0, GpuDemand::Whole(1));
+        let out = ScoreOutput {
+            score: vec![NEG_INF_SCORE, NEG_INF_SCORE],
+            best_gpu: vec![-1.0, -1.0],
+            feasible: vec![0.0, 0.0],
+        };
+        assert!(decode_decision(&dc, &t, &out).is_none());
+    }
+}

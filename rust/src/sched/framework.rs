@@ -1,0 +1,528 @@
+//! The Kubernetes-scheduling-framework analog (Algorithm 1).
+//!
+//! Pipeline per arriving task:
+//! 1. **Filter** — drop nodes failing Cond. 1–3 or the model constraint
+//!    (the k8s filter plugin of Algorithm 1, line 4).
+//! 2. **Score** — every score plugin rates each feasible node (the
+//!    hypothetical-assignment loop, lines 5–8). Plugins return raw
+//!    "higher is better" scores.
+//! 3. **NormalizeScore** — per-plugin min-max normalization to [0, 100],
+//!    exactly how the k8s scheduling framework makes heterogeneous
+//!    plugin scores combinable (§IV-A).
+//! 4. **Combine** — weighted sum (`α·PWR + (1−α)·FGD` uses weights α and
+//!    1−α).
+//! 5. **Bind** — pick the arg-max node (ties → lowest id, deterministic)
+//!    and choose the concrete GPU placement inside it.
+
+use std::cell::RefCell;
+
+use crate::cluster::node::{Node, Placement, ResourceView, EPS};
+use crate::cluster::Datacenter;
+use crate::frag;
+use crate::power;
+use crate::tasks::{GpuDemand, Task, Workload};
+use crate::util::rng::Rng;
+
+/// Context handed to score plugins.
+pub struct SchedCtx<'a> {
+    pub dc: &'a Datacenter,
+    pub workload: &'a Workload,
+    /// Hot-loop form of the workload (see [`frag::PreparedWorkload`]).
+    pub prepared: &'a frag::PreparedWorkload,
+    /// Monotonic per-node generation counters; bumped whenever a node's
+    /// allocation changes. Plugins key internal caches on these.
+    pub generations: &'a [u64],
+    /// Cluster-wide normalization constants (largest node shapes).
+    pub caps: ClusterCaps,
+}
+
+/// Largest node shapes in the cluster, for dimension normalization.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClusterCaps {
+    pub max_vcpus: f64,
+    pub max_mem: f64,
+    pub max_gpus: f64,
+}
+
+impl ClusterCaps {
+    pub fn of(dc: &Datacenter) -> ClusterCaps {
+        ClusterCaps {
+            max_vcpus: dc.nodes.iter().map(|n| n.vcpus).fold(1.0, f64::max),
+            max_mem: dc.nodes.iter().map(|n| n.mem).fold(1.0, f64::max),
+            max_gpus: dc.nodes.iter().map(|n| n.gpu_alloc.len() as f64).fold(1.0, f64::max),
+        }
+    }
+}
+
+/// A score plugin: rates how desirable `node` is for `task`, given the
+/// deduplicated candidate `placements` (non-empty, all legal). Raw
+/// scores are plugin-local scale, **higher is better**; the framework
+/// normalizes before combining.
+pub trait ScorePlugin: Send {
+    fn name(&self) -> &'static str;
+    fn score(&self, ctx: &SchedCtx, node: &Node, task: &Task, placements: &[Placement]) -> f64;
+}
+
+/// How the chosen node's concrete GPU placement is selected at bind
+/// time.
+pub enum Binder {
+    /// Minimize `alpha·Δpower + (1−alpha)·Δfrag` over candidate
+    /// placements (each term min-max normalized across the candidates).
+    /// `alpha=1` ⇒ pure PWR, `alpha=0` ⇒ pure FGD.
+    WeightedPwrFgd { alpha: f64 },
+    /// Best-fit on the GPU residual: pick the feasible GPU with the
+    /// least leftover fraction (the open-simulator default).
+    GpuBestFit,
+    /// Prefer already-occupied GPUs, then pack best-fit (MLaaS tiers).
+    PackOccupied,
+    /// First candidate (lowest GPU index).
+    First,
+    /// Uniformly random candidate.
+    Random(RefCell<Rng>),
+}
+
+/// A scheduling decision: the node and the concrete placement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Decision {
+    pub node: usize,
+    pub placement: Placement,
+}
+
+/// The scheduler: filter + weighted score plugins + binder.
+pub struct Scheduler {
+    plugins: Vec<(Box<dyn ScorePlugin>, f64)>,
+    binder: Binder,
+    /// Per-node allocation generation (cache invalidation for plugins).
+    generations: Vec<u64>,
+    /// Scratch buffers, reused across decisions (hot path: zero alloc).
+    feasible: Vec<usize>,
+    placements: Vec<Vec<Placement>>,
+    raw: Vec<f64>,
+    combined: Vec<f64>,
+    /// Cached hot-loop workload (rebuilt when the workload changes).
+    prepared_cache: Option<(*const Workload, usize, frag::PreparedWorkload)>,
+    /// Cached cluster caps (node shapes are static).
+    caps_cache: Option<(usize, ClusterCaps)>,
+    /// Seeded RNG for the k8s-style random tie-break (reproducible).
+    tie_rng: Rng,
+    /// Ablation switch: pick the lowest-id node among ties instead of
+    /// k8s's random choice (`repro experiment ablation-tiebreak`).
+    deterministic_ties: bool,
+    /// Extension (paper §VII future work): dynamically adjust α with
+    /// cluster load — `(alpha_empty, alpha_full)`, linearly
+    /// interpolated on GPU utilization. Requires the plugin layout
+    /// `[(PWR, ·), (FGD, ·)]`.
+    dynamic_alpha: Option<(f64, f64)>,
+    label: String,
+}
+
+// SAFETY: the cached raw pointer is only ever *compared*, never
+// dereferenced; all other fields are Send.
+unsafe impl Send for Scheduler {}
+
+impl Scheduler {
+    /// Build from explicit plugins (weight per plugin) and a binder.
+    pub fn new(plugins: Vec<(Box<dyn ScorePlugin>, f64)>, binder: Binder, label: &str) -> Scheduler {
+        Scheduler {
+            plugins,
+            binder,
+            generations: Vec::new(),
+            feasible: Vec::new(),
+            placements: Vec::new(),
+            raw: Vec::new(),
+            combined: Vec::new(),
+            prepared_cache: None,
+            caps_cache: None,
+            tie_rng: Rng::new(0xC0FFEE),
+            deterministic_ties: false,
+            dynamic_alpha: None,
+            label: label.to_string(),
+        }
+    }
+
+    /// Reseed the tie-break RNG (each simulation repetition uses its own
+    /// stream so repetitions are independent).
+    pub fn reseed_ties(&mut self, seed: u64) {
+        self.tie_rng = Rng::new(seed ^ 0xC0FFEE);
+    }
+
+    /// Ablation: lowest-id instead of random tie-break.
+    pub fn set_deterministic_ties(&mut self, on: bool) {
+        self.deterministic_ties = on;
+    }
+
+    /// Enable load-adaptive α (see [`crate::sched::PolicyKind::PwrFgdDynamic`]).
+    pub fn set_dynamic_alpha(&mut self, alpha_empty: f64, alpha_full: f64) {
+        self.dynamic_alpha = Some((alpha_empty, alpha_full));
+    }
+
+    /// Build the scheduler for a named policy (see [`crate::sched::PolicyKind`]).
+    pub fn from_policy(kind: crate::sched::PolicyKind) -> Scheduler {
+        crate::sched::policies::build(kind)
+    }
+
+    /// Policy label for reports.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Notify the scheduler that `node_id`'s allocation changed (commit
+    /// or departure). Invalidate plugin caches via the generation bump.
+    pub fn notify_node_changed(&mut self, node_id: usize) {
+        if node_id < self.generations.len() {
+            self.generations[node_id] += 1;
+        }
+    }
+
+    /// Schedule one task (Algorithm 1). Returns `None` when no node can
+    /// host it (a scheduling failure — GRAR's denominator still counts
+    /// the arrival). Does **not** mutate the datacenter; the caller
+    /// commits via [`Datacenter::allocate`] and then calls
+    /// [`Self::notify_node_changed`].
+    pub fn schedule(&mut self, dc: &Datacenter, workload: &Workload, task: &Task) -> Option<Decision> {
+        let n = dc.nodes.len();
+        if self.generations.len() != n {
+            self.generations = vec![0; n];
+        }
+        // --- 1. Filter + candidate placements (deduped). ---
+        self.feasible.clear();
+        self.placements.clear();
+        for node in &dc.nodes {
+            if !node.can_fit(task) {
+                continue;
+            }
+            let ps = dedup_placements(node, task);
+            if ps.is_empty() {
+                continue;
+            }
+            self.feasible.push(node.id);
+            self.placements.push(ps);
+        }
+        if self.feasible.is_empty() {
+            return None;
+        }
+        // Refresh the per-workload / per-cluster caches when needed
+        // (identity-keyed; the simulator keeps both alive and stable).
+        let wl_key = (workload as *const Workload, workload.classes.len());
+        if self
+            .prepared_cache
+            .as_ref()
+            .map(|(p, l, _)| (*p, *l) != wl_key)
+            .unwrap_or(true)
+        {
+            self.prepared_cache =
+                Some((wl_key.0, wl_key.1, frag::PreparedWorkload::new(workload)));
+        }
+        if self.caps_cache.map(|(l, _)| l != n).unwrap_or(true) {
+            self.caps_cache = Some((n, ClusterCaps::of(dc)));
+        }
+        let ctx = SchedCtx {
+            dc,
+            workload,
+            prepared: &self.prepared_cache.as_ref().unwrap().2,
+            generations: &self.generations,
+            caps: self.caps_cache.unwrap().1,
+        };
+        // --- 2–4. Score, normalize, combine. ---
+        // Load-adaptive α (extension): interpolate between alpha_empty
+        // and alpha_full on GPU utilization, retargeting the plugin
+        // weights [(PWR, α), (FGD, 1−α)] and the binder.
+        let mut bind_alpha_override = None;
+        if let Some((hi, lo)) = self.dynamic_alpha {
+            let u = dc.gpu_utilization().clamp(0.0, 1.0);
+            let alpha = hi + (lo - hi) * u;
+            debug_assert_eq!(self.plugins.len(), 2, "dynamic α needs [PWR, FGD]");
+            self.plugins[0].1 = alpha;
+            self.plugins[1].1 = 1.0 - alpha;
+            bind_alpha_override = Some(alpha);
+        }
+        let k = self.feasible.len();
+        self.combined.clear();
+        self.combined.resize(k, 0.0);
+        for (plugin, weight) in &self.plugins {
+            self.raw.clear();
+            for (idx, &node_id) in self.feasible.iter().enumerate() {
+                let s = plugin.score(&ctx, &dc.nodes[node_id], task, &self.placements[idx]);
+                debug_assert!(s.is_finite(), "{} returned {s}", plugin.name());
+                self.raw.push(s);
+            }
+            normalize_scores(&mut self.raw);
+            for (c, r) in self.combined.iter_mut().zip(&self.raw) {
+                *c += weight * r;
+            }
+        }
+        // --- 5. Arg-max + bind. Kubernetes semantics: plugin scores are
+        // int64 in [0,100] after NormalizeScore (normalize_scores already
+        // rounds), and `selectHost` picks *uniformly at random* among the
+        // max-scoring nodes. The random tie-break matters: for e.g. a
+        // whole-GPU task on a large pool of identical idle nodes FGD is
+        // indifferent, and k8s spreads the load — which is precisely the
+        // power-wasting behaviour PWR corrects (paper §VI-B).
+        let mut best = 0;
+        let mut n_ties = 1u32;
+        for i in 1..k {
+            if self.combined[i] > self.combined[best] + 1e-9 {
+                best = i;
+                n_ties = 1;
+            } else if !self.deterministic_ties
+                && (self.combined[i] - self.combined[best]).abs() <= 1e-9
+            {
+                // Reservoir-sample uniformly among ties.
+                n_ties += 1;
+                if self.tie_rng.below(n_ties as usize) == 0 {
+                    best = i;
+                }
+            }
+        }
+        let node_id = self.feasible[best];
+        let binder_alpha;
+        let binder = match (&self.binder, bind_alpha_override) {
+            (Binder::WeightedPwrFgd { .. }, Some(alpha)) => {
+                binder_alpha = Binder::WeightedPwrFgd { alpha };
+                &binder_alpha
+            }
+            (b, _) => b,
+        };
+        let placement = bind_placement(
+            binder,
+            &dc.nodes[node_id],
+            task,
+            &self.placements[best],
+            &self.prepared_cache.as_ref().unwrap().2,
+        );
+        Some(Decision { node: node_id, placement })
+    }
+}
+
+/// k8s NormalizeScore: min-max map to [0, 100], **rounded to integers**
+/// (framework scores are int64); all-equal maps to 100.
+pub fn normalize_scores(scores: &mut [f64]) {
+    let lo = scores.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = scores.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    if !(hi - lo).is_finite() || hi - lo < 1e-12 {
+        scores.iter_mut().for_each(|s| *s = 100.0);
+        return;
+    }
+    for s in scores {
+        *s = (100.0 * (*s - lo) / (hi - lo)).round();
+    }
+}
+
+/// Candidate placements with equivalence dedup: for fractional tasks,
+/// GPUs with the same free fraction are interchangeable for every
+/// plugin metric (power, fragmentation, packing) — keep the lowest
+/// index per distinct residual. Whole-GPU placements are already
+/// canonical.
+pub fn dedup_placements(node: &Node, task: &Task) -> Vec<Placement> {
+    match task.gpu {
+        GpuDemand::Frac(d) => {
+            let mut seen: Vec<u64> = Vec::with_capacity(4);
+            let mut out = Vec::with_capacity(4);
+            for g in 0..node.gpu_alloc.len() {
+                let free = node.gpu_free_of(g);
+                if free < d - EPS {
+                    continue;
+                }
+                let key = (free * (1u64 << 32) as f64) as u64;
+                if !seen.contains(&key) {
+                    seen.push(key);
+                    out.push(Placement::Shared { gpu: g });
+                }
+            }
+            out
+        }
+        _ => node.candidate_placements(task),
+    }
+}
+
+/// Δ estimated node power of a hypothetical assignment (PWR's metric).
+pub fn power_delta(node: &Node, task: &Task, placement: &Placement) -> f64 {
+    let before = power::p_node(node);
+    let h = node.hypothetical(task, placement);
+    power::p_node(&h) - before
+}
+
+/// Δ expected node fragmentation of a hypothetical assignment (FGD's
+/// metric).
+pub fn frag_delta(node: &Node, task: &Task, placement: &Placement, workload: &Workload) -> f64 {
+    let before = frag::f_node(node, workload);
+    frag_delta_with_before(node, task, placement, workload, before)
+}
+
+/// Like [`frag_delta`] with `F_n(M)` of the current state precomputed
+/// (plugins cache it per node generation).
+pub fn frag_delta_with_before(
+    node: &Node,
+    task: &Task,
+    placement: &Placement,
+    workload: &Workload,
+    before: f64,
+) -> f64 {
+    let h = node.hypothetical(task, placement);
+    frag::f_node(&h, workload) - before
+}
+
+fn bind_placement(
+    binder: &Binder,
+    node: &Node,
+    task: &Task,
+    placements: &[Placement],
+    prepared: &frag::PreparedWorkload,
+) -> Placement {
+    assert!(!placements.is_empty());
+    if placements.len() == 1 {
+        return placements[0].clone();
+    }
+    match binder {
+        Binder::First => placements[0].clone(),
+        Binder::Random(rng) => {
+            let i = rng.borrow_mut().below(placements.len());
+            placements[i].clone()
+        }
+        Binder::GpuBestFit => best_fit_gpu(node, placements),
+        Binder::PackOccupied => {
+            // Tier 1: occupied GPUs, best-fit among them.
+            let occupied: Vec<Placement> = placements
+                .iter()
+                .filter(|p| matches!(p, Placement::Shared { gpu } if node.gpu_alloc[*gpu] > 0.0))
+                .cloned()
+                .collect();
+            if !occupied.is_empty() {
+                best_fit_gpu(node, &occupied)
+            } else {
+                best_fit_gpu(node, placements)
+            }
+        }
+        Binder::WeightedPwrFgd { alpha } => {
+            let before = frag::f_node_fast(node, prepared);
+            let dp: Vec<f64> =
+                placements.iter().map(|p| power_delta(node, task, p)).collect();
+            let df: Vec<f64> = placements
+                .iter()
+                .map(|p| frag::frag_delta_fast(node, task, p, prepared, before))
+                .collect();
+            // Min-max normalize each criterion across the candidates,
+            // then minimize the weighted blend (mirrors the node-level
+            // k8s combination at placement granularity).
+            let norm = |v: &[f64]| -> Vec<f64> {
+                let lo = v.iter().copied().fold(f64::INFINITY, f64::min);
+                let hi = v.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                if hi - lo < 1e-12 {
+                    vec![0.0; v.len()]
+                } else {
+                    v.iter().map(|x| (x - lo) / (hi - lo)).collect()
+                }
+            };
+            let (dpn, dfn) = (norm(&dp), norm(&df));
+            let mut best = 0;
+            let mut best_cost = f64::INFINITY;
+            for i in 0..placements.len() {
+                let cost = alpha * dpn[i] + (1.0 - alpha) * dfn[i];
+                if cost < best_cost - 1e-12 {
+                    best_cost = cost;
+                    best = i;
+                }
+            }
+            placements[best].clone()
+        }
+    }
+}
+
+/// Best-fit on GPU residual: least leftover after placing.
+fn best_fit_gpu(node: &Node, placements: &[Placement]) -> Placement {
+    let mut best = 0;
+    let mut best_free = f64::INFINITY;
+    for (i, p) in placements.iter().enumerate() {
+        let free = match p {
+            Placement::Shared { gpu } => node.gpu_free_of(*gpu),
+            _ => return p.clone(), // whole/CPU placements are canonical
+        };
+        if free < best_free - EPS {
+            best_free = free;
+            best = i;
+        }
+    }
+    placements[best].clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::types::{CpuModel, GpuModel};
+    use crate::cluster::ClusterSpec;
+
+    fn dc2() -> Datacenter {
+        ClusterSpec::tiny(2, 4, 0).build()
+    }
+
+    #[test]
+    fn normalize_maps_to_0_100() {
+        let mut s = vec![-5.0, 0.0, 5.0];
+        normalize_scores(&mut s);
+        assert_eq!(s, vec![0.0, 50.0, 100.0]);
+        let mut eq = vec![3.0, 3.0];
+        normalize_scores(&mut eq);
+        assert_eq!(eq, vec![100.0, 100.0]);
+    }
+
+    #[test]
+    fn dedup_groups_equal_residuals() {
+        let mut node =
+            Node::new(0, CpuModel::XeonE5_2682V4, Some(GpuModel::G2), 96.0, 393_216.0, 4);
+        // Make GPU1 and GPU2 identical (0.5 free), GPU0 and GPU3 free.
+        node.allocate(&Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.5)), &Placement::Shared { gpu: 1 });
+        node.allocate(&Task::new(2, 1.0, 0.0, GpuDemand::Frac(0.5)), &Placement::Shared { gpu: 2 });
+        let ps = dedup_placements(&node, &Task::new(3, 1.0, 0.0, GpuDemand::Frac(0.25)));
+        // distinct residuals: 1.0 (gpu0) and 0.5 (gpu1) -> 2 candidates
+        assert_eq!(ps.len(), 2);
+    }
+
+    #[test]
+    fn power_delta_fractional_prefers_occupied_gpu() {
+        let mut node =
+            Node::new(0, CpuModel::XeonE5_2682V4, Some(GpuModel::G2), 96.0, 393_216.0, 4);
+        node.allocate(&Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.5)), &Placement::Shared { gpu: 0 });
+        let t = Task::new(2, 1.0, 0.0, GpuDemand::Frac(0.25));
+        let on_occupied = power_delta(&node, &t, &Placement::Shared { gpu: 0 });
+        let on_idle = power_delta(&node, &t, &Placement::Shared { gpu: 1 });
+        assert_eq!(on_occupied, 0.0);
+        assert_eq!(on_idle, 120.0); // G2: 150 max − 30 idle
+    }
+
+    #[test]
+    fn scheduler_schedules_on_tiny_cluster() {
+        let dc = dc2();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(crate::sched::PolicyKind::FirstFit);
+        let t = Task::new(0, 4.0, 1024.0, GpuDemand::Whole(1));
+        let d = s.schedule(&dc, &w, &t).unwrap();
+        assert_eq!(d.node, 0);
+        assert_eq!(d.placement, Placement::Whole { gpus: vec![0] });
+    }
+
+    #[test]
+    fn scheduler_returns_none_when_infeasible() {
+        let dc = dc2();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(crate::sched::PolicyKind::FirstFit);
+        let t = Task::new(0, 4.0, 0.0, GpuDemand::Whole(64));
+        assert!(s.schedule(&dc, &w, &t).is_none());
+    }
+
+    #[test]
+    fn commit_then_notify_flow() {
+        let mut dc = dc2();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(crate::sched::PolicyKind::Fgd);
+        for i in 0..8 {
+            let t = Task::new(i, 2.0, 512.0, GpuDemand::Whole(1));
+            let d = s.schedule(&dc, &w, &t).expect("fits");
+            dc.allocate(&t, d.node, &d.placement);
+            s.notify_node_changed(d.node);
+        }
+        assert_eq!(dc.gpu_allocated_units(), 8.0);
+        // Cluster full for whole-GPU tasks now.
+        let t = Task::new(99, 2.0, 512.0, GpuDemand::Whole(1));
+        assert!(s.schedule(&dc, &w, &t).is_none());
+    }
+}

@@ -1,0 +1,140 @@
+//! The scheduling layer: a Kubernetes-scheduling-framework analog
+//! (filter → score → normalize → weighted combine → bind) and the
+//! paper's policy zoo.
+//!
+//! * [`framework`] — the plugin pipeline of Algorithm 1, including the
+//!   k8s score normalization used to combine PWR with FGD (§IV-A).
+//! * [`policies`] — PWR (the contribution), FGD [19], BestFit [6],
+//!   DotProd [4], GpuPacking [18], GpuClustering [21], plus FirstFit and
+//!   Random sanity baselines.
+
+pub mod framework;
+pub mod policies;
+
+pub use framework::{Binder, Decision, SchedCtx, Scheduler, ScorePlugin};
+
+/// Every scheduling policy evaluated in the paper (§V), plus two sanity
+/// baselines. `PwrFgd { alpha }` is the paper's
+/// `α·PWR + (1−α)·FGD` linear combination.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PolicyKind {
+    /// Fragmentation Gradient Descent (Weng et al. [19]).
+    Fgd,
+    /// The paper's power-aware policy (Algorithm 1).
+    Pwr,
+    /// k8s-normalized linear combination of PWR and FGD scores.
+    PwrFgd { alpha: f64 },
+    /// Extension (paper §VII future work): load-adaptive α, linearly
+    /// interpolated from `alpha_empty` (idle cluster — maximize power
+    /// savings) down to `alpha_full` (saturated — protect GRAR).
+    PwrFgdDynamic { alpha_empty: f64, alpha_full: f64 },
+    /// Best-fit bin packing (Protean [6]).
+    BestFit,
+    /// Dot-product alignment (Tetris [4]).
+    DotProd,
+    /// GPU packing tiers (MLaaS [18]).
+    GpuPacking,
+    /// Gandiva-style affinity packing (GPU clustering [21]).
+    GpuClustering,
+    /// Lowest-id feasible node.
+    FirstFit,
+    /// Uniformly random feasible node.
+    Random,
+}
+
+impl PolicyKind {
+    /// Parse a CLI policy name: `fgd`, `pwr`, `pwrfgd:0.1`, `bestfit`,
+    /// `dotprod`, `gpupacking`, `gpuclustering`, `firstfit`, `random`.
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        let lower = s.to_ascii_lowercase();
+        if let Some(rest) = lower.strip_prefix("pwrfgddyn:") {
+            let (hi, lo) = rest.split_once(':')?;
+            return Some(PolicyKind::PwrFgdDynamic {
+                alpha_empty: hi.parse().ok()?,
+                alpha_full: lo.parse().ok()?,
+            });
+        }
+        if let Some(alpha) = lower.strip_prefix("pwrfgd:") {
+            return alpha.parse().ok().map(|alpha| PolicyKind::PwrFgd { alpha });
+        }
+        match lower.as_str() {
+            "fgd" => Some(PolicyKind::Fgd),
+            "pwr" => Some(PolicyKind::Pwr),
+            "bestfit" => Some(PolicyKind::BestFit),
+            "dotprod" => Some(PolicyKind::DotProd),
+            "gpupacking" => Some(PolicyKind::GpuPacking),
+            "gpuclustering" => Some(PolicyKind::GpuClustering),
+            "firstfit" => Some(PolicyKind::FirstFit),
+            "random" => Some(PolicyKind::Random),
+            _ => None,
+        }
+    }
+
+    /// Human-readable label used in CSV headers and reports.
+    pub fn label(&self) -> String {
+        match self {
+            PolicyKind::Fgd => "FGD".into(),
+            PolicyKind::Pwr => "PWR".into(),
+            PolicyKind::PwrFgd { alpha } => format!("PWR{:.0}+FGD{:.0}", alpha * 1000.0, (1.0 - alpha) * 1000.0),
+            PolicyKind::PwrFgdDynamic { alpha_empty, alpha_full } => {
+                format!("PWRdyn{:.0}-{:.0}", alpha_empty * 1000.0, alpha_full * 1000.0)
+            }
+            PolicyKind::BestFit => "BestFit".into(),
+            PolicyKind::DotProd => "DotProd".into(),
+            PolicyKind::GpuPacking => "GpuPacking".into(),
+            PolicyKind::GpuClustering => "GpuClustering".into(),
+            PolicyKind::FirstFit => "FirstFit".into(),
+            PolicyKind::Random => "Random".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(PolicyKind::parse("fgd"), Some(PolicyKind::Fgd));
+        assert_eq!(PolicyKind::parse("PWR"), Some(PolicyKind::Pwr));
+        assert_eq!(PolicyKind::parse("pwrfgd:0.2"), Some(PolicyKind::PwrFgd { alpha: 0.2 }));
+        assert_eq!(
+            PolicyKind::parse("pwrfgddyn:0.5:0.02"),
+            Some(PolicyKind::PwrFgdDynamic { alpha_empty: 0.5, alpha_full: 0.02 })
+        );
+        assert_eq!(PolicyKind::parse("pwrfgddyn:0.5"), None);
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn dynamic_alpha_schedules_and_adapts() {
+        use crate::cluster::ClusterSpec;
+        use crate::tasks::{GpuDemand, Task, Workload};
+        let mut dc = ClusterSpec::tiny(4, 4, 0).build();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(PolicyKind::PwrFgdDynamic {
+            alpha_empty: 0.9,
+            alpha_full: 0.0,
+        });
+        // Fill the cluster with whole-GPU tasks; dynamic α must keep
+        // producing legal decisions all the way to saturation.
+        let mut placed = 0;
+        for i in 0..16 {
+            let t = Task::new(i, 2.0, 512.0, GpuDemand::Whole(1));
+            if let Some(d) = s.schedule(&dc, &w, &t) {
+                assert!(dc.nodes[d.node].placement_fits(&t, &d.placement));
+                dc.allocate(&t, d.node, &d.placement);
+                s.notify_node_changed(d.node);
+                placed += 1;
+            }
+        }
+        assert_eq!(placed, 16);
+    }
+
+    #[test]
+    fn labels_match_paper_notation() {
+        // The paper shows α·1000 in plot legends.
+        assert_eq!(PolicyKind::PwrFgd { alpha: 0.1 }.label(), "PWR100+FGD900");
+        assert_eq!(PolicyKind::Fgd.label(), "FGD");
+    }
+}

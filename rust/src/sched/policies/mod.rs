@@ -1,0 +1,82 @@
+//! The scheduling policy zoo (§V of the paper).
+
+pub mod baselines;
+pub mod fgd;
+pub mod packing;
+pub mod pwr;
+pub mod trivial;
+
+use std::cell::RefCell;
+
+use crate::sched::framework::{Binder, Scheduler, ScorePlugin};
+use crate::sched::PolicyKind;
+use crate::util::rng::Rng;
+
+pub use baselines::{BestFitPlugin, DotProdPlugin};
+pub use fgd::FgdPlugin;
+pub use packing::{GpuClusteringPlugin, GpuPackingPlugin};
+pub use pwr::PwrPlugin;
+pub use trivial::{FirstFitPlugin, RandomPlugin};
+
+/// Materialize the scheduler for a policy, wiring the plugin weights and
+/// the GPU binder each policy uses:
+/// * FGD / PWR / combinations → the weighted Δpower/Δfrag binder with
+///   the matching α (1.0 for plain PWR, 0.0 for plain FGD);
+/// * GpuPacking → occupied-GPU-first packing;
+/// * everything else → GPU best-fit (the open-simulator default).
+pub fn build(kind: PolicyKind) -> Scheduler {
+    let label = kind.label();
+    let (plugins, binder): (Vec<(Box<dyn ScorePlugin>, f64)>, Binder) = match kind {
+        PolicyKind::Fgd => (
+            vec![(Box::new(FgdPlugin::new()) as Box<dyn ScorePlugin>, 1.0)],
+            Binder::WeightedPwrFgd { alpha: 0.0 },
+        ),
+        PolicyKind::Pwr => (
+            vec![(Box::new(PwrPlugin) as Box<dyn ScorePlugin>, 1.0)],
+            Binder::WeightedPwrFgd { alpha: 1.0 },
+        ),
+        PolicyKind::PwrFgd { alpha } => (
+            vec![
+                (Box::new(PwrPlugin) as Box<dyn ScorePlugin>, alpha),
+                (Box::new(FgdPlugin::new()) as Box<dyn ScorePlugin>, 1.0 - alpha),
+            ],
+            Binder::WeightedPwrFgd { alpha },
+        ),
+        PolicyKind::PwrFgdDynamic { alpha_empty, .. } => (
+            vec![
+                (Box::new(PwrPlugin) as Box<dyn ScorePlugin>, alpha_empty),
+                (Box::new(FgdPlugin::new()) as Box<dyn ScorePlugin>, 1.0 - alpha_empty),
+            ],
+            Binder::WeightedPwrFgd { alpha: alpha_empty },
+        ),
+        PolicyKind::BestFit => (
+            vec![(Box::new(BestFitPlugin) as Box<dyn ScorePlugin>, 1.0)],
+            Binder::GpuBestFit,
+        ),
+        PolicyKind::DotProd => (
+            vec![(Box::new(DotProdPlugin) as Box<dyn ScorePlugin>, 1.0)],
+            Binder::GpuBestFit,
+        ),
+        PolicyKind::GpuPacking => (
+            vec![(Box::new(GpuPackingPlugin) as Box<dyn ScorePlugin>, 1.0)],
+            Binder::PackOccupied,
+        ),
+        PolicyKind::GpuClustering => (
+            vec![(Box::new(GpuClusteringPlugin) as Box<dyn ScorePlugin>, 1.0)],
+            Binder::GpuBestFit,
+        ),
+        PolicyKind::FirstFit => (
+            vec![(Box::new(FirstFitPlugin) as Box<dyn ScorePlugin>, 1.0)],
+            Binder::First,
+        ),
+        PolicyKind::Random => (
+            vec![(Box::new(RandomPlugin::new(0x5EED)) as Box<dyn ScorePlugin>, 1.0)],
+            Binder::Random(RefCell::new(Rng::new(0xB14D))),
+        ),
+    };
+    let mut sched = Scheduler::new(plugins, binder, &label);
+    if let PolicyKind::PwrFgdDynamic { alpha_empty, alpha_full } = kind {
+        sched.set_dynamic_alpha(alpha_empty, alpha_full);
+    }
+    sched
+}

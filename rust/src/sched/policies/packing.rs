@@ -1,0 +1,131 @@
+//! GPU-centric baselines: GpuPacking (MLaaS-in-the-wild [18]) and
+//! GpuClustering (Gandiva [21]).
+
+use crate::cluster::node::{Node, Placement, ResourceView};
+use crate::sched::framework::{SchedCtx, ScorePlugin};
+use crate::tasks::{GpuDemand, Task};
+
+/// GpuPacking: prioritize (1) occupied GPUs, then (2) idle GPUs on
+/// active nodes, then (3) idle nodes — preserving fully-free nodes and
+/// GPUs for multi-GPU tasks. Within a tier, fuller GPUs/nodes win.
+pub struct GpuPackingPlugin;
+
+impl ScorePlugin for GpuPackingPlugin {
+    fn name(&self) -> &'static str {
+        "GpuPacking"
+    }
+
+    fn score(&self, _ctx: &SchedCtx, node: &Node, task: &Task, placements: &[Placement]) -> f64 {
+        let tier = match task.gpu {
+            GpuDemand::Frac(_) => {
+                let has_occupied_candidate = placements.iter().any(
+                    |p| matches!(p, Placement::Shared { gpu } if node.gpu_alloc[*gpu] > 0.0),
+                );
+                if has_occupied_candidate {
+                    2.0
+                } else if node.is_active() {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            // Whole-GPU and CPU-only tasks can't share a GPU; prefer
+            // active nodes over waking idle ones.
+            _ => {
+                if node.is_active() {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        };
+        // Tie-break inside a tier: fuller node (less free GPU) first.
+        let fullness = if node.n_gpus() > 0 {
+            1.0 - node.gpu_free_total() / node.n_gpus() as f64
+        } else {
+            1.0 - node.cpu_free() / node.cpu_capacity()
+        };
+        tier * 10.0 + fullness
+    }
+}
+
+/// GpuClustering: pack tasks with *similar GPU requirements* together,
+/// avoiding heterogeneous demand mixes on a node (Gandiva's affinity
+/// rule). Nodes hosting same-bucket tasks score high; nodes hosting
+/// other buckets score low; empty nodes are neutral.
+pub struct GpuClusteringPlugin;
+
+impl ScorePlugin for GpuClusteringPlugin {
+    fn name(&self) -> &'static str {
+        "GpuClustering"
+    }
+
+    fn score(&self, _ctx: &SchedCtx, node: &Node, task: &Task, _placements: &[Placement]) -> f64 {
+        let bucket = task.gpu.bucket();
+        let same = node.bucket_mix[bucket] as f64;
+        let other: f64 =
+            node.bucket_mix.iter().enumerate().filter(|&(b, _)| b != bucket).map(|(_, &c)| c as f64).sum();
+        same - other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::sched::{PolicyKind, Scheduler};
+    use crate::tasks::Workload;
+
+    #[test]
+    fn gpupacking_reuses_occupied_gpu() {
+        let mut dc = ClusterSpec::tiny(3, 4, 0).build();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(PolicyKind::GpuPacking);
+        let t0 = Task::new(0, 2.0, 512.0, GpuDemand::Frac(0.3));
+        let d0 = s.schedule(&dc, &w, &t0).unwrap();
+        dc.allocate(&t0, d0.node, &d0.placement);
+        s.notify_node_changed(d0.node);
+        // Tier 1: the next sharing task must land on the same GPU.
+        let t1 = Task::new(1, 2.0, 512.0, GpuDemand::Frac(0.3));
+        let d1 = s.schedule(&dc, &w, &t1).unwrap();
+        assert_eq!(d1.node, d0.node);
+        assert_eq!(d1.placement, d0.placement);
+    }
+
+    #[test]
+    fn gpupacking_preserves_idle_nodes_for_multigpu() {
+        let mut dc = ClusterSpec::tiny(2, 4, 0).build();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(PolicyKind::GpuPacking);
+        let t0 = Task::new(0, 2.0, 512.0, GpuDemand::Whole(1));
+        let d0 = s.schedule(&dc, &w, &t0).unwrap();
+        dc.allocate(&t0, d0.node, &d0.placement);
+        s.notify_node_changed(d0.node);
+        // A whole-GPU task prefers the already-active node (tier 1 vs 0).
+        let t1 = Task::new(1, 2.0, 512.0, GpuDemand::Whole(2));
+        let d1 = s.schedule(&dc, &w, &t1).unwrap();
+        assert_eq!(d1.node, d0.node);
+    }
+
+    #[test]
+    fn clustering_groups_same_bucket() {
+        let mut dc = ClusterSpec::tiny(2, 4, 0).build();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(PolicyKind::GpuClustering);
+        // Seed node 0 with a sharing task, node 1 with a whole-GPU task.
+        let frac = Task::new(0, 2.0, 512.0, GpuDemand::Frac(0.4));
+        let p = dc.nodes[0].candidate_placements(&frac)[0].clone();
+        dc.allocate(&frac, 0, &p);
+        s.notify_node_changed(0);
+        let whole = Task::new(1, 2.0, 512.0, GpuDemand::Whole(1));
+        let pw = dc.nodes[1].candidate_placements(&whole).pop().unwrap();
+        dc.allocate(&whole, 1, &pw);
+        s.notify_node_changed(1);
+        // A new sharing task clusters with the sharing node...
+        let t = Task::new(2, 2.0, 512.0, GpuDemand::Frac(0.4));
+        assert_eq!(s.schedule(&dc, &w, &t).unwrap().node, 0);
+        // ...and a new whole-GPU task with the whole-GPU node.
+        let t = Task::new(3, 2.0, 512.0, GpuDemand::Whole(1));
+        assert_eq!(s.schedule(&dc, &w, &t).unwrap().node, 1);
+    }
+}

@@ -1,0 +1,109 @@
+//! PWR — the paper's power-aware score plugin (§IV, Algorithm 1).
+//!
+//! For each feasible node the plugin hypothetically assigns the task
+//! (`HYPASSIGNTONODE`), computes the increase Δ in the node's estimated
+//! power `p(n) = p_CPU(n) + p_GPU(n)` (Eq. 1–2), and scores the node
+//! `−Δ` so that the k8s framework's arg-max picks the node with the
+//! smallest power increase (Algorithm 1, lines 9–10).
+
+use crate::cluster::node::{Node, Placement};
+use crate::sched::framework::{power_delta, SchedCtx, ScorePlugin};
+use crate::tasks::Task;
+
+/// The PWR score plugin.
+pub struct PwrPlugin;
+
+impl ScorePlugin for PwrPlugin {
+    fn name(&self) -> &'static str {
+        "PWR"
+    }
+
+    fn score(&self, _ctx: &SchedCtx, node: &Node, task: &Task, placements: &[Placement]) -> f64 {
+        // Best (smallest) power increase over the candidate placements.
+        let delta = placements
+            .iter()
+            .map(|p| power_delta(node, task, p))
+            .fold(f64::INFINITY, f64::min);
+        -delta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::sched::{PolicyKind, Scheduler};
+    use crate::tasks::{GpuDemand, Task, Workload};
+
+    /// PWR consolidates: with one node already active, the next task
+    /// goes to the same node (zero idle→max promotions elsewhere).
+    #[test]
+    fn pwr_consolidates_onto_active_node() {
+        let mut dc = ClusterSpec::tiny(4, 4, 0).build();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(PolicyKind::Pwr);
+        let t0 = Task::new(0, 4.0, 1024.0, GpuDemand::Frac(0.5));
+        let d0 = s.schedule(&dc, &w, &t0).unwrap();
+        dc.allocate(&t0, d0.node, &d0.placement);
+        s.notify_node_changed(d0.node);
+        // Next fractional task: sharing the already-powered GPU costs 0 W.
+        let t1 = Task::new(1, 4.0, 1024.0, GpuDemand::Frac(0.5));
+        let d1 = s.schedule(&dc, &w, &t1).unwrap();
+        assert_eq!(d1.node, d0.node, "PWR must reuse the active node");
+        assert_eq!(d1.placement, d0.placement, "and the active GPU");
+    }
+
+    /// PWR picks the power-efficient GPU model when both fit: a 1-GPU
+    /// task should go to a T4 node (Δ 70−10 = 60 W) over a G3/A100 node
+    /// (Δ 400−50 = 350 W).
+    #[test]
+    fn pwr_prefers_efficient_gpu_model() {
+        use crate::cluster::inventory::{ClusterSpec, NodePool};
+        use crate::cluster::types::GpuModel;
+        let spec = ClusterSpec {
+            pools: vec![
+                NodePool {
+                    count: 1,
+                    vcpus: 128.0,
+                    mem: 786_432.0,
+                    gpu_model: Some(GpuModel::G3),
+                    gpus_per_node: 8,
+                },
+                NodePool {
+                    count: 1,
+                    vcpus: 64.0,
+                    mem: 131_072.0,
+                    gpu_model: Some(GpuModel::T4),
+                    gpus_per_node: 4,
+                },
+            ],
+        };
+        let dc = spec.build();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(PolicyKind::Pwr);
+        let t = Task::new(0, 2.0, 1024.0, GpuDemand::Whole(1));
+        let d = s.schedule(&dc, &w, &t).unwrap();
+        assert_eq!(dc.nodes[d.node].gpu_model, Some(GpuModel::T4));
+    }
+
+    /// The plugin's raw score is exactly −Δp for the best placement.
+    #[test]
+    fn raw_score_is_negative_power_delta() {
+        let dc = ClusterSpec::tiny(1, 4, 0).build();
+        let node = &dc.nodes[0];
+        let w = Workload::default();
+        let pw = crate::frag::PreparedWorkload::new(&w);
+        let ctx = SchedCtx {
+            dc: &dc,
+            workload: &w,
+            prepared: &pw,
+            generations: &[0],
+            caps: crate::sched::framework::ClusterCaps::of(&dc),
+        };
+        let t = Task::new(0, 2.0, 512.0, GpuDemand::Whole(2));
+        let ps = node.candidate_placements(&t);
+        let s = PwrPlugin.score(&ctx, node, &t, &ps);
+        // 2 G2 GPUs idle→max: 2·(150−30); plus 1 socket idle→max: 105.
+        assert_eq!(s, -(2.0 * 120.0 + 105.0));
+    }
+}

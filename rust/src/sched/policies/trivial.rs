@@ -1,0 +1,77 @@
+//! Sanity baselines: FirstFit (lowest-id feasible node) and Random
+//! (uniform over feasible nodes). Not in the paper's comparison set;
+//! used to sanity-check the harness (any reasonable policy must beat
+//! Random on both EOPC and GRAR).
+
+use std::cell::RefCell;
+
+use crate::cluster::node::{Node, Placement};
+use crate::sched::framework::{SchedCtx, ScorePlugin};
+use crate::tasks::Task;
+use crate::util::rng::Rng;
+
+/// Picks the feasible node with the lowest id.
+pub struct FirstFitPlugin;
+
+impl ScorePlugin for FirstFitPlugin {
+    fn name(&self) -> &'static str {
+        "FirstFit"
+    }
+
+    fn score(&self, _ctx: &SchedCtx, node: &Node, _task: &Task, _ps: &[Placement]) -> f64 {
+        -(node.id as f64)
+    }
+}
+
+/// Picks a uniformly random feasible node (seeded, reproducible).
+pub struct RandomPlugin {
+    rng: RefCell<Rng>,
+}
+
+impl RandomPlugin {
+    pub fn new(seed: u64) -> RandomPlugin {
+        RandomPlugin { rng: RefCell::new(Rng::new(seed)) }
+    }
+}
+
+impl ScorePlugin for RandomPlugin {
+    fn name(&self) -> &'static str {
+        "Random"
+    }
+
+    fn score(&self, _ctx: &SchedCtx, _node: &Node, _task: &Task, _ps: &[Placement]) -> f64 {
+        self.rng.borrow_mut().f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::sched::{PolicyKind, Scheduler};
+    use crate::tasks::{GpuDemand, Workload};
+
+    #[test]
+    fn firstfit_is_deterministic_lowest_id() {
+        let dc = ClusterSpec::tiny(3, 2, 0).build();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(PolicyKind::FirstFit);
+        for i in 0..3 {
+            let t = Task::new(i, 1.0, 0.0, GpuDemand::Frac(0.2));
+            assert_eq!(s.schedule(&dc, &w, &t).unwrap().node, 0);
+        }
+    }
+
+    #[test]
+    fn random_spreads_over_nodes() {
+        let dc = ClusterSpec::tiny(8, 2, 0).build();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(PolicyKind::Random);
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..64 {
+            let t = Task::new(i, 1.0, 0.0, GpuDemand::Frac(0.2));
+            seen.insert(s.schedule(&dc, &w, &t).unwrap().node);
+        }
+        assert!(seen.len() >= 4, "random policy stuck on {seen:?}");
+    }
+}

@@ -1,0 +1,310 @@
+//! The event-driven cluster simulator (the open-simulator analog).
+//!
+//! [`Simulation`] drives the paper's Monte-Carlo workload inflation
+//! (§V-A): tasks are sampled from a trace with replacement and submitted
+//! one at a time — each scheduling decision is atomic (§II) — until the
+//! cumulative arrived GPU requests reach a target multiple of the
+//! cluster's GPU capacity. Metrics are sampled on a fixed capacity grid.
+//!
+//! [`run_repetitions`] runs the paper's 10 seeded repetitions (in
+//! parallel threads — each repetition owns its own datacenter, scheduler
+//! and sampler) and returns the per-run series for grid averaging.
+
+pub mod events;
+
+use crate::cluster::Datacenter;
+use crate::frag;
+use crate::metrics::{RunSeries, SeriesPoint};
+use crate::power;
+use crate::sched::{PolicyKind, Scheduler};
+use crate::tasks::Workload;
+use crate::trace::{Trace, TraceSpec};
+
+/// Safety cap on submitted tasks per run (the Default trace saturates
+/// the paper cluster after ~8.5k GPU tasks; CPU-heavy traces could
+/// otherwise inflate forever).
+pub const MAX_TASKS: usize = 400_000;
+
+/// Default metric-sampling resolution on the capacity axis.
+pub const SAMPLE_STEP: f64 = 0.005;
+
+/// Outcome of one inflation run.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub series: RunSeries,
+    /// Tasks submitted / scheduled / failed.
+    pub submitted: u64,
+    pub scheduled: u64,
+    pub failed: u64,
+    /// Final GPU units arrived and allocated.
+    pub arrived_gpu_units: f64,
+    pub allocated_gpu_units: f64,
+}
+
+impl RunResult {
+    /// EOPC at the end of inflation (W).
+    pub fn final_eopc(&self) -> f64 {
+        self.series.last().map(|p| p.eopc).unwrap_or(0.0)
+    }
+
+    /// GRAR at the end of inflation.
+    pub fn final_grar(&self) -> f64 {
+        if self.arrived_gpu_units > 0.0 {
+            self.allocated_gpu_units / self.arrived_gpu_units
+        } else {
+            1.0
+        }
+    }
+}
+
+/// One online-scheduling simulation.
+pub struct Simulation {
+    pub dc: Datacenter,
+    pub sched: Scheduler,
+    pub workload: Workload,
+    sampler: crate::trace::InflationSampler,
+    arrived_gpu_units: f64,
+    failed: u64,
+    scheduled: u64,
+    submitted: u64,
+    /// Record full `F_dc` series (O(N·M) per sample; off for benches).
+    pub record_frag: bool,
+}
+
+impl Simulation {
+    /// Build a simulation: the workload `M` is extracted from a
+    /// materialization of the trace (as FGD derives `M` from historical
+    /// data), and arrivals are sampled with replacement from the spec.
+    pub fn new(dc: Datacenter, sched: Scheduler, trace: &Trace, seed: u64) -> Simulation {
+        let workload = trace.workload();
+        // Re-derive the generating spec from the trace name; arrivals
+        // stream from the spec's catalog (statistically identical to
+        // resampling the materialized trace with replacement).
+        let spec = TraceSpec::by_name(&trace.name).unwrap_or_else(TraceSpec::default_trace);
+        Simulation::with_spec(dc, sched, &spec, workload, seed)
+    }
+
+    /// Build directly from a [`TraceSpec`] and a prepared workload.
+    pub fn with_spec(
+        dc: Datacenter,
+        mut sched: Scheduler,
+        spec: &TraceSpec,
+        workload: Workload,
+        seed: u64,
+    ) -> Simulation {
+        sched.reseed_ties(seed); // independent tie-break stream per rep
+        Simulation {
+            dc,
+            sched,
+            workload,
+            sampler: spec.sampler(seed),
+            arrived_gpu_units: 0.0,
+            failed: 0,
+            scheduled: 0,
+            submitted: 0,
+            record_frag: true,
+        }
+    }
+
+    /// Submit one sampled task; returns whether it was scheduled.
+    pub fn step(&mut self) -> bool {
+        let task = self.sampler.next_task();
+        self.submitted += 1;
+        self.arrived_gpu_units += task.gpu.units();
+        match self.sched.schedule(&self.dc, &self.workload, &task) {
+            Some(d) => {
+                self.dc.allocate(&task, d.node, &d.placement);
+                self.sched.notify_node_changed(d.node);
+                self.scheduled += 1;
+                true
+            }
+            None => {
+                self.failed += 1;
+                false
+            }
+        }
+    }
+
+    /// Current capacity ratio (arrived GPU units ÷ installed GPUs).
+    pub fn capacity_ratio(&self) -> f64 {
+        self.arrived_gpu_units / self.dc.gpu_capacity()
+    }
+
+    /// Snapshot the metrics into a [`SeriesPoint`].
+    pub fn sample(&self) -> SeriesPoint {
+        let (cpu_w, gpu_w) = power::p_datacenter_split(&self.dc);
+        let grar = if self.arrived_gpu_units > 0.0 {
+            self.dc.gpu_allocated_units() / self.arrived_gpu_units
+        } else {
+            1.0
+        };
+        SeriesPoint {
+            x: self.capacity_ratio(),
+            eopc: cpu_w + gpu_w,
+            cpu_w,
+            gpu_w,
+            grar,
+            frag: if self.record_frag {
+                frag::f_datacenter(&self.dc, &self.workload)
+            } else {
+                0.0
+            },
+            failures: self.failed as f64,
+            active_gpus: self.dc.active_gpus() as f64,
+            active_nodes: self.dc.active_nodes() as f64,
+        }
+    }
+
+    /// Run inflation until arrived GPU requests reach
+    /// `target_ratio × capacity`, sampling metrics every
+    /// [`SAMPLE_STEP`] of capacity.
+    pub fn run_inflation(&mut self, target_ratio: f64) -> RunResult {
+        let mut series = RunSeries::default();
+        series.points.push(self.sample());
+        let mut next_sample = SAMPLE_STEP;
+        while self.capacity_ratio() < target_ratio && (self.submitted as usize) < MAX_TASKS {
+            self.step();
+            if self.capacity_ratio() >= next_sample {
+                series.points.push(self.sample());
+                next_sample += SAMPLE_STEP;
+            }
+        }
+        series.points.push(self.sample());
+        RunResult {
+            series,
+            submitted: self.submitted,
+            scheduled: self.scheduled,
+            failed: self.failed,
+            arrived_gpu_units: self.arrived_gpu_units,
+            allocated_gpu_units: self.dc.gpu_allocated_units(),
+        }
+    }
+}
+
+/// Configuration for a repeated experiment run.
+#[derive(Clone, Debug)]
+pub struct RepeatConfig {
+    /// Number of seeded repetitions (the paper uses 10).
+    pub reps: usize,
+    /// Base seed; repetition `i` uses `base_seed + i`.
+    pub base_seed: u64,
+    /// Inflation target (× GPU capacity).
+    pub target_ratio: f64,
+    /// Record the (expensive) full fragmentation series.
+    pub record_frag: bool,
+    /// Ablation: lowest-id tie-break instead of k8s's random choice.
+    pub deterministic_ties: bool,
+}
+
+impl Default for RepeatConfig {
+    fn default() -> Self {
+        RepeatConfig {
+            reps: 10,
+            base_seed: 42,
+            target_ratio: 1.02,
+            record_frag: false,
+            deterministic_ties: false,
+        }
+    }
+}
+
+/// Run `cfg.reps` independent repetitions of (cluster spec × trace spec
+/// × policy) across threads; returns each repetition's series.
+pub fn run_repetitions(
+    cluster: &crate::cluster::ClusterSpec,
+    trace_spec: &TraceSpec,
+    policy: PolicyKind,
+    cfg: &RepeatConfig,
+) -> Vec<RunResult> {
+    let threads: Vec<_> = (0..cfg.reps)
+        .map(|i| {
+            let cluster = cluster.clone();
+            let trace_spec = trace_spec.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                let seed = cfg.base_seed + i as u64;
+                let dc = cluster.build();
+                let mut sched = Scheduler::from_policy(policy);
+                sched.set_deterministic_ties(cfg.deterministic_ties);
+                // Workload M extracted from a materialized trace with
+                // this repetition's seed (fresh historical sample).
+                let workload = trace_spec.synthesize(seed ^ 0x57AB1E).workload();
+                let mut sim = Simulation::with_spec(dc, sched, &trace_spec, workload, seed);
+                sim.record_frag = cfg.record_frag;
+                sim.run_inflation(cfg.target_ratio)
+            })
+        })
+        .collect();
+    threads.into_iter().map(|t| t.join().expect("repetition panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::sched::PolicyKind;
+
+    fn small_run(policy: PolicyKind) -> RunResult {
+        let dc = ClusterSpec::tiny(8, 4, 2).build();
+        let spec = TraceSpec::default_trace();
+        let workload = spec.synthesize(1).workload();
+        let sched = Scheduler::from_policy(policy);
+        let mut sim = Simulation::with_spec(dc, sched, &spec, workload, 7);
+        sim.record_frag = false;
+        sim.run_inflation(1.0)
+    }
+
+    #[test]
+    fn inflation_reaches_target() {
+        let r = small_run(PolicyKind::FirstFit);
+        assert!(r.arrived_gpu_units >= 32.0);
+        assert!(r.submitted > 0);
+        assert_eq!(r.submitted, r.scheduled + r.failed);
+    }
+
+    #[test]
+    fn grar_is_bounded_and_monotone_sane() {
+        let r = small_run(PolicyKind::Fgd);
+        for p in &r.series.points {
+            assert!((0.0..=1.0 + 1e-9).contains(&p.grar), "GRAR {}", p.grar);
+        }
+        assert!(r.final_grar() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn eopc_grows_with_load() {
+        let r = small_run(PolicyKind::Fgd);
+        let first = r.series.points.first().unwrap().eopc;
+        let last = r.series.points.last().unwrap().eopc;
+        assert!(last > first, "EOPC should grow: {first} -> {last}");
+    }
+
+    #[test]
+    fn x_axis_is_monotone() {
+        let r = small_run(PolicyKind::BestFit);
+        for w in r.series.points.windows(2) {
+            assert!(w[1].x >= w[0].x);
+        }
+    }
+
+    #[test]
+    fn same_seed_reproduces() {
+        let a = small_run(PolicyKind::Fgd);
+        let b = small_run(PolicyKind::Fgd);
+        assert_eq!(a.submitted, b.submitted);
+        assert_eq!(a.scheduled, b.scheduled);
+        assert!((a.final_eopc() - b.final_eopc()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn repetitions_run_in_parallel() {
+        let cluster = ClusterSpec::tiny(4, 4, 1);
+        let spec = TraceSpec::default_trace();
+        let cfg = RepeatConfig { reps: 3, base_seed: 1, target_ratio: 0.5, ..Default::default() };
+        let runs = run_repetitions(&cluster, &spec, PolicyKind::FirstFit, &cfg);
+        assert_eq!(runs.len(), 3);
+        for r in &runs {
+            assert!(r.submitted > 0);
+        }
+    }
+}

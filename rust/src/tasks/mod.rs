@@ -1,0 +1,251 @@
+//! Task model: resource demand vectors `D_t`, constraint sets `C_t`
+//! (§II), and the *target workload* `M` of task classes used by the FGD
+//! fragmentation metric.
+
+use crate::cluster::types::GpuModel;
+
+/// GPU demand of a task: `D_t^GPU ∈ {0} ∪ (0,1) ∪ Z+` (§II). A task may
+/// share one GPU *or* take whole GPUs, never both.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GpuDemand {
+    /// CPU-only task.
+    Zero,
+    /// Shares a single GPU, demanding this fraction in `(0, 1)`.
+    Frac(f64),
+    /// Exclusively uses this many whole GPUs.
+    Whole(u32),
+}
+
+impl GpuDemand {
+    /// Construct from a raw request, validating the paper's domain.
+    pub fn from_units(units: f64) -> Option<GpuDemand> {
+        if units == 0.0 {
+            Some(GpuDemand::Zero)
+        } else if units > 0.0 && units < 1.0 {
+            Some(GpuDemand::Frac(units))
+        } else if units >= 1.0 && units.fract() == 0.0 && units <= 64.0 {
+            Some(GpuDemand::Whole(units as u32))
+        } else {
+            None
+        }
+    }
+
+    /// Total GPU resource units requested (fraction or whole count).
+    pub fn units(self) -> f64 {
+        match self {
+            GpuDemand::Zero => 0.0,
+            GpuDemand::Frac(f) => f,
+            GpuDemand::Whole(k) => k as f64,
+        }
+    }
+
+    /// True for any GPU-requesting task.
+    pub fn is_gpu(self) -> bool {
+        !matches!(self, GpuDemand::Zero)
+    }
+
+    /// Table-I bucket index: 0→`0`, 1→`(0,1)`, 2→`1`, 3→`2`, 4→`4`, 5→`8`
+    /// (other whole counts fall into the nearest-larger bucket; the paper
+    /// traces only contain {2,4,8}).
+    pub fn bucket(self) -> usize {
+        match self {
+            GpuDemand::Zero => 0,
+            GpuDemand::Frac(_) => 1,
+            GpuDemand::Whole(1) => 2,
+            GpuDemand::Whole(2) => 3,
+            GpuDemand::Whole(k) if k <= 4 => 4,
+            GpuDemand::Whole(_) => 5,
+        }
+    }
+}
+
+/// Number of Table-I buckets.
+pub const NUM_BUCKETS: usize = 6;
+
+/// A task submitted to the datacenter: demand vector `D_t` plus the
+/// optional GPU-model constraint from `C_t`. (The trace has no CPU-model
+/// constraints — the cluster is CPU-homogeneous — so `C_t^CPU` is
+/// omitted.)
+#[derive(Clone, Debug, PartialEq)]
+pub struct Task {
+    /// Unique id assigned by the trace/sampler.
+    pub id: u64,
+    /// vCPUs requested (`D_t^CPU`, fractional allowed).
+    pub cpu: f64,
+    /// Memory requested in MiB (`D_t^MEM`).
+    pub mem: f64,
+    /// GPU demand (`D_t^GPU`).
+    pub gpu: GpuDemand,
+    /// If set, the task only runs on nodes with this GPU model
+    /// (`C_t^GPU`; constrained-GPU traces).
+    pub gpu_model: Option<GpuModel>,
+}
+
+impl Task {
+    /// Convenience constructor for tests and examples.
+    pub fn new(id: u64, cpu: f64, mem: f64, gpu: GpuDemand) -> Task {
+        Task { id, cpu, mem, gpu, gpu_model: None }
+    }
+
+    /// With a GPU-model constraint.
+    pub fn constrained(mut self, model: GpuModel) -> Task {
+        self.gpu_model = Some(model);
+        self
+    }
+}
+
+/// One class `m` of the target workload `M`: a representative demand and
+/// its popularity `p_m` (empirical frequency in the trace).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskClass {
+    pub cpu: f64,
+    pub mem: f64,
+    pub gpu: GpuDemand,
+    pub gpu_model: Option<GpuModel>,
+    /// Popularity `p_m ∈ (0, 1]`; classes of a workload sum to 1.
+    pub pop: f64,
+}
+
+impl TaskClass {
+    /// View the class as a task (for feasibility checks).
+    pub fn as_task(&self) -> Task {
+        Task {
+            id: u64::MAX,
+            cpu: self.cpu,
+            mem: self.mem,
+            gpu: self.gpu,
+            gpu_model: self.gpu_model,
+        }
+    }
+}
+
+/// The target workload `M`: the class catalog the FGD metric averages
+/// over, extracted from historical trace data.
+#[derive(Clone, Debug, Default)]
+pub struct Workload {
+    pub classes: Vec<TaskClass>,
+}
+
+impl Workload {
+    /// Extract classes from a task list: tasks are grouped by their
+    /// (rounded CPU, GPU-demand, constraint) signature and popularity is
+    /// the group's frequency. This mirrors how FGD derives `M` from
+    /// historical traces.
+    pub fn from_tasks(tasks: &[Task]) -> Workload {
+        use std::collections::BTreeMap;
+        // Signature: (cpu in 0.25-vCPU steps, gpu demand in 1/64 units,
+        // whole-vs-frac tag, constraint index).
+        let mut groups: BTreeMap<(u64, u64, u8, u8), (Task, usize)> = BTreeMap::new();
+        for t in tasks {
+            let sig = (
+                (t.cpu * 4.0).round() as u64,
+                (t.gpu.units() * 64.0).round() as u64,
+                matches!(t.gpu, GpuDemand::Whole(_)) as u8,
+                t.gpu_model.map(|m| m.index() as u8 + 1).unwrap_or(0),
+            );
+            groups.entry(sig).and_modify(|e| e.1 += 1).or_insert((t.clone(), 1));
+        }
+        let total = tasks.len().max(1) as f64;
+        let classes = groups
+            .into_values()
+            .map(|(t, count)| TaskClass {
+                cpu: t.cpu,
+                mem: t.mem,
+                gpu: t.gpu,
+                gpu_model: t.gpu_model,
+                pop: count as f64 / total,
+            })
+            .collect();
+        Workload { classes }
+    }
+
+    /// Keep only the `k` most popular classes, renormalizing popularity.
+    /// The XLA scorer uses a fixed class capacity; FGD's metric is
+    /// dominated by the popular classes, so truncation is benign.
+    pub fn top_k(&self, k: usize) -> Workload {
+        let mut classes = self.classes.clone();
+        classes.sort_by(|a, b| b.pop.partial_cmp(&a.pop).unwrap());
+        classes.truncate(k);
+        let total: f64 = classes.iter().map(|c| c.pop).sum();
+        if total > 0.0 {
+            for c in &mut classes {
+                c.pop /= total;
+            }
+        }
+        Workload { classes }
+    }
+
+    /// Sum of popularities (≈1 for a full extraction).
+    pub fn total_pop(&self) -> f64 {
+        self.classes.iter().map(|c| c.pop).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_demand_domain() {
+        assert_eq!(GpuDemand::from_units(0.0), Some(GpuDemand::Zero));
+        assert_eq!(GpuDemand::from_units(0.5), Some(GpuDemand::Frac(0.5)));
+        assert_eq!(GpuDemand::from_units(2.0), Some(GpuDemand::Whole(2)));
+        assert_eq!(GpuDemand::from_units(1.5), None);
+        assert_eq!(GpuDemand::from_units(-1.0), None);
+    }
+
+    #[test]
+    fn units_roundtrip() {
+        for u in [0.0, 0.25, 0.9, 1.0, 4.0, 8.0] {
+            assert_eq!(GpuDemand::from_units(u).unwrap().units(), u);
+        }
+    }
+
+    #[test]
+    fn buckets_match_table1_layout() {
+        assert_eq!(GpuDemand::Zero.bucket(), 0);
+        assert_eq!(GpuDemand::Frac(0.3).bucket(), 1);
+        assert_eq!(GpuDemand::Whole(1).bucket(), 2);
+        assert_eq!(GpuDemand::Whole(2).bucket(), 3);
+        assert_eq!(GpuDemand::Whole(4).bucket(), 4);
+        assert_eq!(GpuDemand::Whole(8).bucket(), 5);
+        assert_eq!(GpuDemand::Whole(3).bucket(), 4);
+    }
+
+    #[test]
+    fn workload_extraction_groups_and_normalizes() {
+        let tasks = vec![
+            Task::new(0, 4.0, 1024.0, GpuDemand::Frac(0.5)),
+            Task::new(1, 4.0, 1024.0, GpuDemand::Frac(0.5)),
+            Task::new(2, 8.0, 2048.0, GpuDemand::Whole(1)),
+        ];
+        let w = Workload::from_tasks(&tasks);
+        assert_eq!(w.classes.len(), 2);
+        assert!((w.total_pop() - 1.0).abs() < 1e-12);
+        let frac_class = w.classes.iter().find(|c| c.gpu == GpuDemand::Frac(0.5)).unwrap();
+        assert!((frac_class.pop - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn workload_distinguishes_constraints() {
+        let tasks = vec![
+            Task::new(0, 4.0, 1024.0, GpuDemand::Whole(1)),
+            Task::new(1, 4.0, 1024.0, GpuDemand::Whole(1)).constrained(GpuModel::T4),
+        ];
+        let w = Workload::from_tasks(&tasks);
+        assert_eq!(w.classes.len(), 2);
+    }
+
+    #[test]
+    fn top_k_renormalizes() {
+        let tasks = vec![
+            Task::new(0, 1.0, 0.0, GpuDemand::Zero),
+            Task::new(1, 2.0, 0.0, GpuDemand::Zero),
+            Task::new(2, 2.0, 0.0, GpuDemand::Zero),
+            Task::new(3, 3.0, 0.0, GpuDemand::Zero),
+        ];
+        let w = Workload::from_tasks(&tasks).top_k(2);
+        assert_eq!(w.classes.len(), 2);
+        assert!((w.total_pop() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,453 @@
+//! Trace synthesis and workload generation (§V-A).
+//!
+//! The 2023 Alibaba GPU trace is not redistributable, so this module
+//! synthesizes traces calibrated to the paper's published statistics:
+//! Table I pins the per-bucket task population and GPU-request shares of
+//! the **Default** trace (8,152 tasks); §V-A describes how the
+//! **multi-GPU**, **sharing-GPU** and **constrained-GPU** traces are
+//! derived from it. All evaluated policies are functions of the joint
+//! (CPU, MEM, GPU, constraint) demand distribution, which is exactly
+//! what is being reproduced here.
+//!
+//! Workloads are produced by the paper's *Monte-Carlo workload
+//! inflation*: tasks are sampled from the trace with replacement and
+//! submitted until the cluster saturates ([`InflationSampler`]).
+
+pub mod io;
+
+use crate::cluster::types::GpuModel;
+use crate::tasks::{GpuDemand, Task, Workload, NUM_BUCKETS};
+use crate::util::rng::{Rng, WeightedIndex};
+
+/// One demand profile in a trace's catalog.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskProfile {
+    pub cpu: f64,
+    pub mem: f64,
+    pub gpu: GpuDemand,
+    /// If true, sampled tasks are pinned to a concrete GPU model
+    /// (chosen ∝ the model's share of cluster GPUs, so that demand is
+    /// serviceable in expectation).
+    pub constrained: bool,
+}
+
+/// A declarative trace: weighted profile catalog + nominal size.
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    pub name: String,
+    pub profiles: Vec<(TaskProfile, f64)>,
+    /// Nominal trace size (the paper's Default has 8,152 tasks).
+    pub n_tasks: usize,
+}
+
+/// Table I, row "Task Population (%)": buckets `0, (0,1), 1, 2, 4, 8`.
+pub const TABLE1_POPULATION: [f64; NUM_BUCKETS] = [13.3, 37.8, 48.0, 0.2, 0.2, 0.5];
+/// Table I, row "Total GPU Reqs. (%)".
+pub const TABLE1_GPU_SHARE: [f64; NUM_BUCKETS] = [0.0, 28.5, 64.2, 0.5, 1.0, 5.8];
+
+/// Fractional-GPU request values and weights. Mean ≈ 0.564, which makes
+/// the synthesized bucket GPU-request shares match Table I row 2
+/// (28.5% from sharing tasks vs 64.2% from 1-GPU tasks).
+const FRAC_VALUES: [f64; 5] = [0.25, 0.5, 0.6, 0.75, 0.8];
+const FRAC_WEIGHTS: [f64; 5] = [0.18, 0.35, 0.12, 0.20, 0.15];
+
+/// Per-bucket CPU demand options (vCPUs) and weights. Calibrated so the
+/// trace's vCPU:GPU demand ratio (~7.7 vCPU per GPU unit) sits below the
+/// cluster's 17.2 installed ratio — the paper's cluster is GPU-bound.
+const CPU_ONLY_CPUS: [f64; 6] = [2.0, 4.0, 8.0, 16.0, 32.0, 64.0];
+const CPU_ONLY_WEIGHTS: [f64; 6] = [0.15, 0.20, 0.25, 0.20, 0.12, 0.08];
+const FRAC_TASK_CPUS: [f64; 4] = [2.0, 4.0, 8.0, 12.0];
+const FRAC_TASK_CPU_WEIGHTS: [f64; 4] = [0.25, 0.35, 0.25, 0.15];
+const ONE_GPU_CPUS: [f64; 5] = [4.0, 8.0, 10.0, 12.0, 16.0];
+const ONE_GPU_CPU_WEIGHTS: [f64; 5] = [0.20, 0.30, 0.20, 0.20, 0.10];
+
+/// Memory demand: GiB per vCPU (MiB factor). Keeps memory comfortably
+/// non-binding, matching the paper's CPU/GPU-centric analysis.
+const MEM_PER_VCPU_MIB: f64 = 3072.0;
+
+fn profile(cpu: f64, gpu: GpuDemand) -> TaskProfile {
+    TaskProfile { cpu, mem: cpu * MEM_PER_VCPU_MIB, gpu, constrained: false }
+}
+
+impl TraceSpec {
+    /// The **Default** trace calibrated to Table I.
+    pub fn default_trace() -> TraceSpec {
+        let mut profiles: Vec<(TaskProfile, f64)> = Vec::new();
+        // Bucket 0: CPU-only (13.3%).
+        for (c, wc) in CPU_ONLY_CPUS.iter().zip(CPU_ONLY_WEIGHTS) {
+            profiles.push((profile(*c, GpuDemand::Zero), TABLE1_POPULATION[0] * wc));
+        }
+        // Bucket 1: sharing-GPU (37.8%) — frac × cpu cross product.
+        for (f, wf) in FRAC_VALUES.iter().zip(FRAC_WEIGHTS) {
+            for (c, wc) in FRAC_TASK_CPUS.iter().zip(FRAC_TASK_CPU_WEIGHTS) {
+                profiles.push((
+                    profile(*c, GpuDemand::Frac(*f)),
+                    TABLE1_POPULATION[1] * wf * wc,
+                ));
+            }
+        }
+        // Bucket 2: exactly one GPU (48.0%).
+        for (c, wc) in ONE_GPU_CPUS.iter().zip(ONE_GPU_CPU_WEIGHTS) {
+            profiles.push((profile(*c, GpuDemand::Whole(1)), TABLE1_POPULATION[2] * wc));
+        }
+        // Buckets 3–5: multi-GPU (0.2 / 0.2 / 0.5%).
+        for (k, cpus, pop) in [
+            (2u32, [12.0, 24.0], TABLE1_POPULATION[3]),
+            (4, [24.0, 32.0], TABLE1_POPULATION[4]),
+            (8, [48.0, 64.0], TABLE1_POPULATION[5]),
+        ] {
+            for c in cpus {
+                profiles.push((profile(c, GpuDemand::Whole(k)), pop * 0.5));
+            }
+        }
+        TraceSpec { name: "default".into(), profiles, n_tasks: 8152 }
+    }
+
+    /// **Multi-GPU** derived trace: GPU resources requested by whole-GPU
+    /// tasks (1 or more entire GPUs) increase by `pct` (e.g. `0.2` for
+    /// the +20% trace) by inflating the *multi*-GPU (≥2) task counts
+    /// with their internal distribution fixed; CPU-only and sharing
+    /// counts unchanged (§V-A).
+    pub fn multi_gpu(pct: f64) -> TraceSpec {
+        let mut spec = Self::default_trace();
+        let whole_units = spec.bucket_units(2) + spec.multi_units();
+        let multi_units = spec.multi_units();
+        assert!(multi_units > 0.0);
+        let scale = 1.0 + pct * whole_units / multi_units;
+        for (p, w) in &mut spec.profiles {
+            if matches!(p.gpu, GpuDemand::Whole(k) if k >= 2) {
+                *w *= scale;
+            }
+        }
+        spec.name = format!("multi-gpu-{:.0}", pct * 100.0);
+        spec
+    }
+
+    /// **Sharing-GPU** derived trace: sharing tasks request `share`
+    /// (e.g. `1.0` for the 100% case) of all GPU resources. Sharing and
+    /// whole-GPU task counts are rescaled, intra-class distributions and
+    /// the CPU-only population share stay fixed (§V-A).
+    pub fn sharing_gpu(share: f64) -> TraceSpec {
+        assert!((0.0..=1.0).contains(&share));
+        let mut spec = Self::default_trace();
+        let pop_frac: f64 = spec.bucket_pop(1);
+        let pop_whole: f64 = (2..NUM_BUCKETS).map(|b| spec.bucket_pop(b)).sum();
+        let units_frac: f64 = spec.bucket_units(1);
+        let units_whole: f64 = (2..NUM_BUCKETS).map(|b| spec.bucket_units(b)).sum();
+        // Scale sharing profiles by `a` and whole-GPU profiles by `b`,
+        // solving (1) GPU-task population unchanged:
+        //     a·pop_frac + b·pop_whole = pop_frac + pop_whole
+        // and (2) sharing tasks' share of GPU units hits the target:
+        //     a·units_frac / (a·units_frac + b·units_whole) = share.
+        let (a, b) = if share >= 1.0 - 1e-12 {
+            ((pop_frac + pop_whole) / pop_frac, 0.0)
+        } else {
+            let ratio = share * units_whole / ((1.0 - share) * units_frac); // a = ratio·b
+            let b = (pop_frac + pop_whole) / (ratio * pop_frac + pop_whole);
+            (ratio * b, b)
+        };
+        for (p, w) in &mut spec.profiles {
+            match p.gpu {
+                GpuDemand::Frac(_) => *w *= a,
+                GpuDemand::Whole(_) => *w *= b,
+                GpuDemand::Zero => {}
+            }
+        }
+        spec.name = format!("sharing-gpu-{:.0}", share * 100.0);
+        spec
+    }
+
+    /// **Constrained-GPU** derived trace: `pct` of GPU tasks request a
+    /// specific GPU model; everything else matches Default (§V-A).
+    pub fn constrained_gpu(pct: f64) -> TraceSpec {
+        assert!((0.0..=1.0).contains(&pct));
+        let mut spec = Self::default_trace();
+        let mut extra = Vec::new();
+        for (p, w) in &mut spec.profiles {
+            if p.gpu.is_gpu() {
+                let mut constrained = p.clone();
+                constrained.constrained = true;
+                extra.push((constrained, *w * pct));
+                *w *= 1.0 - pct;
+            }
+        }
+        spec.profiles.extend(extra);
+        spec.name = format!("constrained-gpu-{:.0}", pct * 100.0);
+        spec
+    }
+
+    /// Reconstruct a spec from a trace name (`default`,
+    /// `multi-gpu-20`, `sharing-gpu-100`, `constrained-gpu-33`, …).
+    pub fn by_name(name: &str) -> Option<TraceSpec> {
+        if name == "default" {
+            return Some(Self::default_trace());
+        }
+        if let Some(pct) = name.strip_prefix("multi-gpu-") {
+            return pct.parse::<f64>().ok().map(|p| Self::multi_gpu(p / 100.0));
+        }
+        if let Some(pct) = name.strip_prefix("sharing-gpu-") {
+            return pct.parse::<f64>().ok().map(|p| Self::sharing_gpu(p / 100.0));
+        }
+        if let Some(pct) = name.strip_prefix("constrained-gpu-") {
+            return pct.parse::<f64>().ok().map(|p| Self::constrained_gpu(p / 100.0));
+        }
+        None
+    }
+
+    fn bucket_pop(&self, bucket: usize) -> f64 {
+        self.profiles
+            .iter()
+            .filter(|(p, _)| p.gpu.bucket() == bucket)
+            .map(|(_, w)| w)
+            .sum()
+    }
+
+    fn bucket_units(&self, bucket: usize) -> f64 {
+        self.profiles
+            .iter()
+            .filter(|(p, _)| p.gpu.bucket() == bucket)
+            .map(|(p, w)| w * p.gpu.units())
+            .sum()
+    }
+
+    fn multi_units(&self) -> f64 {
+        (3..NUM_BUCKETS).map(|b| self.bucket_units(b)).sum()
+    }
+
+    /// Expected per-bucket task population (%, normalized).
+    pub fn population_pct(&self) -> [f64; NUM_BUCKETS] {
+        let total: f64 = self.profiles.iter().map(|(_, w)| w).sum();
+        let mut out = [0.0; NUM_BUCKETS];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.bucket_pop(i) / total * 100.0;
+        }
+        out
+    }
+
+    /// Expected per-bucket GPU request share (%, normalized).
+    pub fn gpu_share_pct(&self) -> [f64; NUM_BUCKETS] {
+        let total: f64 = (0..NUM_BUCKETS).map(|b| self.bucket_units(b)).sum();
+        let mut out = [0.0; NUM_BUCKETS];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.bucket_units(i) / total * 100.0;
+        }
+        out
+    }
+
+    /// Materialize a trace of `n_tasks` sampled tasks.
+    pub fn synthesize(&self, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let weights: Vec<f64> = self.profiles.iter().map(|(_, w)| *w).collect();
+        let index = WeightedIndex::new(&weights);
+        let model_weights: Vec<f64> =
+            GpuModel::ALL.iter().map(|m| m.paper_count() as f64).collect();
+        let model_index = WeightedIndex::new(&model_weights);
+        let tasks = (0..self.n_tasks)
+            .map(|id| self.sample_one(id as u64, &index, &model_index, &mut rng))
+            .collect();
+        Trace { name: self.name.clone(), tasks }
+    }
+
+    fn sample_one(
+        &self,
+        id: u64,
+        index: &WeightedIndex,
+        model_index: &WeightedIndex,
+        rng: &mut Rng,
+    ) -> Task {
+        let (p, _) = &self.profiles[index.sample(rng)];
+        let gpu_model = if p.constrained {
+            Some(GpuModel::ALL[model_index.sample(rng)])
+        } else {
+            None
+        };
+        Task { id, cpu: p.cpu, mem: p.mem, gpu: p.gpu, gpu_model }
+    }
+
+    /// Build a with-replacement sampler for Monte-Carlo inflation.
+    pub fn sampler(&self, seed: u64) -> InflationSampler {
+        let weights: Vec<f64> = self.profiles.iter().map(|(_, w)| *w).collect();
+        InflationSampler {
+            spec: self.clone(),
+            index: WeightedIndex::new(&weights),
+            model_index: WeightedIndex::new(
+                &GpuModel::ALL.iter().map(|m| m.paper_count() as f64).collect::<Vec<_>>(),
+            ),
+            rng: Rng::new(seed),
+            next_id: 0,
+        }
+    }
+}
+
+/// A materialized trace.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub name: String,
+    pub tasks: Vec<Task>,
+}
+
+impl Trace {
+    /// Extract the target workload `M` (class catalog + popularity) the
+    /// FGD metric needs.
+    pub fn workload(&self) -> Workload {
+        Workload::from_tasks(&self.tasks)
+    }
+
+    /// Empirical per-bucket population (%).
+    pub fn population_pct(&self) -> [f64; NUM_BUCKETS] {
+        let mut counts = [0usize; NUM_BUCKETS];
+        for t in &self.tasks {
+            counts[t.gpu.bucket()] += 1;
+        }
+        let total = self.tasks.len().max(1) as f64;
+        let mut out = [0.0; NUM_BUCKETS];
+        for (o, c) in out.iter_mut().zip(counts) {
+            *o = c as f64 / total * 100.0;
+        }
+        out
+    }
+
+    /// Empirical per-bucket GPU-request share (%).
+    pub fn gpu_share_pct(&self) -> [f64; NUM_BUCKETS] {
+        let mut units = [0.0; NUM_BUCKETS];
+        for t in &self.tasks {
+            units[t.gpu.bucket()] += t.gpu.units();
+        }
+        let total: f64 = units.iter().sum();
+        let mut out = [0.0; NUM_BUCKETS];
+        for (o, u) in out.iter_mut().zip(units) {
+            *o = if total > 0.0 { u / total * 100.0 } else { 0.0 };
+        }
+        out
+    }
+}
+
+/// Infinite with-replacement task stream (Monte-Carlo inflation, §V-A).
+pub struct InflationSampler {
+    spec: TraceSpec,
+    index: WeightedIndex,
+    model_index: WeightedIndex,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl InflationSampler {
+    /// Draw the next arriving task.
+    pub fn next_task(&mut self) -> Task {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.spec.sample_one(id, &self.index, &self.model_index, &mut self.rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_population_matches_table1() {
+        let spec = TraceSpec::default_trace();
+        let pop = spec.population_pct();
+        for (i, (&got, &want)) in pop.iter().zip(&TABLE1_POPULATION).enumerate() {
+            assert!((got - want).abs() < 0.05, "bucket {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn default_gpu_share_matches_table1() {
+        let spec = TraceSpec::default_trace();
+        let share = spec.gpu_share_pct();
+        for (i, (&got, &want)) in share.iter().zip(&TABLE1_GPU_SHARE).enumerate() {
+            assert!((got - want).abs() < 0.7, "bucket {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn synthesized_trace_matches_spec() {
+        let trace = TraceSpec::default_trace().synthesize(7);
+        assert_eq!(trace.tasks.len(), 8152);
+        let pop = trace.population_pct();
+        for (i, (&got, &want)) in pop.iter().zip(&TABLE1_POPULATION).enumerate() {
+            assert!((got - want).abs() < 1.5, "bucket {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        let a = TraceSpec::default_trace().synthesize(42);
+        let b = TraceSpec::default_trace().synthesize(42);
+        assert_eq!(a.tasks, b.tasks);
+        let c = TraceSpec::default_trace().synthesize(43);
+        assert_ne!(a.tasks, c.tasks);
+    }
+
+    #[test]
+    fn multi_gpu_increases_whole_units() {
+        let base = TraceSpec::default_trace();
+        let plus20 = TraceSpec::multi_gpu(0.2);
+        // Whole-GPU units per unit population mass must grow 20%.
+        let base_total: f64 = base.profiles.iter().map(|(_, w)| w).sum();
+        let whole_base: f64 =
+            (2..NUM_BUCKETS).map(|b| base.bucket_units(b)).sum::<f64>() / base_total;
+        // CPU-only and sharing *counts* unchanged -> same absolute mass.
+        let whole_new: f64 =
+            (2..NUM_BUCKETS).map(|b| plus20.bucket_units(b)).sum::<f64>() / base_total;
+        assert!((whole_new / whole_base - 1.2).abs() < 1e-9);
+        // sharing/CPU-only masses untouched
+        assert!((plus20.bucket_pop(0) - base.bucket_pop(0)).abs() < 1e-12);
+        assert!((plus20.bucket_pop(1) - base.bucket_pop(1)).abs() < 1e-12);
+        assert!((plus20.bucket_units(2) - base.bucket_units(2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sharing_gpu_hits_target_share() {
+        for target in [0.4, 0.6, 0.8, 1.0] {
+            let spec = TraceSpec::sharing_gpu(target);
+            let share = spec.gpu_share_pct();
+            assert!(
+                (share[1] / 100.0 - target).abs() < 1e-9,
+                "target {target}: got {}",
+                share[1]
+            );
+            // CPU-only population share preserved.
+            let pop = spec.population_pct();
+            assert!((pop[0] - TABLE1_POPULATION[0]).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn constrained_gpu_fraction() {
+        let trace = TraceSpec::constrained_gpu(0.33).synthesize(3);
+        let gpu_tasks: Vec<_> = trace.tasks.iter().filter(|t| t.gpu.is_gpu()).collect();
+        let constrained = gpu_tasks.iter().filter(|t| t.gpu_model.is_some()).count();
+        let frac = constrained as f64 / gpu_tasks.len() as f64;
+        assert!((frac - 0.33).abs() < 0.03, "constrained fraction {frac}");
+        // CPU-only tasks never constrained.
+        assert!(trace
+            .tasks
+            .iter()
+            .filter(|t| !t.gpu.is_gpu())
+            .all(|t| t.gpu_model.is_none()));
+    }
+
+    #[test]
+    fn sampler_streams_fresh_ids() {
+        let spec = TraceSpec::default_trace();
+        let mut s = spec.sampler(9);
+        let a = s.next_task();
+        let b = s.next_task();
+        assert_eq!(a.id, 0);
+        assert_eq!(b.id, 1);
+    }
+
+    #[test]
+    fn workload_extraction_covers_trace() {
+        let trace = TraceSpec::default_trace().synthesize(5);
+        let w = trace.workload();
+        assert!((w.total_pop() - 1.0).abs() < 1e-9);
+        // All six buckets represented in the classes.
+        let buckets: std::collections::BTreeSet<usize> =
+            w.classes.iter().map(|c| c.gpu.bucket()).collect();
+        assert_eq!(buckets.len(), NUM_BUCKETS);
+    }
+}

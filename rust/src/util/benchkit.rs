@@ -1,0 +1,270 @@
+//! Criterion-style micro/meso benchmark harness (the offline vendor set
+//! has no `criterion`). Provides warmup, timed iterations, simple
+//! statistics (mean/median/p95), throughput reporting, and CSV output so
+//! `cargo bench` produces comparable, recordable numbers for
+//! EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One benchmark's configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Minimum wall time spent in warmup.
+    pub warmup: Duration,
+    /// Minimum wall time spent measuring.
+    pub measure: Duration,
+    /// Cap on measured samples.
+    pub max_samples: usize,
+    /// Floor on measured samples (even if over time budget).
+    pub min_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            max_samples: 200,
+            min_samples: 10,
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        stats::mean(&self.samples_ns)
+    }
+    pub fn median_ns(&self) -> f64 {
+        stats::median(&self.samples_ns)
+    }
+    pub fn p95_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 95.0)
+    }
+    pub fn stddev_ns(&self) -> f64 {
+        stats::stddev(&self.samples_ns)
+    }
+    /// items/s if `items_per_iter` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / (self.mean_ns() * 1e-9))
+    }
+
+    fn report_line(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>12} median {:>12} mean {:>12} p95 (n={})",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p95_ns()),
+            self.samples_ns.len()
+        );
+        if let Some(tp) = self.throughput() {
+            s.push_str(&format!("  [{} items/s]", fmt_count(tp)));
+        }
+        s
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn fmt_count(x: f64) -> String {
+    if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Benchmark group: collects results, prints a report, writes CSV.
+pub struct Bencher {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+    /// Substring filter from argv (cargo bench passes it through).
+    filter: Option<String>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    /// Build with the default config and the argv filter, honouring
+    /// `REPRO_BENCH_FAST=1` (CI smoke mode: much shorter windows).
+    pub fn new() -> Bencher {
+        Self::with_config(BenchConfig::default())
+    }
+
+    /// Build with an explicit config (macro-benchmarks with multi-second
+    /// iterations pass smaller sample floors).
+    pub fn with_config(mut config: BenchConfig) -> Bencher {
+        if std::env::var("REPRO_BENCH_FAST").as_deref() == Ok("1") {
+            config.warmup = Duration::from_millis(20);
+            config.measure = Duration::from_millis(150);
+            config.max_samples = 20;
+            config.min_samples = 3;
+        }
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-') && a != "--bench");
+        Bencher { config, results: Vec::new(), filter }
+    }
+
+    fn skipped(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => !name.contains(f.as_str()),
+            None => false,
+        }
+    }
+
+    /// Time `f` repeatedly. `f` should perform one logical iteration and
+    /// return a value (consumed with `black_box` semantics).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        self.bench_with_items(name, None, &mut f)
+    }
+
+    /// Like [`Self::bench`], reporting `items` per iteration throughput.
+    pub fn bench_items<T>(&mut self, name: &str, items: f64, mut f: impl FnMut() -> T) {
+        self.bench_with_items(name, Some(items), &mut f)
+    }
+
+    fn bench_with_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) {
+        if self.skipped(name) {
+            return;
+        }
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.config.warmup {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.config.measure && samples.len() < self.config.max_samples)
+            || samples.len() < self.config.min_samples
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            samples_ns: samples,
+            items_per_iter: items,
+        };
+        println!("{}", result.report_line());
+        self.results.push(result);
+    }
+
+    /// Write all results as CSV (appends directory creation).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut w = crate::util::csv::CsvWriter::create(
+            path,
+            &["name", "median_ns", "mean_ns", "p95_ns", "stddev_ns", "samples", "items_per_s"],
+        )?;
+        for r in &self.results {
+            w.row_str(&[
+                r.name.clone(),
+                format!("{:.1}", r.median_ns()),
+                format!("{:.1}", r.mean_ns()),
+                format!("{:.1}", r.p95_ns()),
+                format!("{:.1}", r.stddev_ns()),
+                format!("{}", r.samples_ns.len()),
+                r.throughput().map(|t| format!("{t:.1}")).unwrap_or_default(),
+            ])?;
+        }
+        w.flush()
+    }
+
+    /// Access collected results (tests).
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> Bencher {
+        Bencher {
+            config: BenchConfig {
+                warmup: Duration::from_millis(1),
+                measure: Duration::from_millis(5),
+                max_samples: 10,
+                min_samples: 3,
+            },
+            results: Vec::new(),
+            filter: None,
+        }
+    }
+
+    #[test]
+    fn collects_samples() {
+        let mut b = fast();
+        b.bench("noop", || 1 + 1);
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].samples_ns.len() >= 3);
+        assert!(b.results()[0].mean_ns() >= 0.0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = fast();
+        b.bench_items("items", 100.0, || std::thread::sleep(Duration::from_micros(50)));
+        let tp = b.results()[0].throughput().unwrap();
+        assert!(tp > 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = fast();
+        b.filter = Some("beta".into());
+        b.bench("alpha-xyz", || 0);
+        b.bench("beta-abc", || 0);
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].name, "beta-abc");
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(12.0), "12.0 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_count(1.2e6), "1.20M");
+    }
+}

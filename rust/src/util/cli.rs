@@ -1,0 +1,124 @@
+//! Tiny CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Supports the shapes the `repro` binary needs:
+//! `repro <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, `--key value` options, bare `--flag`s
+/// and positional arguments, in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Keys that take a value; anything else starting with `--` is a flag.
+pub fn parse_args<I: IntoIterator<Item = String>>(argv: I, value_keys: &[&str]) -> Args {
+    let mut args = Args::default();
+    let mut it = argv.into_iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            // --key=value form
+            if let Some((k, v)) = key.split_once('=') {
+                args.options.insert(k.to_string(), v.to_string());
+            } else if value_keys.contains(&key) {
+                match it.next() {
+                    Some(v) => {
+                        args.options.insert(key.to_string(), v);
+                    }
+                    None => {
+                        args.flags.push(key.to_string());
+                    }
+                }
+            } else {
+                args.flags.push(key.to_string());
+            }
+        } else if args.subcommand.is_none() && args.positional.is_empty() {
+            args.subcommand = Some(a);
+        } else {
+            args.positional.push(a);
+        }
+    }
+    args
+}
+
+impl Args {
+    /// String option with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// `f64` option with default; panics with a clear message on junk.
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        match self.options.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    /// `u64` option with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        match self.options.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// `usize` option with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_u64(key, default as u64) as usize
+    }
+
+    /// Presence of a bare flag.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        parse_args(s.split_whitespace().map(String::from), &["seed", "out", "alpha", "policy"])
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("experiment --seed 42 --out results/fig1.csv fig1");
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.get_u64("seed", 0), 42);
+        assert_eq!(a.get("out", ""), "results/fig1.csv");
+        assert_eq!(a.positional, vec!["fig1"]);
+    }
+
+    #[test]
+    fn eq_form_and_flags() {
+        let a = parse("simulate --alpha=0.1 --verbose");
+        assert_eq!(a.get_f64("alpha", 0.0), 0.1);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("simulate");
+        assert_eq!(a.get_f64("alpha", 0.25), 0.25);
+        assert_eq!(a.get("policy", "fgd"), "fgd");
+    }
+
+    #[test]
+    #[should_panic(expected = "expects a number")]
+    fn bad_number_panics() {
+        let a = parse("simulate --alpha junk");
+        a.get_f64("alpha", 0.0);
+    }
+}

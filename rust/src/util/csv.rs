@@ -1,0 +1,147 @@
+//! CSV writing (and a small reader) for experiment results.
+//!
+//! Every figure/table harness emits a CSV under `results/`; the reader is
+//! used by tests that round-trip harness output.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: Box<dyn Write>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create a file-backed writer; parent dirs are created as needed.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = BufWriter::new(File::create(path)?);
+        Self::from_writer(Box::new(f), header)
+    }
+
+    /// Create a writer over any sink (used by tests).
+    pub fn from_writer(mut out: Box<dyn Write>, header: &[&str]) -> std::io::Result<CsvWriter> {
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    /// Write a numeric row (checked against the header arity).
+    pub fn row(&mut self, values: &[f64]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.cols, "row arity mismatch");
+        let line: Vec<String> = values.iter().map(|v| format_num(*v)).collect();
+        writeln!(self.out, "{}", line.join(","))
+    }
+
+    /// Write a row of preformatted string fields.
+    pub fn row_str(&mut self, values: &[String]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.cols, "row arity mismatch");
+        let quoted: Vec<String> = values.iter().map(|v| quote(v)).collect();
+        writeln!(self.out, "{}", quoted.join(","))
+    }
+
+    /// Flush the sink.
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn format_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+fn quote(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Parse a simple CSV document into (header, rows of strings).
+/// Handles quoted fields with embedded commas/quotes; no embedded
+/// newlines inside quoted fields (our writers never emit them).
+pub fn read_csv(text: &str) -> (Vec<String>, Vec<Vec<String>>) {
+    let mut lines = text.lines().filter(|l| !l.is_empty());
+    let header = lines.next().map(split_line).unwrap_or_default();
+    let rows = lines.map(split_line).collect();
+    (header, rows)
+}
+
+fn split_line(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                fields.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let buf: Vec<u8> = Vec::new();
+        let cell = std::sync::Arc::new(std::sync::Mutex::new(buf));
+        struct Sink(std::sync::Arc<std::sync::Mutex<Vec<u8>>>);
+        impl Write for Sink {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut w =
+            CsvWriter::from_writer(Box::new(Sink(cell.clone())), &["x", "y"]).unwrap();
+        w.row(&[1.0, 2.5]).unwrap();
+        w.row(&[3.0, 4.0]).unwrap();
+        w.flush().unwrap();
+        let text = String::from_utf8(cell.lock().unwrap().clone()).unwrap();
+        assert_eq!(text, "x,y\n1,2.500000\n3,4\n");
+    }
+
+    #[test]
+    fn roundtrip_read() {
+        let (h, rows) = read_csv("a,b\n1,2\n3,4\n");
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(rows, vec![vec!["1", "2"], vec!["3", "4"]]);
+    }
+
+    #[test]
+    fn quoted_fields() {
+        let (_, rows) = read_csv("a,b\n\"x,y\",\"he said \"\"hi\"\"\"\n");
+        assert_eq!(rows[0][0], "x,y");
+        assert_eq!(rows[0][1], "he said \"hi\"");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut w = CsvWriter::from_writer(Box::new(std::io::sink()), &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is fully offline with a minimal vendored crate
+//! set (`xla`, `anyhow`), so every supporting library the system needs is
+//! implemented here from scratch: a seedable PRNG ([`rng`]), a JSON
+//! encoder/decoder ([`json`]), a CSV writer ([`csv`]), descriptive
+//! statistics ([`stats`]), a tiny CLI argument parser ([`cli`]), and a
+//! criterion-style micro-benchmark harness ([`benchkit`]).
+
+pub mod benchkit;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod plot;
+pub mod rng;
+pub mod stats;

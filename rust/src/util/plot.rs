@@ -1,0 +1,270 @@
+//! Minimal SVG line-chart renderer (no plotting library offline).
+//!
+//! Turns the experiment CSVs (first column = x, remaining columns =
+//! series) into self-contained SVG files so the regenerated figures are
+//! directly viewable: `repro plot results/fig3_default.csv`.
+
+use std::fmt::Write as _;
+
+/// Chart configuration.
+#[derive(Clone, Debug)]
+pub struct PlotConfig {
+    pub width: f64,
+    pub height: f64,
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    /// Clamp y to this range if set (e.g. GRAR plots zoom on [0.9, 1]).
+    pub y_range: Option<(f64, f64)>,
+    /// Restrict x to this range if set.
+    pub x_range: Option<(f64, f64)>,
+}
+
+impl Default for PlotConfig {
+    fn default() -> Self {
+        PlotConfig {
+            width: 860.0,
+            height: 460.0,
+            title: String::new(),
+            x_label: "requested GPU capacity".into(),
+            y_label: String::new(),
+            y_range: None,
+            x_range: None,
+        }
+    }
+}
+
+const COLORS: [&str; 10] = [
+    "#1f77b4", "#ff7f0e", "#2ca02c", "#d62728", "#9467bd", "#8c564b", "#e377c2",
+    "#7f7f7f", "#bcbd22", "#17becf",
+];
+
+const MARGIN_L: f64 = 64.0;
+const MARGIN_R: f64 = 180.0;
+const MARGIN_T: f64 = 36.0;
+const MARGIN_B: f64 = 46.0;
+
+/// Render one chart: `series` is a list of (name, points) with shared x.
+pub fn render_lines(cfg: &PlotConfig, series: &[(String, Vec<(f64, f64)>)]) -> String {
+    let plot_w = cfg.width - MARGIN_L - MARGIN_R;
+    let plot_h = cfg.height - MARGIN_T - MARGIN_B;
+
+    // Data extents.
+    let mut pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|(_, p)| p.iter().copied())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if let Some((lo, hi)) = cfg.x_range {
+        pts.retain(|(x, _)| *x >= lo && *x <= hi);
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if let Some((lo, hi)) = cfg.x_range {
+        x0 = lo;
+        x1 = hi;
+    }
+    if let Some((lo, hi)) = cfg.y_range {
+        y0 = lo;
+        y1 = hi;
+    }
+    if !x0.is_finite() || x1 - x0 < 1e-12 {
+        x0 = 0.0;
+        x1 = 1.0;
+    }
+    if !y0.is_finite() || y1 - y0 < 1e-12 {
+        y0 -= 0.5;
+        y1 += 0.5;
+    }
+    // A little y headroom.
+    let pad = (y1 - y0) * 0.05;
+    let (y0, y1) = match cfg.y_range {
+        Some(r) => r,
+        None => (y0 - pad, y1 + pad),
+    };
+
+    let sx = move |x: f64| MARGIN_L + (x - x0) / (x1 - x0) * plot_w;
+    let sy = move |y: f64| MARGIN_T + (1.0 - (y - y0) / (y1 - y0)) * plot_h;
+
+    let mut svg = String::new();
+    let _ = write!(
+        svg,
+        r##"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" viewBox="0 0 {w} {h}" font-family="sans-serif" font-size="12">
+<rect width="{w}" height="{h}" fill="white"/>
+<text x="{tx}" y="20" text-anchor="middle" font-size="15" font-weight="bold">{title}</text>
+"##,
+        w = cfg.width,
+        h = cfg.height,
+        tx = MARGIN_L + plot_w / 2.0,
+        title = escape(&cfg.title),
+    );
+
+    // Gridlines + ticks (5 divisions each way).
+    for i in 0..=5 {
+        let fx = x0 + (x1 - x0) * i as f64 / 5.0;
+        let fy = y0 + (y1 - y0) * i as f64 / 5.0;
+        let px = sx(fx);
+        let py = sy(fy);
+        let _ = write!(
+            svg,
+            r##"<line x1="{px:.1}" y1="{t:.1}" x2="{px:.1}" y2="{b:.1}" stroke="#ddd"/>
+<text x="{px:.1}" y="{lb:.1}" text-anchor="middle" fill="#444">{fx}</text>
+<line x1="{l:.1}" y1="{py:.1}" x2="{r:.1}" y2="{py:.1}" stroke="#ddd"/>
+<text x="{ll:.1}" y="{pyt:.1}" text-anchor="end" fill="#444">{fy}</text>
+"##,
+            t = MARGIN_T,
+            b = MARGIN_T + plot_h,
+            lb = MARGIN_T + plot_h + 18.0,
+            l = MARGIN_L,
+            r = MARGIN_L + plot_w,
+            ll = MARGIN_L - 8.0,
+            pyt = py + 4.0,
+            fx = trim_num(fx),
+            fy = trim_num(fy),
+        );
+    }
+    // Axes labels.
+    let _ = write!(
+        svg,
+        r##"<text x="{cx:.1}" y="{by:.1}" text-anchor="middle" fill="#222">{xl}</text>
+<text x="16" y="{cy:.1}" text-anchor="middle" transform="rotate(-90 16 {cy:.1})" fill="#222">{yl}</text>
+"##,
+        cx = MARGIN_L + plot_w / 2.0,
+        by = cfg.height - 8.0,
+        cy = MARGIN_T + plot_h / 2.0,
+        xl = escape(&cfg.x_label),
+        yl = escape(&cfg.y_label),
+    );
+
+    // Series.
+    for (si, (name, points)) in series.iter().enumerate() {
+        let color = COLORS[si % COLORS.len()];
+        let mut path = String::new();
+        for &(x, y) in points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            if let Some((lo, hi)) = cfg.x_range {
+                if x < lo || x > hi {
+                    continue;
+                }
+            }
+            let cmd = if path.is_empty() { 'M' } else { 'L' };
+            let yc = y.clamp(y0, y1);
+            let _ = write!(path, "{cmd}{:.1},{:.1} ", sx(x), sy(yc));
+        }
+        let _ = write!(
+            svg,
+            r##"<path d="{path}" fill="none" stroke="{color}" stroke-width="1.8"/>
+"##
+        );
+        // Legend entry.
+        let ly = MARGIN_T + 10.0 + si as f64 * 18.0;
+        let lx = MARGIN_L + plot_w + 12.0;
+        let _ = write!(
+            svg,
+            r##"<line x1="{lx:.1}" y1="{ly:.1}" x2="{x2:.1}" y2="{ly:.1}" stroke="{color}" stroke-width="2.5"/>
+<text x="{tx:.1}" y="{ty:.1}" fill="#222">{name}</text>
+"##,
+            x2 = lx + 22.0,
+            tx = lx + 28.0,
+            ty = ly + 4.0,
+            name = escape(name),
+        );
+    }
+    // Frame.
+    let _ = write!(
+        svg,
+        r##"<rect x="{l:.1}" y="{t:.1}" width="{pw:.1}" height="{ph:.1}" fill="none" stroke="#333"/>
+</svg>
+"##,
+        l = MARGIN_L,
+        t = MARGIN_T,
+        pw = plot_w,
+        ph = plot_h,
+    );
+    svg
+}
+
+/// Plot an experiment CSV (col 0 = x) to SVG.
+pub fn plot_csv(csv_text: &str, cfg: &PlotConfig) -> String {
+    let (header, rows) = crate::util::csv::read_csv(csv_text);
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = header
+        .iter()
+        .skip(1)
+        .map(|h| (h.clone(), Vec::new()))
+        .collect();
+    for row in &rows {
+        let Some(x) = row.first().and_then(|v| v.parse::<f64>().ok()) else { continue };
+        for (i, s) in series.iter_mut().enumerate() {
+            if let Some(y) = row.get(i + 1).and_then(|v| v.parse::<f64>().ok()) {
+                s.1.push((x, y));
+            }
+        }
+    }
+    render_lines(cfg, &series)
+}
+
+fn escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+fn trim_num(v: f64) -> String {
+    if v.abs() >= 100.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_valid_svg() {
+        let cfg = PlotConfig { title: "test".into(), ..Default::default() };
+        let svg = render_lines(
+            &cfg,
+            &[
+                ("a".into(), vec![(0.0, 1.0), (1.0, 2.0)]),
+                ("b".into(), vec![(0.0, 2.0), (1.0, 0.5)]),
+            ],
+        );
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>\n"));
+        assert_eq!(svg.matches("<path").count(), 2);
+        assert!(svg.contains(">a</text>"));
+    }
+
+    #[test]
+    fn plot_csv_parses_all_columns() {
+        let csv = "x,p1,p2\n0,1,4\n0.5,2,5\n1,3,6\n";
+        let svg = plot_csv(csv, &PlotConfig::default());
+        assert_eq!(svg.matches("<path").count(), 2);
+        assert!(svg.contains(">p1</text>") && svg.contains(">p2</text>"));
+    }
+
+    #[test]
+    fn y_range_clamps() {
+        let cfg = PlotConfig { y_range: Some((0.9, 1.0)), ..Default::default() };
+        let svg = render_lines(&cfg, &[("a".into(), vec![(0.0, 0.5), (1.0, 0.95)])]);
+        assert!(svg.contains("<path"));
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        let cfg = PlotConfig::default();
+        let _ = render_lines(&cfg, &[("empty".into(), vec![])]);
+        let _ = render_lines(&cfg, &[("flat".into(), vec![(0.0, 1.0), (1.0, 1.0)])]);
+        let _ = plot_csv("x\n1\n", &cfg);
+    }
+}

