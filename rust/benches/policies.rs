@@ -30,6 +30,22 @@ fn bench_policy(b: &mut Bencher, policy: PolicyKind, scale: f64, label: &str) {
     b.bench(&format!("{label}/{}", policy.label()), || black_box(sim.step()));
 }
 
+/// MIG scenario: slice-granular placements multiply the candidate
+/// space (up to 7 starts × 8 GPUs per node), so scoring-throughput
+/// regressions on the MIG path show up here.
+fn bench_mig_policy(b: &mut Bencher, policy: PolicyKind) {
+    let spec = TraceSpec::mig_trace(0.3);
+    let dc = ClusterSpec::mig_cluster(32, 8, 4).build();
+    let workload = spec.synthesize(1).workload();
+    let sched = Scheduler::from_policy(policy);
+    let mut sim = Simulation::with_spec(dc, sched, &spec, workload, 11);
+    sim.record_frag = false;
+    while sim.capacity_ratio() < 0.5 {
+        sim.step();
+    }
+    b.bench(&format!("mig-32-nodes/{}", policy.label()), || black_box(sim.step()));
+}
+
 fn main() {
     let mut b = Bencher::new();
     println!("== per-decision scheduling latency (cluster at ~50% load) ==");
@@ -48,6 +64,15 @@ fn main() {
     }
     for policy in [PolicyKind::Fgd, PolicyKind::PwrFgd { alpha: 0.1 }] {
         bench_policy(&mut b, policy, 0.1, "scaled-121-nodes");
+    }
+    for policy in [
+        PolicyKind::MigBestFit,
+        PolicyKind::MigSliceFit,
+        PolicyKind::MigFgd,
+        PolicyKind::MigPwr,
+        PolicyKind::MigPwrFgd { alpha: 0.1 },
+    ] {
+        bench_mig_policy(&mut b, policy);
     }
     b.write_csv("results/bench_policies.csv").ok();
     println!("(csv: results/bench_policies.csv)");

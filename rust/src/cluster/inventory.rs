@@ -23,6 +23,9 @@ pub struct NodePool {
     pub gpu_model: Option<GpuModel>,
     /// GPUs per node.
     pub gpus_per_node: usize,
+    /// MIG-partition the GPUs (slice-granular allocation; see
+    /// [`crate::cluster::mig`]).
+    pub mig: bool,
 }
 
 /// Declarative cluster description; `build()` materializes nodes.
@@ -56,6 +59,7 @@ impl ClusterSpec {
             mem,
             gpu_model: model,
             gpus_per_node: gpn,
+            mig: false,
         };
         ClusterSpec {
             pools: vec![
@@ -98,6 +102,7 @@ impl ClusterSpec {
                     mem: 393_216.0,
                     gpu_model: Some(GpuModel::G2),
                     gpus_per_node,
+                    mig: false,
                 },
                 NodePool {
                     count: n_cpu_nodes,
@@ -105,6 +110,38 @@ impl ClusterSpec {
                     mem: 262_144.0,
                     gpu_model: None,
                     gpus_per_node: 0,
+                    mig: false,
+                },
+            ],
+        }
+    }
+
+    /// A MIG-partitioned cluster: `n_mig_nodes` A100-class nodes (the
+    /// G3 power profile of Table II, 128 vCPUs / 768 GiB, up to 8 GPUs
+    /// each, every GPU MIG-enabled) plus optional CPU-only nodes.
+    pub fn mig_cluster(
+        n_mig_nodes: usize,
+        gpus_per_node: usize,
+        n_cpu_nodes: usize,
+    ) -> ClusterSpec {
+        assert!(gpus_per_node <= crate::frag::MAX_GPUS);
+        ClusterSpec {
+            pools: vec![
+                NodePool {
+                    count: n_mig_nodes,
+                    vcpus: 128.0,
+                    mem: 786_432.0,
+                    gpu_model: Some(GpuModel::G3),
+                    gpus_per_node,
+                    mig: true,
+                },
+                NodePool {
+                    count: n_cpu_nodes,
+                    vcpus: 94.0,
+                    mem: 262_144.0,
+                    gpu_model: None,
+                    gpus_per_node: 0,
+                    mig: false,
                 },
             ],
         }
@@ -147,14 +184,18 @@ impl ClusterSpec {
         for pool in &self.pools {
             for _ in 0..pool.count {
                 let id = nodes.len();
-                nodes.push(Node::new(
+                let mut node = Node::new(
                     id,
                     CpuModel::XeonE5_2682V4,
                     pool.gpu_model,
                     pool.vcpus,
                     pool.mem,
                     pool.gpus_per_node,
-                ));
+                );
+                if pool.mig {
+                    node.enable_mig();
+                }
+                nodes.push(node);
             }
         }
         Datacenter::new(nodes)
@@ -231,5 +272,22 @@ mod tests {
         let dc = ClusterSpec::tiny(2, 4, 1).build();
         assert_eq!(dc.nodes.len(), 3);
         assert_eq!(dc.total_gpus(), 8);
+    }
+
+    #[test]
+    fn mig_cluster_builds_partitioned_nodes() {
+        let spec = ClusterSpec::mig_cluster(4, 8, 2);
+        assert_eq!(spec.total_nodes(), 6);
+        assert_eq!(spec.total_gpus(), 32);
+        let dc = spec.build();
+        let mig_nodes = dc.nodes.iter().filter(|n| n.mig.is_some()).count();
+        assert_eq!(mig_nodes, 4);
+        for n in &dc.nodes {
+            if let Some(migs) = &n.mig {
+                assert_eq!(n.gpu_model, Some(GpuModel::G3));
+                assert_eq!(migs.len(), 8);
+                assert!(migs.iter().all(|m| m.mask == 0));
+            }
+        }
     }
 }

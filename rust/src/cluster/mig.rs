@@ -1,0 +1,462 @@
+//! MIG (Multi-Instance GPU) partitioning: the NVIDIA-A100-style slice
+//! lattice, per-GPU partition state, and slice-level fragmentation
+//! accounting.
+//!
+//! An A100-class GPU exposes [`MIG_SLICES`] = 7 compute slices. A MIG
+//! *instance* occupies a contiguous run of slices and may only begin at
+//! the profile's architecturally legal start offsets (the partition
+//! placement tree of the MIG spec):
+//!
+//! | profile | slices | legal starts (preferred order) |
+//! |---------|--------|--------------------------------|
+//! | 1g      | 1      | 0, 1, 2, 3, 4, 5, 6            |
+//! | 2g      | 2      | 0, 2, 4                        |
+//! | 3g      | 3      | 4, 0                           |
+//! | 4g      | 4      | 0                              |
+//! | 7g      | 7      | 0                              |
+//!
+//! The 3g profile prefers start 4 so that a lone 3g instance keeps the
+//! 0–3 window available for a later 4g — the same heuristic nvidia-smi
+//! applies. Any set of non-overlapping legally-placed instances is a
+//! valid partition; co-residency constraints (e.g. "4g+4g is illegal",
+//! "3g+3g is the largest pair") all fall out of the start lattice.
+//!
+//! Slice-level fragmentation generalizes the FGD rule (see
+//! [`crate::frag`]): a free slice is *fragmented for profile `p`* iff no
+//! legal free placement of `p` could consume it ([`frag_slices`]). On a
+//! GPU with slice 1 occupied, a 4g can never run (start 0 blocked), so
+//! all six free slices are 4g-fragments; a 2g can still land at starts
+//! 2 and 4, leaving only slices 0 and 6 as 2g-fragments.
+//!
+//! The greedy repack planner ([`MigGpu::repack_plan`]) re-places the
+//! resident instances first-fit-decreasing to open a legal start for an
+//! incoming profile — the primitive behind the online repartitioner in
+//! [`crate::sched::policies::mig`]. Slice counts are preserved, so
+//! cluster-level allocation caches and GRAR are unaffected by repacks.
+
+use std::fmt;
+
+/// Compute slices per MIG-capable GPU (A100: 7).
+pub const MIG_SLICES: u8 = 7;
+
+/// Bitmask of all slices (`0b111_1111`).
+pub const FULL_MASK: u8 = (1u8 << MIG_SLICES) - 1;
+
+/// A100-style MIG profiles (compute-slice widths).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MigProfile {
+    /// 1 slice (1g.5gb-class).
+    P1g,
+    /// 2 slices (2g.10gb-class).
+    P2g,
+    /// 3 slices (3g.20gb-class).
+    P3g,
+    /// 4 slices (4g.20gb-class).
+    P4g,
+    /// 7 slices — the whole GPU as one instance (7g.40gb-class).
+    P7g,
+}
+
+impl MigProfile {
+    /// All profiles, ascending by slice count.
+    pub const ALL: [MigProfile; 5] = [
+        MigProfile::P1g,
+        MigProfile::P2g,
+        MigProfile::P3g,
+        MigProfile::P4g,
+        MigProfile::P7g,
+    ];
+
+    /// Compute slices the profile occupies.
+    pub fn slices(self) -> u8 {
+        match self {
+            MigProfile::P1g => 1,
+            MigProfile::P2g => 2,
+            MigProfile::P3g => 3,
+            MigProfile::P4g => 4,
+            MigProfile::P7g => 7,
+        }
+    }
+
+    /// Legal start offsets, in preferred (packing-friendly) order.
+    pub fn legal_starts(self) -> &'static [u8] {
+        match self {
+            MigProfile::P1g => &[0, 1, 2, 3, 4, 5, 6],
+            MigProfile::P2g => &[0, 2, 4],
+            MigProfile::P3g => &[4, 0],
+            MigProfile::P4g => &[0],
+            MigProfile::P7g => &[0],
+        }
+    }
+
+    /// GPU resource units (fraction of one GPU): `slices / 7`.
+    pub fn units(self) -> f64 {
+        self.slices() as f64 / MIG_SLICES as f64
+    }
+
+    /// Stable small integer id (dense per-profile tables).
+    pub fn index(self) -> usize {
+        MigProfile::ALL.iter().position(|&p| p == self).unwrap()
+    }
+
+    /// Inverse of [`Self::index`].
+    pub fn from_index(i: usize) -> Option<MigProfile> {
+        MigProfile::ALL.get(i).copied()
+    }
+
+    /// Parse a profile name (`1g`, `2g`, `3g`, `4g`, `7g`).
+    pub fn parse(s: &str) -> Option<MigProfile> {
+        match s.to_ascii_lowercase().as_str() {
+            "1g" => Some(MigProfile::P1g),
+            "2g" => Some(MigProfile::P2g),
+            "3g" => Some(MigProfile::P3g),
+            "4g" => Some(MigProfile::P4g),
+            "7g" => Some(MigProfile::P7g),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for MigProfile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            MigProfile::P1g => "1g",
+            MigProfile::P2g => "2g",
+            MigProfile::P3g => "3g",
+            MigProfile::P4g => "4g",
+            MigProfile::P7g => "7g",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Slice-occupancy window of `(profile, start)` as a bitmask.
+pub fn window_mask(profile: MigProfile, start: u8) -> u8 {
+    (((1u16 << profile.slices()) - 1) as u8) << start
+}
+
+/// First free legal start for `profile` on an occupancy `mask`, in the
+/// profile's preferred order; `None` when no placement is legal.
+pub fn first_fit_start(mask: u8, profile: MigProfile) -> Option<u8> {
+    profile
+        .legal_starts()
+        .iter()
+        .copied()
+        .find(|&s| mask & window_mask(profile, s) == 0)
+}
+
+/// Free slices on `mask` that **no** legal free placement of `profile`
+/// could consume — the slice-level FGD fragment count (in slices).
+pub fn frag_slices(mask: u8, profile: MigProfile) -> u8 {
+    let free = !mask & FULL_MASK;
+    if free == 0 {
+        return 0;
+    }
+    let mut cover = 0u8;
+    for &s in profile.legal_starts() {
+        let w = window_mask(profile, s);
+        if mask & w == 0 {
+            cover |= w;
+        }
+    }
+    (free & !cover).count_ones() as u8
+}
+
+/// One placed MIG instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MigInstance {
+    pub profile: MigProfile,
+    pub start: u8,
+}
+
+/// Per-GPU partition state: the occupancy bitmask plus the resident
+/// instance list (instances of equal profile are fungible).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MigGpu {
+    /// Occupied-slice bitmask (bit `i` ⇔ slice `i` in use).
+    pub mask: u8,
+    /// Resident instances; `mask` is always their window union.
+    pub instances: Vec<MigInstance>,
+}
+
+/// A planned re-placement: `(instance index, new start)` for every
+/// resident instance (unchanged entries included), plus the total
+/// number of slices that would move.
+pub type RepackPlan = (Vec<(usize, u8)>, u32);
+
+impl MigGpu {
+    /// Fresh, unpartitioned GPU.
+    pub fn new() -> MigGpu {
+        MigGpu { mask: 0, instances: Vec::new() }
+    }
+
+    /// Occupied slices.
+    pub fn used_slices(&self) -> u8 {
+        self.mask.count_ones() as u8
+    }
+
+    /// Free slices.
+    pub fn free_slices(&self) -> u8 {
+        MIG_SLICES - self.used_slices()
+    }
+
+    /// Allocated fraction of the GPU (`used / 7`) — the value mirrored
+    /// into [`crate::cluster::node::Node::gpu_alloc`].
+    pub fn alloc_fraction(&self) -> f64 {
+        self.used_slices() as f64 / MIG_SLICES as f64
+    }
+
+    /// First free legal start for `profile` (preferred order).
+    pub fn can_place(&self, profile: MigProfile) -> Option<u8> {
+        first_fit_start(self.mask, profile)
+    }
+
+    /// All free legal starts for `profile`, preferred order.
+    pub fn free_starts(&self, profile: MigProfile) -> Vec<u8> {
+        profile
+            .legal_starts()
+            .iter()
+            .copied()
+            .filter(|&s| self.mask & window_mask(profile, s) == 0)
+            .collect()
+    }
+
+    /// Place an instance; returns `false` (state untouched) when the
+    /// start is illegal or the window overlaps.
+    pub fn place(&mut self, profile: MigProfile, start: u8) -> bool {
+        if !profile.legal_starts().contains(&start) {
+            return false;
+        }
+        let w = window_mask(profile, start);
+        if self.mask & w != 0 {
+            return false;
+        }
+        self.mask |= w;
+        self.instances.push(MigInstance { profile, start });
+        true
+    }
+
+    /// Release an instance of `profile`. With `start = Some(s)` an
+    /// exact `(profile, s)` instance is required; with `None` any
+    /// instance of the profile is released (instances of equal profile
+    /// are fungible — this is what keeps releases correct after a
+    /// repack moved instances to new starts). Returns `false` when no
+    /// matching instance exists.
+    pub fn release(&mut self, profile: MigProfile, start: Option<u8>) -> bool {
+        let idx = self
+            .instances
+            .iter()
+            .position(|i| i.profile == profile && (start.is_none() || start == Some(i.start)));
+        match idx {
+            Some(i) => {
+                let inst = self.instances.swap_remove(i);
+                self.mask &= !window_mask(inst.profile, inst.start);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Plan a repack that opens a legal start for `profile` without
+    /// changing which instances are resident: re-place `profile` plus
+    /// all residents first-fit-decreasing on an empty lattice (3g
+    /// prefers start 4, so `{3g,2g,2g}`-style sets pack). Returns
+    /// `None` when the profile cannot fit even after repacking (or the
+    /// greedy order fails); `Some((plan, 0))` when it already fits.
+    pub fn repack_plan(&self, profile: MigProfile) -> Option<RepackPlan> {
+        if self.free_slices() < profile.slices() {
+            return None;
+        }
+        if self.can_place(profile).is_some() {
+            return Some((
+                self.instances.iter().enumerate().map(|(i, inst)| (i, inst.start)).collect(),
+                0,
+            ));
+        }
+        // Items: the incoming profile (marker usize::MAX) + residents,
+        // sorted by descending slice count (stable — incoming first
+        // among equals).
+        let mut items: Vec<(usize, MigProfile)> = vec![(usize::MAX, profile)];
+        items.extend(self.instances.iter().enumerate().map(|(i, inst)| (i, inst.profile)));
+        items.sort_by(|a, b| b.1.slices().cmp(&a.1.slices()));
+        let mut mask = 0u8;
+        let mut plan: Vec<(usize, u8)> = Vec::with_capacity(self.instances.len());
+        for (idx, p) in items {
+            let s = first_fit_start(mask, p)?;
+            mask |= window_mask(p, s);
+            if idx != usize::MAX {
+                plan.push((idx, s));
+            }
+        }
+        let moved: u32 = plan
+            .iter()
+            .filter(|&&(i, s)| self.instances[i].start != s)
+            .map(|&(i, _)| self.instances[i].profile.slices() as u32)
+            .sum();
+        Some((plan, moved))
+    }
+
+    /// Apply a plan from [`Self::repack_plan`] (same instance set).
+    pub fn apply_repack(&mut self, plan: &[(usize, u8)]) {
+        for &(i, s) in plan {
+            self.instances[i].start = s;
+        }
+        self.mask = self
+            .instances
+            .iter()
+            .fold(0u8, |m, inst| m | window_mask(inst.profile, inst.start));
+        debug_assert_eq!(self.instances.len(), plan.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_table() {
+        let widths: Vec<u8> = MigProfile::ALL.iter().map(|p| p.slices()).collect();
+        assert_eq!(widths, vec![1, 2, 3, 4, 7]);
+        for p in MigProfile::ALL {
+            assert_eq!(MigProfile::from_index(p.index()), Some(p));
+            assert_eq!(MigProfile::parse(&p.to_string()), Some(p));
+            // Every legal start keeps the window inside the 7 slices.
+            for &s in p.legal_starts() {
+                assert!(s + p.slices() <= MIG_SLICES, "{p} @ {s} overflows");
+            }
+        }
+        assert_eq!(MigProfile::parse("5g"), None);
+        assert!((MigProfile::P7g.units() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_masks() {
+        assert_eq!(window_mask(MigProfile::P1g, 6), 0b100_0000);
+        assert_eq!(window_mask(MigProfile::P2g, 2), 0b000_1100);
+        assert_eq!(window_mask(MigProfile::P4g, 0), 0b000_1111);
+        assert_eq!(window_mask(MigProfile::P7g, 0), FULL_MASK);
+    }
+
+    #[test]
+    fn lattice_legality() {
+        let mut g = MigGpu::new();
+        // 4g+4g illegal (both need start 0).
+        assert!(g.place(MigProfile::P4g, 0));
+        assert_eq!(g.can_place(MigProfile::P4g), None);
+        // 4g+3g legal (3g at 4).
+        assert_eq!(g.can_place(MigProfile::P3g), Some(4));
+        assert!(g.place(MigProfile::P3g, 4));
+        assert_eq!(g.free_slices(), 0);
+        // Illegal starts rejected without state change.
+        let before = g.clone();
+        assert!(!g.place(MigProfile::P2g, 1)); // 1 is not a 2g start
+        assert!(!g.place(MigProfile::P1g, 0)); // occupied
+        assert_eq!(g, before);
+    }
+
+    #[test]
+    fn every_greedy_fill_stays_within_seven_slices() {
+        // Exhaustively place profiles in every 5^4 short sequence; the
+        // mask can never exceed 7 slices and used+free is invariant.
+        for a in 0..5usize {
+            for b in 0..5usize {
+                for c in 0..5usize {
+                    for d in 0..5usize {
+                        let mut g = MigGpu::new();
+                        let mut placed = Vec::new();
+                        for idx in [a, b, c, d] {
+                            let p = MigProfile::ALL[idx];
+                            if let Some(s) = g.can_place(p) {
+                                assert!(g.place(p, s));
+                                placed.push((p, s));
+                            }
+                        }
+                        let total: u8 = placed.iter().map(|(p, _)| p.slices()).sum();
+                        assert!(total <= MIG_SLICES);
+                        assert_eq!(g.used_slices(), total);
+                        assert_eq!(g.used_slices() + g.free_slices(), MIG_SLICES);
+                        // Round-trip: release everything -> empty GPU.
+                        for (p, s) in placed {
+                            assert!(g.release(p, Some(s)));
+                        }
+                        assert_eq!(g, MigGpu::new());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lone_3g_prefers_high_start() {
+        let mut g = MigGpu::new();
+        assert_eq!(g.can_place(MigProfile::P3g), Some(4));
+        g.place(MigProfile::P3g, 4);
+        // ...which keeps the 4g window open.
+        assert_eq!(g.can_place(MigProfile::P4g), Some(0));
+    }
+
+    #[test]
+    fn frag_slices_examples() {
+        // Slice 1 occupied: 4g can never run -> all 6 free slices are
+        // 4g-fragments; 2g can still use starts 2 and 4 -> slices 0 and
+        // 6 are 2g-fragments; 1g covers everything free.
+        let mask = 0b000_0010u8;
+        assert_eq!(frag_slices(mask, MigProfile::P4g), 6);
+        assert_eq!(frag_slices(mask, MigProfile::P2g), 2);
+        assert_eq!(frag_slices(mask, MigProfile::P1g), 0);
+        // Empty GPU: 4g placements cover only slices 0-3 -> 4,5,6 are
+        // structural 4g-fragments; 7g covers all.
+        assert_eq!(frag_slices(0, MigProfile::P4g), 3);
+        assert_eq!(frag_slices(0, MigProfile::P7g), 0);
+        // Full GPU: nothing free, nothing fragmented.
+        assert_eq!(frag_slices(FULL_MASK, MigProfile::P1g), 0);
+    }
+
+    #[test]
+    fn release_by_profile_is_fungible() {
+        let mut g = MigGpu::new();
+        g.place(MigProfile::P1g, 0);
+        g.place(MigProfile::P1g, 3);
+        // Exact-start release of a stale start falls back at the caller
+        // level; by-profile release frees one of the two.
+        assert!(g.release(MigProfile::P1g, None));
+        assert_eq!(g.used_slices(), 1);
+        assert!(!g.release(MigProfile::P2g, None));
+    }
+
+    #[test]
+    fn repack_opens_room_for_ffd_hard_case() {
+        // {3g@0, 2g@4} blocks a second 2g (starts 0,2 overlap 3g@0; 4
+        // taken) even though 2 slices are free.
+        let mut g = MigGpu::new();
+        assert!(g.place(MigProfile::P3g, 0));
+        assert!(g.place(MigProfile::P2g, 4));
+        assert_eq!(g.can_place(MigProfile::P2g), None);
+        assert_eq!(g.free_slices(), 2);
+        let (plan, moved) = g.repack_plan(MigProfile::P2g).expect("repack must fit 3g+2g+2g");
+        assert!(moved > 0);
+        g.apply_repack(&plan);
+        assert_eq!(g.used_slices(), 5); // same residents, new starts
+        let s = g.can_place(MigProfile::P2g).expect("2g start open after repack");
+        assert!(g.place(MigProfile::P2g, s));
+        assert_eq!(g.free_slices(), 0);
+    }
+
+    #[test]
+    fn repack_noop_when_already_placeable() {
+        let mut g = MigGpu::new();
+        g.place(MigProfile::P1g, 0);
+        let (plan, moved) = g.repack_plan(MigProfile::P2g).unwrap();
+        assert_eq!(moved, 0);
+        g.apply_repack(&plan);
+        assert_eq!(g.can_place(MigProfile::P2g), Some(2));
+    }
+
+    #[test]
+    fn repack_refuses_when_capacity_short() {
+        let mut g = MigGpu::new();
+        g.place(MigProfile::P4g, 0);
+        assert!(g.repack_plan(MigProfile::P4g).is_none());
+        assert!(g.repack_plan(MigProfile::P7g).is_none());
+    }
+}

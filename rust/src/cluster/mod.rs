@@ -1,13 +1,16 @@
 //! The simulated GPU datacenter: hardware types, node state, the
-//! cluster-inventory generator reproducing the paper's Table II, and the
-//! aggregate [`datacenter::Datacenter`] state.
+//! A100-style MIG partition lattice ([`mig`]), the cluster-inventory
+//! generator reproducing the paper's Table II, and the aggregate
+//! [`datacenter::Datacenter`] state.
 
 pub mod datacenter;
 pub mod inventory;
+pub mod mig;
 pub mod node;
 pub mod types;
 
 pub use datacenter::Datacenter;
 pub use inventory::ClusterSpec;
+pub use mig::{MigGpu, MigInstance, MigProfile};
 pub use node::{Node, Placement, ResourceView};
 pub use types::{CpuModel, GpuModel};

@@ -1,6 +1,7 @@
 //! Node state: allocated/unallocated resource vectors (`R_n`, `Ra_n`),
 //! feasibility (Cond. 1–3 + constraints), placements and allocation.
 
+use crate::cluster::mig::{first_fit_start, window_mask, MigGpu, MigProfile, RepackPlan};
 use crate::cluster::types::{CpuModel, GpuModel};
 use crate::tasks::{GpuDemand, Task, NUM_BUCKETS};
 
@@ -18,6 +19,9 @@ pub enum Placement {
     Shared { gpu: usize },
     /// Takes these whole GPUs exclusively.
     Whole { gpus: Vec<usize> },
+    /// Occupies the MIG instance `(profile from the task, start)` on
+    /// GPU `gpu` of a MIG-enabled node.
+    MigSlice { gpu: usize, start: u8 },
 }
 
 /// Read-only view of a node's free resources. Implemented both by
@@ -38,6 +42,18 @@ pub trait ResourceView {
     fn n_gpus(&self) -> usize;
     /// Allocated fraction of GPU `g` (`Ra_{n,g}^GPU ∈ [0,1]`).
     fn gpu_alloc_of(&self, g: usize) -> f64;
+    /// MIG occupancy bitmask of GPU `g`, or `None` when the node is not
+    /// MIG-enabled. MIG nodes report `gpu_alloc_of = used_slices / 7`,
+    /// so every slice-free aggregate below stays consistent.
+    fn mig_mask_of(&self, _g: usize) -> Option<u8> {
+        None
+    }
+    /// True when the node's GPUs are MIG-partitioned. MIG nodes host
+    /// only [`GpuDemand::Mig`] (and CPU-only) tasks; fractional and
+    /// whole-GPU demands do not mix with a partitioned GPU.
+    fn is_mig(&self) -> bool {
+        false
+    }
 
     /// Free vCPUs (`R_n^CPU`).
     fn cpu_free(&self) -> f64 {
@@ -104,8 +120,17 @@ pub trait ResourceView {
                 }
                 match task.gpu {
                     GpuDemand::Zero => unreachable!(),
-                    GpuDemand::Frac(d) => self.largest_free() >= d - EPS,
-                    GpuDemand::Whole(k) => self.gpus_fully_free() >= k as usize,
+                    GpuDemand::Frac(d) => !self.is_mig() && self.largest_free() >= d - EPS,
+                    GpuDemand::Whole(k) => {
+                        !self.is_mig() && self.gpus_fully_free() >= k as usize
+                    }
+                    GpuDemand::Mig(p) => {
+                        self.is_mig()
+                            && (0..self.n_gpus()).any(|g| {
+                                self.mig_mask_of(g)
+                                    .is_some_and(|m| first_fit_start(m, p).is_some())
+                            })
+                    }
                 }
             }
         }
@@ -126,8 +151,13 @@ pub struct Node {
     pub cpu_alloc: f64,
     /// Allocated memory (MiB).
     pub mem_alloc: f64,
-    /// Per-GPU allocated fraction.
+    /// Per-GPU allocated fraction. On MIG nodes this mirrors
+    /// `mig[g].alloc_fraction()` (slices/7) so every fraction-based
+    /// aggregate (power Eq. 2 activity, GRAR caches, `u_n`) keeps
+    /// working at slice granularity.
     pub gpu_alloc: Vec<f64>,
+    /// MIG partition state per GPU; `None` for non-MIG nodes.
+    pub mig: Option<Vec<MigGpu>>,
     /// Number of resident tasks per Table-I bucket (used by the
     /// GpuClustering policy and by node-activity checks).
     pub bucket_mix: [u32; NUM_BUCKETS],
@@ -155,8 +185,31 @@ impl Node {
             cpu_alloc: 0.0,
             mem_alloc: 0.0,
             gpu_alloc: vec![0.0; n_gpus],
+            mig: None,
             bucket_mix: [0; NUM_BUCKETS],
             n_tasks: 0,
+        }
+    }
+
+    /// Turn the (empty) node's GPUs into MIG-partitioned devices.
+    pub fn enable_mig(&mut self) {
+        assert_eq!(self.n_tasks, 0, "enable MIG only on an empty node");
+        assert!(self.gpu_model.is_some(), "MIG requires GPUs");
+        self.mig = Some(vec![MigGpu::new(); self.gpu_alloc.len()]);
+    }
+
+    /// Plan a repack of GPU `gpu` that opens a legal start for
+    /// `profile` (see [`MigGpu::repack_plan`]); `None` on non-MIG
+    /// nodes or when the profile cannot fit.
+    pub fn mig_repack_plan(&self, gpu: usize, profile: MigProfile) -> Option<RepackPlan> {
+        self.mig.as_ref()?.get(gpu)?.repack_plan(profile)
+    }
+
+    /// Apply a plan from [`Self::mig_repack_plan`]. Slice counts are
+    /// unchanged, so `gpu_alloc` and the datacenter caches stay valid.
+    pub fn mig_apply_repack(&mut self, gpu: usize, plan: &[(usize, u8)]) {
+        if let Some(migs) = self.mig.as_mut() {
+            migs[gpu].apply_repack(plan);
         }
     }
 
@@ -192,6 +245,16 @@ impl Node {
                 debug_assert_eq!(free.len(), k as usize);
                 vec![Placement::Whole { gpus: free }]
             }
+            GpuDemand::Mig(p) => {
+                let Some(migs) = &self.mig else { return Vec::new() };
+                let mut out = Vec::new();
+                for (g, mg) in migs.iter().enumerate() {
+                    for s in mg.free_starts(p) {
+                        out.push(Placement::MigSlice { gpu: g, start: s });
+                    }
+                }
+                out
+            }
         }
     }
 
@@ -210,6 +273,13 @@ impl Node {
                     && gpus.iter().all(|&g| {
                         g < self.gpu_alloc.len() && self.gpu_free_of(g) >= 1.0 - EPS
                     })
+            }
+            (GpuDemand::Mig(p), Placement::MigSlice { gpu, start }) => {
+                self.mig.as_ref().is_some_and(|migs| {
+                    *gpu < migs.len()
+                        && p.legal_starts().contains(start)
+                        && migs[*gpu].mask & window_mask(p, *start) == 0
+                })
             }
             _ => false,
         }
@@ -232,6 +302,13 @@ impl Node {
                     self.gpu_alloc[g] = 1.0;
                 }
             }
+            Placement::MigSlice { gpu, start } => {
+                let GpuDemand::Mig(p) = task.gpu else { unreachable!("MigSlice needs Mig demand") };
+                let migs = self.mig.as_mut().expect("MigSlice on non-MIG node");
+                let ok = migs[*gpu].place(p, *start);
+                debug_assert!(ok, "illegal MIG placement");
+                self.gpu_alloc[*gpu] = migs[*gpu].alloc_fraction();
+            }
         }
         self.bucket_mix[task.gpu.bucket()] += 1;
         self.n_tasks += 1;
@@ -249,6 +326,21 @@ impl Node {
             Placement::Whole { gpus } => {
                 for &g in gpus {
                     self.gpu_alloc[g] = 0.0;
+                }
+            }
+            Placement::MigSlice { gpu, start } => {
+                if let (GpuDemand::Mig(p), Some(migs)) = (task.gpu, self.mig.as_mut()) {
+                    // Exact (gpu, start) first; a repack may have moved
+                    // the instance, so fall back to any instance of the
+                    // profile (same GPU, then node-wide) — instances of
+                    // equal profile are fungible.
+                    let released = migs[*gpu].release(p, Some(*start))
+                        || migs[*gpu].release(p, None)
+                        || (0..migs.len()).any(|j| migs[j].release(p, None));
+                    debug_assert!(released, "no MIG instance of {p} to release");
+                    for j in 0..migs.len() {
+                        self.gpu_alloc[j] = migs[j].alloc_fraction();
+                    }
                 }
             }
         }
@@ -289,6 +381,12 @@ impl ResourceView for Node {
     }
     fn gpu_alloc_of(&self, g: usize) -> f64 {
         self.gpu_alloc[g]
+    }
+    fn mig_mask_of(&self, g: usize) -> Option<u8> {
+        self.mig.as_ref().map(|m| m[g].mask)
+    }
+    fn is_mig(&self) -> bool {
+        self.mig.is_some()
     }
 }
 
@@ -337,7 +435,26 @@ impl ResourceView for Hypothetical<'_> {
                     base
                 }
             }
+            Placement::MigSlice { gpu, .. } => {
+                if *gpu == g {
+                    (base + self.task.gpu.units()).min(1.0)
+                } else {
+                    base
+                }
+            }
         }
+    }
+    fn mig_mask_of(&self, g: usize) -> Option<u8> {
+        let base = self.node.mig.as_ref().map(|m| m[g].mask)?;
+        Some(match (self.task.gpu, self.placement) {
+            (GpuDemand::Mig(p), Placement::MigSlice { gpu, start }) if *gpu == g => {
+                base | window_mask(p, *start)
+            }
+            _ => base,
+        })
+    }
+    fn is_mig(&self) -> bool {
+        self.node.mig.is_some()
     }
 }
 
@@ -483,5 +600,84 @@ mod tests {
             &Task::new(99, 0.5, 0.0, GpuDemand::Frac(0.1)),
             &Placement::Shared { gpu: 0 }
         ));
+    }
+
+    fn mig_node2() -> Node {
+        let mut n =
+            Node::new(0, CpuModel::XeonE5_2682V4, Some(GpuModel::G3), 128.0, 786_432.0, 2);
+        n.enable_mig();
+        n
+    }
+
+    #[test]
+    fn mig_demand_separation() {
+        use crate::cluster::mig::MigProfile;
+        let mig = mig_node2();
+        let plain = node8();
+        // MIG demand only fits MIG nodes; frac/whole only fit plain ones.
+        let t_mig = Task::new(0, 1.0, 0.0, GpuDemand::Mig(MigProfile::P2g));
+        assert!(mig.can_fit(&t_mig));
+        assert!(!plain.can_fit(&t_mig));
+        assert!(!mig.can_fit(&Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.5))));
+        assert!(!mig.can_fit(&Task::new(2, 1.0, 0.0, GpuDemand::Whole(1))));
+        // CPU-only fits both.
+        assert!(mig.can_fit(&Task::new(3, 1.0, 0.0, GpuDemand::Zero)));
+    }
+
+    #[test]
+    fn mig_alloc_release_roundtrip_keeps_mirror() {
+        use crate::cluster::mig::MigProfile;
+        let mut n = mig_node2();
+        let t = Task::new(1, 4.0, 1024.0, GpuDemand::Mig(MigProfile::P3g));
+        let ps = n.candidate_placements(&t);
+        // 2 GPUs × starts {4, 0} each.
+        assert_eq!(ps.len(), 4);
+        assert_eq!(ps[0], Placement::MigSlice { gpu: 0, start: 4 });
+        n.allocate(&t, &ps[0]);
+        assert!((n.gpu_alloc[0] - 3.0 / 7.0).abs() < EPS);
+        assert!((n.gpu_free_total() - (4.0 / 7.0 + 1.0)).abs() < EPS);
+        assert_eq!(n.n_tasks, 1);
+        n.deallocate(&t, &ps[0]);
+        assert_eq!(n.gpu_alloc[0], 0.0);
+        assert_eq!(n.mig.as_ref().unwrap()[0].mask, 0);
+        assert_eq!(n.n_tasks, 0);
+    }
+
+    #[test]
+    fn mig_release_survives_stale_start_after_repack() {
+        use crate::cluster::mig::MigProfile;
+        let mut n = mig_node2();
+        let t3 = Task::new(1, 1.0, 0.0, GpuDemand::Mig(MigProfile::P3g));
+        let t2 = Task::new(2, 1.0, 0.0, GpuDemand::Mig(MigProfile::P2g));
+        // Force the awkward layout {3g@0, 2g@4} directly.
+        n.allocate(&t3, &Placement::MigSlice { gpu: 0, start: 0 });
+        n.allocate(&t2, &Placement::MigSlice { gpu: 0, start: 4 });
+        let (plan, moved) = n.mig_repack_plan(0, MigProfile::P2g).unwrap();
+        assert!(moved > 0);
+        n.mig_apply_repack(0, &plan);
+        // The recorded placements now have stale starts; release must
+        // still free the instances (fungible within a profile).
+        n.deallocate(&t3, &Placement::MigSlice { gpu: 0, start: 0 });
+        n.deallocate(&t2, &Placement::MigSlice { gpu: 0, start: 4 });
+        assert_eq!(n.mig.as_ref().unwrap()[0].mask, 0);
+        assert_eq!(n.gpu_alloc[0], 0.0);
+    }
+
+    #[test]
+    fn mig_hypothetical_matches_committed() {
+        use crate::cluster::mig::MigProfile;
+        let mut n = mig_node2();
+        let t = Task::new(1, 4.0, 512.0, GpuDemand::Mig(MigProfile::P4g));
+        let p = Placement::MigSlice { gpu: 1, start: 0 };
+        {
+            let h = n.hypothetical(&t, &p);
+            assert!((h.gpu_alloc_of(1) - 4.0 / 7.0).abs() < EPS);
+            assert_eq!(h.mig_mask_of(1), Some(0b000_1111));
+            assert_eq!(h.mig_mask_of(0), Some(0));
+            assert!(h.is_mig());
+        }
+        n.allocate(&t, &p);
+        assert!((n.gpu_alloc_of(1) - 4.0 / 7.0).abs() < EPS);
+        assert_eq!(n.mig_mask_of(1), Some(0b000_1111));
     }
 }

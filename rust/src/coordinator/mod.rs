@@ -116,13 +116,21 @@ impl CoordinatorState {
     }
 }
 
-/// Parse a `submit` request body into a [`Task`].
+/// Parse a `submit` request body into a [`Task`]. A `"mig":"2g"`-style
+/// field requests one MIG instance instead of fraction/whole units.
 fn task_from_json(v: &Json) -> Result<Task, String> {
     let id = v.get("id").and_then(|x| x.as_u64()).ok_or("missing id")?;
     let cpu = v.get("cpu").and_then(|x| x.as_f64()).ok_or("missing cpu")?;
     let mem = v.get("mem").and_then(|x| x.as_f64()).unwrap_or(0.0);
-    let gpu_units = v.get("gpu").and_then(|x| x.as_f64()).unwrap_or(0.0);
-    let gpu = GpuDemand::from_units(gpu_units).ok_or("invalid gpu demand")?;
+    let gpu = match v.get("mig").and_then(|x| x.as_str()) {
+        Some(profile) => GpuDemand::Mig(
+            crate::cluster::mig::MigProfile::parse(profile).ok_or("unknown mig profile")?,
+        ),
+        None => {
+            let gpu_units = v.get("gpu").and_then(|x| x.as_f64()).unwrap_or(0.0);
+            GpuDemand::from_units(gpu_units).ok_or("invalid gpu demand")?
+        }
+    };
     let gpu_model = match v.get("gpu_model").and_then(|x| x.as_str()) {
         Some(s) => {
             Some(crate::cluster::types::GpuModel::parse(s).ok_or("unknown gpu_model")?)
@@ -154,6 +162,10 @@ pub fn handle_request(state: &Mutex<CoordinatorState>, line: &str) -> (Json, boo
                                 Json::Arr(gpus.iter().map(|&g| Json::Num(g as f64)).collect())
                             }
                             Placement::CpuOnly => Json::Null,
+                            Placement::MigSlice { gpu, start } => Json::Arr(vec![
+                                Json::Num(*gpu as f64),
+                                Json::Num(*start as f64),
+                            ]),
                         };
                         (
                             Json::obj(vec![
@@ -303,6 +315,28 @@ mod tests {
             handle_request(&st, r#"{"op":"submit","id":1,"cpu":4,"mem":0,"gpu":64}"#);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
         assert_eq!(st.lock().unwrap().failed, 1);
+    }
+
+    #[test]
+    fn mig_submit_release_roundtrip() {
+        let st = Mutex::new(CoordinatorState::new(
+            ClusterSpec::mig_cluster(2, 2, 0).build(),
+            PolicyKind::MigPwrFgd { alpha: 0.1 },
+            Workload::default(),
+        ));
+        let (resp, _) =
+            handle_request(&st, r#"{"op":"submit","id":1,"cpu":4,"mem":1024,"mig":"3g"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        // Placement reported as [gpu, start].
+        let arr = resp.get("gpu").and_then(|g| g.as_arr()).expect("slice placement");
+        assert_eq!(arr.len(), 2);
+        let (resp, _) = handle_request(&st, r#"{"op":"release","id":1}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(st.lock().unwrap().dc.n_tasks, 0);
+        // Unknown profile rejected.
+        let (resp, _) =
+            handle_request(&st, r#"{"op":"submit","id":2,"cpu":1,"mig":"5g"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]

@@ -130,6 +130,7 @@ impl Harness {
             target_ratio: self.cfg.target,
             record_frag: false,
             deterministic_ties: false,
+            mig_repartition: false,
         };
         let runs = run_repetitions(&self.cluster, trace, policy, &rcfg);
         let series: Vec<_> = runs.into_iter().map(|r| r.series).collect();
@@ -182,12 +183,13 @@ impl Harness {
             ),
             "ext-dynalpha" => self.ext_dynalpha(),
             "ext-steady" => self.ext_steady(),
+            "ext-mig" => self.ext_mig(),
             "ablation-tiebreak" => self.ablation_tiebreak(),
             "all" => {
                 let ids = [
                     "table1", "table2", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
                     "fig7", "fig8", "fig9", "fig10", "ext-dynalpha", "ext-steady",
-                    "ablation-tiebreak",
+                    "ext-mig", "ablation-tiebreak",
                 ];
                 let mut out = Vec::new();
                 for id in ids {
@@ -289,6 +291,122 @@ impl Harness {
         Ok(vec![path])
     }
 
+    /// Extension: the MIG partitioning subsystem end-to-end. Runs the
+    /// paper's inflation protocol over a MIG-partitioned A100-class
+    /// cluster with a slice-profile demand mix (MIG-aware BestFit /
+    /// SliceFit / FGD / PWR / PWR⊕FGD, online repartitioner attached),
+    /// emitting EOPC, slice-level fragmentation and GRAR series, plus a
+    /// steady-state churn loop with repartitioning counters.
+    fn ext_mig(&mut self) -> Result<Vec<String>> {
+        use crate::sim::events::{SteadyConfig, SteadySim};
+        use crate::sim::{run_repetitions, RepeatConfig};
+        let n_nodes = ((32.0 * self.cfg.scale).round() as usize).clamp(8, 64);
+        let cluster = ClusterSpec::mig_cluster(n_nodes, 8, n_nodes / 8);
+        let trace = TraceSpec::mig_trace(0.3);
+        let policies = [
+            PolicyKind::MigBestFit,
+            PolicyKind::MigSliceFit,
+            PolicyKind::MigFgd,
+            PolicyKind::MigPwr,
+            PolicyKind::MigPwrFgd { alpha: 0.1 },
+        ];
+        let rcfg = RepeatConfig {
+            reps: self.cfg.reps,
+            base_seed: self.cfg.seed,
+            target_ratio: self.cfg.target,
+            record_frag: true,
+            deterministic_ties: false,
+            mig_repartition: true,
+        };
+        let mut headers = vec!["x".to_string()];
+        headers.extend(policies.iter().map(|p| p.label()));
+        let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut eopc_cols = Vec::new();
+        let mut frag_cols = Vec::new();
+        let mut grar_cols = Vec::new();
+        let mut repart_rows = Vec::new();
+        for &policy in &policies {
+            eprintln!(
+                "[experiment] running {} / {} ({} reps, {} MIG nodes)…",
+                trace.name,
+                policy.label(),
+                rcfg.reps,
+                n_nodes
+            );
+            let runs = run_repetitions(&cluster, &trace, policy, &rcfg);
+            let reparts: f64 = runs.iter().map(|r| r.repartitions as f64).sum::<f64>()
+                / runs.len().max(1) as f64;
+            let slices: f64 = runs.iter().map(|r| r.migrated_slices as f64).sum::<f64>()
+                / runs.len().max(1) as f64;
+            repart_rows.push((policy.label(), reparts, slices));
+            let series: Vec<_> = runs.into_iter().map(|r| r.series).collect();
+            eopc_cols.push(average_on_grid(&series, Column::Eopc, &self.grid));
+            frag_cols.push(average_on_grid(&series, Column::Frag, &self.grid));
+            grar_cols.push(average_on_grid(&series, Column::Grar, &self.grid));
+        }
+        let mut out = Vec::new();
+        for (name, cols, scale) in [
+            ("ext_mig_eopc_kw.csv", &eopc_cols, 1e-3),
+            ("ext_mig_frag_gpus.csv", &frag_cols, 1.0),
+            ("ext_mig_grar.csv", &grar_cols, 1.0),
+        ] {
+            let path = self.out_path(name);
+            let mut w = CsvWriter::create(&path, &header_refs)?;
+            for (i, &x) in self.grid.iter().enumerate() {
+                let mut row = vec![x];
+                for c in cols {
+                    row.push(c[i] * scale);
+                }
+                w.row(&row)?;
+            }
+            w.flush()?;
+            out.push(path);
+        }
+        // Steady-state churn with the online repartitioner.
+        let path = self.out_path("ext_mig_steady.csv");
+        let mut w = CsvWriter::create(
+            &path,
+            &[
+                "policy", "steady_eopc_kw", "steady_util", "failure_rate",
+                "repartitions", "migrated_slices", "inflation_repartitions",
+                "inflation_migrated_slices",
+            ],
+        )?;
+        for (pi, &policy) in policies.iter().enumerate() {
+            let cfg = SteadyConfig {
+                mean_interarrival_s: 1.0,
+                mean_duration_s: 400.0,
+                horizon_s: 4_000.0,
+                sample_every_s: 50.0,
+                seed: self.cfg.seed,
+            };
+            let mut sim = SteadySim::new(
+                cluster.build(),
+                crate::sched::Scheduler::from_policy(policy),
+                &trace,
+                &cfg,
+            );
+            sim.repartitioner = Some(crate::sched::policies::MigRepartitioner::new(
+                crate::sched::policies::RepartitionConfig::default(),
+            ));
+            let r = sim.run(&cfg);
+            let (label, infl_reparts, infl_slices) = &repart_rows[pi];
+            w.row_str(&[
+                label.clone(),
+                format!("{:.1}", r.steady_eopc_w / 1e3),
+                format!("{:.4}", r.steady_util),
+                format!("{:.4}", r.failed as f64 / r.arrivals.max(1) as f64),
+                format!("{}", r.repartitions),
+                format!("{}", r.migrated_slices),
+                format!("{infl_reparts:.1}"),
+                format!("{infl_slices:.1}"),
+            ])?;
+        }
+        w.flush()?;
+        out.push(path);
+        Ok(out)
+    }
+
     /// Ablation: Kubernetes' random tie-break vs deterministic
     /// lowest-id selection. Shows how much of both FGD's EOPC *and*
     /// PWR's advantage rides on `selectHost` semantics.
@@ -306,6 +424,7 @@ impl Harness {
                 target_ratio: h.cfg.target,
                 record_frag: false,
                 deterministic_ties: det,
+                mig_repartition: false,
             };
             let runs = run_repetitions(&h.cluster, &trace, p, &rcfg);
             let series: Vec<_> = runs.into_iter().map(|r| r.series).collect();

@@ -17,7 +17,18 @@
 //!
 //! The node's expected fragmentation is `F_n(M) = Σ_m pop_m · F_n(m)`
 //! and the datacenter's is `F_dc = Σ_n F_n(M)` (Eq. 4).
+//!
+//! **MIG extension** (see [`crate::cluster::mig`]): for a class
+//! demanding a MIG profile `p` on a MIG-partitioned node, a free slice
+//! is a fragment iff no legal free placement of `p` could consume it
+//! ([`crate::cluster::mig::frag_slices`]), measured in GPU units
+//! (slices / 7). This reduces to the per-GPU rule above when the
+//! profile's windows cover every free slice, and additionally captures
+//! lattice fragmentation (e.g. slice 6 is unusable by any ≥2g profile).
+//! MIG classes on non-MIG nodes — and fractional/whole classes on MIG
+//! nodes — cannot run, so case 1 applies and every free unit fragments.
 
+use crate::cluster::mig::{self, MigProfile};
 use crate::cluster::node::{ResourceView, EPS};
 use crate::cluster::Datacenter;
 use crate::tasks::{GpuDemand, TaskClass, Workload};
@@ -48,6 +59,15 @@ pub fn f_node_class<V: ResourceView + ?Sized>(v: &V, class: &TaskClass) -> f64 {
                 let r = v.gpu_free_of(g);
                 if r > EPS && r < 1.0 - EPS {
                     frag += r;
+                }
+            }
+            frag
+        }
+        GpuDemand::Mig(p) => {
+            let mut frag = 0.0;
+            for g in 0..v.n_gpus() {
+                if let Some(mask) = v.mig_mask_of(g) {
+                    frag += mig::frag_slices(mask, p) as f64 / mig::MIG_SLICES as f64;
                 }
             }
             frag
@@ -86,8 +106,10 @@ struct PClass {
     mem: f64,
     /// Fractional demand (kind 1) or whole-GPU count (kind 2).
     d: f64,
-    /// 0 = CPU-only, 1 = fractional, 2 = whole.
+    /// 0 = CPU-only, 1 = fractional, 2 = whole, 3 = MIG profile.
     kind: u8,
+    /// MIG profile index (kind 3); 0 otherwise.
+    profile: u8,
     /// GPU-model constraint as an index; -1 = unconstrained.
     constraint: i8,
     pop: f64,
@@ -105,16 +127,18 @@ impl PreparedWorkload {
             .classes
             .iter()
             .map(|c| {
-                let (kind, d) = match c.gpu {
-                    GpuDemand::Zero => (0, 0.0),
-                    GpuDemand::Frac(d) => (1, d),
-                    GpuDemand::Whole(k) => (2, k as f64),
+                let (kind, d, profile) = match c.gpu {
+                    GpuDemand::Zero => (0, 0.0, 0u8),
+                    GpuDemand::Frac(d) => (1, d, 0),
+                    GpuDemand::Whole(k) => (2, k as f64, 0),
+                    GpuDemand::Mig(p) => (3, p.units(), p.index() as u8),
                 };
                 PClass {
                     cpu: c.cpu,
                     mem: c.mem,
                     d,
                     kind,
+                    profile,
                     constraint: c.gpu_model.map(|m| m.index() as i8).unwrap_or(-1),
                     pop: c.pop,
                 }
@@ -143,6 +167,12 @@ pub struct FragEval {
     partials: [f64; MAX_GPUS],
     npart: usize,
     partials_total: f64,
+    /// MIG state: set by [`FragEval::from_mig_masks`].
+    is_mig: bool,
+    /// Per-profile: some GPU has a legal free start.
+    mig_placeable: [bool; 5],
+    /// Per-profile: total fragment units (Σ_g frag_slices / 7).
+    mig_frag_units: [f64; 5],
 }
 
 impl FragEval {
@@ -157,6 +187,9 @@ impl FragEval {
             partials: [0.0; MAX_GPUS],
             npart: 0,
             partials_total: 0.0,
+            is_mig: false,
+            mig_placeable: [false; 5],
+            mig_frag_units: [0.0; 5],
         };
         for &r in resid {
             e.sumfree += r;
@@ -180,6 +213,34 @@ impl FragEval {
                 j -= 1;
             }
             e.partials[j] = x;
+        }
+        e
+    }
+
+    /// Build from the per-GPU MIG occupancy masks of a (possibly
+    /// hypothetical) MIG-node state. Residual aggregates are derived as
+    /// free-slice fractions; per-profile placeability and fragment
+    /// totals are precomputed so every class costs O(1) in
+    /// [`FragEval::f_node`].
+    pub fn from_mig_masks(masks: &[u8]) -> FragEval {
+        debug_assert!(masks.len() <= MAX_GPUS);
+        let mut resid = [0.0f64; MAX_GPUS];
+        for (r, &m) in resid.iter_mut().zip(masks) {
+            *r = (mig::MIG_SLICES - m.count_ones() as u8) as f64 / mig::MIG_SLICES as f64;
+        }
+        let mut e = FragEval::from_residuals(&resid[..masks.len()]);
+        e.is_mig = true;
+        for (pi, &p) in MigProfile::ALL.iter().enumerate() {
+            let mut frag = 0.0;
+            let mut placeable = false;
+            for &m in masks {
+                if mig::first_fit_start(m, p).is_some() {
+                    placeable = true;
+                }
+                frag += mig::frag_slices(m, p) as f64 / mig::MIG_SLICES as f64;
+            }
+            e.mig_placeable[pi] = placeable;
+            e.mig_frag_units[pi] = frag;
         }
         e
     }
@@ -211,10 +272,10 @@ impl FragEval {
                     _ => {
                         model_idx >= 0
                             && (c.constraint < 0 || c.constraint == model_idx)
-                            && if c.kind == 1 {
-                                self.maxfree >= c.d - EPS
-                            } else {
-                                self.nfull >= c.d - EPS
+                            && match c.kind {
+                                1 => !self.is_mig && self.maxfree >= c.d - EPS,
+                                2 => !self.is_mig && self.nfull >= c.d - EPS,
+                                _ => self.is_mig && self.mig_placeable[c.profile as usize],
                             }
                     }
                 };
@@ -224,7 +285,8 @@ impl FragEval {
                 match c.kind {
                     0 => 0.0,
                     1 => self.frag_frac(c.d),
-                    _ => self.partials_total,
+                    2 => self.partials_total,
+                    _ => self.mig_frag_units[c.profile as usize],
                 }
             };
             total += c.pop * f;
@@ -236,11 +298,23 @@ impl FragEval {
 /// Fast `F_n(M)` of a node's *current* state.
 pub fn f_node_fast(node: &crate::cluster::node::Node, pw: &PreparedWorkload) -> f64 {
     let g = node.gpu_alloc.len();
+    let model_idx = node.gpu_model.map(|m| m.index() as i8).unwrap_or(-1);
+    if let Some(migs) = &node.mig {
+        let mut masks = [0u8; MAX_GPUS];
+        for (m, mg) in masks.iter_mut().zip(migs) {
+            *m = mg.mask;
+        }
+        return FragEval::from_mig_masks(&masks[..g]).f_node(
+            node.cpu_free(),
+            node.mem_free(),
+            model_idx,
+            pw,
+        );
+    }
     let mut resid = [0.0f64; MAX_GPUS];
     for (j, r) in resid[..g].iter_mut().enumerate() {
         *r = 1.0 - node.gpu_alloc[j];
     }
-    let model_idx = node.gpu_model.map(|m| m.index() as i8).unwrap_or(-1);
     FragEval::from_residuals(&resid[..g]).f_node(node.cpu_free(), node.mem_free(), model_idx, pw)
 }
 
@@ -255,6 +329,23 @@ pub fn frag_delta_fast(
 ) -> f64 {
     use crate::cluster::node::Placement;
     let g = node.gpu_alloc.len();
+    let model_idx = node.gpu_model.map(|m| m.index() as i8).unwrap_or(-1);
+    if let Some(migs) = &node.mig {
+        let mut masks = [0u8; MAX_GPUS];
+        for (m, mg) in masks.iter_mut().zip(migs) {
+            *m = mg.mask;
+        }
+        if let (GpuDemand::Mig(p), Placement::MigSlice { gpu, start }) = (task.gpu, placement) {
+            masks[*gpu] |= mig::window_mask(p, *start);
+        }
+        let after = FragEval::from_mig_masks(&masks[..g]).f_node(
+            node.cpu_free() - task.cpu,
+            node.mem_free() - task.mem,
+            model_idx,
+            pw,
+        );
+        return after - before;
+    }
     let mut resid = [0.0f64; MAX_GPUS];
     for (j, r) in resid[..g].iter_mut().enumerate() {
         *r = 1.0 - node.gpu_alloc[j];
@@ -269,8 +360,10 @@ pub fn frag_delta_fast(
                 resid[j] = 0.0;
             }
         }
+        Placement::MigSlice { .. } => {
+            debug_assert!(false, "MigSlice placement on a non-MIG node");
+        }
     }
-    let model_idx = node.gpu_model.map(|m| m.index() as i8).unwrap_or(-1);
     let after = FragEval::from_residuals(&resid[..g]).f_node(
         node.cpu_free() - task.cpu,
         node.mem_free() - task.mem,
@@ -495,6 +588,100 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// MIG property test: the mask-based fast evaluator must match the
+    /// reference `f_node` on random partition states, mixed workloads
+    /// (MIG + frac + whole classes) and hypothetical slice placements.
+    #[test]
+    fn mig_fast_path_matches_reference() {
+        use crate::cluster::mig::MigProfile;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x316);
+        for trial in 0..200 {
+            let g = rng.range(1, 5);
+            let mut n = Node::new(
+                0,
+                CpuModel::XeonE5_2682V4,
+                Some(GpuModel::G3),
+                128.0,
+                786_432.0,
+                g,
+            );
+            n.enable_mig();
+            n.cpu_alloc = rng.range_f64(0.0, 100.0);
+            // Random legal partition per GPU.
+            for j in 0..g {
+                for _ in 0..rng.below(5) {
+                    let p = *rng.choice(&MigProfile::ALL);
+                    let migs = n.mig.as_mut().unwrap();
+                    if let Some(s) = migs[j].can_place(p) {
+                        migs[j].place(p, s);
+                        n.gpu_alloc[j] = migs[j].alloc_fraction();
+                    }
+                }
+            }
+            // Random mixed workload.
+            let mut classes = Vec::new();
+            for _ in 0..rng.range(1, 10) {
+                let gpu = match rng.below(4) {
+                    0 => GpuDemand::Zero,
+                    1 => GpuDemand::Frac(*rng.choice(&[0.25, 0.5, 0.75])),
+                    2 => GpuDemand::Whole(*rng.choice(&[1u32, 2])),
+                    _ => GpuDemand::Mig(*rng.choice(&MigProfile::ALL)),
+                };
+                classes.push(TaskClass {
+                    cpu: rng.range_f64(0.0, 64.0),
+                    mem: rng.range_f64(0.0, 400_000.0),
+                    gpu,
+                    gpu_model: if rng.bernoulli(0.2) {
+                        Some(*rng.choice(&[GpuModel::G3, GpuModel::T4]))
+                    } else {
+                        None
+                    },
+                    pop: rng.range_f64(0.01, 1.0),
+                });
+            }
+            let w = Workload { classes };
+            let pw = PreparedWorkload::new(&w);
+            let slow = f_node(&n, &w);
+            let fast = f_node_fast(&n, &pw);
+            assert!((slow - fast).abs() < 1e-9, "trial {trial}: {slow} vs {fast}");
+            // Hypothetical slice placements.
+            let task = Task::new(
+                trial,
+                rng.range_f64(0.0, 16.0),
+                rng.range_f64(0.0, 50_000.0),
+                GpuDemand::Mig(*rng.choice(&MigProfile::ALL)),
+            );
+            for p in n.candidate_placements(&task) {
+                let slow_d = {
+                    let h = n.hypothetical(&task, &p);
+                    f_node(&h, &w) - slow
+                };
+                let fast_d = frag_delta_fast(&n, &task, &p, &pw, fast);
+                assert!(
+                    (slow_d - fast_d).abs() < 1e-9,
+                    "trial {trial} {p:?}: {slow_d} vs {fast_d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mig_class_on_plain_node_is_case1() {
+        use crate::cluster::mig::MigProfile;
+        let n = node(4); // plain G2 node, 4 GPUs fully free
+        let m = class(1.0, GpuDemand::Mig(MigProfile::P2g), 1.0);
+        assert_eq!(f_node_class(&n, &m), 4.0);
+    }
+
+    #[test]
+    fn frac_class_on_mig_node_is_case1() {
+        let mut n = Node::new(0, CpuModel::XeonE5_2682V4, Some(GpuModel::G3), 128.0, 786_432.0, 2);
+        n.enable_mig();
+        let m = class(1.0, GpuDemand::Frac(0.5), 1.0);
+        assert_eq!(f_node_class(&n, &m), 2.0); // both free GPUs stranded
     }
 
     #[test]

@@ -13,11 +13,20 @@
 //! fragmentation delta over all nodes × GPUs × task classes) — is also
 //! implemented as a JAX/Pallas program AOT-lowered to HLO and executed
 //! from Rust through the PJRT C API (see [`runtime`] and
-//! `python/compile/`). The native scorer in [`sched`] and the XLA scorer
-//! must agree; integration tests assert this.
+//! `python/compile/`; requires the `xla` cargo feature). The native
+//! scorer in [`sched`] and the XLA scorer must agree; integration tests
+//! assert this.
+//!
+//! Beyond the paper, the crate models **MIG partitioning**
+//! (`docs/mig.md`): an A100-style slice lattice on [`cluster::mig`],
+//! slice-granular demands ([`tasks::GpuDemand::Mig`]) and placements,
+//! slice-level fragmentation ([`frag`]) and per-slice power attribution
+//! ([`power`]), MIG-aware policies with an online repartitioner
+//! ([`sched::policies::mig`]), and the `ext-mig` experiment.
 //!
 //! ## Layer map
-//! * L3 (this crate): coordinator, simulator, policies, experiments.
+//! * L3 (this crate): coordinator, simulator, policies (incl. the MIG
+//!   family + repartitioner), experiments.
 //! * L2 (`python/compile/model.py`): the scoring graph, lowered once to
 //!   `artifacts/*.hlo.txt`.
 //! * L1 (`python/compile/kernels/score.py`): the Pallas scoring kernel.

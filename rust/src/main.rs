@@ -2,8 +2,9 @@
 //!
 //! ```text
 //! repro simulate   --policy pwrfgd:0.1 --trace default --seed 42 [--scale 0.25] [--target 1.02]
-//! repro experiment <table1|table2|fig1..fig10|all> [--reps 10] [--scale 1.0] [--out results]
-//! repro trace      <default|multi-gpu-20|sharing-gpu-100|...> [--seed 42]
+//! repro experiment <table1|table2|fig1..fig10|ext-mig|all> [--reps 10] [--scale 1.0] [--out results]
+//! repro ext-mig    [--reps 10] [--scale 1.0] [--out results]   (MIG subsystem end-to-end)
+//! repro trace      <default|multi-gpu-20|sharing-gpu-100|mig-30|...> [--seed 42]
 //! repro inventory
 //! repro serve      [--addr 127.0.0.1:7077] [--policy pwrfgd:0.1]
 //! repro scorer-check [--artifacts artifacts] [--tasks 200]   (XLA vs native parity)
@@ -27,7 +28,9 @@ fn main() -> Result<()> {
     let args = parse_args(std::env::args().skip(1), VALUE_KEYS);
     match args.subcommand.as_deref() {
         Some("simulate") => cmd_simulate(&args),
-        Some("experiment") => cmd_experiment(&args),
+        Some("experiment") => cmd_experiment(&args, None),
+        // Shortcut: `repro ext-mig` runs the MIG-subsystem experiment.
+        Some("ext-mig") => cmd_experiment(&args, Some("ext-mig")),
         Some("trace") => cmd_trace(&args),
         Some("inventory") => cmd_inventory(),
         Some("serve") => cmd_serve(&args),
@@ -35,7 +38,7 @@ fn main() -> Result<()> {
         Some("plot") => cmd_plot(&args),
         _ => {
             eprintln!(
-                "usage: repro <simulate|experiment|trace|inventory|serve|scorer-check|plot> [options]\n\
+                "usage: repro <simulate|experiment|ext-mig|trace|inventory|serve|scorer-check|plot> [options]\n\
                  see rust/src/main.rs header for details"
             );
             Ok(())
@@ -145,12 +148,15 @@ fn cmd_simulate(args: &repro::util::cli::Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_experiment(args: &repro::util::cli::Args) -> Result<()> {
-    let id = args
-        .positional
-        .first()
-        .cloned()
-        .unwrap_or_else(|| "all".to_string());
+fn cmd_experiment(args: &repro::util::cli::Args, forced_id: Option<&str>) -> Result<()> {
+    let id = match forced_id {
+        Some(id) => id.to_string(),
+        None => args
+            .positional
+            .first()
+            .cloned()
+            .unwrap_or_else(|| "all".to_string()),
+    };
     let cfg = ExpConfig {
         reps: args.get_usize("reps", 10),
         seed: args.get_u64("seed", 42),

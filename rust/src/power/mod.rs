@@ -7,9 +7,42 @@
 //!   (GPU-sharing tasks may opportunistically use the whole device),
 //!   otherwise `p_idle`.
 //! * Eq. 3 — datacenter power: `P = Σ_n p(n)` — the EOPC metric.
+//!
+//! **MIG extension (Eq. 2-MIG)**: unlike an opportunistically-shared
+//! GPU, a MIG instance is hard-partitioned and cannot burst beyond its
+//! slices, so a partitioned GPU draws power *per slice* rather than
+//! jumping to `p_max` on first touch (Lipe et al.'s per-slice energy
+//! accounting, arXiv 2606.25082). With `a` of the 7 slices active on a
+//! powered GPU:
+//!
+//! `p = p_idle + (p_max − p_idle) · (a + κ·(7 − a)) / 7`,
+//!
+//! where `κ =` [`MIG_IDLE_SLICE_FACTOR`] attributes the residual draw
+//! of idle-but-powered slices (uncore/HBM overhead). A fully-idle
+//! unpartitioned-or-empty GPU draws `p_idle`; a fully-occupied one
+//! draws `p_max`. Packing slices onto already-powered GPUs is therefore
+//! strictly cheaper than waking a fresh GPU — the signal the MIG-aware
+//! PWR policies descend.
 
 use crate::cluster::node::ResourceView;
+use crate::cluster::types::GpuModel;
 use crate::cluster::Datacenter;
+
+/// κ in Eq. 2-MIG: share of a slice's dynamic power an idle slice on a
+/// powered GPU still draws.
+pub const MIG_IDLE_SLICE_FACTOR: f64 = 0.2;
+
+/// Eq. 2-MIG: power of one MIG-partitioned GPU with occupancy `mask`.
+pub fn p_gpu_mig(model: GpuModel, mask: u8) -> f64 {
+    let active = mask.count_ones() as f64;
+    if active == 0.0 {
+        return model.p_idle();
+    }
+    let total = crate::cluster::mig::MIG_SLICES as f64;
+    let idle = total - active;
+    model.p_idle()
+        + (model.p_max() - model.p_idle()) * (active + MIG_IDLE_SLICE_FACTOR * idle) / total
+}
 
 /// CPU power of a node view (Eq. 1), in Watt.
 pub fn p_cpu<V: ResourceView + ?Sized>(v: &V) -> f64 {
@@ -20,13 +53,23 @@ pub fn p_cpu<V: ResourceView + ?Sized>(v: &V) -> f64 {
     model.p_max() * used_sockets + model.p_idle() * idle_sockets
 }
 
-/// GPU power of a node view (Eq. 2), in Watt.
+/// GPU power of a node view (Eq. 2; Eq. 2-MIG per partitioned GPU), in
+/// Watt.
 pub fn p_gpu<V: ResourceView + ?Sized>(v: &V) -> f64 {
     let Some(model) = v.gpu_model() else { return 0.0 };
     let (p_max, p_idle) = (model.p_max(), model.p_idle());
     let mut total = 0.0;
     for g in 0..v.n_gpus() {
-        total += if v.gpu_alloc_of(g) > 0.0 { p_max } else { p_idle };
+        total += match v.mig_mask_of(g) {
+            Some(mask) => p_gpu_mig(model, mask),
+            None => {
+                if v.gpu_alloc_of(g) > 0.0 {
+                    p_max
+                } else {
+                    p_idle
+                }
+            }
+        };
     }
     total
 }
@@ -157,6 +200,60 @@ mod tests {
         // 94 vCPU -> floor(94/32)=2 idle sockets... (2.9375 sockets: the
         // fractional socket is neither ceil'd as used nor floor'd idle).
         assert_eq!(p_cpu(&n), 30.0);
+    }
+
+    #[test]
+    fn mig_power_is_slice_attributable() {
+        use crate::cluster::mig::{window_mask, MigProfile};
+        // Empty partitioned GPU: idle power only.
+        assert_eq!(p_gpu_mig(GpuModel::G3, 0), 50.0);
+        // Fully occupied (7g): exactly p_max.
+        assert!((p_gpu_mig(GpuModel::G3, 0x7F) - 400.0).abs() < 1e-9);
+        // 2 active slices: idle + range·(2 + 0.2·5)/7.
+        let mask = window_mask(MigProfile::P2g, 0);
+        let expect = 50.0 + 350.0 * (2.0 + 0.2 * 5.0) / 7.0;
+        assert!((p_gpu_mig(GpuModel::G3, mask) - expect).abs() < 1e-9);
+        // Monotone in active slices, bounded by [p_idle, p_max].
+        let mut prev = 50.0;
+        for a in 1..=7u8 {
+            let m = ((1u16 << a) - 1) as u8;
+            let p = p_gpu_mig(GpuModel::G3, m);
+            assert!(p > prev && p <= 400.0 + 1e-9, "a={a}: {p}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn mig_node_power_via_view_and_hypothetical() {
+        use crate::cluster::mig::MigProfile;
+        use crate::tasks::GpuDemand;
+        let mut n = Node::new(0, CpuModel::XeonE5_2682V4, Some(GpuModel::G3), 128.0, 786_432.0, 2);
+        n.enable_mig();
+        // Idle MIG node: both GPUs at p_idle.
+        assert_eq!(p_gpu(&n), 100.0);
+        let t = Task::new(1, 4.0, 1024.0, GpuDemand::Mig(MigProfile::P3g));
+        let p = Placement::MigSlice { gpu: 0, start: 4 };
+        let before = p_node(&n);
+        let delta = {
+            let h = n.hypothetical(&t, &p);
+            p_node(&h) - before
+        };
+        n.allocate(&t, &p);
+        assert!((p_node(&n) - before - delta).abs() < 1e-9);
+        // GPU Δ: 350·(3 + 0.2·4)/7 = 190 W; CPU Δ: one socket idle→max.
+        assert!((delta - (350.0 * (3.0 + 0.8) / 7.0 + 105.0)).abs() < 1e-9);
+        // Packing a second instance onto the powered GPU is cheaper
+        // than waking the idle one.
+        let t2 = Task::new(2, 1.0, 0.0, GpuDemand::Mig(MigProfile::P2g));
+        let d_packed = {
+            let h = n.hypothetical(&t2, &Placement::MigSlice { gpu: 0, start: 0 });
+            p_node(&h) - p_node(&n)
+        };
+        let d_fresh = {
+            let h = n.hypothetical(&t2, &Placement::MigSlice { gpu: 1, start: 0 });
+            p_node(&h) - p_node(&n)
+        };
+        assert!(d_packed < d_fresh, "packed {d_packed} vs fresh {d_fresh}");
     }
 
     #[test]

@@ -30,7 +30,6 @@
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::node::{Placement, ResourceView, EPS};
-use crate::cluster::types::GpuModel;
 use crate::cluster::Datacenter;
 use crate::runtime::{Artifact, Runtime};
 use crate::sched::framework::Decision;
@@ -67,6 +66,7 @@ pub const NEG_INF_SCORE: f32 = -1.0e9;
 
 /// The XLA-backed scorer with reusable host buffers.
 pub struct XlaScorer {
+    #[cfg_attr(not(feature = "xla"), allow(dead_code))]
     artifact: Artifact,
     pub config: ScorerConfig,
     // Reused encode buffers (hot path: no per-decision allocation).
@@ -161,6 +161,7 @@ impl XlaScorer {
     }
 
     /// Run the compiled scoring pass for one task.
+    #[cfg(feature = "xla")]
     pub fn score(&mut self, task: &Task, alpha: f64) -> Result<ScoreOutput> {
         self.encode_task(task);
         let (n, g, m) = (self.config.n as i64, self.config.g as i64, self.config.m as i64);
@@ -180,6 +181,15 @@ impl XlaScorer {
             best_gpu: out[1].to_vec::<f32>()?,
             feasible: out[2].to_vec::<f32>()?,
         })
+    }
+
+    /// Run the compiled scoring pass for one task (stub: the artifact
+    /// cannot execute without the `xla` feature; `XlaScorer::load`
+    /// already fails earlier in such builds, this keeps the API total).
+    #[cfg(not(feature = "xla"))]
+    pub fn score(&mut self, task: &Task, _alpha: f64) -> Result<ScoreOutput> {
+        self.encode_task(task);
+        bail!("XLA scorer unavailable: built without the `xla` cargo feature")
     }
 
     /// Full decision: encode state, execute, arg-max (ties → lowest node
@@ -237,6 +247,9 @@ pub fn decode_decision(dc: &Datacenter, task: &Task, out: &ScoreOutput) -> Optio
             }
             Placement::Whole { gpus }
         }
+        // The AOT artifact's dense encoding predates the MIG subsystem;
+        // MIG demands go through the native scheduler only.
+        GpuDemand::Mig(_) => return None,
     };
     Some(Decision { node: node_id, placement })
 }

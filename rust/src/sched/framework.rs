@@ -311,7 +311,11 @@ pub fn normalize_scores(scores: &mut [f64]) {
 /// Candidate placements with equivalence dedup: for fractional tasks,
 /// GPUs with the same free fraction are interchangeable for every
 /// plugin metric (power, fragmentation, packing) — keep the lowest
-/// index per distinct residual. Whole-GPU placements are already
+/// index per distinct residual. For MIG tasks, GPUs in the identical
+/// partition state (same occupancy mask) are likewise interchangeable —
+/// keep the lowest-index GPU per distinct mask, with all of its legal
+/// starts (starts on one GPU are *not* equivalent: each blocks
+/// different future windows). Whole-GPU placements are already
 /// canonical.
 pub fn dedup_placements(node: &Node, task: &Task) -> Vec<Placement> {
     match task.gpu {
@@ -327,6 +331,21 @@ pub fn dedup_placements(node: &Node, task: &Task) -> Vec<Placement> {
                 if !seen.contains(&key) {
                     seen.push(key);
                     out.push(Placement::Shared { gpu: g });
+                }
+            }
+            out
+        }
+        GpuDemand::Mig(p) => {
+            let Some(migs) = &node.mig else { return Vec::new() };
+            let mut seen: Vec<u8> = Vec::with_capacity(4);
+            let mut out = Vec::new();
+            for (g, mg) in migs.iter().enumerate() {
+                if seen.contains(&mg.mask) {
+                    continue;
+                }
+                seen.push(mg.mask);
+                for s in mg.free_starts(p) {
+                    out.push(Placement::MigSlice { gpu: g, start: s });
                 }
             }
             out
@@ -428,13 +447,18 @@ fn bind_placement(
     }
 }
 
-/// Best-fit on GPU residual: least leftover after placing.
+/// Best-fit on GPU residual: least leftover after placing. For MIG
+/// placements the residual is the target GPU's free-slice fraction, so
+/// instances pack onto the fullest GPU that still has a legal start
+/// (ties → the profile's preferred start order).
 fn best_fit_gpu(node: &Node, placements: &[Placement]) -> Placement {
     let mut best = 0;
     let mut best_free = f64::INFINITY;
     for (i, p) in placements.iter().enumerate() {
         let free = match p {
-            Placement::Shared { gpu } => node.gpu_free_of(*gpu),
+            Placement::Shared { gpu } | Placement::MigSlice { gpu, .. } => {
+                node.gpu_free_of(*gpu)
+            }
             _ => return p.clone(), // whole/CPU placements are canonical
         };
         if free < best_free - EPS {
@@ -475,6 +499,23 @@ mod tests {
         let ps = dedup_placements(&node, &Task::new(3, 1.0, 0.0, GpuDemand::Frac(0.25)));
         // distinct residuals: 1.0 (gpu0) and 0.5 (gpu1) -> 2 candidates
         assert_eq!(ps.len(), 2);
+    }
+
+    #[test]
+    fn dedup_groups_identical_mig_masks() {
+        use crate::cluster::mig::MigProfile;
+        let mut node =
+            Node::new(0, CpuModel::XeonE5_2682V4, Some(GpuModel::G3), 128.0, 786_432.0, 4);
+        node.enable_mig();
+        // All four GPUs empty -> one representative GPU, 7 starts for 1g.
+        let t1g = Task::new(0, 1.0, 0.0, GpuDemand::Mig(MigProfile::P1g));
+        assert_eq!(dedup_placements(&node, &t1g).len(), 7);
+        // Partition GPU 2 -> two distinct masks -> starts from two GPUs.
+        node.allocate(&t1g, &Placement::MigSlice { gpu: 2, start: 0 });
+        let ps = dedup_placements(&node, &t1g);
+        assert_eq!(ps.len(), 7 + 6);
+        assert!(ps.iter().all(|p| matches!(p,
+            Placement::MigSlice { gpu, .. } if *gpu == 0 || *gpu == 2)));
     }
 
     #[test]

@@ -40,11 +40,27 @@ pub enum PolicyKind {
     FirstFit,
     /// Uniformly random feasible node.
     Random,
+    /// MIG-aware best-fit: node-level best-fit scoring over slice
+    /// placements, slice best-fit binding (see
+    /// [`crate::sched::policies::mig`]).
+    MigBestFit,
+    /// MIG-aware slice-fit: a genuinely slice-granular packing plugin
+    /// (fullest-GPU-first with powered-GPU preference).
+    MigSliceFit,
+    /// FGD over the slice-level fragmentation metric.
+    MigFgd,
+    /// PWR over the per-slice power model (Eq. 2-MIG).
+    MigPwr,
+    /// The paper's combination on MIG clusters: `α·PWR + (1−α)·FGD`
+    /// over (node, GPU, profile, start) placements.
+    MigPwrFgd { alpha: f64 },
 }
 
 impl PolicyKind {
     /// Parse a CLI policy name: `fgd`, `pwr`, `pwrfgd:0.1`, `bestfit`,
-    /// `dotprod`, `gpupacking`, `gpuclustering`, `firstfit`, `random`.
+    /// `dotprod`, `gpupacking`, `gpuclustering`, `firstfit`, `random`,
+    /// plus the MIG family `mig-bestfit`, `mig-slicefit`, `mig-fgd`,
+    /// `mig-pwr`, `mig-pwrfgd:0.1`.
     pub fn parse(s: &str) -> Option<PolicyKind> {
         let lower = s.to_ascii_lowercase();
         if let Some(rest) = lower.strip_prefix("pwrfgddyn:") {
@@ -57,6 +73,9 @@ impl PolicyKind {
         if let Some(alpha) = lower.strip_prefix("pwrfgd:") {
             return alpha.parse().ok().map(|alpha| PolicyKind::PwrFgd { alpha });
         }
+        if let Some(alpha) = lower.strip_prefix("mig-pwrfgd:") {
+            return alpha.parse().ok().map(|alpha| PolicyKind::MigPwrFgd { alpha });
+        }
         match lower.as_str() {
             "fgd" => Some(PolicyKind::Fgd),
             "pwr" => Some(PolicyKind::Pwr),
@@ -66,6 +85,10 @@ impl PolicyKind {
             "gpuclustering" => Some(PolicyKind::GpuClustering),
             "firstfit" => Some(PolicyKind::FirstFit),
             "random" => Some(PolicyKind::Random),
+            "mig-bestfit" => Some(PolicyKind::MigBestFit),
+            "mig-slicefit" => Some(PolicyKind::MigSliceFit),
+            "mig-fgd" => Some(PolicyKind::MigFgd),
+            "mig-pwr" => Some(PolicyKind::MigPwr),
             _ => None,
         }
     }
@@ -85,6 +108,15 @@ impl PolicyKind {
             PolicyKind::GpuClustering => "GpuClustering".into(),
             PolicyKind::FirstFit => "FirstFit".into(),
             PolicyKind::Random => "Random".into(),
+            PolicyKind::MigBestFit => "MIG-BestFit".into(),
+            PolicyKind::MigSliceFit => "MIG-SliceFit".into(),
+            PolicyKind::MigFgd => "MIG-FGD".into(),
+            PolicyKind::MigPwr => "MIG-PWR".into(),
+            PolicyKind::MigPwrFgd { alpha } => format!(
+                "MIG-PWR{:.0}+FGD{:.0}",
+                alpha * 1000.0,
+                (1.0 - alpha) * 1000.0
+            ),
         }
     }
 }
@@ -104,6 +136,13 @@ mod tests {
         );
         assert_eq!(PolicyKind::parse("pwrfgddyn:0.5"), None);
         assert_eq!(PolicyKind::parse("nope"), None);
+        assert_eq!(PolicyKind::parse("mig-fgd"), Some(PolicyKind::MigFgd));
+        assert_eq!(
+            PolicyKind::parse("MIG-PWRFGD:0.1"),
+            Some(PolicyKind::MigPwrFgd { alpha: 0.1 })
+        );
+        assert_eq!(PolicyKind::parse("mig-bestfit"), Some(PolicyKind::MigBestFit));
+        assert_eq!(PolicyKind::parse("mig-nope"), None);
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! The MIG-aware policy family and the greedy online repartitioner.
+//!
+//! The cluster, fragmentation and power layers are slice-aware (see
+//! [`crate::cluster::mig`], [`crate::frag`], [`crate::power`]), so the
+//! existing PWR/FGD/BestFit score plugins transparently evaluate
+//! `(node, GPU, profile, start)` placements; the
+//! [`crate::sched::PolicyKind`] `Mig*` variants wire them with
+//! slice-aware binders. This module adds the two genuinely new pieces:
+//!
+//! * [`MigSliceFitPlugin`] — slice-granular packing: prefer the node
+//!   whose best candidate GPU is left with the fewest free slices,
+//!   nudged toward GPUs that are already powered (Eq. 2-MIG makes those
+//!   strictly cheaper to extend).
+//! * [`MigRepartitioner`] — a greedy online defragmenter: when a MIG
+//!   task cannot be placed anywhere, find the cheapest single-GPU
+//!   repack (first-fit-decreasing over the partition lattice) that
+//!   opens a legal start for the profile, apply it, and let the
+//!   scheduler retry. Each repack migrates running instances between
+//!   slice offsets; the configurable migration cost caps how many
+//!   slices one event may move and how many may move over a whole run,
+//!   mirroring the repartitioning budget of Lipe et al.
+
+use crate::cluster::mig::MigProfile;
+use crate::cluster::node::{Node, Placement, ResourceView, EPS};
+use crate::cluster::Datacenter;
+use crate::sched::framework::{Decision, SchedCtx, Scheduler, ScorePlugin};
+use crate::tasks::{GpuDemand, Task, Workload};
+
+/// Slice-granular packing plugin (see module docs).
+pub struct MigSliceFitPlugin;
+
+/// Score bonus for extending an already-powered GPU (in free-slice
+/// units; one slice is 1/7 ≈ 0.143, so this breaks equal-residual ties
+/// without overriding a one-slice packing difference).
+const POWERED_BONUS: f64 = 0.05;
+
+impl ScorePlugin for MigSliceFitPlugin {
+    fn name(&self) -> &'static str {
+        "MIG-SliceFit"
+    }
+
+    fn score(&self, _ctx: &SchedCtx, node: &Node, task: &Task, placements: &[Placement]) -> f64 {
+        let mut best = f64::NEG_INFINITY;
+        for p in placements {
+            let s = match p {
+                Placement::MigSlice { gpu, .. } => {
+                    let left = node.gpu_free_of(*gpu) - task.gpu.units();
+                    let powered = node.gpu_alloc[*gpu] > EPS;
+                    -left + if powered { POWERED_BONUS } else { 0.0 }
+                }
+                // Non-MIG placements (CPU-only tasks routed through
+                // this plugin): neutral.
+                _ => 0.0,
+            };
+            if s > best {
+                best = s;
+            }
+        }
+        best
+    }
+}
+
+/// Migration-cost model for online repartitioning.
+#[derive(Clone, Copy, Debug)]
+pub struct RepartitionConfig {
+    /// Most slices one repack may migrate (a 7-slice GPU can move at
+    /// most 6 — something must stay for the repack to matter).
+    pub max_moved_slices: u32,
+    /// Total slice-migration budget for the run; `u64::MAX` ⇒ unbounded.
+    pub budget_slices: u64,
+}
+
+impl Default for RepartitionConfig {
+    fn default() -> Self {
+        RepartitionConfig { max_moved_slices: 6, budget_slices: u64::MAX }
+    }
+}
+
+/// Cumulative repartitioning activity.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RepartitionStats {
+    /// Repacks applied.
+    pub repartitions: u64,
+    /// Slices migrated across all repacks.
+    pub migrated_slices: u64,
+    /// Placement failures no affordable repack could fix.
+    pub exhausted: u64,
+}
+
+/// Greedy online repartitioner (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct MigRepartitioner {
+    pub cfg: RepartitionConfig,
+    pub stats: RepartitionStats,
+}
+
+impl MigRepartitioner {
+    pub fn new(cfg: RepartitionConfig) -> MigRepartitioner {
+        MigRepartitioner { cfg, stats: RepartitionStats::default() }
+    }
+
+    /// Try to open room for `task` (a MIG demand) somewhere in the
+    /// datacenter: among all nodes where the task fits on CPU/MEM and
+    /// the model constraint, pick the GPU whose repack migrates the
+    /// fewest slices, apply it, and return the node id (the caller must
+    /// `notify_node_changed` and re-run the scheduler). `None` when the
+    /// demand is not MIG, nothing needs or affords a repack, or the
+    /// migration budget is exhausted.
+    pub fn try_make_room(&mut self, dc: &mut Datacenter, task: &Task) -> Option<usize> {
+        let GpuDemand::Mig(profile) = task.gpu else { return None };
+        let best = self.cheapest_repack(dc, task, profile);
+        match best {
+            Some((node_id, gpu, plan, moved)) => {
+                dc.nodes[node_id].mig_apply_repack(gpu, &plan);
+                self.stats.repartitions += 1;
+                self.stats.migrated_slices += moved as u64;
+                Some(node_id)
+            }
+            None => {
+                self.stats.exhausted += 1;
+                None
+            }
+        }
+    }
+
+    /// The cheapest affordable repack candidate, if any.
+    fn cheapest_repack(
+        &self,
+        dc: &Datacenter,
+        task: &Task,
+        profile: MigProfile,
+    ) -> Option<(usize, usize, Vec<(usize, u8)>, u32)> {
+        let budget_left = self
+            .cfg
+            .budget_slices
+            .saturating_sub(self.stats.migrated_slices);
+        let mut best: Option<(usize, usize, Vec<(usize, u8)>, u32)> = None;
+        for node in &dc.nodes {
+            let Some(migs) = &node.mig else { continue };
+            if task.cpu > node.cpu_free() + EPS || task.mem > node.mem_free() + EPS {
+                continue;
+            }
+            if let Some(required) = task.gpu_model {
+                if node.gpu_model != Some(required) {
+                    continue;
+                }
+            }
+            for (g, mg) in migs.iter().enumerate() {
+                if mg.can_place(profile).is_some() {
+                    // The scheduler can already use this GPU; a repack
+                    // would be pointless.
+                    continue;
+                }
+                if mg.free_slices() < profile.slices() {
+                    continue;
+                }
+                if let Some((plan, moved)) = mg.repack_plan(profile) {
+                    let affordable = moved > 0
+                        && moved <= self.cfg.max_moved_slices
+                        && (moved as u64) <= budget_left;
+                    let better = match &best {
+                        None => true,
+                        Some(b) => moved < b.3,
+                    };
+                    if affordable && better {
+                        best = Some((node.id, g, plan, moved));
+                    }
+                }
+            }
+        }
+        best
+    }
+}
+
+/// Schedule `task`, falling back to one repack-and-retry when it fails
+/// and a repartitioner is attached — the shared protocol of the
+/// inflation ([`crate::sim::Simulation`]) and churn
+/// ([`crate::sim::events::SteadySim`]) loops.
+pub fn schedule_with_repartition(
+    sched: &mut Scheduler,
+    dc: &mut Datacenter,
+    repartitioner: Option<&mut MigRepartitioner>,
+    workload: &Workload,
+    task: &Task,
+) -> Option<Decision> {
+    if let Some(d) = sched.schedule(dc, workload, task) {
+        return Some(d);
+    }
+    let node_id = repartitioner?.try_make_room(dc, task)?;
+    sched.notify_node_changed(node_id);
+    sched.schedule(dc, workload, task)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::sched::PolicyKind;
+
+    fn mig_task(id: u64, p: MigProfile) -> Task {
+        Task::new(id, 2.0, 1024.0, GpuDemand::Mig(p))
+    }
+
+    #[test]
+    fn mig_policies_schedule_slice_tasks() {
+        let dc = ClusterSpec::mig_cluster(4, 4, 0).build();
+        let w = Workload::default();
+        for kind in [
+            PolicyKind::MigBestFit,
+            PolicyKind::MigSliceFit,
+            PolicyKind::MigFgd,
+            PolicyKind::MigPwr,
+            PolicyKind::MigPwrFgd { alpha: 0.1 },
+        ] {
+            let mut s = Scheduler::from_policy(kind);
+            let d = s.schedule(&dc, &w, &mig_task(0, MigProfile::P3g)).expect("fits");
+            assert!(matches!(d.placement, Placement::MigSlice { .. }));
+            assert!(dc.nodes[d.node].placement_fits(&mig_task(0, MigProfile::P3g), &d.placement));
+        }
+    }
+
+    #[test]
+    fn slicefit_packs_partial_gpu() {
+        let mut dc = ClusterSpec::mig_cluster(2, 2, 0).build();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(PolicyKind::MigSliceFit);
+        let t0 = mig_task(0, MigProfile::P3g);
+        let d0 = s.schedule(&dc, &w, &t0).unwrap();
+        dc.allocate(&t0, d0.node, &d0.placement);
+        s.notify_node_changed(d0.node);
+        // Next 2g should land on the same, already-partial GPU.
+        let t1 = mig_task(1, MigProfile::P2g);
+        let d1 = s.schedule(&dc, &w, &t1).unwrap();
+        assert_eq!(d1.node, d0.node);
+        let (Placement::MigSlice { gpu: g0, .. }, Placement::MigSlice { gpu: g1, .. }) =
+            (&d0.placement, &d1.placement)
+        else {
+            panic!("expected slice placements");
+        };
+        assert_eq!(g0, g1, "slice-fit must extend the partial GPU");
+    }
+
+    #[test]
+    fn repartitioner_defragments_for_a_blocked_profile() {
+        // One node, one GPU: {3g@0, 2g@4} blocks a 2g although 2 slices
+        // are free. The repartitioner must repack and unblock it.
+        let mut dc = ClusterSpec::mig_cluster(1, 1, 0).build();
+        let t3 = mig_task(1, MigProfile::P3g);
+        let t2 = mig_task(2, MigProfile::P2g);
+        dc.allocate(&t3, 0, &Placement::MigSlice { gpu: 0, start: 0 });
+        dc.allocate(&t2, 0, &Placement::MigSlice { gpu: 0, start: 4 });
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(PolicyKind::MigFgd);
+        let blocked = mig_task(3, MigProfile::P2g);
+        assert!(s.schedule(&dc, &w, &blocked).is_none(), "should be blocked pre-repack");
+        let mut rp = MigRepartitioner::new(RepartitionConfig::default());
+        let nid = rp.try_make_room(&mut dc, &blocked).expect("repack possible");
+        assert_eq!(nid, 0);
+        s.notify_node_changed(nid);
+        let d = s.schedule(&dc, &w, &blocked).expect("fits after repack");
+        dc.allocate(&blocked, d.node, &d.placement);
+        assert_eq!(rp.stats.repartitions, 1);
+        assert!(rp.stats.migrated_slices > 0);
+        // GPU is now exactly full: 3 + 2 + 2 slices.
+        assert!((dc.nodes[0].gpu_alloc[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn repartitioner_respects_cost_caps() {
+        let mut dc = ClusterSpec::mig_cluster(1, 1, 0).build();
+        let t3 = mig_task(1, MigProfile::P3g);
+        let t2 = mig_task(2, MigProfile::P2g);
+        dc.allocate(&t3, 0, &Placement::MigSlice { gpu: 0, start: 0 });
+        dc.allocate(&t2, 0, &Placement::MigSlice { gpu: 0, start: 4 });
+        let blocked = mig_task(3, MigProfile::P2g);
+        // The needed repack moves 5 slices; a cap of 4 forbids it.
+        let mut rp = MigRepartitioner::new(RepartitionConfig {
+            max_moved_slices: 4,
+            budget_slices: u64::MAX,
+        });
+        assert!(rp.try_make_room(&mut dc, &blocked).is_none());
+        assert_eq!(rp.stats.exhausted, 1);
+        // A zero budget also forbids it.
+        let mut rp = MigRepartitioner::new(RepartitionConfig {
+            max_moved_slices: 6,
+            budget_slices: 0,
+        });
+        assert!(rp.try_make_room(&mut dc, &blocked).is_none());
+        // Non-MIG demands are ignored outright.
+        let mut rp = MigRepartitioner::new(RepartitionConfig::default());
+        assert!(rp
+            .try_make_room(&mut dc, &Task::new(9, 1.0, 0.0, GpuDemand::Frac(0.5)))
+            .is_none());
+    }
+}

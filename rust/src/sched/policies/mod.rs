@@ -2,6 +2,7 @@
 
 pub mod baselines;
 pub mod fgd;
+pub mod mig;
 pub mod packing;
 pub mod pwr;
 pub mod trivial;
@@ -14,6 +15,10 @@ use crate::util::rng::Rng;
 
 pub use baselines::{BestFitPlugin, DotProdPlugin};
 pub use fgd::FgdPlugin;
+pub use mig::{
+    schedule_with_repartition, MigRepartitioner, MigSliceFitPlugin, RepartitionConfig,
+    RepartitionStats,
+};
 pub use packing::{GpuClusteringPlugin, GpuPackingPlugin};
 pub use pwr::PwrPlugin;
 pub use trivial::{FirstFitPlugin, RandomPlugin};
@@ -26,16 +31,20 @@ pub use trivial::{FirstFitPlugin, RandomPlugin};
 /// * everything else → GPU best-fit (the open-simulator default).
 pub fn build(kind: PolicyKind) -> Scheduler {
     let label = kind.label();
+    // The MIG variants share their non-MIG twin's wiring (the frag and
+    // power layers are slice-aware, so the plugins natively evaluate
+    // MIG placements); only the label — and MigSliceFit's plugin —
+    // differ.
     let (plugins, binder): (Vec<(Box<dyn ScorePlugin>, f64)>, Binder) = match kind {
-        PolicyKind::Fgd => (
+        PolicyKind::Fgd | PolicyKind::MigFgd => (
             vec![(Box::new(FgdPlugin::new()) as Box<dyn ScorePlugin>, 1.0)],
             Binder::WeightedPwrFgd { alpha: 0.0 },
         ),
-        PolicyKind::Pwr => (
+        PolicyKind::Pwr | PolicyKind::MigPwr => (
             vec![(Box::new(PwrPlugin) as Box<dyn ScorePlugin>, 1.0)],
             Binder::WeightedPwrFgd { alpha: 1.0 },
         ),
-        PolicyKind::PwrFgd { alpha } => (
+        PolicyKind::PwrFgd { alpha } | PolicyKind::MigPwrFgd { alpha } => (
             vec![
                 (Box::new(PwrPlugin) as Box<dyn ScorePlugin>, alpha),
                 (Box::new(FgdPlugin::new()) as Box<dyn ScorePlugin>, 1.0 - alpha),
@@ -49,8 +58,12 @@ pub fn build(kind: PolicyKind) -> Scheduler {
             ],
             Binder::WeightedPwrFgd { alpha: alpha_empty },
         ),
-        PolicyKind::BestFit => (
+        PolicyKind::BestFit | PolicyKind::MigBestFit => (
             vec![(Box::new(BestFitPlugin) as Box<dyn ScorePlugin>, 1.0)],
+            Binder::GpuBestFit,
+        ),
+        PolicyKind::MigSliceFit => (
+            vec![(Box::new(MigSliceFitPlugin) as Box<dyn ScorePlugin>, 1.0)],
             Binder::GpuBestFit,
         ),
         PolicyKind::DotProd => (

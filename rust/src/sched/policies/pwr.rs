@@ -68,6 +68,7 @@ mod tests {
                     mem: 786_432.0,
                     gpu_model: Some(GpuModel::G3),
                     gpus_per_node: 8,
+                    mig: false,
                 },
                 NodePool {
                     count: 1,
@@ -75,6 +76,7 @@ mod tests {
                     mem: 131_072.0,
                     gpu_model: Some(GpuModel::T4),
                     gpus_per_node: 4,
+                    mig: false,
                 },
             ],
         };

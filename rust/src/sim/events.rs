@@ -16,6 +16,7 @@ use crate::cluster::node::Placement;
 use crate::cluster::Datacenter;
 use crate::metrics::{RunSeries, SeriesPoint};
 use crate::power;
+use crate::sched::policies::MigRepartitioner;
 use crate::sched::Scheduler;
 use crate::tasks::{Task, Workload};
 use crate::trace::{InflationSampler, TraceSpec};
@@ -52,10 +53,12 @@ impl PartialOrd for Scheduled {
 impl Ord for Scheduled {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse for a min-heap; tie-break on sequence for determinism.
+        // `total_cmp` gives a total order even for non-finite times (a
+        // NaN would previously panic the heap's internal sift), though
+        // `push` already refuses to enqueue non-finite times.
         other
             .at
-            .partial_cmp(&self.at)
-            .unwrap()
+            .total_cmp(&self.at)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -98,6 +101,10 @@ pub struct SteadyResult {
     pub scheduled: u64,
     pub failed: u64,
     pub departures: u64,
+    /// MIG repartitioning activity under churn (zero without a
+    /// repartitioner).
+    pub repartitions: u64,
+    pub migrated_slices: u64,
     /// Time-averaged EOPC over the second half (warmed-up steady state).
     pub steady_eopc_w: f64,
     /// Time-averaged EOPC with the DRS overlay (idle nodes slept).
@@ -117,6 +124,9 @@ pub struct SteadySim {
     running: std::collections::HashMap<u64, (Task, usize, Placement)>,
     now: f64,
     seq: u64,
+    /// Optional MIG defragmenter: failed MIG arrivals trigger one
+    /// repack-and-retry (churn is where fragmentation accumulates).
+    pub repartitioner: Option<MigRepartitioner>,
 }
 
 impl SteadySim {
@@ -132,10 +142,17 @@ impl SteadySim {
             running: std::collections::HashMap::new(),
             now: 0.0,
             seq: 0,
+            repartitioner: None,
         }
     }
 
     fn push(&mut self, at: f64, event: Event) {
+        // Reject non-finite event times at insertion: a NaN/∞ duration
+        // (degenerate config, numerical accident) maps to "past the
+        // horizon", so the run loop drops it instead of the heap
+        // panicking mid-simulation. Negative times (impossible from the
+        // exponential sampler, kept for safety) clamp to `now`.
+        let at = if at.is_finite() { at.max(self.now) } else { f64::MAX };
         self.seq += 1;
         self.queue.push(Scheduled { at, seq: self.seq, event });
     }
@@ -176,7 +193,14 @@ impl SteadySim {
                     out.arrivals += 1;
                     let task = self.sampler.next_task();
                     let id = task.id;
-                    match self.sched.schedule(&self.dc, &self.workload, &task) {
+                    let decision = crate::sched::policies::mig::schedule_with_repartition(
+                        &mut self.sched,
+                        &mut self.dc,
+                        self.repartitioner.as_mut(),
+                        &self.workload,
+                        &task,
+                    );
+                    match decision {
                         Some(d) => {
                             self.dc.allocate(&task, d.node, &d.placement);
                             self.sched.notify_node_changed(d.node);
@@ -204,6 +228,10 @@ impl SteadySim {
             out.steady_eopc_w = steady_samples.iter().map(|s| s.0).sum::<f64>() / n;
             out.steady_util = steady_samples.iter().map(|s| s.1).sum::<f64>() / n;
             out.steady_eopc_drs_w = steady_samples.iter().map(|s| s.2).sum::<f64>() / n;
+        }
+        if let Some(rp) = &self.repartitioner {
+            out.repartitions = rp.stats.repartitions;
+            out.migrated_slices = rp.stats.migrated_slices;
         }
         out
     }
@@ -283,6 +311,50 @@ mod tests {
         assert_eq!(a.arrivals, b.arrivals);
         assert_eq!(a.scheduled, b.scheduled);
         assert!((a.steady_eopc_w - b.steady_eopc_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heap_orders_non_finite_times_without_panicking() {
+        // Direct heap check: NaN/∞ entries must not panic `cmp` and
+        // must sort after every finite time.
+        let mut heap = BinaryHeap::new();
+        for (seq, at) in
+            [(1u64, 5.0f64), (2, f64::NAN), (3, 1.0), (4, f64::INFINITY), (5, 3.0)]
+        {
+            heap.push(Scheduled { at, seq, event: Event::Arrival });
+        }
+        let mut finite = Vec::new();
+        let mut rest = 0;
+        while let Some(s) = heap.pop() {
+            if s.at.is_finite() {
+                assert_eq!(rest, 0, "finite time {} popped after non-finite", s.at);
+                finite.push(s.at);
+            } else {
+                rest += 1;
+            }
+        }
+        assert_eq!(finite, vec![1.0, 3.0, 5.0]);
+        assert_eq!(rest, 2);
+    }
+
+    #[test]
+    fn nan_duration_cannot_panic_the_loop() {
+        // A degenerate config producing NaN durations (0/0-style) must
+        // yield a clean run, not a heap panic: every departure lands
+        // past the horizon and is dropped.
+        let cfg = SteadyConfig {
+            mean_interarrival_s: 1.0,
+            mean_duration_s: f64::NAN,
+            horizon_s: 50.0,
+            sample_every_s: 10.0,
+            seed: 1,
+        };
+        let dc = ClusterSpec::tiny(2, 2, 0).build();
+        let sched = Scheduler::from_policy(PolicyKind::FirstFit);
+        let mut sim = SteadySim::new(dc, sched, &TraceSpec::default_trace(), &cfg);
+        let r = sim.run(&cfg);
+        assert!(r.arrivals > 10);
+        assert_eq!(r.departures, 0, "NaN-duration tasks never depart");
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::cluster::Datacenter;
 use crate::frag;
 use crate::metrics::{RunSeries, SeriesPoint};
 use crate::power;
+use crate::sched::policies::{MigRepartitioner, RepartitionConfig};
 use crate::sched::{PolicyKind, Scheduler};
 use crate::tasks::Workload;
 use crate::trace::{Trace, TraceSpec};
@@ -39,6 +40,9 @@ pub struct RunResult {
     /// Final GPU units arrived and allocated.
     pub arrived_gpu_units: f64,
     pub allocated_gpu_units: f64,
+    /// MIG repartitioning activity (zero without a repartitioner).
+    pub repartitions: u64,
+    pub migrated_slices: u64,
 }
 
 impl RunResult {
@@ -69,6 +73,9 @@ pub struct Simulation {
     submitted: u64,
     /// Record full `F_dc` series (O(N·M) per sample; off for benches).
     pub record_frag: bool,
+    /// Optional MIG defragmenter: on a placement failure of a MIG
+    /// demand, repack the cheapest GPU and retry once.
+    pub repartitioner: Option<MigRepartitioner>,
 }
 
 impl Simulation {
@@ -103,6 +110,7 @@ impl Simulation {
             scheduled: 0,
             submitted: 0,
             record_frag: true,
+            repartitioner: None,
         }
     }
 
@@ -111,7 +119,14 @@ impl Simulation {
         let task = self.sampler.next_task();
         self.submitted += 1;
         self.arrived_gpu_units += task.gpu.units();
-        match self.sched.schedule(&self.dc, &self.workload, &task) {
+        let decision = crate::sched::policies::mig::schedule_with_repartition(
+            &mut self.sched,
+            &mut self.dc,
+            self.repartitioner.as_mut(),
+            &self.workload,
+            &task,
+        );
+        match decision {
             Some(d) => {
                 self.dc.allocate(&task, d.node, &d.placement);
                 self.sched.notify_node_changed(d.node);
@@ -170,6 +185,7 @@ impl Simulation {
             }
         }
         series.points.push(self.sample());
+        let stats = self.repartitioner.as_ref().map(|r| r.stats).unwrap_or_default();
         RunResult {
             series,
             submitted: self.submitted,
@@ -177,6 +193,8 @@ impl Simulation {
             failed: self.failed,
             arrived_gpu_units: self.arrived_gpu_units,
             allocated_gpu_units: self.dc.gpu_allocated_units(),
+            repartitions: stats.repartitions,
+            migrated_slices: stats.migrated_slices,
         }
     }
 }
@@ -194,6 +212,8 @@ pub struct RepeatConfig {
     pub record_frag: bool,
     /// Ablation: lowest-id tie-break instead of k8s's random choice.
     pub deterministic_ties: bool,
+    /// Attach a MIG repartitioner (default cost caps) to each run.
+    pub mig_repartition: bool,
 }
 
 impl Default for RepeatConfig {
@@ -204,6 +224,7 @@ impl Default for RepeatConfig {
             target_ratio: 1.02,
             record_frag: false,
             deterministic_ties: false,
+            mig_repartition: false,
         }
     }
 }
@@ -231,6 +252,10 @@ pub fn run_repetitions(
                 let workload = trace_spec.synthesize(seed ^ 0x57AB1E).workload();
                 let mut sim = Simulation::with_spec(dc, sched, &trace_spec, workload, seed);
                 sim.record_frag = cfg.record_frag;
+                if cfg.mig_repartition {
+                    sim.repartitioner =
+                        Some(MigRepartitioner::new(RepartitionConfig::default()));
+                }
                 sim.run_inflation(cfg.target_ratio)
             })
         })

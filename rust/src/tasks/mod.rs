@@ -2,10 +2,12 @@
 //! (§II), and the *target workload* `M` of task classes used by the FGD
 //! fragmentation metric.
 
+use crate::cluster::mig::MigProfile;
 use crate::cluster::types::GpuModel;
 
-/// GPU demand of a task: `D_t^GPU ∈ {0} ∪ (0,1) ∪ Z+` (§II). A task may
-/// share one GPU *or* take whole GPUs, never both.
+/// GPU demand of a task: `D_t^GPU ∈ {0} ∪ (0,1) ∪ Z+` (§II), extended
+/// with MIG slice profiles. A task may share one GPU, take whole GPUs,
+/// *or* request one MIG instance — never a mix.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum GpuDemand {
     /// CPU-only task.
@@ -14,10 +16,16 @@ pub enum GpuDemand {
     Frac(f64),
     /// Exclusively uses this many whole GPUs.
     Whole(u32),
+    /// One MIG instance of this profile on a MIG-partitioned GPU
+    /// (slice-granular demand; `units = slices / 7`).
+    Mig(MigProfile),
 }
 
 impl GpuDemand {
     /// Construct from a raw request, validating the paper's domain.
+    /// Non-finite, negative, fractional-above-one and >64 requests are
+    /// all rejected (MIG demands are constructed from a profile, not
+    /// from raw units — see [`GpuDemand::Mig`]).
     pub fn from_units(units: f64) -> Option<GpuDemand> {
         if units == 0.0 {
             Some(GpuDemand::Zero)
@@ -30,12 +38,14 @@ impl GpuDemand {
         }
     }
 
-    /// Total GPU resource units requested (fraction or whole count).
+    /// Total GPU resource units requested (fraction, whole count, or
+    /// MIG slices / 7).
     pub fn units(self) -> f64 {
         match self {
             GpuDemand::Zero => 0.0,
             GpuDemand::Frac(f) => f,
             GpuDemand::Whole(k) => k as f64,
+            GpuDemand::Mig(p) => p.units(),
         }
     }
 
@@ -51,6 +61,10 @@ impl GpuDemand {
         match self {
             GpuDemand::Zero => 0,
             GpuDemand::Frac(_) => 1,
+            // Sub-GPU MIG instances behave like sharing tasks in the
+            // Table-I marginals; the full-GPU 7g profile like 1-GPU.
+            GpuDemand::Mig(p) if p != MigProfile::P7g => 1,
+            GpuDemand::Mig(_) => 2,
             GpuDemand::Whole(1) => 2,
             GpuDemand::Whole(2) => 3,
             GpuDemand::Whole(k) if k <= 4 => 4,
@@ -140,7 +154,11 @@ impl Workload {
             let sig = (
                 (t.cpu * 4.0).round() as u64,
                 (t.gpu.units() * 64.0).round() as u64,
-                matches!(t.gpu, GpuDemand::Whole(_)) as u8,
+                match t.gpu {
+                    GpuDemand::Whole(_) => 1u8,
+                    GpuDemand::Mig(_) => 2,
+                    _ => 0,
+                },
                 t.gpu_model.map(|m| m.index() as u8 + 1).unwrap_or(0),
             );
             groups.entry(sig).and_modify(|e| e.1 += 1).or_insert((t.clone(), 1));
@@ -192,6 +210,57 @@ mod tests {
         assert_eq!(GpuDemand::from_units(2.0), Some(GpuDemand::Whole(2)));
         assert_eq!(GpuDemand::from_units(1.5), None);
         assert_eq!(GpuDemand::from_units(-1.0), None);
+    }
+
+    #[test]
+    fn gpu_demand_edge_cases() {
+        // Non-finite inputs are rejected, never panicking or truncating.
+        assert_eq!(GpuDemand::from_units(f64::NAN), None);
+        assert_eq!(GpuDemand::from_units(f64::INFINITY), None);
+        assert_eq!(GpuDemand::from_units(f64::NEG_INFINITY), None);
+        // Negative values, including -0.0's negative neighbours.
+        assert_eq!(GpuDemand::from_units(-0.25), None);
+        assert_eq!(GpuDemand::from_units(-f64::MIN_POSITIVE), None);
+        // -0.0 == 0.0 in IEEE 754: accepted as CPU-only.
+        assert_eq!(GpuDemand::from_units(-0.0), Some(GpuDemand::Zero));
+        // Whole-GPU cap: 64 is the last accepted integer.
+        assert_eq!(GpuDemand::from_units(64.0), Some(GpuDemand::Whole(64)));
+        assert_eq!(GpuDemand::from_units(65.0), None);
+        assert_eq!(GpuDemand::from_units(1e9), None);
+        // 1.0 − ε stays fractional; exactly 1.0 is whole.
+        let just_under = 1.0 - f64::EPSILON;
+        assert_eq!(GpuDemand::from_units(just_under), Some(GpuDemand::Frac(just_under)));
+        assert_eq!(GpuDemand::from_units(1.0), Some(GpuDemand::Whole(1)));
+        // Tiny positive values are a (degenerate but valid) fraction.
+        assert_eq!(
+            GpuDemand::from_units(f64::MIN_POSITIVE),
+            Some(GpuDemand::Frac(f64::MIN_POSITIVE))
+        );
+    }
+
+    #[test]
+    fn mig_demand_units_and_buckets() {
+        use crate::cluster::mig::MigProfile;
+        assert!((GpuDemand::Mig(MigProfile::P2g).units() - 2.0 / 7.0).abs() < 1e-12);
+        assert_eq!(GpuDemand::Mig(MigProfile::P7g).units(), 1.0);
+        assert!(GpuDemand::Mig(MigProfile::P1g).is_gpu());
+        assert_eq!(GpuDemand::Mig(MigProfile::P1g).bucket(), 1);
+        assert_eq!(GpuDemand::Mig(MigProfile::P4g).bucket(), 1);
+        assert_eq!(GpuDemand::Mig(MigProfile::P7g).bucket(), 2);
+    }
+
+    #[test]
+    fn workload_distinguishes_mig_from_frac() {
+        use crate::cluster::mig::MigProfile;
+        // A 1g instance (1/7 GPU) and a Frac of the same units must not
+        // collapse into one class.
+        let u = MigProfile::P1g.units();
+        let tasks = vec![
+            Task::new(0, 4.0, 1024.0, GpuDemand::Mig(MigProfile::P1g)),
+            Task::new(1, 4.0, 1024.0, GpuDemand::Frac(u)),
+        ];
+        let w = Workload::from_tasks(&tasks);
+        assert_eq!(w.classes.len(), 2);
     }
 
     #[test]

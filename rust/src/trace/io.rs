@@ -78,6 +78,9 @@ pub fn to_csv(trace: &Trace) -> String {
             GpuDemand::Zero => (0, 0),
             GpuDemand::Frac(f) => (1, (f * 1000.0).round() as i64),
             GpuDemand::Whole(k) => (k as i64, 1000),
+            // The openb schema has no MIG column; export the slice
+            // fraction as a sharing request (lossy, documented).
+            GpuDemand::Mig(p) => (1, (p.units() * 1000.0).round() as i64),
         };
         let spec = t.gpu_model.map(|m| m.to_string()).unwrap_or_default();
         out.push_str(&format!(

@@ -15,6 +15,7 @@
 
 pub mod io;
 
+use crate::cluster::mig::MigProfile;
 use crate::cluster::types::GpuModel;
 use crate::tasks::{GpuDemand, Task, Workload, NUM_BUCKETS};
 use crate::util::rng::{Rng, WeightedIndex};
@@ -150,7 +151,7 @@ impl TraceSpec {
             match p.gpu {
                 GpuDemand::Frac(_) => *w *= a,
                 GpuDemand::Whole(_) => *w *= b,
-                GpuDemand::Zero => {}
+                GpuDemand::Zero | GpuDemand::Mig(_) => {}
             }
         }
         spec.name = format!("sharing-gpu-{:.0}", share * 100.0);
@@ -176,11 +177,56 @@ impl TraceSpec {
         spec
     }
 
+    /// **MIG** trace: a slice-profile demand mix for MIG-partitioned
+    /// clusters (see [`crate::cluster::mig`]). 10% of tasks are
+    /// CPU-only; the GPU tasks request one MIG instance each, with
+    /// `large_pop` of them drawn from the large profiles (3g/4g/7g)
+    /// and the rest from the small ones (1g/2g). Within each group the
+    /// mix is fixed (1g:2g = 55:45; 3g:4g:7g = 50:35:15, roughly the
+    /// instance-size histogram Zambianco et al. report for multi-tenant
+    /// MIG clouds). CPU demand is calibrated to ≈1.6 vCPU per slice so
+    /// MIG clusters stay GPU-bound like the paper's.
+    pub fn mig_trace(large_pop: f64) -> TraceSpec {
+        assert!((0.0..=1.0).contains(&large_pop));
+        let gpu_pop = 90.0;
+        let groups: [(MigProfile, f64, &[f64]); 5] = [
+            (MigProfile::P1g, (1.0 - large_pop) * 0.55, &[1.0, 2.0]),
+            (MigProfile::P2g, (1.0 - large_pop) * 0.45, &[2.0, 4.0]),
+            (MigProfile::P3g, large_pop * 0.50, &[4.0, 6.0]),
+            (MigProfile::P4g, large_pop * 0.35, &[6.0, 8.0]),
+            (MigProfile::P7g, large_pop * 0.15, &[8.0, 12.0]),
+        ];
+        let mut profiles: Vec<(TaskProfile, f64)> = Vec::new();
+        for (c, wc) in [2.0, 4.0, 8.0].iter().zip([0.4, 0.4, 0.2]) {
+            profiles.push((profile(*c, GpuDemand::Zero), 10.0 * wc));
+        }
+        for (p, share, cpus) in groups {
+            for &c in cpus {
+                profiles.push((
+                    profile(c, GpuDemand::Mig(p)),
+                    gpu_pop * share / cpus.len() as f64,
+                ));
+            }
+        }
+        TraceSpec {
+            name: format!("mig-{:.0}", large_pop * 100.0),
+            profiles,
+            n_tasks: 8152,
+        }
+    }
+
     /// Reconstruct a spec from a trace name (`default`,
-    /// `multi-gpu-20`, `sharing-gpu-100`, `constrained-gpu-33`, …).
+    /// `multi-gpu-20`, `sharing-gpu-100`, `constrained-gpu-33`,
+    /// `mig-30`/`mig-default`, …).
     pub fn by_name(name: &str) -> Option<TraceSpec> {
         if name == "default" {
             return Some(Self::default_trace());
+        }
+        if name == "mig-default" {
+            return Some(Self::mig_trace(0.3));
+        }
+        if let Some(pct) = name.strip_prefix("mig-") {
+            return pct.parse::<f64>().ok().map(|p| Self::mig_trace(p / 100.0));
         }
         if let Some(pct) = name.strip_prefix("multi-gpu-") {
             return pct.parse::<f64>().ok().map(|p| Self::multi_gpu(p / 100.0));
@@ -428,6 +474,66 @@ mod tests {
             .iter()
             .filter(|t| !t.gpu.is_gpu())
             .all(|t| t.gpu_model.is_none()));
+    }
+
+    #[test]
+    fn mig_trace_mix_and_roundtrip() {
+        let spec = TraceSpec::mig_trace(0.3);
+        assert_eq!(spec.name, "mig-30");
+        // Name → spec roundtrip (Simulation::new relies on this).
+        let back = TraceSpec::by_name("mig-30").unwrap();
+        assert_eq!(back.profiles.len(), spec.profiles.len());
+        assert!(TraceSpec::by_name("mig-default").is_some());
+        // Large-profile population share of GPU tasks ≈ 30%.
+        let total_gpu: f64 = spec
+            .profiles
+            .iter()
+            .filter(|(p, _)| p.gpu.is_gpu())
+            .map(|(_, w)| w)
+            .sum();
+        let large: f64 = spec
+            .profiles
+            .iter()
+            .filter(|(p, _)| {
+                matches!(p.gpu, GpuDemand::Mig(m)
+                    if m >= MigProfile::P3g)
+            })
+            .map(|(_, w)| w)
+            .sum();
+        assert!((large / total_gpu - 0.3).abs() < 1e-9);
+        // Synthesis produces only CPU-only and MIG demands.
+        let trace = spec.synthesize(11);
+        assert_eq!(trace.tasks.len(), 8152);
+        for t in &trace.tasks {
+            assert!(matches!(t.gpu, GpuDemand::Zero | GpuDemand::Mig(_)));
+        }
+        let mig_frac = trace.tasks.iter().filter(|t| t.gpu.is_gpu()).count() as f64
+            / trace.tasks.len() as f64;
+        assert!((mig_frac - 0.9).abs() < 0.02, "gpu-task share {mig_frac}");
+        // Workload extraction covers all five profiles.
+        let w = trace.workload();
+        let profiles: std::collections::BTreeSet<usize> = w
+            .classes
+            .iter()
+            .filter_map(|c| match c.gpu {
+                GpuDemand::Mig(p) => Some(p.index()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(profiles.len(), 5);
+    }
+
+    #[test]
+    fn mig_trace_knob_extremes() {
+        // All-small and all-large mixes are valid specs.
+        for (pop, small_only) in [(0.0, true), (1.0, false)] {
+            let spec = TraceSpec::mig_trace(pop);
+            let trace = spec.synthesize(5);
+            let has_large = trace.tasks.iter().any(|t| {
+                matches!(t.gpu, GpuDemand::Mig(m) if m >= MigProfile::P3g)
+            });
+            assert_eq!(has_large, !small_only);
+        }
     }
 
     #[test]

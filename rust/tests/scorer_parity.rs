@@ -4,7 +4,11 @@
 //!
 //! Requires `make artifacts`; tests skip (with a notice) when the
 //! artifacts are absent so `cargo test` stays runnable in a pure-Rust
-//! environment.
+//! environment. The whole file is additionally compile-gated on the
+//! `xla` cargo feature — without it the PJRT runtime is a stub and
+//! there is nothing to check.
+
+#![cfg(feature = "xla")]
 
 use repro::runtime::scorer::parity_check;
 
