@@ -147,6 +147,49 @@ impl ClusterSpec {
         }
     }
 
+    /// A heterogeneous MIG fleet: `n_a100_nodes` A100-class nodes (G3
+    /// power profile, 7-slice lattice, 128 vCPUs / 768 GiB) plus
+    /// `n_a30_nodes` A30-class nodes (4-slice lattice, 96 vCPUs /
+    /// 384 GiB), every GPU MIG-enabled with its model's lattice
+    /// ([`crate::cluster::mig::MigLattice::for_gpu`]), plus optional
+    /// CPU-only nodes.
+    pub fn mig_het_cluster(
+        n_a100_nodes: usize,
+        n_a30_nodes: usize,
+        gpus_per_node: usize,
+        n_cpu_nodes: usize,
+    ) -> ClusterSpec {
+        assert!(gpus_per_node <= crate::frag::MAX_GPUS);
+        ClusterSpec {
+            pools: vec![
+                NodePool {
+                    count: n_a100_nodes,
+                    vcpus: 128.0,
+                    mem: 786_432.0,
+                    gpu_model: Some(GpuModel::G3),
+                    gpus_per_node,
+                    mig: true,
+                },
+                NodePool {
+                    count: n_a30_nodes,
+                    vcpus: 96.0,
+                    mem: 393_216.0,
+                    gpu_model: Some(GpuModel::A30),
+                    gpus_per_node,
+                    mig: true,
+                },
+                NodePool {
+                    count: n_cpu_nodes,
+                    vcpus: 94.0,
+                    mem: 262_144.0,
+                    gpu_model: None,
+                    gpus_per_node: 0,
+                    mig: false,
+                },
+            ],
+        }
+    }
+
     /// Total nodes described.
     pub fn total_nodes(&self) -> usize {
         self.pools.iter().map(|p| p.count).sum()
@@ -272,6 +315,25 @@ mod tests {
         let dc = ClusterSpec::tiny(2, 4, 1).build();
         assert_eq!(dc.nodes.len(), 3);
         assert_eq!(dc.total_gpus(), 8);
+    }
+
+    #[test]
+    fn mig_het_cluster_builds_both_lattices() {
+        use crate::cluster::mig::MigLattice;
+        let spec = ClusterSpec::mig_het_cluster(3, 2, 4, 1);
+        assert_eq!(spec.total_nodes(), 6);
+        assert_eq!(spec.total_gpus(), 20);
+        let dc = spec.build();
+        let lattices: Vec<_> = dc
+            .nodes
+            .iter()
+            .filter_map(|n| n.mig.as_ref().map(|m| (n.gpu_model.unwrap(), m[0].lattice)))
+            .collect();
+        assert_eq!(lattices.iter().filter(|(_, l)| *l == MigLattice::A100).count(), 3);
+        assert_eq!(lattices.iter().filter(|(_, l)| *l == MigLattice::A30).count(), 2);
+        for (model, lat) in lattices {
+            assert_eq!(lat, MigLattice::for_gpu(model));
+        }
     }
 
     #[test]

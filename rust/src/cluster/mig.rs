@@ -1,11 +1,11 @@
-//! MIG (Multi-Instance GPU) partitioning: the NVIDIA-A100-style slice
-//! lattice, per-GPU partition state, and slice-level fragmentation
-//! accounting.
+//! MIG (Multi-Instance GPU) partitioning: per-model slice lattices
+//! ([`MigLattice`]), per-GPU partition state, and slice-level
+//! fragmentation accounting.
 //!
-//! An A100-class GPU exposes [`MIG_SLICES`] = 7 compute slices. A MIG
-//! *instance* occupies a contiguous run of slices and may only begin at
-//! the profile's architecturally legal start offsets (the partition
-//! placement tree of the MIG spec):
+//! NVIDIA ships different partition lattices per GPU model. The crate
+//! models the two canonical ones:
+//!
+//! **A100 — 7 compute slices** (`MigLattice::A100`):
 //!
 //! | profile | slices | legal starts (preferred order) |
 //! |---------|--------|--------------------------------|
@@ -15,65 +15,181 @@
 //! | 4g      | 4      | 0                              |
 //! | 7g      | 7      | 0                              |
 //!
-//! The 3g profile prefers start 4 so that a lone 3g instance keeps the
-//! 0–3 window available for a later 4g — the same heuristic nvidia-smi
-//! applies. Any set of non-overlapping legally-placed instances is a
-//! valid partition; co-residency constraints (e.g. "4g+4g is illegal",
+//! **A30 — 4 compute slices** (`MigLattice::A30`):
+//!
+//! | profile | slices | legal starts (preferred order) |
+//! |---------|--------|--------------------------------|
+//! | a30-1g  | 1      | 0, 1, 2, 3                     |
+//! | a30-2g  | 2      | 0, 2                           |
+//! | a30-4g  | 4      | 0                              |
+//!
+//! A MIG *instance* occupies a contiguous run of slices and may only
+//! begin at the profile's architecturally legal start offsets (the
+//! partition placement tree of the MIG spec). The A100 3g profile
+//! prefers start 4 so that a lone 3g instance keeps the 0–3 window
+//! available for a later 4g — the same heuristic nvidia-smi applies.
+//! Any set of non-overlapping legally-placed instances is a valid
+//! partition; co-residency constraints (e.g. "4g+4g is illegal",
 //! "3g+3g is the largest pair") all fall out of the start lattice.
+//! A profile is bound to its lattice: an `a30-2g` demand can only run
+//! on an A30-partitioned GPU, a `3g` only on an A100-partitioned one.
 //!
 //! Slice-level fragmentation generalizes the FGD rule (see
 //! [`crate::frag`]): a free slice is *fragmented for profile `p`* iff no
-//! legal free placement of `p` could consume it ([`frag_slices`]). On a
-//! GPU with slice 1 occupied, a 4g can never run (start 0 blocked), so
+//! legal free placement of `p` could consume it ([`frag_slices`]). On an
+//! A100 with slice 1 occupied, a 4g can never run (start 0 blocked), so
 //! all six free slices are 4g-fragments; a 2g can still land at starts
 //! 2 and 4, leaving only slices 0 and 6 as 2g-fragments.
 //!
 //! The greedy repack planner ([`MigGpu::repack_plan`]) re-places the
 //! resident instances first-fit-decreasing to open a legal start for an
 //! incoming profile — the primitive behind the online repartitioner in
-//! [`crate::sched::policies::mig`]. Slice counts are preserved, so
-//! cluster-level allocation caches and GRAR are unaffected by repacks.
+//! [`crate::sched::policies::mig`]. [`MigGpu::frag_ratio`] condenses a
+//! GPU's lattice fragmentation into one scalar (free slices unusable by
+//! the widest still-fitting profile ÷ free slices) — the trigger signal
+//! of the proactive, threshold-driven repartitioning mode. Slice counts
+//! are preserved by repacks, so cluster-level allocation caches and
+//! GRAR are unaffected.
 
 use std::fmt;
 
-/// Compute slices per MIG-capable GPU (A100: 7).
-pub const MIG_SLICES: u8 = 7;
+use crate::cluster::types::GpuModel;
 
-/// Bitmask of all slices (`0b111_1111`).
-pub const FULL_MASK: u8 = (1u8 << MIG_SLICES) - 1;
+/// Number of distinct MIG profiles across all lattices (dense
+/// per-profile table size; see [`MigProfile::index`]).
+pub const N_PROFILES: usize = 8;
 
-/// A100-style MIG profiles (compute-slice widths).
+/// A partition-lattice model: the slice count and profile set of one
+/// MIG-capable GPU generation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MigLattice {
+    /// A100-class: 7 compute slices, profiles 1g/2g/3g/4g/7g.
+    #[default]
+    A100,
+    /// A30-class: 4 compute slices, profiles a30-1g/a30-2g/a30-4g.
+    A30,
+}
+
+impl MigLattice {
+    /// All shipped lattices.
+    pub const ALL: [MigLattice; 2] = [MigLattice::A100, MigLattice::A30];
+
+    /// Compute slices exposed by a GPU of this lattice.
+    pub fn slices(self) -> u8 {
+        match self {
+            MigLattice::A100 => 7,
+            MigLattice::A30 => 4,
+        }
+    }
+
+    /// Bitmask of all slices.
+    pub fn full_mask(self) -> u8 {
+        (1u8 << self.slices()) - 1
+    }
+
+    /// The lattice's profile set, ascending by slice count.
+    pub fn profiles(self) -> &'static [MigProfile] {
+        match self {
+            MigLattice::A100 => &[
+                MigProfile::P1g,
+                MigProfile::P2g,
+                MigProfile::P3g,
+                MigProfile::P4g,
+                MigProfile::P7g,
+            ],
+            MigLattice::A30 => {
+                &[MigProfile::A30P1g, MigProfile::A30P2g, MigProfile::A30P4g]
+            }
+        }
+    }
+
+    /// Widest profile whose slice count fits into `free` slices.
+    pub fn widest_fitting(self, free: u8) -> Option<MigProfile> {
+        self.profiles().iter().rev().copied().find(|p| p.slices() <= free)
+    }
+
+    /// The lattice a GPU model's MIG mode exposes (A30 → the 4-slice
+    /// lattice; every other MIG-capable model is A100-style).
+    pub fn for_gpu(model: GpuModel) -> MigLattice {
+        match model {
+            GpuModel::A30 => MigLattice::A30,
+            _ => MigLattice::A100,
+        }
+    }
+
+    /// Stable small integer id (dense per-lattice tables).
+    pub fn index(self) -> usize {
+        match self {
+            MigLattice::A100 => 0,
+            MigLattice::A30 => 1,
+        }
+    }
+}
+
+impl fmt::Display for MigLattice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            MigLattice::A100 => "A100-7g",
+            MigLattice::A30 => "A30-4g",
+        })
+    }
+}
+
+/// MIG profiles (compute-slice widths), across both lattices. A profile
+/// pins its lattice: `units()` and legality are defined per model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum MigProfile {
-    /// 1 slice (1g.5gb-class).
+    /// A100: 1 slice (1g.5gb-class).
     P1g,
-    /// 2 slices (2g.10gb-class).
+    /// A100: 2 slices (2g.10gb-class).
     P2g,
-    /// 3 slices (3g.20gb-class).
+    /// A100: 3 slices (3g.20gb-class).
     P3g,
-    /// 4 slices (4g.20gb-class).
+    /// A100: 4 slices (4g.20gb-class).
     P4g,
-    /// 7 slices — the whole GPU as one instance (7g.40gb-class).
+    /// A100: 7 slices — the whole GPU as one instance (7g.40gb-class).
     P7g,
+    /// A30: 1 slice (1g.6gb-class).
+    A30P1g,
+    /// A30: 2 slices (2g.12gb-class).
+    A30P2g,
+    /// A30: 4 slices — the whole A30 as one instance (4g.24gb-class).
+    A30P4g,
 }
 
 impl MigProfile {
-    /// All profiles, ascending by slice count.
-    pub const ALL: [MigProfile; 5] = [
+    /// All profiles of all lattices (A100 first, then A30), each group
+    /// ascending by slice count.
+    pub const ALL: [MigProfile; N_PROFILES] = [
         MigProfile::P1g,
         MigProfile::P2g,
         MigProfile::P3g,
         MigProfile::P4g,
         MigProfile::P7g,
+        MigProfile::A30P1g,
+        MigProfile::A30P2g,
+        MigProfile::A30P4g,
     ];
+
+    /// The lattice this profile belongs to.
+    pub fn lattice(self) -> MigLattice {
+        match self {
+            MigProfile::P1g
+            | MigProfile::P2g
+            | MigProfile::P3g
+            | MigProfile::P4g
+            | MigProfile::P7g => MigLattice::A100,
+            MigProfile::A30P1g | MigProfile::A30P2g | MigProfile::A30P4g => MigLattice::A30,
+        }
+    }
 
     /// Compute slices the profile occupies.
     pub fn slices(self) -> u8 {
         match self {
-            MigProfile::P1g => 1,
-            MigProfile::P2g => 2,
+            MigProfile::P1g | MigProfile::A30P1g => 1,
+            MigProfile::P2g | MigProfile::A30P2g => 2,
             MigProfile::P3g => 3,
-            MigProfile::P4g => 4,
+            MigProfile::P4g | MigProfile::A30P4g => 4,
             MigProfile::P7g => 7,
         }
     }
@@ -86,15 +202,26 @@ impl MigProfile {
             MigProfile::P3g => &[4, 0],
             MigProfile::P4g => &[0],
             MigProfile::P7g => &[0],
+            MigProfile::A30P1g => &[0, 1, 2, 3],
+            MigProfile::A30P2g => &[0, 2],
+            MigProfile::A30P4g => &[0],
         }
     }
 
-    /// GPU resource units (fraction of one GPU): `slices / 7`.
+    /// GPU resource units (fraction of one GPU of the profile's model):
+    /// `slices / lattice slices`.
     pub fn units(self) -> f64 {
-        self.slices() as f64 / MIG_SLICES as f64
+        self.slices() as f64 / self.lattice().slices() as f64
     }
 
-    /// Stable small integer id (dense per-profile tables).
+    /// True for the whole-GPU profile of a lattice (7g on A100, a30-4g
+    /// on A30).
+    pub fn is_full_gpu(self) -> bool {
+        self.slices() == self.lattice().slices()
+    }
+
+    /// Stable small integer id (dense per-profile tables of width
+    /// [`N_PROFILES`]).
     pub fn index(self) -> usize {
         MigProfile::ALL.iter().position(|&p| p == self).unwrap()
     }
@@ -104,7 +231,8 @@ impl MigProfile {
         MigProfile::ALL.get(i).copied()
     }
 
-    /// Parse a profile name (`1g`, `2g`, `3g`, `4g`, `7g`).
+    /// Parse a profile name (`1g`…`7g` for A100; `a30-1g`, `a30-2g`,
+    /// `a30-4g` for A30).
     pub fn parse(s: &str) -> Option<MigProfile> {
         match s.to_ascii_lowercase().as_str() {
             "1g" => Some(MigProfile::P1g),
@@ -112,6 +240,9 @@ impl MigProfile {
             "3g" => Some(MigProfile::P3g),
             "4g" => Some(MigProfile::P4g),
             "7g" => Some(MigProfile::P7g),
+            "a30-1g" => Some(MigProfile::A30P1g),
+            "a30-2g" => Some(MigProfile::A30P2g),
+            "a30-4g" => Some(MigProfile::A30P4g),
             _ => None,
         }
     }
@@ -125,6 +256,9 @@ impl fmt::Display for MigProfile {
             MigProfile::P3g => "3g",
             MigProfile::P4g => "4g",
             MigProfile::P7g => "7g",
+            MigProfile::A30P1g => "a30-1g",
+            MigProfile::A30P2g => "a30-2g",
+            MigProfile::A30P4g => "a30-4g",
         };
         f.write_str(s)
     }
@@ -136,7 +270,8 @@ pub fn window_mask(profile: MigProfile, start: u8) -> u8 {
 }
 
 /// First free legal start for `profile` on an occupancy `mask`, in the
-/// profile's preferred order; `None` when no placement is legal.
+/// profile's preferred order; `None` when no placement is legal. The
+/// mask must belong to a GPU of the profile's lattice.
 pub fn first_fit_start(mask: u8, profile: MigProfile) -> Option<u8> {
     profile
         .legal_starts()
@@ -146,9 +281,10 @@ pub fn first_fit_start(mask: u8, profile: MigProfile) -> Option<u8> {
 }
 
 /// Free slices on `mask` that **no** legal free placement of `profile`
-/// could consume — the slice-level FGD fragment count (in slices).
+/// could consume — the slice-level FGD fragment count (in slices). The
+/// mask must belong to a GPU of the profile's lattice.
 pub fn frag_slices(mask: u8, profile: MigProfile) -> u8 {
-    let free = !mask & FULL_MASK;
+    let free = !mask & profile.lattice().full_mask();
     if free == 0 {
         return 0;
     }
@@ -169,10 +305,13 @@ pub struct MigInstance {
     pub start: u8,
 }
 
-/// Per-GPU partition state: the occupancy bitmask plus the resident
-/// instance list (instances of equal profile are fungible).
+/// Per-GPU partition state: the lattice model, the occupancy bitmask,
+/// and the resident instance list (instances of equal profile are
+/// fungible).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct MigGpu {
+    /// The partition lattice this GPU exposes.
+    pub lattice: MigLattice,
     /// Occupied-slice bitmask (bit `i` ⇔ slice `i` in use).
     pub mask: u8,
     /// Resident instances; `mask` is always their window union.
@@ -185,9 +324,19 @@ pub struct MigGpu {
 pub type RepackPlan = (Vec<(usize, u8)>, u32);
 
 impl MigGpu {
-    /// Fresh, unpartitioned GPU.
+    /// Fresh, unpartitioned A100-lattice GPU.
     pub fn new() -> MigGpu {
-        MigGpu { mask: 0, instances: Vec::new() }
+        MigGpu::with_lattice(MigLattice::A100)
+    }
+
+    /// Fresh, unpartitioned GPU of the given lattice.
+    pub fn with_lattice(lattice: MigLattice) -> MigGpu {
+        MigGpu { lattice, mask: 0, instances: Vec::new() }
+    }
+
+    /// Total slices of this GPU's lattice.
+    pub fn total_slices(&self) -> u8 {
+        self.lattice.slices()
     }
 
     /// Occupied slices.
@@ -197,22 +346,30 @@ impl MigGpu {
 
     /// Free slices.
     pub fn free_slices(&self) -> u8 {
-        MIG_SLICES - self.used_slices()
+        self.total_slices() - self.used_slices()
     }
 
-    /// Allocated fraction of the GPU (`used / 7`) — the value mirrored
-    /// into [`crate::cluster::node::Node::gpu_alloc`].
+    /// Allocated fraction of the GPU (`used / lattice slices`) — the
+    /// value mirrored into [`crate::cluster::node::Node::gpu_alloc`].
     pub fn alloc_fraction(&self) -> f64 {
-        self.used_slices() as f64 / MIG_SLICES as f64
+        self.used_slices() as f64 / self.total_slices() as f64
     }
 
-    /// First free legal start for `profile` (preferred order).
+    /// First free legal start for `profile` (preferred order); `None`
+    /// when the profile belongs to another lattice.
     pub fn can_place(&self, profile: MigProfile) -> Option<u8> {
+        if profile.lattice() != self.lattice {
+            return None;
+        }
         first_fit_start(self.mask, profile)
     }
 
-    /// All free legal starts for `profile`, preferred order.
+    /// All free legal starts for `profile`, preferred order (empty for
+    /// foreign-lattice profiles).
     pub fn free_starts(&self, profile: MigProfile) -> Vec<u8> {
+        if profile.lattice() != self.lattice {
+            return Vec::new();
+        }
         profile
             .legal_starts()
             .iter()
@@ -222,9 +379,10 @@ impl MigGpu {
     }
 
     /// Place an instance; returns `false` (state untouched) when the
-    /// start is illegal or the window overlaps.
+    /// profile belongs to another lattice, the start is illegal or the
+    /// window overlaps.
     pub fn place(&mut self, profile: MigProfile, start: u8) -> bool {
-        if !profile.legal_starts().contains(&start) {
+        if profile.lattice() != self.lattice || !profile.legal_starts().contains(&start) {
             return false;
         }
         let w = window_mask(profile, start);
@@ -257,14 +415,33 @@ impl MigGpu {
         }
     }
 
+    /// Slice-fragmentation ratio of this GPU: the share of its free
+    /// slices that no legal free placement of the *widest profile that
+    /// could still fit* (by raw free capacity) can consume. 0 on empty
+    /// and full GPUs; 1 when the free capacity exists but the widest
+    /// candidate profile is fully locked out of it. This is the trigger
+    /// signal of the proactive repartitioner
+    /// ([`crate::sched::policies::mig::RepartitionConfig::frag_threshold`]).
+    pub fn frag_ratio(&self) -> f64 {
+        let free = self.free_slices();
+        if free == 0 {
+            return 0.0;
+        }
+        match self.lattice.widest_fitting(free) {
+            Some(p) => frag_slices(self.mask, p) as f64 / free as f64,
+            None => 0.0,
+        }
+    }
+
     /// Plan a repack that opens a legal start for `profile` without
     /// changing which instances are resident: re-place `profile` plus
-    /// all residents first-fit-decreasing on an empty lattice (3g
-    /// prefers start 4, so `{3g,2g,2g}`-style sets pack). Returns
-    /// `None` when the profile cannot fit even after repacking (or the
-    /// greedy order fails); `Some((plan, 0))` when it already fits.
+    /// all residents first-fit-decreasing on an empty lattice (the A100
+    /// 3g prefers start 4, so `{3g,2g,2g}`-style sets pack). Returns
+    /// `None` when the profile belongs to another lattice or cannot fit
+    /// even after repacking (or the greedy order fails);
+    /// `Some((plan, 0))` when it already fits.
     pub fn repack_plan(&self, profile: MigProfile) -> Option<RepackPlan> {
-        if self.free_slices() < profile.slices() {
+        if profile.lattice() != self.lattice || self.free_slices() < profile.slices() {
             return None;
         }
         if self.can_place(profile).is_some() {
@@ -316,17 +493,42 @@ mod tests {
     #[test]
     fn profile_table() {
         let widths: Vec<u8> = MigProfile::ALL.iter().map(|p| p.slices()).collect();
-        assert_eq!(widths, vec![1, 2, 3, 4, 7]);
+        assert_eq!(widths, vec![1, 2, 3, 4, 7, 1, 2, 4]);
         for p in MigProfile::ALL {
             assert_eq!(MigProfile::from_index(p.index()), Some(p));
             assert_eq!(MigProfile::parse(&p.to_string()), Some(p));
-            // Every legal start keeps the window inside the 7 slices.
+            // Every legal start keeps the window inside the lattice.
             for &s in p.legal_starts() {
-                assert!(s + p.slices() <= MIG_SLICES, "{p} @ {s} overflows");
+                assert!(s + p.slices() <= p.lattice().slices(), "{p} @ {s} overflows");
             }
         }
         assert_eq!(MigProfile::parse("5g"), None);
+        assert_eq!(MigProfile::parse("a30-3g"), None);
         assert!((MigProfile::P7g.units() - 1.0).abs() < 1e-12);
+        assert!((MigProfile::A30P4g.units() - 1.0).abs() < 1e-12);
+        assert!((MigProfile::A30P2g.units() - 0.5).abs() < 1e-12);
+        assert!(MigProfile::P7g.is_full_gpu());
+        assert!(MigProfile::A30P4g.is_full_gpu());
+        assert!(!MigProfile::P4g.is_full_gpu());
+    }
+
+    #[test]
+    fn lattice_tables() {
+        assert_eq!(MigLattice::A100.slices(), 7);
+        assert_eq!(MigLattice::A30.slices(), 4);
+        assert_eq!(MigLattice::A100.full_mask(), 0b111_1111);
+        assert_eq!(MigLattice::A30.full_mask(), 0b1111);
+        for lat in MigLattice::ALL {
+            for p in lat.profiles() {
+                assert_eq!(p.lattice(), lat);
+            }
+        }
+        assert_eq!(MigLattice::A100.widest_fitting(7), Some(MigProfile::P7g));
+        assert_eq!(MigLattice::A100.widest_fitting(6), Some(MigProfile::P4g));
+        assert_eq!(MigLattice::A100.widest_fitting(0), None);
+        assert_eq!(MigLattice::A30.widest_fitting(3), Some(MigProfile::A30P2g));
+        assert_eq!(MigLattice::for_gpu(GpuModel::A30), MigLattice::A30);
+        assert_eq!(MigLattice::for_gpu(GpuModel::G3), MigLattice::A100);
     }
 
     #[test]
@@ -334,7 +536,9 @@ mod tests {
         assert_eq!(window_mask(MigProfile::P1g, 6), 0b100_0000);
         assert_eq!(window_mask(MigProfile::P2g, 2), 0b000_1100);
         assert_eq!(window_mask(MigProfile::P4g, 0), 0b000_1111);
-        assert_eq!(window_mask(MigProfile::P7g, 0), FULL_MASK);
+        assert_eq!(window_mask(MigProfile::P7g, 0), MigLattice::A100.full_mask());
+        assert_eq!(window_mask(MigProfile::A30P2g, 2), 0b1100);
+        assert_eq!(window_mask(MigProfile::A30P4g, 0), MigLattice::A30.full_mask());
     }
 
     #[test]
@@ -355,31 +559,57 @@ mod tests {
     }
 
     #[test]
-    fn every_greedy_fill_stays_within_seven_slices() {
-        // Exhaustively place profiles in every 5^4 short sequence; the
-        // mask can never exceed 7 slices and used+free is invariant.
-        for a in 0..5usize {
-            for b in 0..5usize {
-                for c in 0..5usize {
-                    for d in 0..5usize {
-                        let mut g = MigGpu::new();
-                        let mut placed = Vec::new();
-                        for idx in [a, b, c, d] {
-                            let p = MigProfile::ALL[idx];
-                            if let Some(s) = g.can_place(p) {
-                                assert!(g.place(p, s));
-                                placed.push((p, s));
+    fn a30_lattice_legality() {
+        let mut g = MigGpu::with_lattice(MigLattice::A30);
+        // a30-2g + a30-2g fill the GPU; a third is illegal.
+        assert_eq!(g.can_place(MigProfile::A30P2g), Some(0));
+        assert!(g.place(MigProfile::A30P2g, 0));
+        assert_eq!(g.can_place(MigProfile::A30P2g), Some(2));
+        assert!(g.place(MigProfile::A30P2g, 2));
+        assert_eq!(g.free_slices(), 0);
+        assert_eq!(g.can_place(MigProfile::A30P1g), None);
+        assert!((g.alloc_fraction() - 1.0).abs() < 1e-12);
+        // Foreign-lattice profiles are rejected outright.
+        let mut g = MigGpu::with_lattice(MigLattice::A30);
+        assert_eq!(g.can_place(MigProfile::P2g), None);
+        assert!(!g.place(MigProfile::P2g, 0));
+        assert!(g.free_starts(MigProfile::P1g).is_empty());
+        assert!(g.repack_plan(MigProfile::P1g).is_none());
+        let mut a100 = MigGpu::new();
+        assert!(!a100.place(MigProfile::A30P1g, 0));
+    }
+
+    #[test]
+    fn every_greedy_fill_stays_within_lattice() {
+        // Exhaustively place profiles in every short sequence over each
+        // lattice's profile set; the mask can never exceed the lattice
+        // and used+free is invariant.
+        for lat in MigLattice::ALL {
+            let profiles = lat.profiles();
+            let k = profiles.len();
+            for a in 0..k {
+                for b in 0..k {
+                    for c in 0..k {
+                        for d in 0..k {
+                            let mut g = MigGpu::with_lattice(lat);
+                            let mut placed = Vec::new();
+                            for idx in [a, b, c, d] {
+                                let p = profiles[idx];
+                                if let Some(s) = g.can_place(p) {
+                                    assert!(g.place(p, s));
+                                    placed.push((p, s));
+                                }
                             }
+                            let total: u8 = placed.iter().map(|(p, _)| p.slices()).sum();
+                            assert!(total <= lat.slices());
+                            assert_eq!(g.used_slices(), total);
+                            assert_eq!(g.used_slices() + g.free_slices(), lat.slices());
+                            // Round-trip: release everything -> empty GPU.
+                            for (p, s) in placed {
+                                assert!(g.release(p, Some(s)));
+                            }
+                            assert_eq!(g, MigGpu::with_lattice(lat));
                         }
-                        let total: u8 = placed.iter().map(|(p, _)| p.slices()).sum();
-                        assert!(total <= MIG_SLICES);
-                        assert_eq!(g.used_slices(), total);
-                        assert_eq!(g.used_slices() + g.free_slices(), MIG_SLICES);
-                        // Round-trip: release everything -> empty GPU.
-                        for (p, s) in placed {
-                            assert!(g.release(p, Some(s)));
-                        }
-                        assert_eq!(g, MigGpu::new());
                     }
                 }
             }
@@ -409,7 +639,41 @@ mod tests {
         assert_eq!(frag_slices(0, MigProfile::P4g), 3);
         assert_eq!(frag_slices(0, MigProfile::P7g), 0);
         // Full GPU: nothing free, nothing fragmented.
-        assert_eq!(frag_slices(FULL_MASK, MigProfile::P1g), 0);
+        assert_eq!(frag_slices(MigLattice::A100.full_mask(), MigProfile::P1g), 0);
+        // A30: slice 1 occupied -> a30-2g can only use start 2, so
+        // slice 0 is a fragment; a30-4g is locked out entirely.
+        assert_eq!(frag_slices(0b0010, MigProfile::A30P2g), 1);
+        assert_eq!(frag_slices(0b0010, MigProfile::A30P4g), 3);
+        assert_eq!(frag_slices(0b0000, MigProfile::A30P4g), 0);
+    }
+
+    #[test]
+    fn frag_ratio_tracks_lattice_damage() {
+        // Empty GPU: no fragmentation.
+        assert_eq!(MigGpu::new().frag_ratio(), 0.0);
+        // 1g at slice 0: the widest fitting profile (4g over 6 free
+        // slices) is fully locked out -> ratio 1.
+        let mut g = MigGpu::new();
+        g.place(MigProfile::P1g, 0);
+        assert!((g.frag_ratio() - 1.0).abs() < 1e-12);
+        // Repacking toward the widest fitting profile moves the 1g high
+        // and repairs it (the proactive repartitioner's move).
+        let widest = g.lattice.widest_fitting(g.free_slices()).unwrap();
+        assert_eq!(widest, MigProfile::P4g);
+        let (plan, moved) = g.repack_plan(widest).unwrap();
+        assert!(moved > 0);
+        g.apply_repack(&plan);
+        assert!(g.frag_ratio() < 1.0 - 1e-12);
+        assert_eq!(g.can_place(MigProfile::P4g), Some(0));
+        // Full GPU: no free slices, no fragmentation.
+        let mut g = MigGpu::new();
+        g.place(MigProfile::P7g, 0);
+        assert_eq!(g.frag_ratio(), 0.0);
+        // A30 checkerboard {1g@1}: a30-2g only fits at start 2 ->
+        // slice 0 fragments; ratio = 1/3.
+        let mut g = MigGpu::with_lattice(MigLattice::A30);
+        g.place(MigProfile::A30P1g, 1);
+        assert!((g.frag_ratio() - 1.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]
@@ -439,6 +703,21 @@ mod tests {
         assert_eq!(g.used_slices(), 5); // same residents, new starts
         let s = g.can_place(MigProfile::P2g).expect("2g start open after repack");
         assert!(g.place(MigProfile::P2g, s));
+        assert_eq!(g.free_slices(), 0);
+    }
+
+    #[test]
+    fn a30_repack_opens_room() {
+        // {1g@1} blocks an a30-2g at start 0; repack packs the 1g away.
+        let mut g = MigGpu::with_lattice(MigLattice::A30);
+        assert!(g.place(MigProfile::A30P1g, 1));
+        assert!(g.place(MigProfile::A30P1g, 3));
+        assert_eq!(g.can_place(MigProfile::A30P2g), None);
+        let (plan, moved) = g.repack_plan(MigProfile::A30P2g).expect("2 slices free");
+        assert!(moved > 0);
+        g.apply_repack(&plan);
+        let s = g.can_place(MigProfile::A30P2g).expect("open after repack");
+        assert!(g.place(MigProfile::A30P2g, s));
         assert_eq!(g.free_slices(), 0);
     }
 

@@ -1,7 +1,7 @@
 //! The simulated GPU datacenter: hardware types, node state, the
-//! A100-style MIG partition lattice ([`mig`]), the cluster-inventory
-//! generator reproducing the paper's Table II, and the aggregate
-//! [`datacenter::Datacenter`] state.
+//! per-model MIG partition lattices ([`mig`]: A100-7g, A30-4g), the
+//! cluster-inventory generator reproducing the paper's Table II, and
+//! the aggregate [`datacenter::Datacenter`] state.
 
 pub mod datacenter;
 pub mod inventory;
@@ -11,6 +11,6 @@ pub mod types;
 
 pub use datacenter::Datacenter;
 pub use inventory::ClusterSpec;
-pub use mig::{MigGpu, MigInstance, MigProfile};
+pub use mig::{MigGpu, MigInstance, MigLattice, MigProfile};
 pub use node::{Node, Placement, ResourceView};
 pub use types::{CpuModel, GpuModel};

@@ -1,7 +1,9 @@
 //! Node state: allocated/unallocated resource vectors (`R_n`, `Ra_n`),
 //! feasibility (Cond. 1–3 + constraints), placements and allocation.
 
-use crate::cluster::mig::{first_fit_start, window_mask, MigGpu, MigProfile, RepackPlan};
+use crate::cluster::mig::{
+    first_fit_start, window_mask, MigGpu, MigLattice, MigProfile, RepackPlan,
+};
 use crate::cluster::types::{CpuModel, GpuModel};
 use crate::tasks::{GpuDemand, Task, NUM_BUCKETS};
 
@@ -43,9 +45,16 @@ pub trait ResourceView {
     /// Allocated fraction of GPU `g` (`Ra_{n,g}^GPU ∈ [0,1]`).
     fn gpu_alloc_of(&self, g: usize) -> f64;
     /// MIG occupancy bitmask of GPU `g`, or `None` when the node is not
-    /// MIG-enabled. MIG nodes report `gpu_alloc_of = used_slices / 7`,
-    /// so every slice-free aggregate below stays consistent.
+    /// MIG-enabled. MIG nodes report `gpu_alloc_of = used_slices /
+    /// lattice slices`, so every slice-free aggregate below stays
+    /// consistent.
     fn mig_mask_of(&self, _g: usize) -> Option<u8> {
+        None
+    }
+    /// The partition lattice of the node's GPUs, or `None` when the
+    /// node is not MIG-enabled. Nodes are lattice-homogeneous (one GPU
+    /// model per node).
+    fn mig_lattice(&self) -> Option<MigLattice> {
         None
     }
     /// True when the node's GPUs are MIG-partitioned. MIG nodes host
@@ -125,7 +134,7 @@ pub trait ResourceView {
                         !self.is_mig() && self.gpus_fully_free() >= k as usize
                     }
                     GpuDemand::Mig(p) => {
-                        self.is_mig()
+                        self.mig_lattice() == Some(p.lattice())
                             && (0..self.n_gpus()).any(|g| {
                                 self.mig_mask_of(g)
                                     .is_some_and(|m| first_fit_start(m, p).is_some())
@@ -152,9 +161,9 @@ pub struct Node {
     /// Allocated memory (MiB).
     pub mem_alloc: f64,
     /// Per-GPU allocated fraction. On MIG nodes this mirrors
-    /// `mig[g].alloc_fraction()` (slices/7) so every fraction-based
-    /// aggregate (power Eq. 2 activity, GRAR caches, `u_n`) keeps
-    /// working at slice granularity.
+    /// `mig[g].alloc_fraction()` (used slices / lattice slices) so
+    /// every fraction-based aggregate (power Eq. 2 activity, GRAR
+    /// caches, `u_n`) keeps working at slice granularity.
     pub gpu_alloc: Vec<f64>,
     /// MIG partition state per GPU; `None` for non-MIG nodes.
     pub mig: Option<Vec<MigGpu>>,
@@ -191,11 +200,14 @@ impl Node {
         }
     }
 
-    /// Turn the (empty) node's GPUs into MIG-partitioned devices.
+    /// Turn the (empty) node's GPUs into MIG-partitioned devices using
+    /// the lattice of the node's GPU model
+    /// ([`MigLattice::for_gpu`]: A30 → 4-slice, otherwise A100-style).
     pub fn enable_mig(&mut self) {
         assert_eq!(self.n_tasks, 0, "enable MIG only on an empty node");
-        assert!(self.gpu_model.is_some(), "MIG requires GPUs");
-        self.mig = Some(vec![MigGpu::new(); self.gpu_alloc.len()]);
+        let model = self.gpu_model.expect("MIG requires GPUs");
+        let lattice = MigLattice::for_gpu(model);
+        self.mig = Some(vec![MigGpu::with_lattice(lattice); self.gpu_alloc.len()]);
     }
 
     /// Plan a repack of GPU `gpu` that opens a legal start for
@@ -277,6 +289,7 @@ impl Node {
             (GpuDemand::Mig(p), Placement::MigSlice { gpu, start }) => {
                 self.mig.as_ref().is_some_and(|migs| {
                     *gpu < migs.len()
+                        && migs[*gpu].lattice == p.lattice()
                         && p.legal_starts().contains(start)
                         && migs[*gpu].mask & window_mask(p, *start) == 0
                 })
@@ -385,6 +398,12 @@ impl ResourceView for Node {
     fn mig_mask_of(&self, g: usize) -> Option<u8> {
         self.mig.as_ref().map(|m| m[g].mask)
     }
+    fn mig_lattice(&self) -> Option<MigLattice> {
+        // The per-GPU lattice tag is authoritative (nodes are
+        // lattice-homogeneous: `enable_mig` partitions every GPU with
+        // the model's lattice).
+        self.mig.as_ref()?.first().map(|g| g.lattice)
+    }
     fn is_mig(&self) -> bool {
         self.mig.is_some()
     }
@@ -452,6 +471,9 @@ impl ResourceView for Hypothetical<'_> {
             }
             _ => base,
         })
+    }
+    fn mig_lattice(&self) -> Option<MigLattice> {
+        self.node.mig_lattice()
     }
     fn is_mig(&self) -> bool {
         self.node.mig.is_some()

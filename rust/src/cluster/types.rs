@@ -3,10 +3,14 @@
 
 use std::fmt;
 
-/// GPU models present in the 2023 Alibaba GPU trace (paper Table II).
+/// GPU models present in the 2023 Alibaba GPU trace (paper Table II),
+/// plus the A30 used by the heterogeneous-MIG-fleet extension.
 ///
 /// `G2` and `G3` are the two classified Alibaba models; following the
-/// paper we map G2 → A10 and G3 → A100 power profiles.
+/// paper we map G2 → A10 and G3 → A100 power profiles. `A30` (idle
+/// ~30 W, 165 W TDP, 4-slice MIG lattice) is not part of the paper's
+/// inventory (`paper_count` 0); mixed-fleet MIG clusters add it via
+/// [`crate::cluster::ClusterSpec::mig_het_cluster`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum GpuModel {
     V100M16,
@@ -16,11 +20,13 @@ pub enum GpuModel {
     A10,
     G2,
     G3,
+    A30,
 }
 
 impl GpuModel {
-    /// All models, in Table II order.
-    pub const ALL: [GpuModel; 7] = [
+    /// All models, in Table II order (A30 appended last so the dense
+    /// indices of the paper models stay stable).
+    pub const ALL: [GpuModel; 8] = [
         GpuModel::V100M16,
         GpuModel::V100M32,
         GpuModel::P100,
@@ -28,6 +34,7 @@ impl GpuModel {
         GpuModel::A10,
         GpuModel::G2,
         GpuModel::G3,
+        GpuModel::A30,
     ];
 
     /// Idle power draw in Watt (`p_idle` in Eq. 2).
@@ -38,6 +45,7 @@ impl GpuModel {
             GpuModel::T4 => 10.0,
             GpuModel::A10 | GpuModel::G2 => 30.0,
             GpuModel::G3 => 50.0,
+            GpuModel::A30 => 30.0,
         }
     }
 
@@ -49,6 +57,7 @@ impl GpuModel {
             GpuModel::T4 => 70.0,
             GpuModel::A10 | GpuModel::G2 => 150.0,
             GpuModel::G3 => 400.0,
+            GpuModel::A30 => 165.0,
         }
     }
 
@@ -62,6 +71,7 @@ impl GpuModel {
             GpuModel::A10 => 2,
             GpuModel::G2 => 4392,
             GpuModel::G3 => 312,
+            GpuModel::A30 => 0,
         }
     }
 
@@ -85,6 +95,7 @@ impl GpuModel {
             "A10" => Some(GpuModel::A10),
             "G2" => Some(GpuModel::G2),
             "G3" => Some(GpuModel::G3),
+            "A30" => Some(GpuModel::A30),
             _ => None,
         }
     }
@@ -100,6 +111,7 @@ impl fmt::Display for GpuModel {
             GpuModel::A10 => "A10",
             GpuModel::G2 => "G2",
             GpuModel::G3 => "G3",
+            GpuModel::A30 => "A30",
         };
         f.write_str(s)
     }
@@ -176,14 +188,22 @@ mod tests {
         for m in GpuModel::ALL {
             assert_eq!(GpuModel::from_index(m.index()), Some(m));
         }
-        assert_eq!(GpuModel::from_index(7), None);
+        assert_eq!(GpuModel::from_index(8), None);
     }
 
     #[test]
     fn parse_names() {
         assert_eq!(GpuModel::parse("t4"), Some(GpuModel::T4));
         assert_eq!(GpuModel::parse("g3"), Some(GpuModel::G3));
+        assert_eq!(GpuModel::parse("a30"), Some(GpuModel::A30));
         assert_eq!(GpuModel::parse("H100"), None);
+    }
+
+    #[test]
+    fn a30_profile_outside_paper_inventory() {
+        assert_eq!(GpuModel::A30.p_idle(), 30.0);
+        assert_eq!(GpuModel::A30.p_max(), 165.0);
+        assert_eq!(GpuModel::A30.paper_count(), 0);
     }
 
     #[test]

@@ -63,6 +63,12 @@ impl Default for ExpConfig {
 pub const FIG2_ALPHAS: [f64; 13] =
     [0.02, 0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 0.93, 1.0];
 
+/// `ext-mig-het` knobs: share of MIG demand targeting the A30 lattice,
+/// and the proactive slice-fragmentation threshold
+/// ([`crate::sched::policies::RepartitionConfig::frag_threshold`]).
+pub const MIG_HET_A30_SHARE: f64 = 0.4;
+pub const MIG_HET_FRAG_THRESHOLD: f64 = 0.5;
+
 /// The three selected combinations (§VI-B) + the four competitors used
 /// in Figs. 3–10.
 pub fn comparison_policies() -> Vec<PolicyKind> {
@@ -128,9 +134,7 @@ impl Harness {
             reps: self.cfg.reps,
             base_seed: self.cfg.seed,
             target_ratio: self.cfg.target,
-            record_frag: false,
-            deterministic_ties: false,
-            mig_repartition: false,
+            ..Default::default()
         };
         let runs = run_repetitions(&self.cluster, trace, policy, &rcfg);
         let series: Vec<_> = runs.into_iter().map(|r| r.series).collect();
@@ -184,12 +188,13 @@ impl Harness {
             "ext-dynalpha" => self.ext_dynalpha(),
             "ext-steady" => self.ext_steady(),
             "ext-mig" => self.ext_mig(),
+            "ext-mig-het" => self.ext_mig_het(),
             "ablation-tiebreak" => self.ablation_tiebreak(),
             "all" => {
                 let ids = [
                     "table1", "table2", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
                     "fig7", "fig8", "fig9", "fig10", "ext-dynalpha", "ext-steady",
-                    "ext-mig", "ablation-tiebreak",
+                    "ext-mig", "ext-mig-het", "ablation-tiebreak",
                 ];
                 let mut out = Vec::new();
                 for id in ids {
@@ -315,8 +320,8 @@ impl Harness {
             base_seed: self.cfg.seed,
             target_ratio: self.cfg.target,
             record_frag: true,
-            deterministic_ties: false,
             mig_repartition: true,
+            ..Default::default()
         };
         let mut headers = vec!["x".to_string()];
         headers.extend(policies.iter().map(|p| p.label()));
@@ -407,6 +412,151 @@ impl Harness {
         Ok(out)
     }
 
+    /// Extension: heterogeneous MIG fleets. Runs the inflation protocol
+    /// over a mixed A100 (7-slice lattice) + A30 (4-slice lattice)
+    /// cluster with the `mig-het-*` demand mix, the MIG policy family,
+    /// and the repartitioner in *proactive* mode (frag-threshold
+    /// repacks ahead of demand). Emits overall **and per-lattice-model**
+    /// EOPC / fragmentation / GRAR series, plus a churn table with the
+    /// reactive/proactive repartition counters.
+    fn ext_mig_het(&mut self) -> Result<Vec<String>> {
+        use crate::metrics::Column::{
+            Eopc, EopcA100, EopcA30, Frag, FragA100, FragA30, Grar, GrarA100, GrarA30,
+        };
+        use crate::sim::events::{SteadyConfig, SteadySim};
+        use crate::sim::{run_repetitions, RepeatConfig};
+        let n_a100 = ((20.0 * self.cfg.scale).round() as usize).clamp(4, 40);
+        let n_a30 = ((12.0 * self.cfg.scale).round() as usize).clamp(4, 24);
+        let cluster = ClusterSpec::mig_het_cluster(n_a100, n_a30, 8, (n_a100 + n_a30) / 8);
+        let trace = TraceSpec::mig_het_trace(0.3, MIG_HET_A30_SHARE);
+        let policies = [
+            PolicyKind::MigBestFit,
+            PolicyKind::MigSliceFit,
+            PolicyKind::MigFgd,
+            PolicyKind::MigPwr,
+            PolicyKind::MigPwrFgd { alpha: 0.1 },
+        ];
+        let rcfg = RepeatConfig {
+            reps: self.cfg.reps,
+            base_seed: self.cfg.seed,
+            target_ratio: self.cfg.target,
+            record_frag: true,
+            mig_repartition: true,
+            mig_frag_threshold: MIG_HET_FRAG_THRESHOLD,
+            ..Default::default()
+        };
+        // Per policy: (total, A100, A30) columns for each metric.
+        let mut headers = vec!["x".to_string()];
+        for p in &policies {
+            for suffix in ["", ":A100-7g", ":A30-4g"] {
+                headers.push(format!("{}{}", p.label(), suffix));
+            }
+        }
+        let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut eopc_cols: Vec<Vec<f64>> = Vec::new();
+        let mut frag_cols: Vec<Vec<f64>> = Vec::new();
+        let mut grar_cols: Vec<Vec<f64>> = Vec::new();
+        let mut churn_rows = Vec::new();
+        for &policy in &policies {
+            eprintln!(
+                "[experiment] running {} / {} ({} reps, {} A100 + {} A30 nodes)…",
+                trace.name,
+                policy.label(),
+                rcfg.reps,
+                n_a100,
+                n_a30
+            );
+            let runs = run_repetitions(&cluster, &trace, policy, &rcfg);
+            let n = runs.len().max(1) as f64;
+            let mean_of = |f: &dyn Fn(&crate::sim::RunResult) -> f64| -> f64 {
+                runs.iter().map(f).sum::<f64>() / n
+            };
+            churn_rows.push((
+                policy.label(),
+                mean_of(&|r| r.repartitions as f64),
+                mean_of(&|r| r.proactive_repartitions as f64),
+                mean_of(&|r| r.migrated_slices as f64),
+            ));
+            let series: Vec<_> = runs.into_iter().map(|r| r.series).collect();
+            for (cols, group) in [
+                (&mut eopc_cols, [Eopc, EopcA100, EopcA30]),
+                (&mut frag_cols, [Frag, FragA100, FragA30]),
+                (&mut grar_cols, [Grar, GrarA100, GrarA30]),
+            ] {
+                for col in group {
+                    cols.push(average_on_grid(&series, col, &self.grid));
+                }
+            }
+        }
+        let mut out = Vec::new();
+        for (name, cols, scale) in [
+            ("ext_mig_het_eopc_kw.csv", &eopc_cols, 1e-3),
+            ("ext_mig_het_frag_gpus.csv", &frag_cols, 1.0),
+            ("ext_mig_het_grar.csv", &grar_cols, 1.0),
+        ] {
+            let path = self.out_path(name);
+            let mut w = CsvWriter::create(&path, &header_refs)?;
+            for (i, &x) in self.grid.iter().enumerate() {
+                let mut row = vec![x];
+                for c in cols.iter() {
+                    row.push(c[i] * scale);
+                }
+                w.row(&row)?;
+            }
+            w.flush()?;
+            out.push(path);
+        }
+        // Churn: inflation counters + a steady-state run per policy with
+        // the same proactive threshold.
+        let path = self.out_path("ext_mig_het_churn.csv");
+        let mut w = CsvWriter::create(
+            &path,
+            &[
+                "policy", "inflation_repartitions", "inflation_proactive",
+                "inflation_migrated_slices", "steady_eopc_kw", "steady_util",
+                "failure_rate", "steady_repartitions", "steady_proactive",
+                "steady_migrated_slices",
+            ],
+        )?;
+        for (pi, &policy) in policies.iter().enumerate() {
+            let cfg = SteadyConfig {
+                mean_interarrival_s: 1.0,
+                mean_duration_s: 400.0,
+                horizon_s: 4_000.0,
+                sample_every_s: 50.0,
+                seed: self.cfg.seed,
+            };
+            let mut sim = SteadySim::new(
+                cluster.build(),
+                crate::sched::Scheduler::from_policy(policy),
+                &trace,
+                &cfg,
+            );
+            sim.repartitioner = Some(crate::sched::policies::MigRepartitioner::new(
+                crate::sched::policies::RepartitionConfig::with_threshold(
+                    MIG_HET_FRAG_THRESHOLD,
+                ),
+            ));
+            let r = sim.run(&cfg);
+            let (label, infl_re, infl_pro, infl_slices) = &churn_rows[pi];
+            w.row_str(&[
+                label.clone(),
+                format!("{infl_re:.1}"),
+                format!("{infl_pro:.1}"),
+                format!("{infl_slices:.1}"),
+                format!("{:.1}", r.steady_eopc_w / 1e3),
+                format!("{:.4}", r.steady_util),
+                format!("{:.4}", r.failed as f64 / r.arrivals.max(1) as f64),
+                format!("{}", r.repartitions),
+                format!("{}", r.proactive_repartitions),
+                format!("{}", r.migrated_slices),
+            ])?;
+        }
+        w.flush()?;
+        out.push(path);
+        Ok(out)
+    }
+
     /// Ablation: Kubernetes' random tie-break vs deterministic
     /// lowest-id selection. Shows how much of both FGD's EOPC *and*
     /// PWR's advantage rides on `selectHost` semantics.
@@ -422,9 +572,8 @@ impl Harness {
                 reps: h.cfg.reps,
                 base_seed: h.cfg.seed,
                 target_ratio: h.cfg.target,
-                record_frag: false,
                 deterministic_ties: det,
-                mig_repartition: false,
+                ..Default::default()
             };
             let runs = run_repetitions(&h.cluster, &trace, p, &rcfg);
             let series: Vec<_> = runs.into_iter().map(|r| r.series).collect();

@@ -19,16 +19,18 @@
 //! and the datacenter's is `F_dc = Σ_n F_n(M)` (Eq. 4).
 //!
 //! **MIG extension** (see [`crate::cluster::mig`]): for a class
-//! demanding a MIG profile `p` on a MIG-partitioned node, a free slice
-//! is a fragment iff no legal free placement of `p` could consume it
-//! ([`crate::cluster::mig::frag_slices`]), measured in GPU units
-//! (slices / 7). This reduces to the per-GPU rule above when the
-//! profile's windows cover every free slice, and additionally captures
-//! lattice fragmentation (e.g. slice 6 is unusable by any ≥2g profile).
-//! MIG classes on non-MIG nodes — and fractional/whole classes on MIG
-//! nodes — cannot run, so case 1 applies and every free unit fragments.
+//! demanding a MIG profile `p` on a MIG-partitioned node of `p`'s
+//! lattice, a free slice is a fragment iff no legal free placement of
+//! `p` could consume it ([`crate::cluster::mig::frag_slices`]),
+//! measured in GPU units (slices / lattice slices). This reduces to the
+//! per-GPU rule above when the profile's windows cover every free
+//! slice, and additionally captures lattice fragmentation (e.g. A100
+//! slice 6 is unusable by any ≥2g profile). MIG classes on non-MIG
+//! nodes or on nodes of the *other* lattice — and fractional/whole
+//! classes on MIG nodes — cannot run, so case 1 applies and every free
+//! unit fragments.
 
-use crate::cluster::mig::{self, MigProfile};
+use crate::cluster::mig::{self, MigLattice, N_PROFILES};
 use crate::cluster::node::{ResourceView, EPS};
 use crate::cluster::Datacenter;
 use crate::tasks::{GpuDemand, TaskClass, Workload};
@@ -64,10 +66,13 @@ pub fn f_node_class<V: ResourceView + ?Sized>(v: &V, class: &TaskClass) -> f64 {
             frag
         }
         GpuDemand::Mig(p) => {
+            // Case-2 implies the node's lattice matches the profile's
+            // (`can_fit` gates the other combinations into case 1).
+            let slices = p.lattice().slices() as f64;
             let mut frag = 0.0;
             for g in 0..v.n_gpus() {
                 if let Some(mask) = v.mig_mask_of(g) {
-                    frag += mig::frag_slices(mask, p) as f64 / mig::MIG_SLICES as f64;
+                    frag += mig::frag_slices(mask, p) as f64 / slices;
                 }
             }
             frag
@@ -169,10 +174,13 @@ pub struct FragEval {
     partials_total: f64,
     /// MIG state: set by [`FragEval::from_mig_masks`].
     is_mig: bool,
-    /// Per-profile: some GPU has a legal free start.
-    mig_placeable: [bool; 5],
-    /// Per-profile: total fragment units (Σ_g frag_slices / 7).
-    mig_frag_units: [f64; 5],
+    /// Per-profile: some GPU has a legal free start (always false for
+    /// profiles of a lattice other than the node's).
+    mig_placeable: [bool; N_PROFILES],
+    /// Per-profile: total fragment units (Σ_g frag_slices / lattice
+    /// slices; 0 for foreign-lattice profiles, which are infeasible and
+    /// therefore scored with `sumfree`).
+    mig_frag_units: [f64; N_PROFILES],
 }
 
 impl FragEval {
@@ -188,8 +196,8 @@ impl FragEval {
             npart: 0,
             partials_total: 0.0,
             is_mig: false,
-            mig_placeable: [false; 5],
-            mig_frag_units: [0.0; 5],
+            mig_placeable: [false; N_PROFILES],
+            mig_frag_units: [0.0; N_PROFILES],
         };
         for &r in resid {
             e.sumfree += r;
@@ -218,26 +226,29 @@ impl FragEval {
     }
 
     /// Build from the per-GPU MIG occupancy masks of a (possibly
-    /// hypothetical) MIG-node state. Residual aggregates are derived as
-    /// free-slice fractions; per-profile placeability and fragment
-    /// totals are precomputed so every class costs O(1) in
-    /// [`FragEval::f_node`].
-    pub fn from_mig_masks(masks: &[u8]) -> FragEval {
+    /// hypothetical) MIG-node state on the given partition lattice.
+    /// Residual aggregates are derived as free-slice fractions;
+    /// per-profile placeability and fragment totals are precomputed so
+    /// every class costs O(1) in [`FragEval::f_node`]. Profiles of the
+    /// other lattice stay non-placeable (case 1: `sumfree`).
+    pub fn from_mig_masks(masks: &[u8], lattice: MigLattice) -> FragEval {
         debug_assert!(masks.len() <= MAX_GPUS);
+        let slices = lattice.slices();
         let mut resid = [0.0f64; MAX_GPUS];
         for (r, &m) in resid.iter_mut().zip(masks) {
-            *r = (mig::MIG_SLICES - m.count_ones() as u8) as f64 / mig::MIG_SLICES as f64;
+            *r = (slices - m.count_ones() as u8) as f64 / slices as f64;
         }
         let mut e = FragEval::from_residuals(&resid[..masks.len()]);
         e.is_mig = true;
-        for (pi, &p) in MigProfile::ALL.iter().enumerate() {
+        for &p in lattice.profiles() {
+            let pi = p.index();
             let mut frag = 0.0;
             let mut placeable = false;
             for &m in masks {
                 if mig::first_fit_start(m, p).is_some() {
                     placeable = true;
                 }
-                frag += mig::frag_slices(m, p) as f64 / mig::MIG_SLICES as f64;
+                frag += mig::frag_slices(m, p) as f64 / slices as f64;
             }
             e.mig_placeable[pi] = placeable;
             e.mig_frag_units[pi] = frag;
@@ -300,11 +311,12 @@ pub fn f_node_fast(node: &crate::cluster::node::Node, pw: &PreparedWorkload) -> 
     let g = node.gpu_alloc.len();
     let model_idx = node.gpu_model.map(|m| m.index() as i8).unwrap_or(-1);
     if let Some(migs) = &node.mig {
+        let lattice = node.mig_lattice().expect("MIG node has a lattice");
         let mut masks = [0u8; MAX_GPUS];
         for (m, mg) in masks.iter_mut().zip(migs) {
             *m = mg.mask;
         }
-        return FragEval::from_mig_masks(&masks[..g]).f_node(
+        return FragEval::from_mig_masks(&masks[..g], lattice).f_node(
             node.cpu_free(),
             node.mem_free(),
             model_idx,
@@ -331,6 +343,7 @@ pub fn frag_delta_fast(
     let g = node.gpu_alloc.len();
     let model_idx = node.gpu_model.map(|m| m.index() as i8).unwrap_or(-1);
     if let Some(migs) = &node.mig {
+        let lattice = node.mig_lattice().expect("MIG node has a lattice");
         let mut masks = [0u8; MAX_GPUS];
         for (m, mg) in masks.iter_mut().zip(migs) {
             *m = mg.mask;
@@ -338,7 +351,7 @@ pub fn frag_delta_fast(
         if let (GpuDemand::Mig(p), Placement::MigSlice { gpu, start }) = (task.gpu, placement) {
             masks[*gpu] |= mig::window_mask(p, *start);
         }
-        let after = FragEval::from_mig_masks(&masks[..g]).f_node(
+        let after = FragEval::from_mig_masks(&masks[..g], lattice).f_node(
             node.cpu_free() - task.cpu,
             node.mem_free() - task.mem,
             model_idx,

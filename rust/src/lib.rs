@@ -18,11 +18,14 @@
 //! assert this.
 //!
 //! Beyond the paper, the crate models **MIG partitioning**
-//! (`docs/mig.md`): an A100-style slice lattice on [`cluster::mig`],
-//! slice-granular demands ([`tasks::GpuDemand::Mig`]) and placements,
-//! slice-level fragmentation ([`frag`]) and per-slice power attribution
-//! ([`power`]), MIG-aware policies with an online repartitioner
-//! ([`sched::policies::mig`]), and the `ext-mig` experiment.
+//! (`docs/mig.md`): per-model slice lattices (A100-7g and A30-4g) on
+//! [`cluster::mig`], slice-granular demands
+//! ([`tasks::GpuDemand::Mig`]) and placements, slice-level
+//! fragmentation ([`frag`]) and per-slice power attribution
+//! ([`power`]), MIG-aware policies with an online repartitioner —
+//! reactive on placement failure, proactive past a configurable
+//! frag-ratio threshold — ([`sched::policies::mig`]), heterogeneous
+//! A100+A30 fleets, and the `ext-mig` / `ext-mig-het` experiments.
 //!
 //! ## Layer map
 //! * L3 (this crate): coordinator, simulator, policies (incl. the MIG

@@ -2,8 +2,9 @@
 //!
 //! ```text
 //! repro simulate   --policy pwrfgd:0.1 --trace default --seed 42 [--scale 0.25] [--target 1.02]
-//! repro experiment <table1|table2|fig1..fig10|ext-mig|all> [--reps 10] [--scale 1.0] [--out results]
+//! repro experiment <table1|table2|fig1..fig10|ext-mig|ext-mig-het|all> [--reps 10] [--scale 1.0] [--out results]
 //! repro ext-mig    [--reps 10] [--scale 1.0] [--out results]   (MIG subsystem end-to-end)
+//! repro ext-mig-het [--reps 10] [--scale 1.0] [--out results]  (mixed A100+A30 MIG fleet)
 //! repro trace      <default|multi-gpu-20|sharing-gpu-100|mig-30|...> [--seed 42]
 //! repro inventory
 //! repro serve      [--addr 127.0.0.1:7077] [--policy pwrfgd:0.1]
@@ -29,8 +30,10 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("simulate") => cmd_simulate(&args),
         Some("experiment") => cmd_experiment(&args, None),
-        // Shortcut: `repro ext-mig` runs the MIG-subsystem experiment.
+        // Shortcuts: `repro ext-mig` / `repro ext-mig-het` run the MIG
+        // subsystem / heterogeneous-fleet experiments.
         Some("ext-mig") => cmd_experiment(&args, Some("ext-mig")),
+        Some("ext-mig-het") => cmd_experiment(&args, Some("ext-mig-het")),
         Some("trace") => cmd_trace(&args),
         Some("inventory") => cmd_inventory(),
         Some("serve") => cmd_serve(&args),
@@ -38,7 +41,7 @@ fn main() -> Result<()> {
         Some("plot") => cmd_plot(&args),
         _ => {
             eprintln!(
-                "usage: repro <simulate|experiment|ext-mig|trace|inventory|serve|scorer-check|plot> [options]\n\
+                "usage: repro <simulate|experiment|ext-mig|ext-mig-het|trace|inventory|serve|scorer-check|plot> [options]\n\
                  see rust/src/main.rs header for details"
             );
             Ok(())

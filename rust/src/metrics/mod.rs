@@ -34,6 +34,15 @@ pub struct SeriesPoint {
     pub active_gpus: f64,
     /// Nodes with any allocation.
     pub active_nodes: f64,
+    /// Per-lattice-model breakdowns (heterogeneous MIG fleets): node
+    /// power, fragmentation and GRAR restricted to the nodes / demands
+    /// of one partition lattice. Zero on non-MIG runs.
+    pub eopc_a100: f64,
+    pub eopc_a30: f64,
+    pub frag_a100: f64,
+    pub frag_a30: f64,
+    pub grar_a100: f64,
+    pub grar_a30: f64,
 }
 
 /// Column selector for series extraction.
@@ -47,6 +56,12 @@ pub enum Column {
     Failures,
     ActiveGpus,
     ActiveNodes,
+    EopcA100,
+    EopcA30,
+    FragA100,
+    FragA30,
+    GrarA100,
+    GrarA30,
 }
 
 impl Column {
@@ -60,6 +75,12 @@ impl Column {
             Column::Failures => p.failures,
             Column::ActiveGpus => p.active_gpus,
             Column::ActiveNodes => p.active_nodes,
+            Column::EopcA100 => p.eopc_a100,
+            Column::EopcA30 => p.eopc_a30,
+            Column::FragA100 => p.frag_a100,
+            Column::FragA30 => p.frag_a30,
+            Column::GrarA100 => p.grar_a100,
+            Column::GrarA30 => p.grar_a30,
         }
     }
 }

@@ -12,18 +12,19 @@
 //! GPU, a MIG instance is hard-partitioned and cannot burst beyond its
 //! slices, so a partitioned GPU draws power *per slice* rather than
 //! jumping to `p_max` on first touch (Lipe et al.'s per-slice energy
-//! accounting, arXiv 2606.25082). With `a` of the 7 slices active on a
-//! powered GPU:
+//! accounting, arXiv 2606.25082). With `a` of the lattice's `S` slices
+//! active on a powered GPU (A100: `S = 7`; A30: `S = 4`):
 //!
-//! `p = p_idle + (p_max − p_idle) · (a + κ·(7 − a)) / 7`,
+//! `p = p_idle + (p_max − p_idle) · (a + κ·(S − a)) / S`,
 //!
 //! where `κ =` [`MIG_IDLE_SLICE_FACTOR`] attributes the residual draw
 //! of idle-but-powered slices (uncore/HBM overhead). A fully-idle
 //! unpartitioned-or-empty GPU draws `p_idle`; a fully-occupied one
 //! draws `p_max`. Packing slices onto already-powered GPUs is therefore
 //! strictly cheaper than waking a fresh GPU — the signal the MIG-aware
-//! PWR policies descend.
+//! PWR policies descend, on both lattices.
 
+use crate::cluster::mig::MigLattice;
 use crate::cluster::node::ResourceView;
 use crate::cluster::types::GpuModel;
 use crate::cluster::Datacenter;
@@ -32,13 +33,14 @@ use crate::cluster::Datacenter;
 /// powered GPU still draws.
 pub const MIG_IDLE_SLICE_FACTOR: f64 = 0.2;
 
-/// Eq. 2-MIG: power of one MIG-partitioned GPU with occupancy `mask`.
-pub fn p_gpu_mig(model: GpuModel, mask: u8) -> f64 {
+/// Eq. 2-MIG: power of one MIG-partitioned GPU of `lattice` with
+/// occupancy `mask`.
+pub fn p_gpu_mig(model: GpuModel, mask: u8, lattice: MigLattice) -> f64 {
     let active = mask.count_ones() as f64;
     if active == 0.0 {
         return model.p_idle();
     }
-    let total = crate::cluster::mig::MIG_SLICES as f64;
+    let total = lattice.slices() as f64;
     let idle = total - active;
     model.p_idle()
         + (model.p_max() - model.p_idle()) * (active + MIG_IDLE_SLICE_FACTOR * idle) / total
@@ -58,11 +60,12 @@ pub fn p_cpu<V: ResourceView + ?Sized>(v: &V) -> f64 {
 pub fn p_gpu<V: ResourceView + ?Sized>(v: &V) -> f64 {
     let Some(model) = v.gpu_model() else { return 0.0 };
     let (p_max, p_idle) = (model.p_max(), model.p_idle());
+    let lattice = v.mig_lattice();
     let mut total = 0.0;
     for g in 0..v.n_gpus() {
-        total += match v.mig_mask_of(g) {
-            Some(mask) => p_gpu_mig(model, mask),
-            None => {
+        total += match (v.mig_mask_of(g), lattice) {
+            (Some(mask), Some(lat)) => p_gpu_mig(model, mask, lat),
+            _ => {
                 if v.gpu_alloc_of(g) > 0.0 {
                     p_max
                 } else {
@@ -88,6 +91,25 @@ pub fn p_datacenter_split(dc: &Datacenter) -> (f64, f64) {
         gpu += p_gpu(n);
     }
     (cpu, gpu)
+}
+
+/// [`p_datacenter_split`] plus per-lattice node-power sums (indexed by
+/// [`MigLattice::index`]; zero on non-MIG fleets) in one node walk —
+/// the shared sampler primitive of the inflation and churn loops, so
+/// heterogeneous-fleet breakdowns cannot drift between them.
+pub fn p_datacenter_by_lattice(dc: &Datacenter) -> (f64, f64, [f64; 2]) {
+    let mut cpu = 0.0;
+    let mut gpu = 0.0;
+    let mut by_lattice = [0.0f64; 2];
+    for n in &dc.nodes {
+        let (pc, pg) = (p_cpu(n), p_gpu(n));
+        cpu += pc;
+        gpu += pg;
+        if let Some(lat) = n.mig_lattice() {
+            by_lattice[lat.index()] += pc + pg;
+        }
+    }
+    (cpu, gpu, by_lattice)
 }
 
 /// Datacenter power (Eq. 3) — the EOPC metric, in Watt.
@@ -204,23 +226,52 @@ mod tests {
 
     #[test]
     fn mig_power_is_slice_attributable() {
-        use crate::cluster::mig::{window_mask, MigProfile};
+        use crate::cluster::mig::{window_mask, MigLattice, MigProfile};
+        let a100 = MigLattice::A100;
         // Empty partitioned GPU: idle power only.
-        assert_eq!(p_gpu_mig(GpuModel::G3, 0), 50.0);
+        assert_eq!(p_gpu_mig(GpuModel::G3, 0, a100), 50.0);
         // Fully occupied (7g): exactly p_max.
-        assert!((p_gpu_mig(GpuModel::G3, 0x7F) - 400.0).abs() < 1e-9);
+        assert!((p_gpu_mig(GpuModel::G3, 0x7F, a100) - 400.0).abs() < 1e-9);
         // 2 active slices: idle + range·(2 + 0.2·5)/7.
         let mask = window_mask(MigProfile::P2g, 0);
         let expect = 50.0 + 350.0 * (2.0 + 0.2 * 5.0) / 7.0;
-        assert!((p_gpu_mig(GpuModel::G3, mask) - expect).abs() < 1e-9);
+        assert!((p_gpu_mig(GpuModel::G3, mask, a100) - expect).abs() < 1e-9);
         // Monotone in active slices, bounded by [p_idle, p_max].
         let mut prev = 50.0;
         for a in 1..=7u8 {
             let m = ((1u16 << a) - 1) as u8;
-            let p = p_gpu_mig(GpuModel::G3, m);
+            let p = p_gpu_mig(GpuModel::G3, m, a100);
             assert!(p > prev && p <= 400.0 + 1e-9, "a={a}: {p}");
             prev = p;
         }
+        // A30 lattice: 4 slices, 30 W idle, 165 W TDP.
+        let a30 = MigLattice::A30;
+        assert_eq!(p_gpu_mig(GpuModel::A30, 0, a30), 30.0);
+        assert!((p_gpu_mig(GpuModel::A30, 0b1111, a30) - 165.0).abs() < 1e-9);
+        // 1 active slice of 4: idle + range·(1 + 0.2·3)/4.
+        let expect = 30.0 + 135.0 * (1.0 + 0.2 * 3.0) / 4.0;
+        assert!((p_gpu_mig(GpuModel::A30, 0b0001, a30) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn a30_mig_node_power_via_view() {
+        use crate::cluster::mig::MigProfile;
+        use crate::tasks::GpuDemand;
+        let mut n = Node::new(0, CpuModel::XeonE5_2682V4, Some(GpuModel::A30), 96.0, 393_216.0, 2);
+        n.enable_mig();
+        // Idle A30 MIG node: both GPUs at p_idle.
+        assert_eq!(p_gpu(&n), 60.0);
+        let t = Task::new(1, 2.0, 512.0, GpuDemand::Mig(MigProfile::A30P2g));
+        let p = Placement::MigSlice { gpu: 0, start: 0 };
+        let before = p_node(&n);
+        let delta = {
+            let h = n.hypothetical(&t, &p);
+            p_node(&h) - before
+        };
+        n.allocate(&t, &p);
+        assert!((p_node(&n) - before - delta).abs() < 1e-9);
+        // GPU Δ: 135·(2 + 0.2·2)/4 = 81 W; CPU Δ: one socket idle→max.
+        assert!((delta - (135.0 * (2.0 + 0.4) / 4.0 + 105.0)).abs() < 1e-9);
     }
 
     #[test]

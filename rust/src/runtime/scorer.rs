@@ -27,6 +27,8 @@
 //! The CPU power model constants (Xeon E5-2682 v4: 32 vCPU/socket,
 //! 15 W idle, 120 W max) are baked into the artifact.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::node::{Placement, ResourceView, EPS};
@@ -63,6 +65,23 @@ impl ScorerConfig {
 
 /// Sentinel score for infeasible nodes (mirrors the Python side).
 pub const NEG_INF_SCORE: f32 = -1.0e9;
+
+/// MIG demands routed past the XLA scorer (its AOT dense encoding
+/// predates the MIG subsystem, so slice demands fall back to the native
+/// scheduler). Previously this was a silent `None`; mixed-fleet runs
+/// now read the counter to report how many placements bypassed the
+/// compiled path.
+static MIG_SCORER_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative count of MIG demands the scorer declined (process-wide).
+pub fn mig_scorer_fallbacks() -> u64 {
+    MIG_SCORER_FALLBACKS.load(Ordering::Relaxed)
+}
+
+/// Reset the fallback counter (tests / per-run reporting).
+pub fn reset_mig_scorer_fallbacks() {
+    MIG_SCORER_FALLBACKS.store(0, Ordering::Relaxed);
+}
 
 /// The XLA-backed scorer with reusable host buffers.
 pub struct XlaScorer {
@@ -209,7 +228,13 @@ impl XlaScorer {
 }
 
 /// Pick the arg-max feasible node and rebuild the concrete placement.
+/// MIG demands are counted into [`mig_scorer_fallbacks`] and return
+/// `None` — the caller must fall back to the native scheduler.
 pub fn decode_decision(dc: &Datacenter, task: &Task, out: &ScoreOutput) -> Option<Decision> {
+    if matches!(task.gpu, GpuDemand::Mig(_)) {
+        MIG_SCORER_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+        return None;
+    }
     let mut best: Option<usize> = None;
     for i in 0..dc.nodes.len() {
         if out.feasible[i] < 0.5 {
@@ -247,9 +272,8 @@ pub fn decode_decision(dc: &Datacenter, task: &Task, out: &ScoreOutput) -> Optio
             }
             Placement::Whole { gpus }
         }
-        // The AOT artifact's dense encoding predates the MIG subsystem;
-        // MIG demands go through the native scheduler only.
-        GpuDemand::Mig(_) => return None,
+        // Counted and rejected at the top of the function.
+        GpuDemand::Mig(_) => unreachable!("MIG demand past the fallback gate"),
     };
     Some(Decision { node: node_id, placement })
 }
@@ -267,6 +291,9 @@ pub struct ParityReport {
     pub mismatches: usize,
     /// Both infeasible.
     pub both_infeasible: usize,
+    /// MIG demands routed past the scorer to the native scheduler
+    /// during this run (see [`mig_scorer_fallbacks`]).
+    pub mig_fallbacks: u64,
 }
 
 impl ParityReport {
@@ -280,12 +307,13 @@ impl std::fmt::Display for ParityReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "parity: {} decisions | {} exact | {} near-ties | {} mismatches | {} infeasible -> {}",
+            "parity: {} decisions | {} exact | {} near-ties | {} mismatches | {} infeasible | {} MIG fallbacks -> {}",
             self.decisions,
             self.exact_matches,
             self.near_ties,
             self.mismatches,
             self.both_infeasible,
+            self.mig_fallbacks,
             if self.passed() { "PASS" } else { "FAIL" }
         )
     }
@@ -324,6 +352,7 @@ pub fn parity_check(
     let mut native = Scheduler::from_policy(PolicyKind::PwrFgd { alpha });
 
     let mut report = ParityReport::default();
+    let fallbacks_before = mig_scorer_fallbacks();
     for _ in 0..n_tasks {
         let task = sampler.next_task();
         let nd = native.schedule(&dc, &workload, &task);
@@ -365,6 +394,7 @@ pub fn parity_check(
             native.notify_node_changed(d.node);
         }
     }
+    report.mig_fallbacks = mig_scorer_fallbacks().saturating_sub(fallbacks_before);
     Ok(report)
 }
 
@@ -391,6 +421,30 @@ mod tests {
         let d = decode_decision(&dc, &t, &out).unwrap();
         assert_eq!(d.node, 1); // ties → lowest id among the 90s
         assert_eq!(d.placement, Placement::Shared { gpu: 1 });
+    }
+
+    #[test]
+    fn mig_demand_fallback_is_counted() {
+        use crate::cluster::mig::MigProfile;
+        let dc = crate::cluster::ClusterSpec::mig_cluster(2, 2, 0).build();
+        let out = ScoreOutput {
+            score: vec![90.0, 90.0],
+            best_gpu: vec![-1.0, -1.0],
+            feasible: vec![1.0, 1.0],
+        };
+        // Delta-based so the assertion is robust to the process-wide
+        // counter being touched by concurrently-running tests.
+        let before = mig_scorer_fallbacks();
+        // Both lattices' demands bypass the scorer and are counted.
+        for p in [MigProfile::P3g, MigProfile::A30P2g] {
+            let t = Task::new(0, 1.0, 0.0, GpuDemand::Mig(p));
+            assert!(decode_decision(&dc, &t, &out).is_none());
+        }
+        assert!(mig_scorer_fallbacks() - before >= 2);
+        // Non-MIG demands decode normally (and this test adds no more
+        // fallbacks itself).
+        let t = Task::new(1, 1.0, 0.0, GpuDemand::Zero);
+        assert!(decode_decision(&dc, &t, &out).is_some());
     }
 
     #[test]

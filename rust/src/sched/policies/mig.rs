@@ -11,14 +11,25 @@
 //!   whose best candidate GPU is left with the fewest free slices,
 //!   nudged toward GPUs that are already powered (Eq. 2-MIG makes those
 //!   strictly cheaper to extend).
-//! * [`MigRepartitioner`] — a greedy online defragmenter: when a MIG
-//!   task cannot be placed anywhere, find the cheapest single-GPU
-//!   repack (first-fit-decreasing over the partition lattice) that
-//!   opens a legal start for the profile, apply it, and let the
-//!   scheduler retry. Each repack migrates running instances between
-//!   slice offsets; the configurable migration cost caps how many
-//!   slices one event may move and how many may move over a whole run,
-//!   mirroring the repartitioning budget of Lipe et al.
+//! * [`MigRepartitioner`] — a greedy online defragmenter with two
+//!   triggers:
+//!   - **reactive** (PR 1): when a MIG task cannot be placed anywhere,
+//!     find the cheapest single-GPU repack (first-fit-decreasing over
+//!     the partition lattice) that opens a legal start for the profile,
+//!     apply it, and let the scheduler retry;
+//!   - **proactive** (threshold-driven, Lipe et al.'s dynamic
+//!     repartitioning): after a node's allocation changes, repack any
+//!     of its GPUs whose slice-fragmentation ratio
+//!     ([`crate::cluster::mig::MigGpu::frag_ratio`]) reached
+//!     [`RepartitionConfig::frag_threshold`] — defragmenting *ahead of
+//!     demand* instead of waiting for a placement failure. The default
+//!     threshold is `∞`, which disables the proactive mode and
+//!     reproduces the failure-only behavior exactly.
+//!
+//!   Each repack migrates running instances between slice offsets; the
+//!   configurable migration cost caps how many slices one event may
+//!   move and how many may move over a whole run (shared between both
+//!   triggers), mirroring the repartitioning budget of Lipe et al.
 
 use crate::cluster::mig::MigProfile;
 use crate::cluster::node::{Node, Placement, ResourceView, EPS};
@@ -68,20 +79,40 @@ pub struct RepartitionConfig {
     pub max_moved_slices: u32,
     /// Total slice-migration budget for the run; `u64::MAX` ⇒ unbounded.
     pub budget_slices: u64,
+    /// Proactive trigger: repack a GPU whose slice-fragmentation ratio
+    /// ([`crate::cluster::mig::MigGpu::frag_ratio`]) reaches this value.
+    /// `f64::INFINITY` (the default) disables proactive repartitioning —
+    /// the repartitioner then fires only on placement failures, exactly
+    /// reproducing the PR 1 behavior.
+    pub frag_threshold: f64,
 }
 
 impl Default for RepartitionConfig {
     fn default() -> Self {
-        RepartitionConfig { max_moved_slices: 6, budget_slices: u64::MAX }
+        RepartitionConfig {
+            max_moved_slices: 6,
+            budget_slices: u64::MAX,
+            frag_threshold: f64::INFINITY,
+        }
+    }
+}
+
+impl RepartitionConfig {
+    /// Default caps with a proactive fragmentation threshold.
+    pub fn with_threshold(frag_threshold: f64) -> RepartitionConfig {
+        RepartitionConfig { frag_threshold, ..Default::default() }
     }
 }
 
 /// Cumulative repartitioning activity.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RepartitionStats {
-    /// Repacks applied.
+    /// Reactive (placement-failure-triggered) repacks applied.
     pub repartitions: u64,
-    /// Slices migrated across all repacks.
+    /// Proactive (frag-threshold-triggered) repacks applied.
+    pub proactive_repartitions: u64,
+    /// Slices migrated across all repacks (both triggers; the
+    /// [`RepartitionConfig::budget_slices`] budget is shared).
     pub migrated_slices: u64,
     /// Placement failures no affordable repack could fix.
     pub exhausted: u64,
@@ -121,6 +152,54 @@ impl MigRepartitioner {
                 None
             }
         }
+    }
+
+    /// Proactive pass over one node (call after its allocation
+    /// changed): for every GPU whose slice-fragmentation ratio reached
+    /// [`RepartitionConfig::frag_threshold`], plan the FFD repack that
+    /// opens a legal start for the *widest profile still fitting* its
+    /// free capacity ([`crate::cluster::mig::MigGpu::repack_plan`]) and
+    /// apply it when it strictly lowers the ratio and fits the
+    /// migration-cost caps. Returns `true` when any repack was applied
+    /// (the caller must `notify_node_changed`). A non-finite threshold
+    /// (the default) makes this a no-op — failure-only behavior.
+    pub fn defrag_node_if_fragmented(&mut self, dc: &mut Datacenter, node_id: usize) -> bool {
+        if !self.cfg.frag_threshold.is_finite() {
+            return false;
+        }
+        let Some(n_gpus) = dc.nodes[node_id].mig.as_ref().map(|m| m.len()) else {
+            return false;
+        };
+        let mut applied = false;
+        for g in 0..n_gpus {
+            let budget_left = self
+                .cfg
+                .budget_slices
+                .saturating_sub(self.stats.migrated_slices);
+            let mg = &dc.nodes[node_id].mig.as_ref().unwrap()[g];
+            let ratio = mg.frag_ratio();
+            if ratio < self.cfg.frag_threshold {
+                continue;
+            }
+            let Some(target) = mg.lattice.widest_fitting(mg.free_slices()) else {
+                continue;
+            };
+            let Some((plan, moved)) = mg.repack_plan(target) else { continue };
+            if moved == 0 || moved > self.cfg.max_moved_slices || (moved as u64) > budget_left {
+                continue;
+            }
+            // Only pay the migration cost when it actually helps.
+            let mut after = mg.clone();
+            after.apply_repack(&plan);
+            if after.frag_ratio() + 1e-12 >= ratio {
+                continue;
+            }
+            dc.nodes[node_id].mig_apply_repack(g, &plan);
+            self.stats.proactive_repartitions += 1;
+            self.stats.migrated_slices += moved as u64;
+            applied = true;
+        }
+        applied
     }
 
     /// The cheapest affordable repack candidate, if any.
@@ -189,6 +268,25 @@ pub fn schedule_with_repartition(
     let node_id = repartitioner?.try_make_room(dc, task)?;
     sched.notify_node_changed(node_id);
     sched.schedule(dc, workload, task)
+}
+
+/// Run the repartitioner's proactive (threshold-driven) pass on one
+/// node and invalidate the scheduler's cache when it repacked — the
+/// shared post-allocation/post-departure hook of the inflation
+/// ([`crate::sim::Simulation`]) and churn
+/// ([`crate::sim::events::SteadySim`]) loops. No-op without a
+/// repartitioner or at the default `∞` threshold.
+pub fn proactive_defrag(
+    sched: &mut Scheduler,
+    dc: &mut Datacenter,
+    repartitioner: Option<&mut MigRepartitioner>,
+    node_id: usize,
+) {
+    if let Some(rp) = repartitioner {
+        if rp.defrag_node_if_fragmented(dc, node_id) {
+            sched.notify_node_changed(node_id);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -276,14 +374,14 @@ mod tests {
         // The needed repack moves 5 slices; a cap of 4 forbids it.
         let mut rp = MigRepartitioner::new(RepartitionConfig {
             max_moved_slices: 4,
-            budget_slices: u64::MAX,
+            ..Default::default()
         });
         assert!(rp.try_make_room(&mut dc, &blocked).is_none());
         assert_eq!(rp.stats.exhausted, 1);
         // A zero budget also forbids it.
         let mut rp = MigRepartitioner::new(RepartitionConfig {
-            max_moved_slices: 6,
             budget_slices: 0,
+            ..Default::default()
         });
         assert!(rp.try_make_room(&mut dc, &blocked).is_none());
         // Non-MIG demands are ignored outright.
@@ -291,5 +389,64 @@ mod tests {
         assert!(rp
             .try_make_room(&mut dc, &Task::new(9, 1.0, 0.0, GpuDemand::Frac(0.5)))
             .is_none());
+    }
+
+    #[test]
+    fn proactive_defrag_fires_on_threshold() {
+        // A lone 1g at slice 0 locks a 4g out of 6 free slices:
+        // frag_ratio = 1. A 0.9 threshold must trigger an FFD repack
+        // that moves the 1g high and reopens the 0-3 window.
+        let mut dc = ClusterSpec::mig_cluster(1, 1, 0).build();
+        let t1 = mig_task(1, MigProfile::P1g);
+        dc.allocate(&t1, 0, &Placement::MigSlice { gpu: 0, start: 0 });
+        let mut rp = MigRepartitioner::new(RepartitionConfig::with_threshold(0.9));
+        assert!(rp.defrag_node_if_fragmented(&mut dc, 0));
+        assert_eq!(rp.stats.proactive_repartitions, 1);
+        assert_eq!(rp.stats.repartitions, 0);
+        assert_eq!(rp.stats.migrated_slices, 1);
+        let mg = &dc.nodes[0].mig.as_ref().unwrap()[0];
+        assert_eq!(mg.can_place(MigProfile::P4g), Some(0));
+        // The resident instance survived the repack.
+        assert_eq!(mg.instances.len(), 1);
+        assert_eq!(mg.instances[0].profile, MigProfile::P1g);
+        // Below threshold now: a second pass is a no-op.
+        assert!(!rp.defrag_node_if_fragmented(&mut dc, 0));
+        assert_eq!(rp.stats.proactive_repartitions, 1);
+    }
+
+    #[test]
+    fn proactive_defrag_honors_caps_and_infinite_threshold() {
+        let fragment = || {
+            let mut dc = ClusterSpec::mig_cluster(1, 1, 0).build();
+            dc.allocate(
+                &mig_task(1, MigProfile::P1g),
+                0,
+                &Placement::MigSlice { gpu: 0, start: 0 },
+            );
+            dc
+        };
+        // The default ∞ threshold never fires (PR 1 failure-only mode).
+        let mut dc = fragment();
+        let mut rp = MigRepartitioner::new(RepartitionConfig::default());
+        assert!(!rp.defrag_node_if_fragmented(&mut dc, 0));
+        assert_eq!(rp.stats, RepartitionStats::default());
+        // A zero per-event cap blocks the (1-slice) move.
+        let mut dc = fragment();
+        let mut rp = MigRepartitioner::new(RepartitionConfig {
+            max_moved_slices: 0,
+            frag_threshold: 0.5,
+            ..Default::default()
+        });
+        assert!(!rp.defrag_node_if_fragmented(&mut dc, 0));
+        assert_eq!(rp.stats.proactive_repartitions, 0);
+        // An exhausted budget blocks it too.
+        let mut dc = fragment();
+        let mut rp = MigRepartitioner::new(RepartitionConfig {
+            budget_slices: 0,
+            frag_threshold: 0.5,
+            ..Default::default()
+        });
+        assert!(!rp.defrag_node_if_fragmented(&mut dc, 0));
+        assert_eq!(rp.stats.migrated_slices, 0);
     }
 }

@@ -16,8 +16,8 @@ use crate::util::rng::Rng;
 pub use baselines::{BestFitPlugin, DotProdPlugin};
 pub use fgd::FgdPlugin;
 pub use mig::{
-    schedule_with_repartition, MigRepartitioner, MigSliceFitPlugin, RepartitionConfig,
-    RepartitionStats,
+    proactive_defrag, schedule_with_repartition, MigRepartitioner, MigSliceFitPlugin,
+    RepartitionConfig, RepartitionStats,
 };
 pub use packing::{GpuClusteringPlugin, GpuPackingPlugin};
 pub use pwr::PwrPlugin;

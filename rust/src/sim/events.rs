@@ -102,8 +102,10 @@ pub struct SteadyResult {
     pub failed: u64,
     pub departures: u64,
     /// MIG repartitioning activity under churn (zero without a
-    /// repartitioner).
+    /// repartitioner): reactive (failure-triggered) and proactive
+    /// (frag-threshold-triggered) repacks plus total migrated slices.
     pub repartitions: u64,
+    pub proactive_repartitions: u64,
     pub migrated_slices: u64,
     /// Time-averaged EOPC over the second half (warmed-up steady state).
     pub steady_eopc_w: f64,
@@ -204,6 +206,12 @@ impl SteadySim {
                         Some(d) => {
                             self.dc.allocate(&task, d.node, &d.placement);
                             self.sched.notify_node_changed(d.node);
+                            crate::sched::policies::mig::proactive_defrag(
+                                &mut self.sched,
+                                &mut self.dc,
+                                self.repartitioner.as_mut(),
+                                d.node,
+                            );
                             self.running.insert(id, (task, d.node, d.placement));
                             out.scheduled += 1;
                             let dur = self.exp(cfg.mean_duration_s);
@@ -218,6 +226,14 @@ impl SteadySim {
                     if let Some((task, node, placement)) = self.running.remove(&task_id) {
                         self.dc.deallocate(&task, node, &placement);
                         self.sched.notify_node_changed(node);
+                        // Departures are where lattice holes open up —
+                        // the proactive trigger's main use under churn.
+                        crate::sched::policies::mig::proactive_defrag(
+                            &mut self.sched,
+                            &mut self.dc,
+                            self.repartitioner.as_mut(),
+                            node,
+                        );
                         out.departures += 1;
                     }
                 }
@@ -231,23 +247,29 @@ impl SteadySim {
         }
         if let Some(rp) = &self.repartitioner {
             out.repartitions = rp.stats.repartitions;
+            out.proactive_repartitions = rp.stats.proactive_repartitions;
             out.migrated_slices = rp.stats.migrated_slices;
         }
         out
     }
 
     fn sample(&self, x: f64) -> SeriesPoint {
-        let (cpu_w, gpu_w) = power::p_datacenter_split(&self.dc);
+        use crate::cluster::mig::MigLattice;
+        // Power split + per-lattice power breakdown on MIG fleets
+        // (frag/GRAR splits are inflation-loop metrics; churn reports
+        // power + counters).
+        let (cpu_w, gpu_w, eopc_lat) = power::p_datacenter_by_lattice(&self.dc);
         SeriesPoint {
             x,
             eopc: cpu_w + gpu_w,
             cpu_w,
             gpu_w,
             grar: 1.0, // per-interval GRAR tracked via failure counts
-            frag: 0.0,
-            failures: 0.0,
             active_gpus: self.dc.active_gpus() as f64,
             active_nodes: self.dc.active_nodes() as f64,
+            eopc_a100: eopc_lat[MigLattice::A100.index()],
+            eopc_a30: eopc_lat[MigLattice::A30.index()],
+            ..Default::default()
         }
     }
 }

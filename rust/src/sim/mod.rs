@@ -40,8 +40,11 @@ pub struct RunResult {
     /// Final GPU units arrived and allocated.
     pub arrived_gpu_units: f64,
     pub allocated_gpu_units: f64,
-    /// MIG repartitioning activity (zero without a repartitioner).
+    /// MIG repartitioning activity (zero without a repartitioner):
+    /// reactive (failure-triggered) and proactive (threshold-triggered)
+    /// repacks plus total migrated slices.
     pub repartitions: u64,
+    pub proactive_repartitions: u64,
     pub migrated_slices: u64,
 }
 
@@ -68,6 +71,9 @@ pub struct Simulation {
     pub workload: Workload,
     sampler: crate::trace::InflationSampler,
     arrived_gpu_units: f64,
+    /// Arrived GPU units per MIG lattice — the denominator of the
+    /// per-lattice GRAR columns (indexed by `MigLattice::index()`).
+    arrived_mig_units: [f64; 2],
     failed: u64,
     scheduled: u64,
     submitted: u64,
@@ -106,6 +112,7 @@ impl Simulation {
             workload,
             sampler: spec.sampler(seed),
             arrived_gpu_units: 0.0,
+            arrived_mig_units: [0.0; 2],
             failed: 0,
             scheduled: 0,
             submitted: 0,
@@ -119,6 +126,9 @@ impl Simulation {
         let task = self.sampler.next_task();
         self.submitted += 1;
         self.arrived_gpu_units += task.gpu.units();
+        if let crate::tasks::GpuDemand::Mig(p) = task.gpu {
+            self.arrived_mig_units[p.lattice().index()] += p.units();
+        }
         let decision = crate::sched::policies::mig::schedule_with_repartition(
             &mut self.sched,
             &mut self.dc,
@@ -130,6 +140,12 @@ impl Simulation {
             Some(d) => {
                 self.dc.allocate(&task, d.node, &d.placement);
                 self.sched.notify_node_changed(d.node);
+                crate::sched::policies::mig::proactive_defrag(
+                    &mut self.sched,
+                    &mut self.dc,
+                    self.repartitioner.as_mut(),
+                    d.node,
+                );
                 self.scheduled += 1;
                 true
             }
@@ -145,29 +161,63 @@ impl Simulation {
         self.arrived_gpu_units / self.dc.gpu_capacity()
     }
 
-    /// Snapshot the metrics into a [`SeriesPoint`].
+    /// Snapshot the metrics into a [`SeriesPoint`]. On MIG fleets the
+    /// per-lattice breakdown columns (EOPC/frag/GRAR restricted to the
+    /// A100-lattice and A30-lattice nodes / demands) are filled in too.
     pub fn sample(&self) -> SeriesPoint {
-        let (cpu_w, gpu_w) = power::p_datacenter_split(&self.dc);
+        use crate::cluster::mig::MigLattice;
+        use crate::cluster::node::ResourceView;
         let grar = if self.arrived_gpu_units > 0.0 {
             self.dc.gpu_allocated_units() / self.arrived_gpu_units
         } else {
             1.0
         };
-        SeriesPoint {
+        let (cpu_w, gpu_w, eopc_lat) = power::p_datacenter_by_lattice(&self.dc);
+        let mut point = SeriesPoint {
             x: self.capacity_ratio(),
             eopc: cpu_w + gpu_w,
             cpu_w,
             gpu_w,
             grar,
-            frag: if self.record_frag {
-                frag::f_datacenter(&self.dc, &self.workload)
-            } else {
-                0.0
-            },
             failures: self.failed as f64,
             active_gpus: self.dc.active_gpus() as f64,
             active_nodes: self.dc.active_nodes() as f64,
+            ..Default::default()
+        };
+        // One further pass fills the total fragmentation (Eq. 4 — the
+        // per-node `f_node` is the expensive reference path, so never
+        // compute it twice) and the per-lattice frag/allocation
+        // breakdowns of a heterogeneous MIG fleet.
+        let mut frag_lat = [0.0f64; 2];
+        let mut alloc_lat = [0.0f64; 2];
+        let mut has_mig = false;
+        for n in &self.dc.nodes {
+            let f = if self.record_frag { frag::f_node(n, &self.workload) } else { 0.0 };
+            point.frag += f;
+            if let Some(lat) = n.mig_lattice() {
+                has_mig = true;
+                let i = lat.index();
+                frag_lat[i] += f;
+                alloc_lat[i] += n.gpu_alloc.iter().sum::<f64>();
+            }
         }
+        if has_mig {
+            let grar_of = |lat: MigLattice| {
+                let arrived = self.arrived_mig_units[lat.index()];
+                if arrived > 0.0 {
+                    alloc_lat[lat.index()] / arrived
+                } else {
+                    1.0
+                }
+            };
+            point.eopc_a100 = eopc_lat[MigLattice::A100.index()];
+            point.eopc_a30 = eopc_lat[MigLattice::A30.index()];
+            point.frag_a100 = frag_lat[MigLattice::A100.index()];
+            point.frag_a30 = frag_lat[MigLattice::A30.index()];
+            point.grar_a100 = grar_of(MigLattice::A100);
+            point.grar_a30 = grar_of(MigLattice::A30);
+        }
+        point
     }
 
     /// Run inflation until arrived GPU requests reach
@@ -194,6 +244,7 @@ impl Simulation {
             arrived_gpu_units: self.arrived_gpu_units,
             allocated_gpu_units: self.dc.gpu_allocated_units(),
             repartitions: stats.repartitions,
+            proactive_repartitions: stats.proactive_repartitions,
             migrated_slices: stats.migrated_slices,
         }
     }
@@ -214,6 +265,9 @@ pub struct RepeatConfig {
     pub deterministic_ties: bool,
     /// Attach a MIG repartitioner (default cost caps) to each run.
     pub mig_repartition: bool,
+    /// Proactive slice-fragmentation threshold of the attached
+    /// repartitioner; `f64::INFINITY` (default) keeps it failure-only.
+    pub mig_frag_threshold: f64,
 }
 
 impl Default for RepeatConfig {
@@ -225,6 +279,7 @@ impl Default for RepeatConfig {
             record_frag: false,
             deterministic_ties: false,
             mig_repartition: false,
+            mig_frag_threshold: f64::INFINITY,
         }
     }
 }
@@ -253,8 +308,9 @@ pub fn run_repetitions(
                 let mut sim = Simulation::with_spec(dc, sched, &trace_spec, workload, seed);
                 sim.record_frag = cfg.record_frag;
                 if cfg.mig_repartition {
-                    sim.repartitioner =
-                        Some(MigRepartitioner::new(RepartitionConfig::default()));
+                    sim.repartitioner = Some(MigRepartitioner::new(
+                        RepartitionConfig::with_threshold(cfg.mig_frag_threshold),
+                    ));
                 }
                 sim.run_inflation(cfg.target_ratio)
             })

@@ -16,8 +16,9 @@ pub enum GpuDemand {
     Frac(f64),
     /// Exclusively uses this many whole GPUs.
     Whole(u32),
-    /// One MIG instance of this profile on a MIG-partitioned GPU
-    /// (slice-granular demand; `units = slices / 7`).
+    /// One MIG instance of this profile on a MIG-partitioned GPU of the
+    /// profile's lattice (slice-granular demand; `units = slices /
+    /// lattice slices`).
     Mig(MigProfile),
 }
 
@@ -39,7 +40,7 @@ impl GpuDemand {
     }
 
     /// Total GPU resource units requested (fraction, whole count, or
-    /// MIG slices / 7).
+    /// MIG slices / lattice slices).
     pub fn units(self) -> f64 {
         match self {
             GpuDemand::Zero => 0.0,
@@ -62,8 +63,9 @@ impl GpuDemand {
             GpuDemand::Zero => 0,
             GpuDemand::Frac(_) => 1,
             // Sub-GPU MIG instances behave like sharing tasks in the
-            // Table-I marginals; the full-GPU 7g profile like 1-GPU.
-            GpuDemand::Mig(p) if p != MigProfile::P7g => 1,
+            // Table-I marginals; the full-GPU profiles (7g, a30-4g)
+            // like 1-GPU.
+            GpuDemand::Mig(p) if !p.is_full_gpu() => 1,
             GpuDemand::Mig(_) => 2,
             GpuDemand::Whole(1) => 2,
             GpuDemand::Whole(2) => 3,
@@ -148,7 +150,10 @@ impl Workload {
     pub fn from_tasks(tasks: &[Task]) -> Workload {
         use std::collections::BTreeMap;
         // Signature: (cpu in 0.25-vCPU steps, gpu demand in 1/64 units,
-        // whole-vs-frac tag, constraint index).
+        // kind tag, constraint index). MIG demands tag their profile so
+        // same-unit profiles of different lattices (e.g. 7g vs a30-4g,
+        // both 1.0 units) stay distinct classes — their feasibility
+        // differs per node.
         let mut groups: BTreeMap<(u64, u64, u8, u8), (Task, usize)> = BTreeMap::new();
         for t in tasks {
             let sig = (
@@ -156,7 +161,7 @@ impl Workload {
                 (t.gpu.units() * 64.0).round() as u64,
                 match t.gpu {
                     GpuDemand::Whole(_) => 1u8,
-                    GpuDemand::Mig(_) => 2,
+                    GpuDemand::Mig(p) => 2 + p.index() as u8,
                     _ => 0,
                 },
                 t.gpu_model.map(|m| m.index() as u8 + 1).unwrap_or(0),
@@ -247,6 +252,23 @@ mod tests {
         assert_eq!(GpuDemand::Mig(MigProfile::P1g).bucket(), 1);
         assert_eq!(GpuDemand::Mig(MigProfile::P4g).bucket(), 1);
         assert_eq!(GpuDemand::Mig(MigProfile::P7g).bucket(), 2);
+        // A30 lattice: units are slices/4; the full-GPU a30-4g profile
+        // lands in the 1-GPU bucket like 7g.
+        assert!((GpuDemand::Mig(MigProfile::A30P2g).units() - 0.5).abs() < 1e-12);
+        assert_eq!(GpuDemand::Mig(MigProfile::A30P1g).bucket(), 1);
+        assert_eq!(GpuDemand::Mig(MigProfile::A30P4g).bucket(), 2);
+    }
+
+    #[test]
+    fn workload_distinguishes_lattices() {
+        // 7g (A100) and a30-4g (A30) both request 1.0 units but are
+        // feasible on disjoint node sets — they must stay two classes.
+        let tasks = vec![
+            Task::new(0, 4.0, 1024.0, GpuDemand::Mig(MigProfile::P7g)),
+            Task::new(1, 4.0, 1024.0, GpuDemand::Mig(MigProfile::A30P4g)),
+        ];
+        let w = Workload::from_tasks(&tasks);
+        assert_eq!(w.classes.len(), 2);
     }
 
     #[test]

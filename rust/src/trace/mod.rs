@@ -215,15 +215,67 @@ impl TraceSpec {
         }
     }
 
+    /// **Heterogeneous MIG** trace for mixed A100+A30 fleets:
+    /// `a30_share` of the MIG demands target the A30 4-slice lattice
+    /// (a30-1g/a30-2g/a30-4g profiles), the rest the A100 7-slice one.
+    /// Within each lattice the large-vs-small mix follows
+    /// [`Self::mig_trace`]'s `large_pop` knob (A30's "large" group is
+    /// the full-GPU a30-4g). CPU-only population stays at 10%. A
+    /// profile only runs on nodes of its lattice, so the fleet mix and
+    /// the demand mix must be co-tuned — exactly the scenario the
+    /// `ext-mig-het` experiment sweeps.
+    pub fn mig_het_trace(large_pop: f64, a30_share: f64) -> TraceSpec {
+        assert!((0.0..=1.0).contains(&large_pop));
+        assert!((0.0..=1.0).contains(&a30_share));
+        let gpu_pop = 90.0;
+        let a100_pop = gpu_pop * (1.0 - a30_share);
+        let a30_pop = gpu_pop * a30_share;
+        let groups: [(MigProfile, f64, &[f64]); 8] = [
+            // A100 lattice (as in mig_trace).
+            (MigProfile::P1g, a100_pop * (1.0 - large_pop) * 0.55, &[1.0, 2.0]),
+            (MigProfile::P2g, a100_pop * (1.0 - large_pop) * 0.45, &[2.0, 4.0]),
+            (MigProfile::P3g, a100_pop * large_pop * 0.50, &[4.0, 6.0]),
+            (MigProfile::P4g, a100_pop * large_pop * 0.35, &[6.0, 8.0]),
+            (MigProfile::P7g, a100_pop * large_pop * 0.15, &[8.0, 12.0]),
+            // A30 lattice: 1g/2g small, the full-GPU 4g large.
+            (MigProfile::A30P1g, a30_pop * (1.0 - large_pop) * 0.55, &[1.0, 2.0]),
+            (MigProfile::A30P2g, a30_pop * (1.0 - large_pop) * 0.45, &[2.0, 4.0]),
+            (MigProfile::A30P4g, a30_pop * large_pop, &[4.0, 6.0]),
+        ];
+        let mut profiles: Vec<(TaskProfile, f64)> = Vec::new();
+        for (c, wc) in [2.0, 4.0, 8.0].iter().zip([0.4, 0.4, 0.2]) {
+            profiles.push((profile(*c, GpuDemand::Zero), 10.0 * wc));
+        }
+        for (p, share, cpus) in groups {
+            if share <= 0.0 {
+                continue;
+            }
+            for &c in cpus {
+                profiles.push((
+                    profile(c, GpuDemand::Mig(p)),
+                    share / cpus.len() as f64,
+                ));
+            }
+        }
+        TraceSpec {
+            name: format!("mig-het-{:.0}", a30_share * 100.0),
+            profiles,
+            n_tasks: 8152,
+        }
+    }
+
     /// Reconstruct a spec from a trace name (`default`,
     /// `multi-gpu-20`, `sharing-gpu-100`, `constrained-gpu-33`,
-    /// `mig-30`/`mig-default`, …).
+    /// `mig-30`/`mig-default`, `mig-het-40`, …).
     pub fn by_name(name: &str) -> Option<TraceSpec> {
         if name == "default" {
             return Some(Self::default_trace());
         }
         if name == "mig-default" {
             return Some(Self::mig_trace(0.3));
+        }
+        if let Some(pct) = name.strip_prefix("mig-het-") {
+            return pct.parse::<f64>().ok().map(|p| Self::mig_het_trace(0.3, p / 100.0));
         }
         if let Some(pct) = name.strip_prefix("mig-") {
             return pct.parse::<f64>().ok().map(|p| Self::mig_trace(p / 100.0));
@@ -521,6 +573,51 @@ mod tests {
             })
             .collect();
         assert_eq!(profiles.len(), 5);
+    }
+
+    #[test]
+    fn mig_het_trace_splits_lattices() {
+        use crate::cluster::mig::MigLattice;
+        let spec = TraceSpec::mig_het_trace(0.3, 0.4);
+        assert_eq!(spec.name, "mig-het-40");
+        let back = TraceSpec::by_name("mig-het-40").unwrap();
+        assert_eq!(back.profiles.len(), spec.profiles.len());
+        // A30-lattice share of GPU demand population ≈ 40%.
+        let pop_of = |lat: MigLattice| -> f64 {
+            spec.profiles
+                .iter()
+                .filter_map(|(p, w)| match p.gpu {
+                    GpuDemand::Mig(m) if m.lattice() == lat => Some(*w),
+                    _ => None,
+                })
+                .sum()
+        };
+        let (a100, a30) = (pop_of(MigLattice::A100), pop_of(MigLattice::A30));
+        assert!((a30 / (a100 + a30) - 0.4).abs() < 1e-9);
+        // Synthesis covers both lattices and only Zero/Mig demands.
+        let trace = spec.synthesize(13);
+        let mut seen = std::collections::BTreeSet::new();
+        for t in &trace.tasks {
+            match t.gpu {
+                GpuDemand::Zero => {}
+                GpuDemand::Mig(p) => {
+                    seen.insert(p.lattice().index());
+                }
+                other => panic!("unexpected demand {other:?}"),
+            }
+        }
+        assert_eq!(seen.len(), 2, "both lattices must appear");
+        // Extremes collapse to one lattice.
+        let pure_a100 = TraceSpec::mig_het_trace(0.3, 0.0);
+        assert!(pure_a100.profiles.iter().all(|(p, _)| match p.gpu {
+            GpuDemand::Mig(m) => m.lattice() == MigLattice::A100,
+            _ => true,
+        }));
+        let pure_a30 = TraceSpec::mig_het_trace(0.3, 1.0);
+        assert!(pure_a30.profiles.iter().all(|(p, _)| match p.gpu {
+            GpuDemand::Mig(m) => m.lattice() == MigLattice::A30,
+            _ => true,
+        }));
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Property tests for the heterogeneous MIG lattice subsystem
+//! (hand-rolled generators over the in-repo seeded RNG — the vendored
+//! crate set has no `proptest`):
+//!
+//! * `frag_slices` (the fast bitmask path) equals a brute-force
+//!   reference on every mask × profile of both lattices;
+//! * random place/release sequences never overlap instance windows and
+//!   keep `used + free == lattice slices` — on A100-7g and A30-4g;
+//! * the `FragEval` fast path equals the reference `f_node` on random
+//!   partition states of both lattices under mixed-lattice workloads;
+//! * repartitioner invariants: proactive (threshold) and reactive
+//!   (failure) repacks never lose a running instance and never exceed
+//!   the migration budget.
+
+use repro::cluster::mig::{
+    frag_slices, window_mask, MigGpu, MigLattice, MigProfile,
+};
+use repro::cluster::node::{Node, Placement, ResourceView};
+use repro::cluster::types::{CpuModel, GpuModel};
+use repro::cluster::ClusterSpec;
+use repro::frag::{f_node, f_node_fast, frag_delta_fast, PreparedWorkload};
+use repro::sched::policies::{MigRepartitioner, RepartitionConfig};
+use repro::sched::{PolicyKind, Scheduler};
+use repro::tasks::{GpuDemand, Task, TaskClass, Workload};
+use repro::util::rng::Rng;
+
+/// Brute-force reference for [`frag_slices`]: a free slice is a
+/// fragment iff no legal, non-overlapping placement window of the
+/// profile contains it.
+fn frag_slices_reference(mask: u8, profile: MigProfile) -> u8 {
+    let slices = profile.lattice().slices();
+    let mut frags = 0u8;
+    for s in 0..slices {
+        if mask & (1 << s) != 0 {
+            continue; // occupied, not a fragment candidate
+        }
+        let coverable = profile.legal_starts().iter().any(|&start| {
+            let w = window_mask(profile, start);
+            mask & w == 0 && w & (1 << s) != 0
+        });
+        if !coverable {
+            frags += 1;
+        }
+    }
+    frags
+}
+
+/// Exhaustive: the fast path equals the reference on *every* mask of
+/// both lattices (the A100 space is only 2^7).
+#[test]
+fn frag_slices_fast_path_equals_reference_exhaustively() {
+    for lat in MigLattice::ALL {
+        for mask in 0..=lat.full_mask() {
+            for &p in lat.profiles() {
+                assert_eq!(
+                    frag_slices(mask, p),
+                    frag_slices_reference(mask, p),
+                    "lattice {lat} mask {mask:#b} profile {p}"
+                );
+            }
+        }
+    }
+}
+
+/// Random place/release sequences on a single GPU of an arbitrary
+/// lattice: instance windows never overlap, the mask is always their
+/// union, and `used + free == lattice slices`.
+#[test]
+fn random_place_release_never_overlaps_and_conserves_slices() {
+    let mut rng = Rng::new(0x1A771CE);
+    for trial in 0..300 {
+        let lat = *rng.choice(&MigLattice::ALL);
+        let mut g = MigGpu::with_lattice(lat);
+        for step in 0..80 {
+            if !g.instances.is_empty() && rng.bernoulli(0.4) {
+                let inst = g.instances[rng.below(g.instances.len())];
+                assert!(g.release(inst.profile, Some(inst.start)));
+            } else {
+                let p = *rng.choice(lat.profiles());
+                let starts = g.free_starts(p);
+                if starts.is_empty() {
+                    assert_eq!(g.can_place(p), None, "free_starts/can_place disagree");
+                    continue;
+                }
+                let s = starts[rng.below(starts.len())];
+                assert!(g.place(p, s), "trial {trial} step {step}: place {p}@{s}");
+            }
+            // Windows pairwise disjoint and union == mask.
+            let mut union = 0u8;
+            for inst in &g.instances {
+                let w = window_mask(inst.profile, inst.start);
+                assert_eq!(union & w, 0, "trial {trial} step {step}: overlap");
+                union |= w;
+            }
+            assert_eq!(union, g.mask, "mask drifted from instance windows");
+            assert_eq!(union & !lat.full_mask(), 0, "mask escaped the lattice");
+            assert_eq!(g.used_slices() + g.free_slices(), lat.slices());
+        }
+    }
+}
+
+fn mixed_workload(rng: &mut Rng) -> Workload {
+    let mut classes = Vec::new();
+    for _ in 0..rng.range(1, 10) {
+        let gpu = match rng.below(4) {
+            0 => GpuDemand::Zero,
+            1 => GpuDemand::Frac(*rng.choice(&[0.25, 0.5, 0.75])),
+            2 => GpuDemand::Whole(*rng.choice(&[1u32, 2])),
+            _ => GpuDemand::Mig(*rng.choice(&MigProfile::ALL)),
+        };
+        classes.push(TaskClass {
+            cpu: rng.range_f64(0.0, 64.0),
+            mem: rng.range_f64(0.0, 300_000.0),
+            gpu,
+            gpu_model: if rng.bernoulli(0.2) {
+                Some(*rng.choice(&[GpuModel::G3, GpuModel::A30, GpuModel::T4]))
+            } else {
+                None
+            },
+            pop: rng.range_f64(0.01, 1.0),
+        });
+    }
+    Workload { classes }
+}
+
+/// The node-level fragmentation fast path equals the reference on
+/// random partition states of both lattices, under workloads mixing
+/// both lattices' profiles with fractional/whole/CPU classes — current
+/// state and every hypothetical slice placement.
+#[test]
+fn f_node_fast_path_equals_reference_on_both_lattices() {
+    let mut rng = Rng::new(0xA30A100);
+    for trial in 0..200 {
+        let (model, lat) = if trial % 2 == 0 {
+            (GpuModel::G3, MigLattice::A100)
+        } else {
+            (GpuModel::A30, MigLattice::A30)
+        };
+        let n_gpus = rng.range(1, 5);
+        let mut n = Node::new(0, CpuModel::XeonE5_2682V4, Some(model), 128.0, 786_432.0, n_gpus);
+        n.enable_mig();
+        n.cpu_alloc = rng.range_f64(0.0, 100.0);
+        // Random legal partition per GPU.
+        for j in 0..n_gpus {
+            for _ in 0..rng.below(5) {
+                let p = *rng.choice(lat.profiles());
+                let migs = n.mig.as_mut().unwrap();
+                if let Some(s) = migs[j].can_place(p) {
+                    migs[j].place(p, s);
+                    n.gpu_alloc[j] = migs[j].alloc_fraction();
+                }
+            }
+        }
+        let w = mixed_workload(&mut rng);
+        let pw = PreparedWorkload::new(&w);
+        let slow = f_node(&n, &w);
+        let fast = f_node_fast(&n, &pw);
+        assert!(
+            (slow - fast).abs() < 1e-9,
+            "trial {trial} ({lat}): {slow} vs {fast}"
+        );
+        // Hypothetical placements of a random profile of this lattice.
+        let task = Task::new(
+            trial,
+            rng.range_f64(0.0, 16.0),
+            rng.range_f64(0.0, 50_000.0),
+            GpuDemand::Mig(*rng.choice(lat.profiles())),
+        );
+        for p in n.candidate_placements(&task) {
+            let slow_d = {
+                let h = n.hypothetical(&task, &p);
+                f_node(&h, &w) - slow
+            };
+            let fast_d = frag_delta_fast(&n, &task, &p, &pw, fast);
+            assert!(
+                (slow_d - fast_d).abs() < 1e-9,
+                "trial {trial} ({lat}) {p:?}: {slow_d} vs {fast_d}"
+            );
+        }
+        // Foreign-lattice demands never fit this node.
+        let other = if lat == MigLattice::A100 { MigLattice::A30 } else { MigLattice::A100 };
+        let foreign = Task::new(0, 1.0, 0.0, GpuDemand::Mig(other.profiles()[0]));
+        assert!(!n.can_fit(&foreign));
+        assert!(n.candidate_placements(&foreign).is_empty());
+    }
+}
+
+/// Repartitioner invariants under random churn on a heterogeneous
+/// fleet: reactive and proactive repacks never lose (or duplicate) a
+/// running instance, the shared migration budget is never exceeded,
+/// and the node's `gpu_alloc` mirror stays exact.
+#[test]
+fn repartitioner_never_loses_instances_and_respects_budget() {
+    let mut rng = Rng::new(0xDEF7A6);
+    for trial in 0..8 {
+        let budget = [20u64, 60, u64::MAX][trial % 3];
+        let cfg = RepartitionConfig {
+            budget_slices: budget,
+            frag_threshold: 0.5,
+            ..Default::default()
+        };
+        let mut rp = MigRepartitioner::new(cfg);
+        let mut dc = ClusterSpec::mig_het_cluster(2, 2, 2, 0).build();
+        let mut sched = Scheduler::from_policy(PolicyKind::MigFgd);
+        let w = Workload::default();
+        let mut live: Vec<(Task, usize, Placement)> = Vec::new();
+        for step in 0..400 {
+            if !live.is_empty() && rng.bernoulli(0.45) {
+                let (task, node, placement) = live.swap_remove(rng.below(live.len()));
+                dc.deallocate(&task, node, &placement);
+                sched.notify_node_changed(node);
+                if rp.defrag_node_if_fragmented(&mut dc, node) {
+                    sched.notify_node_changed(node);
+                }
+            } else {
+                let p = *rng.choice(&MigProfile::ALL);
+                let task = Task::new(step + trial as u64 * 1000, 2.0, 512.0, GpuDemand::Mig(p));
+                let d = repro::sched::policies::schedule_with_repartition(
+                    &mut sched,
+                    &mut dc,
+                    Some(&mut rp),
+                    &w,
+                    &task,
+                );
+                if let Some(d) = d {
+                    dc.allocate(&task, d.node, &d.placement);
+                    sched.notify_node_changed(d.node);
+                    if rp.defrag_node_if_fragmented(&mut dc, d.node) {
+                        sched.notify_node_changed(d.node);
+                    }
+                    live.push((task, d.node, d.placement));
+                }
+            }
+            // --- Invariants, every step. ---
+            // No instance lost or duplicated: the cluster-wide instance
+            // count equals the live MIG task count, and per-profile
+            // multisets match.
+            let mut resident: Vec<MigProfile> = Vec::new();
+            for node in &dc.nodes {
+                let migs = node.mig.as_ref().unwrap();
+                for (g, mg) in migs.iter().enumerate() {
+                    // Window disjointness survives repacks.
+                    let mut union = 0u8;
+                    for inst in &mg.instances {
+                        let w = window_mask(inst.profile, inst.start);
+                        assert_eq!(union & w, 0, "trial {trial} step {step}: overlap");
+                        union |= w;
+                        resident.push(inst.profile);
+                    }
+                    assert_eq!(union, mg.mask);
+                    assert!(
+                        (node.gpu_alloc[g] - mg.alloc_fraction()).abs() < 1e-12,
+                        "gpu_alloc mirror drift"
+                    );
+                }
+            }
+            let mut expected: Vec<MigProfile> =
+                live.iter()
+                    .map(|(t, _, _)| match t.gpu {
+                        GpuDemand::Mig(p) => p,
+                        _ => unreachable!(),
+                    })
+                    .collect();
+            resident.sort();
+            expected.sort();
+            assert_eq!(resident, expected, "trial {trial} step {step}: instances lost");
+            // Budget cap is a hard invariant of both triggers.
+            assert!(
+                rp.stats.migrated_slices <= budget,
+                "trial {trial}: migrated {} > budget {budget}",
+                rp.stats.migrated_slices
+            );
+        }
+        // The proactive trigger actually exercises on unbounded budgets.
+        if budget == u64::MAX {
+            assert!(
+                rp.stats.proactive_repartitions + rp.stats.repartitions > 0,
+                "trial {trial}: repartitioner never fired"
+            );
+        }
+    }
+}
+
+/// Cross-lattice isolation end to end: a mixed fleet schedules both
+/// lattices' demands, and every bound placement lands on a node of the
+/// matching lattice.
+#[test]
+fn mixed_fleet_placements_respect_lattices() {
+    let mut dc = ClusterSpec::mig_het_cluster(2, 2, 4, 1).build();
+    let spec = repro::trace::TraceSpec::mig_het_trace(0.3, 0.5);
+    let workload = spec.synthesize(3).workload();
+    let mut sched = Scheduler::from_policy(PolicyKind::MigPwrFgd { alpha: 0.1 });
+    let mut sampler = spec.sampler(17);
+    let mut placed = [0u64; 2];
+    for _ in 0..400 {
+        let task = sampler.next_task();
+        if let Some(d) = sched.schedule(&dc, &workload, &task) {
+            let node = &dc.nodes[d.node];
+            assert!(node.placement_fits(&task, &d.placement));
+            if let GpuDemand::Mig(p) = task.gpu {
+                assert_eq!(
+                    node.mig_lattice(),
+                    Some(p.lattice()),
+                    "profile {p} bound to a foreign-lattice node"
+                );
+                placed[p.lattice().index()] += 1;
+            }
+            dc.allocate(&task, d.node, &d.placement);
+            sched.notify_node_changed(d.node);
+        }
+    }
+    assert!(placed[0] > 0, "no A100 placements");
+    assert!(placed[1] > 0, "no A30 placements");
+}
