@@ -23,7 +23,7 @@ fn main() {
 
     // Target workload M (Table-I-calibrated trace).
     let workload = TraceSpec::default_trace().synthesize(7).workload();
-    println!("workload classes: {}", workload.classes.len());
+    println!("workload classes: {}", workload.classes().len());
 
     // The paper's sweet spot: alpha = 0.1 (PWR100+FGD900).
     let mut sched = Scheduler::from_policy(PolicyKind::PwrFgd { alpha: 0.1 });

@@ -30,7 +30,7 @@ use std::sync::{Arc, Mutex};
 use crate::cluster::node::Placement;
 use crate::cluster::Datacenter;
 use crate::power;
-use crate::sched::{PolicyKind, Scheduler};
+use crate::sched::{Scheduler, SchedulerProfile};
 use crate::tasks::{GpuDemand, Task, Workload};
 use crate::util::json::{parse, Json};
 
@@ -49,10 +49,23 @@ pub struct CoordinatorState {
 }
 
 impl CoordinatorState {
-    pub fn new(dc: Datacenter, policy: PolicyKind, workload: Workload) -> CoordinatorState {
+    /// `policy` accepts a legacy [`crate::sched::PolicyKind`] or any
+    /// [`SchedulerProfile`] — `repro serve --policy "score(...)|..."`
+    /// deploys composite profiles (hooks included) unchanged.
+    ///
+    /// # Panics
+    /// On a hand-built profile that fails
+    /// [`SchedulerProfile::build`] (unknown keys, bad weights).
+    /// Profiles from [`SchedulerProfile::parse`] and legacy
+    /// `PolicyKind`s are pre-validated and never panic here.
+    pub fn new(
+        dc: Datacenter,
+        policy: impl Into<SchedulerProfile>,
+        workload: Workload,
+    ) -> CoordinatorState {
         CoordinatorState {
             dc,
-            sched: Scheduler::from_policy(policy),
+            sched: policy.into().build().expect("invalid scheduler profile"),
             workload,
             allocations: HashMap::new(),
             submitted: 0,
@@ -62,14 +75,14 @@ impl CoordinatorState {
         }
     }
 
-    /// Submit a task: schedule, commit, register. Returns the decision.
+    /// Submit a task: the scheduler's full `place` protocol (postFail
+    /// repack-and-retry, commit, postPlace hooks), then register the
+    /// allocation. Returns the decision.
     pub fn submit(&mut self, task: Task) -> Option<(usize, Placement)> {
         self.submitted += 1;
         self.arrived_gpu_units += task.gpu.units();
-        match self.sched.schedule(&self.dc, &self.workload, &task) {
+        match self.sched.place(&mut self.dc, &self.workload, &task) {
             Some(d) => {
-                self.dc.allocate(&task, d.node, &d.placement);
-                self.sched.notify_node_changed(d.node);
                 self.allocations.insert(task.id, (task, d.node, d.placement.clone()));
                 self.scheduled += 1;
                 Some((d.node, d.placement))
@@ -81,12 +94,12 @@ impl CoordinatorState {
         }
     }
 
-    /// Release a previously scheduled task (departure).
+    /// Release a previously scheduled task (departure; runs the
+    /// scheduler's postPlace hooks).
     pub fn release(&mut self, task_id: u64) -> bool {
         match self.allocations.remove(&task_id) {
             Some((task, node, placement)) => {
-                self.dc.deallocate(&task, node, &placement);
-                self.sched.notify_node_changed(node);
+                self.sched.release(&mut self.dc, &task, node, &placement);
                 true
             }
             None => false,
@@ -283,6 +296,7 @@ fn serve_connection(
 mod tests {
     use super::*;
     use crate::cluster::ClusterSpec;
+    use crate::sched::PolicyKind;
 
     fn state() -> Mutex<CoordinatorState> {
         Mutex::new(CoordinatorState::new(
@@ -306,6 +320,19 @@ mod tests {
         let (resp, _) = handle_request(&st, r#"{"op":"release","id":1}"#);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
         assert_eq!(st.lock().unwrap().dc.n_tasks, 0);
+    }
+
+    #[test]
+    fn dsl_profile_serves_submissions() {
+        let st = Mutex::new(CoordinatorState::new(
+            ClusterSpec::tiny(2, 4, 1).build(),
+            SchedulerProfile::parse("score(pwr=0.4,fgd=0.4,dotprod=0.2)|bind(weighted:0.4)")
+                .unwrap(),
+            Workload::default(),
+        ));
+        let (resp, _) =
+            handle_request(&st, r#"{"op":"submit","id":1,"cpu":4,"mem":1024,"gpu":0.5}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
     }
 
     #[test]

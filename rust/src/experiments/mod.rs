@@ -27,7 +27,7 @@ use anyhow::{bail, Result};
 
 use crate::cluster::ClusterSpec;
 use crate::metrics::{average_on_grid, capacity_grid, savings_pct, Column};
-use crate::sched::PolicyKind;
+use crate::sched::{PolicyKind, SchedulerProfile};
 use crate::sim::{run_repetitions, RepeatConfig};
 use crate::trace::TraceSpec;
 use crate::util::csv::CsvWriter;
@@ -117,15 +117,21 @@ impl Harness {
     }
 
     /// Run (or fetch) the averaged series for a (trace, policy) cell.
-    pub fn cell(&mut self, trace: &TraceSpec, policy: PolicyKind) -> CellSeries {
-        let key = (trace.name.clone(), policy.label());
+    /// `policy` accepts a legacy [`PolicyKind`] or any
+    /// [`SchedulerProfile`]. The cache keys on the *full* profile
+    /// contents (labels are not injective: hand-attached hooks keep the
+    /// base label, and the ×1000 label rounding collapses close
+    /// weights — two distinct profiles must never share a cell).
+    pub fn cell(&mut self, trace: &TraceSpec, policy: impl Into<SchedulerProfile>) -> CellSeries {
+        let profile: SchedulerProfile = policy.into();
+        let key = (trace.name.clone(), format!("{profile:?}"));
         if let Some(c) = self.cache.get(&key) {
             return c.clone();
         }
         eprintln!(
             "[experiment] running {} / {} ({} reps, {} nodes)…",
             trace.name,
-            policy.label(),
+            profile.label,
             self.cfg.reps,
             self.cluster.total_nodes()
         );
@@ -136,7 +142,7 @@ impl Harness {
             target_ratio: self.cfg.target,
             ..Default::default()
         };
-        let runs = run_repetitions(&self.cluster, trace, policy, &rcfg);
+        let runs = run_repetitions(&self.cluster, trace, profile, &rcfg);
         let series: Vec<_> = runs.into_iter().map(|r| r.series).collect();
         let cell = CellSeries {
             eopc: average_on_grid(&series, Column::Eopc, &self.grid),
@@ -189,12 +195,13 @@ impl Harness {
             "ext-steady" => self.ext_steady(),
             "ext-mig" => self.ext_mig(),
             "ext-mig-het" => self.ext_mig_het(),
+            "ext-profiles" => self.ext_profiles(),
             "ablation-tiebreak" => self.ablation_tiebreak(),
             "all" => {
                 let ids = [
                     "table1", "table2", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
                     "fig7", "fig8", "fig9", "fig10", "ext-dynalpha", "ext-steady",
-                    "ext-mig", "ext-mig-het", "ablation-tiebreak",
+                    "ext-mig", "ext-mig-het", "ext-profiles", "ablation-tiebreak",
                 ];
                 let mut out = Vec::new();
                 for id in ids {
@@ -226,6 +233,58 @@ impl Harness {
         let path = self.out_path("ext_dynalpha.csv");
         let mut w = CsvWriter::create(&path, &header_refs)?;
         let cells: Vec<_> = policies.iter().map(|&p| self.cell(&trace, p)).collect();
+        for (i, &x) in self.grid.iter().enumerate() {
+            let mut row = vec![x];
+            for c in &cells {
+                row.push(savings_pct(&fgd.eopc[i..=i], &c.eopc[i..=i])[0]);
+                row.push(c.grar[i]);
+            }
+            w.row(&row)?;
+        }
+        w.flush()?;
+        Ok(vec![path])
+    }
+
+    /// Extension: composite scheduler profiles (the `SchedulerProfile`
+    /// DSL) against the paper's two-objective PWR⊕FGD — can a third
+    /// packing objective or load-adaptive weights beat the static
+    /// combination? Emits savings-vs-FGD and GRAR series per profile
+    /// (legacy labels stay byte-identical, so the PWR100+FGD900 column
+    /// is comparable across PRs).
+    fn ext_profiles(&mut self) -> Result<Vec<String>> {
+        let trace = TraceSpec::default_trace();
+        let fgd = self.cell(&trace, PolicyKind::Fgd);
+        let profiles: Vec<SchedulerProfile> = vec![
+            PolicyKind::PwrFgd { alpha: 0.1 }.profile(),
+            // Three objectives: power + fragmentation + dot-product
+            // alignment, power-leaning binder.
+            SchedulerProfile::parse(
+                "score(pwr=0.5,fgd=0.3,dotprod=0.2)|bind(weighted:0.5)",
+            )
+            .map_err(anyhow::Error::msg)?,
+            // Fragmentation-leaning with a best-fit packing assist.
+            SchedulerProfile::parse(
+                "score(pwr=0.1,fgd=0.7,bestfit=0.2)|bind(weighted:0.1)",
+            )
+            .map_err(anyhow::Error::msg)?,
+            // Load-adaptive three-objective profile: power weight decays
+            // from 0.9 (idle) to 0.05 (saturated) while FGD:DotProd keep
+            // their 3:1 ratio.
+            SchedulerProfile::parse(
+                "score(pwr=0.5,fgd=0.375,dotprod=0.125)|bind(weighted:0.5)|mod(loadalpha:0.9:0.05)",
+            )
+            .map_err(anyhow::Error::msg)?,
+        ];
+        let mut headers = vec!["x".to_string()];
+        for p in &profiles {
+            headers.push(format!("savings_{}", p.label));
+            headers.push(format!("grar_{}", p.label));
+        }
+        let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let path = self.out_path("ext_profiles.csv");
+        let mut w = CsvWriter::create(&path, &header_refs)?;
+        let cells: Vec<_> =
+            profiles.iter().map(|p| self.cell(&trace, p.clone())).collect();
         for (i, &x) in self.grid.iter().enumerate() {
             let mut row = vec![x];
             for c in &cells {
@@ -385,15 +444,11 @@ impl Harness {
                 sample_every_s: 50.0,
                 seed: self.cfg.seed,
             };
-            let mut sim = SteadySim::new(
-                cluster.build(),
-                crate::sched::Scheduler::from_policy(policy),
-                &trace,
-                &cfg,
-            );
-            sim.repartitioner = Some(crate::sched::policies::MigRepartitioner::new(
+            let mut sched = crate::sched::Scheduler::from_policy(policy);
+            sched.add_post_hook(Box::new(crate::sched::policies::MigRepartitioner::new(
                 crate::sched::policies::RepartitionConfig::default(),
-            ));
+            )));
+            let mut sim = SteadySim::new(cluster.build(), sched, &trace, &cfg);
             let r = sim.run(&cfg);
             let (label, infl_reparts, infl_slices) = &repart_rows[pi];
             w.row_str(&[
@@ -526,17 +581,13 @@ impl Harness {
                 sample_every_s: 50.0,
                 seed: self.cfg.seed,
             };
-            let mut sim = SteadySim::new(
-                cluster.build(),
-                crate::sched::Scheduler::from_policy(policy),
-                &trace,
-                &cfg,
-            );
-            sim.repartitioner = Some(crate::sched::policies::MigRepartitioner::new(
+            let mut sched = crate::sched::Scheduler::from_policy(policy);
+            sched.add_post_hook(Box::new(crate::sched::policies::MigRepartitioner::new(
                 crate::sched::policies::RepartitionConfig::with_threshold(
                     MIG_HET_FRAG_THRESHOLD,
                 ),
-            ));
+            )));
+            let mut sim = SteadySim::new(cluster.build(), sched, &trace, &cfg);
             let r = sim.run(&cfg);
             let (label, infl_re, infl_pro, infl_slices) = &churn_rows[pi];
             w.row_str(&[

@@ -82,7 +82,7 @@ pub fn f_node_class<V: ResourceView + ?Sized>(v: &V, class: &TaskClass) -> f64 {
 
 /// `F_n(M) = Σ_m pop_m · F_n(m)`: expected fragmentation of a node.
 pub fn f_node<V: ResourceView + ?Sized>(v: &V, workload: &Workload) -> f64 {
-    workload.classes.iter().map(|m| m.pop * f_node_class(v, m)).sum()
+    workload.classes().iter().map(|m| m.pop * f_node_class(v, m)).sum()
 }
 
 /// `F_dc = Σ_n F_n(M)` (Eq. 4), in GPU units.
@@ -129,7 +129,7 @@ pub struct PreparedWorkload {
 impl PreparedWorkload {
     pub fn new(w: &Workload) -> PreparedWorkload {
         let classes = w
-            .classes
+            .classes()
             .iter()
             .map(|c| {
                 let (kind, d, profile) = match c.gpu {
@@ -460,12 +460,10 @@ mod tests {
         let mut n = node(2);
         n.allocate(&Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.8)), &Placement::Shared { gpu: 0 });
         // free: GPU0 0.2, GPU1 1.0
-        let w = Workload {
-            classes: vec![
+        let w = Workload::new(vec![
                 class(1.0, GpuDemand::Frac(0.5), 0.5), // frag 0.2
                 class(1.0, GpuDemand::Whole(1), 0.5),  // frag 0.2
-            ],
-        };
+        ]);
         assert!((f_node(&n, &w) - 0.2).abs() < 1e-9);
     }
 
@@ -475,12 +473,10 @@ mod tests {
         // increase fragmentation less than splitting a fresh GPU.
         let mut n = node(2);
         n.allocate(&Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.5)), &Placement::Shared { gpu: 0 });
-        let w = Workload {
-            classes: vec![
+        let w = Workload::new(vec![
                 class(1.0, GpuDemand::Frac(0.5), 0.6),
                 class(1.0, GpuDemand::Whole(1), 0.4),
-            ],
-        };
+        ]);
         let t = Task::new(2, 1.0, 0.0, GpuDemand::Frac(0.5));
         let before = f_node(&n, &w);
         let pack = {
@@ -537,7 +533,7 @@ mod tests {
                     pop: rng.range_f64(0.01, 1.0),
                 });
             }
-            let w = Workload { classes };
+            let w = Workload::new(classes);
             let pw = PreparedWorkload::new(&w);
             // Current state.
             let slow = f_node(&n, &w);
@@ -574,13 +570,11 @@ mod tests {
                 n.gpu_alloc[j] = *rng.choice(&[0.0, 0.5, 1.0]);
             }
             n.cpu_alloc = rng.range_f64(0.0, 90.0);
-            let w = Workload {
-                classes: vec![
-                    class(8.0, GpuDemand::Frac(0.5), 0.4),
-                    class(90.0, GpuDemand::Whole(2), 0.4),
-                    class(4.0, GpuDemand::Zero, 0.2),
-                ],
-            };
+            let w = Workload::new(vec![
+                class(8.0, GpuDemand::Frac(0.5), 0.4),
+                class(90.0, GpuDemand::Whole(2), 0.4),
+                class(4.0, GpuDemand::Zero, 0.2),
+            ]);
             let pw = PreparedWorkload::new(&w);
             let before_slow = f_node(&n, &w);
             let before_fast = f_node_fast(&n, &pw);
@@ -655,7 +649,7 @@ mod tests {
                     pop: rng.range_f64(0.01, 1.0),
                 });
             }
-            let w = Workload { classes };
+            let w = Workload::new(classes);
             let pw = PreparedWorkload::new(&w);
             let slow = f_node(&n, &w);
             let fast = f_node_fast(&n, &pw);
@@ -703,7 +697,7 @@ mod tests {
         let t = Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.9));
         let p = dc.nodes[0].candidate_placements(&t)[0].clone();
         dc.allocate(&t, 0, &p);
-        let w = Workload { classes: vec![class(1.0, GpuDemand::Frac(0.5), 1.0)] };
+        let w = Workload::new(vec![class(1.0, GpuDemand::Frac(0.5), 1.0)]);
         let total = f_datacenter(&dc, &w);
         let by_hand: f64 = dc.nodes.iter().map(|n| f_node(n, &w)).sum();
         assert_eq!(total, by_hand);

@@ -2,20 +2,29 @@
 //!
 //! ```text
 //! repro simulate   --policy pwrfgd:0.1 --trace default --seed 42 [--scale 0.25] [--target 1.02]
-//! repro experiment <table1|table2|fig1..fig10|ext-mig|ext-mig-het|all> [--reps 10] [--scale 1.0] [--out results]
+//! repro experiment <table1|table2|fig1..fig10|ext-mig|ext-mig-het|ext-profiles|all> [--reps 10] [--scale 1.0] [--out results]
 //! repro ext-mig    [--reps 10] [--scale 1.0] [--out results]   (MIG subsystem end-to-end)
 //! repro ext-mig-het [--reps 10] [--scale 1.0] [--out results]  (mixed A100+A30 MIG fleet)
+//! repro ext-profiles [--reps 10] [--scale 1.0] [--out results] (composite profile DSL sweep)
 //! repro trace      <default|multi-gpu-20|sharing-gpu-100|mig-30|...> [--seed 42]
 //! repro inventory
 //! repro serve      [--addr 127.0.0.1:7077] [--policy pwrfgd:0.1]
 //! repro scorer-check [--artifacts artifacts] [--tasks 200]   (XLA vs native parity)
+//! ```
+//!
+//! `--policy` accepts every legacy policy name (`fgd`, `pwrfgd:0.1`,
+//! `mig-pwrfgd:0.1`, …) *and* the scheduler-profile DSL
+//! (docs/scheduler.md):
+//!
+//! ```text
+//! --policy "score(pwr=0.5,fgd=0.3,dotprod=0.2)|bind(weighted:0.5)|mod(loadalpha:0.9:0.0)"
 //! ```
 
 use anyhow::{bail, Context, Result};
 use repro::cluster::ClusterSpec;
 use repro::coordinator::{CoordinatorState, Server};
 use repro::experiments::{ExpConfig, Harness};
-use repro::sched::{PolicyKind, Scheduler};
+use repro::sched::SchedulerProfile;
 use repro::sim::Simulation;
 use repro::trace::TraceSpec;
 use repro::util::cli::parse_args;
@@ -34,6 +43,7 @@ fn main() -> Result<()> {
         // subsystem / heterogeneous-fleet experiments.
         Some("ext-mig") => cmd_experiment(&args, Some("ext-mig")),
         Some("ext-mig-het") => cmd_experiment(&args, Some("ext-mig-het")),
+        Some("ext-profiles") => cmd_experiment(&args, Some("ext-profiles")),
         Some("trace") => cmd_trace(&args),
         Some("inventory") => cmd_inventory(),
         Some("serve") => cmd_serve(&args),
@@ -41,7 +51,7 @@ fn main() -> Result<()> {
         Some("plot") => cmd_plot(&args),
         _ => {
             eprintln!(
-                "usage: repro <simulate|experiment|ext-mig|ext-mig-het|trace|inventory|serve|scorer-check|plot> [options]\n\
+                "usage: repro <simulate|experiment|ext-mig|ext-mig-het|ext-profiles|trace|inventory|serve|scorer-check|plot> [options]\n\
                  see rust/src/main.rs header for details"
             );
             Ok(())
@@ -104,9 +114,11 @@ fn cluster_for(scale: f64) -> ClusterSpec {
     }
 }
 
-fn policy_from(args: &repro::util::cli::Args) -> Result<PolicyKind> {
+/// Parse `--policy`: legacy policy names and the profile DSL both work
+/// (see [`SchedulerProfile::parse`]).
+fn policy_from(args: &repro::util::cli::Args) -> Result<SchedulerProfile> {
     let name = args.get("policy", "pwrfgd:0.1");
-    PolicyKind::parse(&name).with_context(|| format!("unknown policy '{name}'"))
+    SchedulerProfile::parse(&name).map_err(anyhow::Error::msg)
 }
 
 fn cmd_simulate(args: &repro::util::cli::Args) -> Result<()> {
@@ -124,11 +136,11 @@ fn cmd_simulate(args: &repro::util::cli::Args) -> Result<()> {
         dc.nodes.len(),
         dc.total_gpus(),
         dc.total_vcpus(),
-        policy.label(),
+        policy.label,
         spec.name
     );
     let workload = spec.synthesize(seed ^ 0x57AB1E).workload();
-    let sched = Scheduler::from_policy(policy);
+    let sched = policy.build().map_err(anyhow::Error::msg)?;
     let mut sim = Simulation::with_spec(dc, sched, &spec, workload, seed);
     sim.record_frag = false;
     let t0 = std::time::Instant::now();
@@ -191,7 +203,7 @@ fn cmd_trace(args: &repro::util::cli::Args) -> Result<()> {
         println!("{b:<12} {:>10.2} {:>12.2}", pop[i], share[i]);
     }
     let w = trace.workload();
-    println!("workload classes: {}", w.classes.len());
+    println!("workload classes: {}", w.classes().len());
     Ok(())
 }
 
@@ -216,9 +228,10 @@ fn cmd_serve(args: &repro::util::cli::Args) -> Result<()> {
     let scale = args.get_f64("scale", 1.0);
     let spec = TraceSpec::default_trace();
     let workload = spec.synthesize(7).workload();
+    let label = policy.label.clone();
     let state = CoordinatorState::new(cluster_for(scale).build(), policy, workload);
     let server = Server::bind(&addr, state)?;
-    eprintln!("coordinator listening on {addr} (policy {})", policy.label());
+    eprintln!("coordinator listening on {addr} (policy {label})");
     server.run()?;
     Ok(())
 }

@@ -155,7 +155,7 @@ impl XlaScorer {
         let m = self.config.m;
         let top = workload.top_k(m);
         self.classes.iter_mut().for_each(|x| *x = 0.0);
-        for (i, c) in top.classes.iter().enumerate() {
+        for (i, c) in top.classes().iter().enumerate() {
             let row = &mut self.classes[i * 7..i * 7 + 7];
             row[0] = c.cpu as f32;
             row[1] = c.mem as f32;
@@ -330,9 +330,13 @@ pub fn parity_check(
     alpha: f64,
     seed: u64,
 ) -> Result<ParityReport> {
-    use crate::sched::{PolicyKind, Scheduler};
+    use crate::sched::PolicyKind;
     use crate::trace::TraceSpec;
 
+    // Same α domain the policy parsers enforce: an out-of-range α would
+    // silently flip the FGD weight negative on the native side only,
+    // making every comparison a spurious mismatch.
+    crate::sched::profile::validate_alpha(alpha, "--alpha").map_err(anyhow::Error::msg)?;
     let rt = Runtime::cpu()?;
     let mut scorer = XlaScorer::load(&rt, artifacts)?;
     // A cluster that fits the artifact's node capacity (paper_scaled
@@ -349,7 +353,10 @@ pub fn parity_check(
     // paths score against the identical target workload M.
     let workload = trace.synthesize(seed ^ 0x57AB1E).workload().top_k(scorer.config.m);
     let mut sampler = trace.sampler(seed);
-    let mut native = Scheduler::from_policy(PolicyKind::PwrFgd { alpha });
+    // Build through the profile lowering (the same path `--policy`
+    // takes), so parity also covers the registry assembly.
+    let mut native =
+        PolicyKind::PwrFgd { alpha }.profile().build().map_err(anyhow::Error::msg)?;
 
     let mut report = ParityReport::default();
     let fallbacks_before = mig_scorer_fallbacks();

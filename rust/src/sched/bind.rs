@@ -1,0 +1,224 @@
+//! The `bind` extension point: how the chosen node's concrete GPU
+//! placement is selected once the score plugins have picked a node.
+//!
+//! Binding is a [`BindPlugin`] trait (the k8s `Bind` extension-point
+//! analog); the five built-in binders live here and are registered
+//! under string keys in [`crate::sched::profile`]:
+//!
+//! | key         | binder                     | semantics                          |
+//! |-------------|----------------------------|------------------------------------|
+//! | `weighted:α`| [`WeightedBinder`]         | min `α·Δpower + (1−α)·Δfrag`       |
+//! | `bestfit`   | [`BestFitBinder`]          | least GPU residual after placing   |
+//! | `packed`    | [`PackOccupiedBinder`]     | occupied GPUs first, then best-fit |
+//! | `first`     | [`FirstBinder`]            | lowest GPU index                   |
+//! | `random`    | [`RandomBinder`]           | uniform over candidates (seeded)   |
+//!
+//! The framework only consults the binder when a node offers ≥ 2
+//! candidate placements (a single candidate is bound directly), so
+//! plugins may assume `placements.len() >= 2`.
+
+use std::cell::RefCell;
+
+use crate::cluster::node::{Node, Placement, ResourceView, EPS};
+use crate::frag;
+use crate::sched::framework::power_delta;
+use crate::tasks::Task;
+use crate::util::rng::Rng;
+
+/// Context handed to bind plugins.
+pub struct BindCtx<'a> {
+    /// Hot-loop form of the target workload.
+    pub prepared: &'a frag::PreparedWorkload,
+    /// Per-decision α retarget from the weight modulator, if any
+    /// (honored by [`WeightedBinder`], ignored by the rest).
+    pub alpha_override: Option<f64>,
+}
+
+/// A bind plugin: selects the concrete placement on the already-chosen
+/// node from the (deduped, all-legal, ≥ 2) candidates.
+pub trait BindPlugin: Send {
+    fn name(&self) -> &'static str;
+    fn bind(&self, ctx: &BindCtx, node: &Node, task: &Task, placements: &[Placement]) -> Placement;
+}
+
+/// Minimize `α·Δpower + (1−α)·Δfrag` over candidate placements (each
+/// term min-max normalized across the candidates). `α=1` ⇒ pure PWR,
+/// `α=0` ⇒ pure FGD — mirrors the node-level k8s combination at
+/// placement granularity.
+pub struct WeightedBinder {
+    pub alpha: f64,
+}
+
+impl BindPlugin for WeightedBinder {
+    fn name(&self) -> &'static str {
+        "weighted"
+    }
+
+    fn bind(&self, ctx: &BindCtx, node: &Node, task: &Task, placements: &[Placement]) -> Placement {
+        let alpha = ctx.alpha_override.unwrap_or(self.alpha);
+        let before = frag::f_node_fast(node, ctx.prepared);
+        let dp: Vec<f64> = placements.iter().map(|p| power_delta(node, task, p)).collect();
+        let df: Vec<f64> = placements
+            .iter()
+            .map(|p| frag::frag_delta_fast(node, task, p, ctx.prepared, before))
+            .collect();
+        let norm = |v: &[f64]| -> Vec<f64> {
+            let lo = v.iter().copied().fold(f64::INFINITY, f64::min);
+            let hi = v.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            if hi - lo < 1e-12 {
+                vec![0.0; v.len()]
+            } else {
+                v.iter().map(|x| (x - lo) / (hi - lo)).collect()
+            }
+        };
+        let (dpn, dfn) = (norm(&dp), norm(&df));
+        let mut best = 0;
+        let mut best_cost = f64::INFINITY;
+        for i in 0..placements.len() {
+            let cost = alpha * dpn[i] + (1.0 - alpha) * dfn[i];
+            if cost < best_cost - 1e-12 {
+                best_cost = cost;
+                best = i;
+            }
+        }
+        placements[best].clone()
+    }
+}
+
+/// Best-fit on the GPU residual: pick the feasible GPU with the least
+/// leftover fraction (the open-simulator default).
+pub struct BestFitBinder;
+
+impl BindPlugin for BestFitBinder {
+    fn name(&self) -> &'static str {
+        "bestfit"
+    }
+
+    fn bind(&self, _ctx: &BindCtx, node: &Node, _task: &Task, placements: &[Placement]) -> Placement {
+        best_fit_gpu(node, placements)
+    }
+}
+
+/// Prefer already-occupied GPUs, then pack best-fit (MLaaS tiers).
+pub struct PackOccupiedBinder;
+
+impl BindPlugin for PackOccupiedBinder {
+    fn name(&self) -> &'static str {
+        "packed"
+    }
+
+    fn bind(&self, _ctx: &BindCtx, node: &Node, _task: &Task, placements: &[Placement]) -> Placement {
+        let occupied: Vec<Placement> = placements
+            .iter()
+            .filter(|p| matches!(p, Placement::Shared { gpu } if node.gpu_alloc[*gpu] > 0.0))
+            .cloned()
+            .collect();
+        if !occupied.is_empty() {
+            best_fit_gpu(node, &occupied)
+        } else {
+            best_fit_gpu(node, placements)
+        }
+    }
+}
+
+/// First candidate (lowest GPU index).
+pub struct FirstBinder;
+
+impl BindPlugin for FirstBinder {
+    fn name(&self) -> &'static str {
+        "first"
+    }
+
+    fn bind(&self, _ctx: &BindCtx, _node: &Node, _task: &Task, placements: &[Placement]) -> Placement {
+        placements[0].clone()
+    }
+}
+
+/// Uniformly random candidate (seeded, reproducible).
+pub struct RandomBinder {
+    rng: RefCell<Rng>,
+}
+
+impl RandomBinder {
+    pub fn new(seed: u64) -> RandomBinder {
+        RandomBinder { rng: RefCell::new(Rng::new(seed)) }
+    }
+}
+
+impl BindPlugin for RandomBinder {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn bind(&self, _ctx: &BindCtx, _node: &Node, _task: &Task, placements: &[Placement]) -> Placement {
+        let i = self.rng.borrow_mut().below(placements.len());
+        placements[i].clone()
+    }
+}
+
+/// Best-fit on GPU residual: least leftover after placing. For MIG
+/// placements the residual is the target GPU's free-slice fraction, so
+/// instances pack onto the fullest GPU that still has a legal start
+/// (ties → the profile's preferred start order).
+pub fn best_fit_gpu(node: &Node, placements: &[Placement]) -> Placement {
+    let mut best = 0;
+    let mut best_free = f64::INFINITY;
+    for (i, p) in placements.iter().enumerate() {
+        let free = match p {
+            Placement::Shared { gpu } | Placement::MigSlice { gpu, .. } => node.gpu_free_of(*gpu),
+            _ => return p.clone(), // whole/CPU placements are canonical
+        };
+        if free < best_free - EPS {
+            best_free = free;
+            best = i;
+        }
+    }
+    placements[best].clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::types::{CpuModel, GpuModel};
+    use crate::tasks::{GpuDemand, Workload};
+
+    fn node4() -> Node {
+        Node::new(0, CpuModel::XeonE5_2682V4, Some(GpuModel::G2), 96.0, 393_216.0, 4)
+    }
+
+    #[test]
+    fn weighted_binder_honors_alpha_override() {
+        // GPU0 half-full, GPU1 empty: α=1 (pure power) packs onto the
+        // occupied GPU; the override must win over the stored α.
+        let mut node = node4();
+        node.allocate(&Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.5)), &Placement::Shared { gpu: 0 });
+        let w = Workload::default();
+        let prepared = frag::PreparedWorkload::new(&w);
+        let t = Task::new(2, 1.0, 0.0, GpuDemand::Frac(0.25));
+        let ps = vec![Placement::Shared { gpu: 0 }, Placement::Shared { gpu: 1 }];
+        let b = WeightedBinder { alpha: 0.0 };
+        let ctx = BindCtx { prepared: &prepared, alpha_override: Some(1.0) };
+        assert_eq!(b.bind(&ctx, &node, &t, &ps), Placement::Shared { gpu: 0 });
+    }
+
+    #[test]
+    fn pack_occupied_prefers_powered_gpu() {
+        let mut node = node4();
+        node.allocate(&Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.5)), &Placement::Shared { gpu: 2 });
+        let w = Workload::default();
+        let prepared = frag::PreparedWorkload::new(&w);
+        let ctx = BindCtx { prepared: &prepared, alpha_override: None };
+        let t = Task::new(2, 1.0, 0.0, GpuDemand::Frac(0.25));
+        let ps = vec![
+            Placement::Shared { gpu: 0 },
+            Placement::Shared { gpu: 2 },
+            Placement::Shared { gpu: 3 },
+        ];
+        assert_eq!(
+            PackOccupiedBinder.bind(&ctx, &node, &t, &ps),
+            Placement::Shared { gpu: 2 }
+        );
+        // First binder stays positional.
+        assert_eq!(FirstBinder.bind(&ctx, &node, &t, &ps), Placement::Shared { gpu: 0 });
+    }
+}

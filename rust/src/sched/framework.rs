@@ -1,25 +1,38 @@
-//! The Kubernetes-scheduling-framework analog (Algorithm 1).
+//! The Kubernetes-scheduling-framework analog (Algorithm 1), organized
+//! around named extension points like real k8s scheduler profiles (see
+//! [`crate::sched::profile`] for the profile/DSL layer):
 //!
 //! Pipeline per arriving task:
 //! 1. **Filter** — drop nodes failing Cond. 1–3 or the model constraint
 //!    (the k8s filter plugin of Algorithm 1, line 4).
-//! 2. **Score** — every score plugin rates each feasible node (the
-//!    hypothetical-assignment loop, lines 5–8). Plugins return raw
-//!    "higher is better" scores.
-//! 3. **NormalizeScore** — per-plugin min-max normalization to [0, 100],
+//! 2. **WeightModulator** (extension point) — an optional
+//!    [`WeightModulator`] retargets the plugin weights from live
+//!    cluster state (load-adaptive α is the first implementation).
+//! 3. **Score** (extension point) — every [`ScorePlugin`] rates each
+//!    feasible node (the hypothetical-assignment loop, lines 5–8).
+//!    Plugins return raw "higher is better" scores.
+//! 4. **NormalizeScore** — per-plugin min-max normalization to [0, 100],
 //!    exactly how the k8s scheduling framework makes heterogeneous
 //!    plugin scores combinable (§IV-A).
-//! 4. **Combine** — weighted sum (`α·PWR + (1−α)·FGD` uses weights α and
+//! 5. **Combine** — weighted sum (`α·PWR + (1−α)·FGD` uses weights α and
 //!    1−α).
-//! 5. **Bind** — pick the arg-max node (ties → lowest id, deterministic)
-//!    and choose the concrete GPU placement inside it.
-
-use std::cell::RefCell;
+//! 6. **Bind** (extension point) — pick the arg-max node (ties →
+//!    uniform random, k8s `selectHost` semantics) and let the
+//!    [`BindPlugin`](crate::sched::bind::BindPlugin) choose the
+//!    concrete GPU placement inside it.
+//! 7. **PostFail / PostPlace** (extension points) — [`PostHook`]s run
+//!    after a failed decision (e.g. repack a MIG GPU and retry — the
+//!    k8s-preemption analog) and after every allocation change (e.g.
+//!    proactive defragmentation). The [`Scheduler::place`] /
+//!    [`Scheduler::release`] protocol drives them, so simulation loops
+//!    can never silently skip a hook.
 
 use crate::cluster::node::{Node, Placement, ResourceView, EPS};
 use crate::cluster::Datacenter;
 use crate::frag;
 use crate::power;
+use crate::sched::bind::{BindCtx, BindPlugin};
+use crate::sched::modulate::WeightModulator;
 use crate::tasks::{GpuDemand, Task, Workload};
 use crate::util::rng::Rng;
 
@@ -63,22 +76,47 @@ pub trait ScorePlugin: Send {
     fn score(&self, ctx: &SchedCtx, node: &Node, task: &Task, placements: &[Placement]) -> f64;
 }
 
-/// How the chosen node's concrete GPU placement is selected at bind
-/// time.
-pub enum Binder {
-    /// Minimize `alpha·Δpower + (1−alpha)·Δfrag` over candidate
-    /// placements (each term min-max normalized across the candidates).
-    /// `alpha=1` ⇒ pure PWR, `alpha=0` ⇒ pure FGD.
-    WeightedPwrFgd { alpha: f64 },
-    /// Best-fit on the GPU residual: pick the feasible GPU with the
-    /// least leftover fraction (the open-simulator default).
-    GpuBestFit,
-    /// Prefer already-occupied GPUs, then pack best-fit (MLaaS tiers).
-    PackOccupied,
-    /// First candidate (lowest GPU index).
-    First,
-    /// Uniformly random candidate.
-    Random(RefCell<Rng>),
+/// A post-decision extension point (the k8s-preemption analog): hooks
+/// may *mutate the datacenter* after a failed decision or after an
+/// allocation change. The MIG repartitioner
+/// ([`crate::sched::policies::MigRepartitioner`]) is the first
+/// implementation.
+///
+/// Hooks MUST report **every** node they mutate through the
+/// `invalidate` callback (it bumps the framework's per-node plugin-cache
+/// generation); a cross-node hook that skips one leaves stale cached
+/// scores for that node.
+pub trait PostHook: Send {
+    fn name(&self) -> &'static str;
+
+    /// After a scheduling failure: try to make room for `task` (e.g.
+    /// repack a MIG GPU), reporting each mutated node via `invalidate`.
+    /// Return `true` when the framework should retry the decision once.
+    fn post_fail(
+        &mut self,
+        _dc: &mut Datacenter,
+        _task: &Task,
+        _invalidate: &mut dyn FnMut(usize),
+    ) -> bool {
+        false
+    }
+
+    /// After `node_id`'s allocation changed (commit or release): e.g.
+    /// proactive defragmentation. Report each mutated node via
+    /// `invalidate` (a hook may touch nodes other than `node_id`).
+    fn post_place(
+        &mut self,
+        _dc: &mut Datacenter,
+        _node_id: usize,
+        _invalidate: &mut dyn FnMut(usize),
+    ) {
+    }
+
+    /// Named activity counters for reporting (e.g. repartition counts);
+    /// surfaced through [`Scheduler::hook_counter`].
+    fn counters(&self) -> Vec<(&'static str, u64)> {
+        Vec::new()
+    }
 }
 
 /// A scheduling decision: the node and the concrete placement.
@@ -88,10 +126,19 @@ pub struct Decision {
     pub placement: Placement,
 }
 
-/// The scheduler: filter + weighted score plugins + binder.
+/// The scheduler: filter + weighted score plugins + binder, with
+/// optional weight modulator and post-decision hooks. Assembled from a
+/// [`crate::sched::profile::SchedulerProfile`] (or directly via
+/// [`Scheduler::new`] for custom plugin stacks).
 pub struct Scheduler {
-    plugins: Vec<(Box<dyn ScorePlugin>, f64)>,
-    binder: Binder,
+    plugins: Vec<Box<dyn ScorePlugin>>,
+    /// Static per-plugin weights (the profile's `score(...)` weights).
+    weights: Vec<f64>,
+    /// Per-decision effective weights (scratch; modulator output).
+    eff_weights: Vec<f64>,
+    binder: Box<dyn BindPlugin>,
+    modulator: Option<Box<dyn WeightModulator>>,
+    hooks: Vec<Box<dyn PostHook>>,
     /// Per-node allocation generation (cache invalidation for plugins).
     generations: Vec<u64>,
     /// Scratch buffers, reused across decisions (hot path: zero alloc).
@@ -99,8 +146,10 @@ pub struct Scheduler {
     placements: Vec<Vec<Placement>>,
     raw: Vec<f64>,
     combined: Vec<f64>,
-    /// Cached hot-loop workload (rebuilt when the workload changes).
-    prepared_cache: Option<(*const Workload, usize, frag::PreparedWorkload)>,
+    /// Cached hot-loop workload, keyed on [`Workload::revision`]
+    /// (identity stamps are immune to allocator address reuse, unlike
+    /// the raw-pointer key this replaces).
+    prepared_cache: Option<(u64, frag::PreparedWorkload)>,
     /// Cached cluster caps (node shapes are static).
     caps_cache: Option<(usize, ClusterCaps)>,
     /// Seeded RNG for the k8s-style random tie-break (reproducible).
@@ -108,24 +157,24 @@ pub struct Scheduler {
     /// Ablation switch: pick the lowest-id node among ties instead of
     /// k8s's random choice (`repro experiment ablation-tiebreak`).
     deterministic_ties: bool,
-    /// Extension (paper §VII future work): dynamically adjust α with
-    /// cluster load — `(alpha_empty, alpha_full)`, linearly
-    /// interpolated on GPU utilization. Requires the plugin layout
-    /// `[(PWR, ·), (FGD, ·)]`.
-    dynamic_alpha: Option<(f64, f64)>,
     label: String,
 }
 
-// SAFETY: the cached raw pointer is only ever *compared*, never
-// dereferenced; all other fields are Send.
-unsafe impl Send for Scheduler {}
-
 impl Scheduler {
     /// Build from explicit plugins (weight per plugin) and a binder.
-    pub fn new(plugins: Vec<(Box<dyn ScorePlugin>, f64)>, binder: Binder, label: &str) -> Scheduler {
+    pub fn new(
+        plugins: Vec<(Box<dyn ScorePlugin>, f64)>,
+        binder: Box<dyn BindPlugin>,
+        label: &str,
+    ) -> Scheduler {
+        let (plugins, weights): (Vec<_>, Vec<_>) = plugins.into_iter().unzip();
         Scheduler {
             plugins,
+            weights,
+            eff_weights: Vec::new(),
             binder,
+            modulator: None,
+            hooks: Vec::new(),
             generations: Vec::new(),
             feasible: Vec::new(),
             placements: Vec::new(),
@@ -135,9 +184,40 @@ impl Scheduler {
             caps_cache: None,
             tie_rng: Rng::new(0xC0FFEE),
             deterministic_ties: false,
-            dynamic_alpha: None,
             label: label.to_string(),
         }
+    }
+
+    /// Attach the `weightModulator` extension point.
+    ///
+    /// Debug builds panic when the modulator rejects the plugin layout
+    /// (see [`WeightModulator::check_layout`]) — the raw-assembly analog
+    /// of the profile builder's parse-time layout validation.
+    pub fn set_modulator(&mut self, m: Box<dyn WeightModulator>) {
+        #[cfg(debug_assertions)]
+        {
+            let names: Vec<&str> = self.plugins.iter().map(|p| p.name()).collect();
+            if let Err(e) = m.check_layout(&names) {
+                panic!("invalid modulator attachment: {e}");
+            }
+        }
+        self.modulator = Some(m);
+    }
+
+    /// Append a `postPlace`/`postFail` hook.
+    pub fn add_post_hook(&mut self, h: Box<dyn PostHook>) {
+        self.hooks.push(h);
+    }
+
+    /// Sum of the named counter over all attached hooks (see
+    /// [`PostHook::counters`]).
+    pub fn hook_counter(&self, name: &str) -> u64 {
+        self.hooks
+            .iter()
+            .flat_map(|h| h.counters())
+            .filter(|(k, _)| *k == name)
+            .map(|(_, v)| v)
+            .sum()
     }
 
     /// Reseed the tie-break RNG (each simulation repetition uses its own
@@ -151,14 +231,17 @@ impl Scheduler {
         self.deterministic_ties = on;
     }
 
-    /// Enable load-adaptive α (see [`crate::sched::PolicyKind::PwrFgdDynamic`]).
-    pub fn set_dynamic_alpha(&mut self, alpha_empty: f64, alpha_full: f64) {
-        self.dynamic_alpha = Some((alpha_empty, alpha_full));
-    }
-
     /// Build the scheduler for a named policy (see [`crate::sched::PolicyKind`]).
+    ///
+    /// # Panics
+    /// On a programmatically constructed policy whose α lies outside
+    /// [0, 1] (the string parsers reject such values up front; a direct
+    /// `PolicyKind::PwrFgd { alpha: 1.5 }` would lower to a negative
+    /// FGD weight, which `build` refuses).
     pub fn from_policy(kind: crate::sched::PolicyKind) -> Scheduler {
-        crate::sched::policies::build(kind)
+        kind.profile()
+            .build()
+            .unwrap_or_else(|e| panic!("invalid policy {kind:?}: {e}"))
     }
 
     /// Policy label for reports.
@@ -176,9 +259,10 @@ impl Scheduler {
 
     /// Schedule one task (Algorithm 1). Returns `None` when no node can
     /// host it (a scheduling failure — GRAR's denominator still counts
-    /// the arrival). Does **not** mutate the datacenter; the caller
-    /// commits via [`Datacenter::allocate`] and then calls
-    /// [`Self::notify_node_changed`].
+    /// the arrival). Does **not** mutate the datacenter and does **not**
+    /// run hooks; prefer the full [`Scheduler::place`] protocol unless
+    /// the caller owns the commit (then: [`Datacenter::allocate`] +
+    /// [`Self::notify_node_changed`]).
     pub fn schedule(&mut self, dc: &Datacenter, workload: &Workload, task: &Task) -> Option<Decision> {
         let n = dc.nodes.len();
         if self.generations.len() != n {
@@ -202,16 +286,10 @@ impl Scheduler {
             return None;
         }
         // Refresh the per-workload / per-cluster caches when needed
-        // (identity-keyed; the simulator keeps both alive and stable).
-        let wl_key = (workload as *const Workload, workload.classes.len());
-        if self
-            .prepared_cache
-            .as_ref()
-            .map(|(p, l, _)| (*p, *l) != wl_key)
-            .unwrap_or(true)
-        {
-            self.prepared_cache =
-                Some((wl_key.0, wl_key.1, frag::PreparedWorkload::new(workload)));
+        // (revision-keyed; see `prepared_cache`).
+        let rev = workload.revision();
+        if self.prepared_cache.as_ref().map(|(r, _)| *r != rev).unwrap_or(true) {
+            self.prepared_cache = Some((rev, frag::PreparedWorkload::new(workload)));
         }
         if self.caps_cache.map(|(l, _)| l != n).unwrap_or(true) {
             self.caps_cache = Some((n, ClusterCaps::of(dc)));
@@ -219,27 +297,24 @@ impl Scheduler {
         let ctx = SchedCtx {
             dc,
             workload,
-            prepared: &self.prepared_cache.as_ref().unwrap().2,
+            prepared: &self.prepared_cache.as_ref().unwrap().1,
             generations: &self.generations,
             caps: self.caps_cache.unwrap().1,
         };
-        // --- 2–4. Score, normalize, combine. ---
-        // Load-adaptive α (extension): interpolate between alpha_empty
-        // and alpha_full on GPU utilization, retargeting the plugin
-        // weights [(PWR, α), (FGD, 1−α)] and the binder.
-        let mut bind_alpha_override = None;
-        if let Some((hi, lo)) = self.dynamic_alpha {
-            let u = dc.gpu_utilization().clamp(0.0, 1.0);
-            let alpha = hi + (lo - hi) * u;
-            debug_assert_eq!(self.plugins.len(), 2, "dynamic α needs [PWR, FGD]");
-            self.plugins[0].1 = alpha;
-            self.plugins[1].1 = 1.0 - alpha;
-            bind_alpha_override = Some(alpha);
-        }
+        // --- 2. WeightModulator extension point: retarget the plugin
+        // weights (and possibly the weighted binder's α) per decision
+        // from cluster state.
+        self.eff_weights.clear();
+        self.eff_weights.extend_from_slice(&self.weights);
+        let bind_alpha_override = self
+            .modulator
+            .as_ref()
+            .and_then(|m| m.modulate(dc, &self.weights, &mut self.eff_weights));
+        // --- 3–5. Score, normalize, combine. ---
         let k = self.feasible.len();
         self.combined.clear();
         self.combined.resize(k, 0.0);
-        for (plugin, weight) in &self.plugins {
+        for (plugin, &weight) in self.plugins.iter().zip(&self.eff_weights) {
             self.raw.clear();
             for (idx, &node_id) in self.feasible.iter().enumerate() {
                 let s = plugin.score(&ctx, &dc.nodes[node_id], task, &self.placements[idx]);
@@ -251,7 +326,7 @@ impl Scheduler {
                 *c += weight * r;
             }
         }
-        // --- 5. Arg-max + bind. Kubernetes semantics: plugin scores are
+        // --- 6. Arg-max + bind. Kubernetes semantics: plugin scores are
         // int64 in [0,100] after NormalizeScore (normalize_scores already
         // rounds), and `selectHost` picks *uniformly at random* among the
         // max-scoring nodes. The random tie-break matters: for e.g. a
@@ -275,22 +350,72 @@ impl Scheduler {
             }
         }
         let node_id = self.feasible[best];
-        let binder_alpha;
-        let binder = match (&self.binder, bind_alpha_override) {
-            (Binder::WeightedPwrFgd { .. }, Some(alpha)) => {
-                binder_alpha = Binder::WeightedPwrFgd { alpha };
-                &binder_alpha
-            }
-            (b, _) => b,
+        let candidates = &self.placements[best];
+        let placement = if candidates.len() == 1 {
+            candidates[0].clone()
+        } else {
+            let bctx = BindCtx {
+                prepared: &self.prepared_cache.as_ref().unwrap().1,
+                alpha_override: bind_alpha_override,
+            };
+            self.binder.bind(&bctx, &dc.nodes[node_id], task, candidates)
         };
-        let placement = bind_placement(
-            binder,
-            &dc.nodes[node_id],
-            task,
-            &self.placements[best],
-            &self.prepared_cache.as_ref().unwrap().2,
-        );
         Some(Decision { node: node_id, placement })
+    }
+
+    /// The full per-task protocol: schedule → (on failure: `postFail`
+    /// hooks, one retry) → commit → `postPlace` hooks. This is the one
+    /// entry point the simulation loops and the coordinator use, so a
+    /// profile's hooks (e.g. the MIG repartitioner) can never be
+    /// silently skipped.
+    pub fn place(&mut self, dc: &mut Datacenter, workload: &Workload, task: &Task) -> Option<Decision> {
+        let decision = match self.schedule(dc, workload, task) {
+            Some(d) => Some(d),
+            None => {
+                let generations = &mut self.generations;
+                let mut invalidate = |n: usize| {
+                    if n < generations.len() {
+                        generations[n] += 1;
+                    }
+                };
+                let mut retry = false;
+                for h in &mut self.hooks {
+                    if h.post_fail(dc, task, &mut invalidate) {
+                        retry = true;
+                        break;
+                    }
+                }
+                if !retry {
+                    return None;
+                }
+                self.schedule(dc, workload, task)
+            }
+        }?;
+        dc.allocate(task, decision.node, &decision.placement);
+        self.notify_node_changed(decision.node);
+        self.run_post_place(dc, decision.node);
+        Some(decision)
+    }
+
+    /// The departure protocol: release the allocation and run the
+    /// `postPlace` hooks (departures are where e.g. MIG lattice holes
+    /// open up).
+    pub fn release(&mut self, dc: &mut Datacenter, task: &Task, node: usize, placement: &Placement) {
+        dc.deallocate(task, node, placement);
+        self.notify_node_changed(node);
+        self.run_post_place(dc, node);
+    }
+
+    fn run_post_place(&mut self, dc: &mut Datacenter, node_id: usize) {
+        let generations = &mut self.generations;
+        let mut invalidate = |n: usize| {
+            if n < generations.len() {
+                generations[n] += 1;
+            }
+        };
+        for h in &mut self.hooks {
+            h.post_place(dc, node_id, &mut invalidate);
+        }
     }
 }
 
@@ -379,94 +504,6 @@ pub fn frag_delta_with_before(
 ) -> f64 {
     let h = node.hypothetical(task, placement);
     frag::f_node(&h, workload) - before
-}
-
-fn bind_placement(
-    binder: &Binder,
-    node: &Node,
-    task: &Task,
-    placements: &[Placement],
-    prepared: &frag::PreparedWorkload,
-) -> Placement {
-    assert!(!placements.is_empty());
-    if placements.len() == 1 {
-        return placements[0].clone();
-    }
-    match binder {
-        Binder::First => placements[0].clone(),
-        Binder::Random(rng) => {
-            let i = rng.borrow_mut().below(placements.len());
-            placements[i].clone()
-        }
-        Binder::GpuBestFit => best_fit_gpu(node, placements),
-        Binder::PackOccupied => {
-            // Tier 1: occupied GPUs, best-fit among them.
-            let occupied: Vec<Placement> = placements
-                .iter()
-                .filter(|p| matches!(p, Placement::Shared { gpu } if node.gpu_alloc[*gpu] > 0.0))
-                .cloned()
-                .collect();
-            if !occupied.is_empty() {
-                best_fit_gpu(node, &occupied)
-            } else {
-                best_fit_gpu(node, placements)
-            }
-        }
-        Binder::WeightedPwrFgd { alpha } => {
-            let before = frag::f_node_fast(node, prepared);
-            let dp: Vec<f64> =
-                placements.iter().map(|p| power_delta(node, task, p)).collect();
-            let df: Vec<f64> = placements
-                .iter()
-                .map(|p| frag::frag_delta_fast(node, task, p, prepared, before))
-                .collect();
-            // Min-max normalize each criterion across the candidates,
-            // then minimize the weighted blend (mirrors the node-level
-            // k8s combination at placement granularity).
-            let norm = |v: &[f64]| -> Vec<f64> {
-                let lo = v.iter().copied().fold(f64::INFINITY, f64::min);
-                let hi = v.iter().copied().fold(f64::NEG_INFINITY, f64::max);
-                if hi - lo < 1e-12 {
-                    vec![0.0; v.len()]
-                } else {
-                    v.iter().map(|x| (x - lo) / (hi - lo)).collect()
-                }
-            };
-            let (dpn, dfn) = (norm(&dp), norm(&df));
-            let mut best = 0;
-            let mut best_cost = f64::INFINITY;
-            for i in 0..placements.len() {
-                let cost = alpha * dpn[i] + (1.0 - alpha) * dfn[i];
-                if cost < best_cost - 1e-12 {
-                    best_cost = cost;
-                    best = i;
-                }
-            }
-            placements[best].clone()
-        }
-    }
-}
-
-/// Best-fit on GPU residual: least leftover after placing. For MIG
-/// placements the residual is the target GPU's free-slice fraction, so
-/// instances pack onto the fullest GPU that still has a legal start
-/// (ties → the profile's preferred start order).
-fn best_fit_gpu(node: &Node, placements: &[Placement]) -> Placement {
-    let mut best = 0;
-    let mut best_free = f64::INFINITY;
-    for (i, p) in placements.iter().enumerate() {
-        let free = match p {
-            Placement::Shared { gpu } | Placement::MigSlice { gpu, .. } => {
-                node.gpu_free_of(*gpu)
-            }
-            _ => return p.clone(), // whole/CPU placements are canonical
-        };
-        if free < best_free - EPS {
-            best_free = free;
-            best = i;
-        }
-    }
-    placements[best].clone()
 }
 
 #[cfg(test)]
@@ -565,5 +602,57 @@ mod tests {
         // Cluster full for whole-GPU tasks now.
         let t = Task::new(99, 2.0, 512.0, GpuDemand::Whole(1));
         assert!(s.schedule(&dc, &w, &t).is_none());
+    }
+
+    #[test]
+    fn place_protocol_commits_and_runs_hooks() {
+        // A counting hook: post_place fires on every commit; post_fail
+        // fires on every failure (and declines to make room).
+        struct CountingHook {
+            places: u64,
+            fails: u64,
+        }
+        impl PostHook for CountingHook {
+            fn name(&self) -> &'static str {
+                "counting"
+            }
+            fn post_fail(
+                &mut self,
+                _dc: &mut Datacenter,
+                _task: &Task,
+                _invalidate: &mut dyn FnMut(usize),
+            ) -> bool {
+                self.fails += 1;
+                false
+            }
+            fn post_place(
+                &mut self,
+                _dc: &mut Datacenter,
+                _node_id: usize,
+                _invalidate: &mut dyn FnMut(usize),
+            ) {
+                self.places += 1;
+            }
+            fn counters(&self) -> Vec<(&'static str, u64)> {
+                vec![("places", self.places), ("fails", self.fails)]
+            }
+        }
+        let mut dc = dc2();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(crate::sched::PolicyKind::FirstFit);
+        s.add_post_hook(Box::new(CountingHook { places: 0, fails: 0 }));
+        for i in 0..8 {
+            let t = Task::new(i, 2.0, 512.0, GpuDemand::Whole(1));
+            assert!(s.place(&mut dc, &w, &t).is_some());
+        }
+        assert_eq!(dc.gpu_allocated_units(), 8.0);
+        let t = Task::new(99, 2.0, 512.0, GpuDemand::Whole(1));
+        assert!(s.place(&mut dc, &w, &t).is_none());
+        assert_eq!(s.hook_counter("places"), 8);
+        assert_eq!(s.hook_counter("fails"), 1);
+        // release() runs postPlace again.
+        let t0 = Task::new(0, 2.0, 512.0, GpuDemand::Whole(1));
+        s.release(&mut dc, &t0, 0, &Placement::Whole { gpus: vec![0] });
+        assert_eq!(s.hook_counter("places"), 9);
     }
 }

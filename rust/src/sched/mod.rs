@@ -1,21 +1,41 @@
-//! The scheduling layer: a Kubernetes-scheduling-framework analog
-//! (filter → score → normalize → weighted combine → bind) and the
-//! paper's policy zoo.
+//! The scheduling layer: a Kubernetes-scheduling-framework analog with
+//! named extension points (filter → modulate → score → normalize →
+//! weighted combine → bind → postPlace/postFail) and the paper's policy
+//! zoo, assembled from declarative [`SchedulerProfile`]s.
 //!
 //! * [`framework`] — the plugin pipeline of Algorithm 1, including the
-//!   k8s score normalization used to combine PWR with FGD (§IV-A).
+//!   k8s score normalization used to combine PWR with FGD (§IV-A), plus
+//!   the `postPlace`/`postFail` hook protocol.
+//! * [`profile`] — `SchedulerProfile` + the `--policy` DSL + the
+//!   string-keyed plugin/binder/modulator/hook registries.
+//! * [`bind`] — the `bind` extension point (five built-in binders).
+//! * [`modulate`] — the `weightModulator` extension point (load-adaptive
+//!   α is the first implementation).
 //! * [`policies`] — PWR (the contribution), FGD [19], BestFit [6],
-//!   DotProd [4], GpuPacking [18], GpuClustering [21], plus FirstFit and
-//!   Random sanity baselines.
+//!   DotProd [4], GpuPacking [18], GpuClustering [21], FirstFit and
+//!   Random sanity baselines, and the MIG family + repartitioner.
 
+pub mod bind;
 pub mod framework;
+pub mod modulate;
 pub mod policies;
+pub mod profile;
 
-pub use framework::{Binder, Decision, SchedCtx, Scheduler, ScorePlugin};
+pub use bind::{BindCtx, BindPlugin};
+pub use framework::{Decision, PostHook, SchedCtx, Scheduler, ScorePlugin};
+pub use modulate::{LoadAlphaModulator, WeightModulator};
+pub use profile::SchedulerProfile;
 
 /// Every scheduling policy evaluated in the paper (§V), plus two sanity
 /// baselines. `PwrFgd { alpha }` is the paper's
 /// `α·PWR + (1−α)·FGD` linear combination.
+///
+/// Since the [`SchedulerProfile`] redesign this enum is *sugar*: each
+/// variant lowers to an equivalent profile ([`PolicyKind::profile`])
+/// with a byte-identical label, so pre-profile CSV headers and pinned
+/// outputs are unchanged. New combinations (≥ 3 objectives, custom
+/// binders/modulators/hooks) are expressed directly in the profile DSL
+/// instead of widening this enum.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum PolicyKind {
     /// Fragmentation Gradient Descent (Weng et al. [19]).
@@ -61,20 +81,28 @@ impl PolicyKind {
     /// `dotprod`, `gpupacking`, `gpuclustering`, `firstfit`, `random`,
     /// plus the MIG family `mig-bestfit`, `mig-slicefit`, `mig-fgd`,
     /// `mig-pwr`, `mig-pwrfgd:0.1`.
+    ///
+    /// α parameters are validated at parse time: values outside [0, 1]
+    /// (which would silently produce negative FGD weights) are rejected.
     pub fn parse(s: &str) -> Option<PolicyKind> {
         let lower = s.to_ascii_lowercase();
+        // One α domain for legacy strings and the DSL alike.
+        let alpha_in_range = |a: f64| profile::validate_alpha(a, "α").is_ok();
         if let Some(rest) = lower.strip_prefix("pwrfgddyn:") {
             let (hi, lo) = rest.split_once(':')?;
-            return Some(PolicyKind::PwrFgdDynamic {
-                alpha_empty: hi.parse().ok()?,
-                alpha_full: lo.parse().ok()?,
-            });
+            let (alpha_empty, alpha_full) = (hi.parse().ok()?, lo.parse().ok()?);
+            if !alpha_in_range(alpha_empty) || !alpha_in_range(alpha_full) {
+                return None;
+            }
+            return Some(PolicyKind::PwrFgdDynamic { alpha_empty, alpha_full });
         }
         if let Some(alpha) = lower.strip_prefix("pwrfgd:") {
-            return alpha.parse().ok().map(|alpha| PolicyKind::PwrFgd { alpha });
+            let alpha: f64 = alpha.parse().ok()?;
+            return alpha_in_range(alpha).then_some(PolicyKind::PwrFgd { alpha });
         }
         if let Some(alpha) = lower.strip_prefix("mig-pwrfgd:") {
-            return alpha.parse().ok().map(|alpha| PolicyKind::MigPwrFgd { alpha });
+            let alpha: f64 = alpha.parse().ok()?;
+            return alpha_in_range(alpha).then_some(PolicyKind::MigPwrFgd { alpha });
         }
         match lower.as_str() {
             "fgd" => Some(PolicyKind::Fgd),
@@ -91,6 +119,13 @@ impl PolicyKind {
             "mig-pwr" => Some(PolicyKind::MigPwr),
             _ => None,
         }
+    }
+
+    /// Lower to the equivalent [`SchedulerProfile`] (same plugins,
+    /// weights, binder and — byte-identical — label as the pre-profile
+    /// hard-wired scheduler; pinned by `tests/profile_equivalence.rs`).
+    pub fn profile(&self) -> SchedulerProfile {
+        SchedulerProfile::from(*self)
     }
 
     /// Human-readable label used in CSV headers and reports.
@@ -143,6 +178,30 @@ mod tests {
         );
         assert_eq!(PolicyKind::parse("mig-bestfit"), Some(PolicyKind::MigBestFit));
         assert_eq!(PolicyKind::parse("mig-nope"), None);
+    }
+
+    #[test]
+    fn parse_rejects_alpha_outside_unit_interval() {
+        // α ∉ [0, 1] used to silently produce negative FGD weights.
+        for bad in [
+            "pwrfgd:1.7",
+            "pwrfgd:-0.3",
+            "pwrfgd:nan",
+            "pwrfgd:inf",
+            "mig-pwrfgd:1.001",
+            "mig-pwrfgd:-0.0001",
+            "pwrfgddyn:1.5:0.0",
+            "pwrfgddyn:0.9:-0.1",
+        ] {
+            assert_eq!(PolicyKind::parse(bad), None, "accepted '{bad}'");
+        }
+        // The boundary values are legal.
+        assert_eq!(PolicyKind::parse("pwrfgd:0"), Some(PolicyKind::PwrFgd { alpha: 0.0 }));
+        assert_eq!(PolicyKind::parse("pwrfgd:1"), Some(PolicyKind::PwrFgd { alpha: 1.0 }));
+        assert_eq!(
+            PolicyKind::parse("pwrfgddyn:1:0"),
+            Some(PolicyKind::PwrFgdDynamic { alpha_empty: 1.0, alpha_full: 0.0 })
+        );
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! The `weightModulator` extension point: retargets score-plugin
+//! weights per decision from live cluster state.
+//!
+//! The paper's §VII future-work item — load-adaptive α — is the first
+//! implementation ([`LoadAlphaModulator`]); recent dynamic
+//! multi-objective schedulers (Mamirov '25) motivate the general form:
+//! any profile may attach one modulator, and the modulator sees *all*
+//! plugin weights, not a hard-wired `[PWR, FGD]` pair.
+
+use crate::cluster::Datacenter;
+
+/// A weight modulator: rewrites the effective per-decision plugin
+/// weights from cluster state.
+///
+/// `base` holds the profile's static weights; `weights` starts as a
+/// copy of `base` and may be rewritten in place (same length, indexed
+/// like the profile's score plugins). The returned value, if any, is
+/// the α the `weighted` binder should use for placement selection this
+/// decision (see [`crate::sched::bind::BindCtx::alpha_override`]).
+pub trait WeightModulator: Send {
+    fn name(&self) -> &'static str;
+
+    /// Sanity-check the score-plugin stack this modulator is being
+    /// attached to (`plugin_names` in score order).
+    /// [`crate::sched::Scheduler::set_modulator`] enforces it in debug
+    /// builds, so hand-assembled schedulers get the same layout guard
+    /// the profile builder applies at parse time.
+    fn check_layout(&self, _plugin_names: &[&str]) -> Result<(), String> {
+        Ok(())
+    }
+
+    fn modulate(&self, dc: &Datacenter, base: &[f64], weights: &mut [f64]) -> Option<f64>;
+}
+
+/// Load-adaptive α (paper §VII): linearly interpolate a power weight α
+/// from `alpha_empty` (idle cluster — maximize power savings) down to
+/// `alpha_full` (saturated — protect GRAR) on GPU utilization.
+///
+/// The *first* score plugin is treated as the power objective
+/// (profiles attaching `loadalpha` must list `pwr` first —
+/// [`crate::sched::profile::SchedulerProfile::build`] enforces it) and
+/// gets weight α; the remaining plugins share `1−α` proportionally to
+/// their base weights. With the legacy `[PWR, FGD]` layout this
+/// reproduces the original dynamic-α exactly (`[α, 1−α]`); with ≥ 3
+/// plugins the non-power objectives keep their relative importance
+/// while the whole non-power mass tracks load. When every non-power
+/// base weight is zero, `1−α` is split equally instead — deliberately
+/// matching the legacy `pwrfgddyn:1:…` behavior, where FGD still
+/// receives `1−α` as load grows even though the static weight started
+/// at zero.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadAlphaModulator {
+    pub alpha_empty: f64,
+    pub alpha_full: f64,
+}
+
+impl WeightModulator for LoadAlphaModulator {
+    fn name(&self) -> &'static str {
+        "loadalpha"
+    }
+
+    fn check_layout(&self, plugin_names: &[&str]) -> Result<(), String> {
+        if plugin_names.first() == Some(&"PWR") {
+            Ok(())
+        } else {
+            Err(format!(
+                "loadalpha drives the first score plugin as the power objective; \
+                 expected PWR first, got {plugin_names:?}"
+            ))
+        }
+    }
+
+    fn modulate(&self, dc: &Datacenter, base: &[f64], weights: &mut [f64]) -> Option<f64> {
+        let u = dc.gpu_utilization().clamp(0.0, 1.0);
+        let alpha = self.alpha_empty + (self.alpha_full - self.alpha_empty) * u;
+        weights[0] = alpha;
+        let rest: f64 = base[1..].iter().sum();
+        for (w, b) in weights[1..].iter_mut().zip(&base[1..]) {
+            // `(b / rest) * (1 − α)`, in exactly this association: for
+            // the legacy two-plugin lowering b == rest, so b/rest is
+            // exactly 1.0 and the FGD weight is bit-identical to the
+            // pre-profile inline `1.0 − α` (the other association,
+            // `(1−α)·b/rest`, drifts by 1 ulp for some inputs).
+            *w = if rest > 0.0 {
+                (b / rest) * (1.0 - alpha)
+            } else {
+                (1.0 - alpha) / (base.len() - 1) as f64
+            };
+        }
+        Some(alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::cluster::node::Placement;
+    use crate::tasks::{GpuDemand, Task};
+
+    #[test]
+    fn loadalpha_reproduces_two_plugin_dynamic_alpha() {
+        let dc = ClusterSpec::tiny(2, 4, 0).build();
+        let m = LoadAlphaModulator { alpha_empty: 0.9, alpha_full: 0.1 };
+        let base = [0.9, 0.1];
+        let mut w = base;
+        // Empty cluster: α = alpha_empty, weights = [α, 1−α].
+        let a = m.modulate(&dc, &base, &mut w).unwrap();
+        assert!((a - 0.9).abs() < 1e-12);
+        assert!((w[0] - 0.9).abs() < 1e-12 && (w[1] - 0.1).abs() < 1e-12);
+        // Bit-identity with the pre-profile inline dynamic-α (which set
+        // weights[1] = 1.0 − α literally): checked across awkward α
+        // pairs at a partially-utilized cluster, since the proportional
+        // split must reduce to *exactly* 1−α for the two-plugin layout.
+        let mut dc = ClusterSpec::tiny(1, 4, 0).build();
+        for (i, g) in [(10u64, 0usize), (11, 1)] {
+            dc.allocate(&Task::new(i, 1.0, 0.0, GpuDemand::Whole(1)), 0, &Placement::Whole {
+                gpus: vec![g],
+            });
+        }
+        for (ae, af) in [(0.01, 0.62), (0.9, 0.1), (0.37, 0.0), (1.0, 0.05)] {
+            let m = LoadAlphaModulator { alpha_empty: ae, alpha_full: af };
+            let base = [ae, 1.0 - ae];
+            let mut w = base;
+            let a = m.modulate(&dc, &base, &mut w).unwrap();
+            assert_eq!(w[0].to_bits(), a.to_bits());
+            assert_eq!(
+                w[1].to_bits(),
+                (1.0 - a).to_bits(),
+                "FGD weight drifted from 1−α for α_empty={ae}, α_full={af}"
+            );
+        }
+    }
+
+    #[test]
+    fn loadalpha_splits_rest_proportionally_for_three_plugins() {
+        let mut dc = ClusterSpec::tiny(1, 4, 0).build();
+        // Half the GPUs busy → u = 0.5 → α = 0.5.
+        for (i, g) in [(0u64, 0usize), (1, 1)] {
+            dc.allocate(&Task::new(i, 1.0, 0.0, GpuDemand::Whole(1)), 0, &Placement::Whole {
+                gpus: vec![g],
+            });
+        }
+        let m = LoadAlphaModulator { alpha_empty: 1.0, alpha_full: 0.0 };
+        let base = [0.5, 0.3, 0.2];
+        let mut w = base;
+        let a = m.modulate(&dc, &base, &mut w).unwrap();
+        assert!((a - 0.5).abs() < 1e-12);
+        assert!((w[0] - 0.5).abs() < 1e-12);
+        // 1−α = 0.5 split 3:2 over the base [0.3, 0.2].
+        assert!((w[1] - 0.3).abs() < 1e-12 && (w[2] - 0.2).abs() < 1e-12);
+    }
+}

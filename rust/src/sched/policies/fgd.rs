@@ -74,24 +74,22 @@ mod tests {
     use crate::tasks::{GpuDemand, Task, TaskClass, Workload};
 
     fn workload_half_and_whole() -> Workload {
-        Workload {
-            classes: vec![
-                TaskClass {
-                    cpu: 2.0,
-                    mem: 0.0,
-                    gpu: GpuDemand::Frac(0.5),
-                    gpu_model: None,
-                    pop: 0.5,
-                },
-                TaskClass {
-                    cpu: 2.0,
-                    mem: 0.0,
-                    gpu: GpuDemand::Whole(1),
-                    gpu_model: None,
-                    pop: 0.5,
-                },
-            ],
-        }
+        Workload::new(vec![
+            TaskClass {
+                cpu: 2.0,
+                mem: 0.0,
+                gpu: GpuDemand::Frac(0.5),
+                gpu_model: None,
+                pop: 0.5,
+            },
+            TaskClass {
+                cpu: 2.0,
+                mem: 0.0,
+                gpu: GpuDemand::Whole(1),
+                gpu_model: None,
+                pop: 0.5,
+            },
+        ])
     }
 
     /// FGD's signature behaviour: fill the half-used GPU instead of

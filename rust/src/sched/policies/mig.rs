@@ -12,14 +12,19 @@
 //!   nudged toward GPUs that are already powered (Eq. 2-MIG makes those
 //!   strictly cheaper to extend).
 //! * [`MigRepartitioner`] — a greedy online defragmenter with two
-//!   triggers:
-//!   - **reactive** (PR 1): when a MIG task cannot be placed anywhere,
-//!     find the cheapest single-GPU repack (first-fit-decreasing over
-//!     the partition lattice) that opens a legal start for the profile,
-//!     apply it, and let the scheduler retry;
+//!   triggers, attached to the framework as a
+//!   [`PostHook`] (`hook(repartition:…)` in the profile DSL — the
+//!   k8s-preemption analog; [`crate::sched::Scheduler::place`] drives
+//!   it, so no simulation loop can silently skip defrag):
+//!   - **reactive** (PR 1, now the `postFail` extension point): when a
+//!     MIG task cannot be placed anywhere, find the cheapest single-GPU
+//!     repack (first-fit-decreasing over the partition lattice) that
+//!     opens a legal start for the profile, apply it, and let the
+//!     scheduler retry;
 //!   - **proactive** (threshold-driven, Lipe et al.'s dynamic
-//!     repartitioning): after a node's allocation changes, repack any
-//!     of its GPUs whose slice-fragmentation ratio
+//!     repartitioning; the `postPlace` extension point): after a node's
+//!     allocation changes, repack any of its GPUs whose
+//!     slice-fragmentation ratio
 //!     ([`crate::cluster::mig::MigGpu::frag_ratio`]) reached
 //!     [`RepartitionConfig::frag_threshold`] — defragmenting *ahead of
 //!     demand* instead of waiting for a placement failure. The default
@@ -34,8 +39,8 @@
 use crate::cluster::mig::MigProfile;
 use crate::cluster::node::{Node, Placement, ResourceView, EPS};
 use crate::cluster::Datacenter;
-use crate::sched::framework::{Decision, SchedCtx, Scheduler, ScorePlugin};
-use crate::tasks::{GpuDemand, Task, Workload};
+use crate::sched::framework::{PostHook, SchedCtx, ScorePlugin};
+use crate::tasks::{GpuDemand, Task};
 
 /// Slice-granular packing plugin (see module docs).
 pub struct MigSliceFitPlugin;
@@ -251,41 +256,46 @@ impl MigRepartitioner {
     }
 }
 
-/// Schedule `task`, falling back to one repack-and-retry when it fails
-/// and a repartitioner is attached — the shared protocol of the
+/// The framework wiring: the repartitioner *is* a `postFail`/`postPlace`
+/// hook. [`crate::sched::Scheduler::place`] runs `post_fail` on a
+/// scheduling failure (repack-and-retry) and `post_place` after every
+/// allocation change (threshold-driven proactive defrag), in both the
 /// inflation ([`crate::sim::Simulation`]) and churn
-/// ([`crate::sim::events::SteadySim`]) loops.
-pub fn schedule_with_repartition(
-    sched: &mut Scheduler,
-    dc: &mut Datacenter,
-    repartitioner: Option<&mut MigRepartitioner>,
-    workload: &Workload,
-    task: &Task,
-) -> Option<Decision> {
-    if let Some(d) = sched.schedule(dc, workload, task) {
-        return Some(d);
+/// ([`crate::sim::events::SteadySim`]) loops — structurally, not by
+/// each loop remembering to call it.
+impl PostHook for MigRepartitioner {
+    fn name(&self) -> &'static str {
+        "repartition"
     }
-    let node_id = repartitioner?.try_make_room(dc, task)?;
-    sched.notify_node_changed(node_id);
-    sched.schedule(dc, workload, task)
-}
 
-/// Run the repartitioner's proactive (threshold-driven) pass on one
-/// node and invalidate the scheduler's cache when it repacked — the
-/// shared post-allocation/post-departure hook of the inflation
-/// ([`crate::sim::Simulation`]) and churn
-/// ([`crate::sim::events::SteadySim`]) loops. No-op without a
-/// repartitioner or at the default `∞` threshold.
-pub fn proactive_defrag(
-    sched: &mut Scheduler,
-    dc: &mut Datacenter,
-    repartitioner: Option<&mut MigRepartitioner>,
-    node_id: usize,
-) {
-    if let Some(rp) = repartitioner {
-        if rp.defrag_node_if_fragmented(dc, node_id) {
-            sched.notify_node_changed(node_id);
+    fn post_fail(
+        &mut self,
+        dc: &mut Datacenter,
+        task: &Task,
+        invalidate: &mut dyn FnMut(usize),
+    ) -> bool {
+        match self.try_make_room(dc, task) {
+            Some(node_id) => {
+                invalidate(node_id);
+                true
+            }
+            None => false,
         }
+    }
+
+    fn post_place(&mut self, dc: &mut Datacenter, node_id: usize, invalidate: &mut dyn FnMut(usize)) {
+        if self.defrag_node_if_fragmented(dc, node_id) {
+            invalidate(node_id);
+        }
+    }
+
+    fn counters(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("repartitions", self.stats.repartitions),
+            ("proactive_repartitions", self.stats.proactive_repartitions),
+            ("migrated_slices", self.stats.migrated_slices),
+            ("exhausted", self.stats.exhausted),
+        ]
     }
 }
 
@@ -293,7 +303,8 @@ pub fn proactive_defrag(
 mod tests {
     use super::*;
     use crate::cluster::ClusterSpec;
-    use crate::sched::PolicyKind;
+    use crate::sched::{PolicyKind, Scheduler};
+    use crate::tasks::Workload;
 
     fn mig_task(id: u64, p: MigProfile) -> Task {
         Task::new(id, 2.0, 1024.0, GpuDemand::Mig(p))

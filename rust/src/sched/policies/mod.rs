@@ -1,4 +1,11 @@
 //! The scheduling policy zoo (§V of the paper).
+//!
+//! Since the [`crate::sched::profile::SchedulerProfile`] redesign this
+//! module only hosts the score-plugin implementations (and the MIG
+//! repartitioner hook); policy *assembly* lives in the profile layer:
+//! every [`crate::sched::PolicyKind`] lowers to a profile naming these
+//! plugins by their registry keys (`pwr`, `fgd`, `bestfit`, `dotprod`,
+//! `gpupacking`, `gpuclustering`, `firstfit`, `random`, `slicefit`).
 
 pub mod baselines;
 pub mod fgd;
@@ -7,89 +14,17 @@ pub mod packing;
 pub mod pwr;
 pub mod trivial;
 
-use std::cell::RefCell;
-
-use crate::sched::framework::{Binder, Scheduler, ScorePlugin};
-use crate::sched::PolicyKind;
-use crate::util::rng::Rng;
-
 pub use baselines::{BestFitPlugin, DotProdPlugin};
 pub use fgd::FgdPlugin;
-pub use mig::{
-    proactive_defrag, schedule_with_repartition, MigRepartitioner, MigSliceFitPlugin,
-    RepartitionConfig, RepartitionStats,
-};
+pub use mig::{MigRepartitioner, MigSliceFitPlugin, RepartitionConfig, RepartitionStats};
 pub use packing::{GpuClusteringPlugin, GpuPackingPlugin};
 pub use pwr::PwrPlugin;
 pub use trivial::{FirstFitPlugin, RandomPlugin};
 
-/// Materialize the scheduler for a policy, wiring the plugin weights and
-/// the GPU binder each policy uses:
-/// * FGD / PWR / combinations → the weighted Δpower/Δfrag binder with
-///   the matching α (1.0 for plain PWR, 0.0 for plain FGD);
-/// * GpuPacking → occupied-GPU-first packing;
-/// * everything else → GPU best-fit (the open-simulator default).
+use crate::sched::{PolicyKind, Scheduler};
+
+/// Materialize the scheduler for a legacy policy. Equivalent to
+/// `kind.profile().build()` — kept as the historical entry point.
 pub fn build(kind: PolicyKind) -> Scheduler {
-    let label = kind.label();
-    // The MIG variants share their non-MIG twin's wiring (the frag and
-    // power layers are slice-aware, so the plugins natively evaluate
-    // MIG placements); only the label — and MigSliceFit's plugin —
-    // differ.
-    let (plugins, binder): (Vec<(Box<dyn ScorePlugin>, f64)>, Binder) = match kind {
-        PolicyKind::Fgd | PolicyKind::MigFgd => (
-            vec![(Box::new(FgdPlugin::new()) as Box<dyn ScorePlugin>, 1.0)],
-            Binder::WeightedPwrFgd { alpha: 0.0 },
-        ),
-        PolicyKind::Pwr | PolicyKind::MigPwr => (
-            vec![(Box::new(PwrPlugin) as Box<dyn ScorePlugin>, 1.0)],
-            Binder::WeightedPwrFgd { alpha: 1.0 },
-        ),
-        PolicyKind::PwrFgd { alpha } | PolicyKind::MigPwrFgd { alpha } => (
-            vec![
-                (Box::new(PwrPlugin) as Box<dyn ScorePlugin>, alpha),
-                (Box::new(FgdPlugin::new()) as Box<dyn ScorePlugin>, 1.0 - alpha),
-            ],
-            Binder::WeightedPwrFgd { alpha },
-        ),
-        PolicyKind::PwrFgdDynamic { alpha_empty, .. } => (
-            vec![
-                (Box::new(PwrPlugin) as Box<dyn ScorePlugin>, alpha_empty),
-                (Box::new(FgdPlugin::new()) as Box<dyn ScorePlugin>, 1.0 - alpha_empty),
-            ],
-            Binder::WeightedPwrFgd { alpha: alpha_empty },
-        ),
-        PolicyKind::BestFit | PolicyKind::MigBestFit => (
-            vec![(Box::new(BestFitPlugin) as Box<dyn ScorePlugin>, 1.0)],
-            Binder::GpuBestFit,
-        ),
-        PolicyKind::MigSliceFit => (
-            vec![(Box::new(MigSliceFitPlugin) as Box<dyn ScorePlugin>, 1.0)],
-            Binder::GpuBestFit,
-        ),
-        PolicyKind::DotProd => (
-            vec![(Box::new(DotProdPlugin) as Box<dyn ScorePlugin>, 1.0)],
-            Binder::GpuBestFit,
-        ),
-        PolicyKind::GpuPacking => (
-            vec![(Box::new(GpuPackingPlugin) as Box<dyn ScorePlugin>, 1.0)],
-            Binder::PackOccupied,
-        ),
-        PolicyKind::GpuClustering => (
-            vec![(Box::new(GpuClusteringPlugin) as Box<dyn ScorePlugin>, 1.0)],
-            Binder::GpuBestFit,
-        ),
-        PolicyKind::FirstFit => (
-            vec![(Box::new(FirstFitPlugin) as Box<dyn ScorePlugin>, 1.0)],
-            Binder::First,
-        ),
-        PolicyKind::Random => (
-            vec![(Box::new(RandomPlugin::new(0x5EED)) as Box<dyn ScorePlugin>, 1.0)],
-            Binder::Random(RefCell::new(Rng::new(0xB14D))),
-        ),
-    };
-    let mut sched = Scheduler::new(plugins, binder, &label);
-    if let PolicyKind::PwrFgdDynamic { alpha_empty, alpha_full } = kind {
-        sched.set_dynamic_alpha(alpha_empty, alpha_full);
-    }
-    sched
+    Scheduler::from_policy(kind)
 }

@@ -1,0 +1,696 @@
+//! `SchedulerProfile` — the k8s-scheduler-profile analog: a declarative
+//! description of one scheduler assembled from the framework's named
+//! extension points, plus the textual policy-spec DSL behind `--policy`.
+//!
+//! ## Extension points and registries
+//!
+//! A profile names entries in four string-keyed registries (built-ins
+//! below; [`register_score_plugin`] & co. add custom entries at
+//! runtime):
+//!
+//! * `score` — N weighted [`ScorePlugin`]s: `pwr`, `fgd`, `bestfit`,
+//!   `dotprod`, `gpupacking`, `gpuclustering`, `firstfit`, `random`,
+//!   `slicefit`.
+//! * `bind` — one [`BindPlugin`](crate::sched::bind::BindPlugin):
+//!   `weighted:α`, `bestfit`, `packed`, `first`, `random`.
+//! * `mod` — at most one
+//!   [`WeightModulator`](crate::sched::modulate::WeightModulator):
+//!   `loadalpha:α_empty:α_full`.
+//! * `hook` — any number of [`PostHook`]s: `repartition` (the MIG
+//!   defragmenter; optional `:frag_threshold[:max_moved[:budget]]`).
+//!
+//! ## DSL grammar
+//!
+//! ```text
+//! profile  := section ('|' section)*
+//! section  := 'score(' entry (',' entry)* ')'      -- required, exactly one
+//!           | 'bind(' key (':' num)* ')'           -- default bind(bestfit)
+//!           | 'mod(' key (':' num)* ')'            -- optional
+//!           | 'hook(' key (':' num)* ')'           -- repeatable
+//! entry    := key ('=' num)?                       -- weight defaults to 1
+//! ```
+//!
+//! Example — three objectives, load-adaptive weights, proactive MIG
+//! defrag:
+//!
+//! ```text
+//! score(pwr=0.5,fgd=0.3,dotprod=0.2)|bind(weighted:0.5)|mod(loadalpha:0.9:0.0)|hook(repartition:0.5)
+//! ```
+//!
+//! Every legacy [`PolicyKind`] string (`pwrfgd:0.1`, `mig-fgd`, …)
+//! remains valid sugar: it lowers to an equivalent profile whose label
+//! is byte-identical to the pre-profile scheduler's, so CSV headers and
+//! pinned experiment outputs are unchanged
+//! (`rust/tests/profile_equivalence.rs` locks this).
+
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::sched::bind::{
+    BestFitBinder, BindPlugin, FirstBinder, PackOccupiedBinder, RandomBinder, WeightedBinder,
+};
+use crate::sched::framework::{PostHook, Scheduler, ScorePlugin};
+use crate::sched::modulate::{LoadAlphaModulator, WeightModulator};
+use crate::sched::policies::{
+    BestFitPlugin, DotProdPlugin, FgdPlugin, FirstFitPlugin, GpuClusteringPlugin,
+    GpuPackingPlugin, MigRepartitioner, MigSliceFitPlugin, PwrPlugin, RandomPlugin,
+    RepartitionConfig,
+};
+use crate::sched::PolicyKind;
+
+/// Seeds matching the pre-profile hard-wired policy zoo (reproducible
+/// runs; `rust/tests/profile_equivalence.rs` pins the equivalence).
+const RANDOM_PLUGIN_SEED: u64 = 0x5EED;
+const RANDOM_BINDER_SEED: u64 = 0xB14D;
+
+/// A declarative scheduler assembly: what to build at each extension
+/// point. Plain data — `Clone + Send`, so experiment harnesses ship it
+/// across repetition threads and build one `Scheduler` per thread.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedulerProfile {
+    /// `score` extension point: (registry key, weight) per plugin.
+    pub score: Vec<(String, f64)>,
+    /// `bind` extension point: registry key + numeric params.
+    pub bind: (String, Vec<f64>),
+    /// `weightModulator` extension point (at most one).
+    pub modulator: Option<(String, Vec<f64>)>,
+    /// `postPlace`/`postFail` hooks, in attachment order.
+    pub hooks: Vec<(String, Vec<f64>)>,
+    /// Report/CSV label. Legacy policies keep their [`PolicyKind::label`]
+    /// byte-for-byte; DSL profiles get a canonical compact label.
+    pub label: String,
+}
+
+impl From<PolicyKind> for SchedulerProfile {
+    fn from(kind: PolicyKind) -> SchedulerProfile {
+        lower(kind)
+    }
+}
+
+impl SchedulerProfile {
+    /// Parse a `--policy` string: every legacy [`PolicyKind`] name is
+    /// accepted as sugar (lowered to an equivalent profile, identical
+    /// label); anything containing `(` is parsed as the profile DSL and
+    /// validated eagerly (unknown keys / bad params fail here, not at
+    /// simulation time).
+    pub fn parse(s: &str) -> Result<SchedulerProfile, String> {
+        if let Some(kind) = PolicyKind::parse(s) {
+            return Ok(kind.into());
+        }
+        if s.contains('(') {
+            let p = parse_dsl(s)?;
+            p.build()?; // eager validation of keys and params
+            return Ok(p);
+        }
+        Err(format!(
+            "unknown policy '{s}': neither a legacy policy name (fgd, pwr, pwrfgd:<α∈[0,1]>, \
+             mig-pwrfgd:<α>, …) nor a profile DSL like \
+             'score(pwr=0.5,fgd=0.3,dotprod=0.2)|bind(weighted:0.5)' (see docs/scheduler.md)"
+        ))
+    }
+
+    /// Materialize the scheduler: resolve every key against its
+    /// registry and wire the extension points.
+    pub fn build(&self) -> Result<Scheduler, String> {
+        if self.score.is_empty() {
+            return Err("profile has no score plugins".into());
+        }
+        let mut plugins: Vec<(Box<dyn ScorePlugin>, f64)> = Vec::new();
+        for (key, weight) in &self.score {
+            if !weight.is_finite() || *weight < 0.0 {
+                return Err(format!(
+                    "score weight for '{key}' must be finite and >= 0, got {weight}"
+                ));
+            }
+            plugins.push((build_score_plugin(key)?, *weight));
+        }
+        if !self.score.iter().any(|(_, w)| *w > 0.0) {
+            return Err("at least one score weight must be > 0".into());
+        }
+        // Modulators carry layout contracts (e.g. loadalpha requires
+        // the power plugin first); check against the resolved plugin
+        // names *before* assembly so a violation is an eager Err, not a
+        // debug-only panic downstream.
+        let modulator = match &self.modulator {
+            Some((key, params)) => {
+                let m = build_modulator(key, params)?;
+                let names: Vec<&str> = plugins.iter().map(|(p, _)| p.name()).collect();
+                m.check_layout(&names).map_err(|e| format!("mod({key}:…): {e}"))?;
+                Some(m)
+            }
+            None => None,
+        };
+        let binder = build_binder(&self.bind.0, &self.bind.1)?;
+        let mut sched = Scheduler::new(plugins, binder, &self.label);
+        if let Some(m) = modulator {
+            sched.set_modulator(m);
+        }
+        for (key, params) in &self.hooks {
+            sched.add_post_hook(build_hook(key, params)?);
+        }
+        Ok(sched)
+    }
+}
+
+/// Lower a legacy [`PolicyKind`] to its equivalent profile (same
+/// plugins, weights, binder and label as the pre-profile hard-wired
+/// zoo; the MIG variants share their non-MIG twin's wiring because the
+/// frag/power layers are slice-aware).
+fn lower(kind: PolicyKind) -> SchedulerProfile {
+    let label = kind.label();
+    let s = |k: &str, w: f64| (k.to_string(), w);
+    let (score, bind, modulator) = match kind {
+        PolicyKind::Fgd | PolicyKind::MigFgd => {
+            (vec![s("fgd", 1.0)], ("weighted".to_string(), vec![0.0]), None)
+        }
+        PolicyKind::Pwr | PolicyKind::MigPwr => {
+            (vec![s("pwr", 1.0)], ("weighted".to_string(), vec![1.0]), None)
+        }
+        PolicyKind::PwrFgd { alpha } | PolicyKind::MigPwrFgd { alpha } => (
+            vec![s("pwr", alpha), s("fgd", 1.0 - alpha)],
+            ("weighted".to_string(), vec![alpha]),
+            None,
+        ),
+        PolicyKind::PwrFgdDynamic { alpha_empty, alpha_full } => (
+            vec![s("pwr", alpha_empty), s("fgd", 1.0 - alpha_empty)],
+            ("weighted".to_string(), vec![alpha_empty]),
+            Some(("loadalpha".to_string(), vec![alpha_empty, alpha_full])),
+        ),
+        PolicyKind::BestFit | PolicyKind::MigBestFit => {
+            (vec![s("bestfit", 1.0)], ("bestfit".to_string(), vec![]), None)
+        }
+        PolicyKind::MigSliceFit => {
+            (vec![s("slicefit", 1.0)], ("bestfit".to_string(), vec![]), None)
+        }
+        PolicyKind::DotProd => (vec![s("dotprod", 1.0)], ("bestfit".to_string(), vec![]), None),
+        PolicyKind::GpuPacking => {
+            (vec![s("gpupacking", 1.0)], ("packed".to_string(), vec![]), None)
+        }
+        PolicyKind::GpuClustering => {
+            (vec![s("gpuclustering", 1.0)], ("bestfit".to_string(), vec![]), None)
+        }
+        PolicyKind::FirstFit => (vec![s("firstfit", 1.0)], ("first".to_string(), vec![]), None),
+        PolicyKind::Random => (vec![s("random", 1.0)], ("random".to_string(), vec![]), None),
+    };
+    SchedulerProfile { score, bind, modulator, hooks: Vec::new(), label }
+}
+
+// ---------------------------------------------------------------------
+// Registries: built-ins resolved by match, runtime extensions in global
+// string-keyed maps.
+// ---------------------------------------------------------------------
+
+type ScoreFactory = Arc<dyn Fn() -> Box<dyn ScorePlugin> + Send + Sync>;
+type BindFactory = Arc<dyn Fn(&[f64]) -> Result<Box<dyn BindPlugin>, String> + Send + Sync>;
+type ModulatorFactory =
+    Arc<dyn Fn(&[f64]) -> Result<Box<dyn WeightModulator>, String> + Send + Sync>;
+type HookFactory = Arc<dyn Fn(&[f64]) -> Result<Box<dyn PostHook>, String> + Send + Sync>;
+
+fn score_ext() -> &'static RwLock<HashMap<String, ScoreFactory>> {
+    static REG: OnceLock<RwLock<HashMap<String, ScoreFactory>>> = OnceLock::new();
+    REG.get_or_init(Default::default)
+}
+
+fn bind_ext() -> &'static RwLock<HashMap<String, BindFactory>> {
+    static REG: OnceLock<RwLock<HashMap<String, BindFactory>>> = OnceLock::new();
+    REG.get_or_init(Default::default)
+}
+
+fn modulator_ext() -> &'static RwLock<HashMap<String, ModulatorFactory>> {
+    static REG: OnceLock<RwLock<HashMap<String, ModulatorFactory>>> = OnceLock::new();
+    REG.get_or_init(Default::default)
+}
+
+fn hook_ext() -> &'static RwLock<HashMap<String, HookFactory>> {
+    static REG: OnceLock<RwLock<HashMap<String, HookFactory>>> = OnceLock::new();
+    REG.get_or_init(Default::default)
+}
+
+/// Register a custom score plugin under `key` (later profiles may name
+/// it in `score(...)`). Built-in keys cannot be shadowed.
+pub fn register_score_plugin(
+    key: &str,
+    factory: impl Fn() -> Box<dyn ScorePlugin> + Send + Sync + 'static,
+) -> Result<(), String> {
+    // The DSL lowercases keys, so registration must too or the entry
+    // would be unreachable from --policy strings.
+    let key = key.to_ascii_lowercase();
+    if BUILTIN_SCORE.iter().any(|(k, _)| *k == key) {
+        return Err(format!("'{key}' is a built-in score plugin"));
+    }
+    score_ext().write().unwrap().insert(key, Arc::new(factory));
+    Ok(())
+}
+
+/// Register a custom bind plugin under `key`.
+pub fn register_bind_plugin(
+    key: &str,
+    factory: impl Fn(&[f64]) -> Result<Box<dyn BindPlugin>, String> + Send + Sync + 'static,
+) -> Result<(), String> {
+    let key = key.to_ascii_lowercase();
+    if BUILTIN_BIND.iter().any(|(k, _)| *k == key) {
+        return Err(format!("'{key}' is a built-in binder"));
+    }
+    bind_ext().write().unwrap().insert(key, Arc::new(factory));
+    Ok(())
+}
+
+/// Register a custom weight modulator under `key`.
+pub fn register_modulator(
+    key: &str,
+    factory: impl Fn(&[f64]) -> Result<Box<dyn WeightModulator>, String> + Send + Sync + 'static,
+) -> Result<(), String> {
+    let key = key.to_ascii_lowercase();
+    if BUILTIN_MODULATOR.iter().any(|(k, _)| *k == key) {
+        return Err(format!("'{key}' is a built-in modulator"));
+    }
+    modulator_ext().write().unwrap().insert(key, Arc::new(factory));
+    Ok(())
+}
+
+/// Register a custom post hook under `key`.
+pub fn register_post_hook(
+    key: &str,
+    factory: impl Fn(&[f64]) -> Result<Box<dyn PostHook>, String> + Send + Sync + 'static,
+) -> Result<(), String> {
+    let key = key.to_ascii_lowercase();
+    if BUILTIN_HOOK.iter().any(|(k, _)| *k == key) {
+        return Err(format!("'{key}' is a built-in hook"));
+    }
+    hook_ext().write().unwrap().insert(key, Arc::new(factory));
+    Ok(())
+}
+
+// Each built-in registry is ONE table of (key, factory): the lookup,
+// the shadowing guard in `register_*` and the keys listed in error
+// messages all derive from it, so a new entry cannot drift out of sync.
+
+const BUILTIN_SCORE: &[(&str, fn() -> Box<dyn ScorePlugin>)] = &[
+    ("pwr", || Box::new(PwrPlugin)),
+    ("fgd", || Box::new(FgdPlugin::new())),
+    ("bestfit", || Box::new(BestFitPlugin)),
+    ("dotprod", || Box::new(DotProdPlugin)),
+    ("gpupacking", || Box::new(GpuPackingPlugin)),
+    ("gpuclustering", || Box::new(GpuClusteringPlugin)),
+    ("firstfit", || Box::new(FirstFitPlugin)),
+    ("random", || Box::new(RandomPlugin::new(RANDOM_PLUGIN_SEED))),
+    ("slicefit", || Box::new(MigSliceFitPlugin)),
+];
+
+type BindBuilder = fn(&[f64]) -> Result<Box<dyn BindPlugin>, String>;
+const BUILTIN_BIND: &[(&str, BindBuilder)] = &[
+    ("weighted", |params| {
+        let [alpha] = params else {
+            return Err(format!(
+                "binder 'weighted' takes exactly one α param, got {}",
+                params.len()
+            ));
+        };
+        validate_alpha(*alpha, "bind(weighted:α)")?;
+        Ok(Box::new(WeightedBinder { alpha: *alpha }))
+    }),
+    ("bestfit", |params| {
+        no_params(params, "bestfit")?;
+        Ok(Box::new(BestFitBinder))
+    }),
+    ("packed", |params| {
+        no_params(params, "packed")?;
+        Ok(Box::new(PackOccupiedBinder))
+    }),
+    ("first", |params| {
+        no_params(params, "first")?;
+        Ok(Box::new(FirstBinder))
+    }),
+    ("random", |params| {
+        no_params(params, "random")?;
+        Ok(Box::new(RandomBinder::new(RANDOM_BINDER_SEED)))
+    }),
+];
+
+type ModulatorBuilder = fn(&[f64]) -> Result<Box<dyn WeightModulator>, String>;
+const BUILTIN_MODULATOR: &[(&str, ModulatorBuilder)] = &[("loadalpha", |params| {
+    let [alpha_empty, alpha_full] = params else {
+        return Err(format!(
+            "modulator 'loadalpha' takes exactly two params (α_empty:α_full), got {}",
+            params.len()
+        ));
+    };
+    validate_alpha(*alpha_empty, "mod(loadalpha:α_empty:·)")?;
+    validate_alpha(*alpha_full, "mod(loadalpha:·:α_full)")?;
+    Ok(Box::new(LoadAlphaModulator { alpha_empty: *alpha_empty, alpha_full: *alpha_full }))
+})];
+
+type HookBuilder = fn(&[f64]) -> Result<Box<dyn PostHook>, String>;
+const BUILTIN_HOOK: &[(&str, HookBuilder)] = &[("repartition", |params| {
+    // hook(repartition[:frag_threshold[:max_moved[:budget]]]);
+    // omitted or negative threshold = ∞ (reactive / failure-only mode —
+    // the DSL has no literal for ∞, so `-1` is the sentinel that lets
+    // custom max_moved/budget caps combine with reactive-only defrag).
+    let mut cfg = RepartitionConfig::default();
+    if let Some(&t) = params.first() {
+        if t.is_nan() {
+            return Err("repartition frag_threshold must be a number".into());
+        }
+        // Sign-based so `-0` also selects reactive-only mode.
+        cfg.frag_threshold = if t.is_sign_negative() { f64::INFINITY } else { t };
+    }
+    if let Some(&m) = params.get(1) {
+        if !(m >= 0.0) || !m.is_finite() || m.fract() != 0.0 {
+            return Err(format!("repartition max_moved must be a whole number, got {m}"));
+        }
+        cfg.max_moved_slices = m as u32;
+    }
+    if let Some(&b) = params.get(2) {
+        if !(b >= 0.0) || !b.is_finite() || b.fract() != 0.0 {
+            return Err(format!("repartition budget must be a whole number, got {b}"));
+        }
+        cfg.budget_slices = b as u64;
+    }
+    if params.len() > 3 {
+        return Err(format!(
+            "hook 'repartition' takes at most 3 params, got {}",
+            params.len()
+        ));
+    }
+    Ok(Box::new(MigRepartitioner::new(cfg)))
+})];
+
+fn builtin_keys<T>(table: &[(&'static str, T)]) -> String {
+    table.iter().map(|(k, _)| *k).collect::<Vec<_>>().join(", ")
+}
+
+fn build_score_plugin(key: &str) -> Result<Box<dyn ScorePlugin>, String> {
+    let key = key.to_ascii_lowercase();
+    let key = key.as_str();
+    if let Some((_, f)) = BUILTIN_SCORE.iter().find(|(k, _)| *k == key) {
+        return Ok(f());
+    }
+    match score_ext().read().unwrap().get(key) {
+        Some(f) => Ok(f()),
+        None => Err(format!(
+            "unknown score plugin '{key}' (built-ins: {})",
+            builtin_keys(BUILTIN_SCORE)
+        )),
+    }
+}
+
+fn build_binder(key: &str, params: &[f64]) -> Result<Box<dyn BindPlugin>, String> {
+    let key = key.to_ascii_lowercase();
+    let key = key.as_str();
+    if let Some((_, f)) = BUILTIN_BIND.iter().find(|(k, _)| *k == key) {
+        return f(params);
+    }
+    match bind_ext().read().unwrap().get(key) {
+        Some(f) => f(params),
+        None => Err(format!(
+            "unknown binder '{key}' (built-ins: {})",
+            builtin_keys(BUILTIN_BIND)
+        )),
+    }
+}
+
+fn build_modulator(key: &str, params: &[f64]) -> Result<Box<dyn WeightModulator>, String> {
+    let key = key.to_ascii_lowercase();
+    let key = key.as_str();
+    if let Some((_, f)) = BUILTIN_MODULATOR.iter().find(|(k, _)| *k == key) {
+        return f(params);
+    }
+    match modulator_ext().read().unwrap().get(key) {
+        Some(f) => f(params),
+        None => Err(format!(
+            "unknown modulator '{key}' (built-ins: {})",
+            builtin_keys(BUILTIN_MODULATOR)
+        )),
+    }
+}
+
+fn build_hook(key: &str, params: &[f64]) -> Result<Box<dyn PostHook>, String> {
+    let key = key.to_ascii_lowercase();
+    let key = key.as_str();
+    if let Some((_, f)) = BUILTIN_HOOK.iter().find(|(k, _)| *k == key) {
+        return f(params);
+    }
+    match hook_ext().read().unwrap().get(key) {
+        Some(f) => f(params),
+        None => Err(format!(
+            "unknown hook '{key}' (built-ins: {})",
+            builtin_keys(BUILTIN_HOOK)
+        )),
+    }
+}
+
+fn no_params(params: &[f64], key: &str) -> Result<(), String> {
+    if params.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("binder '{key}' takes no params, got {}", params.len()))
+    }
+}
+
+/// Shared α-domain check (satellite of the profile redesign: the legacy
+/// parser and the DSL both reject α ∉ [0, 1] — a 1.7 or −0.3 silently
+/// produced negative FGD weights before).
+pub fn validate_alpha(alpha: f64, what: &str) -> Result<(), String> {
+    if (0.0..=1.0).contains(&alpha) {
+        Ok(())
+    } else {
+        Err(format!("{what}: α must be in [0, 1], got {alpha}"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// DSL parsing.
+// ---------------------------------------------------------------------
+
+fn parse_num(s: &str, what: &str) -> Result<f64, String> {
+    let v: f64 =
+        s.trim().parse().map_err(|_| format!("{what}: '{s}' is not a number"))?;
+    if v.is_finite() {
+        Ok(v)
+    } else {
+        Err(format!("{what}: '{s}' must be finite"))
+    }
+}
+
+/// Parse `key[:num[:num...]]` (bind/mod/hook section bodies).
+fn parse_keyed_params(body: &str, what: &str) -> Result<(String, Vec<f64>), String> {
+    let mut parts = body.split(':');
+    let key = parts.next().unwrap_or("").trim().to_ascii_lowercase();
+    if key.is_empty() {
+        return Err(format!("{what}: missing key"));
+    }
+    let params = parts
+        .map(|p| parse_num(p, what))
+        .collect::<Result<Vec<f64>, String>>()?;
+    Ok((key, params))
+}
+
+fn parse_dsl(s: &str) -> Result<SchedulerProfile, String> {
+    let mut score: Vec<(String, f64)> = Vec::new();
+    let mut bind: Option<(String, Vec<f64>)> = None;
+    let mut modulator: Option<(String, Vec<f64>)> = None;
+    let mut hooks: Vec<(String, Vec<f64>)> = Vec::new();
+    for section in s.split('|') {
+        let section = section.trim();
+        let inner = section
+            .strip_suffix(')')
+            .and_then(|x| x.split_once('('))
+            .ok_or_else(|| {
+                format!("bad profile section '{section}': expected section(...)")
+            })?;
+        let (name, body) = (inner.0.trim().to_ascii_lowercase(), inner.1.trim());
+        match name.as_str() {
+            "score" => {
+                if !score.is_empty() {
+                    return Err("duplicate score(...) section".into());
+                }
+                for entry in body.split(',') {
+                    let entry = entry.trim();
+                    let (key, weight) = match entry.split_once('=') {
+                        Some((k, w)) => {
+                            (k.trim().to_ascii_lowercase(), parse_num(w, "score weight")?)
+                        }
+                        None => (entry.to_ascii_lowercase(), 1.0),
+                    };
+                    if key.is_empty() {
+                        return Err(format!("empty score entry in '{body}'"));
+                    }
+                    if weight < 0.0 {
+                        return Err(format!(
+                            "score weight for '{key}' must be >= 0, got {weight}"
+                        ));
+                    }
+                    if score.iter().any(|(k, _)| *k == key) {
+                        return Err(format!(
+                            "duplicate score plugin '{key}' (its weight would double-count)"
+                        ));
+                    }
+                    score.push((key, weight));
+                }
+            }
+            "bind" => {
+                if bind.is_some() {
+                    return Err("duplicate bind(...) section".into());
+                }
+                bind = Some(parse_keyed_params(body, "bind")?);
+            }
+            "mod" => {
+                if modulator.is_some() {
+                    return Err("duplicate mod(...) section".into());
+                }
+                modulator = Some(parse_keyed_params(body, "mod")?);
+            }
+            "hook" => hooks.push(parse_keyed_params(body, "hook")?),
+            other => {
+                return Err(format!(
+                    "unknown profile section '{other}' (expected score/bind/mod/hook)"
+                ))
+            }
+        }
+    }
+    if score.is_empty() {
+        return Err("profile needs a score(...) section with at least one plugin".into());
+    }
+    // The open-simulator default binder.
+    let bind = bind.unwrap_or_else(|| ("bestfit".to_string(), Vec::new()));
+    let label = dsl_label(&score, &bind, &modulator, &hooks);
+    Ok(SchedulerProfile { score, bind, modulator, hooks, label })
+}
+
+/// Canonical compact label for DSL profiles (comma-free so CSV headers
+/// stay well-formed): `PWR500+FGD300+DOTPROD200|weighted:500|loadalpha:900-0`.
+/// Score weights and binder/modulator params are α-like and shown
+/// ×1000 (the paper's plot-legend convention); hook params are literal
+/// quantities (thresholds, slice counts, budgets) and printed verbatim.
+fn dsl_label(
+    score: &[(String, f64)],
+    bind: &(String, Vec<f64>),
+    modulator: &Option<(String, Vec<f64>)>,
+    hooks: &[(String, Vec<f64>)],
+) -> String {
+    let kilo = |v: f64| format!("{:.0}", v * 1000.0);
+    let mut out = score
+        .iter()
+        .map(|(k, w)| format!("{}{}", k.to_ascii_uppercase(), kilo(*w)))
+        .collect::<Vec<_>>()
+        .join("+");
+    let keyed = |k: &str, params: &[f64], fmt: &dyn Fn(f64) -> String| {
+        if params.is_empty() {
+            k.to_string()
+        } else {
+            format!("{k}:{}", params.iter().map(|p| fmt(*p)).collect::<Vec<_>>().join("-"))
+        }
+    };
+    out.push('|');
+    out.push_str(&keyed(&bind.0, &bind.1, &kilo));
+    if let Some((k, params)) = modulator {
+        out.push('|');
+        out.push_str(&keyed(k, params, &kilo));
+    }
+    for (k, params) in hooks {
+        out.push('|');
+        out.push_str(&keyed(k, params, &|v| format!("{v}")));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_strings_lower_with_identical_labels() {
+        for s in [
+            "fgd", "pwr", "pwrfgd:0.1", "pwrfgddyn:0.9:0.0", "bestfit", "dotprod",
+            "gpupacking", "gpuclustering", "firstfit", "random", "mig-bestfit",
+            "mig-slicefit", "mig-fgd", "mig-pwr", "mig-pwrfgd:0.1",
+        ] {
+            let kind = PolicyKind::parse(s).expect(s);
+            let profile = SchedulerProfile::parse(s).expect(s);
+            assert_eq!(profile.label, kind.label(), "label drifted for '{s}'");
+            assert_eq!(profile, SchedulerProfile::from(kind));
+            profile.build().expect(s);
+        }
+    }
+
+    #[test]
+    fn dsl_roundtrip_three_objectives() {
+        let p = SchedulerProfile::parse(
+            "score(pwr=0.5,fgd=0.3,dotprod=0.2)|bind(weighted:0.5)|mod(loadalpha:0.9:0.0)",
+        )
+        .unwrap();
+        assert_eq!(p.score.len(), 3);
+        assert_eq!(p.score[2], ("dotprod".to_string(), 0.2));
+        assert_eq!(p.bind, ("weighted".to_string(), vec![0.5]));
+        assert_eq!(p.modulator, Some(("loadalpha".to_string(), vec![0.9, 0.0])));
+        assert_eq!(p.label, "PWR500+FGD300+DOTPROD200|weighted:500|loadalpha:900-0");
+        p.build().unwrap();
+    }
+
+    #[test]
+    fn dsl_defaults_and_hooks() {
+        // Bare keys weight 1, default binder bestfit, repeatable hooks.
+        let p = SchedulerProfile::parse("score(fgd)|hook(repartition:0.5)").unwrap();
+        assert_eq!(p.score, vec![("fgd".to_string(), 1.0)]);
+        assert_eq!(p.bind.0, "bestfit");
+        assert_eq!(p.hooks, vec![("repartition".to_string(), vec![0.5])]);
+        let sched = p.build().unwrap();
+        assert_eq!(sched.hook_counter("repartitions"), 0);
+        // `-1` threshold sentinel: reactive-only mode with custom
+        // migration caps stays expressible.
+        SchedulerProfile::parse("score(fgd)|hook(repartition:-1:4:100)")
+            .unwrap()
+            .build()
+            .unwrap();
+    }
+
+    #[test]
+    fn dsl_rejects_malformed_profiles() {
+        for bad in [
+            "score()",                                   // empty entry
+            "score(nope=1.0)",                           // unknown plugin
+            "score(pwr=-0.1)",                           // negative weight
+            "score(pwr=0.0,fgd=0.0)",                    // all-zero weights
+            "score(pwr)|bind(weighted)",                 // weighted needs α
+            "score(pwr)|bind(weighted:1.7)",             // α out of range
+            "score(pwr)|bind(nope)",                     // unknown binder
+            "score(pwr)|mod(loadalpha:0.5)",             // loadalpha needs 2
+            "score(pwr)|mod(loadalpha:0.5:1.2)",         // α_full out of range
+            "score(pwr)|hook(nope)",                     // unknown hook
+            "score(pwr)|bind(first)|bind(first)",        // duplicate bind
+            "score(pwr=0.5)|score(fgd=0.5)",             // duplicate score section
+            "score(pwr,pwr)|bind(weighted:1)",           // duplicate plugin key
+            "score(fgd=0.7,pwr=0.3)|mod(loadalpha:0.9:0.0)", // loadalpha needs pwr first
+            "gibberish(pwr)",                            // unknown section
+            "notaprofile",                               // not legacy, no DSL
+        ] {
+            assert!(SchedulerProfile::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn custom_registrations_resolve() {
+        use crate::cluster::node::{Node, Placement};
+        use crate::tasks::Task;
+        struct Constant;
+        impl ScorePlugin for Constant {
+            fn name(&self) -> &'static str {
+                "constant"
+            }
+            fn score(&self, _: &crate::sched::SchedCtx, _: &Node, _: &Task, _: &[Placement]) -> f64 {
+                1.0
+            }
+        }
+        register_score_plugin("test-constant", || Box::new(Constant)).unwrap();
+        // Built-ins cannot be shadowed.
+        assert!(register_score_plugin("pwr", || Box::new(Constant)).is_err());
+        let p = SchedulerProfile {
+            score: vec![("test-constant".to_string(), 1.0)],
+            bind: ("first".to_string(), vec![]),
+            modulator: None,
+            hooks: vec![],
+            label: "test".into(),
+        };
+        p.build().unwrap();
+    }
+}

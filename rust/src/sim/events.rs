@@ -16,7 +16,6 @@ use crate::cluster::node::Placement;
 use crate::cluster::Datacenter;
 use crate::metrics::{RunSeries, SeriesPoint};
 use crate::power;
-use crate::sched::policies::MigRepartitioner;
 use crate::sched::Scheduler;
 use crate::tasks::{Task, Workload};
 use crate::trace::{InflationSampler, TraceSpec};
@@ -102,7 +101,7 @@ pub struct SteadyResult {
     pub failed: u64,
     pub departures: u64,
     /// MIG repartitioning activity under churn (zero without a
-    /// repartitioner): reactive (failure-triggered) and proactive
+    /// repartition hook): reactive (failure-triggered) and proactive
     /// (frag-threshold-triggered) repacks plus total migrated slices.
     pub repartitions: u64,
     pub proactive_repartitions: u64,
@@ -126,9 +125,6 @@ pub struct SteadySim {
     running: std::collections::HashMap<u64, (Task, usize, Placement)>,
     now: f64,
     seq: u64,
-    /// Optional MIG defragmenter: failed MIG arrivals trigger one
-    /// repack-and-retry (churn is where fragmentation accumulates).
-    pub repartitioner: Option<MigRepartitioner>,
 }
 
 impl SteadySim {
@@ -144,7 +140,6 @@ impl SteadySim {
             running: std::collections::HashMap::new(),
             now: 0.0,
             seq: 0,
-            repartitioner: None,
         }
     }
 
@@ -195,23 +190,11 @@ impl SteadySim {
                     out.arrivals += 1;
                     let task = self.sampler.next_task();
                     let id = task.id;
-                    let decision = crate::sched::policies::mig::schedule_with_repartition(
-                        &mut self.sched,
-                        &mut self.dc,
-                        self.repartitioner.as_mut(),
-                        &self.workload,
-                        &task,
-                    );
-                    match decision {
+                    // The full per-task protocol (schedule, postFail
+                    // repack-and-retry, commit, postPlace defrag) lives
+                    // in the framework — nothing to remember here.
+                    match self.sched.place(&mut self.dc, &self.workload, &task) {
                         Some(d) => {
-                            self.dc.allocate(&task, d.node, &d.placement);
-                            self.sched.notify_node_changed(d.node);
-                            crate::sched::policies::mig::proactive_defrag(
-                                &mut self.sched,
-                                &mut self.dc,
-                                self.repartitioner.as_mut(),
-                                d.node,
-                            );
                             self.running.insert(id, (task, d.node, d.placement));
                             out.scheduled += 1;
                             let dur = self.exp(cfg.mean_duration_s);
@@ -224,16 +207,10 @@ impl SteadySim {
                 }
                 Event::Departure { task_id } => {
                     if let Some((task, node, placement)) = self.running.remove(&task_id) {
-                        self.dc.deallocate(&task, node, &placement);
-                        self.sched.notify_node_changed(node);
                         // Departures are where lattice holes open up —
-                        // the proactive trigger's main use under churn.
-                        crate::sched::policies::mig::proactive_defrag(
-                            &mut self.sched,
-                            &mut self.dc,
-                            self.repartitioner.as_mut(),
-                            node,
-                        );
+                        // release() runs the postPlace hooks (proactive
+                        // defrag's main use under churn).
+                        self.sched.release(&mut self.dc, &task, node, &placement);
                         out.departures += 1;
                     }
                 }
@@ -245,11 +222,9 @@ impl SteadySim {
             out.steady_util = steady_samples.iter().map(|s| s.1).sum::<f64>() / n;
             out.steady_eopc_drs_w = steady_samples.iter().map(|s| s.2).sum::<f64>() / n;
         }
-        if let Some(rp) = &self.repartitioner {
-            out.repartitions = rp.stats.repartitions;
-            out.proactive_repartitions = rp.stats.proactive_repartitions;
-            out.migrated_slices = rp.stats.migrated_slices;
-        }
+        out.repartitions = self.sched.hook_counter("repartitions");
+        out.proactive_repartitions = self.sched.hook_counter("proactive_repartitions");
+        out.migrated_slices = self.sched.hook_counter("migrated_slices");
         out
     }
 

@@ -6,6 +6,11 @@
 //! cumulative arrived GPU requests reach a target multiple of the
 //! cluster's GPU capacity. Metrics are sampled on a fixed capacity grid.
 //!
+//! Each submission runs the scheduler's full
+//! [`place`](crate::sched::Scheduler::place) protocol, so profile hooks
+//! (e.g. the MIG repartitioner) execute structurally — the loop cannot
+//! silently skip them.
+//!
 //! [`run_repetitions`] runs the paper's 10 seeded repetitions (in
 //! parallel threads — each repetition owns its own datacenter, scheduler
 //! and sampler) and returns the per-run series for grid averaging.
@@ -17,7 +22,7 @@ use crate::frag;
 use crate::metrics::{RunSeries, SeriesPoint};
 use crate::power;
 use crate::sched::policies::{MigRepartitioner, RepartitionConfig};
-use crate::sched::{PolicyKind, Scheduler};
+use crate::sched::{Scheduler, SchedulerProfile};
 use crate::tasks::Workload;
 use crate::trace::{Trace, TraceSpec};
 
@@ -40,7 +45,7 @@ pub struct RunResult {
     /// Final GPU units arrived and allocated.
     pub arrived_gpu_units: f64,
     pub allocated_gpu_units: f64,
-    /// MIG repartitioning activity (zero without a repartitioner):
+    /// MIG repartitioning activity (zero without a repartition hook):
     /// reactive (failure-triggered) and proactive (threshold-triggered)
     /// repacks plus total migrated slices.
     pub repartitions: u64,
@@ -79,9 +84,6 @@ pub struct Simulation {
     submitted: u64,
     /// Record full `F_dc` series (O(N·M) per sample; off for benches).
     pub record_frag: bool,
-    /// Optional MIG defragmenter: on a placement failure of a MIG
-    /// demand, repack the cheapest GPU and retry once.
-    pub repartitioner: Option<MigRepartitioner>,
 }
 
 impl Simulation {
@@ -117,11 +119,12 @@ impl Simulation {
             scheduled: 0,
             submitted: 0,
             record_frag: true,
-            repartitioner: None,
         }
     }
 
-    /// Submit one sampled task; returns whether it was scheduled.
+    /// Submit one sampled task; returns whether it was scheduled. The
+    /// whole per-task protocol — schedule, postFail repack-and-retry,
+    /// commit, postPlace defrag — lives in [`Scheduler::place`].
     pub fn step(&mut self) -> bool {
         let task = self.sampler.next_task();
         self.submitted += 1;
@@ -129,23 +132,8 @@ impl Simulation {
         if let crate::tasks::GpuDemand::Mig(p) = task.gpu {
             self.arrived_mig_units[p.lattice().index()] += p.units();
         }
-        let decision = crate::sched::policies::mig::schedule_with_repartition(
-            &mut self.sched,
-            &mut self.dc,
-            self.repartitioner.as_mut(),
-            &self.workload,
-            &task,
-        );
-        match decision {
-            Some(d) => {
-                self.dc.allocate(&task, d.node, &d.placement);
-                self.sched.notify_node_changed(d.node);
-                crate::sched::policies::mig::proactive_defrag(
-                    &mut self.sched,
-                    &mut self.dc,
-                    self.repartitioner.as_mut(),
-                    d.node,
-                );
+        match self.sched.place(&mut self.dc, &self.workload, &task) {
+            Some(_) => {
                 self.scheduled += 1;
                 true
             }
@@ -235,7 +223,6 @@ impl Simulation {
             }
         }
         series.points.push(self.sample());
-        let stats = self.repartitioner.as_ref().map(|r| r.stats).unwrap_or_default();
         RunResult {
             series,
             submitted: self.submitted,
@@ -243,9 +230,9 @@ impl Simulation {
             failed: self.failed,
             arrived_gpu_units: self.arrived_gpu_units,
             allocated_gpu_units: self.dc.gpu_allocated_units(),
-            repartitions: stats.repartitions,
-            proactive_repartitions: stats.proactive_repartitions,
-            migrated_slices: stats.migrated_slices,
+            repartitions: self.sched.hook_counter("repartitions"),
+            proactive_repartitions: self.sched.hook_counter("proactive_repartitions"),
+            migrated_slices: self.sched.hook_counter("migrated_slices"),
         }
     }
 }
@@ -263,10 +250,11 @@ pub struct RepeatConfig {
     pub record_frag: bool,
     /// Ablation: lowest-id tie-break instead of k8s's random choice.
     pub deterministic_ties: bool,
-    /// Attach a MIG repartitioner (default cost caps) to each run.
+    /// Attach a MIG repartition hook (default cost caps) to each run's
+    /// scheduler.
     pub mig_repartition: bool,
     /// Proactive slice-fragmentation threshold of the attached
-    /// repartitioner; `f64::INFINITY` (default) keeps it failure-only.
+    /// repartition hook; `f64::INFINITY` (default) keeps it failure-only.
     pub mig_frag_threshold: f64,
 }
 
@@ -285,33 +273,41 @@ impl Default for RepeatConfig {
 }
 
 /// Run `cfg.reps` independent repetitions of (cluster spec × trace spec
-/// × policy) across threads; returns each repetition's series.
+/// × policy) across threads; returns each repetition's series. `policy`
+/// accepts a legacy [`crate::sched::PolicyKind`] or any
+/// [`SchedulerProfile`] (each repetition thread builds its own
+/// scheduler from the shared profile).
 pub fn run_repetitions(
     cluster: &crate::cluster::ClusterSpec,
     trace_spec: &TraceSpec,
-    policy: PolicyKind,
+    policy: impl Into<SchedulerProfile>,
     cfg: &RepeatConfig,
 ) -> Vec<RunResult> {
+    let profile: SchedulerProfile = policy.into();
+    // Validate once, eagerly, so a bad profile fails loudly here instead
+    // of panicking inside a repetition thread.
+    profile.build().expect("invalid scheduler profile");
     let threads: Vec<_> = (0..cfg.reps)
         .map(|i| {
             let cluster = cluster.clone();
             let trace_spec = trace_spec.clone();
             let cfg = cfg.clone();
+            let profile = profile.clone();
             std::thread::spawn(move || {
                 let seed = cfg.base_seed + i as u64;
                 let dc = cluster.build();
-                let mut sched = Scheduler::from_policy(policy);
+                let mut sched = profile.build().expect("profile validated above");
                 sched.set_deterministic_ties(cfg.deterministic_ties);
+                if cfg.mig_repartition {
+                    sched.add_post_hook(Box::new(MigRepartitioner::new(
+                        RepartitionConfig::with_threshold(cfg.mig_frag_threshold),
+                    )));
+                }
                 // Workload M extracted from a materialized trace with
                 // this repetition's seed (fresh historical sample).
                 let workload = trace_spec.synthesize(seed ^ 0x57AB1E).workload();
                 let mut sim = Simulation::with_spec(dc, sched, &trace_spec, workload, seed);
                 sim.record_frag = cfg.record_frag;
-                if cfg.mig_repartition {
-                    sim.repartitioner = Some(MigRepartitioner::new(
-                        RepartitionConfig::with_threshold(cfg.mig_frag_threshold),
-                    ));
-                }
                 sim.run_inflation(cfg.target_ratio)
             })
         })
@@ -386,6 +382,22 @@ mod tests {
         assert_eq!(runs.len(), 3);
         for r in &runs {
             assert!(r.submitted > 0);
+        }
+    }
+
+    #[test]
+    fn repetitions_accept_dsl_profiles() {
+        let cluster = ClusterSpec::tiny(4, 4, 1);
+        let spec = TraceSpec::default_trace();
+        let cfg = RepeatConfig { reps: 2, base_seed: 1, target_ratio: 0.4, ..Default::default() };
+        let profile = SchedulerProfile::parse(
+            "score(pwr=0.4,fgd=0.4,bestfit=0.2)|bind(weighted:0.4)|mod(loadalpha:0.9:0.1)",
+        )
+        .unwrap();
+        let runs = run_repetitions(&cluster, &spec, profile, &cfg);
+        assert_eq!(runs.len(), 2);
+        for r in &runs {
+            assert!(r.scheduled > 0, "composite profile scheduled nothing");
         }
     }
 }

@@ -137,12 +137,56 @@ impl TaskClass {
 
 /// The target workload `M`: the class catalog the FGD metric averages
 /// over, extracted from historical trace data.
-#[derive(Clone, Debug, Default)]
+///
+/// Every construction stamps a process-unique `revision`; scheduler-side
+/// caches (see `sched::framework`) key on it instead of on pointer
+/// identity, which is immune to allocator address reuse (ABA). Clones
+/// share their source's revision — identical content, still-valid cache.
+#[derive(Clone, Debug)]
 pub struct Workload {
-    pub classes: Vec<TaskClass>,
+    /// Private so every mutation path re-stamps `revision` — read via
+    /// [`Workload::classes`], mutate via [`Workload::classes_mut`].
+    classes: Vec<TaskClass>,
+    revision: u64,
+}
+
+impl Default for Workload {
+    fn default() -> Self {
+        Workload::new(Vec::new())
+    }
+}
+
+fn next_workload_revision() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT_REVISION: AtomicU64 = AtomicU64::new(1);
+    NEXT_REVISION.fetch_add(1, Ordering::Relaxed)
 }
 
 impl Workload {
+    /// Build a workload from an explicit class catalog, stamping a fresh
+    /// revision.
+    pub fn new(classes: Vec<TaskClass>) -> Workload {
+        Workload { classes, revision: next_workload_revision() }
+    }
+
+    /// The class catalog `M`.
+    pub fn classes(&self) -> &[TaskClass] {
+        &self.classes
+    }
+
+    /// Mutable access to the catalog; re-stamps the revision so
+    /// scheduler-side caches rebuild on the next decision.
+    pub fn classes_mut(&mut self) -> &mut Vec<TaskClass> {
+        self.revision = next_workload_revision();
+        &mut self.classes
+    }
+
+    /// The identity stamp caches key on (unique per construction or
+    /// [`Workload::classes_mut`] borrow; shared by clones).
+    pub fn revision(&self) -> u64 {
+        self.revision
+    }
+
     /// Extract classes from a task list: tasks are grouped by their
     /// (rounded CPU, GPU-demand, constraint) signature and popularity is
     /// the group's frequency. This mirrors how FGD derives `M` from
@@ -179,7 +223,7 @@ impl Workload {
                 pop: count as f64 / total,
             })
             .collect();
-        Workload { classes }
+        Workload::new(classes)
     }
 
     /// Keep only the `k` most popular classes, renormalizing popularity.
@@ -195,7 +239,7 @@ impl Workload {
                 c.pop /= total;
             }
         }
-        Workload { classes }
+        Workload::new(classes)
     }
 
     /// Sum of popularities (≈1 for a full extraction).

@@ -157,7 +157,7 @@ openb-pod-0005,1000,4096,1,250,T4
     fn workload_extraction_from_imported_trace() {
         let trace = parse_csv("sample", SAMPLE).unwrap();
         let w = trace.workload();
-        assert_eq!(w.classes.len(), 5);
+        assert_eq!(w.classes().len(), 5);
         assert!((w.total_pop() - 1.0).abs() < 1e-12);
     }
 }

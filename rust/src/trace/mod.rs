@@ -565,7 +565,7 @@ mod tests {
         // Workload extraction covers all five profiles.
         let w = trace.workload();
         let profiles: std::collections::BTreeSet<usize> = w
-            .classes
+            .classes()
             .iter()
             .filter_map(|c| match c.gpu {
                 GpuDemand::Mig(p) => Some(p.index()),
@@ -650,7 +650,7 @@ mod tests {
         assert!((w.total_pop() - 1.0).abs() < 1e-9);
         // All six buckets represented in the classes.
         let buckets: std::collections::BTreeSet<usize> =
-            w.classes.iter().map(|c| c.gpu.bucket()).collect();
+            w.classes().iter().map(|c| c.gpu.bucket()).collect();
         assert_eq!(buckets.len(), NUM_BUCKETS);
     }
 }

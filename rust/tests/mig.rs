@@ -289,14 +289,11 @@ fn threshold_infinity_matches_failure_only_repartitioner() {
             sample_every_s: 100.0,
             seed: 7,
         };
-        let mut sim = SteadySim::new(
-            cluster.build(),
-            Scheduler::from_policy(PolicyKind::MigFgd),
-            &spec,
-            &cfg,
-        );
-        sim.repartitioner =
-            Some(MigRepartitioner::new(RepartitionConfig::with_threshold(threshold)));
+        let mut sched = Scheduler::from_policy(PolicyKind::MigFgd);
+        sched.add_post_hook(Box::new(MigRepartitioner::new(
+            RepartitionConfig::with_threshold(threshold),
+        )));
+        let mut sim = SteadySim::new(cluster.build(), sched, &spec, &cfg);
         sim.run(&cfg)
     };
     let with_proactive = churn(0.5);
@@ -318,12 +315,12 @@ fn het_fleet_inflation_reports_per_lattice_series() {
     let run = |seed: u64| {
         let dc = cluster.build();
         let workload = spec.synthesize(seed ^ 0x57AB1E).workload();
-        let sched = Scheduler::from_policy(PolicyKind::MigPwrFgd { alpha: 0.1 });
+        let mut sched = Scheduler::from_policy(PolicyKind::MigPwrFgd { alpha: 0.1 });
+        sched.add_post_hook(Box::new(MigRepartitioner::new(
+            RepartitionConfig::with_threshold(0.5),
+        )));
         let mut sim = Simulation::with_spec(dc, sched, &spec, workload, seed);
         sim.record_frag = true;
-        sim.repartitioner = Some(MigRepartitioner::new(
-            RepartitionConfig::with_threshold(0.5),
-        ));
         sim.run_inflation(0.8)
     };
     let a = run(11);

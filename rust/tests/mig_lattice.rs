@@ -120,7 +120,7 @@ fn mixed_workload(rng: &mut Rng) -> Workload {
             pop: rng.range_f64(0.01, 1.0),
         });
     }
-    Workload { classes }
+    Workload::new(classes)
 }
 
 /// The node-level fragmentation fast path equals the reference on
@@ -215,13 +215,17 @@ fn repartitioner_never_loses_instances_and_respects_budget() {
             } else {
                 let p = *rng.choice(&MigProfile::ALL);
                 let task = Task::new(step + trial as u64 * 1000, 2.0, 512.0, GpuDemand::Mig(p));
-                let d = repro::sched::policies::schedule_with_repartition(
-                    &mut sched,
-                    &mut dc,
-                    Some(&mut rp),
-                    &w,
-                    &task,
-                );
+                // The postFail protocol, driven by hand so `rp` stays
+                // external and inspectable between steps (the framework
+                // equivalent is `Scheduler::place` with a repartition
+                // hook attached).
+                let mut d = sched.schedule(&dc, &w, &task);
+                if d.is_none() {
+                    if let Some(node_id) = rp.try_make_room(&mut dc, &task) {
+                        sched.notify_node_changed(node_id);
+                        d = sched.schedule(&dc, &w, &task);
+                    }
+                }
                 if let Some(d) = d {
                     dc.allocate(&task, d.node, &d.placement);
                     sched.notify_node_changed(d.node);
