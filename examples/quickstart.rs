@@ -8,7 +8,7 @@ use repro::cluster::ClusterSpec;
 use repro::frag;
 use repro::power;
 use repro::sched::{PolicyKind, Scheduler};
-use repro::tasks::{GpuDemand, Task};
+use repro::tasks::{GpuDemand, Task, TaskConstraints};
 use repro::trace::TraceSpec;
 
 fn main() {
@@ -34,6 +34,12 @@ fn main() {
         Task::new(2, 4.0, 8_192.0, GpuDemand::Frac(0.5)), // should share with task 1
         Task::new(3, 16.0, 32_768.0, GpuDemand::Whole(8)),
         Task::new(4, 2.0, 4_096.0, GpuDemand::Zero),
+        // A constrained task: only T4-class GPUs are acceptable (the
+        // `filter` extension point enforces it — see docs/scheduler.md).
+        Task::new(5, 4.0, 8_192.0, GpuDemand::Whole(1)).with_constraints(TaskConstraints {
+            gpu_models: vec![repro::cluster::types::GpuModel::T4],
+            ..Default::default()
+        }),
     ];
 
     println!("\nidle EOPC: {:.2} kW", power::p_datacenter(&dc) / 1e3);

@@ -1,7 +1,13 @@
 //! Aggregate datacenter state: the node set plus cached cluster-level
-//! totals maintained incrementally across allocations.
+//! totals maintained incrementally across allocations, and the static
+//! candidate-count indexes (nodes per GPU model / MIG lattice / label)
+//! the filter plugins' PreFilter pass reads.
 
-use crate::cluster::node::{Node, Placement};
+use std::collections::HashMap;
+
+use crate::cluster::mig::MigLattice;
+use crate::cluster::node::{class_count_add, class_count_remove, Node, Placement, ResourceView};
+use crate::cluster::types::GpuModel;
 use crate::tasks::Task;
 
 /// The simulated datacenter.
@@ -12,10 +18,27 @@ pub struct Datacenter {
     total_gpus: usize,
     /// Cached: total vCPUs installed.
     total_vcpus: f64,
+    /// Cached: total memory installed (MiB).
+    total_mem: f64,
     /// Cached: sum of allocated GPU units across nodes (for GRAR).
     gpu_alloc_units: f64,
     /// Cached: allocated vCPUs across nodes.
     cpu_alloc_units: f64,
+    /// Cached: allocated memory across nodes (MiB).
+    mem_alloc_units: f64,
+    /// Static index: node count per GPU model (candidate counts for the
+    /// `gpumodel` PreFilter).
+    nodes_per_model: [usize; GpuModel::ALL.len()],
+    /// Static index: node count per MIG lattice (A100 / A30).
+    nodes_per_lattice: [usize; 2],
+    /// Static index: node count per label key, then value (nested so
+    /// lookups borrow `&str`s instead of allocating a tuple key — this
+    /// sits on the per-task PreFilter path).
+    label_counts: HashMap<String, HashMap<String, usize>>,
+    /// Cluster-wide resident task count per constraint class key (the
+    /// `affinity` PreFilter's existence check; same discipline as
+    /// [`Node::class_counts`] via the shared helpers).
+    class_counts: HashMap<String, u32>,
     /// Tasks currently resident.
     pub n_tasks: u64,
 }
@@ -25,12 +48,37 @@ impl Datacenter {
     pub fn new(nodes: Vec<Node>) -> Datacenter {
         let total_gpus = nodes.iter().map(|n| n.gpu_alloc.len()).sum();
         let total_vcpus = nodes.iter().map(|n| n.vcpus).sum();
+        let total_mem = nodes.iter().map(|n| n.mem).sum();
+        let mut nodes_per_model = [0usize; GpuModel::ALL.len()];
+        let mut nodes_per_lattice = [0usize; 2];
+        let mut label_counts: HashMap<String, HashMap<String, usize>> = HashMap::new();
+        for n in &nodes {
+            if let Some(m) = n.gpu_model {
+                nodes_per_model[m.index()] += 1;
+            }
+            if let Some(lat) = n.mig_lattice() {
+                nodes_per_lattice[lat.index()] += 1;
+            }
+            for (k, v) in &n.labels {
+                *label_counts
+                    .entry(k.clone())
+                    .or_default()
+                    .entry(v.clone())
+                    .or_insert(0) += 1;
+            }
+        }
         Datacenter {
             nodes,
             total_gpus,
             total_vcpus,
+            total_mem,
             gpu_alloc_units: 0.0,
             cpu_alloc_units: 0.0,
+            mem_alloc_units: 0.0,
+            nodes_per_model,
+            nodes_per_lattice,
+            label_counts,
+            class_counts: HashMap::new(),
             n_tasks: 0,
         }
     }
@@ -61,6 +109,57 @@ impl Datacenter {
         self.cpu_alloc_units
     }
 
+    /// Total installed memory (MiB).
+    pub fn total_mem(&self) -> f64 {
+        self.total_mem
+    }
+
+    /// Sum of memory currently allocated (MiB).
+    pub fn mem_allocated_units(&self) -> f64 {
+        self.mem_alloc_units
+    }
+
+    /// Aggregate free vCPUs (an upper bound on any single node's free
+    /// CPU — the `resources` PreFilter's Cond. 1 check).
+    pub fn cpu_free_total(&self) -> f64 {
+        self.total_vcpus - self.cpu_alloc_units
+    }
+
+    /// Aggregate free memory in MiB (upper bound per node).
+    pub fn mem_free_total(&self) -> f64 {
+        self.total_mem - self.mem_alloc_units
+    }
+
+    /// Aggregate free GPU units (upper bound per node).
+    pub fn gpu_free_units(&self) -> f64 {
+        self.total_gpus as f64 - self.gpu_alloc_units
+    }
+
+    /// Number of nodes carrying GPUs of `model` (static index).
+    pub fn nodes_with_model(&self, model: GpuModel) -> usize {
+        self.nodes_per_model[model.index()]
+    }
+
+    /// Number of MIG nodes of the given partition lattice (static index).
+    pub fn nodes_with_lattice(&self, lattice: MigLattice) -> usize {
+        self.nodes_per_lattice[lattice.index()]
+    }
+
+    /// Number of nodes carrying the `(key, value)` label (static index;
+    /// allocation-free lookup).
+    pub fn nodes_with_label(&self, key: &str, value: &str) -> usize {
+        self.label_counts
+            .get(key)
+            .and_then(|values| values.get(value))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Cluster-wide resident task count of a constraint class.
+    pub fn class_resident(&self, key: &str) -> u32 {
+        self.class_counts.get(key).copied().unwrap_or(0)
+    }
+
     /// Fraction of GPU capacity allocated.
     pub fn gpu_utilization(&self) -> f64 {
         if self.total_gpus == 0 {
@@ -75,7 +174,11 @@ impl Datacenter {
         self.nodes[node_id].allocate(task, placement);
         self.gpu_alloc_units += task.gpu.units();
         self.cpu_alloc_units += task.cpu;
+        self.mem_alloc_units += task.mem;
         self.n_tasks += 1;
+        if let Some(key) = task.constraints.as_deref().and_then(|c| c.class_key.as_ref()) {
+            class_count_add(&mut self.class_counts, key);
+        }
     }
 
     /// Release `task` from `node_id`.
@@ -83,7 +186,11 @@ impl Datacenter {
         self.nodes[node_id].deallocate(task, placement);
         self.gpu_alloc_units = (self.gpu_alloc_units - task.gpu.units()).max(0.0);
         self.cpu_alloc_units = (self.cpu_alloc_units - task.cpu).max(0.0);
+        self.mem_alloc_units = (self.mem_alloc_units - task.mem).max(0.0);
         self.n_tasks = self.n_tasks.saturating_sub(1);
+        if let Some(key) = task.constraints.as_deref().and_then(|c| c.class_key.as_ref()) {
+            class_count_remove(&mut self.class_counts, key);
+        }
     }
 
     /// Number of active (non-empty) nodes.
@@ -141,6 +248,33 @@ mod tests {
         assert!((gpu - dc.gpu_allocated_units()).abs() < 1e-9);
         assert!((cpu - dc.cpu_allocated_units()).abs() < 1e-9);
         assert_eq!(dc.n_tasks, 1);
+    }
+
+    #[test]
+    fn prefilter_indexes_track_state() {
+        use crate::tasks::TaskConstraints;
+        let mut dc = ClusterSpec::tiny(2, 4, 1).build();
+        // Static indexes: tiny() builds G2 GPU nodes + CPU-only nodes.
+        assert_eq!(dc.nodes_with_model(GpuModel::G2), 2);
+        assert_eq!(dc.nodes_with_model(GpuModel::T4), 0);
+        assert_eq!(dc.nodes_with_lattice(crate::cluster::mig::MigLattice::A100), 0);
+        assert_eq!(dc.nodes_with_label("zone", "z0"), 0);
+        // Aggregate free capacity tracks allocations (incl. memory).
+        let free_cpu0 = dc.cpu_free_total();
+        let free_mem0 = dc.mem_free_total();
+        let c = TaskConstraints {
+            class_key: Some("tenant-a".to_string()),
+            ..Default::default()
+        };
+        let t = Task::new(1, 4.0, 1024.0, GpuDemand::Frac(0.5)).with_constraints(c);
+        dc.allocate(&t, 0, &Placement::Shared { gpu: 0 });
+        assert!((dc.cpu_free_total() - (free_cpu0 - 4.0)).abs() < 1e-9);
+        assert!((dc.mem_free_total() - (free_mem0 - 1024.0)).abs() < 1e-9);
+        assert_eq!(dc.class_resident("tenant-a"), 1);
+        assert_eq!(dc.class_resident("tenant-b"), 0);
+        dc.deallocate(&t, 0, &Placement::Shared { gpu: 0 });
+        assert_eq!(dc.class_resident("tenant-a"), 0);
+        assert!((dc.mem_free_total() - free_mem0).abs() < 1e-9);
     }
 
     #[test]

@@ -26,12 +26,20 @@ pub struct NodePool {
     /// MIG-partition the GPUs (slice-granular allocation; see
     /// [`crate::cluster::mig`]).
     pub mig: bool,
+    /// Scheduling labels stamped on every node of the pool (matched by
+    /// the `labels` filter plugin against task node-selectors).
+    pub labels: Vec<(String, String)>,
 }
 
 /// Declarative cluster description; `build()` materializes nodes.
 #[derive(Clone, Debug, Default)]
 pub struct ClusterSpec {
     pub pools: Vec<NodePool>,
+    /// When > 0, `build()` additionally stamps a round-robin
+    /// `zone = z<id % zones>` label on every node (cheap multi-zone
+    /// topology for node-selector experiments; see
+    /// [`ClusterSpec::with_zones`]).
+    pub zones: usize,
 }
 
 impl ClusterSpec {
@@ -60,8 +68,10 @@ impl ClusterSpec {
             gpu_model: model,
             gpus_per_node: gpn,
             mig: false,
+            labels: Vec::new(),
         };
         ClusterSpec {
+            zones: 0,
             pools: vec![
                 p(24, 64.0, 262_144.0, Some(V100M16), 8),
                 p(1, 64.0, 262_144.0, Some(V100M16), 3),
@@ -95,6 +105,7 @@ impl ClusterSpec {
     /// A tiny homogeneous cluster for unit tests.
     pub fn tiny(n_gpu_nodes: usize, gpus_per_node: usize, n_cpu_nodes: usize) -> ClusterSpec {
         ClusterSpec {
+            zones: 0,
             pools: vec![
                 NodePool {
                     count: n_gpu_nodes,
@@ -103,6 +114,7 @@ impl ClusterSpec {
                     gpu_model: Some(GpuModel::G2),
                     gpus_per_node,
                     mig: false,
+                    labels: Vec::new(),
                 },
                 NodePool {
                     count: n_cpu_nodes,
@@ -111,9 +123,17 @@ impl ClusterSpec {
                     gpu_model: None,
                     gpus_per_node: 0,
                     mig: false,
+                    labels: Vec::new(),
                 },
             ],
         }
+    }
+
+    /// Stamp round-robin `zone = z<i>` labels on every built node (the
+    /// node-selector topology knob; see [`crate::sched::filter`]).
+    pub fn with_zones(mut self, zones: usize) -> ClusterSpec {
+        self.zones = zones;
+        self
     }
 
     /// A MIG-partitioned cluster: `n_mig_nodes` A100-class nodes (the
@@ -126,6 +146,7 @@ impl ClusterSpec {
     ) -> ClusterSpec {
         assert!(gpus_per_node <= crate::frag::MAX_GPUS);
         ClusterSpec {
+            zones: 0,
             pools: vec![
                 NodePool {
                     count: n_mig_nodes,
@@ -134,6 +155,7 @@ impl ClusterSpec {
                     gpu_model: Some(GpuModel::G3),
                     gpus_per_node,
                     mig: true,
+                    labels: Vec::new(),
                 },
                 NodePool {
                     count: n_cpu_nodes,
@@ -142,6 +164,7 @@ impl ClusterSpec {
                     gpu_model: None,
                     gpus_per_node: 0,
                     mig: false,
+                    labels: Vec::new(),
                 },
             ],
         }
@@ -161,6 +184,7 @@ impl ClusterSpec {
     ) -> ClusterSpec {
         assert!(gpus_per_node <= crate::frag::MAX_GPUS);
         ClusterSpec {
+            zones: 0,
             pools: vec![
                 NodePool {
                     count: n_a100_nodes,
@@ -169,6 +193,7 @@ impl ClusterSpec {
                     gpu_model: Some(GpuModel::G3),
                     gpus_per_node,
                     mig: true,
+                    labels: Vec::new(),
                 },
                 NodePool {
                     count: n_a30_nodes,
@@ -177,6 +202,7 @@ impl ClusterSpec {
                     gpu_model: Some(GpuModel::A30),
                     gpus_per_node,
                     mig: true,
+                    labels: Vec::new(),
                 },
                 NodePool {
                     count: n_cpu_nodes,
@@ -185,6 +211,7 @@ impl ClusterSpec {
                     gpu_model: None,
                     gpus_per_node: 0,
                     mig: false,
+                    labels: Vec::new(),
                 },
             ],
         }
@@ -237,6 +264,10 @@ impl ClusterSpec {
                 );
                 if pool.mig {
                     node.enable_mig();
+                }
+                node.labels = pool.labels.clone();
+                if self.zones > 0 {
+                    node.labels.push(("zone".to_string(), format!("z{}", id % self.zones)));
                 }
                 nodes.push(node);
             }
@@ -315,6 +346,22 @@ mod tests {
         let dc = ClusterSpec::tiny(2, 4, 1).build();
         assert_eq!(dc.nodes.len(), 3);
         assert_eq!(dc.total_gpus(), 8);
+    }
+
+    #[test]
+    fn zone_labels_round_robin() {
+        let dc = ClusterSpec::tiny(4, 2, 0).with_zones(2).build();
+        assert!(dc.nodes[0].has_label("zone", "z0"));
+        assert!(dc.nodes[1].has_label("zone", "z1"));
+        assert!(dc.nodes[2].has_label("zone", "z0"));
+        assert_eq!(dc.nodes_with_label("zone", "z0"), 2);
+        assert_eq!(dc.nodes_with_label("zone", "z1"), 2);
+        assert_eq!(dc.nodes_with_label("zone", "z9"), 0);
+        // Pool labels propagate too.
+        let mut spec = ClusterSpec::tiny(1, 2, 0);
+        spec.pools[0].labels.push(("tenant".to_string(), "acme".to_string()));
+        let dc = spec.build();
+        assert!(dc.nodes[0].has_label("tenant", "acme"));
     }
 
     #[test]

@@ -12,6 +12,28 @@ use crate::tasks::{GpuDemand, Task, NUM_BUCKETS};
 /// to make a feasible placement infeasible).
 pub const EPS: f64 = 1e-9;
 
+/// Shared class-count maintenance for the affinity indexes: the
+/// node-level store ([`Node::class_counts`]) and the cluster-wide one
+/// (`Datacenter`) follow the same discipline — saturating decrement,
+/// drained keys removed so emptiness checks and iteration stay clean.
+pub(crate) fn class_count_add(map: &mut std::collections::HashMap<String, u32>, key: &str) {
+    *map.entry(key.to_string()).or_insert(0) += 1;
+}
+
+/// See [`class_count_add`].
+pub(crate) fn class_count_remove(map: &mut std::collections::HashMap<String, u32>, key: &str) {
+    let drained = match map.get_mut(key) {
+        Some(n) => {
+            *n = n.saturating_sub(1);
+            *n == 0
+        }
+        None => false,
+    };
+    if drained {
+        map.remove(key);
+    }
+}
+
 /// Where a task lands inside a node.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Placement {
@@ -172,6 +194,16 @@ pub struct Node {
     pub bucket_mix: [u32; NUM_BUCKETS],
     /// Total resident tasks.
     pub n_tasks: u32,
+    /// Scheduling labels (zone / tenant / rack …), matched by the
+    /// `labels` filter plugin against task node-selectors. Assigned at
+    /// build time ([`crate::cluster::ClusterSpec`]); never mutated by
+    /// allocation, so cluster-level label indexes stay valid.
+    pub labels: Vec<(String, String)>,
+    /// Resident task count per constraint class key (see
+    /// [`crate::tasks::TaskConstraints::class_key`]) — the state the
+    /// `affinity` filter plugin reads. Maintained by
+    /// [`Node::allocate`] / [`Node::deallocate`].
+    pub class_counts: std::collections::HashMap<String, u32>,
 }
 
 impl Node {
@@ -197,7 +229,19 @@ impl Node {
             mig: None,
             bucket_mix: [0; NUM_BUCKETS],
             n_tasks: 0,
+            labels: Vec::new(),
+            class_counts: std::collections::HashMap::new(),
         }
+    }
+
+    /// True when the node carries the `(key, value)` label.
+    pub fn has_label(&self, key: &str, value: &str) -> bool {
+        self.labels.iter().any(|(k, v)| k == key && v == value)
+    }
+
+    /// Resident tasks of the given constraint class.
+    pub fn class_count(&self, key: &str) -> u32 {
+        self.class_counts.get(key).copied().unwrap_or(0)
     }
 
     /// Turn the (empty) node's GPUs into MIG-partitioned devices using
@@ -325,6 +369,9 @@ impl Node {
         }
         self.bucket_mix[task.gpu.bucket()] += 1;
         self.n_tasks += 1;
+        if let Some(key) = task.constraints.as_deref().and_then(|c| c.class_key.as_ref()) {
+            class_count_add(&mut self.class_counts, key);
+        }
     }
 
     /// Release an allocation made with the same (task, placement) pair.
@@ -360,6 +407,9 @@ impl Node {
         self.bucket_mix[task.gpu.bucket()] =
             self.bucket_mix[task.gpu.bucket()].saturating_sub(1);
         self.n_tasks = self.n_tasks.saturating_sub(1);
+        if let Some(key) = task.constraints.as_deref().and_then(|c| c.class_key.as_ref()) {
+            class_count_remove(&mut self.class_counts, key);
+        }
     }
 
     /// A zero-copy hypothetical view of this node after assigning
@@ -683,6 +733,30 @@ mod tests {
         n.deallocate(&t2, &Placement::MigSlice { gpu: 0, start: 4 });
         assert_eq!(n.mig.as_ref().unwrap()[0].mask, 0);
         assert_eq!(n.gpu_alloc[0], 0.0);
+    }
+
+    #[test]
+    fn labels_and_class_counts_track_residency() {
+        use crate::tasks::TaskConstraints;
+        let mut n = node8();
+        n.labels.push(("zone".to_string(), "z1".to_string()));
+        assert!(n.has_label("zone", "z1"));
+        assert!(!n.has_label("zone", "z2"));
+        assert!(!n.has_label("tenant", "z1"));
+        let c = TaskConstraints {
+            class_key: Some("tenant-a".to_string()),
+            ..Default::default()
+        };
+        let t = Task::new(1, 1.0, 0.0, GpuDemand::Frac(0.5)).with_constraints(c);
+        n.allocate(&t, &Placement::Shared { gpu: 0 });
+        assert_eq!(n.class_count("tenant-a"), 1);
+        n.allocate(&t, &Placement::Shared { gpu: 1 });
+        assert_eq!(n.class_count("tenant-a"), 2);
+        n.deallocate(&t, &Placement::Shared { gpu: 1 });
+        assert_eq!(n.class_count("tenant-a"), 1);
+        n.deallocate(&t, &Placement::Shared { gpu: 0 });
+        assert_eq!(n.class_count("tenant-a"), 0);
+        assert!(n.class_counts.is_empty(), "drained keys are removed");
     }
 
     #[test]

@@ -150,7 +150,39 @@ fn task_from_json(v: &Json) -> Result<Task, String> {
         }
         None => None,
     };
-    Ok(Task { id, cpu, mem, gpu, gpu_model })
+    // Optional declarative constraints (see crate::tasks::TaskConstraints):
+    // "tenant" registers the task under that class key *verbatim*,
+    // "anti_affinity" rejects nodes hosting the named class (also
+    // verbatim, so {"tenant":"a"} and {"anti_affinity":"a"} refer to
+    // the same class), and "gpu_models" restricts placement to a model
+    // set.
+    let mut constraints = crate::tasks::TaskConstraints::default();
+    if let Some(tenant) = v.get("tenant").and_then(|x| x.as_str()) {
+        constraints.class_key = Some(tenant.to_string());
+    }
+    if let Some(Json::Arr(models)) = v.get("gpu_models") {
+        for m in models {
+            let name = m.as_str().ok_or("gpu_models entries must be strings")?;
+            constraints
+                .gpu_models
+                .push(crate::cluster::types::GpuModel::parse(name).ok_or("unknown gpu_models entry")?);
+        }
+    }
+    if let Some(anti) = v.get("anti_affinity").and_then(|x| x.as_str()) {
+        constraints.anti_affinity.push(anti.to_string());
+    }
+    Ok(Task {
+        id,
+        cpu,
+        mem,
+        gpu,
+        gpu_model,
+        constraints: if constraints.is_unconstrained() {
+            None
+        } else {
+            Some(Box::new(constraints))
+        },
+    })
 }
 
 /// Handle one request line; returns (response, shutdown?).

@@ -69,6 +69,10 @@ pub const FIG2_ALPHAS: [f64; 13] =
 pub const MIG_HET_A30_SHARE: f64 = 0.4;
 pub const MIG_HET_FRAG_THRESHOLD: f64 = 0.5;
 
+/// `ext-filters` knob: the constrained-task shares swept over the
+/// `constrained-<pct>` trace family.
+pub const EXT_FILTERS_PCTS: [f64; 3] = [0.0, 0.25, 0.5];
+
 /// The three selected combinations (§VI-B) + the four competitors used
 /// in Figs. 3–10.
 pub fn comparison_policies() -> Vec<PolicyKind> {
@@ -196,12 +200,14 @@ impl Harness {
             "ext-mig" => self.ext_mig(),
             "ext-mig-het" => self.ext_mig_het(),
             "ext-profiles" => self.ext_profiles(),
+            "ext-filters" => self.ext_filters(),
             "ablation-tiebreak" => self.ablation_tiebreak(),
             "all" => {
                 let ids = [
                     "table1", "table2", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
                     "fig7", "fig8", "fig9", "fig10", "ext-dynalpha", "ext-steady",
-                    "ext-mig", "ext-mig-het", "ext-profiles", "ablation-tiebreak",
+                    "ext-mig", "ext-mig-het", "ext-profiles", "ext-filters",
+                    "ablation-tiebreak",
                 ];
                 let mut out = Vec::new();
                 for id in ids {
@@ -295,6 +301,95 @@ impl Harness {
         }
         w.flush()?;
         Ok(vec![path])
+    }
+
+    /// Extension: the `filter` extension point under constraint
+    /// pressure. Runs PWR⊕FGD (α = 0.1) over the `constrained-<pct>`
+    /// trace family (0 / 25 / 50% of GPU tasks carrying tenant
+    /// anti-affinity, GPU-model-set or spread constraints — see
+    /// [`crate::trace::ConstraintGen`]) through the declarative filter
+    /// pipeline, emitting EOPC, fragmentation and GRAR series per
+    /// constrained share plus a counter table with the
+    /// unschedulable-due-to-constraints attribution. The 0% column is
+    /// the legacy-equivalence sanity anchor: it must track the Default
+    /// trace's behavior.
+    fn ext_filters(&mut self) -> Result<Vec<String>> {
+        use crate::sim::{run_repetitions, RepeatConfig};
+        let policy = PolicyKind::PwrFgd { alpha: 0.1 };
+        let traces: Vec<TraceSpec> =
+            EXT_FILTERS_PCTS.iter().map(|&p| TraceSpec::constrained(p)).collect();
+        let rcfg = RepeatConfig {
+            reps: self.cfg.reps,
+            base_seed: self.cfg.seed,
+            target_ratio: self.cfg.target,
+            record_frag: true,
+            ..Default::default()
+        };
+        let mut headers = vec!["x".to_string()];
+        headers.extend(traces.iter().map(|t| t.name.clone()));
+        let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut eopc_cols: Vec<Vec<f64>> = Vec::new();
+        let mut frag_cols: Vec<Vec<f64>> = Vec::new();
+        let mut grar_cols: Vec<Vec<f64>> = Vec::new();
+        let mut counter_rows = Vec::new();
+        for trace in &traces {
+            eprintln!(
+                "[experiment] running {} / {} ({} reps, {} nodes)…",
+                trace.name,
+                policy.label(),
+                rcfg.reps,
+                self.cluster.total_nodes()
+            );
+            let runs = run_repetitions(&self.cluster, trace, policy, &rcfg);
+            let n = runs.len().max(1) as f64;
+            let mean_of = |f: &dyn Fn(&crate::sim::RunResult) -> f64| -> f64 {
+                runs.iter().map(f).sum::<f64>() / n
+            };
+            counter_rows.push((
+                trace.name.clone(),
+                mean_of(&|r| r.submitted as f64),
+                mean_of(&|r| r.failed as f64),
+                mean_of(&|r| r.constraint_unschedulable as f64),
+            ));
+            let series: Vec<_> = runs.into_iter().map(|r| r.series).collect();
+            eopc_cols.push(average_on_grid(&series, Column::Eopc, &self.grid));
+            frag_cols.push(average_on_grid(&series, Column::Frag, &self.grid));
+            grar_cols.push(average_on_grid(&series, Column::Grar, &self.grid));
+        }
+        let mut out = Vec::new();
+        for (name, cols, scale) in [
+            ("ext_filters_eopc_kw.csv", &eopc_cols, 1e-3),
+            ("ext_filters_frag_gpus.csv", &frag_cols, 1.0),
+            ("ext_filters_grar.csv", &grar_cols, 1.0),
+        ] {
+            let path = self.out_path(name);
+            let mut w = CsvWriter::create(&path, &header_refs)?;
+            for (i, &x) in self.grid.iter().enumerate() {
+                let mut row = vec![x];
+                for c in cols.iter() {
+                    row.push(c[i] * scale);
+                }
+                w.row(&row)?;
+            }
+            w.flush()?;
+            out.push(path);
+        }
+        let path = self.out_path("ext_filters_counters.csv");
+        let mut w = CsvWriter::create(
+            &path,
+            &["trace", "submitted", "failed", "constraint_unschedulable"],
+        )?;
+        for (name, submitted, failed, constrained) in &counter_rows {
+            w.row_str(&[
+                name.clone(),
+                format!("{submitted:.1}"),
+                format!("{failed:.1}"),
+                format!("{constrained:.1}"),
+            ])?;
+        }
+        w.flush()?;
+        out.push(path);
+        Ok(out)
     }
 
     /// Extension: steady-state churn (arrivals + departures, Poisson/

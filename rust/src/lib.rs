@@ -30,18 +30,23 @@
 //! Scheduling is organized as **profiles over named extension points**
 //! (`docs/scheduler.md`): a [`sched::SchedulerProfile`] names entries
 //! in string-keyed registries for `score` (N weighted plugins), `bind`,
-//! `weightModulator` (load-adaptive α generalized) and
-//! `postPlace`/`postFail` hooks (the MIG repartitioner), with a textual
+//! `weightModulator` (load-adaptive α generalized; per-lattice α),
+//! `postPlace`/`postFail` hooks (the MIG repartitioner) and `filter`
+//! — declarative feasibility ([`sched::filter`]): the paper's Filter
+//! phase decomposed into plugins plus [`tasks::TaskConstraints`]
+//! (GPU-model sets, node selectors, tenant affinity/anti-affinity,
+//! spread caps) with a k8s-style PreFilter early-exit — with a textual
 //! DSL behind `--policy` —
-//! `score(pwr=0.5,fgd=0.3,dotprod=0.2)|bind(weighted:0.5)|mod(loadalpha:0.9:0.0)` —
+//! `score(pwr=0.5,fgd=0.3,dotprod=0.2)|bind(weighted:0.5)|mod(loadalpha:0.9:0.0)|filter(resources,gpumodel,labels:zone=z0)` —
 //! and every legacy policy name kept as sugar with a byte-identical
-//! label (`ext-profiles` sweeps composite profiles against PWR⊕FGD).
+//! label (`ext-profiles` sweeps composite profiles against PWR⊕FGD;
+//! `ext-filters` sweeps PWR⊕FGD under 0/25/50% constrained traces).
 //!
 //! ## Layer map
 //! * L3 (this crate): coordinator, simulator, the profile-driven
 //!   scheduling framework ([`sched::framework`], [`sched::profile`],
-//!   `docs/scheduler.md`) with its policy zoo (incl. the MIG family +
-//!   repartitioner hook), experiments.
+//!   [`sched::filter`], `docs/scheduler.md`) with its policy zoo
+//!   (incl. the MIG family + repartitioner hook), experiments.
 //! * L2 (`python/compile/model.py`): the scoring graph, lowered once to
 //!   `artifacts/*.hlo.txt`.
 //! * L1 (`python/compile/kernels/score.py`): the Pallas scoring kernel.

@@ -2,11 +2,13 @@
 //!
 //! ```text
 //! repro simulate   --policy pwrfgd:0.1 --trace default --seed 42 [--scale 0.25] [--target 1.02]
-//! repro experiment <table1|table2|fig1..fig10|ext-mig|ext-mig-het|ext-profiles|all> [--reps 10] [--scale 1.0] [--out results]
+//! repro experiment <table1|table2|fig1..fig10|ext-mig|ext-mig-het|ext-profiles|ext-filters|all> [--reps 10] [--scale 1.0] [--out results]
 //! repro ext-mig    [--reps 10] [--scale 1.0] [--out results]   (MIG subsystem end-to-end)
 //! repro ext-mig-het [--reps 10] [--scale 1.0] [--out results]  (mixed A100+A30 MIG fleet)
 //! repro ext-profiles [--reps 10] [--scale 1.0] [--out results] (composite profile DSL sweep)
-//! repro trace      <default|multi-gpu-20|sharing-gpu-100|mig-30|...> [--seed 42]
+//! repro ext-filters [--reps 10] [--scale 1.0] [--out results]  (constraint-aware filter sweep)
+//! repro list-plugins                                           (every registry key + description)
+//! repro trace      <default|multi-gpu-20|sharing-gpu-100|constrained-50|mig-30|...> [--seed 42]
 //! repro inventory
 //! repro serve      [--addr 127.0.0.1:7077] [--policy pwrfgd:0.1]
 //! repro scorer-check [--artifacts artifacts] [--tasks 200]   (XLA vs native parity)
@@ -17,7 +19,7 @@
 //! (docs/scheduler.md):
 //!
 //! ```text
-//! --policy "score(pwr=0.5,fgd=0.3,dotprod=0.2)|bind(weighted:0.5)|mod(loadalpha:0.9:0.0)"
+//! --policy "score(pwr=0.5,fgd=0.3,dotprod=0.2)|bind(weighted:0.5)|mod(loadalpha:0.9:0.0)|filter(resources,gpumodel,labels:zone=z0)"
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -44,6 +46,8 @@ fn main() -> Result<()> {
         Some("ext-mig") => cmd_experiment(&args, Some("ext-mig")),
         Some("ext-mig-het") => cmd_experiment(&args, Some("ext-mig-het")),
         Some("ext-profiles") => cmd_experiment(&args, Some("ext-profiles")),
+        Some("ext-filters") => cmd_experiment(&args, Some("ext-filters")),
+        Some("list-plugins") => cmd_list_plugins(),
         Some("trace") => cmd_trace(&args),
         Some("inventory") => cmd_inventory(),
         Some("serve") => cmd_serve(&args),
@@ -51,12 +55,23 @@ fn main() -> Result<()> {
         Some("plot") => cmd_plot(&args),
         _ => {
             eprintln!(
-                "usage: repro <simulate|experiment|ext-mig|ext-mig-het|ext-profiles|trace|inventory|serve|scorer-check|plot> [options]\n\
+                "usage: repro <simulate|experiment|ext-mig|ext-mig-het|ext-profiles|ext-filters|list-plugins|trace|inventory|serve|scorer-check|plot> [options]\n\
                  see rust/src/main.rs header for details"
             );
             Ok(())
         }
     }
+}
+
+/// Print every registered extension-point key (score / bind / mod /
+/// hook / filter) with its one-line description — the discoverability
+/// companion of the `--policy` DSL (docs/scheduler.md).
+fn cmd_list_plugins() -> Result<()> {
+    println!("{:<8} {:<16} description", "point", "key");
+    for (kind, key, desc) in repro::sched::profile::registry_catalog() {
+        println!("{kind:<8} {key:<16} {desc}");
+    }
+    Ok(())
 }
 
 /// Render experiment CSVs to SVG. With no positional args, plots every

@@ -1,0 +1,486 @@
+//! The `filter` extension point: declarative feasibility.
+//!
+//! Pre-redesign, the paper's Filter phase (Algorithm 1 line 4 — Cond.
+//! 1–3 plus the model constraint) was a hard-coded `node.can_fit(task)`
+//! call inside the scheduler loop, and a task could express exactly one
+//! constraint (`Task::gpu_model`). This module turns feasibility into a
+//! first-class plugin surface mirroring the `score`/`bind`/`mod`/`hook`
+//! registries of [`crate::sched::profile`]:
+//!
+//! * [`FilterPlugin`] — per-node feasibility plus an optional
+//!   **PreFilter** pass: a cheap cluster-wide infeasibility check
+//!   (aggregate free capacity, per-constraint candidate counts from
+//!   [`Datacenter`]'s static indexes) that lets hopeless tasks skip the
+//!   O(nodes) scoring loop entirely, exactly like the k8s PreFilter
+//!   extension point.
+//! * Built-ins: the legacy `can_fit` lowers to the conjunction
+//!   `resources` ∧ `gpumodel` ∧ `miglattice` (placement-equivalent on
+//!   constraint-free tasks — pinned by `rust/tests/filter_equivalence.rs`),
+//!   and the declarative [`crate::tasks::TaskConstraints`] vocabulary is
+//!   enforced by `labels` (node selectors) and `affinity` (class-keyed
+//!   affinity / anti-affinity / per-node spread caps).
+//! * Profiles select chains via the `filter(...)` DSL section; the
+//!   default chain ([`default_filter_chain`]) runs all five built-ins,
+//!   which is a no-op beyond `can_fit` for unconstrained tasks.
+//!
+//! A plugin reporting [`FilterPlugin::constrains`] for a task enforces
+//! one of that task's declarative constraints rather than a resource
+//! condition; the scheduler uses this per-cause signal to count tasks
+//! that were *unschedulable due to constraints* — some node had the
+//! resources but the task's own constraints forbade it (surfaced by
+//! the `ext-filters` experiment).
+
+use crate::cluster::mig::first_fit_start;
+use crate::cluster::node::{Node, ResourceView, EPS};
+use crate::cluster::Datacenter;
+use crate::tasks::{GpuDemand, Task};
+
+/// Context handed to filter plugins (cluster-wide state + indexes).
+pub struct FilterCtx<'a> {
+    pub dc: &'a Datacenter,
+}
+
+/// A feasibility plugin. The scheduler runs every plugin's
+/// [`FilterPlugin::pre_filter`] once per task and, when all pass, its
+/// [`FilterPlugin::feasible`] once per node; a node is a scoring
+/// candidate iff every plugin in the chain accepts it.
+pub trait FilterPlugin: Send {
+    fn name(&self) -> &'static str;
+
+    /// True when this plugin enforces a *declarative constraint of this
+    /// task* (`TaskConstraints`: model sets, node selectors, affinity,
+    /// spread caps) rather than a resource condition (Cond. 1–3), a
+    /// legacy `Task::gpu_model` pin, or profile-level policy like a
+    /// static `labels:` selector. Per-task so attribution is per-cause:
+    /// it drives the scheduler's unschedulable-due-to-constraints
+    /// counter, which must not count tasks blocked by anything other
+    /// than their own declarative constraints.
+    fn constrains(&self, _task: &Task) -> bool {
+        false
+    }
+
+    /// Cheap cluster-wide pre-check (k8s PreFilter): return `false`
+    /// only when **no node can possibly pass** [`Self::feasible`] for
+    /// this task — the scheduler then fails the task without touching
+    /// the node loop. Must be conservative: a `false` here and a
+    /// feasible node somewhere would change placements.
+    fn pre_filter(&self, _ctx: &FilterCtx, _task: &Task) -> bool {
+        true
+    }
+
+    /// Per-node feasibility.
+    fn feasible(&self, ctx: &FilterCtx, node: &Node, task: &Task) -> bool;
+}
+
+/// Cond. 1 (CPU), Cond. 2 (MEM) and Cond. 3 (GPU quantity/shape) —
+/// everything of the legacy `can_fit` except the model constraint,
+/// which [`GpuModelFilter`] owns. PreFilter: aggregate free capacity
+/// (an upper bound on any single node's free capacity, so the check is
+/// conservative by construction).
+pub struct ResourcesFilter;
+
+impl FilterPlugin for ResourcesFilter {
+    fn name(&self) -> &'static str {
+        "resources"
+    }
+
+    fn pre_filter(&self, ctx: &FilterCtx, task: &Task) -> bool {
+        if task.cpu > ctx.dc.cpu_free_total() + EPS {
+            return false;
+        }
+        if task.mem > ctx.dc.mem_free_total() + EPS {
+            return false;
+        }
+        task.gpu.units() <= ctx.dc.gpu_free_units() + EPS
+    }
+
+    fn feasible(&self, _ctx: &FilterCtx, node: &Node, task: &Task) -> bool {
+        if task.cpu > node.cpu_free() + EPS {
+            return false; // Cond. 1
+        }
+        if task.mem > node.mem_free() + EPS {
+            return false; // Cond. 2
+        }
+        match task.gpu {
+            GpuDemand::Zero => true,
+            _ if node.gpu_model.is_none() => false,
+            GpuDemand::Frac(d) => !node.is_mig() && node.largest_free() >= d - EPS,
+            GpuDemand::Whole(k) => !node.is_mig() && node.gpus_fully_free() >= k as usize,
+            GpuDemand::Mig(p) => {
+                node.mig_lattice() == Some(p.lattice())
+                    && (0..node.n_gpus()).any(|g| {
+                        node.mig_mask_of(g).is_some_and(|m| first_fit_start(m, p).is_some())
+                    })
+            }
+        }
+    }
+}
+
+/// The GPU-model constraint: the legacy single-model pin
+/// (`Task::gpu_model`) plus the declarative model *set*
+/// (`TaskConstraints::gpu_models`). PreFilter: the cluster's static
+/// per-model node counts.
+pub struct GpuModelFilter;
+
+impl FilterPlugin for GpuModelFilter {
+    fn name(&self) -> &'static str {
+        "gpumodel"
+    }
+
+    fn constrains(&self, task: &Task) -> bool {
+        // Only the declarative model *set* counts as a constraint of
+        // the task; the legacy pin is classed with the resource
+        // conditions for attribution purposes.
+        task.gpu.is_gpu()
+            && task.constraints.as_deref().is_some_and(|c| !c.gpu_models.is_empty())
+    }
+
+    fn pre_filter(&self, ctx: &FilterCtx, task: &Task) -> bool {
+        if !task.gpu.is_gpu() {
+            return true;
+        }
+        if let Some(m) = task.gpu_model {
+            if ctx.dc.nodes_with_model(m) == 0 {
+                return false;
+            }
+        }
+        if let Some(c) = task.constraints.as_deref() {
+            if !c.gpu_models.is_empty()
+                && c.gpu_models.iter().all(|&m| ctx.dc.nodes_with_model(m) == 0)
+            {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn feasible(&self, _ctx: &FilterCtx, node: &Node, task: &Task) -> bool {
+        if !task.gpu.is_gpu() {
+            return true; // legacy semantics: CPU-only tasks ignore C_t^GPU
+        }
+        let Some(model) = node.gpu_model else { return false };
+        if let Some(required) = task.gpu_model {
+            if required != model {
+                return false;
+            }
+        }
+        if let Some(c) = task.constraints.as_deref() {
+            if !c.gpu_models.is_empty() && !c.gpu_models.contains(&model) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// MIG lattice compatibility: a slice demand only fits nodes partitioned
+/// with the profile's lattice. (Also enforced by [`ResourcesFilter`]'s
+/// quantity check; kept as a named plugin so custom chains can reason
+/// about lattice placement separately.) PreFilter: static per-lattice
+/// node counts.
+pub struct MigLatticeFilter;
+
+impl FilterPlugin for MigLatticeFilter {
+    fn name(&self) -> &'static str {
+        "miglattice"
+    }
+
+    fn pre_filter(&self, ctx: &FilterCtx, task: &Task) -> bool {
+        match task.gpu {
+            GpuDemand::Mig(p) => ctx.dc.nodes_with_lattice(p.lattice()) > 0,
+            _ => true,
+        }
+    }
+
+    fn feasible(&self, _ctx: &FilterCtx, node: &Node, task: &Task) -> bool {
+        match task.gpu {
+            GpuDemand::Mig(p) => node.mig_lattice() == Some(p.lattice()),
+            _ => true,
+        }
+    }
+}
+
+/// Node-label selection: the task's `node_selector` pairs plus an
+/// optional chain-level static `selector` (from `filter(labels:k=v)`)
+/// must all be present on the node. PreFilter: static per-label node
+/// counts.
+pub struct LabelsFilter {
+    /// Profile-level selector ANDed with every task's own selector
+    /// (scheduler-wide node restriction; empty = none).
+    pub selector: Vec<(String, String)>,
+}
+
+impl FilterPlugin for LabelsFilter {
+    fn name(&self) -> &'static str {
+        "labels"
+    }
+
+    fn constrains(&self, task: &Task) -> bool {
+        // The chain-level static selector is profile policy, not a task
+        // constraint — only the task's own node_selector attributes.
+        task.constraints.as_deref().is_some_and(|c| !c.node_selector.is_empty())
+    }
+
+    fn pre_filter(&self, ctx: &FilterCtx, task: &Task) -> bool {
+        let task_selector = task
+            .constraints
+            .as_deref()
+            .map(|c| c.node_selector.iter())
+            .into_iter()
+            .flatten();
+        self.selector
+            .iter()
+            .chain(task_selector)
+            .all(|(k, v)| ctx.dc.nodes_with_label(k, v) > 0)
+    }
+
+    fn feasible(&self, _ctx: &FilterCtx, node: &Node, task: &Task) -> bool {
+        if !self.selector.iter().all(|(k, v)| node.has_label(k, v)) {
+            return false;
+        }
+        match task.constraints.as_deref() {
+            Some(c) => c.node_selector.iter().all(|(k, v)| node.has_label(k, v)),
+            None => true,
+        }
+    }
+}
+
+/// Class-keyed inter-task rules: anti-affinity (reject nodes hosting
+/// listed classes — tenant isolation), affinity (require a node already
+/// hosting one of the listed classes) and the per-node spread cap on
+/// the task's own class. PreFilter: a `max_per_node` of 0 and affinity
+/// to classes with no resident task anywhere are both unsatisfiable.
+pub struct AffinityFilter;
+
+impl FilterPlugin for AffinityFilter {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+
+    fn constrains(&self, task: &Task) -> bool {
+        task.constraints.as_deref().is_some_and(|c| {
+            !c.anti_affinity.is_empty()
+                || !c.affinity.is_empty()
+                || (c.max_per_node.is_some() && c.class_key.is_some())
+        })
+    }
+
+    fn pre_filter(&self, ctx: &FilterCtx, task: &Task) -> bool {
+        let Some(c) = task.constraints.as_deref() else { return true };
+        // The spread cap only binds when the task names a class —
+        // `feasible` ignores it otherwise, and PreFilter must never be
+        // stricter than the per-node pass.
+        if c.max_per_node == Some(0) && c.class_key.is_some() {
+            return false;
+        }
+        c.affinity.is_empty() || c.affinity.iter().any(|k| ctx.dc.class_resident(k) > 0)
+    }
+
+    fn feasible(&self, _ctx: &FilterCtx, node: &Node, task: &Task) -> bool {
+        let Some(c) = task.constraints.as_deref() else { return true };
+        if c.anti_affinity.iter().any(|k| node.class_count(k) > 0) {
+            return false;
+        }
+        if !c.affinity.is_empty() && !c.affinity.iter().any(|k| node.class_count(k) > 0) {
+            return false;
+        }
+        if let (Some(max), Some(key)) = (c.max_per_node, c.class_key.as_ref()) {
+            if node.class_count(key) >= max {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// The default chain every profile gets unless it names an explicit
+/// `filter(...)` section: the `can_fit` decomposition plus the
+/// constraint plugins (no-ops for unconstrained tasks, so legacy
+/// placements are bit-identical).
+pub fn default_filter_chain() -> Vec<Box<dyn FilterPlugin>> {
+    vec![
+        Box::new(ResourcesFilter),
+        Box::new(GpuModelFilter),
+        Box::new(MigLatticeFilter),
+        Box::new(LabelsFilter { selector: Vec::new() }),
+        Box::new(AffinityFilter),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::mig::MigProfile;
+    use crate::cluster::types::GpuModel;
+    use crate::cluster::ClusterSpec;
+    use crate::tasks::TaskConstraints;
+
+    fn gpu_task(id: u64) -> Task {
+        Task::new(id, 2.0, 1024.0, GpuDemand::Whole(1))
+    }
+
+    /// The default chain's per-node verdict must equal `can_fit` for
+    /// every legacy (constraint-free / model-pinned) task shape.
+    #[test]
+    fn default_chain_equals_can_fit() {
+        let mut dc = ClusterSpec::tiny(2, 4, 1).build();
+        // Load node 0 partially so verdicts vary.
+        let filler = Task::new(90, 90.0, 0.0, GpuDemand::Frac(0.75));
+        dc.allocate(&filler, 0, &crate::cluster::node::Placement::Shared { gpu: 0 });
+        let chain = default_filter_chain();
+        let tasks = [
+            Task::new(0, 4.0, 1024.0, GpuDemand::Zero),
+            Task::new(1, 4.0, 1024.0, GpuDemand::Frac(0.5)),
+            Task::new(2, 4.0, 1024.0, GpuDemand::Whole(2)),
+            Task::new(3, 200.0, 0.0, GpuDemand::Zero),
+            Task::new(4, 4.0, 1024.0, GpuDemand::Mig(MigProfile::P2g)),
+            gpu_task(5).constrained(GpuModel::G2),
+            gpu_task(6).constrained(GpuModel::T4),
+        ];
+        let ctx = FilterCtx { dc: &dc };
+        for t in &tasks {
+            for node in &dc.nodes {
+                let chain_ok = chain.iter().all(|f| f.feasible(&ctx, node, t));
+                assert_eq!(
+                    chain_ok,
+                    node.can_fit(t),
+                    "task {} on node {} diverged from can_fit",
+                    t.id,
+                    node.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefilter_rejects_cluster_wide_infeasible() {
+        let dc = ClusterSpec::tiny(2, 4, 0).build();
+        let ctx = FilterCtx { dc: &dc };
+        // More CPU than the whole cluster has.
+        assert!(!ResourcesFilter.pre_filter(&ctx, &Task::new(0, 10_000.0, 0.0, GpuDemand::Zero)));
+        // More GPUs than installed.
+        assert!(!ResourcesFilter.pre_filter(&ctx, &Task::new(1, 1.0, 0.0, GpuDemand::Whole(9))));
+        // Feasible demand passes.
+        assert!(ResourcesFilter.pre_filter(&ctx, &gpu_task(2)));
+        // Model with zero nodes (single pin and full set).
+        assert!(!GpuModelFilter.pre_filter(&ctx, &gpu_task(3).constrained(GpuModel::T4)));
+        let set = TaskConstraints {
+            gpu_models: vec![GpuModel::T4, GpuModel::P100],
+            ..Default::default()
+        };
+        assert!(!GpuModelFilter.pre_filter(&ctx, &gpu_task(4).with_constraints(set)));
+        let ok_set = TaskConstraints {
+            gpu_models: vec![GpuModel::T4, GpuModel::G2],
+            ..Default::default()
+        };
+        assert!(GpuModelFilter.pre_filter(&ctx, &gpu_task(5).with_constraints(ok_set)));
+        // No MIG nodes at all.
+        assert!(!MigLatticeFilter
+            .pre_filter(&ctx, &Task::new(6, 1.0, 0.0, GpuDemand::Mig(MigProfile::P1g))));
+        // Selector nobody carries.
+        let sel = TaskConstraints {
+            node_selector: vec![("zone".to_string(), "z9".to_string())],
+            ..Default::default()
+        };
+        let labels = LabelsFilter { selector: Vec::new() };
+        assert!(!labels.pre_filter(&ctx, &gpu_task(7).with_constraints(sel)));
+        // Spread cap of zero / affinity to an absent class.
+        let zero = TaskConstraints {
+            class_key: Some("a".to_string()),
+            max_per_node: Some(0),
+            ..Default::default()
+        };
+        assert!(!AffinityFilter.pre_filter(&ctx, &gpu_task(8).with_constraints(zero)));
+        let aff = TaskConstraints {
+            affinity: vec!["nobody".to_string()],
+            ..Default::default()
+        };
+        assert!(!AffinityFilter.pre_filter(&ctx, &gpu_task(9).with_constraints(aff)));
+    }
+
+    #[test]
+    fn model_set_accepts_any_listed_model() {
+        let dc = ClusterSpec::tiny(1, 4, 0).build(); // G2 nodes
+        let ctx = FilterCtx { dc: &dc };
+        let node = &dc.nodes[0];
+        let yes = TaskConstraints {
+            gpu_models: vec![GpuModel::T4, GpuModel::G2],
+            ..Default::default()
+        };
+        let no = TaskConstraints {
+            gpu_models: vec![GpuModel::T4, GpuModel::P100],
+            ..Default::default()
+        };
+        assert!(GpuModelFilter.feasible(&ctx, node, &gpu_task(0).with_constraints(yes)));
+        assert!(!GpuModelFilter.feasible(&ctx, node, &gpu_task(1).with_constraints(no)));
+        // CPU-only tasks ignore the model set entirely.
+        let cpu = Task::new(2, 1.0, 0.0, GpuDemand::Zero).with_constraints(TaskConstraints {
+            gpu_models: vec![GpuModel::T4],
+            ..Default::default()
+        });
+        assert!(GpuModelFilter.feasible(&ctx, node, &cpu));
+    }
+
+    #[test]
+    fn affinity_rules_read_class_counts() {
+        let mut dc = ClusterSpec::tiny(2, 4, 0).build();
+        let a = TaskConstraints {
+            class_key: Some("tenant-a".to_string()),
+            ..Default::default()
+        };
+        let resident = Task::new(0, 1.0, 0.0, GpuDemand::Frac(0.25)).with_constraints(a);
+        dc.allocate(&resident, 0, &crate::cluster::node::Placement::Shared { gpu: 0 });
+        let ctx = FilterCtx { dc: &dc };
+        // Anti-affinity to tenant-a: node 0 rejected, node 1 fine.
+        let anti = TaskConstraints {
+            class_key: Some("tenant-b".to_string()),
+            anti_affinity: vec!["tenant-a".to_string()],
+            ..Default::default()
+        };
+        let t = gpu_task(1).with_constraints(anti);
+        assert!(!AffinityFilter.feasible(&ctx, &dc.nodes[0], &t));
+        assert!(AffinityFilter.feasible(&ctx, &dc.nodes[1], &t));
+        // Affinity to tenant-a: only node 0 qualifies.
+        let aff = TaskConstraints {
+            affinity: vec!["tenant-a".to_string()],
+            ..Default::default()
+        };
+        let t = gpu_task(2).with_constraints(aff);
+        assert!(AffinityFilter.feasible(&ctx, &dc.nodes[0], &t));
+        assert!(!AffinityFilter.feasible(&ctx, &dc.nodes[1], &t));
+        assert!(AffinityFilter.pre_filter(&ctx, &t));
+        // Spread cap: tenant-a already has 1 resident on node 0.
+        let spread = TaskConstraints {
+            class_key: Some("tenant-a".to_string()),
+            max_per_node: Some(1),
+            ..Default::default()
+        };
+        let t = gpu_task(3).with_constraints(spread);
+        assert!(!AffinityFilter.feasible(&ctx, &dc.nodes[0], &t));
+        assert!(AffinityFilter.feasible(&ctx, &dc.nodes[1], &t));
+    }
+
+    #[test]
+    fn labels_filter_static_and_task_selectors() {
+        let dc = ClusterSpec::tiny(4, 2, 0).with_zones(2).build();
+        let ctx = FilterCtx { dc: &dc };
+        let plain = LabelsFilter { selector: Vec::new() };
+        let pinned = LabelsFilter {
+            selector: vec![("zone".to_string(), "z0".to_string())],
+        };
+        let free = gpu_task(0);
+        assert!(plain.feasible(&ctx, &dc.nodes[1], &free));
+        // Static selector restricts every task.
+        assert!(pinned.feasible(&ctx, &dc.nodes[0], &free));
+        assert!(!pinned.feasible(&ctx, &dc.nodes[1], &free));
+        // Task selector composes on top.
+        let z1 = TaskConstraints {
+            node_selector: vec![("zone".to_string(), "z1".to_string())],
+            ..Default::default()
+        };
+        let t = gpu_task(1).with_constraints(z1);
+        assert!(plain.feasible(&ctx, &dc.nodes[1], &t));
+        assert!(!plain.feasible(&ctx, &dc.nodes[0], &t));
+        assert!(plain.pre_filter(&ctx, &t));
+    }
+}

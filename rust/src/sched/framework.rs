@@ -3,11 +3,17 @@
 //! [`crate::sched::profile`] for the profile/DSL layer):
 //!
 //! Pipeline per arriving task:
-//! 1. **Filter** — drop nodes failing Cond. 1–3 or the model constraint
-//!    (the k8s filter plugin of Algorithm 1, line 4).
+//! 1. **PreFilter + Filter** (extension point) — every
+//!    [`FilterPlugin`](crate::sched::filter::FilterPlugin) in the
+//!    profile's chain first gets a cheap cluster-wide PreFilter veto
+//!    (hopeless tasks skip the node loop entirely), then drops nodes
+//!    failing Cond. 1–3 or any declarative constraint (the k8s
+//!    filter plugin of Algorithm 1, line 4; the legacy `can_fit` is the
+//!    built-in `resources` ∧ `gpumodel` ∧ `miglattice` chain).
 //! 2. **WeightModulator** (extension point) — an optional
 //!    [`WeightModulator`] retargets the plugin weights from live
-//!    cluster state (load-adaptive α is the first implementation).
+//!    cluster state (load-adaptive α is the first implementation;
+//!    per-lattice α modulators refine weights per node).
 //! 3. **Score** (extension point) — every [`ScorePlugin`] rates each
 //!    feasible node (the hypothetical-assignment loop, lines 5–8).
 //!    Plugins return raw "higher is better" scores.
@@ -32,6 +38,7 @@ use crate::cluster::Datacenter;
 use crate::frag;
 use crate::power;
 use crate::sched::bind::{BindCtx, BindPlugin};
+use crate::sched::filter::{default_filter_chain, FilterCtx, FilterPlugin};
 use crate::sched::modulate::WeightModulator;
 use crate::tasks::{GpuDemand, Task, Workload};
 use crate::util::rng::Rng;
@@ -139,6 +146,16 @@ pub struct Scheduler {
     binder: Box<dyn BindPlugin>,
     modulator: Option<Box<dyn WeightModulator>>,
     hooks: Vec<Box<dyn PostHook>>,
+    /// The `filter` extension-point chain (conjunction). Defaults to
+    /// [`default_filter_chain`]; profiles override via `filter(...)`.
+    filters: Vec<Box<dyn FilterPlugin>>,
+    /// Tasks that failed scheduling while at least one node (or the
+    /// PreFilter pass) was rejected *only* by a constraint filter — the
+    /// node had the resources, a `C_t` constraint forbade it.
+    constraint_unschedulable: u64,
+    /// Whether the most recent `schedule()` rejection involved a
+    /// constraint filter (consumed by [`Scheduler::place`]).
+    last_reject_constrained: bool,
     /// Per-node allocation generation (cache invalidation for plugins).
     generations: Vec<u64>,
     /// Scratch buffers, reused across decisions (hot path: zero alloc).
@@ -146,6 +163,11 @@ pub struct Scheduler {
     placements: Vec<Vec<Placement>>,
     raw: Vec<f64>,
     combined: Vec<f64>,
+    /// Scratch for per-node weight modulation (normalized score rows ×
+    /// per-node weight vector; only used when the modulator is
+    /// per-node, e.g. `latticealpha`).
+    norm_rows: Vec<f64>,
+    node_weights: Vec<f64>,
     /// Cached hot-loop workload, keyed on [`Workload::revision`]
     /// (identity stamps are immune to allocator address reuse, unlike
     /// the raw-pointer key this replaces).
@@ -175,17 +197,45 @@ impl Scheduler {
             binder,
             modulator: None,
             hooks: Vec::new(),
+            filters: default_filter_chain(),
+            constraint_unschedulable: 0,
+            last_reject_constrained: false,
             generations: Vec::new(),
             feasible: Vec::new(),
             placements: Vec::new(),
             raw: Vec::new(),
             combined: Vec::new(),
+            norm_rows: Vec::new(),
+            node_weights: Vec::new(),
             prepared_cache: None,
             caps_cache: None,
             tie_rng: Rng::new(0xC0FFEE),
             deterministic_ties: false,
             label: label.to_string(),
         }
+    }
+
+    /// Replace the `filter` extension-point chain (the profile builder
+    /// resolves `filter(...)` keys through the registry and calls
+    /// this). The chain is a conjunction and must be non-empty.
+    ///
+    /// # Panics
+    /// On an empty chain — a scheduler without feasibility checks would
+    /// bind illegal placements.
+    pub fn set_filters(&mut self, filters: Vec<Box<dyn FilterPlugin>>) {
+        assert!(!filters.is_empty(), "filter chain must be non-empty");
+        self.filters = filters;
+    }
+
+    /// Tasks that failed scheduling because of a declarative constraint:
+    /// the task carries [`crate::tasks::TaskConstraints`] and either a
+    /// constraint PreFilter vetoed it cluster-wide, or some node passed
+    /// every resource filter but a constraint filter rejected it. Tasks
+    /// without declarative constraints (including legacy
+    /// `Task::gpu_model` pins) never count. The `ext-filters`
+    /// experiment surfaces this counter.
+    pub fn constraint_unschedulable(&self) -> u64 {
+        self.constraint_unschedulable
     }
 
     /// Attach the `weightModulator` extension point.
@@ -268,12 +318,45 @@ impl Scheduler {
         if self.generations.len() != n {
             self.generations = vec![0; n];
         }
-        // --- 1. Filter + candidate placements (deduped). ---
+        // --- 1. Filter (extension point) + candidate placements. ---
         self.feasible.clear();
         self.placements.clear();
-        for node in &dc.nodes {
-            if !node.can_fit(task) {
-                continue;
+        self.last_reject_constrained = false;
+        let fctx = FilterCtx { dc };
+        // PreFilter pass: cheap cluster-wide infeasibility checks
+        // (aggregate capacity, candidate counts) — a hopeless task
+        // skips the O(nodes) loop entirely. Conservative by contract,
+        // so the outcome (None) and the RNG stream are unchanged.
+        for f in &self.filters {
+            if !f.pre_filter(&fctx, task) {
+                // Per-cause attribution: only a plugin enforcing one of
+                // *this task's* declarative constraints counts (a
+                // legacy model pin or a static `labels:` selector
+                // failing is a plain resource-style failure).
+                self.last_reject_constrained = f.constrains(task);
+                return None;
+            }
+        }
+        'nodes: for node in &dc.nodes {
+            for (fi, f) in self.filters.iter().enumerate() {
+                if !f.feasible(&fctx, node, task) {
+                    // A constraint-attributed rejection means the node
+                    // had the resources: every filter *not* enforcing
+                    // one of this task's constraints accepts it
+                    // (earlier ones already ran; later ones are checked
+                    // here, so the attribution is exact regardless of
+                    // chain order).
+                    if f.constrains(task)
+                        && !self.last_reject_constrained
+                        && self.filters[fi + 1..]
+                            .iter()
+                            .filter(|g| !g.constrains(task))
+                            .all(|g| g.feasible(&fctx, node, task))
+                    {
+                        self.last_reject_constrained = true;
+                    }
+                    continue 'nodes;
+                }
             }
             let ps = dedup_placements(node, task);
             if ps.is_empty() {
@@ -285,6 +368,7 @@ impl Scheduler {
         if self.feasible.is_empty() {
             return None;
         }
+        self.last_reject_constrained = false;
         // Refresh the per-workload / per-cluster caches when needed
         // (revision-keyed; see `prepared_cache`).
         let rev = workload.revision();
@@ -314,16 +398,50 @@ impl Scheduler {
         let k = self.feasible.len();
         self.combined.clear();
         self.combined.resize(k, 0.0);
-        for (plugin, &weight) in self.plugins.iter().zip(&self.eff_weights) {
-            self.raw.clear();
-            for (idx, &node_id) in self.feasible.iter().enumerate() {
-                let s = plugin.score(&ctx, &dc.nodes[node_id], task, &self.placements[idx]);
-                debug_assert!(s.is_finite(), "{} returned {s}", plugin.name());
-                self.raw.push(s);
+        let per_node_mod = self.modulator.as_ref().is_some_and(|m| m.per_node());
+        if !per_node_mod {
+            for (plugin, &weight) in self.plugins.iter().zip(&self.eff_weights) {
+                self.raw.clear();
+                for (idx, &node_id) in self.feasible.iter().enumerate() {
+                    let s = plugin.score(&ctx, &dc.nodes[node_id], task, &self.placements[idx]);
+                    debug_assert!(s.is_finite(), "{} returned {s}", plugin.name());
+                    self.raw.push(s);
+                }
+                normalize_scores(&mut self.raw);
+                for (c, r) in self.combined.iter_mut().zip(&self.raw) {
+                    *c += weight * r;
+                }
             }
-            normalize_scores(&mut self.raw);
-            for (c, r) in self.combined.iter_mut().zip(&self.raw) {
-                *c += weight * r;
+        } else {
+            // Per-node modulation (e.g. per-lattice α): normalization is
+            // still per plugin across nodes, so keep every normalized
+            // row and combine with a node-specific weight vector.
+            self.norm_rows.clear();
+            for plugin in &self.plugins {
+                self.raw.clear();
+                for (idx, &node_id) in self.feasible.iter().enumerate() {
+                    let s = plugin.score(&ctx, &dc.nodes[node_id], task, &self.placements[idx]);
+                    debug_assert!(s.is_finite(), "{} returned {s}", plugin.name());
+                    self.raw.push(s);
+                }
+                normalize_scores(&mut self.raw);
+                self.norm_rows.extend_from_slice(&self.raw);
+            }
+            let modulator = self.modulator.as_deref().expect("per_node implies modulator");
+            let n_plugins = self.plugins.len();
+            for i in 0..k {
+                self.node_weights.clear();
+                self.node_weights.extend_from_slice(&self.eff_weights);
+                modulator.modulate_node(
+                    &dc.nodes[self.feasible[i]],
+                    &self.weights,
+                    &mut self.node_weights,
+                );
+                let mut acc = 0.0;
+                for p in 0..n_plugins {
+                    acc += self.node_weights[p] * self.norm_rows[p * k + i];
+                }
+                self.combined[i] = acc;
             }
         }
         // --- 6. Arg-max + bind. Kubernetes semantics: plugin scores are
@@ -385,12 +503,22 @@ impl Scheduler {
                         break;
                     }
                 }
-                if !retry {
-                    return None;
+                if retry {
+                    self.schedule(dc, workload, task)
+                } else {
+                    None
                 }
-                self.schedule(dc, workload, task)
             }
-        }?;
+        };
+        let Some(decision) = decision else {
+            // The task is definitively unschedulable; attribute it once
+            // (retries included) to constraints when a constraint
+            // filter was the blocker.
+            if self.last_reject_constrained {
+                self.constraint_unschedulable += 1;
+            }
+            return None;
+        };
         dc.allocate(task, decision.node, &decision.placement);
         self.notify_node_changed(decision.node);
         self.run_post_place(dc, decision.node);
@@ -654,5 +782,74 @@ mod tests {
         let t0 = Task::new(0, 2.0, 512.0, GpuDemand::Whole(1));
         s.release(&mut dc, &t0, 0, &Placement::Whole { gpus: vec![0] });
         assert_eq!(s.hook_counter("places"), 9);
+    }
+
+    #[test]
+    fn constraint_unschedulable_counter_attributes_correctly() {
+        use crate::tasks::TaskConstraints;
+        let mut dc = dc2(); // 2 G2 nodes
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(crate::sched::PolicyKind::FirstFit);
+        // Resource-infeasible task: fails, but not due to constraints.
+        let huge = Task::new(0, 4.0, 0.0, GpuDemand::Whole(64));
+        assert!(s.place(&mut dc, &w, &huge).is_none());
+        assert_eq!(s.constraint_unschedulable(), 0);
+        // Model-set excluding every installed model: constraint failure
+        // (vetoed by the gpumodel PreFilter).
+        let wrong_model = Task::new(1, 1.0, 0.0, GpuDemand::Whole(1)).with_constraints(
+            TaskConstraints {
+                gpu_models: vec![crate::cluster::types::GpuModel::T4],
+                ..Default::default()
+            },
+        );
+        assert!(s.place(&mut dc, &w, &wrong_model).is_none());
+        assert_eq!(s.constraint_unschedulable(), 1);
+        // Tenant isolation: fill both nodes with tenant-a, then a
+        // tenant-b anti-affine task has resources everywhere but no
+        // admissible node.
+        let tenant = |key: &str, others: &[&str]| TaskConstraints {
+            class_key: Some(key.to_string()),
+            anti_affinity: others.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        for (i, node) in [(10u64, 0usize), (11, 1)] {
+            // Whole(4) fills each node's GPUs, so FirstFit advances.
+            let t = Task::new(i, 1.0, 0.0, GpuDemand::Whole(4))
+                .with_constraints(tenant("tenant-a", &["tenant-b"]));
+            let d = s.place(&mut dc, &w, &t).expect("fits");
+            assert_eq!(d.node, node);
+        }
+        // CPU-only tenant-b task: every node has CPU room (resources
+        // pass) but hosts tenant-a — a pure constraint failure.
+        let tb = Task::new(12, 1.0, 0.0, GpuDemand::Zero)
+            .with_constraints(tenant("tenant-b", &["tenant-a"]));
+        assert!(s.place(&mut dc, &w, &tb).is_none());
+        assert_eq!(s.constraint_unschedulable(), 2);
+        // A scheduled task never bumps the counter.
+        let ok = Task::new(13, 1.0, 0.0, GpuDemand::Zero);
+        assert!(s.place(&mut dc, &w, &ok).is_some());
+        assert_eq!(s.constraint_unschedulable(), 2);
+    }
+
+    #[test]
+    fn set_filters_replaces_the_chain() {
+        use crate::sched::filter::{FilterCtx, FilterPlugin};
+        // A chain rejecting every node makes everything unschedulable.
+        struct RejectAll;
+        impl FilterPlugin for RejectAll {
+            fn name(&self) -> &'static str {
+                "reject-all"
+            }
+            fn feasible(&self, _: &FilterCtx, _: &Node, _: &Task) -> bool {
+                false
+            }
+        }
+        let dc = dc2();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(crate::sched::PolicyKind::FirstFit);
+        let t = Task::new(0, 1.0, 0.0, GpuDemand::Whole(1));
+        assert!(s.schedule(&dc, &w, &t).is_some());
+        s.set_filters(vec![Box::new(RejectAll)]);
+        assert!(s.schedule(&dc, &w, &t).is_none());
     }
 }

@@ -7,23 +7,28 @@
 //!   k8s score normalization used to combine PWR with FGD (§IV-A), plus
 //!   the `postPlace`/`postFail` hook protocol.
 //! * [`profile`] — `SchedulerProfile` + the `--policy` DSL + the
-//!   string-keyed plugin/binder/modulator/hook registries.
+//!   string-keyed plugin/binder/modulator/hook/filter registries.
+//! * [`filter`] — the `filter` extension point: declarative
+//!   feasibility (Cond. 1–3 decomposed, model sets, node selectors,
+//!   affinity/anti-affinity, spread caps) with a PreFilter early-exit.
 //! * [`bind`] — the `bind` extension point (five built-in binders).
 //! * [`modulate`] — the `weightModulator` extension point (load-adaptive
-//!   α is the first implementation).
+//!   α, per-lattice α).
 //! * [`policies`] — PWR (the contribution), FGD [19], BestFit [6],
 //!   DotProd [4], GpuPacking [18], GpuClustering [21], FirstFit and
 //!   Random sanity baselines, and the MIG family + repartitioner.
 
 pub mod bind;
+pub mod filter;
 pub mod framework;
 pub mod modulate;
 pub mod policies;
 pub mod profile;
 
 pub use bind::{BindCtx, BindPlugin};
+pub use filter::{FilterCtx, FilterPlugin};
 pub use framework::{Decision, PostHook, SchedCtx, Scheduler, ScorePlugin};
-pub use modulate::{LoadAlphaModulator, WeightModulator};
+pub use modulate::{LatticeAlphaModulator, LoadAlphaModulator, WeightModulator};
 pub use profile::SchedulerProfile;
 
 /// Every scheduling policy evaluated in the paper (§V), plus two sanity

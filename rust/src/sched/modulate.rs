@@ -6,7 +6,15 @@
 //! multi-objective schedulers (Mamirov '25) motivate the general form:
 //! any profile may attach one modulator, and the modulator sees *all*
 //! plugin weights, not a hard-wired `[PWR, FGD]` pair.
+//!
+//! Modulators may additionally refine weights **per node**
+//! ([`WeightModulator::modulate_node`]): [`LatticeAlphaModulator`]
+//! applies a different α on nodes by MIG partition lattice (A100-7g vs
+//! A30-4g vs non-MIG), since coarse lattices repack cheaply and can
+//! afford power-greedier placement.
 
+use crate::cluster::mig::MigLattice;
+use crate::cluster::node::{Node, ResourceView};
 use crate::cluster::Datacenter;
 
 /// A weight modulator: rewrites the effective per-decision plugin
@@ -30,6 +38,41 @@ pub trait WeightModulator: Send {
     }
 
     fn modulate(&self, dc: &Datacenter, base: &[f64], weights: &mut [f64]) -> Option<f64>;
+
+    /// Whether [`Self::modulate_node`] refines weights per node. The
+    /// framework only takes the (slightly costlier) per-node combine
+    /// path when this is true.
+    fn per_node(&self) -> bool {
+        false
+    }
+
+    /// Per-node weight refinement: `weights` arrives holding the
+    /// per-decision output of [`Self::modulate`] and may be rewritten
+    /// for this specific node (`base` holds the profile's static
+    /// weights). Only called when [`Self::per_node`] is true.
+    fn modulate_node(&self, _node: &Node, _base: &[f64], _weights: &mut [f64]) {}
+}
+
+/// Shared α-split: the first plugin (the power objective) gets `alpha`,
+/// the remaining plugins share `1 − alpha` proportionally to their base
+/// weights (equal split when every non-power base weight is zero —
+/// matching legacy `pwrfgddyn:1:…`, where FGD regains weight under
+/// load).
+fn split_alpha(alpha: f64, base: &[f64], weights: &mut [f64]) {
+    weights[0] = alpha;
+    let rest: f64 = base[1..].iter().sum();
+    for (w, b) in weights[1..].iter_mut().zip(&base[1..]) {
+        // `(b / rest) * (1 − α)`, in exactly this association: for the
+        // legacy two-plugin lowering b == rest, so b/rest is exactly
+        // 1.0 and the FGD weight is bit-identical to the pre-profile
+        // inline `1.0 − α` (the other association drifts by 1 ulp for
+        // some inputs).
+        *w = if rest > 0.0 {
+            (b / rest) * (1.0 - alpha)
+        } else {
+            (1.0 - alpha) / (base.len() - 1) as f64
+        };
+    }
 }
 
 /// Load-adaptive α (paper §VII): linearly interpolate a power weight α
@@ -73,21 +116,58 @@ impl WeightModulator for LoadAlphaModulator {
     fn modulate(&self, dc: &Datacenter, base: &[f64], weights: &mut [f64]) -> Option<f64> {
         let u = dc.gpu_utilization().clamp(0.0, 1.0);
         let alpha = self.alpha_empty + (self.alpha_full - self.alpha_empty) * u;
-        weights[0] = alpha;
-        let rest: f64 = base[1..].iter().sum();
-        for (w, b) in weights[1..].iter_mut().zip(&base[1..]) {
-            // `(b / rest) * (1 − α)`, in exactly this association: for
-            // the legacy two-plugin lowering b == rest, so b/rest is
-            // exactly 1.0 and the FGD weight is bit-identical to the
-            // pre-profile inline `1.0 − α` (the other association,
-            // `(1−α)·b/rest`, drifts by 1 ulp for some inputs).
-            *w = if rest > 0.0 {
-                (b / rest) * (1.0 - alpha)
-            } else {
-                (1.0 - alpha) / (base.len() - 1) as f64
-            };
-        }
+        split_alpha(alpha, base, weights);
         Some(alpha)
+    }
+}
+
+/// Per-lattice α (the ROADMAP follow-up to the profile API): MIG nodes
+/// get a lattice-specific power weight — `alpha_a100` on A100-lattice
+/// (7-slice) nodes, `alpha_a30` on A30-lattice (4-slice) nodes — and
+/// non-MIG nodes keep `alpha_base`. The non-power plugins share `1 − α`
+/// proportionally, exactly like [`LoadAlphaModulator`]. The weighted
+/// binder keeps its static α (binding happens after node selection,
+/// inside one node, where the lattice is already fixed).
+#[derive(Clone, Copy, Debug)]
+pub struct LatticeAlphaModulator {
+    pub alpha_base: f64,
+    pub alpha_a100: f64,
+    pub alpha_a30: f64,
+}
+
+impl WeightModulator for LatticeAlphaModulator {
+    fn name(&self) -> &'static str {
+        "latticealpha"
+    }
+
+    fn check_layout(&self, plugin_names: &[&str]) -> Result<(), String> {
+        if plugin_names.first() == Some(&"PWR") {
+            Ok(())
+        } else {
+            Err(format!(
+                "latticealpha drives the first score plugin as the power objective; \
+                 expected PWR first, got {plugin_names:?}"
+            ))
+        }
+    }
+
+    fn modulate(&self, _dc: &Datacenter, _base: &[f64], _weights: &mut [f64]) -> Option<f64> {
+        // Cluster-wide pass is identity; the per-node hook below does
+        // the work. The binder keeps its own α.
+        None
+    }
+
+    fn per_node(&self) -> bool {
+        true
+    }
+
+    fn modulate_node(&self, node: &Node, base: &[f64], weights: &mut [f64]) {
+        let alpha = match node.mig_lattice() {
+            Some(MigLattice::A100) => self.alpha_a100,
+            Some(MigLattice::A30) => self.alpha_a30,
+            None => self.alpha_base,
+        };
+        split_alpha(alpha, base, weights);
     }
 }
 
@@ -149,5 +229,56 @@ mod tests {
         assert!((w[0] - 0.5).abs() < 1e-12);
         // 1−α = 0.5 split 3:2 over the base [0.3, 0.2].
         assert!((w[1] - 0.3).abs() < 1e-12 && (w[2] - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latticealpha_applies_per_lattice_weights() {
+        let m = LatticeAlphaModulator { alpha_base: 0.5, alpha_a100: 0.1, alpha_a30: 0.9 };
+        assert!(m.per_node());
+        assert!(m.check_layout(&["PWR", "FGD"]).is_ok());
+        assert!(m.check_layout(&["FGD", "PWR"]).is_err());
+        // Mixed fleet: 1 A100 node, 1 A30 node, plus a non-MIG node.
+        let het = ClusterSpec::mig_het_cluster(1, 1, 2, 0).build();
+        let plain = ClusterSpec::tiny(1, 2, 0).build();
+        let base = [0.5, 0.5];
+        let alpha_of = |node: &crate::cluster::node::Node| {
+            let mut w = base;
+            m.modulate_node(node, &base, &mut w);
+            assert!((w[0] + w[1] - 1.0).abs() < 1e-12);
+            w[0]
+        };
+        use crate::cluster::mig::MigLattice;
+        use crate::cluster::node::ResourceView;
+        let a100 = het.nodes.iter().find(|n| n.mig_lattice() == Some(MigLattice::A100)).unwrap();
+        let a30 = het.nodes.iter().find(|n| n.mig_lattice() == Some(MigLattice::A30)).unwrap();
+        assert!((alpha_of(a100) - 0.1).abs() < 1e-12);
+        assert!((alpha_of(a30) - 0.9).abs() < 1e-12);
+        assert!((alpha_of(&plain.nodes[0]) - 0.5).abs() < 1e-12);
+        // The cluster-wide pass is identity and claims no binder α.
+        let mut w = base;
+        assert_eq!(m.modulate(&plain, &base, &mut w), None);
+        assert_eq!(w, base);
+    }
+
+    #[test]
+    fn latticealpha_schedules_end_to_end_on_het_fleet() {
+        use crate::cluster::mig::MigProfile;
+        use crate::sched::SchedulerProfile;
+        let profile = SchedulerProfile::parse(
+            "score(pwr=0.5,fgd=0.5)|bind(weighted:0.5)|mod(latticealpha:0.5:0.1:0.9)",
+        )
+        .unwrap();
+        let mut sched = profile.build().unwrap();
+        let mut dc = ClusterSpec::mig_het_cluster(2, 2, 2, 0).build();
+        let w = crate::tasks::Workload::default();
+        let mut placed = 0;
+        for i in 0..8 {
+            let p = if i % 2 == 0 { MigProfile::P1g } else { MigProfile::A30P1g };
+            let t = Task::new(i, 1.0, 0.0, GpuDemand::Mig(p));
+            if sched.place(&mut dc, &w, &t).is_some() {
+                placed += 1;
+            }
+        }
+        assert_eq!(placed, 8, "per-lattice α profile must keep scheduling");
     }
 }

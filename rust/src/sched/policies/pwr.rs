@@ -61,6 +61,7 @@ mod tests {
         use crate::cluster::inventory::{ClusterSpec, NodePool};
         use crate::cluster::types::GpuModel;
         let spec = ClusterSpec {
+            zones: 0,
             pools: vec![
                 NodePool {
                     count: 1,
@@ -69,6 +70,7 @@ mod tests {
                     gpu_model: Some(GpuModel::G3),
                     gpus_per_node: 8,
                     mig: false,
+                    labels: Vec::new(),
                 },
                 NodePool {
                     count: 1,
@@ -77,6 +79,7 @@ mod tests {
                     gpu_model: Some(GpuModel::T4),
                     gpus_per_node: 4,
                     mig: false,
+                    labels: Vec::new(),
                 },
             ],
         };

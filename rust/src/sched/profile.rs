@@ -4,7 +4,7 @@
 //!
 //! ## Extension points and registries
 //!
-//! A profile names entries in four string-keyed registries (built-ins
+//! A profile names entries in five string-keyed registries (built-ins
 //! below; [`register_score_plugin`] & co. add custom entries at
 //! runtime):
 //!
@@ -15,9 +15,15 @@
 //!   `weighted:α`, `bestfit`, `packed`, `first`, `random`.
 //! * `mod` — at most one
 //!   [`WeightModulator`](crate::sched::modulate::WeightModulator):
-//!   `loadalpha:α_empty:α_full`.
+//!   `loadalpha:α_empty:α_full`, `latticealpha:α_base:α_a100:α_a30`.
 //! * `hook` — any number of [`PostHook`]s: `repartition` (the MIG
 //!   defragmenter; optional `:frag_threshold[:max_moved[:budget]]`).
+//! * `filter` — the feasibility chain
+//!   ([`FilterPlugin`](crate::sched::filter::FilterPlugin)):
+//!   `resources`, `gpumodel`, `miglattice`, `labels[:key=value...]`,
+//!   `affinity`. Omitted = the default chain (legacy `can_fit` +
+//!   constraint plugins; placement-identical on constraint-free
+//!   traces).
 //!
 //! ## DSL grammar
 //!
@@ -27,7 +33,9 @@
 //!           | 'bind(' key (':' num)* ')'           -- default bind(bestfit)
 //!           | 'mod(' key (':' num)* ')'            -- optional
 //!           | 'hook(' key (':' num)* ')'           -- repeatable
+//!           | 'filter(' fentry (',' fentry)* ')'   -- optional, at most one
 //! entry    := key ('=' num)?                       -- weight defaults to 1
+//! fentry   := key (':' selector)*                  -- selector := lkey '=' lvalue
 //! ```
 //!
 //! Example — three objectives, load-adaptive weights, proactive MIG
@@ -49,8 +57,12 @@ use std::sync::{Arc, OnceLock, RwLock};
 use crate::sched::bind::{
     BestFitBinder, BindPlugin, FirstBinder, PackOccupiedBinder, RandomBinder, WeightedBinder,
 };
+use crate::sched::filter::{
+    AffinityFilter, FilterPlugin, GpuModelFilter, LabelsFilter, MigLatticeFilter,
+    ResourcesFilter,
+};
 use crate::sched::framework::{PostHook, Scheduler, ScorePlugin};
-use crate::sched::modulate::{LoadAlphaModulator, WeightModulator};
+use crate::sched::modulate::{LatticeAlphaModulator, LoadAlphaModulator, WeightModulator};
 use crate::sched::policies::{
     BestFitPlugin, DotProdPlugin, FgdPlugin, FirstFitPlugin, GpuClusteringPlugin,
     GpuPackingPlugin, MigRepartitioner, MigSliceFitPlugin, PwrPlugin, RandomPlugin,
@@ -76,9 +88,25 @@ pub struct SchedulerProfile {
     pub modulator: Option<(String, Vec<f64>)>,
     /// `postPlace`/`postFail` hooks, in attachment order.
     pub hooks: Vec<(String, Vec<f64>)>,
+    /// `filter` extension point: (registry key, string params) per
+    /// plugin, evaluated as a conjunction in order. String params carry
+    /// selector syntax (`labels:zone=z1`). Empty = the built-in
+    /// [`default_filter_keys`] chain.
+    pub filters: Vec<(String, Vec<String>)>,
     /// Report/CSV label. Legacy policies keep their [`PolicyKind::label`]
     /// byte-for-byte; DSL profiles get a canonical compact label.
     pub label: String,
+}
+
+/// The registry keys of the default filter chain — derived from
+/// [`crate::sched::filter::default_filter_chain`] itself (plugin names
+/// double as registry keys), so the key list cannot drift from the
+/// chain `Scheduler::new` installs.
+pub fn default_filter_keys() -> Vec<(String, Vec<String>)> {
+    crate::sched::filter::default_filter_chain()
+        .iter()
+        .map(|f| (f.name().to_string(), Vec::new()))
+        .collect()
 }
 
 impl From<PolicyKind> for SchedulerProfile {
@@ -141,7 +169,22 @@ impl SchedulerProfile {
             None => None,
         };
         let binder = build_binder(&self.bind.0, &self.bind.1)?;
+        // Resolve the filter chain eagerly (unknown keys / bad selector
+        // syntax fail here). Empty = keep the default chain that
+        // `Scheduler::new` installs.
+        let filters: Option<Vec<Box<dyn FilterPlugin>>> = if self.filters.is_empty() {
+            None
+        } else {
+            let mut fs = Vec::with_capacity(self.filters.len());
+            for (key, params) in &self.filters {
+                fs.push(build_filter(key, params)?);
+            }
+            Some(fs)
+        };
         let mut sched = Scheduler::new(plugins, binder, &self.label);
+        if let Some(fs) = filters {
+            sched.set_filters(fs);
+        }
         if let Some(m) = modulator {
             sched.set_modulator(m);
         }
@@ -192,7 +235,14 @@ fn lower(kind: PolicyKind) -> SchedulerProfile {
         PolicyKind::FirstFit => (vec![s("firstfit", 1.0)], ("first".to_string(), vec![]), None),
         PolicyKind::Random => (vec![s("random", 1.0)], ("random".to_string(), vec![]), None),
     };
-    SchedulerProfile { score, bind, modulator, hooks: Vec::new(), label }
+    SchedulerProfile {
+        score,
+        bind,
+        modulator,
+        hooks: Vec::new(),
+        filters: default_filter_keys(),
+        label,
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -205,6 +255,8 @@ type BindFactory = Arc<dyn Fn(&[f64]) -> Result<Box<dyn BindPlugin>, String> + S
 type ModulatorFactory =
     Arc<dyn Fn(&[f64]) -> Result<Box<dyn WeightModulator>, String> + Send + Sync>;
 type HookFactory = Arc<dyn Fn(&[f64]) -> Result<Box<dyn PostHook>, String> + Send + Sync>;
+type FilterFactory =
+    Arc<dyn Fn(&[String]) -> Result<Box<dyn FilterPlugin>, String> + Send + Sync>;
 
 fn score_ext() -> &'static RwLock<HashMap<String, ScoreFactory>> {
     static REG: OnceLock<RwLock<HashMap<String, ScoreFactory>>> = OnceLock::new();
@@ -226,6 +278,11 @@ fn hook_ext() -> &'static RwLock<HashMap<String, HookFactory>> {
     REG.get_or_init(Default::default)
 }
 
+fn filter_ext() -> &'static RwLock<HashMap<String, FilterFactory>> {
+    static REG: OnceLock<RwLock<HashMap<String, FilterFactory>>> = OnceLock::new();
+    REG.get_or_init(Default::default)
+}
+
 /// Register a custom score plugin under `key` (later profiles may name
 /// it in `score(...)`). Built-in keys cannot be shadowed.
 pub fn register_score_plugin(
@@ -235,10 +292,25 @@ pub fn register_score_plugin(
     // The DSL lowercases keys, so registration must too or the entry
     // would be unreachable from --policy strings.
     let key = key.to_ascii_lowercase();
-    if BUILTIN_SCORE.iter().any(|(k, _)| *k == key) {
+    if BUILTIN_SCORE.iter().any(|(k, _, _)| *k == key) {
         return Err(format!("'{key}' is a built-in score plugin"));
     }
     score_ext().write().unwrap().insert(key, Arc::new(factory));
+    Ok(())
+}
+
+/// Register a custom filter plugin under `key` (later profiles may name
+/// it in `filter(...)`; params arrive as raw strings, so selector-style
+/// arguments are possible). Built-in keys cannot be shadowed.
+pub fn register_filter_plugin(
+    key: &str,
+    factory: impl Fn(&[String]) -> Result<Box<dyn FilterPlugin>, String> + Send + Sync + 'static,
+) -> Result<(), String> {
+    let key = key.to_ascii_lowercase();
+    if BUILTIN_FILTER.iter().any(|(k, _, _)| *k == key) {
+        return Err(format!("'{key}' is a built-in filter plugin"));
+    }
+    filter_ext().write().unwrap().insert(key, Arc::new(factory));
     Ok(())
 }
 
@@ -248,7 +320,7 @@ pub fn register_bind_plugin(
     factory: impl Fn(&[f64]) -> Result<Box<dyn BindPlugin>, String> + Send + Sync + 'static,
 ) -> Result<(), String> {
     let key = key.to_ascii_lowercase();
-    if BUILTIN_BIND.iter().any(|(k, _)| *k == key) {
+    if BUILTIN_BIND.iter().any(|(k, _, _)| *k == key) {
         return Err(format!("'{key}' is a built-in binder"));
     }
     bind_ext().write().unwrap().insert(key, Arc::new(factory));
@@ -261,7 +333,7 @@ pub fn register_modulator(
     factory: impl Fn(&[f64]) -> Result<Box<dyn WeightModulator>, String> + Send + Sync + 'static,
 ) -> Result<(), String> {
     let key = key.to_ascii_lowercase();
-    if BUILTIN_MODULATOR.iter().any(|(k, _)| *k == key) {
+    if BUILTIN_MODULATOR.iter().any(|(k, _, _)| *k == key) {
         return Err(format!("'{key}' is a built-in modulator"));
     }
     modulator_ext().write().unwrap().insert(key, Arc::new(factory));
@@ -274,32 +346,43 @@ pub fn register_post_hook(
     factory: impl Fn(&[f64]) -> Result<Box<dyn PostHook>, String> + Send + Sync + 'static,
 ) -> Result<(), String> {
     let key = key.to_ascii_lowercase();
-    if BUILTIN_HOOK.iter().any(|(k, _)| *k == key) {
+    if BUILTIN_HOOK.iter().any(|(k, _, _)| *k == key) {
         return Err(format!("'{key}' is a built-in hook"));
     }
     hook_ext().write().unwrap().insert(key, Arc::new(factory));
     Ok(())
 }
 
-// Each built-in registry is ONE table of (key, factory): the lookup,
-// the shadowing guard in `register_*` and the keys listed in error
-// messages all derive from it, so a new entry cannot drift out of sync.
+// Each built-in registry is ONE table of (key, description, factory):
+// the lookup, the shadowing guard in `register_*`, the keys listed in
+// error messages and the `repro list-plugins` catalog all derive from
+// it, so a new entry cannot drift out of sync.
 
-const BUILTIN_SCORE: &[(&str, fn() -> Box<dyn ScorePlugin>)] = &[
-    ("pwr", || Box::new(PwrPlugin)),
-    ("fgd", || Box::new(FgdPlugin::new())),
-    ("bestfit", || Box::new(BestFitPlugin)),
-    ("dotprod", || Box::new(DotProdPlugin)),
-    ("gpupacking", || Box::new(GpuPackingPlugin)),
-    ("gpuclustering", || Box::new(GpuClusteringPlugin)),
-    ("firstfit", || Box::new(FirstFitPlugin)),
-    ("random", || Box::new(RandomPlugin::new(RANDOM_PLUGIN_SEED))),
-    ("slicefit", || Box::new(MigSliceFitPlugin)),
+const BUILTIN_SCORE: &[(&str, &str, fn() -> Box<dyn ScorePlugin>)] = &[
+    ("pwr", "−Δ estimated node power of the best placement (Eq. 2/Eq. 2-MIG)", || {
+        Box::new(PwrPlugin)
+    }),
+    ("fgd", "−Δ expected fragmentation F_n(M) (Weng et al., slice-aware)", || {
+        Box::new(FgdPlugin::new())
+    }),
+    ("bestfit", "tightest node fit (Protean-style best-fit)", || Box::new(BestFitPlugin)),
+    ("dotprod", "demand/free-vector alignment (Tetris dot-product)", || {
+        Box::new(DotProdPlugin)
+    }),
+    ("gpupacking", "MLaaS GPU-packing tiers", || Box::new(GpuPackingPlugin)),
+    ("gpuclustering", "Gandiva-style affinity packing", || Box::new(GpuClusteringPlugin)),
+    ("firstfit", "lowest-id feasible node", || Box::new(FirstFitPlugin)),
+    ("random", "uniform random feasible node (seeded)", || {
+        Box::new(RandomPlugin::new(RANDOM_PLUGIN_SEED))
+    }),
+    ("slicefit", "MIG slice packing (fullest GPU first, powered preferred)", || {
+        Box::new(MigSliceFitPlugin)
+    }),
 ];
 
 type BindBuilder = fn(&[f64]) -> Result<Box<dyn BindPlugin>, String>;
-const BUILTIN_BIND: &[(&str, BindBuilder)] = &[
-    ("weighted", |params| {
+const BUILTIN_BIND: &[(&str, &str, BindBuilder)] = &[
+    ("weighted", "minimize α·Δpower + (1−α)·Δfrag over candidates (weighted:α)", |params| {
         let [alpha] = params else {
             return Err(format!(
                 "binder 'weighted' takes exactly one α param, got {}",
@@ -309,39 +392,65 @@ const BUILTIN_BIND: &[(&str, BindBuilder)] = &[
         validate_alpha(*alpha, "bind(weighted:α)")?;
         Ok(Box::new(WeightedBinder { alpha: *alpha }))
     }),
-    ("bestfit", |params| {
+    ("bestfit", "tightest candidate placement", |params| {
         no_params(params, "bestfit")?;
         Ok(Box::new(BestFitBinder))
     }),
-    ("packed", |params| {
+    ("packed", "prefer already-occupied GPUs", |params| {
         no_params(params, "packed")?;
         Ok(Box::new(PackOccupiedBinder))
     }),
-    ("first", |params| {
+    ("first", "first (lowest-index) candidate", |params| {
         no_params(params, "first")?;
         Ok(Box::new(FirstBinder))
     }),
-    ("random", |params| {
+    ("random", "uniform random candidate (seeded)", |params| {
         no_params(params, "random")?;
         Ok(Box::new(RandomBinder::new(RANDOM_BINDER_SEED)))
     }),
 ];
 
 type ModulatorBuilder = fn(&[f64]) -> Result<Box<dyn WeightModulator>, String>;
-const BUILTIN_MODULATOR: &[(&str, ModulatorBuilder)] = &[("loadalpha", |params| {
-    let [alpha_empty, alpha_full] = params else {
-        return Err(format!(
-            "modulator 'loadalpha' takes exactly two params (α_empty:α_full), got {}",
-            params.len()
-        ));
-    };
-    validate_alpha(*alpha_empty, "mod(loadalpha:α_empty:·)")?;
-    validate_alpha(*alpha_full, "mod(loadalpha:·:α_full)")?;
-    Ok(Box::new(LoadAlphaModulator { alpha_empty: *alpha_empty, alpha_full: *alpha_full }))
-})];
+const BUILTIN_MODULATOR: &[(&str, &str, ModulatorBuilder)] = &[
+    ("loadalpha", "load-adaptive α: α_empty→α_full on GPU utilization (loadalpha:αe:αf)", |params| {
+        let [alpha_empty, alpha_full] = params else {
+            return Err(format!(
+                "modulator 'loadalpha' takes exactly two params (α_empty:α_full), got {}",
+                params.len()
+            ));
+        };
+        validate_alpha(*alpha_empty, "mod(loadalpha:α_empty:·)")?;
+        validate_alpha(*alpha_full, "mod(loadalpha:·:α_full)")?;
+        Ok(Box::new(LoadAlphaModulator { alpha_empty: *alpha_empty, alpha_full: *alpha_full }))
+    }),
+    (
+        "latticealpha",
+        "per-MIG-lattice α: α_base non-MIG, α_a100 / α_a30 per lattice (latticealpha:αb:α100:α30)",
+        |params| {
+            let [base, a100, a30] = params else {
+                return Err(format!(
+                    "modulator 'latticealpha' takes exactly three params \
+                     (α_base:α_a100:α_a30), got {}",
+                    params.len()
+                ));
+            };
+            validate_alpha(*base, "mod(latticealpha:α_base:·:·)")?;
+            validate_alpha(*a100, "mod(latticealpha:·:α_a100:·)")?;
+            validate_alpha(*a30, "mod(latticealpha:·:·:α_a30)")?;
+            Ok(Box::new(LatticeAlphaModulator {
+                alpha_base: *base,
+                alpha_a100: *a100,
+                alpha_a30: *a30,
+            }))
+        },
+    ),
+];
 
 type HookBuilder = fn(&[f64]) -> Result<Box<dyn PostHook>, String>;
-const BUILTIN_HOOK: &[(&str, HookBuilder)] = &[("repartition", |params| {
+const BUILTIN_HOOK: &[(&str, &str, HookBuilder)] = &[(
+    "repartition",
+    "MIG defrag: postFail repack-and-retry + proactive threshold (repartition[:thr[:moved[:budget]]])",
+    |params| {
     // hook(repartition[:frag_threshold[:max_moved[:budget]]]);
     // omitted or negative threshold = ∞ (reactive / failure-only mode —
     // the DSL has no literal for ∞, so `-1` is the sentinel that lets
@@ -372,17 +481,64 @@ const BUILTIN_HOOK: &[(&str, HookBuilder)] = &[("repartition", |params| {
             params.len()
         ));
     }
-    Ok(Box::new(MigRepartitioner::new(cfg)))
-})];
+        Ok(Box::new(MigRepartitioner::new(cfg)))
+    },
+)];
 
-fn builtin_keys<T>(table: &[(&'static str, T)]) -> String {
-    table.iter().map(|(k, _)| *k).collect::<Vec<_>>().join(", ")
+type FilterBuilder = fn(&[String]) -> Result<Box<dyn FilterPlugin>, String>;
+const BUILTIN_FILTER: &[(&str, &str, FilterBuilder)] = &[
+    ("resources", "Cond. 1–3: CPU, memory, GPU quantity/shape feasibility", |params| {
+        no_filter_params(params, "resources")?;
+        Ok(Box::new(ResourcesFilter))
+    }),
+    ("gpumodel", "C_t^GPU: legacy model pin + declarative model sets", |params| {
+        no_filter_params(params, "gpumodel")?;
+        Ok(Box::new(GpuModelFilter))
+    }),
+    ("miglattice", "MIG demands only fit nodes of the profile's lattice", |params| {
+        no_filter_params(params, "miglattice")?;
+        Ok(Box::new(MigLatticeFilter))
+    }),
+    ("labels", "node selectors; optional static selector (labels:key=value)", |params| {
+        Ok(Box::new(LabelsFilter { selector: parse_selector(params)? }))
+    }),
+    ("affinity", "class-keyed affinity / anti-affinity / per-node spread caps", |params| {
+        no_filter_params(params, "affinity")?;
+        Ok(Box::new(AffinityFilter))
+    }),
+];
+
+/// Parse `key=value` selector params of `filter(labels:…)`.
+fn parse_selector(params: &[String]) -> Result<Vec<(String, String)>, String> {
+    params
+        .iter()
+        .map(|p| {
+            p.split_once('=')
+                .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+                .filter(|(k, v)| !k.is_empty() && !v.is_empty())
+                .ok_or_else(|| {
+                    format!("bad selector '{p}' in filter(labels:…): expected key=value")
+                })
+        })
+        .collect()
+}
+
+fn no_filter_params(params: &[String], key: &str) -> Result<(), String> {
+    if params.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("filter '{key}' takes no params, got {}", params.len()))
+    }
+}
+
+fn builtin_keys<A, B>(table: &[(&'static str, A, B)]) -> String {
+    table.iter().map(|(k, _, _)| *k).collect::<Vec<_>>().join(", ")
 }
 
 fn build_score_plugin(key: &str) -> Result<Box<dyn ScorePlugin>, String> {
     let key = key.to_ascii_lowercase();
     let key = key.as_str();
-    if let Some((_, f)) = BUILTIN_SCORE.iter().find(|(k, _)| *k == key) {
+    if let Some((_, _, f)) = BUILTIN_SCORE.iter().find(|(k, _, _)| *k == key) {
         return Ok(f());
     }
     match score_ext().read().unwrap().get(key) {
@@ -397,7 +553,7 @@ fn build_score_plugin(key: &str) -> Result<Box<dyn ScorePlugin>, String> {
 fn build_binder(key: &str, params: &[f64]) -> Result<Box<dyn BindPlugin>, String> {
     let key = key.to_ascii_lowercase();
     let key = key.as_str();
-    if let Some((_, f)) = BUILTIN_BIND.iter().find(|(k, _)| *k == key) {
+    if let Some((_, _, f)) = BUILTIN_BIND.iter().find(|(k, _, _)| *k == key) {
         return f(params);
     }
     match bind_ext().read().unwrap().get(key) {
@@ -412,7 +568,7 @@ fn build_binder(key: &str, params: &[f64]) -> Result<Box<dyn BindPlugin>, String
 fn build_modulator(key: &str, params: &[f64]) -> Result<Box<dyn WeightModulator>, String> {
     let key = key.to_ascii_lowercase();
     let key = key.as_str();
-    if let Some((_, f)) = BUILTIN_MODULATOR.iter().find(|(k, _)| *k == key) {
+    if let Some((_, _, f)) = BUILTIN_MODULATOR.iter().find(|(k, _, _)| *k == key) {
         return f(params);
     }
     match modulator_ext().read().unwrap().get(key) {
@@ -427,7 +583,7 @@ fn build_modulator(key: &str, params: &[f64]) -> Result<Box<dyn WeightModulator>
 fn build_hook(key: &str, params: &[f64]) -> Result<Box<dyn PostHook>, String> {
     let key = key.to_ascii_lowercase();
     let key = key.as_str();
-    if let Some((_, f)) = BUILTIN_HOOK.iter().find(|(k, _)| *k == key) {
+    if let Some((_, _, f)) = BUILTIN_HOOK.iter().find(|(k, _, _)| *k == key) {
         return f(params);
     }
     match hook_ext().read().unwrap().get(key) {
@@ -437,6 +593,57 @@ fn build_hook(key: &str, params: &[f64]) -> Result<Box<dyn PostHook>, String> {
             builtin_keys(BUILTIN_HOOK)
         )),
     }
+}
+
+fn build_filter(key: &str, params: &[String]) -> Result<Box<dyn FilterPlugin>, String> {
+    let key = key.to_ascii_lowercase();
+    let key = key.as_str();
+    if let Some((_, _, f)) = BUILTIN_FILTER.iter().find(|(k, _, _)| *k == key) {
+        return f(params);
+    }
+    match filter_ext().read().unwrap().get(key) {
+        Some(f) => f(params),
+        None => Err(format!(
+            "unknown filter plugin '{key}' (built-ins: {})",
+            builtin_keys(BUILTIN_FILTER)
+        )),
+    }
+}
+
+/// Every registered plugin as `(extension point, key, description)` —
+/// built-ins (from the registry tables, so the catalog cannot drift)
+/// followed by runtime registrations. Backs `repro list-plugins`.
+pub fn registry_catalog() -> Vec<(&'static str, String, String)> {
+    let mut out: Vec<(&'static str, String, String)> = Vec::new();
+    for (k, d, _) in BUILTIN_SCORE {
+        out.push(("score", k.to_string(), d.to_string()));
+    }
+    for (k, d, _) in BUILTIN_BIND {
+        out.push(("bind", k.to_string(), d.to_string()));
+    }
+    for (k, d, _) in BUILTIN_MODULATOR {
+        out.push(("mod", k.to_string(), d.to_string()));
+    }
+    for (k, d, _) in BUILTIN_HOOK {
+        out.push(("hook", k.to_string(), d.to_string()));
+    }
+    for (k, d, _) in BUILTIN_FILTER {
+        out.push(("filter", k.to_string(), d.to_string()));
+    }
+    let runtime: [(&'static str, Vec<String>); 5] = [
+        ("score", score_ext().read().unwrap().keys().cloned().collect()),
+        ("bind", bind_ext().read().unwrap().keys().cloned().collect()),
+        ("mod", modulator_ext().read().unwrap().keys().cloned().collect()),
+        ("hook", hook_ext().read().unwrap().keys().cloned().collect()),
+        ("filter", filter_ext().read().unwrap().keys().cloned().collect()),
+    ];
+    for (kind, mut keys) in runtime {
+        keys.sort();
+        for k in keys {
+            out.push((kind, k, "(runtime-registered)".to_string()));
+        }
+    }
+    out
 }
 
 fn no_params(params: &[f64], key: &str) -> Result<(), String> {
@@ -490,6 +697,7 @@ fn parse_dsl(s: &str) -> Result<SchedulerProfile, String> {
     let mut bind: Option<(String, Vec<f64>)> = None;
     let mut modulator: Option<(String, Vec<f64>)> = None;
     let mut hooks: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut filters: Option<Vec<(String, Vec<String>)>> = None;
     for section in s.split('|') {
         let section = section.trim();
         let inner = section
@@ -541,9 +749,30 @@ fn parse_dsl(s: &str) -> Result<SchedulerProfile, String> {
                 modulator = Some(parse_keyed_params(body, "mod")?);
             }
             "hook" => hooks.push(parse_keyed_params(body, "hook")?),
+            "filter" => {
+                if filters.is_some() {
+                    return Err("duplicate filter(...) section".into());
+                }
+                let mut fs: Vec<(String, Vec<String>)> = Vec::new();
+                for entry in body.split(',') {
+                    let entry = entry.trim();
+                    let mut parts = entry.split(':');
+                    let key = parts.next().unwrap_or("").trim().to_ascii_lowercase();
+                    if key.is_empty() {
+                        return Err(format!("empty filter entry in '{body}'"));
+                    }
+                    if fs.iter().any(|(k, _)| *k == key) {
+                        return Err(format!("duplicate filter plugin '{key}'"));
+                    }
+                    let params: Vec<String> =
+                        parts.map(|p| p.trim().to_string()).collect();
+                    fs.push((key, params));
+                }
+                filters = Some(fs);
+            }
             other => {
                 return Err(format!(
-                    "unknown profile section '{other}' (expected score/bind/mod/hook)"
+                    "unknown profile section '{other}' (expected score/bind/mod/hook/filter)"
                 ))
             }
         }
@@ -551,10 +780,11 @@ fn parse_dsl(s: &str) -> Result<SchedulerProfile, String> {
     if score.is_empty() {
         return Err("profile needs a score(...) section with at least one plugin".into());
     }
-    // The open-simulator default binder.
+    // The open-simulator default binder; the default filter chain.
     let bind = bind.unwrap_or_else(|| ("bestfit".to_string(), Vec::new()));
-    let label = dsl_label(&score, &bind, &modulator, &hooks);
-    Ok(SchedulerProfile { score, bind, modulator, hooks, label })
+    let filters = filters.unwrap_or_else(default_filter_keys);
+    let label = dsl_label(&score, &bind, &modulator, &hooks, &filters);
+    Ok(SchedulerProfile { score, bind, modulator, hooks, filters, label })
 }
 
 /// Canonical compact label for DSL profiles (comma-free so CSV headers
@@ -562,11 +792,15 @@ fn parse_dsl(s: &str) -> Result<SchedulerProfile, String> {
 /// Score weights and binder/modulator params are α-like and shown
 /// ×1000 (the paper's plot-legend convention); hook params are literal
 /// quantities (thresholds, slice counts, budgets) and printed verbatim.
+/// A non-default filter chain is appended as
+/// `|filter:resources+labels:zone=z1`; the default chain is omitted so
+/// pre-filter-era labels are unchanged.
 fn dsl_label(
     score: &[(String, f64)],
     bind: &(String, Vec<f64>),
     modulator: &Option<(String, Vec<f64>)>,
     hooks: &[(String, Vec<f64>)],
+    filters: &[(String, Vec<String>)],
 ) -> String {
     let kilo = |v: f64| format!("{:.0}", v * 1000.0);
     let mut out = score
@@ -590,6 +824,20 @@ fn dsl_label(
     for (k, params) in hooks {
         out.push('|');
         out.push_str(&keyed(k, params, &|v| format!("{v}")));
+    }
+    if filters != default_filter_keys().as_slice() {
+        out.push_str("|filter:");
+        let rendered: Vec<String> = filters
+            .iter()
+            .map(|(k, params)| {
+                if params.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{k}:{}", params.join(":"))
+                }
+            })
+            .collect();
+        out.push_str(&rendered.join("+"));
     }
     out
 }
@@ -661,11 +909,87 @@ mod tests {
             "score(pwr=0.5)|score(fgd=0.5)",             // duplicate score section
             "score(pwr,pwr)|bind(weighted:1)",           // duplicate plugin key
             "score(fgd=0.7,pwr=0.3)|mod(loadalpha:0.9:0.0)", // loadalpha needs pwr first
+            "score(pwr)|mod(latticealpha:0.5)",          // latticealpha needs 3
+            "score(pwr)|mod(latticealpha:0.5:1.2:0.1)",  // α_a100 out of range
+            "score(fgd)|mod(latticealpha:0.5:0.5:0.5)",  // latticealpha needs pwr first
             "gibberish(pwr)",                            // unknown section
             "notaprofile",                               // not legacy, no DSL
         ] {
             assert!(SchedulerProfile::parse(bad).is_err(), "accepted '{bad}'");
         }
+    }
+
+    #[test]
+    fn dsl_filter_section_parses_and_overrides() {
+        // No filter section -> the default chain, label unchanged.
+        let p = SchedulerProfile::parse("score(fgd)").unwrap();
+        assert_eq!(p.filters, default_filter_keys());
+        assert!(!p.label.contains("filter"));
+        // Explicit chain with a static selector.
+        let p = SchedulerProfile::parse(
+            "score(fgd)|filter(resources,gpumodel,labels:zone=z1)",
+        )
+        .unwrap();
+        assert_eq!(p.filters.len(), 3);
+        assert_eq!(p.filters[2], ("labels".to_string(), vec!["zone=z1".to_string()]));
+        assert_eq!(p.label, "FGD1000|bestfit|filter:resources+gpumodel+labels:zone=z1");
+        p.build().unwrap();
+        // Explicit default-equivalent chain lowers to the default label.
+        let p = SchedulerProfile::parse(
+            "score(fgd)|filter(resources,gpumodel,miglattice,labels,affinity)",
+        )
+        .unwrap();
+        assert_eq!(p.filters, default_filter_keys());
+        assert!(!p.label.contains("filter"));
+    }
+
+    #[test]
+    fn dsl_filter_section_rejects_malformed() {
+        for bad in [
+            "score(fgd)|filter(nope)",                    // unknown key
+            "score(fgd)|filter()",                        // empty entry
+            "score(fgd)|filter(resources)|filter(labels)", // duplicate section
+            "score(fgd)|filter(resources,resources)",     // duplicate key
+            "score(fgd)|filter(labels:zone)",             // bad selector: no '='
+            "score(fgd)|filter(labels:=z1)",              // bad selector: empty key
+            "score(fgd)|filter(labels:zone=)",            // bad selector: empty value
+            "score(fgd)|filter(resources:1)",             // params on a no-param filter
+        ] {
+            assert!(SchedulerProfile::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn catalog_covers_every_builtin_key() {
+        let cat = registry_catalog();
+        let keys_of = |kind: &str| -> Vec<String> {
+            cat.iter()
+                .filter(|(k, _, _)| *k == kind)
+                .map(|(_, key, _)| key.clone())
+                .collect()
+        };
+        for key in ["pwr", "fgd", "slicefit"] {
+            assert!(keys_of("score").contains(&key.to_string()), "missing score/{key}");
+        }
+        assert!(keys_of("bind").contains(&"weighted".to_string()));
+        assert!(keys_of("mod").contains(&"loadalpha".to_string()));
+        assert!(keys_of("mod").contains(&"latticealpha".to_string()));
+        assert!(keys_of("hook").contains(&"repartition".to_string()));
+        for key in ["resources", "gpumodel", "miglattice", "labels", "affinity"] {
+            assert!(keys_of("filter").contains(&key.to_string()), "missing filter/{key}");
+        }
+        // The default chain's plugin names must all resolve as registry
+        // keys (names double as keys; this is what keeps
+        // `default_filter_keys` and `default_filter_chain` in lockstep).
+        for (key, params) in default_filter_keys() {
+            assert!(params.is_empty());
+            assert!(
+                keys_of("filter").contains(&key),
+                "default chain key '{key}' is not a registered filter"
+            );
+        }
+        // Every row carries a non-empty description.
+        assert!(cat.iter().all(|(_, _, d)| !d.is_empty()));
     }
 
     #[test]
@@ -689,8 +1013,43 @@ mod tests {
             bind: ("first".to_string(), vec![]),
             modulator: None,
             hooks: vec![],
+            filters: vec![],
             label: "test".into(),
         };
         p.build().unwrap();
+    }
+
+    #[test]
+    fn custom_filter_registration_resolves() {
+        use crate::cluster::node::Node;
+        use crate::sched::filter::FilterCtx;
+        use crate::tasks::Task;
+        struct EvenNodesOnly;
+        impl FilterPlugin for EvenNodesOnly {
+            fn name(&self) -> &'static str {
+                "even-nodes"
+            }
+            fn feasible(&self, _: &FilterCtx, node: &Node, _: &Task) -> bool {
+                node.id % 2 == 0
+            }
+        }
+        register_filter_plugin("test-even-nodes", |_params| Ok(Box::new(EvenNodesOnly)))
+            .unwrap();
+        // Built-ins cannot be shadowed.
+        assert!(register_filter_plugin("resources", |_| Ok(Box::new(EvenNodesOnly))).is_err());
+        let p = SchedulerProfile::parse(
+            "score(firstfit)|bind(first)|filter(resources,gpumodel,test-even-nodes)",
+        )
+        .unwrap();
+        let mut sched = p.build().unwrap();
+        // On a 3-node cluster only even node ids are ever selected.
+        let dc = crate::cluster::ClusterSpec::tiny(3, 2, 0).build();
+        let w = crate::tasks::Workload::default();
+        use crate::tasks::GpuDemand;
+        for i in 0..4 {
+            let t = Task::new(i, 1.0, 0.0, GpuDemand::Frac(0.25));
+            let d = sched.schedule(&dc, &w, &t).expect("schedules");
+            assert_eq!(d.node % 2, 0, "odd node selected");
+        }
     }
 }

@@ -106,6 +106,9 @@ pub struct SteadyResult {
     pub repartitions: u64,
     pub proactive_repartitions: u64,
     pub migrated_slices: u64,
+    /// Failures attributed to declarative constraints (see
+    /// [`crate::sched::Scheduler::constraint_unschedulable`]).
+    pub constraint_unschedulable: u64,
     /// Time-averaged EOPC over the second half (warmed-up steady state).
     pub steady_eopc_w: f64,
     /// Time-averaged EOPC with the DRS overlay (idle nodes slept).
@@ -225,6 +228,7 @@ impl SteadySim {
         out.repartitions = self.sched.hook_counter("repartitions");
         out.proactive_repartitions = self.sched.hook_counter("proactive_repartitions");
         out.migrated_slices = self.sched.hook_counter("migrated_slices");
+        out.constraint_unschedulable = self.sched.constraint_unschedulable();
         out
     }
 

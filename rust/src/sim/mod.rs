@@ -51,6 +51,11 @@ pub struct RunResult {
     pub repartitions: u64,
     pub proactive_repartitions: u64,
     pub migrated_slices: u64,
+    /// Failures attributed to declarative constraints: some node had
+    /// the resources but a `filter` constraint (model set / selector /
+    /// affinity / spread) forbade every admissible placement (see
+    /// [`crate::sched::Scheduler::constraint_unschedulable`]).
+    pub constraint_unschedulable: u64,
 }
 
 impl RunResult {
@@ -233,6 +238,7 @@ impl Simulation {
             repartitions: self.sched.hook_counter("repartitions"),
             proactive_repartitions: self.sched.hook_counter("proactive_repartitions"),
             migrated_slices: self.sched.hook_counter("migrated_slices"),
+            constraint_unschedulable: self.sched.constraint_unschedulable(),
         }
     }
 }

@@ -78,8 +78,63 @@ impl GpuDemand {
 /// Number of Table-I buckets.
 pub const NUM_BUCKETS: usize = 6;
 
+/// Declarative feasibility constraints (`C_t` beyond the demand vector),
+/// evaluated by the scheduler's `filter` extension point
+/// ([`crate::sched::filter`]). Every field is optional; the default is
+/// fully unconstrained. Multi-tenant GPU clouds need exactly this
+/// vocabulary (Zambianco et al.): tenant isolation is anti-affinity on a
+/// tenant class key, instance-type restrictions are GPU-model sets, and
+/// blast-radius limits are per-node spread caps.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct TaskConstraints {
+    /// Allowed GPU models — a *set*, generalizing the single
+    /// [`Task::gpu_model`]. Empty = any model.
+    pub gpu_models: Vec<GpuModel>,
+    /// Required node labels: every `(key, value)` pair must be present
+    /// on the node (k8s nodeSelector semantics).
+    pub node_selector: Vec<(String, String)>,
+    /// The task's own class key (tenant / team / job group). Registered
+    /// on the hosting node while the task is resident; affinity rules of
+    /// *other* tasks reference it.
+    pub class_key: Option<String>,
+    /// Anti-affinity: reject nodes currently hosting any task of these
+    /// classes (tenant isolation: list every other tenant's key).
+    pub anti_affinity: Vec<String>,
+    /// Affinity: require a node currently hosting a task of at least one
+    /// of these classes (k8s requiredDuringScheduling semantics).
+    pub affinity: Vec<String>,
+    /// Spread limit: at most this many resident tasks of
+    /// [`Self::class_key`] per node.
+    pub max_per_node: Option<u32>,
+}
+
+impl TaskConstraints {
+    /// True when no constraint is set (the default).
+    pub fn is_unconstrained(&self) -> bool {
+        self.gpu_models.is_empty()
+            && self.node_selector.is_empty()
+            && self.class_key.is_none()
+            && self.anti_affinity.is_empty()
+            && self.affinity.is_empty()
+            && self.max_per_node.is_none()
+    }
+
+    /// Deterministic content signature (FNV-1a over the debug form) —
+    /// used by [`Workload::from_tasks`] so tasks differing only in
+    /// constraints do not collapse into one class.
+    pub fn signature(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in format!("{self:?}").bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
+    }
+}
+
 /// A task submitted to the datacenter: demand vector `D_t` plus the
-/// optional GPU-model constraint from `C_t`. (The trace has no CPU-model
+/// constraint set `C_t` — the legacy single GPU-model pin and the
+/// declarative [`TaskConstraints`]. (The trace has no CPU-model
 /// constraints — the cluster is CPU-homogeneous — so `C_t^CPU` is
 /// omitted.)
 #[derive(Clone, Debug, PartialEq)]
@@ -93,20 +148,36 @@ pub struct Task {
     /// GPU demand (`D_t^GPU`).
     pub gpu: GpuDemand,
     /// If set, the task only runs on nodes with this GPU model
-    /// (`C_t^GPU`; constrained-GPU traces).
+    /// (`C_t^GPU`; constrained-GPU traces). Kept alongside
+    /// [`Task::constraints`] for the legacy traces and the XLA scorer's
+    /// dense encoding.
     pub gpu_model: Option<GpuModel>,
+    /// Declarative constraints (`None` = unconstrained; boxed so the
+    /// common unconstrained task stays one pointer wide).
+    pub constraints: Option<Box<TaskConstraints>>,
 }
 
 impl Task {
     /// Convenience constructor for tests and examples.
     pub fn new(id: u64, cpu: f64, mem: f64, gpu: GpuDemand) -> Task {
-        Task { id, cpu, mem, gpu, gpu_model: None }
+        Task { id, cpu, mem, gpu, gpu_model: None, constraints: None }
     }
 
     /// With a GPU-model constraint.
     pub fn constrained(mut self, model: GpuModel) -> Task {
         self.gpu_model = Some(model);
         self
+    }
+
+    /// With a declarative constraint set (builder style).
+    pub fn with_constraints(mut self, c: TaskConstraints) -> Task {
+        self.constraints = if c.is_unconstrained() { None } else { Some(Box::new(c)) };
+        self
+    }
+
+    /// The declarative constraints, if any.
+    pub fn constraint_set(&self) -> Option<&TaskConstraints> {
+        self.constraints.as_deref()
     }
 }
 
@@ -123,7 +194,10 @@ pub struct TaskClass {
 }
 
 impl TaskClass {
-    /// View the class as a task (for feasibility checks).
+    /// View the class as a task (for feasibility checks). Declarative
+    /// constraints are placement-state-dependent (affinity counts live
+    /// on nodes), so the FGD metric evaluates classes constraint-free
+    /// beyond the model pin.
     pub fn as_task(&self) -> Task {
         Task {
             id: u64::MAX,
@@ -131,6 +205,7 @@ impl TaskClass {
             mem: self.mem,
             gpu: self.gpu,
             gpu_model: self.gpu_model,
+            constraints: None,
         }
     }
 }
@@ -194,11 +269,12 @@ impl Workload {
     pub fn from_tasks(tasks: &[Task]) -> Workload {
         use std::collections::BTreeMap;
         // Signature: (cpu in 0.25-vCPU steps, gpu demand in 1/64 units,
-        // kind tag, constraint index). MIG demands tag their profile so
-        // same-unit profiles of different lattices (e.g. 7g vs a30-4g,
-        // both 1.0 units) stay distinct classes — their feasibility
-        // differs per node.
-        let mut groups: BTreeMap<(u64, u64, u8, u8), (Task, usize)> = BTreeMap::new();
+        // kind tag, constraint index, declarative-constraint hash). MIG
+        // demands tag their profile so same-unit profiles of different
+        // lattices (e.g. 7g vs a30-4g, both 1.0 units) stay distinct
+        // classes — their feasibility differs per node. Constraint-free
+        // tasks hash to 0, so legacy grouping is unchanged.
+        let mut groups: BTreeMap<(u64, u64, u8, u8, u64), (Task, usize)> = BTreeMap::new();
         for t in tasks {
             let sig = (
                 (t.cpu * 4.0).round() as u64,
@@ -209,6 +285,7 @@ impl Workload {
                     _ => 0,
                 },
                 t.gpu_model.map(|m| m.index() as u8 + 1).unwrap_or(0),
+                t.constraints.as_deref().map(TaskConstraints::signature).unwrap_or(0),
             );
             groups.entry(sig).and_modify(|e| e.1 += 1).or_insert((t.clone(), 1));
         }
@@ -369,6 +446,37 @@ mod tests {
         ];
         let w = Workload::from_tasks(&tasks);
         assert_eq!(w.classes.len(), 2);
+    }
+
+    #[test]
+    fn workload_distinguishes_declarative_constraints() {
+        let tenant = |k: &str| TaskConstraints {
+            class_key: Some(k.to_string()),
+            anti_affinity: vec!["other".to_string()],
+            ..Default::default()
+        };
+        let tasks = vec![
+            Task::new(0, 4.0, 1024.0, GpuDemand::Whole(1)),
+            Task::new(1, 4.0, 1024.0, GpuDemand::Whole(1)).with_constraints(tenant("a")),
+            Task::new(2, 4.0, 1024.0, GpuDemand::Whole(1)).with_constraints(tenant("b")),
+            Task::new(3, 4.0, 1024.0, GpuDemand::Whole(1)).with_constraints(tenant("a")),
+        ];
+        let w = Workload::from_tasks(&tasks);
+        // unconstrained + tenant-a + tenant-b = 3 classes.
+        assert_eq!(w.classes.len(), 3);
+    }
+
+    #[test]
+    fn empty_constraint_set_normalizes_to_none() {
+        let t = Task::new(0, 1.0, 0.0, GpuDemand::Zero)
+            .with_constraints(TaskConstraints::default());
+        assert!(t.constraints.is_none());
+        assert!(TaskConstraints::default().is_unconstrained());
+        let c = TaskConstraints { max_per_node: Some(2), ..Default::default() };
+        assert!(!c.is_unconstrained());
+        // Signature is deterministic and content-keyed.
+        assert_eq!(c.signature(), c.clone().signature());
+        assert_ne!(c.signature(), TaskConstraints::default().signature());
     }
 
     #[test]

@@ -17,8 +17,35 @@ pub mod io;
 
 use crate::cluster::mig::MigProfile;
 use crate::cluster::types::GpuModel;
-use crate::tasks::{GpuDemand, Task, Workload, NUM_BUCKETS};
+use crate::tasks::{GpuDemand, Task, TaskConstraints, Workload, NUM_BUCKETS};
 use crate::util::rng::{Rng, WeightedIndex};
+
+/// How sampled tasks of a profile get their declarative
+/// [`TaskConstraints`] — the `constrained-<pct>` trace families (the
+/// legacy single-model pin keeps its own [`TaskProfile::constrained`]
+/// flag for the paper's `constrained-gpu-*` traces).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum ConstraintGen {
+    /// No declarative constraints.
+    #[default]
+    None,
+    /// Tenant isolation: the task joins one of [`N_TENANTS`] tenant
+    /// classes and is anti-affine to every other tenant's tasks
+    /// (Zambianco et al.'s multi-tenant MIG-cloud setting).
+    Tenant,
+    /// Instance-type restriction: a sampled two-model GPU set (models
+    /// drawn ∝ their share of cluster GPUs, so demand is serviceable in
+    /// expectation).
+    ModelSet,
+    /// Blast-radius spread: at most [`SPREAD_MAX_PER_NODE`] tasks of
+    /// the task's demand-bucket class per node.
+    Spread,
+}
+
+/// Tenant classes of [`ConstraintGen::Tenant`].
+pub const N_TENANTS: usize = 4;
+/// Per-node cap of [`ConstraintGen::Spread`].
+pub const SPREAD_MAX_PER_NODE: u32 = 4;
 
 /// One demand profile in a trace's catalog.
 #[derive(Clone, Debug, PartialEq)]
@@ -30,6 +57,8 @@ pub struct TaskProfile {
     /// (chosen ∝ the model's share of cluster GPUs, so that demand is
     /// serviceable in expectation).
     pub constrained: bool,
+    /// Declarative-constraint generator for sampled tasks.
+    pub constraint: ConstraintGen,
 }
 
 /// A declarative trace: weighted profile catalog + nominal size.
@@ -67,7 +96,13 @@ const ONE_GPU_CPU_WEIGHTS: [f64; 5] = [0.20, 0.30, 0.20, 0.20, 0.10];
 const MEM_PER_VCPU_MIB: f64 = 3072.0;
 
 fn profile(cpu: f64, gpu: GpuDemand) -> TaskProfile {
-    TaskProfile { cpu, mem: cpu * MEM_PER_VCPU_MIB, gpu, constrained: false }
+    TaskProfile {
+        cpu,
+        mem: cpu * MEM_PER_VCPU_MIB,
+        gpu,
+        constrained: false,
+        constraint: ConstraintGen::None,
+    }
 }
 
 impl TraceSpec {
@@ -174,6 +209,35 @@ impl TraceSpec {
         }
         spec.profiles.extend(extra);
         spec.name = format!("constrained-gpu-{:.0}", pct * 100.0);
+        spec
+    }
+
+    /// **Constraint-aware** derived trace (`constrained-<pct>`): `pct`
+    /// of GPU tasks carry a declarative [`TaskConstraints`] — 40%
+    /// tenant anti-affinity ([`ConstraintGen::Tenant`]), 40% GPU-model
+    /// sets ([`ConstraintGen::ModelSet`]), 20% per-node spread caps
+    /// ([`ConstraintGen::Spread`]); demand marginals match Default.
+    /// The `ext-filters` experiment sweeps `pct` ∈ {0, 25, 50}%.
+    pub fn constrained(pct: f64) -> TraceSpec {
+        assert!((0.0..=1.0).contains(&pct));
+        let mut spec = Self::default_trace();
+        let mut extra = Vec::new();
+        for (p, w) in &mut spec.profiles {
+            if p.gpu.is_gpu() {
+                for (kind, share) in [
+                    (ConstraintGen::Tenant, 0.4),
+                    (ConstraintGen::ModelSet, 0.4),
+                    (ConstraintGen::Spread, 0.2),
+                ] {
+                    let mut c = p.clone();
+                    c.constraint = kind;
+                    extra.push((c, *w * pct * share));
+                }
+                *w *= 1.0 - pct;
+            }
+        }
+        spec.profiles.extend(extra);
+        spec.name = format!("constrained-{:.0}", pct * 100.0);
         spec
     }
 
@@ -289,6 +353,9 @@ impl TraceSpec {
         if let Some(pct) = name.strip_prefix("constrained-gpu-") {
             return pct.parse::<f64>().ok().map(|p| Self::constrained_gpu(p / 100.0));
         }
+        if let Some(pct) = name.strip_prefix("constrained-") {
+            return pct.parse::<f64>().ok().map(|p| Self::constrained(p / 100.0));
+        }
         None
     }
 
@@ -359,7 +426,43 @@ impl TraceSpec {
         } else {
             None
         };
-        Task { id, cpu: p.cpu, mem: p.mem, gpu: p.gpu, gpu_model }
+        // Declarative constraints (constraint-free profiles draw no
+        // extra randomness, so legacy traces are bit-identical).
+        let constraints = match p.constraint {
+            ConstraintGen::None => None,
+            ConstraintGen::Tenant => {
+                let t = rng.below(N_TENANTS);
+                Some(TaskConstraints {
+                    class_key: Some(format!("tenant-{t}")),
+                    anti_affinity: (0..N_TENANTS)
+                        .filter(|&i| i != t)
+                        .map(|i| format!("tenant-{i}"))
+                        .collect(),
+                    ..Default::default()
+                })
+            }
+            ConstraintGen::ModelSet => {
+                let a = GpuModel::ALL[model_index.sample(rng)];
+                let b = GpuModel::ALL[model_index.sample(rng)];
+                Some(TaskConstraints {
+                    gpu_models: if a == b { vec![a] } else { vec![a, b] },
+                    ..Default::default()
+                })
+            }
+            ConstraintGen::Spread => Some(TaskConstraints {
+                class_key: Some(format!("spread-{}", p.gpu.bucket())),
+                max_per_node: Some(SPREAD_MAX_PER_NODE),
+                ..Default::default()
+            }),
+        };
+        Task {
+            id,
+            cpu: p.cpu,
+            mem: p.mem,
+            gpu: p.gpu,
+            gpu_model,
+            constraints: constraints.map(Box::new),
+        }
     }
 
     /// Build a with-replacement sampler for Monte-Carlo inflation.
@@ -631,6 +734,67 @@ mod tests {
             });
             assert_eq!(has_large, !small_only);
         }
+    }
+
+    #[test]
+    fn constrained_trace_tags_declarative_constraints() {
+        let spec = TraceSpec::constrained(0.5);
+        assert_eq!(spec.name, "constrained-50");
+        // Name → spec roundtrip (and no clash with constrained-gpu-*).
+        let back = TraceSpec::by_name("constrained-50").unwrap();
+        assert_eq!(back.profiles.len(), spec.profiles.len());
+        assert_eq!(TraceSpec::by_name("constrained-gpu-33").unwrap().name, "constrained-gpu-33");
+        let trace = spec.synthesize(17);
+        let gpu_tasks: Vec<_> = trace.tasks.iter().filter(|t| t.gpu.is_gpu()).collect();
+        let constrained = gpu_tasks.iter().filter(|t| t.constraints.is_some()).count();
+        let frac = constrained as f64 / gpu_tasks.len() as f64;
+        assert!((frac - 0.5).abs() < 0.03, "constrained fraction {frac}");
+        // CPU-only tasks never carry constraints.
+        assert!(trace
+            .tasks
+            .iter()
+            .filter(|t| !t.gpu.is_gpu())
+            .all(|t| t.constraints.is_none()));
+        // All three kinds appear, with sane contents.
+        let (mut tenants, mut sets, mut spreads) = (0usize, 0usize, 0usize);
+        for t in &trace.tasks {
+            let Some(c) = t.constraints.as_deref() else { continue };
+            if !c.anti_affinity.is_empty() {
+                tenants += 1;
+                let key = c.class_key.as_deref().unwrap();
+                assert!(key.starts_with("tenant-"));
+                assert_eq!(c.anti_affinity.len(), N_TENANTS - 1);
+                assert!(!c.anti_affinity.iter().any(|k| k == key), "self-anti-affine");
+            } else if !c.gpu_models.is_empty() {
+                sets += 1;
+                assert!(c.gpu_models.len() <= 2);
+            } else {
+                spreads += 1;
+                assert_eq!(c.max_per_node, Some(SPREAD_MAX_PER_NODE));
+                assert!(c.class_key.as_deref().unwrap().starts_with("spread-"));
+            }
+        }
+        assert!(tenants > 0 && sets > 0 && spreads > 0, "{tenants}/{sets}/{spreads}");
+        // 40/40/20 split, loosely.
+        let total = (tenants + sets + spreads) as f64;
+        assert!((tenants as f64 / total - 0.4).abs() < 0.05);
+        assert!((spreads as f64 / total - 0.2).abs() < 0.05);
+        // Demand marginals match Default (constraints ride along).
+        let pop = spec.population_pct();
+        for (i, (&got, &want)) in pop.iter().zip(&TABLE1_POPULATION).enumerate() {
+            assert!((got - want).abs() < 0.05, "bucket {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn constraint_free_sampling_is_bit_identical_to_legacy() {
+        // The constraint generator must not perturb the RNG stream of
+        // constraint-free traces: synthesize(default) is unchanged.
+        let a = TraceSpec::default_trace().synthesize(42);
+        assert!(a.tasks.iter().all(|t| t.constraints.is_none()));
+        // constrained(0.0) leaves every constrained profile at weight 0.
+        let b = TraceSpec::constrained(0.0).synthesize(42);
+        assert!(b.tasks.iter().all(|t| t.constraints.is_none()));
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Filter-pipeline equivalence regression suite.
+//!
+//! The filter redesign must be invisible on constraint-free traces: the
+//! default plugin chain (`resources` ∧ `gpumodel` ∧ `miglattice` ∧
+//! `labels` ∧ `affinity`) replacing the pre-redesign inlined
+//! `node.can_fit(task)` call has to produce **bit-identical** fixed-seed
+//! runs against a scheduler whose chain is exactly the legacy monolithic
+//! `can_fit` — across policies × trace families × seeds, in both
+//! simulation loops (inflation and steady-state churn). The PreFilter
+//! early-exit is covered by construction: a PreFilter veto can only fire
+//! when the node loop would find nothing, so counts and RNG streams
+//! cannot drift.
+//!
+//! The suite also pins the constraint side: at 50% constrained load the
+//! pipeline must both keep scheduling and report a nonzero
+//! unschedulable-due-to-constraints counter (the `ext-filters`
+//! acceptance criterion), and committed placements must respect tenant
+//! anti-affinity and spread caps.
+
+use repro::cluster::node::{Node, ResourceView};
+use repro::cluster::ClusterSpec;
+use repro::sched::filter::{FilterCtx, FilterPlugin};
+use repro::sched::SchedulerProfile;
+use repro::sim::events::{SteadyConfig, SteadySim};
+use repro::sim::{RunResult, Simulation};
+use repro::tasks::Task;
+use repro::trace::TraceSpec;
+
+/// The pre-redesign Filter phase, verbatim: one monolithic `can_fit`.
+struct LegacyCanFit;
+
+impl FilterPlugin for LegacyCanFit {
+    fn name(&self) -> &'static str {
+        "legacy-canfit"
+    }
+    fn feasible(&self, _ctx: &FilterCtx, node: &Node, task: &Task) -> bool {
+        node.can_fit(task)
+    }
+}
+
+fn run_inflation(
+    policy: &str,
+    legacy_filter: bool,
+    cluster: &ClusterSpec,
+    trace: &TraceSpec,
+    seed: u64,
+    target: f64,
+) -> RunResult {
+    let mut sched = SchedulerProfile::parse(policy).unwrap().build().unwrap();
+    if legacy_filter {
+        sched.set_filters(vec![Box::new(LegacyCanFit)]);
+    }
+    let dc = cluster.build();
+    let workload = trace.synthesize(seed ^ 0x57AB1E).workload();
+    let mut sim = Simulation::with_spec(dc, sched, trace, workload, seed);
+    sim.record_frag = false;
+    sim.run_inflation(target)
+}
+
+fn assert_bit_identical(what: &str, a: &RunResult, b: &RunResult) {
+    assert_eq!(a.submitted, b.submitted, "{what}: submitted diverged");
+    assert_eq!(a.scheduled, b.scheduled, "{what}: scheduled diverged");
+    assert_eq!(a.failed, b.failed, "{what}: failed diverged");
+    assert_eq!(
+        a.allocated_gpu_units.to_bits(),
+        b.allocated_gpu_units.to_bits(),
+        "{what}: allocated units diverged"
+    );
+    assert_eq!(
+        a.final_eopc().to_bits(),
+        b.final_eopc().to_bits(),
+        "{what}: final EOPC diverged ({} vs {})",
+        a.final_eopc(),
+        b.final_eopc()
+    );
+    assert_eq!(
+        a.final_grar().to_bits(),
+        b.final_grar().to_bits(),
+        "{what}: final GRAR diverged"
+    );
+}
+
+/// Property sweep: the default filter chain is placement-equivalent to
+/// the monolithic `can_fit` on constraint-free random traces — every
+/// policy family × trace family × seed must reproduce bit for bit.
+#[test]
+fn pipeline_matches_can_fit_on_constraint_free_inflation() {
+    let cluster = ClusterSpec::tiny(6, 4, 1);
+    let traces = [
+        TraceSpec::default_trace(),
+        TraceSpec::sharing_gpu(1.0),
+        TraceSpec::multi_gpu(0.2),
+        // The legacy model-pin trace: `gpumodel` must equal can_fit's
+        // inline model check.
+        TraceSpec::constrained_gpu(0.33),
+    ];
+    for policy in ["fgd", "pwrfgd:0.1", "bestfit", "dotprod", "firstfit", "random"] {
+        for trace in &traces {
+            for seed in [1u64, 42] {
+                let what = format!("{policy}/{}/seed{seed}", trace.name);
+                let pipeline = run_inflation(policy, false, &cluster, trace, seed, 0.7);
+                let legacy = run_inflation(policy, true, &cluster, trace, seed, 0.7);
+                assert!(pipeline.submitted > 0, "{what}: empty run");
+                assert_bit_identical(&what, &pipeline, &legacy);
+                assert_eq!(
+                    pipeline.constraint_unschedulable, 0,
+                    "{what}: constraint counter fired on a constraint-free trace"
+                );
+            }
+        }
+    }
+}
+
+/// Same equivalence on a MIG cluster with slice demands (the
+/// `miglattice` plugin + `resources`' lattice-gated quantity check).
+#[test]
+fn pipeline_matches_can_fit_on_mig_inflation() {
+    let cluster = ClusterSpec::mig_het_cluster(3, 2, 4, 1);
+    let trace = TraceSpec::mig_het_trace(0.3, 0.4);
+    for policy in ["mig-fgd", "mig-pwrfgd:0.1", "mig-slicefit"] {
+        let pipeline = run_inflation(policy, false, &cluster, &trace, 11, 0.8);
+        let legacy = run_inflation(policy, true, &cluster, &trace, 11, 0.8);
+        assert!(pipeline.scheduled > 0, "{policy}: scheduled nothing");
+        assert_bit_identical(policy, &pipeline, &legacy);
+    }
+}
+
+/// The churn loop (arrivals + departures) through `Scheduler::place`/
+/// `release` must agree too — the second simulation loop of the
+/// placement-equivalence property.
+#[test]
+fn pipeline_matches_can_fit_under_churn() {
+    let cfg = SteadyConfig {
+        mean_interarrival_s: 1.0,
+        mean_duration_s: 250.0,
+        horizon_s: 2_500.0,
+        sample_every_s: 50.0,
+        seed: 9,
+    };
+    let cluster = ClusterSpec::tiny(8, 4, 2);
+    let trace = TraceSpec::default_trace();
+    let run = |legacy: bool| {
+        let mut sched = SchedulerProfile::parse("pwrfgd:0.1").unwrap().build().unwrap();
+        if legacy {
+            sched.set_filters(vec![Box::new(LegacyCanFit)]);
+        }
+        let mut sim = SteadySim::new(cluster.build(), sched, &trace, &cfg);
+        sim.run(&cfg)
+    };
+    let a = run(false);
+    let b = run(true);
+    assert!(a.arrivals > 1_000, "arrivals {}", a.arrivals);
+    assert_eq!(a.arrivals, b.arrivals);
+    assert_eq!(a.scheduled, b.scheduled);
+    assert_eq!(a.failed, b.failed);
+    assert_eq!(a.departures, b.departures);
+    assert_eq!(
+        a.steady_eopc_w.to_bits(),
+        b.steady_eopc_w.to_bits(),
+        "steady EOPC diverged"
+    );
+    assert_eq!(a.constraint_unschedulable, 0);
+}
+
+/// The `ext-filters` acceptance scenario in miniature: a 50% constrained
+/// trace on a small cluster must run end to end, fail some tasks *due to
+/// constraints* (nonzero counter, bounded by total failures), and every
+/// committed placement must satisfy tenant isolation and spread caps.
+#[test]
+fn constrained_load_reports_constraint_unschedulable() {
+    let cluster = ClusterSpec::tiny(4, 4, 1);
+    let trace = TraceSpec::constrained(0.5);
+    let r = run_inflation("pwrfgd:0.1", false, &cluster, &trace, 3, 1.0);
+    assert!(r.scheduled > 0, "nothing scheduled under constraints");
+    assert!(
+        r.constraint_unschedulable > 0,
+        "50% constrained load never hit a constraint failure"
+    );
+    assert!(
+        r.constraint_unschedulable <= r.failed,
+        "constraint failures ({}) exceed total failures ({})",
+        r.constraint_unschedulable,
+        r.failed
+    );
+    // Determinism of the constrained path.
+    let r2 = run_inflation("pwrfgd:0.1", false, &cluster, &trace, 3, 1.0);
+    assert_eq!(r.constraint_unschedulable, r2.constraint_unschedulable);
+    assert_bit_identical("constrained-50 determinism", &r, &r2);
+}
+
+/// Committed cluster state respects the constraint semantics: no node
+/// ever hosts two different tenants, and no node exceeds a spread cap.
+#[test]
+fn committed_placements_respect_constraints() {
+    use repro::trace::SPREAD_MAX_PER_NODE;
+    let dc = ClusterSpec::tiny(4, 4, 1).build();
+    let trace = TraceSpec::constrained(0.75);
+    let sched = SchedulerProfile::parse("pwrfgd:0.1").unwrap().build().unwrap();
+    let workload = trace.synthesize(5 ^ 0x57AB1E).workload();
+    let mut sim = Simulation::with_spec(dc, sched, &trace, workload, 5);
+    sim.record_frag = false;
+    sim.run_inflation(1.0);
+    for node in &sim.dc.nodes {
+        let tenants: Vec<&String> = node
+            .class_counts
+            .keys()
+            .filter(|k| k.starts_with("tenant-"))
+            .collect();
+        assert!(
+            tenants.len() <= 1,
+            "node {} hosts multiple tenants: {tenants:?}",
+            node.id
+        );
+        for (key, &count) in &node.class_counts {
+            if key.starts_with("spread-") {
+                assert!(
+                    count <= SPREAD_MAX_PER_NODE,
+                    "node {} exceeds spread cap on {key}: {count}",
+                    node.id
+                );
+            }
+        }
+    }
+}
