@@ -198,6 +198,16 @@ impl Datacenter {
         self.nodes.iter().filter(|n| n.is_active()).count()
     }
 
+    /// Nodes currently in the
+    /// [`crate::cluster::node::PowerState::Asleep`] power state (the
+    /// EOPC series' nodes-asleep column; zero without a DRS hook).
+    pub fn asleep_nodes(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.power_state == crate::cluster::node::PowerState::Asleep)
+            .count()
+    }
+
     /// Number of GPUs with any allocation (drawing `p_max` in Eq. 2).
     pub fn active_gpus(&self) -> usize {
         self.nodes

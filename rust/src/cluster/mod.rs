@@ -12,5 +12,5 @@ pub mod types;
 pub use datacenter::Datacenter;
 pub use inventory::ClusterSpec;
 pub use mig::{MigGpu, MigInstance, MigLattice, MigProfile};
-pub use node::{Node, Placement, ResourceView};
+pub use node::{Node, Placement, PowerState, ResourceView};
 pub use types::{CpuModel, GpuModel};

@@ -34,6 +34,40 @@ pub(crate) fn class_count_remove(map: &mut std::collections::HashMap<String, u32
     }
 }
 
+/// Node power state — the DRS (Dynamic Resource Scaling) state
+/// machine (`rust/src/sched/drs.rs`, `docs/power.md`). Without a DRS
+/// hook every node stays `Active` forever, which keeps all pre-DRS
+/// behavior bit-identical (pinned by `rust/tests/drs_equivalence.rs`).
+///
+/// ```text
+///            idle ≥ idle_timeout           next tick, still idle
+///   Active ───────────────────▶ Draining ───────────────────▶ Asleep
+///     ▲  ▲                         │                            │
+///     │  │ ready_at reached        │ demand pressure            │ demand pressure
+///     │  └────────── Waking ◀──────┼────────────────────────────┘
+///     └─────────────────(cancel: never slept)
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PowerState {
+    /// Powered and schedulable — the only state without DRS.
+    #[default]
+    Active,
+    /// Marked for sleep: still fully powered and drawing idle watts,
+    /// but excluded from placement by the `drs` filter plugin. The DRS
+    /// hook completes the transition to `Asleep` on its next tick, or
+    /// cancels back to `Active` for free under demand pressure.
+    Draining,
+    /// Powered down: draws [`crate::power::NODE_STANDBY_W`] instead of
+    /// its Eq. 1/2 idle wattage; excluded from placement until woken.
+    Asleep,
+    /// Booting after a wake request; becomes `Active` once the
+    /// scheduler-event clock reaches `ready_at`. Excluded from
+    /// placement (it cannot host work yet) but counted as future
+    /// capacity by the aggregate PreFilter checks, which read
+    /// state-independent [`crate::cluster::Datacenter`] totals.
+    Waking { ready_at: u64 },
+}
+
 /// Where a task lands inside a node.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Placement {
@@ -204,6 +238,10 @@ pub struct Node {
     /// `affinity` filter plugin reads. Maintained by
     /// [`Node::allocate`] / [`Node::deallocate`].
     pub class_counts: std::collections::HashMap<String, u32>,
+    /// DRS power state (always [`PowerState::Active`] unless a `drs`
+    /// hook drives the sleep/wake lifecycle). Read by the `drs` filter
+    /// plugin and the state-aware datacenter power sums.
+    pub power_state: PowerState,
 }
 
 impl Node {
@@ -231,6 +269,7 @@ impl Node {
             n_tasks: 0,
             labels: Vec::new(),
             class_counts: std::collections::HashMap::new(),
+            power_state: PowerState::Active,
         }
     }
 
@@ -547,6 +586,9 @@ mod tests {
         assert_eq!(n.gpus_fully_free(), 8);
         assert_eq!(n.u_n(), 8.0);
         assert!(!n.is_active());
+        // Nodes are born powered on; only a DRS hook changes this.
+        assert_eq!(n.power_state, PowerState::Active);
+        assert_eq!(PowerState::default(), PowerState::Active);
     }
 
     #[test]

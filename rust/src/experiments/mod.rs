@@ -20,6 +20,11 @@
 //! `repro experiment all` shares the 10-repetition simulations between
 //! the savings figures (3–6) and the GRAR figures (7–10), exactly as the
 //! paper evaluates both metrics on the same runs.
+//!
+//! Beyond the paper: `ext-dynalpha`, `ext-steady`, `ext-mig`,
+//! `ext-mig-het`, `ext-profiles`, `ext-filters`, `ext-drs` (the DRS
+//! sleep/wake sweep on diurnal load — `docs/power.md`) and
+//! `ablation-tiebreak`.
 
 use std::collections::HashMap;
 
@@ -72,6 +77,13 @@ pub const MIG_HET_FRAG_THRESHOLD: f64 = 0.5;
 /// `ext-filters` knob: the constrained-task shares swept over the
 /// `constrained-<pct>` trace family.
 pub const EXT_FILTERS_PCTS: [f64; 3] = [0.0, 0.25, 0.5];
+
+/// `ext-drs` knobs: the idle-timeout × wake-latency sweep
+/// (scheduler-event ticks — see `docs/power.md`) and the diurnal
+/// arrival-rate amplitude.
+pub const EXT_DRS_TIMEOUTS: [f64; 3] = [50.0, 200.0, 800.0];
+pub const EXT_DRS_LATENCIES: [u64; 2] = [0, 100];
+pub const EXT_DRS_AMPLITUDE: f64 = 0.6;
 
 /// The three selected combinations (§VI-B) + the four competitors used
 /// in Figs. 3–10.
@@ -201,12 +213,13 @@ impl Harness {
             "ext-mig-het" => self.ext_mig_het(),
             "ext-profiles" => self.ext_profiles(),
             "ext-filters" => self.ext_filters(),
+            "ext-drs" => self.ext_drs(),
             "ablation-tiebreak" => self.ablation_tiebreak(),
             "all" => {
                 let ids = [
                     "table1", "table2", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
                     "fig7", "fig8", "fig9", "fig10", "ext-dynalpha", "ext-steady",
-                    "ext-mig", "ext-mig-het", "ext-profiles", "ext-filters",
+                    "ext-mig", "ext-mig-het", "ext-profiles", "ext-filters", "ext-drs",
                     "ablation-tiebreak",
                 ];
                 let mut out = Vec::new();
@@ -700,6 +713,146 @@ impl Harness {
         }
         w.flush()?;
         out.push(path);
+        Ok(out)
+    }
+
+    /// Extension: the DRS sleep/wake subsystem (`docs/power.md`) on
+    /// diurnal load. Steady-state churn with a sinusoidal arrival rate
+    /// (`diurnal-<amp>` trace family); baseline PWR⊕FGD (every node
+    /// powered forever) against PWR⊕FGD+consolidate with a
+    /// `hook(drs:timeout:latency)` across the idle-timeout ×
+    /// wake-latency grid. Emits the sweep summary (EOPC, GRAR, asleep
+    /// nodes, sleep/wake churn) plus an EOPC/asleep time series for
+    /// one representative cell, showing the power curve following the
+    /// diurnal valley instead of flooring at idle watts.
+    fn ext_drs(&mut self) -> Result<Vec<String>> {
+        use crate::sim::events::{SteadyConfig, SteadySim};
+        let scale = self.cfg.scale.min(1.0);
+        // Two full diurnal cycles; offered load leaves headroom so the
+        // valleys actually empty nodes (≈ 35% mean GPU utilization).
+        let horizon = 24_000.0 * scale;
+        let trace = TraceSpec::diurnal_with_period(EXT_DRS_AMPLITUDE, horizon / 2.0);
+        // Steady-state runs are wall-clock-bound like ext-steady's, and
+        // this sweep runs 1 + |timeouts|·|latencies| policies — cap the
+        // repetitions the same way ext-steady does (min 5).
+        let reps = self.cfg.reps.min(5).max(1);
+        let run = |policy: &SchedulerProfile| -> Vec<crate::sim::events::SteadyResult> {
+            (0..reps)
+                .map(|rep| {
+                    let cfg = SteadyConfig {
+                        mean_interarrival_s: 1.0,
+                        mean_duration_s: 3_000.0 * scale,
+                        horizon_s: horizon,
+                        sample_every_s: 200.0 * scale,
+                        seed: self.cfg.seed + rep as u64,
+                    };
+                    let sched = policy.build().expect("valid ext-drs profile");
+                    let mut sim = SteadySim::new(self.cluster.build(), sched, &trace, &cfg);
+                    sim.run(&cfg)
+                })
+                .collect()
+        };
+        let base_profile: SchedulerProfile = PolicyKind::PwrFgd { alpha: 0.1 }.into();
+        let drs_profile = |timeout: f64, latency: u64| -> SchedulerProfile {
+            SchedulerProfile::parse(&format!(
+                "score(pwr=0.1,fgd=0.7,consolidate=0.2)|bind(weighted:0.1)|hook(drs:{timeout}:{latency})"
+            ))
+            .expect("valid drs profile")
+        };
+        let mean = crate::util::stats::mean;
+        let summarize = |runs: &[crate::sim::events::SteadyResult]| -> [f64; 6] {
+            [
+                mean(&runs.iter().map(|r| r.steady_eopc_w).collect::<Vec<_>>()),
+                mean(&runs.iter().map(|r| r.final_grar()).collect::<Vec<_>>()),
+                mean(&runs
+                    .iter()
+                    .map(|r| r.failed as f64 / r.arrivals.max(1) as f64)
+                    .collect::<Vec<_>>()),
+                mean(&runs.iter().map(|r| r.mean_asleep_nodes).collect::<Vec<_>>()),
+                mean(&runs.iter().map(|r| r.drs_sleeps as f64).collect::<Vec<_>>()),
+                mean(&runs.iter().map(|r| r.drs_wakes as f64).collect::<Vec<_>>()),
+            ]
+        };
+        let path = self.out_path("ext_drs.csv");
+        let mut w = CsvWriter::create(
+            &path,
+            &[
+                "policy", "idle_timeout", "wake_latency", "steady_eopc_kw", "grar",
+                "failure_rate", "mean_asleep_nodes", "sleeps", "wakes",
+            ],
+        )?;
+        eprintln!(
+            "[experiment] running {} / {} ({} reps, {} nodes)…",
+            trace.name,
+            base_profile.label,
+            reps,
+            self.cluster.total_nodes()
+        );
+        let base_runs = run(&base_profile);
+        let b = summarize(&base_runs);
+        w.row_str(&[
+            base_profile.label.clone(),
+            "inf".into(),
+            "-".into(),
+            format!("{:.1}", b[0] / 1e3),
+            format!("{:.4}", b[1]),
+            format!("{:.4}", b[2]),
+            format!("{:.1}", b[3]),
+            format!("{:.1}", b[4]),
+            format!("{:.1}", b[5]),
+        ])?;
+        // Keep the representative cell's series for the second CSV.
+        let mut series_cell: Option<(String, crate::metrics::RunSeries)> = None;
+        for &timeout in &EXT_DRS_TIMEOUTS {
+            for &latency in &EXT_DRS_LATENCIES {
+                let profile = drs_profile(timeout, latency);
+                eprintln!(
+                    "[experiment] running {} / {} (timeout {timeout}, latency {latency})…",
+                    trace.name, profile.label
+                );
+                let runs = run(&profile);
+                let s = summarize(&runs);
+                w.row_str(&[
+                    profile.label.clone(),
+                    format!("{timeout}"),
+                    format!("{latency}"),
+                    format!("{:.1}", s[0] / 1e3),
+                    format!("{:.4}", s[1]),
+                    format!("{:.4}", s[2]),
+                    format!("{:.1}", s[3]),
+                    format!("{:.1}", s[4]),
+                    format!("{:.1}", s[5]),
+                ])?;
+                if series_cell.is_none()
+                    && timeout == EXT_DRS_TIMEOUTS[1]
+                    && latency == EXT_DRS_LATENCIES[0]
+                {
+                    series_cell =
+                        Some((profile.label.clone(), runs[0].series.clone()));
+                }
+            }
+        }
+        w.flush()?;
+        let mut out = vec![path];
+        // Time series: base vs the representative DRS cell (first rep;
+        // both runs share the sampling cadence, so rows align).
+        if let Some((drs_label, drs_series)) = series_cell {
+            let path = self.out_path("ext_drs_series.csv");
+            let mut w = CsvWriter::create(
+                &path,
+                &["x", "eopc_base_kw", "eopc_drs_kw", "asleep_drs"],
+            )?;
+            let base_series = &base_runs[0].series;
+            let n = base_series.points.len().min(drs_series.points.len());
+            for i in 0..n {
+                let bp = &base_series.points[i];
+                let dp = &drs_series.points[i];
+                w.row(&[bp.x, bp.eopc / 1e3, dp.eopc / 1e3, dp.asleep_nodes])?;
+            }
+            w.flush()?;
+            eprintln!("[experiment]   series cell: {drs_label}");
+            out.push(path);
+        }
         Ok(out)
     }
 

@@ -18,38 +18,21 @@
 //! assert this.
 //!
 //! Beyond the paper, the crate models **MIG partitioning**
-//! (`docs/mig.md`): per-model slice lattices (A100-7g and A30-4g) on
-//! [`cluster::mig`], slice-granular demands
-//! ([`tasks::GpuDemand::Mig`]) and placements, slice-level
-//! fragmentation ([`frag`]) and per-slice power attribution
-//! ([`power`]), MIG-aware policies with an online repartitioner —
-//! reactive on placement failure, proactive past a configurable
-//! frag-ratio threshold — ([`sched::policies::mig`]), heterogeneous
-//! A100+A30 fleets, and the `ext-mig` / `ext-mig-het` experiments.
-//!
-//! Scheduling is organized as **profiles over named extension points**
-//! (`docs/scheduler.md`): a [`sched::SchedulerProfile`] names entries
-//! in string-keyed registries for `score` (N weighted plugins), `bind`,
-//! `weightModulator` (load-adaptive α generalized; per-lattice α),
-//! `postPlace`/`postFail` hooks (the MIG repartitioner) and `filter`
-//! — declarative feasibility ([`sched::filter`]): the paper's Filter
-//! phase decomposed into plugins plus [`tasks::TaskConstraints`]
-//! (GPU-model sets, node selectors, tenant affinity/anti-affinity,
-//! spread caps) with a k8s-style PreFilter early-exit — with a textual
-//! DSL behind `--policy` —
-//! `score(pwr=0.5,fgd=0.3,dotprod=0.2)|bind(weighted:0.5)|mod(loadalpha:0.9:0.0)|filter(resources,gpumodel,labels:zone=z0)` —
-//! and every legacy policy name kept as sugar with a byte-identical
-//! label (`ext-profiles` sweeps composite profiles against PWR⊕FGD;
-//! `ext-filters` sweeps PWR⊕FGD under 0/25/50% constrained traces).
+//! (`docs/mig.md`), organizes scheduling as **profiles over named
+//! extension points** with a `--policy` DSL (`docs/scheduler.md`),
+//! and adds the **DRS node sleep/wake subsystem** with a documented,
+//! state-aware power layer (`docs/power.md`): [`cluster::PowerState`]
+//! on every node, the [`sched::drs`] hook/filter/score plugins,
+//! `diurnal-<amp>` traces and the `ext-drs` experiment.
 //!
 //! ## Layer map
-//! * L3 (this crate): coordinator, simulator, the profile-driven
-//!   scheduling framework ([`sched::framework`], [`sched::profile`],
-//!   [`sched::filter`], `docs/scheduler.md`) with its policy zoo
-//!   (incl. the MIG family + repartitioner hook), experiments.
-//! * L2 (`python/compile/model.py`): the scoring graph, lowered once to
-//!   `artifacts/*.hlo.txt`.
-//! * L1 (`python/compile/kernels/score.py`): the Pallas scoring kernel.
+//!
+//! See **`docs/architecture.md`** for the one-page layer map (trace →
+//! cluster → sched framework → sim loops → experiments/CLI) and the
+//! full extension-point registry table (`repro list-plugins` prints it
+//! live). The XLA side: L2 (`python/compile/model.py`) lowers the
+//! scoring graph to `artifacts/*.hlo.txt`; L1
+//! (`python/compile/kernels/score.py`) is the Pallas scoring kernel.
 //!
 //! ## Quickstart
 //! ```no_run

@@ -2,13 +2,14 @@
 //!
 //! ```text
 //! repro simulate   --policy pwrfgd:0.1 --trace default --seed 42 [--scale 0.25] [--target 1.02]
-//! repro experiment <table1|table2|fig1..fig10|ext-mig|ext-mig-het|ext-profiles|ext-filters|all> [--reps 10] [--scale 1.0] [--out results]
+//! repro experiment <table1|table2|fig1..fig10|ext-mig|ext-mig-het|ext-profiles|ext-filters|ext-drs|all> [--reps 10] [--scale 1.0] [--out results]
 //! repro ext-mig    [--reps 10] [--scale 1.0] [--out results]   (MIG subsystem end-to-end)
 //! repro ext-mig-het [--reps 10] [--scale 1.0] [--out results]  (mixed A100+A30 MIG fleet)
 //! repro ext-profiles [--reps 10] [--scale 1.0] [--out results] (composite profile DSL sweep)
 //! repro ext-filters [--reps 10] [--scale 1.0] [--out results]  (constraint-aware filter sweep)
+//! repro ext-drs    [--reps 10] [--scale 1.0] [--out results]   (DRS sleep/wake on diurnal load)
 //! repro list-plugins                                           (every registry key + description)
-//! repro trace      <default|multi-gpu-20|sharing-gpu-100|constrained-50|mig-30|...> [--seed 42]
+//! repro trace      <default|multi-gpu-20|sharing-gpu-100|constrained-50|mig-30|diurnal-60|...> [--seed 42]
 //! repro inventory
 //! repro serve      [--addr 127.0.0.1:7077] [--policy pwrfgd:0.1]
 //! repro scorer-check [--artifacts artifacts] [--tasks 200]   (XLA vs native parity)
@@ -47,6 +48,7 @@ fn main() -> Result<()> {
         Some("ext-mig-het") => cmd_experiment(&args, Some("ext-mig-het")),
         Some("ext-profiles") => cmd_experiment(&args, Some("ext-profiles")),
         Some("ext-filters") => cmd_experiment(&args, Some("ext-filters")),
+        Some("ext-drs") => cmd_experiment(&args, Some("ext-drs")),
         Some("list-plugins") => cmd_list_plugins(),
         Some("trace") => cmd_trace(&args),
         Some("inventory") => cmd_inventory(),
@@ -55,7 +57,7 @@ fn main() -> Result<()> {
         Some("plot") => cmd_plot(&args),
         _ => {
             eprintln!(
-                "usage: repro <simulate|experiment|ext-mig|ext-mig-het|ext-profiles|ext-filters|list-plugins|trace|inventory|serve|scorer-check|plot> [options]\n\
+                "usage: repro <simulate|experiment|ext-mig|ext-mig-het|ext-profiles|ext-filters|ext-drs|list-plugins|trace|inventory|serve|scorer-check|plot> [options]\n\
                  see rust/src/main.rs header for details"
             );
             Ok(())

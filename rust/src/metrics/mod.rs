@@ -34,6 +34,9 @@ pub struct SeriesPoint {
     pub active_gpus: f64,
     /// Nodes with any allocation.
     pub active_nodes: f64,
+    /// Nodes in the `Asleep` DRS power state, drawing standby watts
+    /// (zero without a `drs` hook — see `docs/power.md`).
+    pub asleep_nodes: f64,
     /// Per-lattice-model breakdowns (heterogeneous MIG fleets): node
     /// power, fragmentation and GRAR restricted to the nodes / demands
     /// of one partition lattice. Zero on non-MIG runs.
@@ -56,6 +59,7 @@ pub enum Column {
     Failures,
     ActiveGpus,
     ActiveNodes,
+    AsleepNodes,
     EopcA100,
     EopcA30,
     FragA100,
@@ -75,6 +79,7 @@ impl Column {
             Column::Failures => p.failures,
             Column::ActiveGpus => p.active_gpus,
             Column::ActiveNodes => p.active_nodes,
+            Column::AsleepNodes => p.asleep_nodes,
             Column::EopcA100 => p.eopc_a100,
             Column::EopcA30 => p.eopc_a30,
             Column::FragA100 => p.frag_a100,

@@ -23,15 +23,30 @@
 //! draws `p_max`. Packing slices onto already-powered GPUs is therefore
 //! strictly cheaper than waking a fresh GPU — the signal the MIG-aware
 //! PWR policies descend, on both lattices.
+//!
+//! **DRS extension (node power states)**: with a `drs` hook attached
+//! (`rust/src/sched/drs.rs`, `docs/power.md`) a node may be `Asleep`,
+//! in which case it draws [`NODE_STANDBY_W`] instead of its Eq. 1/2
+//! idle wattage. `Draining` and `Waking` nodes are fully powered (they
+//! are idle hardware waiting out a deadline / booting), so they report
+//! plain `p_node`. Without a DRS hook every node is `Active` and all
+//! sums below are bit-identical to the pre-DRS model
+//! (`rust/tests/drs_equivalence.rs`).
 
 use crate::cluster::mig::MigLattice;
-use crate::cluster::node::ResourceView;
+use crate::cluster::node::{Node, PowerState, ResourceView};
 use crate::cluster::types::GpuModel;
 use crate::cluster::Datacenter;
 
 /// κ in Eq. 2-MIG: share of a slice's dynamic power an idle slice on a
 /// powered GPU still draws.
 pub const MIG_IDLE_SLICE_FACTOR: f64 = 0.2;
+
+/// Standby wattage of an [`PowerState::Asleep`] node: the BMC + NIC
+/// stay powered for wake-on-LAN (single-digit watts in the DRS
+/// literature, Hu et al.). Far below any node's idle draw, so sleeping
+/// an idle node is always a strict saving.
+pub const NODE_STANDBY_W: f64 = 5.0;
 
 /// Eq. 2-MIG: power of one MIG-partitioned GPU of `lattice` with
 /// occupancy `mask`.
@@ -82,13 +97,31 @@ pub fn p_node<V: ResourceView + ?Sized>(v: &V) -> f64 {
     p_cpu(v) + p_gpu(v)
 }
 
-/// Datacenter power split into (CPU watts, GPU watts). Eq. 3 is the sum.
+/// Observed node power under the DRS power-state machine: an `Asleep`
+/// node draws [`NODE_STANDBY_W`] instead of Eq. 1/2; every other state
+/// is fully powered and reports [`p_node`]. A node contributes exactly
+/// one of the two — standby energy is never double-counted on top of
+/// idle watts (property-pinned by `rust/tests/drs_equivalence.rs`).
+pub fn p_node_observed(n: &Node) -> f64 {
+    match n.power_state {
+        PowerState::Asleep => NODE_STANDBY_W,
+        _ => p_node(n),
+    }
+}
+
+/// Datacenter power split into (CPU watts, GPU watts). Eq. 3 is the
+/// sum. Asleep nodes contribute their standby watts on the CPU side
+/// (the residual draw is motherboard/BMC, not GPU).
 pub fn p_datacenter_split(dc: &Datacenter) -> (f64, f64) {
     let mut cpu = 0.0;
     let mut gpu = 0.0;
     for n in &dc.nodes {
-        cpu += p_cpu(n);
-        gpu += p_gpu(n);
+        if n.power_state == PowerState::Asleep {
+            cpu += NODE_STANDBY_W;
+        } else {
+            cpu += p_cpu(n);
+            gpu += p_gpu(n);
+        }
     }
     (cpu, gpu)
 }
@@ -102,7 +135,11 @@ pub fn p_datacenter_by_lattice(dc: &Datacenter) -> (f64, f64, [f64; 2]) {
     let mut gpu = 0.0;
     let mut by_lattice = [0.0f64; 2];
     for n in &dc.nodes {
-        let (pc, pg) = (p_cpu(n), p_gpu(n));
+        let (pc, pg) = if n.power_state == PowerState::Asleep {
+            (NODE_STANDBY_W, 0.0)
+        } else {
+            (p_cpu(n), p_gpu(n))
+        };
         cpu += pc;
         gpu += pg;
         if let Some(lat) = n.mig_lattice() {
@@ -118,11 +155,14 @@ pub fn p_datacenter(dc: &Datacenter) -> f64 {
     c + g
 }
 
-/// EOPC under a DRS (Dynamic Resource Sleep, Hu et al. [7]) overlay:
-/// fully-idle nodes are assumed powered down (0 W) instead of drawing
-/// idle power. The paper argues PWR composes with hardware-level
-/// techniques like DRS — consolidation frees whole nodes, which is
-/// exactly what DRS can then switch off (`ext-steady` experiment).
+/// EOPC under a hypothetical *overlay* estimate of DRS (Dynamic
+/// Resource Sleep, Hu et al. [7]): fully-idle nodes are assumed
+/// powered down (0 W) instead of drawing idle power, regardless of
+/// their actual [`PowerState`]. This is the what-if upper bound the
+/// `ext-steady` experiment reports; the *realized* DRS subsystem
+/// (`rust/src/sched/drs.rs` + the state-aware sums above) instead
+/// sleeps nodes through an explicit lifecycle with timeouts, wake
+/// latency and standby watts — see `docs/power.md`.
 pub fn p_datacenter_drs(dc: &Datacenter) -> f64 {
     dc.nodes.iter().filter(|n| n.is_active()).map(|n| p_node(n)).sum()
 }
@@ -305,6 +345,36 @@ mod tests {
             p_node(&h) - p_node(&n)
         };
         assert!(d_packed < d_fresh, "packed {d_packed} vs fresh {d_fresh}");
+    }
+
+    #[test]
+    fn asleep_nodes_draw_standby_not_idle() {
+        use crate::cluster::node::PowerState;
+        let mut dc = ClusterSpec::tiny(2, 4, 0).build();
+        let all_on = p_datacenter(&dc);
+        let one_node = p_node(&dc.nodes[0]);
+        assert_eq!(p_node_observed(&dc.nodes[0]), one_node);
+        // Sleep node 0: it contributes NODE_STANDBY_W instead of its
+        // idle watts — exactly once, on the CPU side of the split.
+        dc.nodes[0].power_state = PowerState::Asleep;
+        assert_eq!(p_node_observed(&dc.nodes[0]), NODE_STANDBY_W);
+        let (cpu_w, gpu_w) = p_datacenter_split(&dc);
+        assert!(
+            (cpu_w + gpu_w - (all_on - one_node + NODE_STANDBY_W)).abs() < 1e-9,
+            "split {cpu_w}+{gpu_w} vs expected"
+        );
+        let (c2, g2, _) = p_datacenter_by_lattice(&dc);
+        assert_eq!(c2.to_bits(), cpu_w.to_bits());
+        assert_eq!(g2.to_bits(), gpu_w.to_bits());
+        // Draining / Waking nodes are fully powered.
+        dc.nodes[0].power_state = PowerState::Draining;
+        assert_eq!(p_node_observed(&dc.nodes[0]), one_node);
+        dc.nodes[0].power_state = PowerState::Waking { ready_at: 7 };
+        assert_eq!(p_node_observed(&dc.nodes[0]), one_node);
+        dc.nodes[0].power_state = PowerState::Active;
+        assert_eq!(p_datacenter(&dc).to_bits(), all_on.to_bits());
+        // Standby sits strictly below every node's idle draw.
+        assert!(NODE_STANDBY_W < p_datacenter_idle(&dc) / dc.nodes.len() as f64);
     }
 
     #[test]

@@ -1,0 +1,600 @@
+//! DRS — Dynamic Resource Scaling: the node sleep/wake subsystem.
+//!
+//! The paper's power model (Eq. 1–3, `rust/src/power/mod.rs`) assumes
+//! every node is always powered on, so idle nodes still burn idle
+//! watts and no placement policy can change the *denominator* of the
+//! power objective. The energy-efficient-cluster literature (Hu et
+//! al.'s DRS; see PAPERS.md) shows switching idle nodes off dominates
+//! cluster energy savings. This module realizes that lever as three
+//! composable profile entries (`docs/power.md` documents the whole
+//! layer):
+//!
+//! * [`DrsHook`] — a [`PostHook`] driving the per-node
+//!   [`PowerState`] machine: a node idle for `idle_timeout`
+//!   scheduler-event ticks is drained (`Active → Draining`, one tick of
+//!   grace) and then slept (`Draining → Asleep`, standby watts). On
+//!   demand pressure — a task fails on the awake fleet but would fit a
+//!   sleeper — the hook cancels a drain for free (retry succeeds
+//!   immediately) or boots a sleeper (`Asleep → Waking → Active` after
+//!   `wake_latency` ticks; the triggering task is lost, which is the
+//!   GRAR cost of sleeping that `ext-drs` measures against the EOPC
+//!   gain). DSL: `hook(drs[:idle_timeout[:wake_latency[:sleep_j[:wake_j]]]])`.
+//! * [`DrsFilter`] — the `drs` filter plugin: only `Active` nodes
+//!   accept placements. Part of the default chain (a no-op while every
+//!   node is `Active`, so legacy placements are bit-identical —
+//!   `rust/tests/drs_equivalence.rs` pins this and
+//!   `rust/tests/filter_equivalence.rs` still passes). Its PreFilter
+//!   never vetoes: the aggregate capacity checks read state-independent
+//!   totals, deliberately treating `Waking` (and wakeable `Asleep`)
+//!   nodes as future capacity so the `postFail` wake path always gets
+//!   its chance.
+//! * [`ConsolidatePlugin`] — the `consolidate` score plugin: biases
+//!   placements onto nodes that already host work, so idle nodes reach
+//!   their sleep deadline instead of being re-touched. Composes with
+//!   PWR⊕FGD as `score(pwr=0.4,fgd=0.4,consolidate=0.2)`.
+//!
+//! **Time.** DRS runs on the scheduler-event clock: one tick per
+//! [`crate::sched::Scheduler::place`]/[`crate::sched::Scheduler::release`]
+//! protocol entry, delivered to hooks through the `onTick` phase
+//! *before* each decision. Both simulation loops drive the same
+//! protocol, so tick semantics are identical under monotone inflation
+//! and steady-state churn — no loop-specific wiring exists to skip.
+//!
+//! **Legacy pinning.** `idle_timeout = ∞` (the default; `-1` in the
+//! DSL) never sleeps anything, every node stays `Active`, and runs are
+//! bit-identical to a scheduler without the hook across policies ×
+//! traces × seeds in both loops (`rust/tests/drs_equivalence.rs`).
+
+use crate::cluster::node::{Node, Placement, PowerState};
+use crate::cluster::Datacenter;
+use crate::sched::filter::{
+    AffinityFilter, FilterCtx, FilterPlugin, GpuModelFilter, LabelsFilter,
+};
+use crate::sched::framework::{PostHook, SchedCtx, ScorePlugin};
+use crate::tasks::Task;
+
+/// Whether waking node `i` could actually help `task`: resource fit
+/// (`can_fit`) plus the task's own node-local declarative constraints
+/// (model sets, node selectors, affinity/anti-affinity/spread),
+/// mirrored from the default constraint filters — a wake must never be
+/// spent on a node the retry's filter chain would veto anyway. (A
+/// profile-level static `labels:` selector is not visible from a hook;
+/// such chains simply forgo wake targeting precision.)
+fn wake_could_help(dc: &Datacenter, i: usize, task: &Task) -> bool {
+    let node = &dc.nodes[i];
+    if !node.can_fit(task) {
+        return false;
+    }
+    let ctx = FilterCtx { dc };
+    GpuModelFilter.feasible(&ctx, node, task)
+        && LabelsFilter { selector: Vec::new() }.feasible(&ctx, node, task)
+        && AffinityFilter.feasible(&ctx, node, task)
+}
+
+/// Configuration of the [`DrsHook`] sleep/wake lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DrsConfig {
+    /// Scheduler-event ticks a node must stay idle before it is
+    /// drained for sleep; `f64::INFINITY` (default) disables sleeping
+    /// entirely — the legacy-equivalence mode.
+    pub idle_timeout: f64,
+    /// Ticks a woken node spends in `Waking` before it is `Active`
+    /// again. `0` makes wakes instantaneous (the failed decision is
+    /// retried and succeeds, so no demand is lost).
+    pub wake_latency: u64,
+    /// One-time energy charged per sleep transition (J), accumulated
+    /// into the `drs_transition_j` counter.
+    pub sleep_cost_j: f64,
+    /// One-time energy charged per wake transition (J).
+    pub wake_cost_j: f64,
+}
+
+impl Default for DrsConfig {
+    fn default() -> Self {
+        DrsConfig {
+            idle_timeout: f64::INFINITY,
+            wake_latency: 0,
+            sleep_cost_j: 0.0,
+            wake_cost_j: 0.0,
+        }
+    }
+}
+
+impl DrsConfig {
+    /// The two knobs the `ext-drs` sweep varies, transition costs zero.
+    pub fn with_timeout(idle_timeout: f64, wake_latency: u64) -> DrsConfig {
+        DrsConfig { idle_timeout, wake_latency, ..Default::default() }
+    }
+}
+
+/// The DRS lifecycle manager (see the module docs for the state
+/// machine). Owns the per-node idle ledger; the states themselves live
+/// on [`Node::power_state`] so the power sums and the `drs` filter read
+/// them without reaching into the hook.
+pub struct DrsHook {
+    cfg: DrsConfig,
+    /// Latest scheduler-event clock value (from `onTick`).
+    now: u64,
+    /// Per node: the tick at which it last became idle (`None` while
+    /// it hosts tasks). Clusters are built empty, so every node starts
+    /// idle at the hook's first tick.
+    idle_since: Vec<Option<u64>>,
+    sleeps: u64,
+    wakes: u64,
+    drains: u64,
+    wake_cancels: u64,
+    transition_j: f64,
+    /// Whether any node might be in a non-`Active` state — the guard
+    /// of the inert-mode (`idle_timeout = ∞`) fast path, which skips
+    /// the per-tick fleet walk once a scan has observed an all-awake
+    /// fleet. Starts `true` so the first tick always scans; set again
+    /// whenever this hook makes a node non-`Active`.
+    maybe_non_active: bool,
+}
+
+impl DrsHook {
+    pub fn new(cfg: DrsConfig) -> DrsHook {
+        DrsHook {
+            cfg,
+            now: 0,
+            idle_since: Vec::new(),
+            sleeps: 0,
+            wakes: 0,
+            drains: 0,
+            wake_cancels: 0,
+            transition_j: 0.0,
+            maybe_non_active: true,
+        }
+    }
+
+    /// Total sleep/wake transition energy charged so far (J); equals
+    /// `sleeps·sleep_cost_j + wakes·wake_cost_j` exactly.
+    pub fn transition_energy_j(&self) -> f64 {
+        self.transition_j
+    }
+
+    /// (Re)size the idle ledger to the fleet. A freshly observed node
+    /// without tasks counts as idle from now.
+    fn ensure_tracking(&mut self, dc: &Datacenter) {
+        if self.idle_since.len() != dc.nodes.len() {
+            let now = self.now;
+            self.idle_since = dc
+                .nodes
+                .iter()
+                .map(|n| if n.n_tasks == 0 { Some(now) } else { None })
+                .collect();
+        }
+    }
+}
+
+impl PostHook for DrsHook {
+    fn name(&self) -> &'static str {
+        "drs"
+    }
+
+    fn on_tick(&mut self, dc: &mut Datacenter, now: u64, invalidate: &mut dyn FnMut(usize)) {
+        self.now = now;
+        self.ensure_tracking(dc);
+        // Inert-mode fast path: with an infinite timeout this hook
+        // never drains, so once a scan has seen an all-Active fleet
+        // there is nothing a tick could transition — skip the O(nodes)
+        // walk until a `postFail` wake makes a node non-Active again.
+        if !self.cfg.idle_timeout.is_finite() && !self.maybe_non_active {
+            return;
+        }
+        let mut any_non_active = false;
+        for i in 0..dc.nodes.len() {
+            match dc.nodes[i].power_state {
+                PowerState::Waking { ready_at } => {
+                    if ready_at <= now {
+                        dc.nodes[i].power_state = PowerState::Active;
+                        // Idle age restarts at boot, or a wasted wake
+                        // would re-drain on the very next tick.
+                        self.idle_since[i] = Some(now);
+                        invalidate(i);
+                    }
+                }
+                PowerState::Draining => {
+                    if dc.nodes[i].n_tasks == 0 {
+                        dc.nodes[i].power_state = PowerState::Asleep;
+                        self.sleeps += 1;
+                        self.transition_j += self.cfg.sleep_cost_j;
+                    } else {
+                        // A custom filter chain without `drs` may have
+                        // placed onto the draining node; cancel.
+                        dc.nodes[i].power_state = PowerState::Active;
+                        self.idle_since[i] = None;
+                    }
+                    invalidate(i);
+                }
+                PowerState::Active => {
+                    if let Some(since) = self.idle_since[i] {
+                        if self.cfg.idle_timeout.is_finite()
+                            && (now.saturating_sub(since)) as f64 >= self.cfg.idle_timeout
+                        {
+                            dc.nodes[i].power_state = PowerState::Draining;
+                            self.drains += 1;
+                            invalidate(i);
+                        }
+                    }
+                }
+                PowerState::Asleep => {}
+            }
+            if dc.nodes[i].power_state != PowerState::Active {
+                any_non_active = true;
+            }
+        }
+        self.maybe_non_active = any_non_active;
+    }
+
+    fn post_fail(
+        &mut self,
+        dc: &mut Datacenter,
+        task: &Task,
+        invalidate: &mut dyn FnMut(usize),
+    ) -> bool {
+        self.ensure_tracking(dc);
+        let n = dc.nodes.len();
+        // Demand pressure: the task failed on the awake fleet. First
+        // try to cancel a drain — the node never slept, so waking it is
+        // free and the framework's immediate retry can use it.
+        let drain_hit = (0..n).find(|&i| {
+            dc.nodes[i].power_state == PowerState::Draining && wake_could_help(dc, i, task)
+        });
+        if let Some(i) = drain_hit {
+            dc.nodes[i].power_state = PowerState::Active;
+            self.wake_cancels += 1;
+            self.idle_since[i] = Some(self.now);
+            invalidate(i);
+            return true;
+        }
+        // Otherwise boot the first sleeper that could host the task
+        // (lowest id — deterministic; power-aware selection is a noted
+        // ROADMAP follow-up). With zero wake latency the node is usable
+        // immediately; otherwise it becomes future capacity and only
+        // later arrivals benefit (this task is lost).
+        let sleep_hit = (0..n).find(|&i| {
+            dc.nodes[i].power_state == PowerState::Asleep && wake_could_help(dc, i, task)
+        });
+        if let Some(i) = sleep_hit {
+            self.wakes += 1;
+            self.transition_j += self.cfg.wake_cost_j;
+            self.idle_since[i] = Some(self.now);
+            invalidate(i);
+            if self.cfg.wake_latency == 0 {
+                dc.nodes[i].power_state = PowerState::Active;
+                return true;
+            }
+            dc.nodes[i].power_state =
+                PowerState::Waking { ready_at: self.now + self.cfg.wake_latency };
+            self.maybe_non_active = true;
+            return false;
+        }
+        false
+    }
+
+    fn post_place(
+        &mut self,
+        dc: &mut Datacenter,
+        node_id: usize,
+        invalidate: &mut dyn FnMut(usize),
+    ) {
+        self.ensure_tracking(dc);
+        let node = &mut dc.nodes[node_id];
+        if node.n_tasks == 0 {
+            // A release drained the node: start (or keep) its idle
+            // clock — the sleep deadline is idle_since + idle_timeout.
+            if self.idle_since[node_id].is_none() {
+                self.idle_since[node_id] = Some(self.now);
+            }
+        } else {
+            self.idle_since[node_id] = None;
+            // A placement landed mid-transition or on a sleeper (only
+            // possible through a custom chain that admits non-Active
+            // nodes): force the node awake so its workload is accounted
+            // as powered. A slept node pays the wake transition so the
+            // ledger (`sleeps = wakes + |Asleep|`) stays balanced.
+            match node.power_state {
+                PowerState::Active => {}
+                PowerState::Asleep => {
+                    self.wakes += 1;
+                    self.transition_j += self.cfg.wake_cost_j;
+                    node.power_state = PowerState::Active;
+                    invalidate(node_id);
+                }
+                PowerState::Draining | PowerState::Waking { .. } => {
+                    node.power_state = PowerState::Active;
+                    invalidate(node_id);
+                }
+            }
+        }
+    }
+
+    fn counters(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("drs_sleeps", self.sleeps),
+            ("drs_wakes", self.wakes),
+            ("drs_drains", self.drains),
+            ("drs_wake_cancels", self.wake_cancels),
+            ("drs_transition_j", self.transition_j.round() as u64),
+        ]
+    }
+}
+
+/// The `drs` filter plugin: only [`PowerState::Active`] nodes accept
+/// placements — `Draining` nodes must not be re-touched on their way
+/// to sleep, `Asleep` nodes host nothing, and `Waking` nodes are still
+/// booting. Part of the default chain; a no-op while every node is
+/// `Active`.
+pub struct DrsFilter;
+
+impl FilterPlugin for DrsFilter {
+    fn name(&self) -> &'static str {
+        "drs"
+    }
+
+    // No `pre_filter` override: the cluster-wide capacity checks
+    // (aggregate totals, candidate counts) deliberately ignore power
+    // states — `Waking` and wakeable `Asleep` nodes are future
+    // capacity, and a veto here would rob the DRS hook's `postFail`
+    // wake path of its trigger.
+
+    fn feasible(&self, _ctx: &FilterCtx, node: &Node, _task: &Task) -> bool {
+        node.power_state == PowerState::Active
+    }
+}
+
+/// The `consolidate` score plugin: prefer nodes already hosting work,
+/// then idle-but-powered nodes — so sleepers stay asleep and idle
+/// nodes age toward their sleep deadline untouched. Useful on its own
+/// as a packing nudge, and the intended companion of `hook(drs:…)`.
+pub struct ConsolidatePlugin;
+
+impl ScorePlugin for ConsolidatePlugin {
+    fn name(&self) -> &'static str {
+        "Consolidate"
+    }
+
+    fn score(&self, _ctx: &SchedCtx, node: &Node, _task: &Task, _placements: &[Placement]) -> f64 {
+        match node.power_state {
+            PowerState::Active if node.n_tasks > 0 => 2.0,
+            PowerState::Active => 1.0,
+            // Only reachable through custom chains that admit
+            // non-Active nodes; rank them below everything powered.
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::sched::{PolicyKind, Scheduler};
+    use crate::tasks::{GpuDemand, Workload};
+
+    fn fill_node(dc: &mut Datacenter, node: usize, id: u64) -> (Task, Placement) {
+        let gpus = dc.nodes[node].gpu_alloc.len() as u32;
+        let t = Task::new(id, 1.0, 0.0, GpuDemand::Whole(gpus));
+        let p = dc.nodes[node].candidate_placements(&t).pop().unwrap();
+        dc.allocate(&t, node, &p);
+        (t, p)
+    }
+
+    #[test]
+    fn idle_nodes_drain_then_sleep_after_timeout() {
+        let mut dc = ClusterSpec::tiny(2, 2, 0).build();
+        let mut h = DrsHook::new(DrsConfig::with_timeout(3.0, 5));
+        let mut inval = |_n: usize| {};
+        // Ticks 1..3: idle but under the timeout (idle since tick 1).
+        for now in 1..=3 {
+            h.on_tick(&mut dc, now, &mut inval);
+            assert_eq!(dc.nodes[0].power_state, PowerState::Active, "tick {now}");
+        }
+        // Tick 4: 3 ticks idle -> drained; tick 5: asleep.
+        h.on_tick(&mut dc, 4, &mut inval);
+        assert_eq!(dc.nodes[0].power_state, PowerState::Draining);
+        h.on_tick(&mut dc, 5, &mut inval);
+        assert_eq!(dc.nodes[0].power_state, PowerState::Asleep);
+        assert_eq!(dc.nodes[1].power_state, PowerState::Asleep);
+        let counters = h.counters();
+        assert!(counters.contains(&("drs_sleeps", 2)));
+        assert!(counters.contains(&("drs_drains", 2)));
+    }
+
+    #[test]
+    fn infinite_timeout_never_sleeps() {
+        let mut dc = ClusterSpec::tiny(2, 2, 0).build();
+        let mut h = DrsHook::new(DrsConfig::default());
+        let mut inval = |_n: usize| {};
+        for now in 1..=1_000 {
+            h.on_tick(&mut dc, now, &mut inval);
+        }
+        assert!(dc.nodes.iter().all(|n| n.power_state == PowerState::Active));
+        assert_eq!(h.counters(), vec![
+            ("drs_sleeps", 0),
+            ("drs_wakes", 0),
+            ("drs_drains", 0),
+            ("drs_wake_cancels", 0),
+            ("drs_transition_j", 0),
+        ]);
+    }
+
+    #[test]
+    fn busy_nodes_never_drain_and_release_restarts_the_clock() {
+        let mut dc = ClusterSpec::tiny(1, 2, 0).build();
+        let mut h = DrsHook::new(DrsConfig::with_timeout(2.0, 0));
+        let mut inval = |_n: usize| {};
+        h.on_tick(&mut dc, 1, &mut inval);
+        let (t, p) = fill_node(&mut dc, 0, 7);
+        h.post_place(&mut dc, 0, &mut inval);
+        for now in 2..=50 {
+            h.on_tick(&mut dc, now, &mut inval);
+            assert_eq!(dc.nodes[0].power_state, PowerState::Active, "tick {now}");
+        }
+        // Release at tick 50: idle clock restarts, sleep at ~tick 53.
+        dc.deallocate(&t, 0, &p);
+        h.post_place(&mut dc, 0, &mut inval);
+        h.on_tick(&mut dc, 51, &mut inval);
+        assert_eq!(dc.nodes[0].power_state, PowerState::Active);
+        h.on_tick(&mut dc, 52, &mut inval);
+        assert_eq!(dc.nodes[0].power_state, PowerState::Draining);
+        h.on_tick(&mut dc, 53, &mut inval);
+        assert_eq!(dc.nodes[0].power_state, PowerState::Asleep);
+    }
+
+    #[test]
+    fn demand_pressure_cancels_drains_and_wakes_sleepers() {
+        let mut dc = ClusterSpec::tiny(2, 2, 0).build();
+        let mut h = DrsHook::new(DrsConfig {
+            idle_timeout: 1.0,
+            wake_latency: 4,
+            sleep_cost_j: 10.0,
+            wake_cost_j: 30.0,
+        });
+        let mut inval = |_n: usize| {};
+        // Drive both nodes asleep.
+        for now in 1..=4 {
+            h.on_tick(&mut dc, now, &mut inval);
+        }
+        assert!(dc.nodes.iter().all(|n| n.power_state == PowerState::Asleep));
+        // A failing task wakes node 0 (lowest id that fits); with a
+        // 4-tick latency the decision is not retried.
+        let t = Task::new(9, 1.0, 0.0, GpuDemand::Whole(1));
+        assert!(!h.post_fail(&mut dc, &t, &mut inval));
+        assert_eq!(dc.nodes[0].power_state, PowerState::Waking { ready_at: 4 + 4 });
+        assert_eq!(dc.nodes[1].power_state, PowerState::Asleep);
+        // Wake completes once the clock reaches ready_at.
+        h.on_tick(&mut dc, 7, &mut inval);
+        assert!(matches!(dc.nodes[0].power_state, PowerState::Waking { .. }));
+        h.on_tick(&mut dc, 8, &mut inval);
+        assert_eq!(dc.nodes[0].power_state, PowerState::Active);
+        // Energy ledger: 2 sleeps + 1 wake, exactly once each.
+        assert!((h.transition_energy_j() - (2.0 * 10.0 + 30.0)).abs() < 1e-12);
+        // A draining node cancels for free (retry requested).
+        h.on_tick(&mut dc, 10, &mut inval); // node 0 idle since 8 -> drains
+        assert_eq!(dc.nodes[0].power_state, PowerState::Draining);
+        assert!(h.post_fail(&mut dc, &t, &mut inval));
+        assert_eq!(dc.nodes[0].power_state, PowerState::Active);
+        assert!((h.transition_energy_j() - (2.0 * 10.0 + 30.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_latency_wake_allows_immediate_retry() {
+        let mut dc = ClusterSpec::tiny(1, 2, 0).build();
+        let mut h = DrsHook::new(DrsConfig::with_timeout(1.0, 0));
+        let mut inval = |_n: usize| {};
+        for now in 1..=3 {
+            h.on_tick(&mut dc, now, &mut inval);
+        }
+        assert_eq!(dc.nodes[0].power_state, PowerState::Asleep);
+        let t = Task::new(1, 1.0, 0.0, GpuDemand::Whole(1));
+        assert!(h.post_fail(&mut dc, &t, &mut inval), "zero-latency wake must retry");
+        assert_eq!(dc.nodes[0].power_state, PowerState::Active);
+    }
+
+    #[test]
+    fn wake_targeting_respects_task_constraints() {
+        use crate::tasks::TaskConstraints;
+        // Two sleepers; the task's node-selector only matches node 1.
+        // Waking node 0 would be wasted energy (the retry's labels
+        // filter vetoes it), so the hook must skip to node 1.
+        let mut dc = ClusterSpec::tiny(2, 2, 0).build();
+        dc.nodes[1].labels.push(("zone".to_string(), "z1".to_string()));
+        let mut h = DrsHook::new(DrsConfig::with_timeout(1.0, 0));
+        let mut inval = |_n: usize| {};
+        for now in 1..=3 {
+            h.on_tick(&mut dc, now, &mut inval);
+        }
+        assert!(dc.nodes.iter().all(|n| n.power_state == PowerState::Asleep));
+        let t = Task::new(1, 1.0, 0.0, GpuDemand::Whole(1)).with_constraints(TaskConstraints {
+            node_selector: vec![("zone".to_string(), "z1".to_string())],
+            ..Default::default()
+        });
+        assert!(h.post_fail(&mut dc, &t, &mut inval), "zero-latency wake must retry");
+        assert_eq!(dc.nodes[0].power_state, PowerState::Asleep, "wasted wake on node 0");
+        assert_eq!(dc.nodes[1].power_state, PowerState::Active);
+        // No admissible sleeper at all: nothing is woken.
+        let nowhere = Task::new(2, 1.0, 0.0, GpuDemand::Whole(1)).with_constraints(
+            TaskConstraints {
+                node_selector: vec![("zone".to_string(), "z9".to_string())],
+                ..Default::default()
+            },
+        );
+        assert!(!h.post_fail(&mut dc, &nowhere, &mut inval));
+        assert_eq!(dc.nodes[0].power_state, PowerState::Asleep);
+    }
+
+    #[test]
+    fn placement_on_sleeper_via_custom_chain_wakes_and_pays() {
+        // A chain without the `drs` filter may legally place onto a
+        // sleeping node; post_place must wake it (so its workload is
+        // billed as powered) and charge the wake so the
+        // `sleeps = wakes + |Asleep|` ledger stays balanced.
+        let mut dc = ClusterSpec::tiny(1, 2, 0).build();
+        let mut h = DrsHook::new(DrsConfig {
+            idle_timeout: 1.0,
+            wake_latency: 5,
+            sleep_cost_j: 10.0,
+            wake_cost_j: 30.0,
+        });
+        let mut inval = |_n: usize| {};
+        for now in 1..=3 {
+            h.on_tick(&mut dc, now, &mut inval);
+        }
+        assert_eq!(dc.nodes[0].power_state, PowerState::Asleep);
+        let (_t, _p) = fill_node(&mut dc, 0, 1);
+        h.post_place(&mut dc, 0, &mut inval);
+        assert_eq!(dc.nodes[0].power_state, PowerState::Active);
+        // 1 sleep + 1 (forced) wake, energy charged exactly once each.
+        assert!((h.transition_energy_j() - (10.0 + 30.0)).abs() < 1e-12);
+        let counters = h.counters();
+        assert!(counters.contains(&("drs_sleeps", 1)));
+        assert!(counters.contains(&("drs_wakes", 1)));
+    }
+
+    #[test]
+    fn filter_admits_only_active_nodes() {
+        let mut dc = ClusterSpec::tiny(4, 2, 0).build();
+        dc.nodes[1].power_state = PowerState::Draining;
+        dc.nodes[2].power_state = PowerState::Asleep;
+        dc.nodes[3].power_state = PowerState::Waking { ready_at: 99 };
+        let ctx = FilterCtx { dc: &dc };
+        let t = Task::new(0, 1.0, 0.0, GpuDemand::Whole(1));
+        assert!(DrsFilter.feasible(&ctx, &dc.nodes[0], &t));
+        for i in 1..4 {
+            assert!(!DrsFilter.feasible(&ctx, &dc.nodes[i], &t), "node {i}");
+        }
+        // PreFilter never vetoes (future capacity).
+        assert!(DrsFilter.pre_filter(&ctx, &t));
+        assert!(!DrsFilter.constrains(&t));
+        // Through the whole scheduler: only node 0 is ever selected.
+        let mut sched = Scheduler::from_policy(PolicyKind::FirstFit);
+        let w = Workload::default();
+        let d = sched.schedule(&dc, &w, &t).expect("node 0 is awake");
+        assert_eq!(d.node, 0);
+    }
+
+    #[test]
+    fn consolidate_prefers_busy_then_idle_active_nodes() {
+        let mut dc = ClusterSpec::tiny(3, 2, 0).build();
+        let t = Task::new(5, 1.0, 0.0, GpuDemand::Frac(0.5));
+        // Node 0 busy, node 1 idle-active, node 2 asleep.
+        fill_node(&mut dc, 0, 1);
+        dc.nodes[2].power_state = PowerState::Asleep;
+        let w = Workload::default();
+        let pw = crate::frag::PreparedWorkload::new(&w);
+        let ctx = SchedCtx {
+            dc: &dc,
+            workload: &w,
+            prepared: &pw,
+            generations: &[0, 0, 0],
+            caps: crate::sched::framework::ClusterCaps::of(&dc),
+        };
+        let score_of = |node: usize| {
+            ConsolidatePlugin.score(&ctx, &dc.nodes[node], &t, &[])
+        };
+        assert!(score_of(0) > score_of(1));
+        assert!(score_of(1) > score_of(2));
+    }
+}

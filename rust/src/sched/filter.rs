@@ -20,8 +20,10 @@
 //!   enforced by `labels` (node selectors) and `affinity` (class-keyed
 //!   affinity / anti-affinity / per-node spread caps).
 //! * Profiles select chains via the `filter(...)` DSL section; the
-//!   default chain ([`default_filter_chain`]) runs all five built-ins,
-//!   which is a no-op beyond `can_fit` for unconstrained tasks.
+//!   default chain ([`default_filter_chain`]) runs all six built-ins
+//!   (including the [`crate::sched::drs::DrsFilter`] power-state
+//!   gate), which is a no-op beyond `can_fit` for unconstrained tasks
+//!   on an all-`Active` fleet.
 //!
 //! A plugin reporting [`FilterPlugin::constrains`] for a task enforces
 //! one of that task's declarative constraints rather than a resource
@@ -296,7 +298,10 @@ impl FilterPlugin for AffinityFilter {
 /// The default chain every profile gets unless it names an explicit
 /// `filter(...)` section: the `can_fit` decomposition plus the
 /// constraint plugins (no-ops for unconstrained tasks, so legacy
-/// placements are bit-identical).
+/// placements are bit-identical) plus the `drs` power-state gate (a
+/// no-op while every node is `Active`, i.e. whenever no DRS hook is
+/// attached — same bit-identity argument, pinned by
+/// `rust/tests/drs_equivalence.rs`).
 pub fn default_filter_chain() -> Vec<Box<dyn FilterPlugin>> {
     vec![
         Box::new(ResourcesFilter),
@@ -304,6 +309,7 @@ pub fn default_filter_chain() -> Vec<Box<dyn FilterPlugin>> {
         Box::new(MigLatticeFilter),
         Box::new(LabelsFilter { selector: Vec::new() }),
         Box::new(AffinityFilter),
+        Box::new(crate::sched::drs::DrsFilter),
     ]
 }
 

@@ -26,10 +26,13 @@
 //!    uniform random, k8s `selectHost` semantics) and let the
 //!    [`BindPlugin`](crate::sched::bind::BindPlugin) choose the
 //!    concrete GPU placement inside it.
-//! 7. **PostFail / PostPlace** (extension points) — [`PostHook`]s run
-//!    after a failed decision (e.g. repack a MIG GPU and retry — the
-//!    k8s-preemption analog) and after every allocation change (e.g.
-//!    proactive defragmentation). The [`Scheduler::place`] /
+//! 7. **PostFail / PostPlace / OnTick** (extension points) —
+//!    [`PostHook`]s run after a failed decision (e.g. repack a MIG GPU
+//!    and retry — the k8s-preemption analog), after every allocation
+//!    change (e.g. proactive defragmentation), and at the start of
+//!    every `place`/`release` protocol entry (the scheduler-event
+//!    clock: DRS wake completions and sleep deadlines — see
+//!    [`crate::sched::drs`]). The [`Scheduler::place`] /
 //!    [`Scheduler::release`] protocol drives them, so simulation loops
 //!    can never silently skip a hook.
 
@@ -96,6 +99,20 @@ pub trait ScorePlugin: Send {
 pub trait PostHook: Send {
     fn name(&self) -> &'static str;
 
+    /// Advance the hook's clock to `now` — the scheduler-event clock,
+    /// bumped once per [`Scheduler::place`] / [`Scheduler::release`]
+    /// protocol entry and delivered *before* the decision, so
+    /// time-driven state (DRS sleep deadlines, wake completions) is
+    /// settled by the time the filter chain reads it. Report each
+    /// mutated node via `invalidate`.
+    fn on_tick(
+        &mut self,
+        _dc: &mut Datacenter,
+        _now: u64,
+        _invalidate: &mut dyn FnMut(usize),
+    ) {
+    }
+
     /// After a scheduling failure: try to make room for `task` (e.g.
     /// repack a MIG GPU), reporting each mutated node via `invalidate`.
     /// Return `true` when the framework should retry the decision once.
@@ -131,6 +148,19 @@ pub trait PostHook: Send {
 pub struct Decision {
     pub node: usize,
     pub placement: Placement,
+}
+
+/// The one invalidation callback handed to every hook phase: bump a
+/// node's plugin-cache generation, ignoring ids beyond the sized fleet
+/// (before the first `schedule` the generation vector is empty and no
+/// caches exist to invalidate). Taking the generations slice keeps the
+/// borrow split from `self.hooks` at every call site.
+fn bump_generation(generations: &mut [u64]) -> impl FnMut(usize) + '_ {
+    move |n: usize| {
+        if n < generations.len() {
+            generations[n] += 1;
+        }
+    }
 }
 
 /// The scheduler: filter + weighted score plugins + binder, with
@@ -174,6 +204,10 @@ pub struct Scheduler {
     prepared_cache: Option<(u64, frag::PreparedWorkload)>,
     /// Cached cluster caps (node shapes are static).
     caps_cache: Option<(usize, ClusterCaps)>,
+    /// The scheduler-event clock: one tick per `place`/`release`
+    /// protocol entry. The DRS subsystem's time unit (`docs/power.md`);
+    /// identical semantics in both simulation loops.
+    events: u64,
     /// Seeded RNG for the k8s-style random tie-break (reproducible).
     tie_rng: Rng,
     /// Ablation switch: pick the lowest-id node among ties instead of
@@ -209,6 +243,7 @@ impl Scheduler {
             node_weights: Vec::new(),
             prepared_cache: None,
             caps_cache: None,
+            events: 0,
             tie_rng: Rng::new(0xC0FFEE),
             deterministic_ties: false,
             label: label.to_string(),
@@ -302,9 +337,7 @@ impl Scheduler {
     /// Notify the scheduler that `node_id`'s allocation changed (commit
     /// or departure). Invalidate plugin caches via the generation bump.
     pub fn notify_node_changed(&mut self, node_id: usize) {
-        if node_id < self.generations.len() {
-            self.generations[node_id] += 1;
-        }
+        bump_generation(&mut self.generations)(node_id);
     }
 
     /// Schedule one task (Algorithm 1). Returns `None` when no node can
@@ -481,21 +514,35 @@ impl Scheduler {
         Some(Decision { node: node_id, placement })
     }
 
-    /// The full per-task protocol: schedule → (on failure: `postFail`
-    /// hooks, one retry) → commit → `postPlace` hooks. This is the one
-    /// entry point the simulation loops and the coordinator use, so a
-    /// profile's hooks (e.g. the MIG repartitioner) can never be
+    /// Current value of the scheduler-event clock (ticks; one per
+    /// `place`/`release` protocol entry).
+    pub fn now(&self) -> u64 {
+        self.events
+    }
+
+    /// Bump the scheduler-event clock and run every hook's `onTick`
+    /// phase (wake completions, sleep deadlines) before the decision.
+    fn advance_clock(&mut self, dc: &mut Datacenter) {
+        self.events += 1;
+        let now = self.events;
+        let mut invalidate = bump_generation(&mut self.generations);
+        for h in &mut self.hooks {
+            h.on_tick(dc, now, &mut invalidate);
+        }
+    }
+
+    /// The full per-task protocol: clock tick (`onTick` hooks) →
+    /// schedule → (on failure: `postFail` hooks, one retry) → commit →
+    /// `postPlace` hooks. This is the one entry point the simulation
+    /// loops and the coordinator use, so a profile's hooks (e.g. the
+    /// MIG repartitioner, the DRS sleep/wake manager) can never be
     /// silently skipped.
     pub fn place(&mut self, dc: &mut Datacenter, workload: &Workload, task: &Task) -> Option<Decision> {
+        self.advance_clock(dc);
         let decision = match self.schedule(dc, workload, task) {
             Some(d) => Some(d),
             None => {
-                let generations = &mut self.generations;
-                let mut invalidate = |n: usize| {
-                    if n < generations.len() {
-                        generations[n] += 1;
-                    }
-                };
+                let mut invalidate = bump_generation(&mut self.generations);
                 let mut retry = false;
                 for h in &mut self.hooks {
                     if h.post_fail(dc, task, &mut invalidate) {
@@ -525,22 +572,18 @@ impl Scheduler {
         Some(decision)
     }
 
-    /// The departure protocol: release the allocation and run the
-    /// `postPlace` hooks (departures are where e.g. MIG lattice holes
-    /// open up).
+    /// The departure protocol: clock tick, release the allocation and
+    /// run the `postPlace` hooks (departures are where e.g. MIG
+    /// lattice holes open up and where nodes fall idle for DRS).
     pub fn release(&mut self, dc: &mut Datacenter, task: &Task, node: usize, placement: &Placement) {
+        self.advance_clock(dc);
         dc.deallocate(task, node, placement);
         self.notify_node_changed(node);
         self.run_post_place(dc, node);
     }
 
     fn run_post_place(&mut self, dc: &mut Datacenter, node_id: usize) {
-        let generations = &mut self.generations;
-        let mut invalidate = |n: usize| {
-            if n < generations.len() {
-                generations[n] += 1;
-            }
-        };
+        let mut invalidate = bump_generation(&mut self.generations);
         for h in &mut self.hooks {
             h.post_place(dc, node_id, &mut invalidate);
         }

@@ -14,11 +14,15 @@
 //! * [`bind`] — the `bind` extension point (five built-in binders).
 //! * [`modulate`] — the `weightModulator` extension point (load-adaptive
 //!   α, per-lattice α).
+//! * [`drs`] — the Dynamic Resource Scaling subsystem: the node
+//!   sleep/wake lifecycle hook, the `drs` power-state filter and the
+//!   `consolidate` score plugin (`docs/power.md`).
 //! * [`policies`] — PWR (the contribution), FGD [19], BestFit [6],
 //!   DotProd [4], GpuPacking [18], GpuClustering [21], FirstFit and
 //!   Random sanity baselines, and the MIG family + repartitioner.
 
 pub mod bind;
+pub mod drs;
 pub mod filter;
 pub mod framework;
 pub mod modulate;
@@ -26,6 +30,7 @@ pub mod policies;
 pub mod profile;
 
 pub use bind::{BindCtx, BindPlugin};
+pub use drs::{ConsolidatePlugin, DrsConfig, DrsFilter, DrsHook};
 pub use filter::{FilterCtx, FilterPlugin};
 pub use framework::{Decision, PostHook, SchedCtx, Scheduler, ScorePlugin};
 pub use modulate::{LatticeAlphaModulator, LoadAlphaModulator, WeightModulator};

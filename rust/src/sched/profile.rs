@@ -10,20 +10,24 @@
 //!
 //! * `score` — N weighted [`ScorePlugin`]s: `pwr`, `fgd`, `bestfit`,
 //!   `dotprod`, `gpupacking`, `gpuclustering`, `firstfit`, `random`,
-//!   `slicefit`.
+//!   `slicefit`, `consolidate`.
 //! * `bind` — one [`BindPlugin`](crate::sched::bind::BindPlugin):
 //!   `weighted:α`, `bestfit`, `packed`, `first`, `random`.
 //! * `mod` — at most one
 //!   [`WeightModulator`](crate::sched::modulate::WeightModulator):
 //!   `loadalpha:α_empty:α_full`, `latticealpha:α_base:α_a100:α_a30`.
 //! * `hook` — any number of [`PostHook`]s: `repartition` (the MIG
-//!   defragmenter; optional `:frag_threshold[:max_moved[:budget]]`).
+//!   defragmenter; optional `:frag_threshold[:max_moved[:budget]]`)
+//!   and `drs` (the node sleep/wake lifecycle,
+//!   [`crate::sched::drs`]; optional
+//!   `:idle_timeout[:wake_latency[:sleep_j[:wake_j]]]`).
 //! * `filter` — the feasibility chain
 //!   ([`FilterPlugin`](crate::sched::filter::FilterPlugin)):
 //!   `resources`, `gpumodel`, `miglattice`, `labels[:key=value...]`,
-//!   `affinity`. Omitted = the default chain (legacy `can_fit` +
-//!   constraint plugins; placement-identical on constraint-free
-//!   traces).
+//!   `affinity`, `drs`. Omitted = the default chain (legacy `can_fit`
+//!   + constraint plugins + the power-state gate;
+//!   placement-identical on constraint-free traces with every node
+//!   awake).
 //!
 //! ## DSL grammar
 //!
@@ -57,6 +61,7 @@ use std::sync::{Arc, OnceLock, RwLock};
 use crate::sched::bind::{
     BestFitBinder, BindPlugin, FirstBinder, PackOccupiedBinder, RandomBinder, WeightedBinder,
 };
+use crate::sched::drs::{ConsolidatePlugin, DrsConfig, DrsFilter, DrsHook};
 use crate::sched::filter::{
     AffinityFilter, FilterPlugin, GpuModelFilter, LabelsFilter, MigLatticeFilter,
     ResourcesFilter,
@@ -378,6 +383,9 @@ const BUILTIN_SCORE: &[(&str, &str, fn() -> Box<dyn ScorePlugin>)] = &[
     ("slicefit", "MIG slice packing (fullest GPU first, powered preferred)", || {
         Box::new(MigSliceFitPlugin)
     }),
+    ("consolidate", "bias placements onto already-active nodes so DRS sleepers stay asleep", || {
+        Box::new(ConsolidatePlugin)
+    }),
 ];
 
 type BindBuilder = fn(&[f64]) -> Result<Box<dyn BindPlugin>, String>;
@@ -483,6 +491,50 @@ const BUILTIN_HOOK: &[(&str, &str, HookBuilder)] = &[(
     }
         Ok(Box::new(MigRepartitioner::new(cfg)))
     },
+),
+(
+    "drs",
+    "node sleep/wake lifecycle: drain+sleep idle nodes, wake on demand \
+     (drs[:idle_timeout[:wake_latency[:sleep_j[:wake_j]]]])",
+    |params| {
+        // hook(drs[:idle_timeout[:wake_latency[:sleep_j[:wake_j]]]]);
+        // omitted or negative idle_timeout = ∞ (never sleep — the
+        // legacy-equivalence mode; same `-1` sentinel convention as
+        // hook(repartition)). Timeout/latency are scheduler-event
+        // ticks; costs are joules per transition.
+        let mut cfg = DrsConfig::default();
+        if let Some(&t) = params.first() {
+            if t.is_nan() {
+                return Err("drs idle_timeout must be a number".into());
+            }
+            cfg.idle_timeout = if t.is_sign_negative() { f64::INFINITY } else { t };
+        }
+        if let Some(&l) = params.get(1) {
+            if !(l >= 0.0) || !l.is_finite() || l.fract() != 0.0 {
+                return Err(format!(
+                    "drs wake_latency must be a whole number of ticks, got {l}"
+                ));
+            }
+            cfg.wake_latency = l as u64;
+        }
+        let cost = |v: f64, what: &str| -> Result<f64, String> {
+            if v >= 0.0 && v.is_finite() {
+                Ok(v)
+            } else {
+                Err(format!("drs {what} must be finite and >= 0, got {v}"))
+            }
+        };
+        if let Some(&v) = params.get(2) {
+            cfg.sleep_cost_j = cost(v, "sleep_j")?;
+        }
+        if let Some(&v) = params.get(3) {
+            cfg.wake_cost_j = cost(v, "wake_j")?;
+        }
+        if params.len() > 4 {
+            return Err(format!("hook 'drs' takes at most 4 params, got {}", params.len()));
+        }
+        Ok(Box::new(DrsHook::new(cfg)))
+    },
 )];
 
 type FilterBuilder = fn(&[String]) -> Result<Box<dyn FilterPlugin>, String>;
@@ -505,6 +557,10 @@ const BUILTIN_FILTER: &[(&str, &str, FilterBuilder)] = &[
     ("affinity", "class-keyed affinity / anti-affinity / per-node spread caps", |params| {
         no_filter_params(params, "affinity")?;
         Ok(Box::new(AffinityFilter))
+    }),
+    ("drs", "only Active power-state nodes accept placements (DRS sleep/wake)", |params| {
+        no_filter_params(params, "drs")?;
+        Ok(Box::new(DrsFilter))
     }),
 ];
 
@@ -893,6 +949,27 @@ mod tests {
     }
 
     #[test]
+    fn dsl_drs_hook_and_consolidate_parse() {
+        // The canonical DRS composition: consolidate rides along as a
+        // third objective, the hook drives the sleep/wake lifecycle.
+        let p = SchedulerProfile::parse(
+            "score(pwr=0.4,fgd=0.4,consolidate=0.2)|bind(weighted:0.4)|hook(drs:500:100)",
+        )
+        .unwrap();
+        assert_eq!(p.score[2], ("consolidate".to_string(), 0.2));
+        assert_eq!(p.hooks, vec![("drs".to_string(), vec![500.0, 100.0])]);
+        let sched = p.build().unwrap();
+        assert_eq!(sched.hook_counter("drs_sleeps"), 0);
+        // `-1` timeout sentinel = ∞ (never sleep), with costs attached.
+        SchedulerProfile::parse("score(fgd)|hook(drs:-1:50:25:100)")
+            .unwrap()
+            .build()
+            .unwrap();
+        // Bare `hook(drs)` is the all-defaults (legacy-safe) form.
+        SchedulerProfile::parse("score(fgd)|hook(drs)").unwrap().build().unwrap();
+    }
+
+    #[test]
     fn dsl_rejects_malformed_profiles() {
         for bad in [
             "score()",                                   // empty entry
@@ -912,6 +989,13 @@ mod tests {
             "score(pwr)|mod(latticealpha:0.5)",          // latticealpha needs 3
             "score(pwr)|mod(latticealpha:0.5:1.2:0.1)",  // α_a100 out of range
             "score(fgd)|mod(latticealpha:0.5:0.5:0.5)",  // latticealpha needs pwr first
+            "score(fgd)|hook(drs:nan)",                  // drs timeout must be a number
+            "score(fgd)|hook(drs:100:1.5)",              // fractional wake latency
+            "score(fgd)|hook(drs:100:-2)",               // negative wake latency
+            "score(fgd)|hook(drs:100:5:-1)",             // negative sleep cost
+            "score(fgd)|hook(drs:100:5:0:inf)",          // non-finite wake cost
+            "score(fgd)|hook(drs:1:2:3:4:5)",            // too many params
+            "score(fgd)|filter(drs:1)",                  // params on the drs filter
             "gibberish(pwr)",                            // unknown section
             "notaprofile",                               // not legacy, no DSL
         ] {
@@ -936,11 +1020,20 @@ mod tests {
         p.build().unwrap();
         // Explicit default-equivalent chain lowers to the default label.
         let p = SchedulerProfile::parse(
-            "score(fgd)|filter(resources,gpumodel,miglattice,labels,affinity)",
+            "score(fgd)|filter(resources,gpumodel,miglattice,labels,affinity,drs)",
         )
         .unwrap();
         assert_eq!(p.filters, default_filter_keys());
         assert!(!p.label.contains("filter"));
+        // Dropping the drs gate is an explicit (labeled) non-default
+        // chain now that the default includes it.
+        let p = SchedulerProfile::parse(
+            "score(fgd)|filter(resources,gpumodel,miglattice,labels,affinity)",
+        )
+        .unwrap();
+        assert_ne!(p.filters, default_filter_keys());
+        assert!(p.label.contains("filter"));
+        p.build().unwrap();
     }
 
     #[test]
@@ -968,14 +1061,16 @@ mod tests {
                 .map(|(_, key, _)| key.clone())
                 .collect()
         };
-        for key in ["pwr", "fgd", "slicefit"] {
+        for key in ["pwr", "fgd", "slicefit", "consolidate"] {
             assert!(keys_of("score").contains(&key.to_string()), "missing score/{key}");
         }
         assert!(keys_of("bind").contains(&"weighted".to_string()));
         assert!(keys_of("mod").contains(&"loadalpha".to_string()));
         assert!(keys_of("mod").contains(&"latticealpha".to_string()));
-        assert!(keys_of("hook").contains(&"repartition".to_string()));
-        for key in ["resources", "gpumodel", "miglattice", "labels", "affinity"] {
+        for key in ["repartition", "drs"] {
+            assert!(keys_of("hook").contains(&key.to_string()), "missing hook/{key}");
+        }
+        for key in ["resources", "gpumodel", "miglattice", "labels", "affinity", "drs"] {
             assert!(keys_of("filter").contains(&key.to_string()), "missing filter/{key}");
         }
         // The default chain's plugin names must all resolve as registry

@@ -56,6 +56,10 @@ pub struct RunResult {
     /// affinity / spread) forbade every admissible placement (see
     /// [`crate::sched::Scheduler::constraint_unschedulable`]).
     pub constraint_unschedulable: u64,
+    /// DRS sleep/wake activity (zero without a `drs` hook; see
+    /// [`crate::sched::drs`]).
+    pub drs_sleeps: u64,
+    pub drs_wakes: u64,
 }
 
 impl RunResult {
@@ -175,6 +179,7 @@ impl Simulation {
             failures: self.failed as f64,
             active_gpus: self.dc.active_gpus() as f64,
             active_nodes: self.dc.active_nodes() as f64,
+            asleep_nodes: self.dc.asleep_nodes() as f64,
             ..Default::default()
         };
         // One further pass fills the total fragmentation (Eq. 4 — the
@@ -239,6 +244,8 @@ impl Simulation {
             proactive_repartitions: self.sched.hook_counter("proactive_repartitions"),
             migrated_slices: self.sched.hook_counter("migrated_slices"),
             constraint_unschedulable: self.sched.constraint_unschedulable(),
+            drs_sleeps: self.sched.hook_counter("drs_sleeps"),
+            drs_wakes: self.sched.hook_counter("drs_wakes"),
         }
     }
 }

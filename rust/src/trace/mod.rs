@@ -47,6 +47,25 @@ pub const N_TENANTS: usize = 4;
 /// Per-node cap of [`ConstraintGen::Spread`].
 pub const SPREAD_MAX_PER_NODE: u32 = 4;
 
+/// Sinusoidal arrival-rate modulation of the `diurnal-<amp>` trace
+/// family: `rate(t) = base_rate · (1 + amplitude · sin(2πt/period))`,
+/// clamped to ≥ 5% of the base rate. Only the steady-state loop
+/// ([`crate::sim::events::SteadySim`]) has an arrival clock, so only
+/// it reads this; Monte-Carlo inflation sees the plain catalog (which
+/// for `diurnal-*` equals the Default trace's). The valleys are what
+/// the DRS subsystem (`docs/power.md`) converts into slept nodes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DiurnalMod {
+    /// Relative swing of the instantaneous arrival rate, ∈ [0, 1].
+    pub amplitude: f64,
+    /// Day length in simulated seconds.
+    pub period_s: f64,
+}
+
+/// Default day length of [`TraceSpec::diurnal`] (two full cycles fit
+/// the default [`crate::sim::events::SteadyConfig`] horizon).
+pub const DIURNAL_PERIOD_S: f64 = 10_000.0;
+
 /// One demand profile in a trace's catalog.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TaskProfile {
@@ -68,6 +87,10 @@ pub struct TraceSpec {
     pub profiles: Vec<(TaskProfile, f64)>,
     /// Nominal trace size (the paper's Default has 8,152 tasks).
     pub n_tasks: usize,
+    /// Arrival-rate modulation (the `diurnal-<amp>` family); `None`
+    /// for every other trace — and the `None` path must not perturb
+    /// the RNG stream, so legacy runs stay bit-identical.
+    pub diurnal: Option<DiurnalMod>,
 }
 
 /// Table I, row "Task Population (%)": buckets `0, (0,1), 1, 2, 4, 8`.
@@ -136,7 +159,35 @@ impl TraceSpec {
                 profiles.push((profile(c, GpuDemand::Whole(k)), pop * 0.5));
             }
         }
-        TraceSpec { name: "default".into(), profiles, n_tasks: 8152 }
+        TraceSpec { name: "default".into(), profiles, n_tasks: 8152, diurnal: None }
+    }
+
+    /// **Diurnal** derived trace (`diurnal-<amp·100>`): Default's
+    /// demand catalog with a sinusoidal arrival-rate modulation of
+    /// relative amplitude `amplitude` and the default
+    /// [`DIURNAL_PERIOD_S`] day length. The load valleys leave nodes
+    /// idle — the scenario the DRS subsystem (`ext-drs`) exploits.
+    pub fn diurnal(amplitude: f64) -> TraceSpec {
+        Self::diurnal_with_period(amplitude, DIURNAL_PERIOD_S)
+    }
+
+    /// [`Self::diurnal`] with an explicit day length (experiments pin
+    /// the period to their horizon so every run sees whole cycles). A
+    /// non-default period is encoded into the name
+    /// (`diurnal-<amp>-p<period>`) so the [`Self::by_name`] roundtrip
+    /// reconstructs the *same* arrival process, never a silently
+    /// different one.
+    pub fn diurnal_with_period(amplitude: f64, period_s: f64) -> TraceSpec {
+        assert!((0.0..=1.0).contains(&amplitude), "amplitude must be in [0, 1]");
+        assert!(period_s > 0.0 && period_s.is_finite(), "period must be positive");
+        let mut spec = Self::default_trace();
+        spec.diurnal = Some(DiurnalMod { amplitude, period_s });
+        spec.name = if period_s == DIURNAL_PERIOD_S {
+            format!("diurnal-{:.0}", amplitude * 100.0)
+        } else {
+            format!("diurnal-{:.0}-p{period_s}", amplitude * 100.0)
+        };
+        spec
     }
 
     /// **Multi-GPU** derived trace: GPU resources requested by whole-GPU
@@ -276,6 +327,7 @@ impl TraceSpec {
             name: format!("mig-{:.0}", large_pop * 100.0),
             profiles,
             n_tasks: 8152,
+            diurnal: None,
         }
     }
 
@@ -325,12 +377,13 @@ impl TraceSpec {
             name: format!("mig-het-{:.0}", a30_share * 100.0),
             profiles,
             n_tasks: 8152,
+            diurnal: None,
         }
     }
 
     /// Reconstruct a spec from a trace name (`default`,
     /// `multi-gpu-20`, `sharing-gpu-100`, `constrained-gpu-33`,
-    /// `mig-30`/`mig-default`, `mig-het-40`, …).
+    /// `mig-30`/`mig-default`, `mig-het-40`, `diurnal-60`, …).
     pub fn by_name(name: &str) -> Option<TraceSpec> {
         if name == "default" {
             return Some(Self::default_trace());
@@ -355,6 +408,21 @@ impl TraceSpec {
         }
         if let Some(pct) = name.strip_prefix("constrained-") {
             return pct.parse::<f64>().ok().map(|p| Self::constrained(p / 100.0));
+        }
+        if let Some(rest) = name.strip_prefix("diurnal-") {
+            // `diurnal-<amp>` (default period) or `diurnal-<amp>-p<period>`.
+            let (amp, period) = match rest.split_once("-p") {
+                Some((a, p)) => (a, p.parse::<f64>().ok()?),
+                None => (rest, DIURNAL_PERIOD_S),
+            };
+            if !(period > 0.0 && period.is_finite()) {
+                return None;
+            }
+            return amp
+                .parse::<f64>()
+                .ok()
+                .filter(|a| (0.0..=100.0).contains(a))
+                .map(|a| Self::diurnal_with_period(a / 100.0, period));
         }
         None
     }
@@ -795,6 +863,35 @@ mod tests {
         // constrained(0.0) leaves every constrained profile at weight 0.
         let b = TraceSpec::constrained(0.0).synthesize(42);
         assert!(b.tasks.iter().all(|t| t.constraints.is_none()));
+    }
+
+    #[test]
+    fn diurnal_trace_keeps_default_catalog() {
+        let spec = TraceSpec::diurnal(0.6);
+        assert_eq!(spec.name, "diurnal-60");
+        let m = spec.diurnal.expect("modulation attached");
+        assert!((m.amplitude - 0.6).abs() < 1e-12);
+        assert_eq!(m.period_s, DIURNAL_PERIOD_S);
+        // Name → spec roundtrip, out-of-range amplitudes rejected.
+        assert!(TraceSpec::by_name("diurnal-60").is_some());
+        assert!(TraceSpec::by_name("diurnal-150").is_none());
+        assert!(TraceSpec::by_name("diurnal--5").is_none());
+        // Demand marginals are exactly Default's: the modulation only
+        // shapes arrival *timing*, never the catalog, so inflation
+        // runs on diurnal-* reproduce Default bit for bit.
+        let base = TraceSpec::default_trace();
+        assert_eq!(spec.profiles, base.profiles);
+        assert_eq!(spec.synthesize(42).tasks, base.synthesize(42).tasks);
+        // Custom periods are encoded in the name, and the name → spec
+        // roundtrip reconstructs the same arrival process (the
+        // contract `Simulation::new`'s re-derivation relies on).
+        let custom = TraceSpec::diurnal_with_period(0.4, 2_000.0);
+        assert_eq!(custom.name, "diurnal-40-p2000");
+        assert_eq!(custom.diurnal.unwrap().period_s, 2_000.0);
+        let back = TraceSpec::by_name(&custom.name).unwrap();
+        assert_eq!(back.diurnal, custom.diurnal);
+        assert!(TraceSpec::by_name("diurnal-40-p0").is_none());
+        assert!(TraceSpec::by_name("diurnal-40-pnope").is_none());
     }
 
     #[test]

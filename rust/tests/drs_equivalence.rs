@@ -1,0 +1,331 @@
+//! DRS equivalence + power-state property suite.
+//!
+//! The DRS subsystem (`rust/src/sched/drs.rs`, `docs/power.md`) must
+//! be invisible when disabled: a scheduler carrying a `drs` hook with
+//! `idle_timeout = ∞` (plus the `drs` filter now in the default chain
+//! and the state-aware power sums) has to produce **bit-identical**
+//! fixed-seed runs against a scheduler without the hook — across
+//! policies × trace families × seeds, in both simulation loops
+//! (inflation and steady-state churn).
+//!
+//! The suite also pins the active side: under finite timeouts nodes
+//! actually drain, sleep and wake; a `Draining`/`Asleep`/`Waking` node
+//! never receives a placement; the sleep/wake ledger conserves
+//! (`sleeps = wakes + currently asleep`, transition energy =
+//! `sleeps·sleep_j + wakes·wake_j` exactly, standby never
+//! double-counted on top of idle watts); and the `ext-drs` acceptance
+//! criterion in miniature — PWR⊕FGD+consolidate+DRS beats plain
+//! PWR⊕FGD on EOPC over a diurnal trace without giving up more than
+//! 2 GRAR points.
+
+use repro::cluster::node::PowerState;
+use repro::cluster::ClusterSpec;
+use repro::power;
+use repro::sched::{DrsConfig, DrsHook, SchedulerProfile};
+use repro::sim::events::{SteadyConfig, SteadySim};
+use repro::sim::{RunResult, Simulation};
+use repro::tasks::{GpuDemand, Task};
+use repro::trace::TraceSpec;
+
+/// Attach a `drs` hook with the given config (None = no hook at all).
+fn run_inflation(
+    policy: &str,
+    drs: Option<DrsConfig>,
+    cluster: &ClusterSpec,
+    trace: &TraceSpec,
+    seed: u64,
+    target: f64,
+) -> RunResult {
+    let mut sched = SchedulerProfile::parse(policy).unwrap().build().unwrap();
+    if let Some(cfg) = drs {
+        sched.add_post_hook(Box::new(DrsHook::new(cfg)));
+    }
+    let dc = cluster.build();
+    let workload = trace.synthesize(seed ^ 0x57AB1E).workload();
+    let mut sim = Simulation::with_spec(dc, sched, trace, workload, seed);
+    sim.record_frag = false;
+    sim.run_inflation(target)
+}
+
+fn assert_bit_identical(what: &str, a: &RunResult, b: &RunResult) {
+    assert_eq!(a.submitted, b.submitted, "{what}: submitted diverged");
+    assert_eq!(a.scheduled, b.scheduled, "{what}: scheduled diverged");
+    assert_eq!(a.failed, b.failed, "{what}: failed diverged");
+    assert_eq!(
+        a.allocated_gpu_units.to_bits(),
+        b.allocated_gpu_units.to_bits(),
+        "{what}: allocated units diverged"
+    );
+    assert_eq!(
+        a.final_eopc().to_bits(),
+        b.final_eopc().to_bits(),
+        "{what}: final EOPC diverged ({} vs {})",
+        a.final_eopc(),
+        b.final_eopc()
+    );
+    assert_eq!(
+        a.final_grar().to_bits(),
+        b.final_grar().to_bits(),
+        "{what}: final GRAR diverged"
+    );
+}
+
+/// timeout=∞ is the legacy mode: bit-identical inflation runs with and
+/// without the hook, across policies × traces × seeds.
+#[test]
+fn infinite_timeout_is_bit_identical_in_inflation() {
+    let cluster = ClusterSpec::tiny(6, 4, 1);
+    let traces = [
+        TraceSpec::default_trace(),
+        TraceSpec::sharing_gpu(1.0),
+        TraceSpec::multi_gpu(0.2),
+    ];
+    // A nonzero wake latency must be irrelevant while nothing sleeps.
+    let inert = DrsConfig::with_timeout(f64::INFINITY, 50);
+    for policy in ["fgd", "pwrfgd:0.1", "bestfit", "firstfit", "random"] {
+        for trace in &traces {
+            for seed in [1u64, 42] {
+                let what = format!("{policy}/{}/seed{seed}", trace.name);
+                let base = run_inflation(policy, None, &cluster, trace, seed, 0.7);
+                let with = run_inflation(policy, Some(inert), &cluster, trace, seed, 0.7);
+                assert!(base.submitted > 0, "{what}: empty run");
+                assert_bit_identical(&what, &base, &with);
+                assert_eq!(with.drs_sleeps, 0, "{what}: slept with timeout=∞");
+                assert_eq!(with.drs_wakes, 0, "{what}: woke with timeout=∞");
+            }
+        }
+    }
+}
+
+/// The same pin on a MIG fleet (the `drs` filter sits after the MIG
+/// plugins in the default chain and must not disturb slice placement).
+#[test]
+fn infinite_timeout_is_bit_identical_on_mig() {
+    let cluster = ClusterSpec::mig_het_cluster(3, 2, 4, 1);
+    let trace = TraceSpec::mig_het_trace(0.3, 0.4);
+    let inert = DrsConfig::with_timeout(f64::INFINITY, 10);
+    for policy in ["mig-fgd", "mig-pwrfgd:0.1"] {
+        let base = run_inflation(policy, None, &cluster, &trace, 11, 0.8);
+        let with = run_inflation(policy, Some(inert), &cluster, &trace, 11, 0.8);
+        assert!(base.scheduled > 0, "{policy}: scheduled nothing");
+        assert_bit_identical(policy, &base, &with);
+    }
+}
+
+/// timeout=∞ under churn: the steady-state loop (arrivals +
+/// departures through `Scheduler::place`/`release`, the second loop of
+/// the equivalence property) must agree bit for bit too.
+#[test]
+fn infinite_timeout_is_bit_identical_under_churn() {
+    let cfg = SteadyConfig {
+        mean_interarrival_s: 1.0,
+        mean_duration_s: 250.0,
+        horizon_s: 2_500.0,
+        sample_every_s: 50.0,
+        seed: 9,
+    };
+    let cluster = ClusterSpec::tiny(8, 4, 2);
+    let trace = TraceSpec::default_trace();
+    let run = |drs: Option<DrsConfig>| {
+        let mut sched = SchedulerProfile::parse("pwrfgd:0.1").unwrap().build().unwrap();
+        if let Some(c) = drs {
+            sched.add_post_hook(Box::new(DrsHook::new(c)));
+        }
+        let mut sim = SteadySim::new(cluster.build(), sched, &trace, &cfg);
+        sim.run(&cfg)
+    };
+    let a = run(None);
+    let b = run(Some(DrsConfig::with_timeout(f64::INFINITY, 100)));
+    assert!(a.arrivals > 1_000, "arrivals {}", a.arrivals);
+    assert_eq!(a.arrivals, b.arrivals);
+    assert_eq!(a.scheduled, b.scheduled);
+    assert_eq!(a.failed, b.failed);
+    assert_eq!(a.departures, b.departures);
+    assert_eq!(
+        a.steady_eopc_w.to_bits(),
+        b.steady_eopc_w.to_bits(),
+        "steady EOPC diverged"
+    );
+    assert_eq!(b.drs_sleeps, 0);
+    assert_eq!(b.mean_asleep_nodes, 0.0);
+}
+
+/// Power-state transition properties under random churn, driven
+/// through the real `place`/`release` protocol:
+/// * a placement never lands on a `Draining`/`Asleep`/`Waking` node,
+/// * the sleep/wake ledger conserves at every step
+///   (`sleeps = wakes + |Asleep ∪ Waking|`, `wakes ≤ sleeps`),
+/// * observed datacenter power decomposes into exactly one of
+///   standby/Eq. 1-2 per node (never negative, never double-counted),
+/// * transition energy is exactly `sleeps·sleep_j + wakes·wake_j`.
+#[test]
+fn power_state_invariants_under_random_churn() {
+    let mut dc = ClusterSpec::tiny(8, 2, 1).build();
+    let profile = SchedulerProfile::parse(
+        "score(pwr=0.1,fgd=0.7,consolidate=0.2)|bind(weighted:0.1)|hook(drs:5:3:25:100)",
+    )
+    .unwrap();
+    let mut sched = profile.build().unwrap();
+    let spec = TraceSpec::default_trace();
+    let workload = spec.synthesize(3).workload();
+    let mut sampler = spec.sampler(7);
+    let mut resident: Vec<(Task, usize, repro::cluster::Placement)> = Vec::new();
+    let mut placed_total = 0u64;
+    for step in 0..3_000usize {
+        if step % 5 == 3 && !resident.is_empty() {
+            // Departure: free a resident task (deterministic pick).
+            let (t, n, p) = resident.remove(step % resident.len());
+            sched.release(&mut dc, &t, n, &p);
+        } else {
+            let task = sampler.next_task();
+            if let Some(d) = sched.place(&mut dc, &workload, &task) {
+                assert_eq!(
+                    dc.nodes[d.node].power_state,
+                    PowerState::Active,
+                    "step {step}: placement on a non-Active node"
+                );
+                resident.push((task, d.node, d.placement));
+                placed_total += 1;
+            }
+        }
+        // Ledger conservation at every step.
+        let asleep = dc
+            .nodes
+            .iter()
+            .filter(|n| n.power_state == PowerState::Asleep)
+            .count() as u64;
+        let waking = dc
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.power_state, PowerState::Waking { .. }))
+            .count() as u64;
+        let sleeps = sched.hook_counter("drs_sleeps");
+        let wakes = sched.hook_counter("drs_wakes");
+        assert!(wakes <= sleeps, "step {step}: woke more than ever slept");
+        assert_eq!(
+            sleeps,
+            wakes + asleep,
+            "step {step}: sleep/wake ledger out of balance (waking={waking})"
+        );
+        // Observed power decomposes node-by-node, exactly once each.
+        let p_obs = power::p_datacenter(&dc);
+        let expect: f64 = dc.nodes.iter().map(power::p_node_observed).sum();
+        assert!((p_obs - expect).abs() < 1e-6, "step {step}: power decomposition");
+        let p_full: f64 = dc.nodes.iter().map(|n| power::p_node(n)).sum();
+        assert!(p_obs >= asleep as f64 * power::NODE_STANDBY_W - 1e-9);
+        assert!(p_obs <= p_full + 1e-9, "step {step}: sleeping increased power");
+    }
+    assert!(placed_total > 300, "churn placed too little: {placed_total}");
+    let sleeps = sched.hook_counter("drs_sleeps");
+    let wakes = sched.hook_counter("drs_wakes");
+    assert!(sleeps > 0, "aggressive timeout never slept a node");
+    // Exact transition-energy ledger (integer joule costs).
+    assert_eq!(
+        sched.hook_counter("drs_transition_j"),
+        sleeps * 25 + wakes * 100,
+        "transition energy double-counted or lost"
+    );
+}
+
+/// Non-Active nodes are excluded by the default filter chain in plain
+/// scheduling too (no hook attached — states pinned by hand).
+#[test]
+fn draining_and_sleeping_nodes_never_receive_placements() {
+    use repro::sched::{PolicyKind, Scheduler};
+    use repro::tasks::Workload;
+    let mut dc = ClusterSpec::tiny(2, 2, 0).build();
+    let w = Workload::default();
+    let mut sched = Scheduler::from_policy(PolicyKind::FirstFit);
+    let t = Task::new(0, 1.0, 0.0, GpuDemand::Whole(1));
+    dc.nodes[0].power_state = PowerState::Draining;
+    let d = sched.schedule(&dc, &w, &t).expect("node 1 is awake");
+    assert_eq!(d.node, 1, "draining node selected");
+    for state in [
+        PowerState::Asleep,
+        PowerState::Draining,
+        PowerState::Waking { ready_at: 10 },
+    ] {
+        dc.nodes[1].power_state = state;
+        assert!(
+            sched.schedule(&dc, &w, &t).is_none(),
+            "placed onto {state:?} with the whole fleet unavailable"
+        );
+    }
+    dc.nodes[1].power_state = PowerState::Active;
+    assert!(sched.schedule(&dc, &w, &t).is_some());
+}
+
+/// The `ext-drs` acceptance criterion in miniature: on a diurnal trace
+/// the DRS composition must achieve a lower steady-state EOPC than
+/// plain PWR⊕FGD at equal offered load, sleep real nodes, and not
+/// degrade GRAR by more than 2 points.
+#[test]
+fn drs_saves_power_on_diurnal_load_without_grar_collapse() {
+    let cfg = SteadyConfig {
+        mean_interarrival_s: 1.0,
+        mean_duration_s: 40.0,
+        horizon_s: 4_000.0,
+        sample_every_s: 50.0,
+        seed: 11,
+    };
+    let cluster = ClusterSpec::tiny(16, 4, 2);
+    let trace = TraceSpec::diurnal_with_period(0.6, 2_000.0);
+    let run = |policy: &str| {
+        let sched = SchedulerProfile::parse(policy).unwrap().build().unwrap();
+        let mut sim = SteadySim::new(cluster.build(), sched, &trace, &cfg);
+        sim.run(&cfg)
+    };
+    let base = run("pwrfgd:0.1");
+    let drs = run("score(pwr=0.1,fgd=0.7,consolidate=0.2)|bind(weighted:0.1)|hook(drs:80:5)");
+    assert!(drs.drs_sleeps > 0, "no node ever slept");
+    assert!(drs.mean_asleep_nodes > 0.0, "steady state kept nothing asleep");
+    assert!(
+        drs.steady_eopc_w < base.steady_eopc_w,
+        "DRS did not save power: {} vs base {}",
+        drs.steady_eopc_w,
+        base.steady_eopc_w
+    );
+    assert!(
+        drs.final_grar() >= base.final_grar() - 0.02,
+        "GRAR degraded by more than 2 points: {} vs base {}",
+        drs.final_grar(),
+        base.final_grar()
+    );
+}
+
+/// Wake-on-demand end to end: drive the fleet asleep through a lull,
+/// then push demand and watch sleepers come back and host it.
+#[test]
+fn demand_pressure_wakes_sleepers_end_to_end() {
+    use repro::tasks::Workload;
+    let mut dc = ClusterSpec::tiny(4, 2, 0).build();
+    let profile = SchedulerProfile::parse(
+        "score(pwr=0.1,fgd=0.9)|bind(weighted:0.1)|hook(drs:3:2)",
+    )
+    .unwrap();
+    let mut sched = profile.build().unwrap();
+    let w = Workload::default();
+    // A lull: cycle short CPU-only tasks to tick the clock while the
+    // GPUs sit idle, until untouched nodes drain and sleep.
+    for i in 0..40u64 {
+        let t = Task::new(i, 1.0, 0.0, GpuDemand::Zero);
+        if let Some(d) = sched.place(&mut dc, &w, &t) {
+            sched.release(&mut dc, &t, d.node, &d.placement);
+        }
+    }
+    assert!(
+        dc.nodes.iter().any(|n| n.power_state == PowerState::Asleep),
+        "lull never slept a node"
+    );
+    // Demand pressure: whole-GPU tasks. Failures trigger wakes; after
+    // the 2-tick boot, capacity returns and placements succeed.
+    let mut scheduled = 0;
+    for i in 100..140u64 {
+        let t = Task::new(i, 1.0, 0.0, GpuDemand::Whole(1));
+        if sched.place(&mut dc, &w, &t).is_some() {
+            scheduled += 1;
+        }
+    }
+    assert!(sched.hook_counter("drs_wakes") > 0, "pressure never woke a sleeper");
+    assert!(scheduled >= 4, "woken capacity never hosted demand: {scheduled}");
+}
