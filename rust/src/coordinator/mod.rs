@@ -18,8 +18,16 @@
 //! ← {"ok":true}
 //! → {"op":"stats"}
 //! ← {"ok":true,"eopc_w":...,"grar":...,"tasks":...,"active_gpus":...}
+//! → {"op":"metrics"}
+//! ← {"ok":true,"format":"prometheus-text-0.0.4","body":"# HELP repro_sched_places ..."}
 //! → {"op":"shutdown"}
 //! ```
+//!
+//! The `metrics` op serves the scheduler's full observability registry
+//! ([`crate::obs`]) — every catalogued counter and phase-latency
+//! histogram plus live coordinator gauges — in Prometheus text
+//! exposition format, ready to paste behind a scrape endpoint (see
+//! `docs/observability.md`).
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -126,6 +134,30 @@ impl CoordinatorState {
             ("active_gpus", Json::Num(self.dc.active_gpus() as f64)),
             ("active_nodes", Json::Num(self.dc.active_nodes() as f64)),
         ])
+    }
+
+    /// The full observability registry — the scheduler's merged metrics
+    /// snapshot ([`Scheduler::metrics`]) plus live coordinator gauges —
+    /// rendered in Prometheus text exposition format under the
+    /// `repro_` prefix. Served by the `metrics` wire op.
+    pub fn prometheus_metrics(&self) -> String {
+        let mut reg = self.sched.metrics();
+        let (cpu_w, gpu_w) = power::p_datacenter_split(&self.dc);
+        let grar = if self.arrived_gpu_units > 0.0 {
+            self.dc.gpu_allocated_units() / self.arrived_gpu_units
+        } else {
+            1.0
+        };
+        reg.set_gauge("coordinator_eopc_w", cpu_w + gpu_w);
+        reg.set_gauge("coordinator_cpu_w", cpu_w);
+        reg.set_gauge("coordinator_gpu_w", gpu_w);
+        reg.set_gauge("coordinator_grar", grar);
+        reg.set_gauge("coordinator_tasks", self.dc.n_tasks as f64);
+        reg.set_gauge("coordinator_submitted", self.submitted as f64);
+        reg.set_gauge("coordinator_failed", self.failed as f64);
+        reg.set_gauge("coordinator_active_gpus", self.dc.active_gpus() as f64);
+        reg.set_gauge("coordinator_active_nodes", self.dc.active_nodes() as f64);
+        reg.to_prometheus("repro_")
     }
 }
 
@@ -238,6 +270,17 @@ pub fn handle_request(state: &Mutex<CoordinatorState>, line: &str) -> (Json, boo
             }
         }
         "stats" => (state.lock().unwrap().stats(), false),
+        "metrics" => {
+            let body = state.lock().unwrap().prometheus_metrics();
+            (
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("format", Json::Str("prometheus-text-0.0.4".into())),
+                    ("body", Json::Str(body)),
+                ]),
+                false,
+            )
+        }
         "shutdown" => (Json::obj(vec![("ok", Json::Bool(true))]), true),
         _ => (err("unknown op"), false),
     }
@@ -404,6 +447,50 @@ mod tests {
         let (resp, _) = handle_request(&st, r#"{"op":"stats"}"#);
         assert!(resp.get("eopc_w").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(resp.get("grar").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn metrics_request_serves_prometheus_text_for_every_catalog_key() {
+        let st = state();
+        let (_, _) =
+            handle_request(&st, r#"{"op":"submit","id":1,"cpu":4,"mem":1024,"gpu":0.5}"#);
+        let (resp, quit) = handle_request(&st, r#"{"op":"metrics"}"#);
+        assert!(!quit);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(
+            resp.get("format").and_then(|f| f.as_str()),
+            Some("prometheus-text-0.0.4")
+        );
+        let body = resp.get("body").and_then(|b| b.as_str()).expect("body");
+        // Every catalogued metric key must be present under the prefix.
+        for (key, _, _) in crate::obs::catalog() {
+            assert!(
+                body.contains(&format!("repro_{key}")),
+                "metrics body missing catalog key {key}"
+            );
+        }
+        // Coordinator gauges ride along, and the submit above counted.
+        assert!(body.contains("repro_coordinator_eopc_w"));
+        assert!(body.contains("repro_sched_places 1"));
+        // Well-formed exposition: every non-comment line is `name value`.
+        for line in body.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let mut parts = line.split_whitespace();
+            let name = parts.next().expect("metric name");
+            let value = parts.next().expect("metric value");
+            assert!(parts.next().is_none(), "trailing tokens in {line:?}");
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric()
+                    || c == '_'
+                    || c == ':'
+                    || c == '{'
+                    || c == '}'
+                    || c == '"'
+                    || c == '='
+                    || c == '.'),
+                "bad metric name {name:?}"
+            );
+            assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
+        }
     }
 
     #[test]

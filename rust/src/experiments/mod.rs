@@ -32,6 +32,7 @@ use anyhow::{bail, Result};
 
 use crate::cluster::ClusterSpec;
 use crate::metrics::{average_on_grid, capacity_grid, savings_pct, Column};
+use crate::obs::{DecisionTracer, TraceSink};
 use crate::sched::{PolicyKind, SchedulerProfile};
 use crate::sim::{run_repetitions, RepeatConfig};
 use crate::trace::TraceSpec;
@@ -50,6 +51,12 @@ pub struct ExpConfig {
     pub target: f64,
     /// Output directory for CSVs.
     pub out_dir: String,
+    /// Optional decision-trace sink (`--trace-decisions`): every
+    /// simulation the harness runs — inflation repetitions and the
+    /// direct steady-state loops alike — streams JSONL decision events
+    /// into it. Events are self-describing (policy/seed/seq fields), so
+    /// one shared sink per experiment suffices. See [`crate::obs`].
+    pub trace_sink: Option<TraceSink>,
 }
 
 impl Default for ExpConfig {
@@ -60,6 +67,7 @@ impl Default for ExpConfig {
             scale: 1.0,
             target: 1.02,
             out_dir: "results".into(),
+            trace_sink: None,
         }
     }
 }
@@ -132,6 +140,16 @@ impl Harness {
         &self.grid
     }
 
+    /// Attach the harness-level decision-trace sink (if any) to a
+    /// freshly built scheduler — the direct `SteadySim` construction
+    /// sites mirror what `run_repetitions` does for inflation runs.
+    fn attach_trace(&self, sched: &mut crate::sched::Scheduler, seed: u64) {
+        if let Some(sink) = &self.cfg.trace_sink {
+            let label = sched.label().to_string();
+            sched.set_tracer(DecisionTracer::new(sink.clone(), &label, seed));
+        }
+    }
+
     /// Run (or fetch) the averaged series for a (trace, policy) cell.
     /// `policy` accepts a legacy [`PolicyKind`] or any
     /// [`SchedulerProfile`]. The cache keys on the *full* profile
@@ -156,6 +174,7 @@ impl Harness {
             reps: self.cfg.reps,
             base_seed: self.cfg.seed,
             target_ratio: self.cfg.target,
+            trace: self.cfg.trace_sink.clone(),
             ..Default::default()
         };
         let runs = run_repetitions(&self.cluster, trace, profile, &rcfg);
@@ -336,6 +355,7 @@ impl Harness {
             base_seed: self.cfg.seed,
             target_ratio: self.cfg.target,
             record_frag: true,
+            trace: self.cfg.trace_sink.clone(),
             ..Default::default()
         };
         let mut headers = vec!["x".to_string()];
@@ -440,7 +460,8 @@ impl Harness {
                         seed: self.cfg.seed + rep as u64,
                     };
                     let dc = self.cluster.build();
-                    let sched = crate::sched::Scheduler::from_policy(policy);
+                    let mut sched = crate::sched::Scheduler::from_policy(policy);
+                    self.attach_trace(&mut sched, cfg.seed);
                     let mut sim = SteadySim::new(dc, sched, &trace, &cfg);
                     let r = sim.run(&cfg);
                     eopc.push(r.steady_eopc_w);
@@ -488,6 +509,7 @@ impl Harness {
             target_ratio: self.cfg.target,
             record_frag: true,
             mig_repartition: true,
+            trace: self.cfg.trace_sink.clone(),
             ..Default::default()
         };
         let mut headers = vec!["x".to_string()];
@@ -556,6 +578,7 @@ impl Harness {
             sched.add_post_hook(Box::new(crate::sched::policies::MigRepartitioner::new(
                 crate::sched::policies::RepartitionConfig::default(),
             )));
+            self.attach_trace(&mut sched, cfg.seed);
             let mut sim = SteadySim::new(cluster.build(), sched, &trace, &cfg);
             let r = sim.run(&cfg);
             let (label, infl_reparts, infl_slices) = &repart_rows[pi];
@@ -606,6 +629,7 @@ impl Harness {
             record_frag: true,
             mig_repartition: true,
             mig_frag_threshold: MIG_HET_FRAG_THRESHOLD,
+            trace: self.cfg.trace_sink.clone(),
             ..Default::default()
         };
         // Per policy: (total, A100, A30) columns for each metric.
@@ -695,6 +719,7 @@ impl Harness {
                     MIG_HET_FRAG_THRESHOLD,
                 ),
             )));
+            self.attach_trace(&mut sched, cfg.seed);
             let mut sim = SteadySim::new(cluster.build(), sched, &trace, &cfg);
             let r = sim.run(&cfg);
             let (label, infl_re, infl_pro, infl_slices) = &churn_rows[pi];
@@ -746,7 +771,8 @@ impl Harness {
                         sample_every_s: 200.0 * scale,
                         seed: self.cfg.seed + rep as u64,
                     };
-                    let sched = policy.build().expect("valid ext-drs profile");
+                    let mut sched = policy.build().expect("valid ext-drs profile");
+                    self.attach_trace(&mut sched, cfg.seed);
                     let mut sim = SteadySim::new(self.cluster.build(), sched, &trace, &cfg);
                     sim.run(&cfg)
                 })
@@ -1067,6 +1093,7 @@ mod tests {
             scale: 0.03,
             target: 0.6,
             out_dir: dir.to_string(),
+            trace_sink: None,
         }
     }
 

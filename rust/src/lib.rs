@@ -23,7 +23,12 @@
 //! and adds the **DRS node sleep/wake subsystem** with a documented,
 //! state-aware power layer (`docs/power.md`): [`cluster::PowerState`]
 //! on every node, the [`sched::drs`] hook/filter/score plugins,
-//! `diurnal-<amp>` traces and the `ext-drs` experiment.
+//! `diurnal-<amp>` traces and the `ext-drs` experiment. The
+//! **observability layer** (`docs/observability.md`) adds a
+//! scheduler-owned metrics registry with a drift-proof catalog,
+//! opt-in JSONL decision tracing (`--trace-decisions`, `repro
+//! explain`), and phase-latency histograms served by the coordinator
+//! in Prometheus text format — see [`obs`].
 //!
 //! ## Layer map
 //!
@@ -54,6 +59,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod frag;
 pub mod metrics;
+pub mod obs;
 pub mod power;
 pub mod runtime;
 pub mod sched;

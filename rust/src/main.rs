@@ -1,14 +1,16 @@
 //! `repro` — CLI for the PWR+FGD GPU-datacenter scheduling system.
 //!
 //! ```text
-//! repro simulate   --policy pwrfgd:0.1 --trace default --seed 42 [--scale 0.25] [--target 1.02]
-//! repro experiment <table1|table2|fig1..fig10|ext-mig|ext-mig-het|ext-profiles|ext-filters|ext-drs|all> [--reps 10] [--scale 1.0] [--out results]
+//! repro simulate   --policy pwrfgd:0.1 --trace default --seed 42 [--scale 0.25] [--target 1.02] [--trace-decisions t.jsonl] [--obs-summary obs_summary.json]
+//! repro experiment <table1|table2|fig1..fig10|ext-mig|ext-mig-het|ext-profiles|ext-filters|ext-drs|all> [--reps 10] [--scale 1.0] [--out results] [--trace-decisions t.jsonl]
 //! repro ext-mig    [--reps 10] [--scale 1.0] [--out results]   (MIG subsystem end-to-end)
 //! repro ext-mig-het [--reps 10] [--scale 1.0] [--out results]  (mixed A100+A30 MIG fleet)
 //! repro ext-profiles [--reps 10] [--scale 1.0] [--out results] (composite profile DSL sweep)
 //! repro ext-filters [--reps 10] [--scale 1.0] [--out results]  (constraint-aware filter sweep)
 //! repro ext-drs    [--reps 10] [--scale 1.0] [--out results]   (DRS sleep/wake on diurnal load)
 //! repro list-plugins                                           (every registry key + description)
+//! repro explain    [--policy pwrfgd:0.1] [--trace default] [--seed 42] [--at 1] [--top 5]
+//! repro bench-scale [--quick] [--out BENCH_scale.json]         (scale sweep + phase latencies)
 //! repro trace      <default|multi-gpu-20|sharing-gpu-100|constrained-50|mig-30|diurnal-60|...> [--seed 42]
 //! repro inventory
 //! repro serve      [--addr 127.0.0.1:7077] [--policy pwrfgd:0.1]
@@ -22,6 +24,13 @@
 //! ```text
 //! --policy "score(pwr=0.5,fgd=0.3,dotprod=0.2)|bind(weighted:0.5)|mod(loadalpha:0.9:0.0)|filter(resources,gpumodel,labels:zone=z0)"
 //! ```
+//!
+//! Observability (`docs/observability.md`): `--trace-decisions <path>`
+//! streams one JSONL event per scheduling decision, `--obs-summary
+//! <path>` writes the metrics-registry snapshot (phase-latency
+//! histograms included), `repro explain` replays one arrival and
+//! pretty-prints its scoring table, and `repro bench-scale` regenerates
+//! `BENCH_scale.json`.
 
 use anyhow::{bail, Context, Result};
 use repro::cluster::ClusterSpec;
@@ -34,7 +43,7 @@ use repro::util::cli::parse_args;
 
 const VALUE_KEYS: &[&str] = &[
     "policy", "trace", "seed", "scale", "target", "reps", "out", "addr", "alpha",
-    "artifacts", "tasks",
+    "artifacts", "tasks", "trace-decisions", "obs-summary", "at", "top",
 ];
 
 fn main() -> Result<()> {
@@ -50,6 +59,8 @@ fn main() -> Result<()> {
         Some("ext-filters") => cmd_experiment(&args, Some("ext-filters")),
         Some("ext-drs") => cmd_experiment(&args, Some("ext-drs")),
         Some("list-plugins") => cmd_list_plugins(),
+        Some("explain") => cmd_explain(&args),
+        Some("bench-scale") => cmd_bench_scale(&args),
         Some("trace") => cmd_trace(&args),
         Some("inventory") => cmd_inventory(),
         Some("serve") => cmd_serve(&args),
@@ -57,7 +68,7 @@ fn main() -> Result<()> {
         Some("plot") => cmd_plot(&args),
         _ => {
             eprintln!(
-                "usage: repro <simulate|experiment|ext-mig|ext-mig-het|ext-profiles|ext-filters|ext-drs|list-plugins|trace|inventory|serve|scorer-check|plot> [options]\n\
+                "usage: repro <simulate|experiment|ext-mig|ext-mig-het|ext-profiles|ext-filters|ext-drs|list-plugins|explain|bench-scale|trace|inventory|serve|scorer-check|plot> [options]\n\
                  see rust/src/main.rs header for details"
             );
             Ok(())
@@ -72,6 +83,18 @@ fn cmd_list_plugins() -> Result<()> {
     println!("{:<8} {:<16} description", "point", "key");
     for (kind, key, desc) in repro::sched::profile::registry_catalog() {
         println!("{kind:<8} {key:<16} {desc}");
+    }
+    // The metrics catalog rides along: every registry key the
+    // observability layer maintains (docs/observability.md).
+    println!();
+    println!("{:<10} {:<26} description", "metric", "key");
+    for (key, kind, desc) in repro::obs::catalog() {
+        let kind = match kind {
+            repro::obs::MetricKind::Counter => "counter",
+            repro::obs::MetricKind::Gauge => "gauge",
+            repro::obs::MetricKind::Histogram => "histogram",
+        };
+        println!("{kind:<10} {key:<26} {desc}");
     }
     Ok(())
 }
@@ -157,12 +180,28 @@ fn cmd_simulate(args: &repro::util::cli::Args) -> Result<()> {
         spec.name
     );
     let workload = spec.synthesize(seed ^ 0x57AB1E).workload();
-    let sched = policy.build().map_err(anyhow::Error::msg)?;
+    let mut sched = policy.build().map_err(anyhow::Error::msg)?;
+    if let Some(path) = args.opt("trace-decisions") {
+        let sink = repro::obs::TraceSink::file(path)
+            .with_context(|| format!("cannot open trace sink '{path}'"))?;
+        sched.set_tracer(repro::obs::DecisionTracer::new(sink, &policy.label, seed));
+        eprintln!("tracing decisions to {path}");
+    }
+    let obs_summary = args.opt("obs-summary").map(str::to_string);
+    if obs_summary.is_some() {
+        sched.enable_profiling(true);
+    }
     let mut sim = Simulation::with_spec(dc, sched, &spec, workload, seed);
     sim.record_frag = false;
     let t0 = std::time::Instant::now();
     let out = sim.run_inflation(target);
     let dt = t0.elapsed().as_secs_f64();
+    sim.sched.trace_flush();
+    if let Some(path) = obs_summary {
+        std::fs::write(&path, format!("{}\n", sim.sched.metrics().to_json().dump()))
+            .with_context(|| format!("cannot write obs summary '{path}'"))?;
+        eprintln!("wrote {path}");
+    }
     println!(
         "submitted {} scheduled {} failed {} in {:.1}s ({:.0} decisions/s)",
         out.submitted,
@@ -189,15 +228,28 @@ fn cmd_experiment(args: &repro::util::cli::Args, forced_id: Option<&str>) -> Res
             .cloned()
             .unwrap_or_else(|| "all".to_string()),
     };
+    let trace_sink = match args.opt("trace-decisions") {
+        Some(path) => {
+            let sink = repro::obs::TraceSink::file(path)
+                .with_context(|| format!("cannot open trace sink '{path}'"))?;
+            eprintln!("tracing decisions to {path}");
+            Some(sink)
+        }
+        None => None,
+    };
     let cfg = ExpConfig {
         reps: args.get_usize("reps", 10),
         seed: args.get_u64("seed", 42),
         scale: args.get_f64("scale", 1.0),
         target: args.get_f64("target", 1.02),
         out_dir: args.get("out", "results"),
+        trace_sink: trace_sink.clone(),
     };
     let mut harness = Harness::new(cfg);
     let files = harness.run(&id)?;
+    if let Some(sink) = &trace_sink {
+        sink.flush();
+    }
     for f in files {
         println!("wrote {f}");
     }
@@ -250,6 +302,278 @@ fn cmd_serve(args: &repro::util::cli::Args) -> Result<()> {
     let server = Server::bind(&addr, state)?;
     eprintln!("coordinator listening on {addr} (policy {label})");
     server.run()?;
+    Ok(())
+}
+
+/// Replay one arrival of a simulated run and pretty-print the decision
+/// trace: PreFilter verdict, per-filter vetoes, the scoring table
+/// (winner + runners-up with per-plugin normalized scores and
+/// post-modulator weights), tie-break and bind. The replay commits the
+/// first `--at − 1` decisions exactly as `simulate` would, then
+/// explains the `--at`-th without committing it.
+fn cmd_explain(args: &repro::util::cli::Args) -> Result<()> {
+    use repro::util::json::Json;
+    let policy = policy_from(args)?;
+    let trace_name = args.get("trace", "default");
+    let spec = TraceSpec::by_name(&trace_name)
+        .with_context(|| format!("unknown trace '{trace_name}'"))?;
+    let seed = args.get_u64("seed", 42);
+    let scale = args.get_f64("scale", 1.0);
+    let nth = args.get_u64("at", 1).max(1);
+    let top_k = args.get_usize("top", 5);
+    let dc = cluster_for(scale).build();
+    let workload = spec.synthesize(seed ^ 0x57AB1E).workload();
+    let sched = policy.build().map_err(anyhow::Error::msg)?;
+    let mut sim = Simulation::with_spec(dc, sched, &spec, workload, seed);
+    let ev = sim.explain_arrival(nth, top_k);
+    println!(
+        "explain: arrival #{nth} on trace {} (policy {}, seed {seed})",
+        spec.name, policy.label
+    );
+    if let Some(t) = ev.get("task") {
+        println!(
+            "task id {} | cpu {} | mem {} | gpu {}",
+            t.get("id").and_then(Json::as_u64).unwrap_or(0),
+            t.get("cpu").and_then(Json::as_f64).unwrap_or(0.0),
+            t.get("mem").and_then(Json::as_f64).unwrap_or(0.0),
+            t.get("gpu").and_then(Json::as_str).unwrap_or("-"),
+        );
+    }
+    if let Some(p) = ev.get("prefilter") {
+        match p.get("vetoed_by").and_then(Json::as_str) {
+            Some(by) => println!("prefilter: veto (by {by})"),
+            None => println!(
+                "prefilter: {}",
+                p.get("verdict").and_then(Json::as_str).unwrap_or("-")
+            ),
+        }
+    }
+    if let Some(Json::Arr(filters)) = ev.get("filters") {
+        for f in filters {
+            let vetoes = f.get("vetoes").and_then(Json::as_u64).unwrap_or(0);
+            if vetoes > 0 {
+                println!(
+                    "filter {:<14} vetoed {vetoes} node(s)",
+                    f.get("name").and_then(Json::as_str).unwrap_or("?")
+                );
+            }
+        }
+    }
+    println!(
+        "feasible nodes: {}",
+        ev.get("feasible").and_then(Json::as_u64).unwrap_or(0)
+    );
+    if let Some(Json::Arr(ws)) = ev.get("weights") {
+        let rendered: Vec<String> = ws
+            .iter()
+            .map(|w| {
+                format!(
+                    "{}(w={:.3})",
+                    w.get("plugin").and_then(Json::as_str).unwrap_or("?"),
+                    w.get("weight").and_then(Json::as_f64).unwrap_or(0.0)
+                )
+            })
+            .collect();
+        if !rendered.is_empty() {
+            println!("score plugins: {}", rendered.join(" "));
+        }
+    }
+    if let Some(Json::Arr(scores)) = ev.get("scores") {
+        if !scores.is_empty() {
+            println!("{:<6} {:>10}  per-plugin (normalized)", "node", "combined");
+        }
+        for row in scores {
+            let per: Vec<String> = match row.get("per_plugin") {
+                Some(Json::Obj(m)) => m
+                    .iter()
+                    .map(|(k, v)| format!("{k}={:.4}", v.as_f64().unwrap_or(0.0)))
+                    .collect(),
+                _ => Vec::new(),
+            };
+            let winner = row.get("winner").and_then(Json::as_bool).unwrap_or(false);
+            println!(
+                "{:<6} {:>10.4}  {}{}",
+                row.get("node").and_then(Json::as_u64).unwrap_or(0),
+                row.get("combined").and_then(Json::as_f64).unwrap_or(0.0),
+                per.join(" "),
+                if winner { "  <- winner" } else { "" }
+            );
+        }
+    }
+    let ties = ev.get("ties").and_then(Json::as_u64).unwrap_or(0);
+    if ties > 1 {
+        println!(
+            "tie-break: {ties} nodes at max score (tie seed {})",
+            ev.get("tie_seed").and_then(Json::as_u64).unwrap_or(0)
+        );
+    }
+    if let Some(b @ Json::Obj(_)) = ev.get("bind") {
+        println!(
+            "bind: node {} via {} ({} candidate placement(s))",
+            b.get("node").and_then(Json::as_u64).unwrap_or(0),
+            b.get("placement").and_then(Json::as_str).unwrap_or("?"),
+            b.get("candidates").and_then(Json::as_u64).unwrap_or(0)
+        );
+    }
+    println!(
+        "outcome: {}",
+        ev.get("outcome").and_then(Json::as_str).unwrap_or("?")
+    );
+    Ok(())
+}
+
+/// The `bench-scale` scenario sweep: inflation and steady-state churn
+/// at two cluster sizes, with the phase-latency breakdown from a
+/// profiled run and the decision-tracing overhead (plain vs null-sink
+/// tracer) on the small inflation scenario. Writes `BENCH_scale.json`
+/// (committed at the repo root; regenerate with `repro bench-scale`).
+/// `--quick` (or `REPRO_BENCH_FAST=1`) shrinks cluster sizes and
+/// sample counts for the CI smoke while keeping the schema identical.
+fn cmd_bench_scale(args: &repro::util::cli::Args) -> Result<()> {
+    use repro::obs::{DecisionTracer, MetricsRegistry, TraceSink};
+    use repro::sched::{PolicyKind, Scheduler};
+    use repro::sim::events::{SteadyConfig, SteadySim};
+    use repro::util::benchkit::{BenchConfig, BenchResult, Bencher};
+    use repro::util::json::Json;
+    use std::time::Duration;
+
+    let quick = args.has_flag("quick")
+        || std::env::var("REPRO_BENCH_FAST").as_deref() == Ok("1");
+    let out_path = args.get("out", "BENCH_scale.json");
+    let policy = PolicyKind::PwrFgd { alpha: 0.1 };
+    // ~1k nodes is paper scale; ~10k is the order-of-magnitude stress
+    // point. --quick shrinks both (the JSON records the actual counts).
+    let (small, large) = if quick { (64, 256) } else { (1_000, 10_000) };
+    let target = if quick { 0.4 } else { 1.0 };
+    let horizon = if quick { 400.0 } else { 6_000.0 };
+    let bc = BenchConfig {
+        warmup: Duration::from_millis(if quick { 0 } else { 200 }),
+        measure: Duration::from_secs(if quick { 1 } else { 20 }),
+        max_samples: if quick { 1 } else { 5 },
+        min_samples: 1,
+    };
+    let spec = TraceSpec::default_trace();
+
+    // One full inflation run; returns (decisions, metrics snapshot).
+    let run_inflation = |nodes: usize, profiled: bool, traced: bool, seed: u64| {
+        let dc = ClusterSpec::tiny(nodes, 8, nodes / 8).build();
+        let mut sched = Scheduler::from_policy(policy);
+        sched.enable_profiling(profiled);
+        if traced {
+            let label = sched.label().to_string();
+            sched.set_tracer(DecisionTracer::new(TraceSink::null(), &label, seed));
+        }
+        let workload = spec.synthesize(seed ^ 0x57AB1E).workload();
+        let mut sim = Simulation::with_spec(dc, sched, &spec, workload, seed);
+        sim.record_frag = false;
+        let out = sim.run_inflation(target);
+        (out.submitted, sim.sched.metrics())
+    };
+    // One steady-state churn run; returns (protocol entries, metrics).
+    let run_churn = |nodes: usize, profiled: bool, seed: u64| {
+        let cfg = SteadyConfig {
+            mean_interarrival_s: 1.0,
+            mean_duration_s: horizon / 10.0,
+            horizon_s: horizon,
+            sample_every_s: horizon / 40.0,
+            seed,
+        };
+        let dc = ClusterSpec::tiny(nodes, 8, nodes / 8).build();
+        let mut sched = Scheduler::from_policy(policy);
+        sched.enable_profiling(profiled);
+        let mut sim = SteadySim::new(dc, sched, &spec, &cfg);
+        let r = sim.run(&cfg);
+        (r.arrivals + r.departures, sim.sched().metrics())
+    };
+
+    let phase_json = |metrics: &MetricsRegistry| -> Json {
+        let phases = [
+            "phase_filter_ns", "phase_score_ns", "phase_bind_ns", "phase_hooks_ns",
+            "place_ns",
+        ]
+        .iter()
+        .filter_map(|key| metrics.histogram(key).map(|h| (key.to_string(), h.to_json())))
+        .collect();
+        Json::Obj(phases)
+    };
+    let scenario_json = |name: &str,
+                         mode: &str,
+                         nodes: usize,
+                         decisions: u64,
+                         r: &BenchResult,
+                         metrics: &MetricsRegistry| {
+        let per_s = if r.mean_ns() > 0.0 {
+            decisions as f64 / (r.mean_ns() * 1e-9)
+        } else {
+            0.0
+        };
+        Json::obj(vec![
+            ("name", Json::Str(name.into())),
+            ("mode", Json::Str(mode.into())),
+            ("nodes", Json::Num(nodes as f64)),
+            ("decisions", Json::Num(decisions as f64)),
+            ("run_mean_ns", Json::Num(r.mean_ns())),
+            ("run_p50_ns", Json::Num(r.p50_ns())),
+            ("run_p99_ns", Json::Num(r.p99_ns())),
+            ("samples", Json::Num(r.samples_ns.len() as f64)),
+            ("decisions_per_s", Json::Num(per_s)),
+            ("phase_latency", phase_json(metrics)),
+        ])
+    };
+
+    let mut scenarios = Vec::new();
+    let mut b = Bencher::unfiltered(bc.clone());
+    for (name, nodes) in [("inflate_small", small), ("inflate_large", large)] {
+        let mut decisions = 0u64;
+        b.bench(name, || {
+            decisions = run_inflation(nodes, false, false, 42).0;
+        });
+        // A separate profiled run feeds the phase-latency breakdown
+        // (profiling stays off in the timed samples above).
+        let (_, metrics) = run_inflation(nodes, true, false, 42);
+        let r = b.results().last().expect("bench ran");
+        scenarios.push(scenario_json(name, "inflation", nodes, decisions, r, &metrics));
+    }
+    for (name, nodes) in [("churn_small", small), ("churn_large", large)] {
+        let mut decisions = 0u64;
+        b.bench(name, || {
+            decisions = run_churn(nodes, false, 42).0;
+        });
+        let (_, metrics) = run_churn(nodes, true, 42);
+        let r = b.results().last().expect("bench ran");
+        scenarios.push(scenario_json(name, "churn", nodes, decisions, r, &metrics));
+    }
+
+    // Tracing overhead on the small inflation scenario: plain vs a
+    // null-sink tracer (full capture + serialization cost, no IO).
+    // Acceptance gate: < 5% mean-latency overhead.
+    let mut bo = Bencher::unfiltered(bc);
+    bo.bench("inflate_small_plain", || run_inflation(small, false, false, 7).0);
+    bo.bench("inflate_small_traced", || run_inflation(small, false, true, 7).0);
+    let plain = bo.results()[0].mean_ns();
+    let traced = bo.results()[1].mean_ns();
+    let overhead_pct = if plain > 0.0 { (traced - plain) / plain * 100.0 } else { 0.0 };
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("scale".into())),
+        ("quick", Json::Bool(quick)),
+        ("policy", Json::Str(policy.label())),
+        ("scenarios", Json::Arr(scenarios)),
+        (
+            "trace_overhead",
+            Json::obj(vec![
+                ("scenario", Json::Str(format!("inflate_small ({small} nodes)"))),
+                ("plain_mean_ns", Json::Num(plain)),
+                ("traced_mean_ns", Json::Num(traced)),
+                ("overhead_pct", Json::Num(overhead_pct)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out_path, format!("{}\n", doc.dump()))
+        .with_context(|| format!("cannot write '{out_path}'"))?;
+    println!(
+        "wrote {out_path} (tracing overhead {overhead_pct:.2}% on the {small}-node inflation)"
+    );
     Ok(())
 }
 

@@ -10,6 +10,10 @@
 //! recorded as [`SeriesPoint`]s and resampled onto a common grid so the
 //! paper's 10-repetition averages and the savings-vs-FGD curves can be
 //! computed point-wise.
+//!
+//! This module is the *evaluation* metrics layer (what the paper plots).
+//! Operational metrics — scheduler counters, decision traces and phase
+//! latencies — live in [`crate::obs`] (see `docs/observability.md`).
 
 use crate::util::stats;
 

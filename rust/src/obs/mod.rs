@@ -1,0 +1,565 @@
+//! Observability layer: the metrics registry, decision tracing, and
+//! phase-latency profiling (`docs/observability.md`).
+//!
+//! Three pillars, all **off by default and zero-cost when disabled** so
+//! the bit-identity pins of earlier PRs survive untouched:
+//!
+//! * **[`MetricsRegistry`]** — named counters / gauges / histograms
+//!   owned by [`crate::sched::Scheduler`]. The single home for every
+//!   counter the simulator used to hand-thread through result structs
+//!   (DRS lifecycle, MIG repartitions, constraint failures, scorer
+//!   fallbacks), with a drift-proof [`METRICS_CATALOG`] mirroring the
+//!   plugin registries of [`crate::sched::profile`]: `repro
+//!   list-plugins` prints it, a unit test pins every key to a non-empty
+//!   description, and the Prometheus exposition
+//!   ([`MetricsRegistry::to_prometheus`]) covers every key.
+//! * **Decision tracing** ([`trace`]) — an opt-in JSONL event stream
+//!   recording, per `place`/`release`, the PreFilter verdict, per-filter
+//!   veto counts, the normalized per-plugin scores of the winner and
+//!   top-k runners-up (post-modulator weights included), the bind
+//!   choice, the tie-break seed, and hook actions (DRS wakes,
+//!   repartitions). `--trace-decisions <path>` on `simulate`/`ext-*`
+//!   turns it on; `repro explain` replays one arrival and
+//!   pretty-prints the scoring table.
+//! * **Phase-latency profiling** — [`crate::util::benchkit::PhaseTimer`]
+//!   wraps the filter / score / bind / hook phases and accumulates into
+//!   registry histograms (p50/p95/p99 ns), surfaced in the
+//!   `obs_summary.json` artifact and served live by the coordinator's
+//!   `metrics` request in Prometheus text exposition format.
+
+pub mod trace;
+
+pub use trace::{DecisionTracer, ScoreRow, TraceCapture, TraceSink};
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// The kind of a registry metric (drives the Prometheus `# TYPE` line).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+/// The drift-proof metrics catalog: every metric the framework itself
+/// maintains, with its one-line description. `repro list-plugins`
+/// prints this table and the profile-registry drift test asserts it
+/// stays complete (keys resolve, descriptions non-empty). Hooks may
+/// still report *dynamic* counters outside the catalog (custom
+/// [`crate::sched::PostHook::counters`] names pass through snapshots
+/// unharmed); the catalog covers the built-in fleet.
+pub const METRICS_CATALOG: &[(&str, MetricKind, &str)] = &[
+    (
+        "sched_places",
+        MetricKind::Counter,
+        "tasks committed through the place protocol",
+    ),
+    (
+        "sched_releases",
+        MetricKind::Counter,
+        "departures processed through the release protocol",
+    ),
+    (
+        "sched_failures",
+        MetricKind::Counter,
+        "tasks definitively unschedulable (after the postFail retry)",
+    ),
+    (
+        "sched_retries",
+        MetricKind::Counter,
+        "decision retries granted by a postFail hook",
+    ),
+    (
+        "sched_prefilter_rejections",
+        MetricKind::Counter,
+        "schedule calls vetoed cluster-wide by a PreFilter",
+    ),
+    (
+        "constraint_unschedulable",
+        MetricKind::Counter,
+        "failures attributed to declarative task constraints",
+    ),
+    (
+        "trace_events",
+        MetricKind::Counter,
+        "decision-trace events emitted to the JSONL sink",
+    ),
+    (
+        "mig_scorer_fallbacks",
+        MetricKind::Counter,
+        "MIG demands routed past the XLA scorer (process-wide)",
+    ),
+    (
+        "repartitions",
+        MetricKind::Counter,
+        "reactive MIG repacks triggered by a scheduling failure",
+    ),
+    (
+        "proactive_repartitions",
+        MetricKind::Counter,
+        "threshold-triggered proactive MIG repacks",
+    ),
+    (
+        "migrated_slices",
+        MetricKind::Counter,
+        "MIG instances moved by the repartitioner",
+    ),
+    ("drs_sleeps", MetricKind::Counter, "nodes put to sleep by DRS"),
+    ("drs_wakes", MetricKind::Counter, "node wakes initiated by DRS"),
+    (
+        "drs_drains",
+        MetricKind::Counter,
+        "nodes entering the Draining power state",
+    ),
+    (
+        "drs_wake_cancels",
+        MetricKind::Counter,
+        "DRS wakes cancelled before completion",
+    ),
+    (
+        "drs_transition_j",
+        MetricKind::Counter,
+        "Joules spent in DRS sleep/wake transitions (rounded)",
+    ),
+    (
+        "phase_filter_ns",
+        MetricKind::Histogram,
+        "PreFilter + filter-chain latency per decision (ns)",
+    ),
+    (
+        "phase_score_ns",
+        MetricKind::Histogram,
+        "score + normalize + combine latency per decision (ns)",
+    ),
+    (
+        "phase_bind_ns",
+        MetricKind::Histogram,
+        "arg-max + bind latency per decision (ns)",
+    ),
+    (
+        "phase_hooks_ns",
+        MetricKind::Histogram,
+        "onTick + postFail + postPlace hook latency per protocol entry (ns)",
+    ),
+    (
+        "place_ns",
+        MetricKind::Histogram,
+        "end-to-end place protocol latency (ns)",
+    ),
+];
+
+/// The catalog, for callers that iterate it (`repro list-plugins`).
+pub fn catalog() -> &'static [(&'static str, MetricKind, &'static str)] {
+    METRICS_CATALOG
+}
+
+/// One-line description of a catalog key; `None` for dynamic keys.
+pub fn describe(key: &str) -> Option<&'static str> {
+    METRICS_CATALOG
+        .iter()
+        .find(|(k, _, _)| *k == key)
+        .map(|(_, _, d)| *d)
+}
+
+/// Number of log2 nanosecond buckets (`u64` bit widths + the zero
+/// bucket): bucket `i > 0` holds observations in `[2^(i-1), 2^i - 1]`.
+const N_BUCKETS: usize = 65;
+
+/// A fixed-footprint latency histogram: log2 nanosecond buckets plus
+/// exact count / sum / min / max. Quantiles report the upper edge of
+/// the covering bucket (clamped into `[min, max]`), so p50/p95/p99 are
+/// accurate to within a factor of two — plenty for phase attribution,
+/// and observation stays allocation-free on the hot path.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: [u64; N_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: [0; N_BUCKETS], count: 0, sum: 0.0, min: 0.0, max: 0.0 }
+    }
+}
+
+fn bucket_index(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+impl Histogram {
+    /// Record one observation (nanoseconds; negatives clamp to zero).
+    pub fn observe(&mut self, ns: f64) {
+        let v = if ns.is_finite() && ns > 0.0 { ns } else { 0.0 };
+        self.buckets[bucket_index(v as u64)] += 1;
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Quantile `q ∈ [0, 1]`: upper edge of the bucket covering the
+    /// q-th observation, clamped into `[min, max]`. Zero when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let upper = if i == 0 {
+                    0.0
+                } else if i >= 64 {
+                    self.max
+                } else {
+                    ((1u64 << i) - 1) as f64
+                };
+                return upper.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// JSON summary (count, sum, mean, min/max, p50/p95/p99).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum_ns", Json::Num(self.sum)),
+            ("mean_ns", Json::Num(self.mean())),
+            ("min_ns", Json::Num(self.min)),
+            ("max_ns", Json::Num(self.max)),
+            ("p50_ns", Json::Num(self.quantile(0.50))),
+            ("p95_ns", Json::Num(self.quantile(0.95))),
+            ("p99_ns", Json::Num(self.quantile(0.99))),
+        ])
+    }
+}
+
+/// Named counters, gauges, and latency histograms. Owned by
+/// [`crate::sched::Scheduler`] (one registry per scheduler, so
+/// repetition threads never contend); snapshots merge in hook counters
+/// and the process-wide scorer fallback count
+/// (see [`crate::sched::Scheduler::metrics`]).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry (dynamic keys only).
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Registry with every [`METRICS_CATALOG`] key pre-registered at
+    /// zero, so expositions cover the whole catalog even before the
+    /// first event (the coordinator acceptance contract).
+    pub fn with_catalog() -> MetricsRegistry {
+        let mut m = MetricsRegistry::default();
+        for (key, kind, _) in METRICS_CATALOG {
+            match kind {
+                MetricKind::Counter => {
+                    m.counters.insert((*key).to_string(), 0);
+                }
+                MetricKind::Gauge => {
+                    m.gauges.insert((*key).to_string(), 0.0);
+                }
+                MetricKind::Histogram => {
+                    m.histograms.insert((*key).to_string(), Histogram::default());
+                }
+            }
+        }
+        m
+    }
+
+    /// Increment a counter (registered on first touch).
+    pub fn inc(&mut self, key: &str, by: u64) {
+        *self.counters.entry(key.to_string()).or_insert(0) += by;
+    }
+
+    /// Overwrite a counter (snapshot merges).
+    pub fn set_counter(&mut self, key: &str, value: u64) {
+        self.counters.insert(key.to_string(), value);
+    }
+
+    /// Current counter value (0 when unregistered).
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge (registered on first touch).
+    pub fn set_gauge(&mut self, key: &str, value: f64) {
+        self.gauges.insert(key.to_string(), value);
+    }
+
+    /// Current gauge value (0.0 when unregistered).
+    pub fn gauge(&self, key: &str) -> f64 {
+        self.gauges.get(key).copied().unwrap_or(0.0)
+    }
+
+    /// Record one histogram observation (registered on first touch).
+    pub fn observe_ns(&mut self, key: &str, ns: f64) {
+        self.histograms.entry(key.to_string()).or_default().observe(ns);
+    }
+
+    /// Histogram accessor.
+    pub fn histogram(&self, key: &str) -> Option<&Histogram> {
+        self.histograms.get(key)
+    }
+
+    /// Iterate counters (sorted by key).
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Iterate gauges (sorted by key).
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Iterate histograms (sorted by key).
+    pub fn histograms(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.histograms.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// JSON snapshot (`obs_summary.json`): `{counters: {...},
+    /// gauges: {...}, histograms: {name: {count, p50_ns, ...}}}`.
+    pub fn to_json(&self) -> Json {
+        let counters =
+            self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect();
+        let gauges = self.gauges.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+        let histograms =
+            self.histograms.iter().map(|(k, h)| (k.clone(), h.to_json())).collect();
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(histograms)),
+        ])
+    }
+
+    /// Prometheus text exposition (format 0.0.4). Counters and gauges
+    /// render directly; histograms render as `summary` metrics with
+    /// p50/p95/p99 quantiles plus `_sum` and `_count`. `prefix` is
+    /// prepended to every metric name (`repro_` by convention); names
+    /// are sanitized to the Prometheus charset.
+    pub fn to_prometheus(&self, prefix: &str) -> String {
+        let mut out = String::new();
+        let help = |key: &str| describe(key).unwrap_or("runtime-registered metric");
+        for (key, value) in &self.counters {
+            let name = format!("{prefix}{}", sanitize(key));
+            out.push_str(&format!("# HELP {name} {}\n", help(key)));
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            out.push_str(&format!("{name} {value}\n"));
+        }
+        for (key, value) in &self.gauges {
+            let name = format!("{prefix}{}", sanitize(key));
+            out.push_str(&format!("# HELP {name} {}\n", help(key)));
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            out.push_str(&format!("{name} {value}\n"));
+        }
+        for (key, h) in &self.histograms {
+            let name = format!("{prefix}{}", sanitize(key));
+            out.push_str(&format!("# HELP {name} {}\n", help(key)));
+            out.push_str(&format!("# TYPE {name} summary\n"));
+            for (label, q) in [("0.5", 0.50), ("0.95", 0.95), ("0.99", 0.99)] {
+                out.push_str(&format!(
+                    "{name}{{quantile=\"{label}\"}} {}\n",
+                    h.quantile(q)
+                ));
+            }
+            out.push_str(&format!("{name}_sum {}\n", h.sum()));
+            out.push_str(&format!("{name}_count {}\n", h.count()));
+        }
+        out
+    }
+}
+
+/// Restrict a key to the Prometheus metric-name charset
+/// (`[a-zA-Z0-9_:]`; anything else becomes `_`).
+fn sanitize(key: &str) -> String {
+    key.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect()
+}
+
+/// Per-scheduler observability state: the registry plus the opt-in
+/// tracing/profiling switches. Lives on [`crate::sched::Scheduler`];
+/// everything defaults to *off* so the disabled path is byte-identical
+/// to the pre-observability scheduler (pinned by
+/// `rust/tests/obs_equivalence.rs`).
+#[derive(Debug)]
+pub struct ObsState {
+    /// The scheduler-owned metrics registry (catalog pre-registered).
+    pub registry: MetricsRegistry,
+    /// Phase-latency profiling switch ([`crate::util::benchkit::PhaseTimer`]).
+    pub profiling: bool,
+    /// Attached decision tracer (None = tracing off).
+    pub tracer: Option<DecisionTracer>,
+    /// One-shot capture request (`repro explain` replays).
+    pub capture_requested: bool,
+    /// Capture of the most recent `schedule()` call (tracer or
+    /// explain mode only).
+    pub capture: Option<TraceCapture>,
+    /// How many runners-up each trace event records.
+    pub top_k: usize,
+    /// The seed last passed to `reseed_ties` (recorded in events).
+    pub tie_seed: u64,
+}
+
+impl Default for ObsState {
+    fn default() -> Self {
+        ObsState {
+            registry: MetricsRegistry::with_catalog(),
+            profiling: false,
+            tracer: None,
+            capture_requested: false,
+            capture: None,
+            top_k: 3,
+            tie_seed: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_keys_unique_and_described() {
+        let mut seen = std::collections::BTreeSet::new();
+        for (key, _, desc) in METRICS_CATALOG {
+            assert!(seen.insert(*key), "duplicate catalog key {key}");
+            assert!(!desc.is_empty(), "catalog key {key} lacks a description");
+            assert_eq!(sanitize(key), *key, "catalog key {key} is not Prometheus-safe");
+        }
+        assert_eq!(describe("drs_sleeps"), Some("nodes put to sleep by DRS"));
+        assert_eq!(describe("nope"), None);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_observations() {
+        let mut h = Histogram::default();
+        for ns in [100.0, 200.0, 400.0, 800.0, 100_000.0] {
+            h.observe(ns);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min(), 100.0);
+        assert_eq!(h.max(), 100_000.0);
+        let p50 = h.quantile(0.50);
+        // Third observation (400 ns) lives in the [256, 511] bucket.
+        assert!((100.0..=511.0).contains(&p50), "p50 = {p50}");
+        assert_eq!(h.quantile(0.99), 100_000.0);
+        assert_eq!(h.quantile(0.0), h.quantile(0.0)); // no panic on edges
+        assert_eq!(Histogram::default().quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_handles_degenerate_observations() {
+        let mut h = Histogram::default();
+        h.observe(-5.0);
+        h.observe(f64::NAN);
+        h.observe(0.0);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let mut m = MetricsRegistry::with_catalog();
+        assert_eq!(m.counter("drs_sleeps"), 0);
+        m.inc("drs_sleeps", 3);
+        m.inc("custom_counter", 1);
+        m.set_gauge("eopc_w", 123.5);
+        m.observe_ns("place_ns", 1000.0);
+        assert_eq!(m.counter("drs_sleeps"), 3);
+        assert_eq!(m.counter("custom_counter"), 1);
+        assert_eq!(m.gauge("eopc_w"), 123.5);
+        assert_eq!(m.histogram("place_ns").unwrap().count(), 1);
+        let j = m.to_json();
+        assert_eq!(j.get("counters").and_then(|c| c.get("drs_sleeps")).and_then(Json::as_u64), Some(3));
+        assert_eq!(
+            j.get("histograms")
+                .and_then(|h| h.get("place_ns"))
+                .and_then(|p| p.get("count"))
+                .and_then(Json::as_u64),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn prometheus_exposition_covers_every_catalog_key() {
+        let mut m = MetricsRegistry::with_catalog();
+        m.set_gauge("grar", 0.75);
+        m.observe_ns("place_ns", 512.0);
+        let text = m.to_prometheus("repro_");
+        for (key, kind, _) in METRICS_CATALOG {
+            assert!(
+                text.contains(&format!("# HELP repro_{key} ")),
+                "missing HELP for {key}"
+            );
+            let ty = match kind {
+                MetricKind::Counter => "counter",
+                MetricKind::Gauge => "gauge",
+                MetricKind::Histogram => "summary",
+            };
+            assert!(
+                text.contains(&format!("# TYPE repro_{key} {ty}")),
+                "missing TYPE for {key}"
+            );
+        }
+        assert!(text.contains("repro_grar 0.75"));
+        assert!(text.contains("repro_place_ns{quantile=\"0.5\"}"));
+        assert!(text.contains("repro_place_ns_count 1"));
+        // Every line is either a comment or `name[{labels}] value`.
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.split_whitespace().count() == 2,
+                "malformed exposition line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn sanitize_maps_to_prometheus_charset() {
+        assert_eq!(sanitize("drs_sleeps"), "drs_sleeps");
+        assert_eq!(sanitize("weird-key.v2"), "weird_key_v2");
+    }
+}

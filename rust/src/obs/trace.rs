@@ -1,0 +1,454 @@
+//! Decision tracing: JSONL event stream + capture plumbing.
+//!
+//! The scheduler captures one [`TraceCapture`] per `schedule()` call
+//! whenever a [`DecisionTracer`] is attached (or a one-shot capture is
+//! requested by `repro explain`); [`crate::sched::Scheduler::place`] /
+//! `release` turn captures into self-describing JSONL events — one
+//! object per line, each carrying the policy label, seed, and sequence
+//! number, so concurrent repetition threads can share a single sink and
+//! the stream still demultiplexes. The event schema is documented in
+//! `docs/observability.md` and round-trip-tested in
+//! `rust/tests/obs_equivalence.rs`.
+
+use std::fmt;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::sched::framework::Decision;
+use crate::tasks::Task;
+use crate::util::json::Json;
+
+/// A shared line-oriented trace sink. Cheap to clone (all clones append
+/// to the same underlying writer); `Send + Sync`, so one sink serves
+/// every repetition thread of `run_repetitions`. Writes are
+/// best-effort: a full disk must never fail a scheduling decision.
+pub struct TraceSink {
+    inner: Arc<Mutex<Box<dyn Write + Send>>>,
+    kind: &'static str,
+    /// Backing buffer for [`TraceSink::memory`] sinks (tests, explain).
+    buffer: Option<Arc<Mutex<Vec<u8>>>>,
+}
+
+impl Clone for TraceSink {
+    fn clone(&self) -> Self {
+        TraceSink {
+            inner: Arc::clone(&self.inner),
+            kind: self.kind,
+            buffer: self.buffer.as_ref().map(Arc::clone),
+        }
+    }
+}
+
+impl fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TraceSink({})", self.kind)
+    }
+}
+
+impl TraceSink {
+    /// Buffered file sink (`--trace-decisions <path>`).
+    pub fn file<P: AsRef<Path>>(path: P) -> io::Result<TraceSink> {
+        let f = File::create(path)?;
+        Ok(TraceSink {
+            inner: Arc::new(Mutex::new(Box::new(BufWriter::new(f)))),
+            kind: "file",
+            buffer: None,
+        })
+    }
+
+    /// In-memory sink; read back with [`TraceSink::contents`].
+    pub fn memory() -> TraceSink {
+        struct MemWriter(Arc<Mutex<Vec<u8>>>);
+        impl Write for MemWriter {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        TraceSink {
+            inner: Arc::new(Mutex::new(Box::new(MemWriter(Arc::clone(&buf))))),
+            kind: "memory",
+            buffer: Some(buf),
+        }
+    }
+
+    /// Discarding sink — pays the full capture + serialization cost
+    /// without IO (the `bench-scale` tracing-overhead measurement).
+    pub fn null() -> TraceSink {
+        TraceSink { inner: Arc::new(Mutex::new(Box::new(io::sink()))), kind: "null", buffer: None }
+    }
+
+    /// Append one line (best-effort; IO errors are swallowed).
+    pub fn write_line(&self, line: &str) {
+        if let Ok(mut w) = self.inner.lock() {
+            let _ = writeln!(w, "{line}");
+        }
+    }
+
+    /// Flush buffered output (best-effort).
+    pub fn flush(&self) {
+        if let Ok(mut w) = self.inner.lock() {
+            let _ = w.flush();
+        }
+    }
+
+    /// Contents of a [`TraceSink::memory`] sink (empty otherwise).
+    pub fn contents(&self) -> String {
+        match &self.buffer {
+            Some(b) => String::from_utf8_lossy(&b.lock().unwrap()).into_owned(),
+            None => String::new(),
+        }
+    }
+}
+
+/// The per-scheduler tracer: stamps each event with the policy label,
+/// repetition seed, and a monotone sequence number, then appends it to
+/// the sink as one JSONL line.
+#[derive(Clone, Debug)]
+pub struct DecisionTracer {
+    sink: TraceSink,
+    policy: String,
+    seed: u64,
+    seq: u64,
+}
+
+impl DecisionTracer {
+    pub fn new(sink: TraceSink, policy: &str, seed: u64) -> DecisionTracer {
+        DecisionTracer { sink, policy: policy.to_string(), seed, seq: 0 }
+    }
+
+    /// Stamp `event` with `policy`/`seed`/`seq` and append it.
+    pub fn emit(&mut self, mut event: Json) {
+        if let Json::Obj(m) = &mut event {
+            m.insert("policy".to_string(), Json::Str(self.policy.clone()));
+            m.insert("seed".to_string(), Json::Num(self.seed as f64));
+            m.insert("seq".to_string(), Json::Num(self.seq as f64));
+        }
+        self.seq += 1;
+        self.sink.write_line(&event.dump());
+    }
+
+    /// Events emitted so far.
+    pub fn emitted(&self) -> u64 {
+        self.seq
+    }
+
+    pub fn sink(&self) -> &TraceSink {
+        &self.sink
+    }
+}
+
+/// One row of the scoring table: a node's combined score plus the
+/// normalized per-plugin scores that produced it.
+#[derive(Clone, Debug)]
+pub struct ScoreRow {
+    pub node: usize,
+    pub combined: f64,
+    pub per_plugin: Vec<f64>,
+    pub winner: bool,
+}
+
+/// What `schedule()` records when tracing/capture is active. Filled
+/// incrementally along the decision pipeline; turned into a JSONL event
+/// by [`place_event`].
+#[derive(Clone, Debug, Default)]
+pub struct TraceCapture {
+    /// Name of the PreFilter that vetoed the task cluster-wide.
+    pub prefilter_veto: Option<&'static str>,
+    /// Filter-chain names, parallel to [`TraceCapture::filter_vetoes`].
+    pub filter_names: Vec<&'static str>,
+    /// Per-filter count of nodes vetoed (first-rejector attribution:
+    /// filters run in chain order and the first `false` wins the veto).
+    pub filter_vetoes: Vec<u64>,
+    /// Nodes surviving the filter chain with ≥ 1 candidate placement.
+    pub feasible: usize,
+    /// Score-plugin names, parallel to per-plugin score columns.
+    pub plugins: Vec<&'static str>,
+    /// Effective (post-modulator) plugin weights for this decision.
+    pub weights: Vec<f64>,
+    /// Normalized score rows, one `Vec` per plugin (scratch; drained
+    /// into [`TraceCapture::scores`] after the arg-max).
+    pub norm_rows: Vec<Vec<f64>>,
+    /// Winner first, then up to `top_k` runners-up by combined score.
+    pub scores: Vec<ScoreRow>,
+    /// Number of max-scoring nodes the tie-break sampled over.
+    pub ties: u32,
+    /// Bound node (None = unschedulable).
+    pub bind_node: Option<usize>,
+    /// Candidate placements the binder chose among.
+    pub candidates: usize,
+    /// Debug rendering of the chosen placement.
+    pub placement: Option<String>,
+    /// Whether the rejection was attributed to declarative constraints.
+    pub constrained: bool,
+}
+
+fn num(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+fn task_json(task: &Task) -> Json {
+    Json::obj(vec![
+        ("id", num(task.id)),
+        ("cpu", Json::Num(task.cpu)),
+        ("mem", Json::Num(task.mem)),
+        ("gpu", Json::Str(format!("{:?}", task.gpu))),
+        ("constrained", Json::Bool(task.constraints.is_some())),
+    ])
+}
+
+fn hooks_json(deltas: &[(String, u64)]) -> Json {
+    Json::Obj(deltas.iter().map(|(k, v)| (k.clone(), num(*v))).collect())
+}
+
+/// Build the `place` event from a capture and the decision outcome.
+/// `hook_deltas` are the per-hook counter increments observed across
+/// this protocol entry (DRS wakes, repartitions, …); only non-zero
+/// deltas should be passed.
+pub fn place_event(
+    task: &Task,
+    cap: &TraceCapture,
+    decision: Option<&Decision>,
+    retried: bool,
+    now: u64,
+    tie_seed: u64,
+    hook_deltas: &[(String, u64)],
+) -> Json {
+    let prefilter = match cap.prefilter_veto {
+        Some(name) => Json::obj(vec![
+            ("verdict", Json::Str("veto".to_string())),
+            ("vetoed_by", Json::Str(name.to_string())),
+        ]),
+        None => Json::obj(vec![("verdict", Json::Str("pass".to_string()))]),
+    };
+    let filters = Json::Arr(
+        cap.filter_names
+            .iter()
+            .zip(&cap.filter_vetoes)
+            .map(|(name, vetoes)| {
+                Json::obj(vec![
+                    ("name", Json::Str(name.to_string())),
+                    ("vetoes", num(*vetoes)),
+                ])
+            })
+            .collect(),
+    );
+    let weights = Json::Arr(
+        cap.plugins
+            .iter()
+            .zip(&cap.weights)
+            .map(|(plugin, w)| {
+                Json::obj(vec![
+                    ("plugin", Json::Str(plugin.to_string())),
+                    ("weight", Json::Num(*w)),
+                ])
+            })
+            .collect(),
+    );
+    let scores = Json::Arr(
+        cap.scores
+            .iter()
+            .map(|row| {
+                let per_plugin = cap
+                    .plugins
+                    .iter()
+                    .zip(&row.per_plugin)
+                    .map(|(plugin, s)| (plugin.to_string(), Json::Num(*s)))
+                    .collect();
+                Json::obj(vec![
+                    ("node", num(row.node as u64)),
+                    ("combined", Json::Num(row.combined)),
+                    ("per_plugin", Json::Obj(per_plugin)),
+                    ("winner", Json::Bool(row.winner)),
+                ])
+            })
+            .collect(),
+    );
+    let bind = match decision {
+        Some(d) => Json::obj(vec![
+            ("node", num(d.node as u64)),
+            ("placement", Json::Str(format!("{:?}", d.placement))),
+            ("candidates", num(cap.candidates as u64)),
+        ]),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("event", Json::Str("place".to_string())),
+        ("now", num(now)),
+        ("tie_seed", num(tie_seed)),
+        ("task", task_json(task)),
+        ("prefilter", prefilter),
+        ("filters", filters),
+        ("feasible", num(cap.feasible as u64)),
+        ("weights", weights),
+        ("scores", scores),
+        ("ties", num(cap.ties as u64)),
+        ("bind", bind),
+        (
+            "outcome",
+            Json::Str(if decision.is_some() { "placed" } else { "failed" }.to_string()),
+        ),
+        ("retried", Json::Bool(retried)),
+        ("constrained", Json::Bool(cap.constrained)),
+        ("hooks", hooks_json(hook_deltas)),
+    ])
+}
+
+/// Build the `release` event (departures carry no scoring table, but
+/// hook actions — DRS idling a node to sleep, proactive repartitions —
+/// still show up in the deltas).
+pub fn release_event(
+    task: &Task,
+    node: usize,
+    placement: &crate::cluster::node::Placement,
+    now: u64,
+    hook_deltas: &[(String, u64)],
+) -> Json {
+    Json::obj(vec![
+        ("event", Json::Str("release".to_string())),
+        ("now", num(now)),
+        ("task", task_json(task)),
+        ("node", num(node as u64)),
+        ("placement", Json::Str(format!("{placement:?}"))),
+        ("hooks", hooks_json(hook_deltas)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::Placement;
+    use crate::tasks::GpuDemand;
+    use crate::util::json;
+
+    #[test]
+    fn memory_sink_roundtrips_lines() {
+        let sink = TraceSink::memory();
+        let clone = sink.clone();
+        sink.write_line("{\"a\":1}");
+        clone.write_line("{\"b\":2}");
+        sink.flush();
+        let lines: Vec<&str> = sink.contents().lines().collect();
+        assert_eq!(lines, vec!["{\"a\":1}", "{\"b\":2}"]);
+        assert_eq!(format!("{sink:?}"), "TraceSink(memory)");
+    }
+
+    #[test]
+    fn null_sink_discards() {
+        let sink = TraceSink::null();
+        sink.write_line("dropped");
+        assert_eq!(sink.contents(), "");
+    }
+
+    #[test]
+    fn tracer_stamps_policy_seed_seq() {
+        let sink = TraceSink::memory();
+        let mut t = DecisionTracer::new(sink.clone(), "FGD", 42);
+        t.emit(Json::obj(vec![("event", Json::Str("place".to_string()))]));
+        t.emit(Json::obj(vec![("event", Json::Str("release".to_string()))]));
+        assert_eq!(t.emitted(), 2);
+        let text = sink.contents();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = json::parse(lines[0]).expect("valid JSON");
+        assert_eq!(first.get("policy").and_then(Json::as_str), Some("FGD"));
+        assert_eq!(first.get("seed").and_then(Json::as_u64), Some(42));
+        assert_eq!(first.get("seq").and_then(Json::as_u64), Some(0));
+        let second = json::parse(lines[1]).expect("valid JSON");
+        assert_eq!(second.get("seq").and_then(Json::as_u64), Some(1));
+    }
+
+    #[test]
+    fn place_event_schema() {
+        let task = Task::new(7, 2.0, 512.0, GpuDemand::Whole(1));
+        let cap = TraceCapture {
+            filter_names: vec!["resources"],
+            filter_vetoes: vec![1],
+            feasible: 2,
+            plugins: vec!["Pwr", "Fgd"],
+            weights: vec![0.1, 0.9],
+            scores: vec![ScoreRow {
+                node: 3,
+                combined: 95.0,
+                per_plugin: vec![50.0, 100.0],
+                winner: true,
+            }],
+            ties: 1,
+            bind_node: Some(3),
+            candidates: 2,
+            placement: Some("Whole { gpus: [0] }".to_string()),
+            ..Default::default()
+        };
+        let d = Decision { node: 3, placement: Placement::Whole { gpus: vec![0] } };
+        let ev = place_event(
+            &task,
+            &cap,
+            Some(&d),
+            false,
+            11,
+            42,
+            &[("drs_wakes".to_string(), 1)],
+        );
+        let parsed = json::parse(&ev.dump()).expect("self-parses");
+        assert_eq!(parsed.get("event").and_then(Json::as_str), Some("place"));
+        assert_eq!(parsed.get("outcome").and_then(Json::as_str), Some("placed"));
+        assert_eq!(
+            parsed.get("task").and_then(|t| t.get("id")).and_then(Json::as_u64),
+            Some(7)
+        );
+        assert_eq!(
+            parsed.get("bind").and_then(|b| b.get("node")).and_then(Json::as_u64),
+            Some(3)
+        );
+        assert_eq!(
+            parsed
+                .get("hooks")
+                .and_then(|h| h.get("drs_wakes"))
+                .and_then(Json::as_u64),
+            Some(1)
+        );
+        let scores = parsed.get("scores").and_then(Json::as_arr).unwrap();
+        assert_eq!(scores.len(), 1);
+        assert_eq!(
+            scores[0]
+                .get("per_plugin")
+                .and_then(|p| p.get("Fgd"))
+                .and_then(Json::as_f64),
+            Some(100.0)
+        );
+    }
+
+    #[test]
+    fn failed_place_event_has_null_bind() {
+        let task = Task::new(1, 1.0, 0.0, GpuDemand::Whole(64));
+        let cap = TraceCapture {
+            prefilter_veto: Some("resources"),
+            constrained: false,
+            ..Default::default()
+        };
+        let ev = place_event(&task, &cap, None, true, 5, 0, &[]);
+        assert_eq!(ev.get("outcome").and_then(Json::as_str), Some("failed"));
+        assert!(matches!(ev.get("bind"), Some(Json::Null)));
+        assert_eq!(
+            ev.get("prefilter").and_then(|p| p.get("vetoed_by")).and_then(Json::as_str),
+            Some("resources")
+        );
+        assert_eq!(ev.get("retried"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn release_event_schema() {
+        let task = Task::new(9, 1.0, 128.0, GpuDemand::Frac(0.5));
+        let ev = release_event(&task, 4, &Placement::Shared { gpu: 1 }, 20, &[]);
+        let parsed = json::parse(&ev.dump()).expect("self-parses");
+        assert_eq!(parsed.get("event").and_then(Json::as_str), Some("release"));
+        assert_eq!(parsed.get("node").and_then(Json::as_u64), Some(4));
+        assert!(parsed.get("placement").and_then(Json::as_str).unwrap().contains("Shared"));
+    }
+}

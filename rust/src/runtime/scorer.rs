@@ -74,6 +74,13 @@ pub const NEG_INF_SCORE: f32 = -1.0e9;
 static MIG_SCORER_FALLBACKS: AtomicU64 = AtomicU64::new(0);
 
 /// Cumulative count of MIG demands the scorer declined (process-wide).
+///
+/// [`crate::sched::Scheduler::metrics`] folds this counter into every
+/// snapshot under the catalogued `mig_scorer_fallbacks` key, so registry
+/// consumers (`obs_summary.json`, the coordinator's Prometheus
+/// exposition) see it without touching this module directly. Note the
+/// registry copy is process-wide like the atomic itself, not per-run;
+/// use [`reset_mig_scorer_fallbacks`] for per-run deltas.
 pub fn mig_scorer_fallbacks() -> u64 {
     MIG_SCORER_FALLBACKS.load(Ordering::Relaxed)
 }

@@ -44,6 +44,14 @@
 //! DSL) never sleeps anything, every node stays `Active`, and runs are
 //! bit-identical to a scheduler without the hook across policies ×
 //! traces × seeds in both loops (`rust/tests/drs_equivalence.rs`).
+//!
+//! **Counters.** [`DrsHook`] reports its lifecycle counters
+//! (`drs_sleeps`, `drs_wakes`, `drs_drains`, `drs_wake_cancels`,
+//! `drs_transition_j`) through [`PostHook::counters`]; the
+//! observability layer folds them into every
+//! [`crate::sched::Scheduler::metrics`] snapshot and catalogues them in
+//! [`crate::obs::METRICS_CATALOG`], so they surface in `obs_summary.json`
+//! and the coordinator's Prometheus exposition without extra plumbing.
 
 use crate::cluster::node::{Node, Placement, PowerState};
 use crate::cluster::Datacenter;

@@ -31,6 +31,13 @@
 //! that were *unschedulable due to constraints* — some node had the
 //! resources but the task's own constraints forbade it (surfaced by
 //! the `ext-filters` experiment).
+//!
+//! Observability ([`crate::obs`]): when decision tracing is on, the
+//! scheduler records a per-filter veto count for every decision under
+//! **first-rejector attribution** — plugins run in chain order and the
+//! first `false` wins the veto, so a node rejected by both `resources`
+//! and `labels` counts only against whichever ran first. PreFilter
+//! vetoes are reported separately (the node loop never ran).
 
 use crate::cluster::mig::first_fit_start;
 use crate::cluster::node::{Node, ResourceView, EPS};

@@ -39,11 +39,14 @@
 use crate::cluster::node::{Node, Placement, ResourceView, EPS};
 use crate::cluster::Datacenter;
 use crate::frag;
+use crate::obs::{self, DecisionTracer, MetricsRegistry, ObsState, ScoreRow, TraceCapture};
 use crate::power;
 use crate::sched::bind::{BindCtx, BindPlugin};
 use crate::sched::filter::{default_filter_chain, FilterCtx, FilterPlugin};
 use crate::sched::modulate::WeightModulator;
 use crate::tasks::{GpuDemand, Task, Workload};
+use crate::util::benchkit::PhaseTimer;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Context handed to score plugins.
@@ -179,13 +182,12 @@ pub struct Scheduler {
     /// The `filter` extension-point chain (conjunction). Defaults to
     /// [`default_filter_chain`]; profiles override via `filter(...)`.
     filters: Vec<Box<dyn FilterPlugin>>,
-    /// Tasks that failed scheduling while at least one node (or the
-    /// PreFilter pass) was rejected *only* by a constraint filter — the
-    /// node had the resources, a `C_t` constraint forbade it.
-    constraint_unschedulable: u64,
     /// Whether the most recent `schedule()` rejection involved a
     /// constraint filter (consumed by [`Scheduler::place`]).
     last_reject_constrained: bool,
+    /// Observability: the metrics registry plus the opt-in tracing /
+    /// profiling switches (all off by default — see [`crate::obs`]).
+    obs: ObsState,
     /// Per-node allocation generation (cache invalidation for plugins).
     generations: Vec<u64>,
     /// Scratch buffers, reused across decisions (hot path: zero alloc).
@@ -232,8 +234,8 @@ impl Scheduler {
             modulator: None,
             hooks: Vec::new(),
             filters: default_filter_chain(),
-            constraint_unschedulable: 0,
             last_reject_constrained: false,
+            obs: ObsState::default(),
             generations: Vec::new(),
             feasible: Vec::new(),
             placements: Vec::new(),
@@ -269,8 +271,11 @@ impl Scheduler {
     /// without declarative constraints (including legacy
     /// `Task::gpu_model` pins) never count. The `ext-filters`
     /// experiment surfaces this counter.
+    ///
+    /// Thin shim over the metrics registry (the counter's single home
+    /// since the observability layer — see [`Scheduler::metrics`]).
     pub fn constraint_unschedulable(&self) -> u64 {
-        self.constraint_unschedulable
+        self.obs.registry.counter("constraint_unschedulable")
     }
 
     /// Attach the `weightModulator` extension point.
@@ -305,9 +310,75 @@ impl Scheduler {
             .sum()
     }
 
+    /// Summed hook counters, one entry per distinct name (sorted).
+    fn hook_counters_snapshot(&self) -> Vec<(&'static str, u64)> {
+        let mut sums: std::collections::BTreeMap<&'static str, u64> = Default::default();
+        for h in &self.hooks {
+            for (k, v) in h.counters() {
+                *sums.entry(k).or_insert(0) += v;
+            }
+        }
+        sums.into_iter().collect()
+    }
+
+    /// Merged metrics snapshot — the single home for every counter
+    /// (`docs/observability.md`): the scheduler-owned registry
+    /// (protocol counters, `constraint_unschedulable`, phase
+    /// histograms) plus every attached hook's counters (DRS lifecycle,
+    /// MIG repartitions, custom hooks) and the process-wide XLA MIG
+    /// fallback count. The coordinator renders this via
+    /// [`MetricsRegistry::to_prometheus`].
+    pub fn metrics(&self) -> MetricsRegistry {
+        let mut m = self.obs.registry.clone();
+        for (k, v) in self.hook_counters_snapshot() {
+            m.set_counter(k, v);
+        }
+        m.set_counter(
+            "mig_scorer_fallbacks",
+            crate::runtime::scorer::mig_scorer_fallbacks(),
+        );
+        m
+    }
+
+    /// Borrow the scheduler-owned registry (hook counters are *not*
+    /// merged here — use [`Scheduler::metrics`] for the full snapshot).
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.obs.registry
+    }
+
+    /// Toggle phase-latency profiling: filter / score / bind / hook
+    /// [`PhaseTimer`]s accumulate into registry histograms
+    /// (`phase_*_ns`, `place_ns`). Off by default; the disabled path
+    /// never reads the clock.
+    pub fn enable_profiling(&mut self, on: bool) {
+        self.obs.profiling = on;
+    }
+
+    /// Attach a decision tracer: every subsequent `place`/`release`
+    /// emits one JSONL event (see [`crate::obs::trace`]). Tracing
+    /// never touches the tie-break RNG or any score computation, so
+    /// results are bit-identical with and without it
+    /// (`rust/tests/obs_equivalence.rs`).
+    pub fn set_tracer(&mut self, tracer: DecisionTracer) {
+        self.obs.tracer = Some(tracer);
+    }
+
+    /// How many runners-up each trace event records (default 3).
+    pub fn set_trace_top_k(&mut self, top_k: usize) {
+        self.obs.top_k = top_k;
+    }
+
+    /// Flush the attached tracer's sink (end of run); no-op untraced.
+    pub fn trace_flush(&self) {
+        if let Some(t) = &self.obs.tracer {
+            t.sink().flush();
+        }
+    }
+
     /// Reseed the tie-break RNG (each simulation repetition uses its own
     /// stream so repetitions are independent).
     pub fn reseed_ties(&mut self, seed: u64) {
+        self.obs.tie_seed = seed;
         self.tie_rng = Rng::new(seed ^ 0xC0FFEE);
     }
 
@@ -351,6 +422,19 @@ impl Scheduler {
         if self.generations.len() != n {
             self.generations = vec![0; n];
         }
+        // Observability: capture the decision when a tracer is attached
+        // (or `repro explain` requested a one-shot), and arm the phase
+        // timers when profiling is on. Both default off; the disabled
+        // path costs two boolean checks and never perturbs the RNG
+        // stream or any float computation.
+        let capturing = self.obs.capture_requested || self.obs.tracer.is_some();
+        let mut cap = capturing.then(|| TraceCapture {
+            filter_names: self.filters.iter().map(|f| f.name()).collect(),
+            filter_vetoes: vec![0; self.filters.len()],
+            ..TraceCapture::default()
+        });
+        let prof = self.obs.profiling;
+        let t_filter = PhaseTimer::start(prof);
         // --- 1. Filter (extension point) + candidate placements. ---
         self.feasible.clear();
         self.placements.clear();
@@ -367,12 +451,27 @@ impl Scheduler {
                 // legacy model pin or a static `labels:` selector
                 // failing is a plain resource-style failure).
                 self.last_reject_constrained = f.constrains(task);
+                self.obs.registry.inc("sched_prefilter_rejections", 1);
+                if let Some(c) = &mut cap {
+                    c.prefilter_veto = Some(f.name());
+                    c.constrained = self.last_reject_constrained;
+                }
+                if let Some(ns) = t_filter.stop_ns() {
+                    self.obs.registry.observe_ns("phase_filter_ns", ns);
+                }
+                self.obs.capture = cap;
                 return None;
             }
         }
         'nodes: for node in &dc.nodes {
             for (fi, f) in self.filters.iter().enumerate() {
                 if !f.feasible(&fctx, node, task) {
+                    // First-rejector attribution for the trace: filters
+                    // run in chain order, the first `false` owns the
+                    // veto (later filters never see the node).
+                    if let Some(c) = &mut cap {
+                        c.filter_vetoes[fi] += 1;
+                    }
                     // A constraint-attributed rejection means the node
                     // had the resources: every filter *not* enforcing
                     // one of this task's constraints accepts it
@@ -398,7 +497,14 @@ impl Scheduler {
             self.feasible.push(node.id);
             self.placements.push(ps);
         }
+        if let Some(ns) = t_filter.stop_ns() {
+            self.obs.registry.observe_ns("phase_filter_ns", ns);
+        }
         if self.feasible.is_empty() {
+            if let Some(c) = &mut cap {
+                c.constrained = self.last_reject_constrained;
+            }
+            self.obs.capture = cap;
             return None;
         }
         self.last_reject_constrained = false;
@@ -418,6 +524,7 @@ impl Scheduler {
             generations: &self.generations,
             caps: self.caps_cache.unwrap().1,
         };
+        let t_score = PhaseTimer::start(prof);
         // --- 2. WeightModulator extension point: retarget the plugin
         // weights (and possibly the weighted binder's α) per decision
         // from cluster state.
@@ -441,6 +548,9 @@ impl Scheduler {
                     self.raw.push(s);
                 }
                 normalize_scores(&mut self.raw);
+                if let Some(c) = &mut cap {
+                    c.norm_rows.push(self.raw.clone());
+                }
                 for (c, r) in self.combined.iter_mut().zip(&self.raw) {
                     *c += weight * r;
                 }
@@ -458,6 +568,9 @@ impl Scheduler {
                     self.raw.push(s);
                 }
                 normalize_scores(&mut self.raw);
+                if let Some(c) = &mut cap {
+                    c.norm_rows.push(self.raw.clone());
+                }
                 self.norm_rows.extend_from_slice(&self.raw);
             }
             let modulator = self.modulator.as_deref().expect("per_node implies modulator");
@@ -477,6 +590,10 @@ impl Scheduler {
                 self.combined[i] = acc;
             }
         }
+        if let Some(ns) = t_score.stop_ns() {
+            self.obs.registry.observe_ns("phase_score_ns", ns);
+        }
+        let t_bind = PhaseTimer::start(prof);
         // --- 6. Arg-max + bind. Kubernetes semantics: plugin scores are
         // int64 in [0,100] after NormalizeScore (normalize_scores already
         // rounds), and `selectHost` picks *uniformly at random* among the
@@ -500,9 +617,40 @@ impl Scheduler {
                 }
             }
         }
+        // Capture the scoring table: winner first, then the top-k
+        // runners-up by combined score (ties broken by node index).
+        if let Some(c) = &mut cap {
+            c.feasible = k;
+            c.plugins = self.plugins.iter().map(|p| p.name()).collect();
+            c.weights = self.eff_weights.clone();
+            c.ties = n_ties;
+            let norm_rows = std::mem::take(&mut c.norm_rows);
+            let mut order: Vec<usize> = (0..k).collect();
+            order.sort_by(|&a, &b| {
+                self.combined[b]
+                    .partial_cmp(&self.combined[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            let mut picked = vec![best];
+            for &i in &order {
+                if i != best && picked.len() < self.obs.top_k + 1 {
+                    picked.push(i);
+                }
+            }
+            for &i in &picked {
+                c.scores.push(ScoreRow {
+                    node: self.feasible[i],
+                    combined: self.combined[i],
+                    per_plugin: norm_rows.iter().map(|row| row[i]).collect(),
+                    winner: i == best,
+                });
+            }
+        }
         let node_id = self.feasible[best];
         let candidates = &self.placements[best];
-        let placement = if candidates.len() == 1 {
+        let n_candidates = candidates.len();
+        let placement = if n_candidates == 1 {
             candidates[0].clone()
         } else {
             let bctx = BindCtx {
@@ -511,6 +659,15 @@ impl Scheduler {
             };
             self.binder.bind(&bctx, &dc.nodes[node_id], task, candidates)
         };
+        if let Some(ns) = t_bind.stop_ns() {
+            self.obs.registry.observe_ns("phase_bind_ns", ns);
+        }
+        if let Some(c) = &mut cap {
+            c.bind_node = Some(node_id);
+            c.candidates = n_candidates;
+            c.placement = Some(format!("{placement:?}"));
+        }
+        self.obs.capture = cap;
         Some(Decision { node: node_id, placement })
     }
 
@@ -538,10 +695,21 @@ impl Scheduler {
     /// MIG repartitioner, the DRS sleep/wake manager) can never be
     /// silently skipped.
     pub fn place(&mut self, dc: &mut Datacenter, workload: &Workload, task: &Task) -> Option<Decision> {
+        let prof = self.obs.profiling;
+        let tracing = self.obs.tracer.is_some();
+        let hooks_before = if tracing { self.hook_counters_snapshot() } else { Vec::new() };
+        let t_place = PhaseTimer::start(prof);
+        let mut hooks_ns = 0.0;
+        let t = PhaseTimer::start(prof);
         self.advance_clock(dc);
+        if let Some(ns) = t.stop_ns() {
+            hooks_ns += ns;
+        }
+        let mut retried = false;
         let decision = match self.schedule(dc, workload, task) {
             Some(d) => Some(d),
             None => {
+                let t = PhaseTimer::start(prof);
                 let mut invalidate = bump_generation(&mut self.generations);
                 let mut retry = false;
                 for h in &mut self.hooks {
@@ -550,36 +718,142 @@ impl Scheduler {
                         break;
                     }
                 }
+                if let Some(ns) = t.stop_ns() {
+                    hooks_ns += ns;
+                }
                 if retry {
+                    retried = true;
+                    self.obs.registry.inc("sched_retries", 1);
                     self.schedule(dc, workload, task)
                 } else {
                     None
                 }
             }
         };
-        let Some(decision) = decision else {
-            // The task is definitively unschedulable; attribute it once
-            // (retries included) to constraints when a constraint
-            // filter was the blocker.
-            if self.last_reject_constrained {
-                self.constraint_unschedulable += 1;
+        let result = match decision {
+            None => {
+                // The task is definitively unschedulable; attribute it
+                // once (retries included) to constraints when a
+                // constraint filter was the blocker.
+                if self.last_reject_constrained {
+                    self.obs.registry.inc("constraint_unschedulable", 1);
+                }
+                self.obs.registry.inc("sched_failures", 1);
+                None
             }
-            return None;
+            Some(decision) => {
+                dc.allocate(task, decision.node, &decision.placement);
+                self.notify_node_changed(decision.node);
+                let t = PhaseTimer::start(prof);
+                self.run_post_place(dc, decision.node);
+                if let Some(ns) = t.stop_ns() {
+                    hooks_ns += ns;
+                }
+                self.obs.registry.inc("sched_places", 1);
+                Some(decision)
+            }
         };
-        dc.allocate(task, decision.node, &decision.placement);
-        self.notify_node_changed(decision.node);
-        self.run_post_place(dc, decision.node);
-        Some(decision)
+        if let Some(ns) = t_place.stop_ns() {
+            self.obs.registry.observe_ns("place_ns", ns);
+            self.obs.registry.observe_ns("phase_hooks_ns", hooks_ns);
+        }
+        if tracing {
+            self.emit_place_event(task, result.as_ref(), retried, &hooks_before);
+        }
+        result
     }
 
     /// The departure protocol: clock tick, release the allocation and
     /// run the `postPlace` hooks (departures are where e.g. MIG
     /// lattice holes open up and where nodes fall idle for DRS).
     pub fn release(&mut self, dc: &mut Datacenter, task: &Task, node: usize, placement: &Placement) {
+        let prof = self.obs.profiling;
+        let tracing = self.obs.tracer.is_some();
+        let hooks_before = if tracing { self.hook_counters_snapshot() } else { Vec::new() };
+        let mut hooks_ns = 0.0;
+        let t = PhaseTimer::start(prof);
         self.advance_clock(dc);
+        if let Some(ns) = t.stop_ns() {
+            hooks_ns += ns;
+        }
         dc.deallocate(task, node, placement);
         self.notify_node_changed(node);
+        let t = PhaseTimer::start(prof);
         self.run_post_place(dc, node);
+        if let Some(ns) = t.stop_ns() {
+            hooks_ns += ns;
+            self.obs.registry.observe_ns("phase_hooks_ns", hooks_ns);
+        }
+        self.obs.registry.inc("sched_releases", 1);
+        if tracing {
+            let after = self.hook_counters_snapshot();
+            let deltas = hook_counter_deltas(&hooks_before, &after);
+            let event = obs::trace::release_event(task, node, placement, self.events, &deltas);
+            if let Some(t) = self.obs.tracer.as_mut() {
+                t.emit(event);
+                self.obs.registry.inc("trace_events", 1);
+            }
+        }
+    }
+
+    /// Turn the capture of the just-finished decision into a JSONL
+    /// `place` event, with the hook-counter deltas observed across this
+    /// protocol entry (DRS wakes, repartitions, …).
+    fn emit_place_event(
+        &mut self,
+        task: &Task,
+        decision: Option<&Decision>,
+        retried: bool,
+        hooks_before: &[(&'static str, u64)],
+    ) {
+        let cap = self.obs.capture.take().unwrap_or_default();
+        let after = self.hook_counters_snapshot();
+        let deltas = hook_counter_deltas(hooks_before, &after);
+        let event = obs::trace::place_event(
+            task,
+            &cap,
+            decision,
+            retried,
+            self.events,
+            self.obs.tie_seed,
+            &deltas,
+        );
+        if let Some(t) = self.obs.tracer.as_mut() {
+            t.emit(event);
+            self.obs.registry.inc("trace_events", 1);
+        }
+    }
+
+    /// Replay one arrival in capture mode **without committing**: run
+    /// the decision pipeline (no clock tick, no hooks, no allocation)
+    /// and return the would-be trace event — the scoring table `repro
+    /// explain` pretty-prints. The tie-break RNG advances exactly as a
+    /// real decision would, so an explain interleaved into a live run
+    /// shifts subsequent tie-breaks; on a fresh scheduler it is
+    /// side-effect-free.
+    pub fn explain(
+        &mut self,
+        dc: &Datacenter,
+        workload: &Workload,
+        task: &Task,
+        top_k: usize,
+    ) -> Json {
+        let prev_top_k = self.obs.top_k;
+        self.obs.top_k = top_k;
+        self.obs.capture_requested = true;
+        let decision = self.schedule(dc, workload, task);
+        self.obs.capture_requested = false;
+        self.obs.top_k = prev_top_k;
+        let cap = self.obs.capture.take().unwrap_or_default();
+        obs::trace::place_event(
+            task,
+            &cap,
+            decision.as_ref(),
+            false,
+            self.events,
+            self.obs.tie_seed,
+            &[],
+        )
     }
 
     fn run_post_place(&mut self, dc: &mut Datacenter, node_id: usize) {
@@ -588,6 +862,22 @@ impl Scheduler {
             h.post_place(dc, node_id, &mut invalidate);
         }
     }
+}
+
+/// Non-zero increments between two [`Scheduler::hook_counters_snapshot`]
+/// calls (the hook-action deltas a trace event reports).
+fn hook_counter_deltas(
+    before: &[(&'static str, u64)],
+    after: &[(&'static str, u64)],
+) -> Vec<(String, u64)> {
+    let mut out = Vec::new();
+    for &(k, v) in after {
+        let prev = before.iter().find(|&&(bk, _)| bk == k).map(|&(_, bv)| bv).unwrap_or(0);
+        if v > prev {
+            out.push((k.to_string(), v - prev));
+        }
+    }
+    out
 }
 
 /// k8s NormalizeScore: min-max map to [0, 100], **rounded to integers**
@@ -872,6 +1162,93 @@ mod tests {
         let ok = Task::new(13, 1.0, 0.0, GpuDemand::Zero);
         assert!(s.place(&mut dc, &w, &ok).is_some());
         assert_eq!(s.constraint_unschedulable(), 2);
+    }
+
+    #[test]
+    fn metrics_snapshot_merges_registry_and_catalog() {
+        let mut dc = dc2();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(crate::sched::PolicyKind::FirstFit);
+        let t = Task::new(0, 2.0, 512.0, GpuDemand::Whole(1));
+        assert!(s.place(&mut dc, &w, &t).is_some());
+        let big = Task::new(1, 2.0, 512.0, GpuDemand::Whole(64));
+        assert!(s.place(&mut dc, &w, &big).is_none());
+        let m = s.metrics();
+        assert_eq!(m.counter("sched_places"), 1);
+        assert_eq!(m.counter("sched_failures"), 1);
+        assert_eq!(m.counter("sched_releases"), 0);
+        // Catalog keys are pre-registered even with no hook attached.
+        assert_eq!(m.counter("drs_sleeps"), 0);
+        assert_eq!(m.counter("repartitions"), 0);
+        s.release(&mut dc, &t, 0, &Placement::Whole { gpus: vec![0] });
+        assert_eq!(s.metrics().counter("sched_releases"), 1);
+        // The shim accessor and the registry agree.
+        assert_eq!(s.constraint_unschedulable(), s.metrics().counter("constraint_unschedulable"));
+    }
+
+    #[test]
+    fn tracer_emits_one_event_per_protocol_entry() {
+        use crate::obs::TraceSink;
+        use crate::util::json;
+        let mut dc = dc2();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(crate::sched::PolicyKind::Fgd);
+        let sink = TraceSink::memory();
+        let label = s.label().to_string();
+        s.set_tracer(DecisionTracer::new(sink.clone(), &label, 7));
+        let mut placed = Vec::new();
+        for i in 0..3 {
+            let t = Task::new(i, 2.0, 512.0, GpuDemand::Whole(1));
+            let d = s.place(&mut dc, &w, &t).expect("fits");
+            placed.push((t, d));
+        }
+        let (t0, d0) = &placed[0];
+        s.release(&mut dc, t0, d0.node, &d0.placement);
+        s.trace_flush();
+        let text = sink.contents();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let first = json::parse(lines[0]).expect("valid JSONL");
+        assert_eq!(first.get("event").and_then(Json::as_str), Some("place"));
+        assert_eq!(first.get("outcome").and_then(Json::as_str), Some("placed"));
+        assert_eq!(first.get("policy").and_then(Json::as_str), Some(label.as_str()));
+        assert_eq!(first.get("seed").and_then(Json::as_u64), Some(7));
+        assert!(!first.get("scores").and_then(Json::as_arr).unwrap().is_empty());
+        let last = json::parse(lines[3]).expect("valid JSONL");
+        assert_eq!(last.get("event").and_then(Json::as_str), Some("release"));
+        assert_eq!(s.metrics().counter("trace_events"), 4);
+    }
+
+    #[test]
+    fn explain_reports_scoring_table_without_committing() {
+        let dc = dc2();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(crate::sched::PolicyKind::PwrFgd { alpha: 0.1 });
+        let t = Task::new(0, 2.0, 512.0, GpuDemand::Whole(1));
+        let ev = s.explain(&dc, &w, &t, 5);
+        assert_eq!(ev.get("outcome").and_then(Json::as_str), Some("placed"));
+        let scores = ev.get("scores").and_then(Json::as_arr).unwrap();
+        assert!(!scores.is_empty());
+        assert_eq!(scores[0].get("winner"), Some(&Json::Bool(true)));
+        // Nothing committed, nothing counted.
+        assert_eq!(dc.gpu_allocated_units(), 0.0);
+        assert_eq!(s.metrics().counter("sched_places"), 0);
+    }
+
+    #[test]
+    fn profiling_accumulates_phase_histograms() {
+        let mut dc = dc2();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(crate::sched::PolicyKind::FirstFit);
+        s.enable_profiling(true);
+        let t = Task::new(0, 2.0, 512.0, GpuDemand::Whole(1));
+        assert!(s.place(&mut dc, &w, &t).is_some());
+        let m = s.metrics();
+        for key in
+            ["phase_filter_ns", "phase_score_ns", "phase_bind_ns", "phase_hooks_ns", "place_ns"]
+        {
+            assert_eq!(m.histogram(key).unwrap().count(), 1, "{key} not observed");
+        }
     }
 
     #[test]

@@ -20,6 +20,13 @@
 //! * [`policies`] — PWR (the contribution), FGD [19], BestFit [6],
 //!   DotProd [4], GpuPacking [18], GpuClustering [21], FirstFit and
 //!   Random sanity baselines, and the MIG family + repartitioner.
+//!
+//! Every pipeline stage is instrumented through the opt-in
+//! observability layer ([`crate::obs`]): the [`Scheduler`] owns a
+//! `MetricsRegistry` of counters and phase-latency histograms, and can
+//! emit a per-decision JSONL trace (filter vetoes, per-plugin scores,
+//! bind choice). Both are off by default and cost nothing when
+//! disabled — see `docs/observability.md`.
 
 pub mod bind;
 pub mod drs;

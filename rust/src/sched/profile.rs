@@ -1085,6 +1085,27 @@ mod tests {
         }
         // Every row carries a non-empty description.
         assert!(cat.iter().all(|(_, _, d)| !d.is_empty()));
+        // The metrics catalog (crate::obs) is held to the same
+        // drift-proofing bar: the counters the framework maintains must
+        // all be catalogued with non-empty descriptions, and the keys
+        // the simulator's result structs read through shims must
+        // resolve.
+        let metric_keys: Vec<&str> =
+            crate::obs::catalog().iter().map(|(k, _, _)| *k).collect();
+        for key in [
+            "sched_places", "sched_releases", "sched_failures", "sched_retries",
+            "sched_prefilter_rejections", "constraint_unschedulable", "trace_events",
+            "mig_scorer_fallbacks", "repartitions", "proactive_repartitions",
+            "migrated_slices", "drs_sleeps", "drs_wakes", "drs_drains",
+            "drs_wake_cancels", "drs_transition_j", "phase_filter_ns",
+            "phase_score_ns", "phase_bind_ns", "phase_hooks_ns", "place_ns",
+        ] {
+            assert!(metric_keys.contains(&key), "missing metrics-catalog key {key}");
+            assert!(
+                crate::obs::describe(key).is_some_and(|d| !d.is_empty()),
+                "metrics-catalog key {key} lacks a description"
+            );
+        }
     }
 
     #[test]

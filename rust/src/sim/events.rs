@@ -11,6 +11,12 @@
 //! under churn (not just monotone fill), and by `ext-drs` to measure
 //! what the DRS sleep/wake subsystem (`docs/power.md`) harvests from
 //! the load valleys.
+//!
+//! Observability ([`crate::obs`]) flows through unchanged: a tracer
+//! attached to the scheduler emits one JSONL event per place/release
+//! of this loop, and the counters below are thin shims over the
+//! scheduler's metrics registry — [`SteadySim::sched`] exposes the
+//! full snapshot after a run.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -180,6 +186,13 @@ impl SteadySim {
     /// The cluster state (for post-run invariant checks in tests).
     pub fn dc(&self) -> &Datacenter {
         &self.dc
+    }
+
+    /// The scheduler (post-run observability access:
+    /// `sched().metrics()` for the registry snapshot,
+    /// `sched().trace_flush()` to drain an attached tracer).
+    pub fn sched(&self) -> &Scheduler {
+        &self.sched
     }
 
     fn push(&mut self, at: f64, event: Event) {

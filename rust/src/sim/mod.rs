@@ -20,6 +20,7 @@ pub mod events;
 use crate::cluster::Datacenter;
 use crate::frag;
 use crate::metrics::{RunSeries, SeriesPoint};
+use crate::obs::{DecisionTracer, TraceSink};
 use crate::power;
 use crate::sched::policies::{MigRepartitioner, RepartitionConfig};
 use crate::sched::{Scheduler, SchedulerProfile};
@@ -153,6 +154,21 @@ impl Simulation {
         }
     }
 
+    /// Replay the inflation run up to the `nth` sampled arrival
+    /// (1-based) — committing the first `n − 1` decisions exactly as
+    /// [`Simulation::run_inflation`] would — then **explain** arrival
+    /// `n` without committing it: returns the decision-trace event with
+    /// the full scoring table (the `repro explain` subcommand
+    /// pretty-prints it; see `docs/observability.md`).
+    pub fn explain_arrival(&mut self, nth: u64, top_k: usize) -> crate::util::json::Json {
+        while self.submitted + 1 < nth && (self.submitted as usize) < MAX_TASKS {
+            self.step();
+        }
+        let task = self.sampler.next_task();
+        self.submitted += 1;
+        self.sched.explain(&self.dc, &self.workload, &task, top_k)
+    }
+
     /// Current capacity ratio (arrived GPU units ÷ installed GPUs).
     pub fn capacity_ratio(&self) -> f64 {
         self.arrived_gpu_units / self.dc.gpu_capacity()
@@ -269,6 +285,13 @@ pub struct RepeatConfig {
     /// Proactive slice-fragmentation threshold of the attached
     /// repartition hook; `f64::INFINITY` (default) keeps it failure-only.
     pub mig_frag_threshold: f64,
+    /// Decision-trace sink (`--trace-decisions`): when set, every
+    /// repetition's scheduler gets a [`DecisionTracer`] appending to
+    /// this shared sink. Each JSONL event carries the policy label,
+    /// seed, and sequence number, so the interleaved multi-thread
+    /// stream demultiplexes. `None` (default) = tracing off, results
+    /// bit-identical to pre-observability runs.
+    pub trace: Option<TraceSink>,
 }
 
 impl Default for RepeatConfig {
@@ -281,6 +304,7 @@ impl Default for RepeatConfig {
             deterministic_ties: false,
             mig_repartition: false,
             mig_frag_threshold: f64::INFINITY,
+            trace: None,
         }
     }
 }
@@ -316,12 +340,18 @@ pub fn run_repetitions(
                         RepartitionConfig::with_threshold(cfg.mig_frag_threshold),
                     )));
                 }
+                if let Some(sink) = &cfg.trace {
+                    let label = sched.label().to_string();
+                    sched.set_tracer(DecisionTracer::new(sink.clone(), &label, seed));
+                }
                 // Workload M extracted from a materialized trace with
                 // this repetition's seed (fresh historical sample).
                 let workload = trace_spec.synthesize(seed ^ 0x57AB1E).workload();
                 let mut sim = Simulation::with_spec(dc, sched, &trace_spec, workload, seed);
                 sim.record_frag = cfg.record_frag;
-                sim.run_inflation(cfg.target_ratio)
+                let out = sim.run_inflation(cfg.target_ratio);
+                sim.sched.trace_flush();
+                out
             })
         })
         .collect();
@@ -384,6 +414,51 @@ mod tests {
         assert_eq!(a.submitted, b.submitted);
         assert_eq!(a.scheduled, b.scheduled);
         assert!((a.final_eopc() - b.final_eopc()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn explain_arrival_replays_without_committing_the_nth() {
+        let dc = ClusterSpec::tiny(4, 4, 1).build();
+        let spec = TraceSpec::default_trace();
+        let workload = spec.synthesize(1).workload();
+        let sched = Scheduler::from_policy(PolicyKind::PwrFgd { alpha: 0.1 });
+        let mut sim = Simulation::with_spec(dc, sched, &spec, workload, 7);
+        let ev = sim.explain_arrival(5, 3);
+        assert_eq!(ev.get("event").and_then(|e| e.as_str()), Some("place"));
+        assert!(ev.get("outcome").is_some());
+        assert_eq!(sim.submitted, 5);
+        // The 5th arrival was explained, not committed: only the first
+        // four decisions count as protocol entries.
+        assert_eq!(sim.sched.metrics().counter("sched_places") + sim.failed, 4);
+    }
+
+    #[test]
+    fn traced_repetitions_share_one_jsonl_sink() {
+        use crate::obs::TraceSink;
+        use crate::util::json;
+        let cluster = ClusterSpec::tiny(4, 4, 1);
+        let spec = TraceSpec::default_trace();
+        let sink = TraceSink::memory();
+        let cfg = RepeatConfig {
+            reps: 2,
+            base_seed: 1,
+            target_ratio: 0.3,
+            trace: Some(sink.clone()),
+            ..Default::default()
+        };
+        let runs = run_repetitions(&cluster, &spec, PolicyKind::FirstFit, &cfg);
+        assert_eq!(runs.len(), 2);
+        let text = sink.contents();
+        let mut seeds = std::collections::BTreeSet::new();
+        let mut events = 0u64;
+        for line in text.lines() {
+            let ev = json::parse(line).expect("traced line parses");
+            seeds.insert(ev.get("seed").and_then(json::Json::as_u64).unwrap());
+            events += 1;
+        }
+        let submitted: u64 = runs.iter().map(|r| r.submitted).sum();
+        assert_eq!(events, submitted, "one place event per submission");
+        assert_eq!(seeds, [1u64, 2].into_iter().collect());
     }
 
     #[test]

@@ -48,8 +48,14 @@ impl BenchResult {
     pub fn median_ns(&self) -> f64 {
         stats::median(&self.samples_ns)
     }
+    pub fn p50_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 50.0)
+    }
     pub fn p95_ns(&self) -> f64 {
         stats::percentile(&self.samples_ns, 95.0)
+    }
+    pub fn p99_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 99.0)
     }
     pub fn stddev_ns(&self) -> f64 {
         stats::stddev(&self.samples_ns)
@@ -131,6 +137,19 @@ impl Bencher {
             .skip(1)
             .find(|a| !a.starts_with('-') && a != "--bench");
         Bencher { config, results: Vec::new(), filter }
+    }
+
+    /// Build **without** the argv substring filter. `cargo bench`
+    /// passes a name filter as the first bare argument, but when the
+    /// harness is embedded in a `repro` subcommand (`repro
+    /// bench-scale`) that argument is the subcommand itself and would
+    /// silently skip every benchmark. Still honours
+    /// `REPRO_BENCH_FAST=1` via [`Self::with_config`]'s window
+    /// shrinking.
+    pub fn unfiltered(config: BenchConfig) -> Bencher {
+        let mut b = Self::with_config(config);
+        b.filter = None;
+        b
     }
 
     fn skipped(&self, name: &str) -> bool {
@@ -216,6 +235,28 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// A conditionally-armed phase timer for the scheduler's phase-latency
+/// profiling ([`crate::obs`]): `start(false)` is a no-op that never
+/// reads the clock, so the disabled path costs one branch on a `Copy`
+/// option — zero-cost enough to live permanently inside
+/// `Scheduler::schedule`'s hot loop.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseTimer(Option<Instant>);
+
+impl PhaseTimer {
+    /// Arm the timer iff `enabled`.
+    #[inline]
+    pub fn start(enabled: bool) -> PhaseTimer {
+        PhaseTimer(if enabled { Some(Instant::now()) } else { None })
+    }
+
+    /// Elapsed nanoseconds since `start`; `None` when unarmed.
+    #[inline]
+    pub fn stop_ns(self) -> Option<f64> {
+        self.0.map(|t0| t0.elapsed().as_nanos() as f64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,6 +299,29 @@ mod tests {
         b.bench("beta-abc", || 0);
         assert_eq!(b.results().len(), 1);
         assert_eq!(b.results()[0].name, "beta-abc");
+    }
+
+    #[test]
+    fn phase_timer_disabled_is_inert() {
+        let t = PhaseTimer::start(false);
+        assert!(t.stop_ns().is_none());
+        let t = PhaseTimer::start(true);
+        let ns = t.stop_ns().expect("armed timer reports");
+        assert!(ns >= 0.0);
+    }
+
+    #[test]
+    fn unfiltered_ignores_argv() {
+        // Under `cargo test` argv carries bare filter tokens; the
+        // unfiltered constructor must run everything regardless.
+        let mut b = Bencher::unfiltered(BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(2),
+            max_samples: 5,
+            min_samples: 1,
+        });
+        b.bench("anything-goes", || 0);
+        assert_eq!(b.results().len(), 1);
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! Observability equivalence + schema suite (`docs/observability.md`).
+//!
+//! The obs layer (`rust/src/obs/`) must be invisible when engaged:
+//! attaching a decision tracer and enabling phase-latency profiling has
+//! to produce **bit-identical** fixed-seed runs against a bare
+//! scheduler — across policies × trace families × seeds, in both
+//! simulation loops (inflation and steady-state churn, including a DRS
+//! diurnal run where hooks actually sleep and wake nodes).
+//!
+//! The suite also pins the active side: the JSONL event stream
+//! round-trips through `util::json` with the documented schema (one
+//! `place` event per arrival, one `release` per departure, each
+//! self-describing via policy/seed/seq), the registry snapshot agrees
+//! with the legacy result-struct counters (the shim contract), and an
+//! exercised run's Prometheus exposition covers every catalog key.
+
+use repro::cluster::ClusterSpec;
+use repro::obs::{self, DecisionTracer, MetricKind, TraceSink};
+use repro::sched::SchedulerProfile;
+use repro::sim::events::{SteadyConfig, SteadySim, SteadyResult};
+use repro::sim::{RunResult, Simulation};
+use repro::trace::TraceSpec;
+use repro::util::json::{self, Json};
+
+/// One inflation run; `obs` = attach a memory-sink tracer + profiling.
+/// Returns the result and the sink (empty when `obs` is off).
+fn run_inflation(
+    policy: &str,
+    cluster: &ClusterSpec,
+    trace: &TraceSpec,
+    seed: u64,
+    target: f64,
+    obs: bool,
+) -> (RunResult, TraceSink) {
+    let mut sched = SchedulerProfile::parse(policy).unwrap().build().unwrap();
+    let sink = TraceSink::memory();
+    if obs {
+        let label = sched.label().to_string();
+        sched.set_tracer(DecisionTracer::new(sink.clone(), &label, seed));
+        sched.enable_profiling(true);
+    }
+    let dc = cluster.build();
+    let workload = trace.synthesize(seed ^ 0x57AB1E).workload();
+    let mut sim = Simulation::with_spec(dc, sched, trace, workload, seed);
+    sim.record_frag = false;
+    let out = sim.run_inflation(target);
+    sim.sched.trace_flush();
+    (out, sink)
+}
+
+/// One churn run under the given policy; `obs` as above.
+fn run_churn(
+    policy: &str,
+    cluster: &ClusterSpec,
+    trace: &TraceSpec,
+    cfg: &SteadyConfig,
+    obs: bool,
+) -> (SteadyResult, TraceSink) {
+    let mut sched = SchedulerProfile::parse(policy).unwrap().build().unwrap();
+    let sink = TraceSink::memory();
+    if obs {
+        let label = sched.label().to_string();
+        sched.set_tracer(DecisionTracer::new(sink.clone(), &label, cfg.seed));
+        sched.enable_profiling(true);
+    }
+    let mut sim = SteadySim::new(cluster.build(), sched, trace, cfg);
+    let out = sim.run(cfg);
+    sim.sched().trace_flush();
+    (out, sink)
+}
+
+fn assert_bit_identical(what: &str, a: &RunResult, b: &RunResult) {
+    assert_eq!(a.submitted, b.submitted, "{what}: submitted diverged");
+    assert_eq!(a.scheduled, b.scheduled, "{what}: scheduled diverged");
+    assert_eq!(a.failed, b.failed, "{what}: failed diverged");
+    assert_eq!(
+        a.allocated_gpu_units.to_bits(),
+        b.allocated_gpu_units.to_bits(),
+        "{what}: allocated units diverged"
+    );
+    assert_eq!(
+        a.final_eopc().to_bits(),
+        b.final_eopc().to_bits(),
+        "{what}: final EOPC diverged ({} vs {})",
+        a.final_eopc(),
+        b.final_eopc()
+    );
+    assert_eq!(
+        a.final_grar().to_bits(),
+        b.final_grar().to_bits(),
+        "{what}: final GRAR diverged"
+    );
+}
+
+/// Tracing + profiling attached vs bare scheduler: bit-identical
+/// inflation runs across policies × traces × seeds, and the traced run
+/// emits exactly one `place` event per submission.
+#[test]
+fn obs_enabled_is_bit_identical_in_inflation() {
+    let cluster = ClusterSpec::tiny(6, 4, 1);
+    let traces = [TraceSpec::default_trace(), TraceSpec::sharing_gpu(1.0)];
+    for policy in ["fgd", "pwrfgd:0.1", "bestfit", "random"] {
+        for trace in &traces {
+            for seed in [1u64, 42] {
+                let what = format!("{policy}/{}/seed{seed}", trace.name);
+                let (base, _) = run_inflation(policy, &cluster, trace, seed, 0.7, false);
+                let (with, sink) = run_inflation(policy, &cluster, trace, seed, 0.7, true);
+                assert!(base.submitted > 0, "{what}: empty run");
+                assert_bit_identical(&what, &base, &with);
+                let lines = sink.contents().lines().count() as u64;
+                assert_eq!(lines, with.submitted, "{what}: trace events ≠ submissions");
+            }
+        }
+    }
+}
+
+/// The same pin under steady-state churn — including a DRS diurnal run
+/// where hooks drain, sleep and wake nodes mid-trace (hook actions flow
+/// into trace events; they must not flow back into decisions).
+#[test]
+fn obs_enabled_is_bit_identical_under_churn() {
+    let cfg = SteadyConfig {
+        mean_interarrival_s: 1.0,
+        mean_duration_s: 100.0,
+        horizon_s: 2_000.0,
+        sample_every_s: 50.0,
+        seed: 9,
+    };
+    let cluster = ClusterSpec::tiny(8, 4, 2);
+    let cases = [
+        ("pwrfgd:0.1", TraceSpec::default_trace()),
+        (
+            "score(pwr=0.1,fgd=0.7,consolidate=0.2)|bind(weighted:0.1)|hook(drs:80:5)",
+            TraceSpec::diurnal_with_period(0.6, 1_000.0),
+        ),
+    ];
+    for (policy, trace) in &cases {
+        let (a, _) = run_churn(policy, &cluster, trace, &cfg, false);
+        let (b, sink) = run_churn(policy, &cluster, trace, &cfg, true);
+        assert!(a.arrivals > 500, "{policy}: arrivals {}", a.arrivals);
+        assert_eq!(a.arrivals, b.arrivals, "{policy}: arrivals diverged");
+        assert_eq!(a.scheduled, b.scheduled, "{policy}: scheduled diverged");
+        assert_eq!(a.failed, b.failed, "{policy}: failed diverged");
+        assert_eq!(a.departures, b.departures, "{policy}: departures diverged");
+        assert_eq!(a.drs_sleeps, b.drs_sleeps, "{policy}: sleeps diverged");
+        assert_eq!(a.drs_wakes, b.drs_wakes, "{policy}: wakes diverged");
+        assert_eq!(
+            a.steady_eopc_w.to_bits(),
+            b.steady_eopc_w.to_bits(),
+            "{policy}: steady EOPC diverged"
+        );
+        // One place event per arrival + one release per departure.
+        let lines = sink.contents().lines().count() as u64;
+        assert_eq!(lines, b.arrivals + b.departures, "{policy}: event count");
+    }
+}
+
+/// Every traced line is valid JSON carrying the documented schema:
+/// `place` events the full decision anatomy, `release` events the
+/// departure, both stamped with policy/seed/seq.
+#[test]
+fn jsonl_events_roundtrip_with_documented_schema() {
+    let cfg = SteadyConfig {
+        mean_interarrival_s: 2.0,
+        mean_duration_s: 100.0,
+        horizon_s: 600.0,
+        sample_every_s: 50.0,
+        seed: 5,
+    };
+    let cluster = ClusterSpec::tiny(4, 4, 1);
+    let trace = TraceSpec::default_trace();
+    let (out, sink) = run_churn("pwrfgd:0.1", &cluster, &trace, &cfg, true);
+    assert!(out.departures > 0, "no departures — schema test needs both event kinds");
+    let label = SchedulerProfile::parse("pwrfgd:0.1").unwrap().label;
+    let text = sink.contents();
+    let mut places = 0u64;
+    let mut releases = 0u64;
+    let mut prev_seq: Option<u64> = None;
+    for line in text.lines() {
+        let ev = json::parse(line).expect("traced line parses as JSON");
+        // The self-describing stamp (one scheduler, so seq is monotone).
+        assert_eq!(ev.get("policy").and_then(Json::as_str), Some(label.as_str()));
+        assert_eq!(ev.get("seed").and_then(Json::as_u64), Some(5));
+        let seq = ev.get("seq").and_then(Json::as_u64).expect("seq");
+        assert_eq!(seq, prev_seq.map(|s| s + 1).unwrap_or(0), "seq not monotone");
+        prev_seq = Some(seq);
+        let task = ev.get("task").expect("task");
+        assert!(task.get("id").and_then(Json::as_u64).is_some());
+        assert!(task.get("gpu").and_then(Json::as_str).is_some());
+        assert!(ev.get("hooks").is_some());
+        assert!(ev.get("now").and_then(Json::as_u64).is_some());
+        match ev.get("event").and_then(Json::as_str) {
+            Some("place") => {
+                places += 1;
+                let verdict = ev
+                    .get("prefilter")
+                    .and_then(|p| p.get("verdict"))
+                    .and_then(Json::as_str)
+                    .expect("prefilter verdict");
+                assert!(verdict == "pass" || verdict == "veto");
+                assert!(!ev.get("filters").and_then(Json::as_arr).unwrap().is_empty());
+                let outcome = ev.get("outcome").and_then(Json::as_str).unwrap();
+                match outcome {
+                    "placed" => {
+                        let bind = ev.get("bind").expect("bind");
+                        assert!(bind.get("node").and_then(Json::as_u64).is_some());
+                        assert!(bind.get("placement").and_then(Json::as_str).is_some());
+                        let scores = ev.get("scores").and_then(Json::as_arr).unwrap();
+                        assert!(!scores.is_empty());
+                        // Winner first, with per-plugin columns.
+                        assert_eq!(scores[0].get("winner"), Some(&Json::Bool(true)));
+                        assert!(scores[0].get("per_plugin").is_some());
+                        assert!(ev.get("ties").and_then(Json::as_u64).unwrap() >= 1);
+                        assert!(ev.get("weights").and_then(Json::as_arr).is_some());
+                        assert!(ev.get("tie_seed").and_then(Json::as_u64).is_some());
+                    }
+                    "failed" => assert!(matches!(ev.get("bind"), Some(Json::Null))),
+                    other => panic!("unknown outcome {other}"),
+                }
+            }
+            Some("release") => {
+                releases += 1;
+                assert!(ev.get("node").and_then(Json::as_u64).is_some());
+                assert!(ev.get("placement").and_then(Json::as_str).is_some());
+            }
+            other => panic!("unknown event kind {other:?}"),
+        }
+    }
+    assert_eq!(places, out.arrivals);
+    assert_eq!(releases, out.departures);
+}
+
+/// The shim contract: the legacy result-struct counters and the
+/// registry snapshot are two views of the same numbers, and an
+/// exercised run's Prometheus exposition covers every catalog key.
+#[test]
+fn registry_snapshot_agrees_with_result_counters_and_covers_catalog() {
+    let cluster = ClusterSpec::tiny(4, 4, 1);
+    let trace = TraceSpec::default_trace();
+    let mut sched = SchedulerProfile::parse("pwrfgd:0.1").unwrap().build().unwrap();
+    sched.enable_profiling(true);
+    let dc = cluster.build();
+    let workload = trace.synthesize(7 ^ 0x57AB1E).workload();
+    let mut sim = Simulation::with_spec(dc, sched, &trace, workload, 7);
+    sim.record_frag = false;
+    let out = sim.run_inflation(1.2);
+    let m = sim.sched.metrics();
+    assert_eq!(m.counter("sched_places"), out.scheduled);
+    assert_eq!(m.counter("sched_failures"), out.failed);
+    assert_eq!(m.counter("constraint_unschedulable"), out.constraint_unschedulable);
+    assert_eq!(m.counter("repartitions"), out.repartitions);
+    assert_eq!(m.counter("drs_sleeps"), out.drs_sleeps);
+    assert_eq!(sim.sched.constraint_unschedulable(), m.counter("constraint_unschedulable"));
+    // Profiling accumulated every phase histogram.
+    for key in ["phase_filter_ns", "phase_score_ns", "phase_bind_ns", "phase_hooks_ns", "place_ns"]
+    {
+        assert!(
+            m.histogram(key).unwrap().count() > 0,
+            "{key} empty after a profiled run"
+        );
+    }
+    // The exposition covers the whole catalog with well-formed lines.
+    let text = m.to_prometheus("repro_");
+    for (key, kind, _) in obs::catalog() {
+        let ty = match kind {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "summary",
+        };
+        assert!(
+            text.contains(&format!("# TYPE repro_{key} {ty}")),
+            "catalog key {key} missing from exposition"
+        );
+    }
+    for line in text.lines() {
+        assert!(
+            line.starts_with('#') || line.split_whitespace().count() == 2,
+            "malformed exposition line: {line}"
+        );
+    }
+}
