@@ -1,7 +1,19 @@
 //! Aggregate datacenter state: the node set plus cached cluster-level
 //! totals maintained incrementally across allocations, and the static
-//! candidate-count indexes (nodes per GPU model / MIG lattice / label)
-//! the filter plugins' PreFilter pass reads.
+//! indexes (nodes per GPU model / MIG lattice / label) the filter
+//! plugins' PreFilter pass and the scheduler's sampled candidate
+//! shortlist read — both candidate *counts* and candidate *id lists*.
+//!
+//! Every `Datacenter` carries a process-unique **revision stamp**
+//! (same identity-stamp discipline as [`crate::tasks::Workload`]):
+//! assigned at construction, re-assigned by
+//! [`Datacenter::note_fleet_changed`]. Scheduler-side caches keyed on
+//! structural fleet state (cluster caps, score caches) key on the
+//! revision, so a fleet swap that happens to preserve the node count
+//! can never serve stale values. Code that mutates the `pub nodes`
+//! field *structurally* (shape, model, lattice or label changes —
+//! not allocations) must call `note_fleet_changed`, which also
+//! rebuilds the static indexes.
 
 use std::collections::HashMap;
 
@@ -35,6 +47,15 @@ pub struct Datacenter {
     /// lookups borrow `&str`s instead of allocating a tuple key — this
     /// sits on the per-task PreFilter path).
     label_counts: HashMap<String, HashMap<String, usize>>,
+    /// Static index: node ids per GPU model, ascending (the sampled
+    /// candidate shortlist of model-pinned tasks).
+    model_nodes: Vec<Vec<u32>>,
+    /// Static index: node ids per MIG lattice, ascending.
+    lattice_nodes: [Vec<u32>; 2],
+    /// Static index: node ids per `(label key, value)`, ascending.
+    label_nodes: HashMap<String, HashMap<String, Vec<u32>>>,
+    /// Process-unique identity stamp; see the module docs.
+    revision: u64,
     /// Cluster-wide resident task count per constraint class key (the
     /// `affinity` PreFilter's existence check; same discipline as
     /// [`Node::class_counts`] via the shared helpers).
@@ -43,43 +64,95 @@ pub struct Datacenter {
     pub n_tasks: u64,
 }
 
+/// Next process-unique fleet revision (same discipline as
+/// `next_workload_revision`: starts at 1 so 0 is free as a "never
+/// stamped" sentinel in caches, relaxed ordering — only uniqueness
+/// matters, not cross-thread ordering).
+fn next_fleet_revision() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT_REVISION: AtomicU64 = AtomicU64::new(1);
+    NEXT_REVISION.fetch_add(1, Ordering::Relaxed)
+}
+
 impl Datacenter {
     /// Wrap a node list (normally via [`crate::cluster::ClusterSpec::build`]).
     pub fn new(nodes: Vec<Node>) -> Datacenter {
-        let total_gpus = nodes.iter().map(|n| n.gpu_alloc.len()).sum();
-        let total_vcpus = nodes.iter().map(|n| n.vcpus).sum();
-        let total_mem = nodes.iter().map(|n| n.mem).sum();
-        let mut nodes_per_model = [0usize; GpuModel::ALL.len()];
-        let mut nodes_per_lattice = [0usize; 2];
-        let mut label_counts: HashMap<String, HashMap<String, usize>> = HashMap::new();
-        for n in &nodes {
+        let mut dc = Datacenter {
+            nodes,
+            total_gpus: 0,
+            total_vcpus: 0.0,
+            total_mem: 0.0,
+            gpu_alloc_units: 0.0,
+            cpu_alloc_units: 0.0,
+            mem_alloc_units: 0.0,
+            nodes_per_model: [0; GpuModel::ALL.len()],
+            nodes_per_lattice: [0; 2],
+            label_counts: HashMap::new(),
+            model_nodes: vec![Vec::new(); GpuModel::ALL.len()],
+            lattice_nodes: [Vec::new(), Vec::new()],
+            label_nodes: HashMap::new(),
+            revision: next_fleet_revision(),
+            class_counts: HashMap::new(),
+            n_tasks: 0,
+        };
+        dc.rebuild_static_indexes();
+        dc
+    }
+
+    /// The fleet revision stamp: process-unique, re-assigned on every
+    /// structural change ([`Self::note_fleet_changed`]). Cache keys
+    /// derived from node shapes / models / labels key on this; clones
+    /// share their source's stamp (identical content).
+    pub fn revision(&self) -> u64 {
+        self.revision
+    }
+
+    /// Declare a structural fleet change (nodes added/removed/resized,
+    /// models or labels edited in place): re-stamps [`Self::revision`]
+    /// and rebuilds every static index and installed-capacity total
+    /// from the node list. Allocations don't need this — `allocate` /
+    /// `deallocate` maintain their caches incrementally.
+    pub fn note_fleet_changed(&mut self) {
+        self.revision = next_fleet_revision();
+        self.rebuild_static_indexes();
+    }
+
+    /// Recompute installed totals and the static candidate indexes
+    /// (counts *and* id lists) from `self.nodes`.
+    fn rebuild_static_indexes(&mut self) {
+        self.total_gpus = self.nodes.iter().map(|n| n.gpu_alloc.len()).sum();
+        self.total_vcpus = self.nodes.iter().map(|n| n.vcpus).sum();
+        self.total_mem = self.nodes.iter().map(|n| n.mem).sum();
+        self.nodes_per_model = [0; GpuModel::ALL.len()];
+        self.nodes_per_lattice = [0; 2];
+        self.label_counts.clear();
+        self.model_nodes = vec![Vec::new(); GpuModel::ALL.len()];
+        self.lattice_nodes = [Vec::new(), Vec::new()];
+        self.label_nodes.clear();
+        for n in &self.nodes {
+            let id = n.id as u32;
             if let Some(m) = n.gpu_model {
-                nodes_per_model[m.index()] += 1;
+                self.nodes_per_model[m.index()] += 1;
+                self.model_nodes[m.index()].push(id);
             }
             if let Some(lat) = n.mig_lattice() {
-                nodes_per_lattice[lat.index()] += 1;
+                self.nodes_per_lattice[lat.index()] += 1;
+                self.lattice_nodes[lat.index()].push(id);
             }
             for (k, v) in &n.labels {
-                *label_counts
+                *self
+                    .label_counts
                     .entry(k.clone())
                     .or_default()
                     .entry(v.clone())
                     .or_insert(0) += 1;
+                self.label_nodes
+                    .entry(k.clone())
+                    .or_default()
+                    .entry(v.clone())
+                    .or_default()
+                    .push(id);
             }
-        }
-        Datacenter {
-            nodes,
-            total_gpus,
-            total_vcpus,
-            total_mem,
-            gpu_alloc_units: 0.0,
-            cpu_alloc_units: 0.0,
-            mem_alloc_units: 0.0,
-            nodes_per_model,
-            nodes_per_lattice,
-            label_counts,
-            class_counts: HashMap::new(),
-            n_tasks: 0,
         }
     }
 
@@ -153,6 +226,26 @@ impl Datacenter {
             .and_then(|values| values.get(value))
             .copied()
             .unwrap_or(0)
+    }
+
+    /// Node ids (ascending) carrying GPUs of `model` — the sampled
+    /// candidate shortlist for model-pinned tasks.
+    pub fn nodes_of_model(&self, model: GpuModel) -> &[u32] {
+        &self.model_nodes[model.index()]
+    }
+
+    /// Node ids (ascending) of the given MIG partition lattice.
+    pub fn nodes_of_lattice(&self, lattice: MigLattice) -> &[u32] {
+        &self.lattice_nodes[lattice.index()]
+    }
+
+    /// Node ids (ascending) carrying the `(key, value)` label.
+    pub fn nodes_of_label(&self, key: &str, value: &str) -> &[u32] {
+        self.label_nodes
+            .get(key)
+            .and_then(|values| values.get(value))
+            .map(Vec::as_slice)
+            .unwrap_or(&[])
     }
 
     /// Cluster-wide resident task count of a constraint class.
@@ -285,6 +378,32 @@ mod tests {
         dc.deallocate(&t, 0, &Placement::Shared { gpu: 0 });
         assert_eq!(dc.class_resident("tenant-a"), 0);
         assert!((dc.mem_free_total() - free_mem0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn revision_restamps_and_indexes_rebuild_on_fleet_change() {
+        let mut dc = ClusterSpec::tiny(2, 4, 1).build();
+        let dc2 = ClusterSpec::tiny(2, 4, 1).build();
+        // Process-unique stamps: two independently built fleets differ.
+        assert_ne!(dc.revision(), dc2.revision());
+        // Clones share content, so they share the stamp.
+        assert_eq!(dc.clone().revision(), dc.revision());
+
+        assert_eq!(dc.nodes_of_model(GpuModel::G2), &[0, 1]);
+        assert!(dc.nodes_of_label("zone", "z1").is_empty());
+
+        // Structural in-place mutation + note_fleet_changed: revision
+        // moves and every static index reflects the new fleet shape.
+        let r0 = dc.revision();
+        dc.nodes[1].labels.push(("zone".to_string(), "z1".to_string()));
+        dc.nodes[1].gpu_model = Some(GpuModel::T4);
+        dc.note_fleet_changed();
+        assert_ne!(dc.revision(), r0);
+        assert_eq!(dc.nodes_with_label("zone", "z1"), 1);
+        assert_eq!(dc.nodes_of_label("zone", "z1"), &[1]);
+        assert_eq!(dc.nodes_with_model(GpuModel::G2), 1);
+        assert_eq!(dc.nodes_of_model(GpuModel::G2), &[0]);
+        assert_eq!(dc.nodes_of_model(GpuModel::T4), &[1]);
     }
 
     #[test]

@@ -424,8 +424,10 @@ fn cmd_explain(args: &repro::util::cli::Args) -> Result<()> {
 
 /// The `bench-scale` scenario sweep: inflation and steady-state churn
 /// at two cluster sizes, with the phase-latency breakdown from a
-/// profiled run and the decision-tracing overhead (plain vs null-sink
-/// tracer) on the small inflation scenario. Writes `BENCH_scale.json`
+/// profiled run, the decision-tracing overhead (plain vs null-sink
+/// tracer) on the small inflation scenario, and the fast-path speedup
+/// cell (naive loop vs score cache + sharded scoring, bit-identical
+/// decisions) on the large inflation. Writes `BENCH_scale.json`
 /// (committed at the repo root; regenerate with `repro bench-scale`).
 /// `--quick` (or `REPRO_BENCH_FAST=1`) shrinks cluster sizes and
 /// sample counts for the CI smoke while keeping the schema identical.
@@ -547,12 +549,59 @@ fn cmd_bench_scale(args: &repro::util::cli::Args) -> Result<()> {
     // Tracing overhead on the small inflation scenario: plain vs a
     // null-sink tracer (full capture + serialization cost, no IO).
     // Acceptance gate: < 5% mean-latency overhead.
-    let mut bo = Bencher::unfiltered(bc);
+    let mut bo = Bencher::unfiltered(bc.clone());
     bo.bench("inflate_small_plain", || run_inflation(small, false, false, 7).0);
     bo.bench("inflate_small_traced", || run_inflation(small, false, true, 7).0);
     let plain = bo.results()[0].mean_ns();
     let traced = bo.results()[1].mean_ns();
     let overhead_pct = if plain > 0.0 { (traced - plain) / plain * 100.0 } else { 0.0 };
+
+    // Fast-path speedup at the large inflation cell: naive loop (score
+    // cache off, sequential scoring) vs the scale-out fast path
+    // (revision-keyed cache + sharded scoring). Sampling stays at 100%
+    // so both runs make bit-identical decisions and only throughput
+    // differs; the acceptance gate is >= 1.5x decisions/s at the
+    // full-size (10k-node) cell.
+    let shards = std::thread::available_parallelism()
+        .map(|n| n.get().min(8))
+        .unwrap_or(1);
+    let mut cache_hits = 0u64;
+    let mut cache_misses = 0u64;
+    let mut shard_batches = 0u64;
+    let mut run_fastpath = |fast: bool| -> (u64, f64) {
+        let run = || {
+            let dc = ClusterSpec::tiny(large, 8, large / 8).build();
+            let mut sched = Scheduler::from_policy(policy);
+            if fast {
+                sched.set_score_shards(shards);
+            } else {
+                sched.set_score_cache(false);
+            }
+            let workload = spec.synthesize(42 ^ 0x57AB1E).workload();
+            let mut sim = Simulation::with_spec(dc, sched, &spec, workload, 42);
+            sim.record_frag = false;
+            let out = sim.run_inflation(target);
+            (out.submitted, sim.sched.metrics())
+        };
+        let mut bf = Bencher::unfiltered(bc.clone());
+        let mut decisions = 0u64;
+        let name = if fast { "inflate_large_fast" } else { "inflate_large_naive" };
+        bf.bench(name, || {
+            let (d, metrics) = run();
+            decisions = d;
+            if fast {
+                cache_hits = metrics.counter("score_cache_hits");
+                cache_misses = metrics.counter("score_cache_misses");
+                shard_batches = metrics.counter("score_shard_batches");
+            }
+        });
+        let mean_ns = bf.results()[0].mean_ns();
+        let per_s = if mean_ns > 0.0 { decisions as f64 / (mean_ns * 1e-9) } else { 0.0 };
+        (decisions, per_s)
+    };
+    let (naive_decisions, naive_per_s) = run_fastpath(false);
+    let (fast_decisions, fast_per_s) = run_fastpath(true);
+    let speedup = if naive_per_s > 0.0 { fast_per_s / naive_per_s } else { 0.0 };
 
     let doc = Json::obj(vec![
         ("bench", Json::Str("scale".into())),
@@ -568,11 +617,28 @@ fn cmd_bench_scale(args: &repro::util::cli::Args) -> Result<()> {
                 ("overhead_pct", Json::Num(overhead_pct)),
             ]),
         ),
+        (
+            "fast_path",
+            Json::obj(vec![
+                ("scenario", Json::Str(format!("inflate_large ({large} nodes)"))),
+                ("shards", Json::Num(shards as f64)),
+                ("naive_decisions", Json::Num(naive_decisions as f64)),
+                ("fast_decisions", Json::Num(fast_decisions as f64)),
+                ("decisions_match", Json::Bool(naive_decisions == fast_decisions)),
+                ("naive_decisions_per_s", Json::Num(naive_per_s)),
+                ("fast_decisions_per_s", Json::Num(fast_per_s)),
+                ("speedup", Json::Num(speedup)),
+                ("score_cache_hits", Json::Num(cache_hits as f64)),
+                ("score_cache_misses", Json::Num(cache_misses as f64)),
+                ("score_shard_batches", Json::Num(shard_batches as f64)),
+            ]),
+        ),
     ]);
     std::fs::write(&out_path, format!("{}\n", doc.dump()))
         .with_context(|| format!("cannot write '{out_path}'"))?;
     println!(
-        "wrote {out_path} (tracing overhead {overhead_pct:.2}% on the {small}-node inflation)"
+        "wrote {out_path} (tracing overhead {overhead_pct:.2}% on the {small}-node inflation, \
+         fast-path speedup {speedup:.2}x on the {large}-node inflation)"
     );
     Ok(())
 }

@@ -124,6 +124,26 @@ pub const METRICS_CATALOG: &[(&str, MetricKind, &str)] = &[
         "Joules spent in DRS sleep/wake transitions (rounded)",
     ),
     (
+        "score_cache_hits",
+        MetricKind::Counter,
+        "per-node raw scores reused from the revision-keyed score cache",
+    ),
+    (
+        "score_cache_misses",
+        MetricKind::Counter,
+        "per-node raw scores recomputed (cache cold, stale or bypassed)",
+    ),
+    (
+        "sched_sampled_sweeps",
+        MetricKind::Counter,
+        "feasibility sweeps truncated by sample(<pct>) node sampling",
+    ),
+    (
+        "score_shard_batches",
+        MetricKind::Counter,
+        "scoring batches dispatched to shard threads (shards(<n>) > 1)",
+    ),
+    (
         "phase_filter_ns",
         MetricKind::Histogram,
         "PreFilter + filter-chain latency per decision (ns)",

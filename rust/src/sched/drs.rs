@@ -18,7 +18,12 @@
 //!   immediately) or boots a sleeper (`Asleep → Waking → Active` after
 //!   `wake_latency` ticks; the triggering task is lost, which is the
 //!   GRAR cost of sleeping that `ext-drs` measures against the EOPC
-//!   gain). DSL: `hook(drs[:idle_timeout[:wake_latency[:sleep_j[:wake_j]]]])`.
+//!   gain). Wake targets are vetted against the scheduler's *real*
+//!   filter chain evaluated on the hypothetically-`Active` node
+//!   (`postFailChained`), so a wake is never spent on a node the
+//!   retry's chain would veto — including static/custom filters a
+//!   node-local heuristic cannot see.
+//!   DSL: `hook(drs[:idle_timeout[:wake_latency[:sleep_j[:wake_j]]]])`.
 //! * [`DrsFilter`] — the `drs` filter plugin: only `Active` nodes
 //!   accept placements. Part of the default chain (a no-op while every
 //!   node is `Active`, so legacy placements are bit-identical —
@@ -65,9 +70,13 @@ use crate::tasks::Task;
 /// (`can_fit`) plus the task's own node-local declarative constraints
 /// (model sets, node selectors, affinity/anti-affinity/spread),
 /// mirrored from the default constraint filters — a wake must never be
-/// spent on a node the retry's filter chain would veto anyway. (A
-/// profile-level static `labels:` selector is not visible from a hook;
-/// such chains simply forgo wake targeting precision.)
+/// spent on a node the retry's filter chain would veto anyway.
+///
+/// This is the *fallback* heuristic for direct [`PostHook::post_fail`]
+/// calls; the framework's protocol hands the hook the real filter
+/// chain ([`PostHook::post_fail_chained`]), where
+/// [`wake_could_help_chained`] evaluates the chain itself — including
+/// profile-level static filters this mirror cannot see.
 fn wake_could_help(dc: &Datacenter, i: usize, task: &Task) -> bool {
     let node = &dc.nodes[i];
     if !node.can_fit(task) {
@@ -77,6 +86,27 @@ fn wake_could_help(dc: &Datacenter, i: usize, task: &Task) -> bool {
     GpuModelFilter.feasible(&ctx, node, task)
         && LabelsFilter { selector: Vec::new() }.feasible(&ctx, node, task)
         && AffinityFilter.feasible(&ctx, node, task)
+}
+
+/// Whether waking node `i` would let `task` pass the scheduler's
+/// *actual* filter chain: flip the node to a hypothetical `Active`,
+/// evaluate every filter (including any static/custom ones the
+/// node-local mirror above is blind to — the futile-wake bug), and
+/// restore the real power state. Pure with respect to the datacenter:
+/// the flip is visible only to the chain evaluation.
+fn wake_could_help_chained(
+    dc: &mut Datacenter,
+    i: usize,
+    task: &Task,
+    filters: &[Box<dyn FilterPlugin>],
+) -> bool {
+    let prev = dc.nodes[i].power_state;
+    dc.nodes[i].power_state = PowerState::Active;
+    let ctx = FilterCtx { dc: &*dc };
+    let node = &ctx.dc.nodes[i];
+    let ok = node.can_fit(task) && filters.iter().all(|f| f.feasible(&ctx, node, task));
+    dc.nodes[i].power_state = prev;
+    ok
 }
 
 /// Configuration of the [`DrsHook`] sleep/wake lifecycle.
@@ -173,6 +203,55 @@ impl DrsHook {
                 .collect();
         }
     }
+
+    /// The demand-pressure wake pass shared by `post_fail` (node-local
+    /// [`wake_could_help`] heuristic) and `post_fail_chained` (full
+    /// chain via [`wake_could_help_chained`]). `could_help` decides
+    /// whether spending a wake on node `i` can actually serve `task`.
+    fn wake_pass(
+        &mut self,
+        dc: &mut Datacenter,
+        task: &Task,
+        could_help: &mut dyn FnMut(&mut Datacenter, usize) -> bool,
+        invalidate: &mut dyn FnMut(usize),
+    ) -> bool {
+        self.ensure_tracking(dc);
+        let n = dc.nodes.len();
+        // Demand pressure: the task failed on the awake fleet. First
+        // try to cancel a drain — the node never slept, so waking it is
+        // free and the framework's immediate retry can use it.
+        let drain_hit = (0..n)
+            .find(|&i| dc.nodes[i].power_state == PowerState::Draining && could_help(dc, i));
+        if let Some(i) = drain_hit {
+            dc.nodes[i].power_state = PowerState::Active;
+            self.wake_cancels += 1;
+            self.idle_since[i] = Some(self.now);
+            invalidate(i);
+            return true;
+        }
+        // Otherwise boot the first sleeper that could host the task
+        // (lowest id — deterministic; power-aware selection is a noted
+        // ROADMAP follow-up). With zero wake latency the node is usable
+        // immediately; otherwise it becomes future capacity and only
+        // later arrivals benefit (this task is lost).
+        let sleep_hit = (0..n)
+            .find(|&i| dc.nodes[i].power_state == PowerState::Asleep && could_help(dc, i));
+        if let Some(i) = sleep_hit {
+            self.wakes += 1;
+            self.transition_j += self.cfg.wake_cost_j;
+            self.idle_since[i] = Some(self.now);
+            invalidate(i);
+            if self.cfg.wake_latency == 0 {
+                dc.nodes[i].power_state = PowerState::Active;
+                return true;
+            }
+            dc.nodes[i].power_state =
+                PowerState::Waking { ready_at: self.now + self.cfg.wake_latency };
+            self.maybe_non_active = true;
+            return false;
+        }
+        false
+    }
 }
 
 impl PostHook for DrsHook {
@@ -241,44 +320,28 @@ impl PostHook for DrsHook {
         task: &Task,
         invalidate: &mut dyn FnMut(usize),
     ) -> bool {
-        self.ensure_tracking(dc);
-        let n = dc.nodes.len();
-        // Demand pressure: the task failed on the awake fleet. First
-        // try to cancel a drain — the node never slept, so waking it is
-        // free and the framework's immediate retry can use it.
-        let drain_hit = (0..n).find(|&i| {
-            dc.nodes[i].power_state == PowerState::Draining && wake_could_help(dc, i, task)
-        });
-        if let Some(i) = drain_hit {
-            dc.nodes[i].power_state = PowerState::Active;
-            self.wake_cancels += 1;
-            self.idle_since[i] = Some(self.now);
-            invalidate(i);
-            return true;
-        }
-        // Otherwise boot the first sleeper that could host the task
-        // (lowest id — deterministic; power-aware selection is a noted
-        // ROADMAP follow-up). With zero wake latency the node is usable
-        // immediately; otherwise it becomes future capacity and only
-        // later arrivals benefit (this task is lost).
-        let sleep_hit = (0..n).find(|&i| {
-            dc.nodes[i].power_state == PowerState::Asleep && wake_could_help(dc, i, task)
-        });
-        if let Some(i) = sleep_hit {
-            self.wakes += 1;
-            self.transition_j += self.cfg.wake_cost_j;
-            self.idle_since[i] = Some(self.now);
-            invalidate(i);
-            if self.cfg.wake_latency == 0 {
-                dc.nodes[i].power_state = PowerState::Active;
-                return true;
-            }
-            dc.nodes[i].power_state =
-                PowerState::Waking { ready_at: self.now + self.cfg.wake_latency };
-            self.maybe_non_active = true;
-            return false;
-        }
-        false
+        self.wake_pass(dc, task, &mut |dc, i| wake_could_help(dc, i, task), invalidate)
+    }
+
+    /// The chain-aware wake path the framework's protocol actually
+    /// takes: candidate sleepers/drainers are vetted against the
+    /// scheduler's *real* filter chain (hypothetically `Active`), so a
+    /// wake is never spent on a node a static or custom filter — one
+    /// [`wake_could_help`]'s node-local mirror cannot see — would veto
+    /// on the retry.
+    fn post_fail_chained(
+        &mut self,
+        dc: &mut Datacenter,
+        task: &Task,
+        filters: &[Box<dyn FilterPlugin>],
+        invalidate: &mut dyn FnMut(usize),
+    ) -> bool {
+        self.wake_pass(
+            dc,
+            task,
+            &mut |dc, i| wake_could_help_chained(dc, i, task, filters),
+            invalidate,
+        )
     }
 
     fn post_place(
@@ -531,6 +594,72 @@ mod tests {
         );
         assert!(!h.post_fail(&mut dc, &nowhere, &mut inval));
         assert_eq!(dc.nodes[0].power_state, PowerState::Asleep);
+    }
+
+    #[test]
+    fn chained_wake_sees_static_chain_filters() {
+        use crate::sched::filter::default_filter_chain;
+        // The chain carries a *static* `labels` selector (profile
+        // policy, not a task constraint), which the node-local
+        // `wake_could_help` mirror is blind to: the old code woke
+        // node 0 only for the retry's chain to veto it — a futile
+        // wake. The chained path must skip straight to node 1.
+        let mut dc = ClusterSpec::tiny(2, 2, 0).build();
+        dc.nodes[1].labels.push(("zone".to_string(), "z1".to_string()));
+        let mut h = DrsHook::new(DrsConfig::with_timeout(1.0, 0));
+        let mut inval = |_n: usize| {};
+        for now in 1..=3 {
+            h.on_tick(&mut dc, now, &mut inval);
+        }
+        assert!(dc.nodes.iter().all(|n| n.power_state == PowerState::Asleep));
+        let mut chain = default_filter_chain();
+        chain.push(Box::new(LabelsFilter {
+            selector: vec![("zone".to_string(), "z1".to_string())],
+        }));
+        let t = Task::new(1, 1.0, 0.0, GpuDemand::Whole(1));
+        assert!(h.post_fail_chained(&mut dc, &t, &chain, &mut inval));
+        assert_eq!(dc.nodes[0].power_state, PowerState::Asleep, "futile wake of node 0");
+        assert_eq!(dc.nodes[1].power_state, PowerState::Active);
+        // The hypothetical-Active flip must not leak: node 0 is still
+        // asleep, and a task no chain admits wakes nothing.
+        let t2 = Task::new(2, 1.0, 0.0, GpuDemand::Whole(64));
+        assert!(!h.post_fail_chained(&mut dc, &t2, &chain, &mut inval));
+        assert_eq!(dc.nodes[0].power_state, PowerState::Asleep);
+    }
+
+    #[test]
+    fn place_protocol_skips_futile_wakes_end_to_end() {
+        use crate::sched::filter::default_filter_chain;
+        // Through the full protocol: a scheduler whose chain pins
+        // placements to zone=z1 plus a DRS hook. Once the fleet
+        // sleeps, a failing task must wake (and land on) the z1 node
+        // — never the chain-vetoed node 0.
+        let mut dc = ClusterSpec::tiny(2, 2, 0).build();
+        dc.nodes[1].labels.push(("zone".to_string(), "z1".to_string()));
+        dc.note_fleet_changed();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(PolicyKind::FirstFit);
+        let mut chain = default_filter_chain();
+        chain.push(Box::new(LabelsFilter {
+            selector: vec![("zone".to_string(), "z1".to_string())],
+        }));
+        s.set_filters(chain);
+        s.add_post_hook(Box::new(DrsHook::new(DrsConfig::with_timeout(1.0, 0))));
+        // Tick the fleet to sleep with protocol entries that place
+        // nothing (the demand exceeds any node, so no wake either).
+        for i in 0..4 {
+            let big = Task::new(i, 1.0, 0.0, GpuDemand::Whole(64));
+            assert!(s.place(&mut dc, &w, &big).is_none());
+        }
+        assert!(dc.nodes.iter().all(|n| n.power_state == PowerState::Asleep));
+        let t = Task::new(9, 1.0, 0.0, GpuDemand::Whole(1));
+        let d = s.place(&mut dc, &w, &t).expect("zero-latency wake retries onto z1");
+        assert_eq!(d.node, 1);
+        assert_eq!(
+            dc.nodes[0].power_state,
+            PowerState::Asleep,
+            "woke a node the chain's static selector vetoes"
+        );
     }
 
     #[test]

@@ -35,6 +35,18 @@
 //!    [`crate::sched::drs`]). The [`Scheduler::place`] /
 //!    [`Scheduler::release`] protocol drives them, so simulation loops
 //!    can never silently skip a hook.
+//!
+//! **Scale-out fast path** (`docs/scheduler.md`): raw scores from
+//! cacheable plugins are cached per (plugin, demand signature, node
+//! generation) and reused bit-for-bit across decisions; profiles can
+//! cap the feasibility sweep with a k8s
+//! `percentageOfNodesToScore`-style `sample(<pct>)` knob backed by the
+//! [`Datacenter`] static candidate indexes; and `shards(<n>)` scores
+//! cache misses on scoped threads. At `sample(100)` (the default)
+//! every fast-path combination is bit-identical to the naive loop
+//! (`rust/tests/scale_equivalence.rs`).
+
+use std::collections::HashMap;
 
 use crate::cluster::node::{Node, Placement, ResourceView, EPS};
 use crate::cluster::Datacenter;
@@ -84,9 +96,90 @@ impl ClusterCaps {
 /// deduplicated candidate `placements` (non-empty, all legal). Raw
 /// scores are plugin-local scale, **higher is better**; the framework
 /// normalizes before combining.
-pub trait ScorePlugin: Send {
+///
+/// `Sync` because the sharded scoring path calls `score` from scoped
+/// threads; plugins with internal caches guard them with a `Mutex`
+/// (see [`crate::sched::policies::FgdPlugin`]).
+pub trait ScorePlugin: Send + Sync {
     fn name(&self) -> &'static str;
+
+    /// Whether `score` is a pure function of (node state as stamped by
+    /// the per-node generation counter, the task's demand signature,
+    /// the revision-keyed context). True for every built-in except
+    /// `random`, whose score is a fresh RNG draw. Cacheable plugins
+    /// participate in the framework's raw-score cache and may be
+    /// scored on shard threads; a non-cacheable plugin is always
+    /// scored sequentially in feasible order, so its internal state
+    /// (e.g. an RNG stream) advances exactly as in the naive loop.
+    fn cacheable(&self) -> bool {
+        true
+    }
+
     fn score(&self, ctx: &SchedCtx, node: &Node, task: &Task, placements: &[Placement]) -> f64;
+}
+
+/// Bit-exact demand signature: everything a cacheable plugin's raw
+/// score can depend on besides node state and the revision-keyed
+/// context. Two tasks with equal signatures are interchangeable to
+/// every cacheable score plugin (trace tasks repeat a small set of
+/// class shapes, so signatures recur heavily).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+struct TaskSig {
+    cpu: u64,
+    mem: u64,
+    gpu_kind: u8,
+    gpu_val: u64,
+}
+
+impl TaskSig {
+    fn of(task: &Task) -> TaskSig {
+        let (gpu_kind, gpu_val) = match task.gpu {
+            GpuDemand::Zero => (0u8, 0u64),
+            GpuDemand::Frac(f) => (1, f.to_bits()),
+            GpuDemand::Whole(k) => (2, k as u64),
+            GpuDemand::Mig(p) => (3, p.index() as u64),
+        };
+        TaskSig { cpu: task.cpu.to_bits(), mem: task.mem.to_bits(), gpu_kind, gpu_val }
+    }
+}
+
+/// Per-scheduler raw-score cache: for each cacheable plugin, demand
+/// signature → per-node `(generation, raw score)` entries. A hit
+/// (entry generation == current node generation) skips the plugin
+/// call; misses are recomputed and written back. The whole cache is
+/// epoch-scoped on `(workload revision, fleet revision)`, so a
+/// workload swap or structural fleet change can never serve a stale
+/// score. Since raw scores are *reused bit-for-bit* (never
+/// recombined differently), cache on ≡ cache off exactly
+/// (`tests/scale_equivalence.rs`).
+#[derive(Default)]
+struct ScoreCache {
+    /// `(workload revision, fleet revision)`; `(0, 0)` = never primed
+    /// (revision stamps start at 1).
+    epoch: (u64, u64),
+    /// One map per score plugin, in plugin order.
+    plugins: Vec<HashMap<TaskSig, Vec<(u64, f64)>>>,
+}
+
+impl ScoreCache {
+    /// Clear everything when the epoch (or plugin layout) moved.
+    fn ensure_epoch(&mut self, epoch: (u64, u64), n_plugins: usize) {
+        if self.epoch != epoch || self.plugins.len() != n_plugins {
+            self.epoch = epoch;
+            self.plugins.clear();
+            self.plugins.resize_with(n_plugins, HashMap::new);
+        }
+    }
+}
+
+/// Per-decision scoring-phase tallies, flushed to the metrics registry
+/// once per decision (`MetricsRegistry::inc` is not free — never call
+/// it per node).
+#[derive(Default)]
+struct ScoreStats {
+    hits: u64,
+    misses: u64,
+    shard_batches: u64,
 }
 
 /// A post-decision extension point (the k8s-preemption analog): hooks
@@ -126,6 +219,24 @@ pub trait PostHook: Send {
         _invalidate: &mut dyn FnMut(usize),
     ) -> bool {
         false
+    }
+
+    /// [`PostHook::post_fail`] with the scheduler's filter chain in
+    /// hand, so a hook can judge *hypothetical* feasibility before
+    /// spending real resources — the DRS manager evaluates whether a
+    /// candidate wake target would pass the full chain once `Active`
+    /// instead of burning `wake_j` on a node some filter then vetoes
+    /// (see [`crate::sched::drs`]). The framework always calls this
+    /// variant; the default forwards to `post_fail`, so hooks override
+    /// exactly one of the two.
+    fn post_fail_chained(
+        &mut self,
+        dc: &mut Datacenter,
+        task: &Task,
+        _filters: &[Box<dyn FilterPlugin>],
+        invalidate: &mut dyn FnMut(usize),
+    ) -> bool {
+        self.post_fail(dc, task, invalidate)
     }
 
     /// After `node_id`'s allocation changed (commit or release): e.g.
@@ -204,8 +315,30 @@ pub struct Scheduler {
     /// (identity stamps are immune to allocator address reuse, unlike
     /// the raw-pointer key this replaces).
     prepared_cache: Option<(u64, frag::PreparedWorkload)>,
-    /// Cached cluster caps (node shapes are static).
-    caps_cache: Option<(usize, ClusterCaps)>,
+    /// Cached cluster caps, keyed on [`Datacenter::revision`] (a
+    /// node-count key served stale caps to every plugin whenever a
+    /// fleet change preserved the count).
+    caps_cache: Option<(u64, ClusterCaps)>,
+    /// Raw-score cache (epoch- and generation-keyed; on by default —
+    /// cache on ≡ cache off bit-for-bit, see [`ScoreCache`]).
+    score_cache: Option<ScoreCache>,
+    /// k8s `percentageOfNodesToScore` analog, clamped to 1..=100;
+    /// 100 (the default) runs the exact full-sweep loop.
+    sample_pct: u32,
+    /// Rotating start offset of the sampled sweep (k8s
+    /// `nextStartNodeIndex`), advanced by nodes scanned per decision
+    /// so successive decisions sample different fleet slices.
+    sample_offset: usize,
+    /// Scoring shards for cacheable plugins (scoped threads); 1 =
+    /// sequential. Pure plugins score identically on any thread, so
+    /// any shard count is bit-identical to sequential.
+    score_shards: usize,
+    /// Scratch: per-decision memo of `FilterPlugin::constrains(task)`
+    /// (the attribution rescan otherwise re-evaluates it node × filter
+    /// times).
+    filter_constrains: Vec<bool>,
+    /// Scratch: cache-miss indices (into `feasible`) during scoring.
+    miss_scratch: Vec<usize>,
     /// The scheduler-event clock: one tick per `place`/`release`
     /// protocol entry. The DRS subsystem's time unit (`docs/power.md`);
     /// identical semantics in both simulation loops.
@@ -245,6 +378,12 @@ impl Scheduler {
             node_weights: Vec::new(),
             prepared_cache: None,
             caps_cache: None,
+            score_cache: Some(ScoreCache::default()),
+            sample_pct: 100,
+            sample_offset: 0,
+            score_shards: 1,
+            filter_constrains: Vec::new(),
+            miss_scratch: Vec::new(),
             events: 0,
             tie_rng: Rng::new(0xC0FFEE),
             deterministic_ties: false,
@@ -262,6 +401,33 @@ impl Scheduler {
     pub fn set_filters(&mut self, filters: Vec<Box<dyn FilterPlugin>>) {
         assert!(!filters.is_empty(), "filter chain must be non-empty");
         self.filters = filters;
+    }
+
+    /// Toggle the raw-score cache (on by default). The cached and
+    /// uncached paths are bit-identical ([`ScoreCache`]); off exists
+    /// for ablation and as the bench-scale baseline.
+    pub fn set_score_cache(&mut self, on: bool) {
+        self.score_cache = on.then(ScoreCache::default);
+    }
+
+    /// Set the candidate-sampling percentage (the k8s
+    /// `percentageOfNodesToScore` analog; profile DSL `sample(<pct>)`).
+    /// Clamped to 1..=100; at 100 the scheduler runs the exact naive
+    /// full sweep. Below 100 the feasibility sweep walks the smallest
+    /// applicable static candidate index (nodes per model / lattice /
+    /// label) from a rotating offset and stops early once
+    /// `max(100, ⌈pct·|universe|/100⌉)` feasible nodes are found —
+    /// an approximation, by design (never bit-identical below 100).
+    pub fn set_sample_pct(&mut self, pct: u32) {
+        self.sample_pct = pct.clamp(1, 100);
+    }
+
+    /// Set the scoring shard count (profile DSL `shards(<n>)`; 1 =
+    /// sequential). Shards only apply to cacheable (pure) plugins and
+    /// only above a minimum batch size, and produce bit-identical
+    /// scores at any count.
+    pub fn set_score_shards(&mut self, shards: usize) {
+        self.score_shards = shards.max(1);
     }
 
     /// Tasks that failed scheduling because of a declarative constraint:
@@ -439,18 +605,26 @@ impl Scheduler {
         self.feasible.clear();
         self.placements.clear();
         self.last_reject_constrained = false;
+        // Memoize `constrains(task)` once per decision: the attribution
+        // rescan in `filter_node` otherwise re-evaluates it per
+        // node × filter, turning the filter phase O(nodes × filters²)
+        // for constrained tasks.
+        self.filter_constrains.clear();
+        for f in &self.filters {
+            self.filter_constrains.push(f.constrains(task));
+        }
         let fctx = FilterCtx { dc };
         // PreFilter pass: cheap cluster-wide infeasibility checks
         // (aggregate capacity, candidate counts) — a hopeless task
         // skips the O(nodes) loop entirely. Conservative by contract,
         // so the outcome (None) and the RNG stream are unchanged.
-        for f in &self.filters {
+        for (fi, f) in self.filters.iter().enumerate() {
             if !f.pre_filter(&fctx, task) {
                 // Per-cause attribution: only a plugin enforcing one of
                 // *this task's* declarative constraints counts (a
                 // legacy model pin or a static `labels:` selector
                 // failing is a plain resource-style failure).
-                self.last_reject_constrained = f.constrains(task);
+                self.last_reject_constrained = self.filter_constrains[fi];
                 self.obs.registry.inc("sched_prefilter_rejections", 1);
                 if let Some(c) = &mut cap {
                     c.prefilter_veto = Some(f.name());
@@ -463,39 +637,71 @@ impl Scheduler {
                 return None;
             }
         }
-        'nodes: for node in &dc.nodes {
-            for (fi, f) in self.filters.iter().enumerate() {
-                if !f.feasible(&fctx, node, task) {
-                    // First-rejector attribution for the trace: filters
-                    // run in chain order, the first `false` owns the
-                    // veto (later filters never see the node).
-                    if let Some(c) = &mut cap {
-                        c.filter_vetoes[fi] += 1;
-                    }
-                    // A constraint-attributed rejection means the node
-                    // had the resources: every filter *not* enforcing
-                    // one of this task's constraints accepts it
-                    // (earlier ones already ran; later ones are checked
-                    // here, so the attribution is exact regardless of
-                    // chain order).
-                    if f.constrains(task)
-                        && !self.last_reject_constrained
-                        && self.filters[fi + 1..]
-                            .iter()
-                            .filter(|g| !g.constrains(task))
-                            .all(|g| g.feasible(&fctx, node, task))
-                    {
-                        self.last_reject_constrained = true;
-                    }
-                    continue 'nodes;
+        if self.sample_pct >= 100 {
+            // Full sweep: the exact naive loop (the bit-identity
+            // baseline `tests/scale_equivalence.rs` pins).
+            for node in &dc.nodes {
+                if !filter_node(
+                    &self.filters,
+                    &self.filter_constrains,
+                    &fctx,
+                    node,
+                    task,
+                    &mut self.last_reject_constrained,
+                    &mut cap,
+                ) {
+                    continue;
                 }
+                let ps = dedup_placements(node, task);
+                if ps.is_empty() {
+                    continue;
+                }
+                self.feasible.push(node.id);
+                self.placements.push(ps);
             }
-            let ps = dedup_placements(node, task);
-            if ps.is_empty() {
-                continue;
+        } else {
+            // Sampled sweep (k8s `percentageOfNodesToScore`): walk the
+            // smallest applicable static candidate index from a
+            // rotating offset and stop once enough feasible nodes are
+            // found. Approximate by design — the shortlist assumes the
+            // chain enforces the constraint the index encodes (true
+            // for the default chain).
+            let universe = smallest_static_universe(dc, task);
+            let u_len = universe.map_or(n, <[u32]>::len);
+            if u_len > 0 {
+                let want = (self.sample_pct as usize * u_len + 99) / 100;
+                let target = want.max(SAMPLE_MIN_FEASIBLE).min(u_len);
+                let start = self.sample_offset % u_len;
+                let mut scanned = 0;
+                while scanned < u_len && self.feasible.len() < target {
+                    let mut pos = start + scanned;
+                    if pos >= u_len {
+                        pos -= u_len;
+                    }
+                    scanned += 1;
+                    let node_id = universe.map_or(pos, |u| u[pos] as usize);
+                    let node = &dc.nodes[node_id];
+                    if !filter_node(
+                        &self.filters,
+                        &self.filter_constrains,
+                        &fctx,
+                        node,
+                        task,
+                        &mut self.last_reject_constrained,
+                        &mut cap,
+                    ) {
+                        continue;
+                    }
+                    let ps = dedup_placements(node, task);
+                    if ps.is_empty() {
+                        continue;
+                    }
+                    self.feasible.push(node.id);
+                    self.placements.push(ps);
+                }
+                self.sample_offset = (start + scanned) % u_len;
+                self.obs.registry.inc("sched_sampled_sweeps", 1);
             }
-            self.feasible.push(node.id);
-            self.placements.push(ps);
         }
         if let Some(ns) = t_filter.stop_ns() {
             self.obs.registry.observe_ns("phase_filter_ns", ns);
@@ -509,13 +715,20 @@ impl Scheduler {
         }
         self.last_reject_constrained = false;
         // Refresh the per-workload / per-cluster caches when needed
-        // (revision-keyed; see `prepared_cache`).
+        // (revision-keyed; see `prepared_cache`). The caps cache keys
+        // on the fleet revision — a node-count key served stale caps
+        // whenever a fleet change preserved the count (same-size fleet
+        // swap, lattice repartition resizing per-node capacity).
         let rev = workload.revision();
         if self.prepared_cache.as_ref().map(|(r, _)| *r != rev).unwrap_or(true) {
             self.prepared_cache = Some((rev, frag::PreparedWorkload::new(workload)));
         }
-        if self.caps_cache.map(|(l, _)| l != n).unwrap_or(true) {
-            self.caps_cache = Some((n, ClusterCaps::of(dc)));
+        let fleet_rev = dc.revision();
+        if self.caps_cache.map(|(r, _)| r != fleet_rev).unwrap_or(true) {
+            self.caps_cache = Some((fleet_rev, ClusterCaps::of(dc)));
+        }
+        if let Some(sc) = &mut self.score_cache {
+            sc.ensure_epoch((rev, fleet_rev), self.plugins.len());
         }
         let ctx = SchedCtx {
             dc,
@@ -539,14 +752,33 @@ impl Scheduler {
         self.combined.clear();
         self.combined.resize(k, 0.0);
         let per_node_mod = self.modulator.as_ref().is_some_and(|m| m.per_node());
+        // Raw scores come from `score_one_plugin`: cache hits reuse
+        // the stored f64 bit-for-bit, misses call the plugin (on shard
+        // threads when enabled), so every downstream step (normalize,
+        // combine, tie-break) sees exactly the naive loop's values.
+        let sig = TaskSig::of(task);
+        let shards = self.score_shards;
+        let mut stats = ScoreStats::default();
+        let score_cache = &mut self.score_cache;
         if !per_node_mod {
-            for (plugin, &weight) in self.plugins.iter().zip(&self.eff_weights) {
-                self.raw.clear();
-                for (idx, &node_id) in self.feasible.iter().enumerate() {
-                    let s = plugin.score(&ctx, &dc.nodes[node_id], task, &self.placements[idx]);
-                    debug_assert!(s.is_finite(), "{} returned {s}", plugin.name());
-                    self.raw.push(s);
-                }
+            for (pi, (plugin, &weight)) in self.plugins.iter().zip(&self.eff_weights).enumerate() {
+                let cache = score_cache
+                    .as_mut()
+                    .filter(|_| plugin.cacheable())
+                    .map(|sc| &mut sc.plugins[pi]);
+                score_one_plugin(
+                    plugin.as_ref(),
+                    &ctx,
+                    task,
+                    sig,
+                    &self.feasible,
+                    &self.placements,
+                    cache,
+                    if plugin.cacheable() { shards } else { 1 },
+                    &mut self.raw,
+                    &mut self.miss_scratch,
+                    &mut stats,
+                );
                 normalize_scores(&mut self.raw);
                 if let Some(c) = &mut cap {
                     c.norm_rows.push(self.raw.clone());
@@ -560,13 +792,24 @@ impl Scheduler {
             // still per plugin across nodes, so keep every normalized
             // row and combine with a node-specific weight vector.
             self.norm_rows.clear();
-            for plugin in &self.plugins {
-                self.raw.clear();
-                for (idx, &node_id) in self.feasible.iter().enumerate() {
-                    let s = plugin.score(&ctx, &dc.nodes[node_id], task, &self.placements[idx]);
-                    debug_assert!(s.is_finite(), "{} returned {s}", plugin.name());
-                    self.raw.push(s);
-                }
+            for (pi, plugin) in self.plugins.iter().enumerate() {
+                let cache = score_cache
+                    .as_mut()
+                    .filter(|_| plugin.cacheable())
+                    .map(|sc| &mut sc.plugins[pi]);
+                score_one_plugin(
+                    plugin.as_ref(),
+                    &ctx,
+                    task,
+                    sig,
+                    &self.feasible,
+                    &self.placements,
+                    cache,
+                    if plugin.cacheable() { shards } else { 1 },
+                    &mut self.raw,
+                    &mut self.miss_scratch,
+                    &mut stats,
+                );
                 normalize_scores(&mut self.raw);
                 if let Some(c) = &mut cap {
                     c.norm_rows.push(self.raw.clone());
@@ -589,6 +832,17 @@ impl Scheduler {
                 }
                 self.combined[i] = acc;
             }
+        }
+        // Flush the per-decision scoring tallies in one shot each (the
+        // registry's string-keyed `inc` is too costly per node).
+        if stats.hits > 0 {
+            self.obs.registry.inc("score_cache_hits", stats.hits);
+        }
+        if stats.misses > 0 {
+            self.obs.registry.inc("score_cache_misses", stats.misses);
+        }
+        if stats.shard_batches > 0 {
+            self.obs.registry.inc("score_shard_batches", stats.shard_batches);
         }
         if let Some(ns) = t_score.stop_ns() {
             self.obs.registry.observe_ns("phase_score_ns", ns);
@@ -710,10 +964,11 @@ impl Scheduler {
             Some(d) => Some(d),
             None => {
                 let t = PhaseTimer::start(prof);
+                let filters = &self.filters;
                 let mut invalidate = bump_generation(&mut self.generations);
                 let mut retry = false;
                 for h in &mut self.hooks {
-                    if h.post_fail(dc, task, &mut invalidate) {
+                    if h.post_fail_chained(dc, task, filters, &mut invalidate) {
                         retry = true;
                         break;
                     }
@@ -878,6 +1133,216 @@ fn hook_counter_deltas(
         }
     }
     out
+}
+
+/// k8s `minFeasibleNodesToFind`: the sampled sweep never settles for
+/// fewer feasible candidates than this (so small clusters always get
+/// the full sweep regardless of the percentage).
+const SAMPLE_MIN_FEASIBLE: usize = 100;
+
+/// Minimum per-batch work before the sharded path spawns threads —
+/// below this, thread setup dwarfs the scoring it parallelizes. Scores
+/// are identical either way (pure plugins), so the cutover is purely a
+/// latency knob.
+const SHARD_MIN_WORK: usize = 64;
+
+/// One node through the filter chain (conjunction, first-veto-wins),
+/// shared by the full and sampled sweeps. Counts the veto for the
+/// trace capture and settles constraint attribution: a rejection is
+/// constraint-attributed when the vetoing filter enforces one of this
+/// task's declarative constraints *and* every other filter accepts the
+/// node (earlier filters already ran; later non-constraint filters are
+/// rescanned here). `constrains` is the per-decision memo of
+/// `FilterPlugin::constrains(task)`, and the rescan short-circuits for
+/// the rest of the decision once attribution is settled.
+fn filter_node(
+    filters: &[Box<dyn FilterPlugin>],
+    constrains: &[bool],
+    fctx: &FilterCtx,
+    node: &Node,
+    task: &Task,
+    last_reject_constrained: &mut bool,
+    cap: &mut Option<TraceCapture>,
+) -> bool {
+    for (fi, f) in filters.iter().enumerate() {
+        if !f.feasible(fctx, node, task) {
+            // First-rejector attribution for the trace: filters run in
+            // chain order, the first `false` owns the veto (later
+            // filters never see the node).
+            if let Some(c) = cap {
+                c.filter_vetoes[fi] += 1;
+            }
+            if !*last_reject_constrained
+                && constrains[fi]
+                && filters[fi + 1..]
+                    .iter()
+                    .zip(&constrains[fi + 1..])
+                    .filter(|(_, &c)| !c)
+                    .all(|(g, _)| g.feasible(fctx, node, task))
+            {
+                *last_reject_constrained = true;
+            }
+            return false;
+        }
+    }
+    true
+}
+
+/// The smallest static candidate index applicable to `task` (the
+/// sampled sweep's universe): a legacy model pin or single-model
+/// constraint set shortlists to that model's nodes, a MIG demand to
+/// its lattice's nodes, and each node-selector entry to its label's
+/// nodes. `None` = no static index applies; sweep the whole fleet.
+fn smallest_static_universe<'a>(dc: &'a Datacenter, task: &Task) -> Option<&'a [u32]> {
+    let mut best: Option<&'a [u32]> = None;
+    let mut consider = |list: &'a [u32]| {
+        if best.map_or(true, |b| list.len() < b.len()) {
+            best = Some(list);
+        }
+    };
+    if let Some(m) = task.gpu_model {
+        consider(dc.nodes_of_model(m));
+    }
+    if let GpuDemand::Mig(p) = task.gpu {
+        consider(dc.nodes_of_lattice(p.lattice()));
+    }
+    if let Some(c) = task.constraints.as_deref() {
+        if let [m] = c.gpu_models[..] {
+            consider(dc.nodes_of_model(m));
+        }
+        for (k, v) in &c.node_selector {
+            consider(dc.nodes_of_label(k, v));
+        }
+    }
+    best
+}
+
+/// Fill `raw` with one plugin's scores over the feasible set. Cache
+/// hits reuse the stored raw score bit-for-bit; misses call the plugin
+/// — sequentially, or on scoped shard threads when `shards > 1` and
+/// the batch is worth it — and write back `(generation, score)`.
+/// `cache` is `None` for non-cacheable plugins and when the cache is
+/// disabled (then `shards` must be 1 for non-cacheable plugins so
+/// their internal state advances in feasible order, exactly as the
+/// naive loop).
+#[allow(clippy::too_many_arguments)]
+fn score_one_plugin(
+    plugin: &dyn ScorePlugin,
+    ctx: &SchedCtx,
+    task: &Task,
+    sig: TaskSig,
+    feasible: &[usize],
+    placements: &[Vec<Placement>],
+    cache: Option<&mut HashMap<TaskSig, Vec<(u64, f64)>>>,
+    shards: usize,
+    raw: &mut Vec<f64>,
+    miss_scratch: &mut Vec<usize>,
+    stats: &mut ScoreStats,
+) {
+    raw.clear();
+    let Some(map) = cache else {
+        if shards <= 1 || feasible.len() < SHARD_MIN_WORK {
+            for (idx, &node_id) in feasible.iter().enumerate() {
+                let s = plugin.score(ctx, &ctx.dc.nodes[node_id], task, &placements[idx]);
+                debug_assert!(s.is_finite(), "{} returned {s}", plugin.name());
+                raw.push(s);
+            }
+        } else {
+            raw.resize(feasible.len(), 0.0);
+            miss_scratch.clear();
+            miss_scratch.extend(0..feasible.len());
+            score_targets_sharded(plugin, ctx, task, feasible, placements, miss_scratch, shards, raw);
+            stats.shard_batches += 1;
+        }
+        return;
+    };
+    let n_nodes = ctx.dc.nodes.len();
+    let entries = map
+        .entry(sig)
+        .or_insert_with(|| vec![(u64::MAX, 0.0); n_nodes]);
+    if entries.len() != n_nodes {
+        entries.clear();
+        entries.resize(n_nodes, (u64::MAX, 0.0));
+    }
+    raw.resize(feasible.len(), 0.0);
+    // Hit pass: an entry is valid when its stored generation matches
+    // the node's current one (u64::MAX marks "never scored" — node
+    // generations start at 0 and only increment, so it never matches).
+    miss_scratch.clear();
+    for (idx, &node_id) in feasible.iter().enumerate() {
+        let (gen, s) = entries[node_id];
+        if gen == ctx.generations[node_id] {
+            raw[idx] = s;
+        } else {
+            miss_scratch.push(idx);
+        }
+    }
+    stats.hits += (feasible.len() - miss_scratch.len()) as u64;
+    stats.misses += miss_scratch.len() as u64;
+    if miss_scratch.is_empty() {
+        return;
+    }
+    if shards <= 1 || miss_scratch.len() < SHARD_MIN_WORK {
+        for &idx in miss_scratch.iter() {
+            let node_id = feasible[idx];
+            let s = plugin.score(ctx, &ctx.dc.nodes[node_id], task, &placements[idx]);
+            debug_assert!(s.is_finite(), "{} returned {s}", plugin.name());
+            raw[idx] = s;
+        }
+    } else {
+        score_targets_sharded(plugin, ctx, task, feasible, placements, miss_scratch, shards, raw);
+        stats.shard_batches += 1;
+    }
+    for &idx in miss_scratch.iter() {
+        let node_id = feasible[idx];
+        entries[node_id] = (ctx.generations[node_id], raw[idx]);
+    }
+}
+
+/// Score `targets` (indices into `feasible`) on up to `shards` scoped
+/// threads and write the results into `raw[target]`. Each thread owns
+/// a contiguous chunk; the join order is the spawn order, so the
+/// merge is deterministic — and since only cacheable (pure) plugins
+/// reach here, every score is bit-identical to the sequential path.
+#[allow(clippy::too_many_arguments)]
+fn score_targets_sharded(
+    plugin: &dyn ScorePlugin,
+    ctx: &SchedCtx,
+    task: &Task,
+    feasible: &[usize],
+    placements: &[Vec<Placement>],
+    targets: &[usize],
+    shards: usize,
+    raw: &mut [f64],
+) {
+    let chunk = (targets.len() + shards - 1) / shards;
+    let mut computed: Vec<Vec<f64>> = Vec::with_capacity(shards);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = targets
+            .chunks(chunk)
+            .map(|ch| {
+                scope.spawn(move || {
+                    ch.iter()
+                        .map(|&idx| {
+                            let node_id = feasible[idx];
+                            let s =
+                                plugin.score(ctx, &ctx.dc.nodes[node_id], task, &placements[idx]);
+                            debug_assert!(s.is_finite(), "{} returned {s}", plugin.name());
+                            s
+                        })
+                        .collect::<Vec<f64>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            computed.push(h.join().expect("score shard panicked"));
+        }
+    });
+    for (ch, vals) in targets.chunks(chunk).zip(&computed) {
+        for (&idx, &s) in ch.iter().zip(vals) {
+            raw[idx] = s;
+        }
+    }
 }
 
 /// k8s NormalizeScore: min-max map to [0, 100], **rounded to integers**
@@ -1249,6 +1714,90 @@ mod tests {
         {
             assert_eq!(m.histogram(key).unwrap().count(), 1, "{key} not observed");
         }
+    }
+
+    #[test]
+    fn caps_cache_keys_on_fleet_revision_not_node_count() {
+        let dc_a = ClusterSpec::tiny(2, 4, 0).build();
+        let dc_b = ClusterSpec::tiny(2, 8, 0).build();
+        assert_eq!(dc_a.nodes.len(), dc_b.nodes.len());
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(crate::sched::PolicyKind::FirstFit);
+        let t = Task::new(0, 1.0, 0.0, GpuDemand::Whole(1));
+        assert!(s.schedule(&dc_a, &w, &t).is_some());
+        assert_eq!(s.caps_cache.unwrap().1.max_gpus, 4.0);
+        // Same node count, different shapes: the old `len`-keyed cache
+        // served dc_a's caps here (the stale-caps regression).
+        assert!(s.schedule(&dc_b, &w, &t).is_some());
+        assert_eq!(s.caps_cache.unwrap().1.max_gpus, 8.0);
+    }
+
+    #[test]
+    fn score_cache_reuses_unchanged_nodes() {
+        let mut dc = dc2();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(crate::sched::PolicyKind::Fgd);
+        // First decision: both nodes are first-sight misses.
+        let t0 = Task::new(0, 2.0, 512.0, GpuDemand::Whole(1));
+        assert!(s.place(&mut dc, &w, &t0).is_some());
+        let m0 = s.metrics();
+        assert_eq!(m0.counter("score_cache_hits"), 0);
+        assert_eq!(m0.counter("score_cache_misses"), 2);
+        // Identical demand: only the node the first task landed on
+        // (generation bumped) re-scores; the untouched node hits.
+        let t1 = Task::new(1, 2.0, 512.0, GpuDemand::Whole(1));
+        assert!(s.place(&mut dc, &w, &t1).is_some());
+        let m1 = s.metrics();
+        assert_eq!(m1.counter("score_cache_hits"), 1);
+        assert_eq!(m1.counter("score_cache_misses"), 3);
+    }
+
+    #[test]
+    fn score_cache_invalidates_on_fleet_swap() {
+        // Two same-size fleets: the epoch (workload rev, fleet rev)
+        // must split them even though node ids and count coincide.
+        let dc_a = ClusterSpec::tiny(2, 4, 0).build();
+        let dc_b = ClusterSpec::tiny(2, 8, 0).build();
+        let w = Workload::default();
+        let t = Task::new(0, 1.0, 0.0, GpuDemand::Whole(1));
+        let mut s = Scheduler::from_policy(crate::sched::PolicyKind::Fgd);
+        assert!(s.schedule(&dc_a, &w, &t).is_some());
+        assert!(s.schedule(&dc_b, &w, &t).is_some());
+        // All four decisions' node scores were misses (no cross-fleet
+        // reuse despite identical generations).
+        assert_eq!(s.metrics().counter("score_cache_hits"), 0);
+        assert_eq!(s.metrics().counter("score_cache_misses"), 4);
+    }
+
+    #[test]
+    fn sampled_sweep_places_and_counts() {
+        let mut dc = ClusterSpec::tiny(8, 4, 0).build();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(crate::sched::PolicyKind::FirstFit);
+        s.set_sample_pct(25);
+        let t = Task::new(0, 1.0, 0.0, GpuDemand::Whole(1));
+        assert!(s.place(&mut dc, &w, &t).is_some());
+        assert_eq!(s.metrics().counter("sched_sampled_sweeps"), 1);
+    }
+
+    #[test]
+    fn sharded_scoring_matches_sequential() {
+        // 100 feasible nodes clears SHARD_MIN_WORK, so shards=4 really
+        // spawns scoped threads; pure plugins make it bit-identical.
+        let w = Workload::default();
+        let t = Task::new(0, 1.0, 0.0, GpuDemand::Whole(1));
+        let run = |shards: usize, cache: bool| {
+            let dc = ClusterSpec::tiny(100, 2, 0).build();
+            let mut s =
+                Scheduler::from_policy(crate::sched::PolicyKind::PwrFgd { alpha: 0.5 });
+            s.set_score_shards(shards);
+            s.set_score_cache(cache);
+            s.schedule(&dc, &w, &t).expect("fits").node
+        };
+        let naive = run(1, false);
+        assert_eq!(naive, run(4, false));
+        assert_eq!(naive, run(4, true));
+        assert_eq!(naive, run(1, true));
     }
 
     #[test]

@@ -12,26 +12,30 @@
 //! native scorer's hot loop O(placements · M) instead of
 //! O((placements+1) · M).
 
-use std::cell::RefCell;
+use std::sync::Mutex;
 
 use crate::cluster::node::{Node, Placement};
 use crate::frag;
 use crate::sched::framework::{SchedCtx, ScorePlugin};
 use crate::tasks::Task;
 
-/// The FGD score plugin with its generation-keyed `F_n(M)` cache.
+/// The FGD score plugin with its generation-keyed `F_n(M)` cache. The
+/// cache sits behind a `Mutex` (`ScorePlugin: Sync` since the sharded
+/// scoring path): shard threads serialize on it briefly per scored
+/// node, and the generation key makes the result identical whichever
+/// thread computes it.
 pub struct FgdPlugin {
-    cache: RefCell<Vec<(u64, f64)>>,
+    cache: Mutex<Vec<(u64, f64)>>,
 }
 
 impl FgdPlugin {
     pub fn new() -> FgdPlugin {
-        FgdPlugin { cache: RefCell::new(Vec::new()) }
+        FgdPlugin { cache: Mutex::new(Vec::new()) }
     }
 
     /// `F_n(M)` of the node's current state, cached by generation.
     fn f_before(&self, ctx: &SchedCtx, node: &Node) -> f64 {
-        let mut cache = self.cache.borrow_mut();
+        let mut cache = self.cache.lock().expect("fgd cache lock poisoned");
         if cache.len() != ctx.dc.nodes.len() {
             cache.clear();
             cache.resize(ctx.dc.nodes.len(), (u64::MAX, 0.0));

@@ -3,7 +3,7 @@
 //! used to sanity-check the harness (any reasonable policy must beat
 //! Random on both EOPC and GRAR).
 
-use std::cell::RefCell;
+use std::sync::Mutex;
 
 use crate::cluster::node::{Node, Placement};
 use crate::sched::framework::{SchedCtx, ScorePlugin};
@@ -23,14 +23,18 @@ impl ScorePlugin for FirstFitPlugin {
     }
 }
 
-/// Picks a uniformly random feasible node (seeded, reproducible).
+/// Picks a uniformly random feasible node (seeded, reproducible). The
+/// RNG sits behind a `Mutex` only because `ScorePlugin: Sync`; the
+/// framework never scores `random` off-thread or from the score cache
+/// (see [`ScorePlugin::cacheable`]), so the stream always advances in
+/// feasible order and the lock is uncontended.
 pub struct RandomPlugin {
-    rng: RefCell<Rng>,
+    rng: Mutex<Rng>,
 }
 
 impl RandomPlugin {
     pub fn new(seed: u64) -> RandomPlugin {
-        RandomPlugin { rng: RefCell::new(Rng::new(seed)) }
+        RandomPlugin { rng: Mutex::new(Rng::new(seed)) }
     }
 }
 
@@ -39,8 +43,14 @@ impl ScorePlugin for RandomPlugin {
         "Random"
     }
 
+    /// Impure by design: every call is a fresh draw, so a cached score
+    /// would freeze the "random" choice per (node, demand) pair.
+    fn cacheable(&self) -> bool {
+        false
+    }
+
     fn score(&self, _ctx: &SchedCtx, _node: &Node, _task: &Task, _ps: &[Placement]) -> f64 {
-        self.rng.borrow_mut().f64()
+        self.rng.lock().expect("rng lock poisoned").f64()
     }
 }
 

@@ -38,9 +38,19 @@
 //!           | 'mod(' key (':' num)* ')'            -- optional
 //!           | 'hook(' key (':' num)* ')'           -- repeatable
 //!           | 'filter(' fentry (',' fentry)* ')'   -- optional, at most one
+//!           | 'sample(' int ')'                    -- optional, % of nodes to score (default 100)
+//!           | 'shards(' int ')'                    -- optional, parallel score shards (default 1)
 //! entry    := key ('=' num)?                       -- weight defaults to 1
 //! fentry   := key (':' selector)*                  -- selector := lkey '=' lvalue
 //! ```
+//!
+//! `sample` is the `percentageOfNodesToScore` analog (the scale-out
+//! fast path, [`crate::sched::framework`] module docs): below 100 the
+//! feasibility sweep stops after a target share of the candidate
+//! universe, trading placement quality for throughput. `shards` splits
+//! the scoring loop across that many OS threads; pure (cacheable)
+//! plugins are bit-identical at any shard count, so it is a
+//! latency-only knob.
 //!
 //! Example — three objectives, load-adaptive weights, proactive MIG
 //! defrag:
@@ -98,6 +108,15 @@ pub struct SchedulerProfile {
     /// selector syntax (`labels:zone=z1`). Empty = the built-in
     /// [`default_filter_keys`] chain.
     pub filters: Vec<(String, Vec<String>)>,
+    /// `sample(<pct>)`: percentage of the candidate universe the
+    /// feasibility sweep targets before scoring (the
+    /// `percentageOfNodesToScore` analog). 100 (the default) is the
+    /// exhaustive, bit-identical legacy sweep.
+    pub sample_pct: u32,
+    /// `shards(<n>)`: scoring-loop parallelism. 1 (the default) is the
+    /// sequential legacy loop; pure plugins score bit-identically at
+    /// any value.
+    pub score_shards: usize,
     /// Report/CSV label. Legacy policies keep their [`PolicyKind::label`]
     /// byte-for-byte; DSL profiles get a canonical compact label.
     pub label: String,
@@ -186,7 +205,18 @@ impl SchedulerProfile {
             }
             Some(fs)
         };
+        if !(1..=100).contains(&self.sample_pct) {
+            return Err(format!(
+                "sample(<pct>): percentage must be in [1, 100], got {}",
+                self.sample_pct
+            ));
+        }
+        if self.score_shards == 0 {
+            return Err("shards(<n>): shard count must be >= 1".into());
+        }
         let mut sched = Scheduler::new(plugins, binder, &self.label);
+        sched.set_sample_pct(self.sample_pct);
+        sched.set_score_shards(self.score_shards);
         if let Some(fs) = filters {
             sched.set_filters(fs);
         }
@@ -246,6 +276,8 @@ fn lower(kind: PolicyKind) -> SchedulerProfile {
         modulator,
         hooks: Vec::new(),
         filters: default_filter_keys(),
+        sample_pct: 100,
+        score_shards: 1,
         label,
     }
 }
@@ -748,12 +780,23 @@ fn parse_keyed_params(body: &str, what: &str) -> Result<(String, Vec<f64>), Stri
     Ok((key, params))
 }
 
+/// Parse a whole-valued section body (`sample(25)`, `shards(4)`).
+fn parse_whole(s: &str, what: &str) -> Result<u64, String> {
+    let v = parse_num(s, what)?;
+    if v.fract() != 0.0 || v < 0.0 {
+        return Err(format!("{what}: '{}' must be a whole number >= 0", s.trim()));
+    }
+    Ok(v as u64)
+}
+
 fn parse_dsl(s: &str) -> Result<SchedulerProfile, String> {
     let mut score: Vec<(String, f64)> = Vec::new();
     let mut bind: Option<(String, Vec<f64>)> = None;
     let mut modulator: Option<(String, Vec<f64>)> = None;
     let mut hooks: Vec<(String, Vec<f64>)> = Vec::new();
     let mut filters: Option<Vec<(String, Vec<String>)>> = None;
+    let mut sample_pct: Option<u32> = None;
+    let mut score_shards: Option<usize> = None;
     for section in s.split('|') {
         let section = section.trim();
         let inner = section
@@ -826,9 +869,34 @@ fn parse_dsl(s: &str) -> Result<SchedulerProfile, String> {
                 }
                 filters = Some(fs);
             }
+            "sample" => {
+                if sample_pct.is_some() {
+                    return Err("duplicate sample(...) section".into());
+                }
+                let pct = parse_whole(body, "sample")?;
+                if !(1..=100).contains(&pct) {
+                    return Err(format!(
+                        "sample(<pct>): percentage must be in [1, 100], got {pct}"
+                    ));
+                }
+                sample_pct = Some(pct as u32);
+            }
+            "shards" => {
+                if score_shards.is_some() {
+                    return Err("duplicate shards(...) section".into());
+                }
+                let n = parse_whole(body, "shards")?;
+                if !(1..=256).contains(&n) {
+                    return Err(format!(
+                        "shards(<n>): shard count must be in [1, 256], got {n}"
+                    ));
+                }
+                score_shards = Some(n as usize);
+            }
             other => {
                 return Err(format!(
-                    "unknown profile section '{other}' (expected score/bind/mod/hook/filter)"
+                    "unknown profile section '{other}' \
+                     (expected score/bind/mod/hook/filter/sample/shards)"
                 ))
             }
         }
@@ -839,8 +907,10 @@ fn parse_dsl(s: &str) -> Result<SchedulerProfile, String> {
     // The open-simulator default binder; the default filter chain.
     let bind = bind.unwrap_or_else(|| ("bestfit".to_string(), Vec::new()));
     let filters = filters.unwrap_or_else(default_filter_keys);
-    let label = dsl_label(&score, &bind, &modulator, &hooks, &filters);
-    Ok(SchedulerProfile { score, bind, modulator, hooks, filters, label })
+    let sample_pct = sample_pct.unwrap_or(100);
+    let score_shards = score_shards.unwrap_or(1);
+    let label = dsl_label(&score, &bind, &modulator, &hooks, &filters, sample_pct, score_shards);
+    Ok(SchedulerProfile { score, bind, modulator, hooks, filters, sample_pct, score_shards, label })
 }
 
 /// Canonical compact label for DSL profiles (comma-free so CSV headers
@@ -850,13 +920,17 @@ fn parse_dsl(s: &str) -> Result<SchedulerProfile, String> {
 /// quantities (thresholds, slice counts, budgets) and printed verbatim.
 /// A non-default filter chain is appended as
 /// `|filter:resources+labels:zone=z1`; the default chain is omitted so
-/// pre-filter-era labels are unchanged.
+/// pre-filter-era labels are unchanged. Likewise non-default `sample`
+/// / `shards` knobs append `|sample:25` / `|shards:4` and the defaults
+/// (100 / 1) are omitted.
 fn dsl_label(
     score: &[(String, f64)],
     bind: &(String, Vec<f64>),
     modulator: &Option<(String, Vec<f64>)>,
     hooks: &[(String, Vec<f64>)],
     filters: &[(String, Vec<String>)],
+    sample_pct: u32,
+    score_shards: usize,
 ) -> String {
     let kilo = |v: f64| format!("{:.0}", v * 1000.0);
     let mut out = score
@@ -894,6 +968,12 @@ fn dsl_label(
             })
             .collect();
         out.push_str(&rendered.join("+"));
+    }
+    if sample_pct != 100 {
+        out.push_str(&format!("|sample:{sample_pct}"));
+    }
+    if score_shards != 1 {
+        out.push_str(&format!("|shards:{score_shards}"));
     }
     out
 }
@@ -996,6 +1076,15 @@ mod tests {
             "score(fgd)|hook(drs:100:5:0:inf)",          // non-finite wake cost
             "score(fgd)|hook(drs:1:2:3:4:5)",            // too many params
             "score(fgd)|filter(drs:1)",                  // params on the drs filter
+            "score(fgd)|sample(0)",                      // pct below 1
+            "score(fgd)|sample(101)",                    // pct above 100
+            "score(fgd)|sample(2.5)",                    // fractional pct
+            "score(fgd)|sample()",                       // missing pct
+            "score(fgd)|sample(50)|sample(50)",          // duplicate sample
+            "score(fgd)|shards(0)",                      // zero shards
+            "score(fgd)|shards(-4)",                     // negative shards
+            "score(fgd)|shards(1.5)",                    // fractional shards
+            "score(fgd)|shards(4)|shards(4)",            // duplicate shards
             "gibberish(pwr)",                            // unknown section
             "notaprofile",                               // not legacy, no DSL
         ] {
@@ -1053,6 +1142,28 @@ mod tests {
     }
 
     #[test]
+    fn dsl_sample_and_shards_sections_parse() {
+        // Defaults: exhaustive sweep, sequential scoring, no label
+        // suffix (pre-fast-path labels are unchanged).
+        let p = SchedulerProfile::parse("score(fgd)").unwrap();
+        assert_eq!(p.sample_pct, 100);
+        assert_eq!(p.score_shards, 1);
+        assert!(!p.label.contains("sample") && !p.label.contains("shards"));
+        // Explicit defaults lower to the same label.
+        let p = SchedulerProfile::parse("score(fgd)|sample(100)|shards(1)").unwrap();
+        assert_eq!((p.sample_pct, p.score_shards), (100, 1));
+        assert!(!p.label.contains("sample") && !p.label.contains("shards"));
+        // Non-default knobs parse, build and show up in the label.
+        let p = SchedulerProfile::parse(
+            "score(pwr=0.5,fgd=0.5)|bind(weighted:0.5)|sample(25)|shards(4)",
+        )
+        .unwrap();
+        assert_eq!((p.sample_pct, p.score_shards), (25, 4));
+        assert_eq!(p.label, "PWR500+FGD500|weighted:500|sample:25|shards:4");
+        p.build().unwrap();
+    }
+
+    #[test]
     fn catalog_covers_every_builtin_key() {
         let cat = registry_catalog();
         let keys_of = |kind: &str| -> Vec<String> {
@@ -1097,8 +1208,10 @@ mod tests {
             "sched_prefilter_rejections", "constraint_unschedulable", "trace_events",
             "mig_scorer_fallbacks", "repartitions", "proactive_repartitions",
             "migrated_slices", "drs_sleeps", "drs_wakes", "drs_drains",
-            "drs_wake_cancels", "drs_transition_j", "phase_filter_ns",
-            "phase_score_ns", "phase_bind_ns", "phase_hooks_ns", "place_ns",
+            "drs_wake_cancels", "drs_transition_j", "score_cache_hits",
+            "score_cache_misses", "sched_sampled_sweeps", "score_shard_batches",
+            "phase_filter_ns", "phase_score_ns", "phase_bind_ns", "phase_hooks_ns",
+            "place_ns",
         ] {
             assert!(metric_keys.contains(&key), "missing metrics-catalog key {key}");
             assert!(
@@ -1130,6 +1243,8 @@ mod tests {
             modulator: None,
             hooks: vec![],
             filters: vec![],
+            sample_pct: 100,
+            score_shards: 1,
             label: "test".into(),
         };
         p.build().unwrap();

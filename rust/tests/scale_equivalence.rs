@@ -1,0 +1,260 @@
+//! Scale-out fast-path equivalence suite.
+//!
+//! The scoring fast path (revision-keyed per-plugin score cache,
+//! `sample(<pct>)` candidate sampling, `shards(<n>)` parallel scoring —
+//! see the `rust/src/sched/framework.rs` module docs) must be invisible
+//! whenever the knobs keep the exhaustive sweep: cache on ≡ cache off,
+//! sampling at 100% ≡ the naive loop, and any shard count ≡ sequential
+//! scoring (pure plugins compute the same IEEE-754 values on any
+//! thread; the impure `random` plugin is never cached or sharded) —
+//! **bit-identical** fixed-seed runs across policies × trace families
+//! × seeds, in both simulation loops (inflation and steady-state
+//! churn), including DRS power-state churn on a diurnal trace.
+//!
+//! The suite also sanity-pins the lossy side of the sampling knob: a
+//! truncated sweep (`sample(25)` on a fleet larger than the 100-node
+//! feasibility floor) still serves feasible demand and reports itself
+//! through the `sched_sampled_sweeps` counter.
+
+use repro::cluster::ClusterSpec;
+use repro::sched::{Scheduler, SchedulerProfile};
+use repro::sim::events::{SteadyConfig, SteadySim};
+use repro::sim::{RunResult, Simulation};
+use repro::trace::TraceSpec;
+
+/// Fast-path knob settings for one run.
+#[derive(Clone, Copy)]
+struct Knobs {
+    cache: bool,
+    shards: usize,
+    sample_pct: u32,
+}
+
+/// The pre-fast-path loop: no cache, sequential scoring, exhaustive
+/// sweep. Every equivalence test measures against this baseline.
+const NAIVE: Knobs = Knobs { cache: false, shards: 1, sample_pct: 100 };
+
+/// Fast-path variants that must stay bit-identical to [`NAIVE`]: each
+/// knob alone, then all together.
+const EXACT_VARIANTS: [Knobs; 3] = [
+    Knobs { cache: true, shards: 1, sample_pct: 100 },
+    Knobs { cache: false, shards: 4, sample_pct: 100 },
+    Knobs { cache: true, shards: 4, sample_pct: 100 },
+];
+
+fn build(policy: &str, k: Knobs) -> Scheduler {
+    let mut sched = SchedulerProfile::parse(policy).unwrap().build().unwrap();
+    sched.set_score_cache(k.cache);
+    sched.set_score_shards(k.shards);
+    sched.set_sample_pct(k.sample_pct);
+    sched
+}
+
+fn run_inflation(
+    policy: &str,
+    k: Knobs,
+    cluster: &ClusterSpec,
+    trace: &TraceSpec,
+    seed: u64,
+    target: f64,
+) -> RunResult {
+    let sched = build(policy, k);
+    let dc = cluster.build();
+    let workload = trace.synthesize(seed ^ 0x57AB1E).workload();
+    let mut sim = Simulation::with_spec(dc, sched, trace, workload, seed);
+    sim.record_frag = false;
+    sim.run_inflation(target)
+}
+
+fn assert_bit_identical(what: &str, a: &RunResult, b: &RunResult) {
+    assert_eq!(a.submitted, b.submitted, "{what}: submitted diverged");
+    assert_eq!(a.scheduled, b.scheduled, "{what}: scheduled diverged");
+    assert_eq!(a.failed, b.failed, "{what}: failed diverged");
+    assert_eq!(
+        a.allocated_gpu_units.to_bits(),
+        b.allocated_gpu_units.to_bits(),
+        "{what}: allocated units diverged"
+    );
+    assert_eq!(
+        a.final_eopc().to_bits(),
+        b.final_eopc().to_bits(),
+        "{what}: final EOPC diverged ({} vs {})",
+        a.final_eopc(),
+        b.final_eopc()
+    );
+    assert_eq!(
+        a.final_grar().to_bits(),
+        b.final_grar().to_bits(),
+        "{what}: final GRAR diverged"
+    );
+}
+
+/// Cache / shards at sampling=100%: bit-identical inflation runs across
+/// policies × traces × seeds. `random` rides along to pin that the
+/// non-cacheable plugin is bypassed, not frozen, by the cache.
+#[test]
+fn fast_path_is_bit_identical_in_inflation() {
+    let cluster = ClusterSpec::tiny(6, 4, 1);
+    let traces = [
+        TraceSpec::default_trace(),
+        TraceSpec::sharing_gpu(1.0),
+        TraceSpec::multi_gpu(0.2),
+    ];
+    for policy in ["fgd", "pwrfgd:0.1", "bestfit", "random"] {
+        for trace in &traces {
+            for seed in [1u64, 42] {
+                let what = format!("{policy}/{}/seed{seed}", trace.name);
+                let base = run_inflation(policy, NAIVE, &cluster, trace, seed, 0.7);
+                assert!(base.submitted > 0, "{what}: empty run");
+                for (vi, k) in EXACT_VARIANTS.iter().enumerate() {
+                    let with = run_inflation(policy, *k, &cluster, trace, seed, 0.7);
+                    assert_bit_identical(&format!("{what}/variant{vi}"), &base, &with);
+                }
+            }
+        }
+    }
+}
+
+/// The same pin on a MIG fleet: the score-cache key must separate MIG
+/// profile demands (`TaskSig` covers the lattice-indexed variants) and
+/// the slice-aware plugins must shard cleanly.
+#[test]
+fn fast_path_is_bit_identical_on_mig() {
+    let cluster = ClusterSpec::mig_het_cluster(3, 2, 4, 1);
+    let trace = TraceSpec::mig_het_trace(0.3, 0.4);
+    for policy in ["mig-fgd", "mig-pwrfgd:0.1"] {
+        let base = run_inflation(policy, NAIVE, &cluster, &trace, 11, 0.8);
+        assert!(base.scheduled > 0, "{policy}: scheduled nothing");
+        for (vi, k) in EXACT_VARIANTS.iter().enumerate() {
+            let with = run_inflation(policy, *k, &cluster, &trace, 11, 0.8);
+            assert_bit_identical(&format!("{policy}/variant{vi}"), &base, &with);
+        }
+    }
+}
+
+/// The second simulation loop: steady-state churn through the
+/// `place`/`release` protocol must agree bit for bit too (releases
+/// invalidate via generation bumps; the cache must track them).
+#[test]
+fn fast_path_is_bit_identical_under_churn() {
+    let cfg = SteadyConfig {
+        mean_interarrival_s: 1.0,
+        mean_duration_s: 250.0,
+        horizon_s: 2_500.0,
+        sample_every_s: 50.0,
+        seed: 9,
+    };
+    let cluster = ClusterSpec::tiny(8, 4, 2);
+    let trace = TraceSpec::default_trace();
+    let run = |k: Knobs| {
+        let sched = build("pwrfgd:0.1", k);
+        let mut sim = SteadySim::new(cluster.build(), sched, &trace, &cfg);
+        sim.run(&cfg)
+    };
+    let a = run(NAIVE);
+    assert!(a.arrivals > 1_000, "arrivals {}", a.arrivals);
+    for (vi, k) in EXACT_VARIANTS.iter().enumerate() {
+        let b = run(*k);
+        assert_eq!(a.arrivals, b.arrivals, "variant{vi}");
+        assert_eq!(a.scheduled, b.scheduled, "variant{vi}");
+        assert_eq!(a.failed, b.failed, "variant{vi}");
+        assert_eq!(a.departures, b.departures, "variant{vi}");
+        assert_eq!(
+            a.steady_eopc_w.to_bits(),
+            b.steady_eopc_w.to_bits(),
+            "variant{vi}: steady EOPC diverged"
+        );
+    }
+}
+
+/// The hard case: DRS diurnal churn. Power-state transitions
+/// (drain/sleep/wake) invalidate scored nodes mid-run and the
+/// `consolidate` plugin reads the very state that changes; the cache
+/// and the shard merge must still be invisible.
+#[test]
+fn fast_path_is_bit_identical_with_drs_diurnal_churn() {
+    let cfg = SteadyConfig {
+        mean_interarrival_s: 1.0,
+        mean_duration_s: 40.0,
+        horizon_s: 4_000.0,
+        sample_every_s: 50.0,
+        seed: 11,
+    };
+    let cluster = ClusterSpec::tiny(16, 4, 2);
+    let trace = TraceSpec::diurnal_with_period(0.6, 2_000.0);
+    let policy = "score(pwr=0.1,fgd=0.7,consolidate=0.2)|bind(weighted:0.1)|hook(drs:80:5)";
+    let run = |k: Knobs| {
+        let sched = build(policy, k);
+        let mut sim = SteadySim::new(cluster.build(), sched, &trace, &cfg);
+        sim.run(&cfg)
+    };
+    let a = run(NAIVE);
+    assert!(a.drs_sleeps > 0, "diurnal churn never slept a node");
+    for (vi, k) in EXACT_VARIANTS.iter().enumerate() {
+        let b = run(*k);
+        assert_eq!(a.scheduled, b.scheduled, "variant{vi}");
+        assert_eq!(a.failed, b.failed, "variant{vi}");
+        assert_eq!(a.drs_sleeps, b.drs_sleeps, "variant{vi}: sleep schedule diverged");
+        assert_eq!(a.drs_wakes, b.drs_wakes, "variant{vi}: wake schedule diverged");
+        assert_eq!(
+            a.steady_eopc_w.to_bits(),
+            b.steady_eopc_w.to_bits(),
+            "variant{vi}: steady EOPC diverged"
+        );
+        assert_eq!(
+            a.mean_asleep_nodes.to_bits(),
+            b.mean_asleep_nodes.to_bits(),
+            "variant{vi}: asleep-node series diverged"
+        );
+    }
+}
+
+/// The DSL wiring: `sample(100)|shards(2)` through `--policy` parsing
+/// must behave exactly like the hand-set knobs (and like the naive
+/// loop, since 100% sampling keeps the sweep exhaustive).
+#[test]
+fn dsl_knobs_match_hand_set_knobs() {
+    let cluster = ClusterSpec::tiny(6, 4, 1);
+    let trace = TraceSpec::default_trace();
+    let base = run_inflation("pwrfgd:0.5", NAIVE, &cluster, &trace, 7, 0.7);
+    let via_dsl = {
+        let sched = SchedulerProfile::parse(
+            "score(pwr=0.5,fgd=0.5)|bind(weighted:0.5)|sample(100)|shards(2)",
+        )
+        .unwrap()
+        .build()
+        .unwrap();
+        let dc = cluster.build();
+        let workload = trace.synthesize(7 ^ 0x57AB1E).workload();
+        let mut sim = Simulation::with_spec(dc, sched, &trace, workload, 7);
+        sim.record_frag = false;
+        sim.run_inflation(0.7)
+    };
+    assert_bit_identical("dsl-knobs", &base, &via_dsl);
+}
+
+/// The lossy side of `sample(<pct>)`: on a fleet larger than the
+/// 100-feasible-node floor the sweep truncates, yet every decision
+/// lands on a real feasible node and the truncation is observable.
+#[test]
+fn sampled_sweep_truncates_but_places_validly() {
+    use repro::tasks::{GpuDemand, Task, Workload};
+    let mut dc = ClusterSpec::tiny(160, 4, 0).build();
+    let mut sched = SchedulerProfile::parse("score(fgd)|sample(25)")
+        .unwrap()
+        .build()
+        .unwrap();
+    let w = Workload::default();
+    for i in 0..32u64 {
+        let t = Task::new(i, 1.0, 0.0, GpuDemand::Frac(0.5));
+        let d = sched
+            .place(&mut dc, &w, &t)
+            .expect("sampled sweep failed feasible demand");
+        assert!(d.node < 160, "placed on a nonexistent node");
+    }
+    assert_eq!(
+        sched.metrics().counter("sched_sampled_sweeps"),
+        32,
+        "every decision should have taken the sampled sweep"
+    );
+}
