@@ -1,0 +1,254 @@
+//! `catalog-drift` — the observability catalog is the single source of
+//! truth for framework metrics (PR 6's contract). Three directions are
+//! checked:
+//!
+//! 1. every key written through `.inc("…")` / `.observe_ns("…")` or
+//!    read through `.counter("…")` in non-test `rust/src/**` exists in
+//!    [`crate::obs::METRICS_CATALOG`];
+//! 2. every catalog key is actually referenced somewhere in non-test
+//!    `rust/src/**` outside the catalog definition itself (no
+//!    zombie entries);
+//! 3. every catalog key appears in the `docs/observability.md` metrics
+//!    table, and every key that table documents is in the catalog.
+//!
+//! Dynamic keys (hook-reported counters, coordinator gauges) pass
+//! through the registry by design and are written via variables, not
+//! string literals at the call sites this rule scans — so the catalog
+//! stays a complete map of the *built-in* fleet without banning
+//! extensions.
+
+use crate::analysis::{allowed, string_literals, Allow, Finding, RepoTree, SourceFile};
+use std::collections::{BTreeMap, BTreeSet};
+
+pub const RULE: &str = "catalog-drift";
+
+const OBS_PATH: &str = "rust/src/obs/mod.rs";
+const DOC_PATH: &str = "docs/observability.md";
+
+/// Registry write/read call patterns whose first argument is a
+/// catalogued key. Built by concatenation so the analyzer's own source
+/// never contains a scannable call-site pattern.
+fn call_patterns() -> Vec<String> {
+    [".inc", ".observe_ns", ".counter"]
+        .iter()
+        .map(|m| format!("{m}(\""))
+        .collect()
+}
+
+pub fn check(tree: &RepoTree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(obs) = tree.source(OBS_PATH) else {
+        out.push(missing(OBS_PATH, "the metrics-catalog module is missing"));
+        return out;
+    };
+    let Some((catalog, block_range)) = catalog_keys(&obs) else {
+        out.push(missing(OBS_PATH, "could not locate the METRICS_CATALOG table"));
+        return out;
+    };
+    let catalog_set: BTreeSet<&str> = catalog.iter().map(String::as_str).collect();
+    let patterns = call_patterns();
+
+    // (1) call-site keys ⊆ catalog, and collect quoted references for (2).
+    let mut quoted: BTreeSet<String> = BTreeSet::new();
+    for sf in tree.sources("rust/src/") {
+        let in_catalog_block =
+            |li: usize| sf.path == OBS_PATH && li >= block_range.0 && li <= block_range.1;
+        for (li, line) in sf.code.iter().enumerate() {
+            if sf.test_mask[li] {
+                continue;
+            }
+            if !in_catalog_block(li) {
+                for (_, lit) in string_literals(line) {
+                    if !lit.is_empty() && lit.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+                    {
+                        quoted.insert(lit);
+                    }
+                }
+            }
+            for pat in &patterns {
+                let mut from = 0;
+                while let Some(pos) = line[from..].find(pat.as_str()) {
+                    let at = from + pos + pat.len();
+                    let key: String = line[at..]
+                        .chars()
+                        .take_while(|&c| c.is_ascii_alphanumeric() || c == '_')
+                        .collect();
+                    from = at;
+                    // Only ident-shaped literal keys are checkable; a
+                    // dynamic first argument never matches `("`.
+                    if key.is_empty() || !line[at + key.len()..].starts_with('"') {
+                        continue;
+                    }
+                    if !catalog_set.contains(key.as_str()) {
+                        match allowed(&sf, li, RULE) {
+                            Allow::Yes => {}
+                            Allow::MissingReason(bl) => out.push(no_reason(&sf.path, bl)),
+                            Allow::No => out.push(Finding {
+                                rule: RULE,
+                                file: sf.path.clone(),
+                                line: li + 1,
+                                message: format!(
+                                    "metric key \"{key}\" is not in METRICS_CATALOG"
+                                ),
+                                hint: format!(
+                                    "add (\"{key}\", MetricKind::…, \"…\") to METRICS_CATALOG in \
+                                     {OBS_PATH} and a row to {DOC_PATH}, or fix the key"
+                                ),
+                            }),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // (2) catalog ⊆ referenced-somewhere (zombie entries).
+    for key in &catalog {
+        if !quoted.contains(key) {
+            out.push(Finding {
+                rule: RULE,
+                file: OBS_PATH.to_string(),
+                line: 0,
+                message: format!(
+                    "catalog key \"{key}\" is never referenced in non-test rust/src code"
+                ),
+                hint: format!("wire \"{key}\" up at its call site or drop the catalog entry"),
+            });
+        }
+    }
+
+    // (3) catalog ↔ docs/observability.md metrics table.
+    match tree.get(DOC_PATH) {
+        None => out.push(missing(DOC_PATH, "the observability doc is missing")),
+        Some(doc) => {
+            let doc_keys = doc_table_keys(doc);
+            for key in &catalog {
+                if !doc_keys.contains_key(key.as_str()) {
+                    out.push(Finding {
+                        rule: RULE,
+                        file: DOC_PATH.to_string(),
+                        line: 0,
+                        message: format!("catalog key \"{key}\" missing from the metrics table"),
+                        hint: format!("add a `| kind | \\`{key}\\` | meaning |` row"),
+                    });
+                }
+            }
+            for (key, line) in &doc_keys {
+                if !catalog_set.contains(key.as_str()) {
+                    out.push(Finding {
+                        rule: RULE,
+                        file: DOC_PATH.to_string(),
+                        line: line + 1,
+                        message: format!(
+                            "documented metric \"{key}\" is not in METRICS_CATALOG"
+                        ),
+                        hint: "drop the stale row or add the catalog entry".to_string(),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Parse the `METRICS_CATALOG` const: a key is a string literal whose
+/// following tokens are `, MetricKind::…` (entries may span lines).
+/// Returns the keys plus the 0-based line range of the whole table so
+/// reference scans can exclude the definition itself.
+fn catalog_keys(obs: &SourceFile) -> Option<(Vec<String>, (usize, usize))> {
+    let start = obs.code.iter().position(|l| l.contains("METRICS_CATALOG"))?;
+    let (s, e) = crate::analysis::table_block(obs, start)?;
+    let block: Vec<char> = obs.code[s..=e].join("\n").chars().collect();
+    let mut keys = Vec::new();
+    let mut i = 0;
+    while i < block.len() {
+        if block[i] == '"' {
+            let mut j = i + 1;
+            let mut lit = String::new();
+            while j < block.len() && block[j] != '"' {
+                if block[j] == '\\' && j + 1 < block.len() {
+                    j += 2; // keys never contain escapes; skip them
+                    continue;
+                }
+                lit.push(block[j]);
+                j += 1;
+            }
+            if next_is_metric_kind(&block, j + 1) {
+                keys.push(lit);
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    if keys.is_empty() {
+        None
+    } else {
+        Some((keys, (s, e)))
+    }
+}
+
+/// After a candidate key literal, an entry reads `, MetricKind::…` —
+/// possibly across a line break.
+fn next_is_metric_kind(block: &[char], mut k: usize) -> bool {
+    while k < block.len() && block[k].is_whitespace() {
+        k += 1;
+    }
+    if k >= block.len() || block[k] != ',' {
+        return false;
+    }
+    k += 1;
+    while k < block.len() && block[k].is_whitespace() {
+        k += 1;
+    }
+    let pat: Vec<char> = "MetricKind::".chars().collect();
+    block.get(k..k + pat.len()) == Some(&pat[..])
+}
+
+/// Backticked ident keys from metrics-table rows (first cell is a
+/// metric kind), mapped to their 0-based line. A single cell may list
+/// several keys (`` `drs_sleeps` / `drs_wakes` ``).
+fn doc_table_keys(doc: &str) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    for (li, line) in doc.lines().enumerate() {
+        let t = line.trim();
+        if !t.starts_with('|') {
+            continue;
+        }
+        let first_cell = t.trim_start_matches('|').split('|').next().unwrap_or("").trim();
+        if !matches!(first_cell, "counter" | "gauge" | "histogram") {
+            continue;
+        }
+        let mut rest = t;
+        while let Some(open) = rest.find('`') {
+            let tail = &rest[open + 1..];
+            let Some(close) = tail.find('`') else { break };
+            let key = &tail[..close];
+            if !key.is_empty() && key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                out.entry(key.to_string()).or_insert(li);
+            }
+            rest = &tail[close + 1..];
+        }
+    }
+    out
+}
+
+fn missing(file: &str, what: &str) -> Finding {
+    Finding {
+        rule: RULE,
+        file: file.to_string(),
+        line: 0,
+        message: what.to_string(),
+        hint: "restore the file (or fix RepoTree::load coverage)".to_string(),
+    }
+}
+
+fn no_reason(file: &str, line_idx: usize) -> Finding {
+    Finding {
+        rule: RULE,
+        file: file.to_string(),
+        line: line_idx + 1,
+        message: "lint:allow directive without a reason".to_string(),
+        hint: "append a short justification after the closing paren".to_string(),
+    }
+}

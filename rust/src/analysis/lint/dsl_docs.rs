@@ -1,0 +1,294 @@
+//! `dsl-docs-drift` — `docs/scheduler.md` is the user-facing contract
+//! for the `--policy` DSL: its grammar block must list exactly the
+//! sections `parse_dsl` dispatches on, and its extension-point table
+//! must list exactly the built-in registry keys. Both are checked in
+//! both directions against `rust/src/sched/profile.rs` (the
+//! `BUILTIN_*` tables and the `parse_dsl` match), so adding a knob
+//! without documenting it — or documenting one that doesn't exist —
+//! fails the lint.
+
+use crate::analysis::{brace_block, table_block, Finding, RepoTree, SourceFile};
+use std::collections::{BTreeMap, BTreeSet};
+
+pub const RULE: &str = "dsl-docs-drift";
+
+const PROFILE: &str = "rust/src/sched/profile.rs";
+const DOC: &str = "docs/scheduler.md";
+
+/// Extension point → its builtin registry const in `profile.rs`.
+const TABLES: &[(&str, &str)] = &[
+    ("score", "BUILTIN_SCORE"),
+    ("bind", "BUILTIN_BIND"),
+    ("mod", "BUILTIN_MODULATOR"),
+    ("hook", "BUILTIN_HOOK"),
+    ("filter", "BUILTIN_FILTER"),
+];
+
+pub fn check(tree: &RepoTree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(sf) = tree.source(PROFILE) else {
+        return vec![missing(PROFILE)];
+    };
+    let Some(doc) = tree.get(DOC) else {
+        return vec![missing(DOC)];
+    };
+
+    // Registry keys ↔ the extension-point table.
+    let builtin = builtin_keys_by_point(&sf);
+    let documented = doc_registry_keys(doc);
+    for (point, const_name) in TABLES {
+        let Some(b) = builtin.get(point) else {
+            out.push(Finding {
+                rule: RULE,
+                file: PROFILE.to_string(),
+                line: 0,
+                message: format!("could not parse the {const_name} registry table"),
+                hint: "keep the `const BUILTIN_*: &[…] = &[…];` shape scannable".to_string(),
+            });
+            continue;
+        };
+        let empty = BTreeSet::new();
+        let d = documented.get(point).unwrap_or(&empty);
+        for key in b.difference(d) {
+            out.push(Finding {
+                rule: RULE,
+                file: DOC.to_string(),
+                line: 0,
+                message: format!("registry key {point}/{key} missing from the extension table"),
+                hint: format!("add `{key}` to the {point} row's built-in keys cell in {DOC}"),
+            });
+        }
+        for key in d.difference(b) {
+            out.push(Finding {
+                rule: RULE,
+                file: DOC.to_string(),
+                line: 0,
+                message: format!("documented key {point}/{key} is not a built-in registry key"),
+                hint: "drop the stale key or add the plugin to the registry".to_string(),
+            });
+        }
+    }
+
+    // DSL sections ↔ the grammar block.
+    let sections = dsl_sections(&sf);
+    let grammar = grammar_tokens(doc);
+    if sections.is_empty() {
+        out.push(Finding {
+            rule: RULE,
+            file: PROFILE.to_string(),
+            line: 0,
+            message: "could not parse the parse_dsl section dispatch".to_string(),
+            hint: "keep the `match name.as_str() { \"section\" => … }` shape scannable"
+                .to_string(),
+        });
+    }
+    if grammar.is_empty() {
+        out.push(Finding {
+            rule: RULE,
+            file: DOC.to_string(),
+            line: 0,
+            message: "could not find the DSL grammar block".to_string(),
+            hint: "keep a ```text fence under the `## DSL grammar` heading".to_string(),
+        });
+    }
+    for s in sections.difference(&grammar) {
+        out.push(Finding {
+            rule: RULE,
+            file: DOC.to_string(),
+            line: 0,
+            message: format!("DSL section '{s}(' missing from the grammar block"),
+            hint: format!("add a `'{s}(' …` production to the grammar in {DOC}"),
+        });
+    }
+    for g in grammar.difference(&sections) {
+        out.push(Finding {
+            rule: RULE,
+            file: DOC.to_string(),
+            line: 0,
+            message: format!("grammar documents a '{g}(' section parse_dsl does not accept"),
+            hint: "drop the stale production or implement the section".to_string(),
+        });
+    }
+    out
+}
+
+/// The built-in registry keys per extension point, parsed from the
+/// `BUILTIN_*` const tables (a key is any pure-lowercase alnum string
+/// literal in the table — descriptions and error strings all carry
+/// spaces, underscores or punctuation). Shared with the `profile.rs`
+/// drift test, which cross-checks this parse against the runtime
+/// `registry_catalog()`.
+pub fn builtin_keys_by_point(sf: &SourceFile) -> BTreeMap<&'static str, BTreeSet<String>> {
+    let mut out = BTreeMap::new();
+    for (point, const_name) in TABLES {
+        let header = format!("const {const_name}");
+        let Some(start) = sf.code.iter().position(|l| l.contains(&header)) else {
+            continue;
+        };
+        let Some((s, e)) = table_block(sf, start) else {
+            continue;
+        };
+        let block = sf.code[s..=e].join("\n");
+        let keys: BTreeSet<String> = crate::analysis::string_literals(&block)
+            .into_iter()
+            .map(|(_, lit)| lit)
+            .filter(|lit| is_registry_key(lit))
+            .collect();
+        if !keys.is_empty() {
+            out.insert(*point, keys);
+        }
+    }
+    out
+}
+
+fn is_registry_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_lowercase())
+        && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit())
+}
+
+/// Section names `parse_dsl` dispatches on: string literals directly
+/// followed by `=>` inside the function body.
+pub fn dsl_sections(sf: &SourceFile) -> BTreeSet<String> {
+    let Some(start) = sf.code.iter().position(|l| l.contains("fn parse_dsl")) else {
+        return BTreeSet::new();
+    };
+    let Some((s, e)) = brace_block(sf, start) else {
+        return BTreeSet::new();
+    };
+    let block: Vec<char> = sf.code[s..=e].join("\n").chars().collect();
+    let mut out = BTreeSet::new();
+    let mut i = 0;
+    while i < block.len() {
+        if block[i] == '"' {
+            let mut j = i + 1;
+            let mut lit = String::new();
+            while j < block.len() && block[j] != '"' {
+                if block[j] == '\\' && j + 1 < block.len() {
+                    j += 2;
+                    lit.push('\\');
+                    continue;
+                }
+                lit.push(block[j]);
+                j += 1;
+            }
+            let mut k = j + 1;
+            while k < block.len() && block[k].is_whitespace() {
+                k += 1;
+            }
+            if block.get(k) == Some(&'=') && block.get(k + 1) == Some(&'>') && is_registry_key(&lit)
+            {
+                out.insert(lit);
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Extension-table rows in `docs/scheduler.md`: first cell names the
+/// point (the `weightModulator` / `postPlace…` rows map to `mod` /
+/// `hook`), third cell lists backticked keys whose parameter suffixes
+/// (`:α`, `[:key=value…]`) are stripped at the first `:` or `[`.
+fn doc_registry_keys(doc: &str) -> BTreeMap<&'static str, BTreeSet<String>> {
+    let mut out: BTreeMap<&'static str, BTreeSet<String>> = BTreeMap::new();
+    for line in doc.lines() {
+        let t = line.trim();
+        if !t.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = t.trim_matches('|').split('|').collect();
+        if cells.len() < 3 {
+            continue;
+        }
+        let first = cells[0].replace('`', "");
+        let first = first.trim();
+        let point = if first == "filter" {
+            "filter"
+        } else if first == "score" {
+            "score"
+        } else if first == "bind" {
+            "bind"
+        } else if first.contains("weightModulator") {
+            "mod"
+        } else if first.contains("postPlace") || first.contains("postFail") {
+            "hook"
+        } else {
+            continue;
+        };
+        let keys = out.entry(point).or_default();
+        let mut rest = cells[2];
+        while let Some(open) = rest.find('`') {
+            let tail = &rest[open + 1..];
+            let Some(close) = tail.find('`') else { break };
+            let full = &tail[..close];
+            let stem = full
+                .split(|c| c == ':' || c == '[')
+                .next()
+                .unwrap_or("")
+                .trim();
+            if is_registry_key(stem) {
+                keys.insert(stem.to_string());
+            }
+            rest = &tail[close + 1..];
+        }
+    }
+    out
+}
+
+/// `'section('` tokens inside the ```text fence under `## DSL grammar`.
+fn grammar_tokens(doc: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut in_heading = false;
+    let mut in_fence = false;
+    for line in doc.lines() {
+        if line.trim_start().starts_with("## ") {
+            in_heading = line.contains("DSL grammar");
+            continue;
+        }
+        if in_heading && line.trim_start().starts_with("```") {
+            if in_fence {
+                break; // closing fence: done
+            }
+            in_fence = true;
+            continue;
+        }
+        if !in_fence {
+            continue;
+        }
+        let chars: Vec<char> = line.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            if chars[i] == '\'' {
+                let mut j = i + 1;
+                let mut tok = String::new();
+                while j < chars.len() && chars[j].is_ascii_lowercase() {
+                    tok.push(chars[j]);
+                    j += 1;
+                }
+                if !tok.is_empty()
+                    && chars.get(j) == Some(&'(')
+                    && chars.get(j + 1) == Some(&'\'')
+                {
+                    out.insert(tok);
+                    i = j + 2;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+fn missing(file: &str) -> Finding {
+    Finding {
+        rule: RULE,
+        file: file.to_string(),
+        line: 0,
+        message: "required input file is missing from the tree".to_string(),
+        hint: "restore the file (or fix RepoTree::load coverage)".to_string(),
+    }
+}

@@ -1,0 +1,78 @@
+//! `hot-path-hygiene` — the place→filter→score→bind protocol modules
+//! are the code every single decision runs through; a stray `unwrap()`
+//! there turns an internal invariant slip into a scheduler crash that
+//! takes the whole simulated (or served) fleet down. Production
+//! schedulers treat this path as no-panic territory; so do we. The
+//! rule bans `unwrap()` / `expect(` / `panic!` / `unsafe` in the four
+//! protocol files outside `#[cfg(test)]` blocks, unless an inline
+//! `// lint:allow(hot-path-hygiene) <reason>` documents why the panic
+//! is genuinely unreachable or the right failure mode (e.g. a poisoned
+//! scoped-thread join, or debug-only validation).
+//!
+//! `debug_assert!`/`assert!` are deliberately *not* banned: assertions
+//! state invariants; the banned tokens hide fallibility.
+
+use crate::analysis::{allowed, token_occurrences, Allow, Finding, RepoTree};
+
+pub const RULE: &str = "hot-path-hygiene";
+
+/// The protocol modules (`docs/scheduler.md` pipeline order).
+pub const HOT_PATH_FILES: &[&str] = &[
+    "rust/src/sched/framework.rs",
+    "rust/src/sched/filter.rs",
+    "rust/src/sched/bind.rs",
+    "rust/src/sched/drs.rs",
+];
+
+/// Banned tokens. `.unwrap()` with the parens so `unwrap_or…`
+/// combinators stay legal; `expect(` with the paren so
+/// `.expect_err` or idents containing "expect" don't match.
+const TOKENS: &[&str] = &[".unwrap()", ".expect(", "panic!", "unsafe"];
+
+pub fn check(tree: &RepoTree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for path in HOT_PATH_FILES {
+        let Some(sf) = tree.source(path) else {
+            // A renamed/removed protocol file is a rule-config drift,
+            // not silently fine.
+            out.push(Finding {
+                rule: RULE,
+                file: path.to_string(),
+                line: 0,
+                message: "hot-path file listed in the rule is missing".to_string(),
+                hint: "update HOT_PATH_FILES in rust/src/analysis/lint/hotpath.rs".to_string(),
+            });
+            continue;
+        };
+        for (li, line) in sf.bare.iter().enumerate() {
+            if sf.test_mask[li] {
+                continue;
+            }
+            for token in TOKENS {
+                for _ in token_occurrences(line, token) {
+                    match allowed(&sf, li, RULE) {
+                        Allow::Yes => {}
+                        Allow::MissingReason(bl) => out.push(Finding {
+                            rule: RULE,
+                            file: sf.path.clone(),
+                            line: bl + 1,
+                            message: "lint:allow directive without a reason".to_string(),
+                            hint: "append a short justification after the closing paren"
+                                .to_string(),
+                        }),
+                        Allow::No => out.push(Finding {
+                            rule: RULE,
+                            file: sf.path.clone(),
+                            line: li + 1,
+                            message: format!("`{token}` on the scheduling hot path"),
+                            hint: "restructure to an infallible form (get_or_insert_with, \
+                                   match, let-else), or allowlist with a documented reason"
+                                .to_string(),
+                        }),
+                    }
+                }
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,65 @@
+//! The lint rule families — one module per family, each exposing
+//! `RULE` (the allowlistable name) and `check(&RepoTree) -> Vec<Finding>`.
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `catalog-drift` | metric keys ↔ `METRICS_CATALOG` ↔ `docs/observability.md` |
+//! | `test-registration` | `rust/tests/*` ↔ `Cargo.toml [[test]]` ↔ CI steps |
+//! | `hot-path-hygiene` | no `unwrap`/`expect`/`panic!`/`unsafe` on the place path |
+//! | `cacheable-purity` | interior-mutability `ScorePlugin`s declare `cacheable()` |
+//! | `dsl-docs-drift` | DSL sections + registry keys ↔ `docs/scheduler.md` |
+//!
+//! `docs/analysis.md` is the narrative catalog (rationale, allowlist
+//! syntax, fix guidance).
+
+pub mod catalog;
+pub mod dsl_docs;
+pub mod hotpath;
+pub mod purity;
+pub mod tests_reg;
+
+use super::{Finding, RepoTree};
+
+pub use dsl_docs::builtin_keys_by_point;
+
+/// Every rule family: `(name, one-line description, check fn)`.
+pub const RULES: &[(&str, &str, fn(&RepoTree) -> Vec<Finding>)] = &[
+    (
+        catalog::RULE,
+        "metric keys referenced in src ↔ METRICS_CATALOG ↔ docs/observability.md",
+        catalog::check,
+    ),
+    (
+        tests_reg::RULE,
+        "every rust/tests file has a Cargo.toml [[test]] target and a CI step",
+        tests_reg::check,
+    ),
+    (
+        hotpath::RULE,
+        "no unwrap/expect/panic!/unsafe in the place→filter→score→bind modules",
+        hotpath::check,
+    ),
+    (
+        purity::RULE,
+        "ScorePlugins touching interior mutability must override cacheable()",
+        purity::check,
+    ),
+    (
+        dsl_docs::RULE,
+        "profile-DSL sections and registry keys ↔ docs/scheduler.md grammar/tables",
+        dsl_docs::check,
+    ),
+];
+
+/// Run every rule family over the tree; findings in rule order.
+pub fn run_all(tree: &RepoTree) -> Vec<Finding> {
+    RULES.iter().flat_map(|(_, _, check)| check(tree)).collect()
+}
+
+/// The registry/docs/catalog drift subset — the shared implementation
+/// behind `repro list-plugins --check` and the `profile.rs` drift test.
+pub fn registry_drift(tree: &RepoTree) -> Vec<Finding> {
+    let mut out = catalog::check(tree);
+    out.extend(dsl_docs::check(tree));
+    out
+}

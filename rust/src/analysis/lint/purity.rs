@@ -1,0 +1,143 @@
+//! `cacheable-purity` — the revision-keyed score cache (PR 7) reuses a
+//! plugin's per-node scores bit-for-bit across decisions, keyed only on
+//! (workload revision × fleet revision × node generation × task
+//! signature). That is sound **iff** `score` is a pure function of the
+//! key. A plugin that smuggles state through interior mutability
+//! (`Mutex`, `RefCell`, `Cell`, `Atomic*`) may still be pure (a memo of
+//! a pure function, like `fgd`) or genuinely impure (`random`) — but
+//! either way the author must *decide* by overriding
+//! [`crate::sched::ScorePlugin::cacheable`]; silently inheriting the
+//! `true` default is how bit-identity guarantees rot. The dynamic side
+//! of the same contract is `rust/tests/purity_check.rs`, which runs
+//! every registered cacheable plugin cache-on vs cache-off vs
+//! shard-permuted and asserts exact f64-bit equality.
+//!
+//! Scope: for each non-test `impl ScorePlugin for X`, the rule scans
+//! the impl block itself, `struct X`'s definition and any inherent
+//! `impl X` blocks in the same file for interior-mutability types; if
+//! found and the `ScorePlugin` impl has no `fn cacheable`, it fires
+//! (struct-scoped on purpose — an unrelated `RefCell` elsewhere in the
+//! file is not evidence).
+
+use crate::analysis::{allowed, brace_block, token_occurrences, Allow, Finding, RepoTree, SourceFile};
+
+pub const RULE: &str = "cacheable-purity";
+
+/// Interior-mutability markers: exact generic uses, with word
+/// boundaries so `RefCell<` does not also count as `Cell<`. `Atomic*`
+/// types are handled separately as a boundary-prefixed match.
+const INTERIOR: &[&str] = &["Mutex<", "RwLock<", "RefCell<", "Cell<", "UnsafeCell<"];
+
+/// Does this (bare-view) line mention an interior-mutability type?
+fn touches_interior(line: &str) -> bool {
+    if INTERIOR.iter().any(|t| !token_occurrences(line, t).is_empty()) {
+        return true;
+    }
+    // `Atomic` as an ident *prefix* (AtomicU64, AtomicBool, …).
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(p) = line[from..].find("Atomic") {
+        let at = from + p;
+        let bounded = at == 0 || !(bytes[at - 1].is_ascii_alphanumeric() || bytes[at - 1] == b'_');
+        if bounded {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+pub fn check(tree: &RepoTree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for sf in tree.sources("rust/src/") {
+        for (li, line) in sf.bare.iter().enumerate() {
+            if sf.test_mask[li] {
+                continue;
+            }
+            let Some(name) = score_impl_target(line) else {
+                continue;
+            };
+            let Some(impl_range) = brace_block(&sf, li) else {
+                continue;
+            };
+            let mut regions = vec![impl_range];
+            regions.extend(type_regions(&sf, &name));
+            let has_override = (impl_range.0..=impl_range.1)
+                .any(|lj| sf.bare[lj].contains("fn cacheable"));
+            let touched = regions.iter().any(|&(s, e)| {
+                (s..=e.min(sf.bare.len() - 1)).any(|lj| touches_interior(&sf.bare[lj]))
+            });
+            if touched && !has_override {
+                match allowed(&sf, li, RULE) {
+                    Allow::Yes => {}
+                    Allow::MissingReason(bl) => out.push(Finding {
+                        rule: RULE,
+                        file: sf.path.clone(),
+                        line: bl + 1,
+                        message: "lint:allow directive without a reason".to_string(),
+                        hint: "append a short justification after the closing paren".to_string(),
+                    }),
+                    Allow::No => out.push(Finding {
+                        rule: RULE,
+                        file: sf.path.clone(),
+                        line: li + 1,
+                        message: format!(
+                            "ScorePlugin `{name}` touches interior mutability but does not \
+                             override cacheable()"
+                        ),
+                        hint: "add an explicit `fn cacheable(&self) -> bool` (true only if \
+                               score is a pure function of the cache key; document why), or \
+                               drop the interior mutability"
+                            .to_string(),
+                    }),
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `impl ScorePlugin for Name {` → `Name` (generics and the trait's
+/// crate path tolerated).
+fn score_impl_target(bare_line: &str) -> Option<String> {
+    let pos = bare_line.find("impl")?;
+    let rest = &bare_line[pos..];
+    if !rest.contains("ScorePlugin") || !rest.contains(" for ") {
+        return None;
+    }
+    let after_for = &rest[rest.find(" for ")? + " for ".len()..];
+    let name: String = after_for
+        .trim_start()
+        .chars()
+        .take_while(|&c| c.is_ascii_alphanumeric() || c == '_')
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Line ranges of `struct Name …` and inherent `impl Name {` blocks in
+/// the same file (non-test).
+fn type_regions(sf: &SourceFile, name: &str) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let struct_tok = format!("struct {name}");
+    let impl_tok = format!("impl {name}");
+    for (li, line) in sf.bare.iter().enumerate() {
+        if sf.test_mask[li] {
+            continue;
+        }
+        let is_struct = !token_occurrences(line, &struct_tok).is_empty();
+        // Inherent impl only: `impl Name {` / `impl Name<…>`, not
+        // `impl Trait for Name`.
+        let is_inherent_impl =
+            !token_occurrences(line, &impl_tok).is_empty() && !line.contains(" for ");
+        if is_struct || is_inherent_impl {
+            if let Some(range) = brace_block(sf, li) {
+                out.push(range);
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,184 @@
+//! `test-registration` — a test file that exists but is not wired into
+//! `Cargo.toml` never runs under `cargo test`, and a `[[test]]` target
+//! with no CI step can silently rot on CI-only regressions (PR 6
+//! shipped exactly this retro-fix for `drs_equivalence`). Three-way
+//! check:
+//!
+//! 1. every `rust/tests/*.rs` file has a `[[test]]` target whose
+//!    `path` points at it;
+//! 2. every `[[test]]` target's `path` exists in the tree;
+//! 3. every `[[test]]` target's `name` appears as `--test <name>` in a
+//!    (non-comment) line of `.github/workflows/ci.yml`.
+
+use crate::analysis::{Finding, RepoTree};
+use std::collections::BTreeSet;
+
+pub const RULE: &str = "test-registration";
+
+const MANIFEST: &str = "Cargo.toml";
+const CI: &str = ".github/workflows/ci.yml";
+
+pub fn check(tree: &RepoTree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(manifest) = tree.get(MANIFEST) else {
+        return vec![missing(MANIFEST)];
+    };
+    let targets = test_targets(manifest);
+
+    // (1) every test file is registered.
+    for path in tree.files.keys() {
+        if !(path.starts_with("rust/tests/") && path.ends_with(".rs")) {
+            continue;
+        }
+        if !targets.iter().any(|t| t.path.as_deref() == Some(path.as_str())) {
+            out.push(Finding {
+                rule: RULE,
+                file: path.clone(),
+                line: 0,
+                message: format!("no [[test]] target in {MANIFEST} points at this file"),
+                hint: format!(
+                    "add `[[test]]\\nname = \"<stem>\"\\npath = \"{path}\"` to {MANIFEST}"
+                ),
+            });
+        }
+    }
+
+    // (2) every target's path exists; (3) every target runs in CI.
+    let ci_tests = tree.get(CI).map(ci_test_names);
+    for t in &targets {
+        match &t.path {
+            None => out.push(Finding {
+                rule: RULE,
+                file: MANIFEST.to_string(),
+                line: t.line + 1,
+                message: format!("[[test]] target \"{}\" has no path", t.name_or("?")),
+                hint: "add a `path = \"rust/tests/….rs\"` entry".to_string(),
+            }),
+            Some(p) => {
+                if tree.get(p).is_none() {
+                    out.push(Finding {
+                        rule: RULE,
+                        file: MANIFEST.to_string(),
+                        line: t.line + 1,
+                        message: format!("[[test]] path \"{p}\" does not exist"),
+                        hint: "fix the path or delete the stale target".to_string(),
+                    });
+                }
+            }
+        }
+        match (&t.name, &ci_tests) {
+            (None, _) => out.push(Finding {
+                rule: RULE,
+                file: MANIFEST.to_string(),
+                line: t.line + 1,
+                message: "[[test]] target has no name".to_string(),
+                hint: "add a `name = \"…\"` entry".to_string(),
+            }),
+            (Some(name), Some(ci)) => {
+                if !ci.contains(name.as_str()) {
+                    out.push(Finding {
+                        rule: RULE,
+                        file: CI.to_string(),
+                        line: 0,
+                        message: format!(
+                            "test target \"{name}\" has no `--test {name}` step in CI"
+                        ),
+                        hint: format!(
+                            "add (or extend) a `cargo test -q --test {name}` step in {CI}"
+                        ),
+                    });
+                }
+            }
+            (Some(_), None) => {}
+        }
+    }
+    if tree.get(CI).is_none() {
+        out.push(missing(CI));
+    }
+    out
+}
+
+struct TestTarget {
+    name: Option<String>,
+    path: Option<String>,
+    /// 0-based line of the `[[test]]` header.
+    line: usize,
+}
+
+impl TestTarget {
+    fn name_or<'a>(&'a self, dflt: &'a str) -> &'a str {
+        self.name.as_deref().unwrap_or(dflt)
+    }
+}
+
+/// Minimal TOML walk: `[[test]]` opens a target, any other `[`-header
+/// closes it, `name =` / `path =` quoted values fill it in.
+fn test_targets(manifest: &str) -> Vec<TestTarget> {
+    let mut out: Vec<TestTarget> = Vec::new();
+    let mut open = false;
+    for (li, raw) in manifest.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line == "[[test]]" {
+            out.push(TestTarget { name: None, path: None, line: li });
+            open = true;
+            continue;
+        }
+        if line.starts_with('[') {
+            open = false;
+            continue;
+        }
+        if !open {
+            continue;
+        }
+        if let Some(t) = out.last_mut() {
+            if let Some(v) = toml_string_value(line, "name") {
+                t.name = Some(v);
+            }
+            if let Some(v) = toml_string_value(line, "path") {
+                t.path = Some(v);
+            }
+        }
+    }
+    out
+}
+
+fn toml_string_value(line: &str, key: &str) -> Option<String> {
+    let rest = line.strip_prefix(key)?.trim_start().strip_prefix('=')?.trim();
+    let rest = rest.strip_prefix('"')?;
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+/// Every `--test <name>` mention in the workflow, YAML comments
+/// stripped so a commented-out step doesn't satisfy the rule.
+fn ci_test_names(ci: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for raw in ci.lines() {
+        let line = match raw.find('#') {
+            Some(i) if i == 0 || raw[..i].ends_with(' ') => &raw[..i],
+            _ => raw,
+        };
+        let mut rest = line;
+        while let Some(pos) = rest.find("--test ") {
+            let tail = &rest[pos + "--test ".len()..];
+            let name: String = tail
+                .chars()
+                .take_while(|&c| c.is_ascii_alphanumeric() || c == '_')
+                .collect();
+            if !name.is_empty() {
+                out.insert(name);
+            }
+            rest = tail;
+        }
+    }
+    out
+}
+
+fn missing(file: &str) -> Finding {
+    Finding {
+        rule: RULE,
+        file: file.to_string(),
+        line: 0,
+        message: "required input file is missing from the tree".to_string(),
+        hint: "restore the file (or fix RepoTree::load coverage)".to_string(),
+    }
+}

@@ -1,0 +1,645 @@
+//! Repo-invariant static analysis — the engine behind `repro lint`.
+//!
+//! The reproduction's credibility rests on invariants the compiler
+//! cannot see: every counter lives in [`crate::obs::METRICS_CATALOG`]
+//! *and* the docs tables, every `rust/tests/` file is registered in
+//! `Cargo.toml` *and* runs in CI, the place→filter→score→bind hot path
+//! stays free of panicking shortcuts, and a [`ScorePlugin`]
+//! (`crate::sched::ScorePlugin`) that touches interior mutability must
+//! make an explicit `cacheable()` call so the revision-keyed score
+//! cache's bit-identity guarantee is a decision, not an accident.
+//! Before this subsystem those invariants were enforced by hand-written
+//! drift tests that themselves drifted; now they are named, fixable,
+//! allowlistable rules checked mechanically on every commit
+//! (`docs/analysis.md` catalogues them).
+//!
+//! Design constraints, in the same spirit as the vendored `anyhow`
+//! shim: zero dependencies, hand-rolled line/token scanning — no
+//! syn/proc-macro parsing. The scanner is deliberately conservative: a
+//! [`SourceFile`] carries the raw lines plus two sanitized views
+//! (comments blanked; comments *and* string/char contents blanked) and
+//! a `#[cfg(test)]` mask, which is enough for every rule to avoid the
+//! classic greps-lie failure modes (tokens inside strings, comments,
+//! or test modules).
+//!
+//! Rules live one-per-family under [`lint`]; suppression is inline:
+//!
+//! ```text
+//! // lint:allow(<rule>[,<rule>…]) <reason — required>
+//! ```
+//!
+//! on the offending line or the line directly above. An allowlist
+//! comment without a reason is itself a finding.
+
+pub mod lint;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// One rule violation. `line` is 1-based; `0` means the finding is
+/// file- or repo-level (e.g. a missing catalog entry has no single
+/// offending line).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    /// A concrete remediation, shown under `--fix-hints`.
+    pub hint: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line > 0 {
+            write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+        } else {
+            write!(f, "{}: [{}] {}", self.file, self.rule, self.message)
+        }
+    }
+}
+
+/// The analyzed snapshot of the repository: repo-relative path →
+/// contents. Loaded from disk for the real tree ([`RepoTree::load`])
+/// or assembled in-memory for rule fixtures ([`RepoTree::from_files`]),
+/// so every rule is a pure function of the tree.
+pub struct RepoTree {
+    pub files: BTreeMap<String, String>,
+}
+
+impl RepoTree {
+    /// Read the analyzed subset of the repo: `Cargo.toml`, the CI
+    /// workflow, `docs/*.md`, `rust/src/**/*.rs` and `rust/tests/*.rs`.
+    /// Missing singletons are tolerated here (each rule reports its own
+    /// missing inputs with a proper finding).
+    pub fn load(root: &Path) -> io::Result<RepoTree> {
+        let mut files = BTreeMap::new();
+        for rel in ["Cargo.toml", ".github/workflows/ci.yml"] {
+            let abs = root.join(rel);
+            if abs.is_file() {
+                files.insert(rel.to_string(), fs::read_to_string(&abs)?);
+            }
+        }
+        read_dir_files(&root.join("docs"), "docs", ".md", false, &mut files)?;
+        read_dir_files(&root.join("rust/src"), "rust/src", ".rs", true, &mut files)?;
+        read_dir_files(&root.join("rust/tests"), "rust/tests", ".rs", false, &mut files)?;
+        Ok(RepoTree { files })
+    }
+
+    /// Assemble a fixture tree for analyzer tests.
+    pub fn from_files(files: &[(&str, &str)]) -> RepoTree {
+        RepoTree {
+            files: files.iter().map(|(p, c)| (p.to_string(), c.to_string())).collect(),
+        }
+    }
+
+    pub fn get(&self, path: &str) -> Option<&str> {
+        self.files.get(path).map(String::as_str)
+    }
+
+    /// Sanitized view of one Rust source file, if present.
+    pub fn source(&self, path: &str) -> Option<SourceFile> {
+        self.get(path).map(|c| SourceFile::new(path, c))
+    }
+
+    /// Sanitized views of every `.rs` file under `prefix`
+    /// (e.g. `"rust/src/"`), in path order.
+    pub fn sources(&self, prefix: &str) -> Vec<SourceFile> {
+        self.files
+            .iter()
+            .filter(|(p, _)| p.starts_with(prefix) && p.ends_with(".rs"))
+            .map(|(p, c)| SourceFile::new(p, c))
+            .collect()
+    }
+}
+
+/// Recursively (if `recurse`) collect files under `dir` with the given
+/// extension into `files`, keyed by `rel_prefix/<subpath>`.
+fn read_dir_files(
+    dir: &Path,
+    rel_prefix: &str,
+    ext: &str,
+    recurse: bool,
+    files: &mut BTreeMap<String, String>,
+) -> io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<_> = fs::read_dir(dir)?.filter_map(|e| e.ok()).collect();
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().to_string();
+        let rel = format!("{rel_prefix}/{name}");
+        if path.is_dir() {
+            if recurse {
+                read_dir_files(&path, &rel, ext, recurse, files)?;
+            }
+        } else if name.ends_with(ext) {
+            files.insert(rel, fs::read_to_string(&path)?);
+        }
+    }
+    Ok(())
+}
+
+/// A Rust source file plus the sanitized views the rules scan.
+///
+/// * `raw_lines` — the file verbatim (allowlist comments live here).
+/// * `code` — comments blanked, string *contents* kept: the view for
+///   rules that read string literals (catalog keys, registry keys).
+/// * `bare` — comments **and** string/char contents blanked: the view
+///   for token scans (`panic!`, `Mutex<`) and brace-depth tracking,
+///   immune to `"}"`-in-a-format-string style corruption.
+/// * `test_mask[i]` — line `i` (0-based) is inside a `#[cfg(test)]`
+///   block.
+///
+/// All three views preserve line structure exactly, so a line index is
+/// valid across them.
+pub struct SourceFile {
+    pub path: String,
+    pub raw_lines: Vec<String>,
+    pub code: Vec<String>,
+    pub bare: Vec<String>,
+    pub test_mask: Vec<bool>,
+}
+
+impl SourceFile {
+    pub fn new(path: &str, content: &str) -> SourceFile {
+        let (code_text, bare_text) = sanitize(content);
+        let raw_lines: Vec<String> = content.split('\n').map(str::to_string).collect();
+        let code: Vec<String> = code_text.split('\n').map(str::to_string).collect();
+        let bare: Vec<String> = bare_text.split('\n').map(str::to_string).collect();
+        let test_mask = test_mask(&bare);
+        SourceFile { path: path.to_string(), raw_lines, code, bare, test_mask }
+    }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Character-level sanitizer. Returns `(code, bare)`; see
+/// [`SourceFile`] for what each view blanks. Handles line and nested
+/// block comments, plain/byte/raw strings (`"…"`, `b"…"`, `r"…"`,
+/// `r#"…"#`), char literals incl. escapes (`'x'`, `'\n'`, `'\u{…}'`,
+/// `'"'`, `'{'`) and distinguishes them from lifetimes (`'a`,
+/// `'static`). Newlines always pass through so line numbers survive.
+fn sanitize(raw: &str) -> (String, String) {
+    let b: Vec<char> = raw.chars().collect();
+    let n = b.len();
+    let mut code = String::with_capacity(raw.len());
+    let mut bare = String::with_capacity(raw.len());
+    let mut i = 0;
+    // Push one source char as blank (newlines survive) to one view.
+    let blank = |out: &mut String, c: char| out.push(if c == '\n' { '\n' } else { ' ' });
+    while i < n {
+        let c = b[i];
+        // Line comment: blank to end of line in both views.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                code.push(' ');
+                bare.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (Rust nests them): blank, keep newlines.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 0usize;
+            while i < n {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    code.push_str("  ");
+                    bare.push_str("  ");
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    code.push_str("  ");
+                    bare.push_str("  ");
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    blank(&mut code, b[i]);
+                    blank(&mut bare, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (and byte-raw) strings: r"…", r#"…"#, br#"…"#.
+        if (c == 'r' || c == 'b') && (i == 0 || !is_ident_char(b[i - 1])) {
+            let mut j = i;
+            if b[j] == 'b' && j + 1 < n && b[j + 1] == 'r' {
+                j += 1;
+            }
+            if b[j] == 'r' {
+                let mut k = j + 1;
+                let mut hashes = 0;
+                while k < n && b[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && b[k] == '"' {
+                    // Opening delimiter: keep in `code`, blank in `bare`.
+                    for &ch in &b[i..=k] {
+                        code.push(ch);
+                        bare.push(' ');
+                    }
+                    i = k + 1;
+                    // Scan for `"` followed by `hashes` hashes.
+                    loop {
+                        if i >= n {
+                            break;
+                        }
+                        if b[i] == '"' && b[i + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes {
+                            for _ in 0..=hashes {
+                                if i < n {
+                                    code.push(b[i]);
+                                    bare.push(' ');
+                                    i += 1;
+                                }
+                            }
+                            break;
+                        }
+                        code.push(b[i]);
+                        blank(&mut bare, b[i]);
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+            // Not a raw string ('r'/'b' as an ordinary char): fall through.
+        }
+        // Plain (and byte) string literal.
+        if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"' && (i == 0 || !is_ident_char(b[i - 1]))) {
+            if c == 'b' {
+                code.push('b');
+                bare.push(' ');
+                i += 1;
+            }
+            code.push('"');
+            bare.push(' ');
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    code.push(b[i]);
+                    blank(&mut bare, b[i]);
+                    i += 1;
+                    code.push(b[i]);
+                    blank(&mut bare, b[i]);
+                    i += 1;
+                    continue;
+                }
+                if b[i] == '"' {
+                    code.push('"');
+                    bare.push(' ');
+                    i += 1;
+                    break;
+                }
+                // Keep newlines in both views (multi-line strings).
+                if b[i] == '\n' {
+                    code.push('\n');
+                    bare.push('\n');
+                } else {
+                    code.push(b[i]);
+                    bare.push(' ');
+                }
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // Escaped char literal: '\n', '\\', '\'', '\u{…}'.
+                let mut k = i + 3; // opening quote, backslash, escaped char
+                while k < n && b[k] != '\'' {
+                    k += 1;
+                }
+                code.push('\'');
+                bare.push(' ');
+                for _ in i + 1..k {
+                    code.push(' ');
+                    bare.push(' ');
+                }
+                if k < n {
+                    code.push('\'');
+                    bare.push(' ');
+                    k += 1;
+                }
+                i = k;
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                // Plain char literal — content may be '"' or '{', so
+                // blank it in both views.
+                code.push('\'');
+                code.push(' ');
+                code.push('\'');
+                bare.push_str("   ");
+                i += 3;
+                continue;
+            }
+            // Lifetime tick (or stray quote): harmless, keep.
+            code.push('\'');
+            bare.push('\'');
+            i += 1;
+            continue;
+        }
+        code.push(c);
+        bare.push(c);
+        i += 1;
+    }
+    (code, bare)
+}
+
+/// Per-line `#[cfg(test)]` mask, computed over the `bare` view (brace
+/// depth cannot be corrupted by braces in strings/comments there). The
+/// attribute line, the item header and the whole brace block — closing
+/// brace included — are masked.
+fn test_mask(bare_text: &str) -> Vec<bool> {
+    let lines: Vec<&str> = bare_text.split('\n').collect();
+    let mut mask = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false; // saw #[cfg(test)], waiting for its block
+    let mut test_depth: i64 = -1;
+    for (li, line) in lines.iter().enumerate() {
+        if pending || test_depth >= 0 {
+            mask[li] = true;
+        }
+        if test_depth < 0 && line.contains("#[cfg(test)]") {
+            pending = true;
+            mask[li] = true;
+        }
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        test_depth = depth;
+                        pending = false;
+                    }
+                }
+                '}' => {
+                    if depth == test_depth {
+                        test_depth = -1;
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+        }
+    }
+    mask
+}
+
+/// Parse an inline allowlist comment out of a raw source line:
+/// `// lint:allow(rule-a,rule-b) reason text`. Returns the named rules
+/// and the (possibly empty) reason.
+pub fn allow_directive(raw_line: &str) -> Option<(Vec<String>, String)> {
+    let marker = "// lint:allow(";
+    let idx = raw_line.find(marker)?;
+    let rest = &raw_line[idx + marker.len()..];
+    let close = rest.find(')')?;
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let reason = rest[close + 1..].trim().to_string();
+    Some((rules, reason))
+}
+
+/// Allowlist verdict for an occurrence of `rule` at 0-based `line_idx`.
+pub enum Allow {
+    /// No matching directive: report the violation.
+    No,
+    /// Suppressed by a directive with a reason.
+    Yes,
+    /// A directive names the rule but gives no reason — itself a
+    /// finding (payload: 0-based line of the bad directive).
+    MissingReason(usize),
+}
+
+/// Check the occurrence line and the line directly above for a
+/// suppressing `// lint:allow(<rule>) <reason>` directive.
+pub fn allowed(sf: &SourceFile, line_idx: usize, rule: &str) -> Allow {
+    let candidates = [Some(line_idx), line_idx.checked_sub(1)];
+    for li in candidates.into_iter().flatten() {
+        if let Some(raw) = sf.raw_lines.get(li) {
+            if let Some((rules, reason)) = allow_directive(raw) {
+                if rules.iter().any(|r| r == rule) {
+                    if reason.is_empty() {
+                        return Allow::MissingReason(li);
+                    }
+                    return Allow::Yes;
+                }
+            }
+        }
+    }
+    Allow::No
+}
+
+/// Extract `"…"` string literal contents (with their 0-based line
+/// index) from a joined multi-line `code`-view snippet. Escapes are
+/// skipped over, not decoded — catalog/registry keys never contain
+/// them.
+pub fn string_literals(code_text: &str) -> Vec<(usize, String)> {
+    let b: Vec<char> = code_text.chars().collect();
+    let n = b.len();
+    let mut out = Vec::new();
+    let mut line = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        match b[i] {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            '"' => {
+                let start_line = line;
+                let mut lit = String::new();
+                i += 1;
+                while i < n {
+                    if b[i] == '\\' && i + 1 < n {
+                        lit.push(b[i]);
+                        lit.push(b[i + 1]);
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == '"' {
+                        i += 1;
+                        break;
+                    }
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    lit.push(b[i]);
+                    i += 1;
+                }
+                out.push((start_line, lit));
+            }
+            _ => i += 1,
+        }
+    }
+    out
+}
+
+/// Find the 0-based line range `[start, end]` of the brace block that
+/// opens at or after `start_li` (tracked on the `bare` view). Returns
+/// `None` when no `{` opens by `end of file` (e.g. a unit struct).
+pub fn brace_block(sf: &SourceFile, start_li: usize) -> Option<(usize, usize)> {
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    for li in start_li..sf.bare.len() {
+        for c in sf.bare[li].chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        return Some((start_li, li));
+                    }
+                }
+                ';' if !opened && depth == 0 => {
+                    // Item ended before any block opened (unit struct,
+                    // tuple struct): the item is its header lines.
+                    return Some((start_li, li));
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+/// 0-based line range of a bracketed const table
+/// (`const NAME: &[…] = &[ … ];`) whose header is at `start_li`:
+/// `[`/`]` depth is tracked from just past the `=` on the header line,
+/// so the brackets in the type annotation don't close the block early.
+pub fn table_block(sf: &SourceFile, start_li: usize) -> Option<(usize, usize)> {
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    for li in start_li..sf.bare.len() {
+        let line = &sf.bare[li];
+        let from = if li == start_li {
+            line.find('=').map(|p| p + 1).unwrap_or(0)
+        } else {
+            0
+        };
+        for (bi, c) in line.char_indices() {
+            if bi < from {
+                continue;
+            }
+            match c {
+                '[' => {
+                    depth += 1;
+                    opened = true;
+                }
+                ']' => {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        return Some((start_li, li));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+/// Occurrences of `token` in `line` at proper word boundaries: the
+/// character before and after the match must not be identifier chars
+/// (checked only where the token itself starts/ends with one).
+pub fn token_occurrences(line: &str, token: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let bytes = line.as_bytes();
+    let tb = token.as_bytes();
+    let first_ident = token.chars().next().map(is_ident_char).unwrap_or(false);
+    let last_ident = token.chars().last().map(is_ident_char).unwrap_or(false);
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(token) {
+        let at = from + pos;
+        let before_ok = !first_ident
+            || at == 0
+            || !is_ident_char(bytes[at - 1] as char);
+        let after = at + tb.len();
+        let after_ok = !last_ident
+            || after >= bytes.len()
+            || !is_ident_char(bytes[after] as char);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_blanks_comments_and_strings() {
+        let src = "let a = \"panic!\"; // panic! here\nlet b = 1; /* unsafe */";
+        let (code, bare) = sanitize(src);
+        assert!(code.contains("\"panic!\""), "code keeps string contents: {code}");
+        assert!(!code.contains("here"), "code blanks comments: {code}");
+        assert!(!bare.contains("panic!"), "bare blanks both: {bare}");
+        assert!(!bare.contains("unsafe"), "bare blanks block comments: {bare}");
+        assert_eq!(code.split('\n').count(), 2);
+        assert_eq!(bare.split('\n').count(), 2);
+    }
+
+    #[test]
+    fn sanitize_handles_char_literals_and_lifetimes() {
+        let src = "if c == '\"' { x('{', \"y\") } fn f<'a>(s: &'a str) {}";
+        let (code, bare) = sanitize(src);
+        // The quote char literal must not open a string.
+        assert!(code.contains("\"y\""), "string after char literal intact: {code}");
+        assert!(!bare.contains('{') || bare.matches('{').count() == bare.matches('}').count());
+        assert!(code.contains("<'a>"), "lifetimes survive: {code}");
+    }
+
+    #[test]
+    fn sanitize_handles_raw_and_escaped() {
+        let src = "let r = r#\"no \" end\"#; let e = \"a\\\"b\"; let c = '\\n';";
+        let (code, bare) = sanitize(src);
+        assert!(code.contains("no \" end"), "{code}");
+        assert!(!bare.contains("no"), "{bare}");
+        assert!(code.ends_with("' ';") || code.contains("'"), "{code}");
+    }
+
+    #[test]
+    fn test_mask_covers_block() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}";
+        let sf = SourceFile::new("x.rs", src);
+        assert_eq!(sf.test_mask, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn allow_directive_parses_rules_and_reason() {
+        let (rules, reason) =
+            allow_directive("    x(); // lint:allow(hot-path-hygiene, other) join is safe").unwrap();
+        assert_eq!(rules, vec!["hot-path-hygiene", "other"]);
+        assert_eq!(reason, "join is safe");
+        let (_, empty) = allow_directive("// lint:allow(r)").unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn token_occurrences_respect_boundaries() {
+        assert_eq!(token_occurrences("let unsafe_x = unsafe { 1 };", "unsafe"), vec![15]);
+        assert!(token_occurrences("x.unwrap_or(1)", ".unwrap()").is_empty());
+        assert_eq!(token_occurrences("x.unwrap().y.unwrap()", ".unwrap()"), vec![1, 12]);
+    }
+}

@@ -54,6 +54,7 @@
 //! println!("final EOPC = {:.1} kW", out.final_eopc() / 1e3);
 //! ```
 
+pub mod analysis;
 pub mod cluster;
 pub mod coordinator;
 pub mod experiments;

@@ -8,7 +8,8 @@
 //! repro ext-profiles [--reps 10] [--scale 1.0] [--out results] (composite profile DSL sweep)
 //! repro ext-filters [--reps 10] [--scale 1.0] [--out results]  (constraint-aware filter sweep)
 //! repro ext-drs    [--reps 10] [--scale 1.0] [--out results]   (DRS sleep/wake on diurnal load)
-//! repro list-plugins                                           (every registry key + description)
+//! repro list-plugins [--check]                                 (every registry key + description; --check exits non-zero on registry/docs/catalog drift)
+//! repro lint       [--json] [--fix-hints] [--root DIR]         (repo-invariant static analysis — docs/analysis.md)
 //! repro explain    [--policy pwrfgd:0.1] [--trace default] [--seed 42] [--at 1] [--top 5]
 //! repro bench-scale [--quick] [--out BENCH_scale.json]         (scale sweep + phase latencies)
 //! repro trace      <default|multi-gpu-20|sharing-gpu-100|constrained-50|mig-30|diurnal-60|...> [--seed 42]
@@ -43,7 +44,7 @@ use repro::util::cli::parse_args;
 
 const VALUE_KEYS: &[&str] = &[
     "policy", "trace", "seed", "scale", "target", "reps", "out", "addr", "alpha",
-    "artifacts", "tasks", "trace-decisions", "obs-summary", "at", "top",
+    "artifacts", "tasks", "trace-decisions", "obs-summary", "at", "top", "root",
 ];
 
 fn main() -> Result<()> {
@@ -58,7 +59,8 @@ fn main() -> Result<()> {
         Some("ext-profiles") => cmd_experiment(&args, Some("ext-profiles")),
         Some("ext-filters") => cmd_experiment(&args, Some("ext-filters")),
         Some("ext-drs") => cmd_experiment(&args, Some("ext-drs")),
-        Some("list-plugins") => cmd_list_plugins(),
+        Some("list-plugins") => cmd_list_plugins(&args),
+        Some("lint") => cmd_lint(&args),
         Some("explain") => cmd_explain(&args),
         Some("bench-scale") => cmd_bench_scale(&args),
         Some("trace") => cmd_trace(&args),
@@ -68,7 +70,7 @@ fn main() -> Result<()> {
         Some("plot") => cmd_plot(&args),
         _ => {
             eprintln!(
-                "usage: repro <simulate|experiment|ext-mig|ext-mig-het|ext-profiles|ext-filters|ext-drs|list-plugins|explain|bench-scale|trace|inventory|serve|scorer-check|plot> [options]\n\
+                "usage: repro <simulate|experiment|ext-mig|ext-mig-het|ext-profiles|ext-filters|ext-drs|list-plugins|lint|explain|bench-scale|trace|inventory|serve|scorer-check|plot> [options]\n\
                  see rust/src/main.rs header for details"
             );
             Ok(())
@@ -78,8 +80,10 @@ fn main() -> Result<()> {
 
 /// Print every registered extension-point key (score / bind / mod /
 /// hook / filter) with its one-line description — the discoverability
-/// companion of the `--policy` DSL (docs/scheduler.md).
-fn cmd_list_plugins() -> Result<()> {
+/// companion of the `--policy` DSL (docs/scheduler.md). `--check`
+/// additionally runs the registry/docs/catalog drift rules of the
+/// static analyzer (docs/analysis.md) and exits non-zero on drift.
+fn cmd_list_plugins(args: &repro::util::cli::Args) -> Result<()> {
     println!("{:<8} {:<16} description", "point", "key");
     for (kind, key, desc) in repro::sched::profile::registry_catalog() {
         println!("{kind:<8} {key:<16} {desc}");
@@ -96,7 +100,84 @@ fn cmd_list_plugins() -> Result<()> {
         };
         println!("{kind:<10} {key:<26} {desc}");
     }
+    if args.has_flag("check") {
+        let root = lint_root(args)?;
+        let tree = repro::analysis::RepoTree::load(&root)
+            .with_context(|| format!("reading repo tree at {}", root.display()))?;
+        let findings = repro::analysis::lint::registry_drift(&tree);
+        println!();
+        if findings.is_empty() {
+            println!("list-plugins --check: registries, docs and catalog agree");
+        } else {
+            for f in &findings {
+                eprintln!("{f}");
+            }
+            eprintln!("list-plugins --check: {} drift finding(s)", findings.len());
+            std::process::exit(1);
+        }
+    }
     Ok(())
+}
+
+/// Resolve the repo root for analysis commands: `--root DIR`, or the
+/// nearest ancestor of the current directory holding a `Cargo.toml`.
+fn lint_root(args: &repro::util::cli::Args) -> Result<std::path::PathBuf> {
+    if let Some(dir) = args.opt("root") {
+        return Ok(std::path::PathBuf::from(dir));
+    }
+    let mut dir = std::env::current_dir().context("resolving current directory")?;
+    loop {
+        if dir.join("Cargo.toml").is_file() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            bail!("no Cargo.toml found above the current directory; pass --root <repo>");
+        }
+    }
+}
+
+/// `repro lint` — run every repo-invariant rule (docs/analysis.md) and
+/// exit non-zero on findings. `--json` emits machine-readable output,
+/// `--fix-hints` appends each finding's remediation hint.
+fn cmd_lint(args: &repro::util::cli::Args) -> Result<()> {
+    use repro::analysis::{lint, RepoTree};
+    let root = lint_root(args)?;
+    let tree = RepoTree::load(&root)
+        .with_context(|| format!("reading repo tree at {}", root.display()))?;
+    let findings = lint::run_all(&tree);
+    if args.has_flag("json") {
+        // One JSON object per line (same JSONL convention as the
+        // decision trace) so CI annotations can stream it.
+        use repro::util::json::Json;
+        for f in &findings {
+            let obj = Json::obj(vec![
+                ("rule", Json::Str(f.rule.to_string())),
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("message", Json::Str(f.message.clone())),
+                ("hint", Json::Str(f.hint.clone())),
+            ]);
+            println!("{}", obj.dump());
+        }
+    } else {
+        for f in &findings {
+            println!("{f}");
+            if args.has_flag("fix-hints") {
+                println!("    hint: {}", f.hint);
+            }
+        }
+    }
+    let files = tree.files.len();
+    let rules = lint::RULES.len();
+    if findings.is_empty() {
+        if !args.has_flag("json") {
+            println!("repro lint: clean ({rules} rules over {files} files)");
+        }
+        Ok(())
+    } else {
+        eprintln!("repro lint: {} finding(s) ({rules} rules over {files} files)", findings.len());
+        std::process::exit(1);
+    }
 }
 
 /// Render experiment CSVs to SVG. With no positional args, plots every

@@ -60,6 +60,7 @@
 
 use crate::cluster::node::{Node, Placement, PowerState};
 use crate::cluster::Datacenter;
+use crate::power;
 use crate::sched::filter::{
     AffinityFilter, FilterCtx, FilterPlugin, GpuModelFilter, LabelsFilter,
 };
@@ -191,6 +192,16 @@ impl DrsHook {
         self.transition_j
     }
 
+    /// Estimated cost of waking `node`: the configured one-time charge
+    /// plus the idle power it will burn over the `wake_latency` ticks
+    /// it spends booting (watt·ticks — an energy *proxy* used only to
+    /// rank wake targets). The ledger still charges exactly
+    /// `wake_cost_j` per wake, so the `transition_j` invariant —
+    /// `sleeps·sleep_cost_j + wakes·wake_cost_j` — is untouched.
+    fn wake_cost_estimate_j(&self, node: &Node) -> f64 {
+        self.cfg.wake_cost_j + self.cfg.wake_latency as f64 * power::p_node(node)
+    }
+
     /// (Re)size the idle ledger to the fleet. A freshly observed node
     /// without tasks counts as idle from now.
     fn ensure_tracking(&mut self, dc: &Datacenter) {
@@ -229,14 +240,30 @@ impl DrsHook {
             invalidate(i);
             return true;
         }
-        // Otherwise boot the first sleeper that could host the task
-        // (lowest id — deterministic; power-aware selection is a noted
-        // ROADMAP follow-up). With zero wake latency the node is usable
-        // immediately; otherwise it becomes future capacity and only
-        // later arrivals benefit (this task is lost).
-        let sleep_hit = (0..n)
-            .find(|&i| dc.nodes[i].power_state == PowerState::Asleep && could_help(dc, i));
-        if let Some(i) = sleep_hit {
+        // Otherwise boot the *cheapest* admissible sleeper: minimum
+        // estimated wake cost (`wake_cost_j` plus idle power burned
+        // over the boot latency), ties broken by lowest node id — so a
+        // homogeneous fleet degenerates to the legacy first-by-index
+        // pick and existing equivalence pins hold. `could_help` (which
+        // may evaluate the whole filter chain) only runs on strictly
+        // cheaper candidates. With zero wake latency the node is
+        // usable immediately; otherwise it becomes future capacity and
+        // only later arrivals benefit (this task is lost).
+        let mut sleep_hit: Option<(usize, f64)> = None;
+        for i in 0..n {
+            if dc.nodes[i].power_state != PowerState::Asleep {
+                continue;
+            }
+            let est = self.wake_cost_estimate_j(&dc.nodes[i]);
+            let cheaper = match sleep_hit {
+                Some((_, best)) => est < best,
+                None => true,
+            };
+            if cheaper && could_help(dc, i) {
+                sleep_hit = Some((i, est));
+            }
+        }
+        if let Some((i, _)) = sleep_hit {
             self.wakes += 1;
             self.transition_j += self.cfg.wake_cost_j;
             self.idle_since[i] = Some(self.now);
@@ -562,6 +589,69 @@ mod tests {
         let t = Task::new(1, 1.0, 0.0, GpuDemand::Whole(1));
         assert!(h.post_fail(&mut dc, &t, &mut inval), "zero-latency wake must retry");
         assert_eq!(dc.nodes[0].power_state, PowerState::Active);
+    }
+
+    #[test]
+    fn wake_pass_picks_cheapest_sleeper() {
+        use crate::cluster::inventory::NodePool;
+        use crate::cluster::GpuModel;
+        // Node 0: 8 GPUs, node 1: 1 GPU — same model, so booting
+        // node 1 burns far less idle power over the wake latency.
+        let pool = |gpus| NodePool {
+            count: 1,
+            vcpus: 96.0,
+            mem: 393_216.0,
+            gpu_model: Some(GpuModel::G2),
+            gpus_per_node: gpus,
+            mig: false,
+            labels: Vec::new(),
+        };
+        let mut dc = ClusterSpec { zones: 0, pools: vec![pool(8), pool(1)] }.build();
+        let mut h = DrsHook::new(DrsConfig {
+            idle_timeout: 1.0,
+            wake_latency: 50,
+            sleep_cost_j: 0.0,
+            wake_cost_j: 5.0,
+        });
+        let mut inval = |_n: usize| {};
+        for now in 1..=3 {
+            h.on_tick(&mut dc, now, &mut inval);
+        }
+        assert!(dc.nodes.iter().all(|n| n.power_state == PowerState::Asleep));
+        assert!(h.wake_cost_estimate_j(&dc.nodes[1]) < h.wake_cost_estimate_j(&dc.nodes[0]));
+        // The task fits either node; the hook must boot the cheap one,
+        // not the first by index.
+        let t = Task::new(9, 1.0, 0.0, GpuDemand::Whole(1));
+        assert!(!h.post_fail(&mut dc, &t, &mut inval), "50-tick boot: no retry");
+        assert_eq!(dc.nodes[0].power_state, PowerState::Asleep, "woke the expensive node");
+        assert_eq!(dc.nodes[1].power_state, PowerState::Waking { ready_at: 3 + 50 });
+        // A demand only the big node can serve still wakes the big node.
+        let big = Task::new(10, 1.0, 0.0, GpuDemand::Whole(8));
+        assert!(!h.post_fail(&mut dc, &big, &mut inval));
+        assert_eq!(dc.nodes[0].power_state, PowerState::Waking { ready_at: 3 + 50 });
+    }
+
+    #[test]
+    fn wake_pass_breaks_cost_ties_by_lowest_id() {
+        // Homogeneous fleet: every sleeper costs the same, so the
+        // legacy deterministic pick (lowest id) must be preserved.
+        let mut dc = ClusterSpec::tiny(3, 2, 0).build();
+        let mut h = DrsHook::new(DrsConfig {
+            idle_timeout: 1.0,
+            wake_latency: 4,
+            sleep_cost_j: 0.0,
+            wake_cost_j: 30.0,
+        });
+        let mut inval = |_n: usize| {};
+        for now in 1..=3 {
+            h.on_tick(&mut dc, now, &mut inval);
+        }
+        assert!(dc.nodes.iter().all(|n| n.power_state == PowerState::Asleep));
+        let t = Task::new(9, 1.0, 0.0, GpuDemand::Whole(1));
+        assert!(!h.post_fail(&mut dc, &t, &mut inval));
+        assert_eq!(dc.nodes[0].power_state, PowerState::Waking { ready_at: 3 + 4 });
+        assert_eq!(dc.nodes[1].power_state, PowerState::Asleep);
+        assert_eq!(dc.nodes[2].power_state, PowerState::Asleep);
     }
 
     #[test]

@@ -454,6 +454,7 @@ impl Scheduler {
         {
             let names: Vec<&str> = self.plugins.iter().map(|p| p.name()).collect();
             if let Err(e) = m.check_layout(&names) {
+                // lint:allow(hot-path-hygiene) debug-only layout check at attach time, not in the decision path
                 panic!("invalid modulator attachment: {e}");
             }
         }
@@ -563,6 +564,7 @@ impl Scheduler {
     pub fn from_policy(kind: crate::sched::PolicyKind) -> Scheduler {
         kind.profile()
             .build()
+            // lint:allow(hot-path-hygiene) constructor-time policy validation, documented under # Panics above
             .unwrap_or_else(|e| panic!("invalid policy {kind:?}: {e}"))
     }
 
@@ -730,12 +732,20 @@ impl Scheduler {
         if let Some(sc) = &mut self.score_cache {
             sc.ensure_epoch((rev, fleet_rev), self.plugins.len());
         }
+        // Both caches were (re)filled just above, so destructure them
+        // infallibly; if that invariant ever breaks, fail the decision
+        // instead of panicking mid-protocol.
+        let (Some((_, prepared)), Some((_, caps))) = (&self.prepared_cache, &self.caps_cache)
+        else {
+            self.obs.capture = cap;
+            return None;
+        };
         let ctx = SchedCtx {
             dc,
             workload,
-            prepared: &self.prepared_cache.as_ref().unwrap().1,
+            prepared,
             generations: &self.generations,
-            caps: self.caps_cache.unwrap().1,
+            caps: *caps,
         };
         let t_score = PhaseTimer::start(prof);
         // --- 2. WeightModulator extension point: retarget the plugin
@@ -751,7 +761,7 @@ impl Scheduler {
         let k = self.feasible.len();
         self.combined.clear();
         self.combined.resize(k, 0.0);
-        let per_node_mod = self.modulator.as_ref().is_some_and(|m| m.per_node());
+        let per_node_mod = self.modulator.as_deref().filter(|m| m.per_node());
         // Raw scores come from `score_one_plugin`: cache hits reuse
         // the stored f64 bit-for-bit, misses call the plugin (on shard
         // threads when enabled), so every downstream step (normalize,
@@ -760,34 +770,7 @@ impl Scheduler {
         let shards = self.score_shards;
         let mut stats = ScoreStats::default();
         let score_cache = &mut self.score_cache;
-        if !per_node_mod {
-            for (pi, (plugin, &weight)) in self.plugins.iter().zip(&self.eff_weights).enumerate() {
-                let cache = score_cache
-                    .as_mut()
-                    .filter(|_| plugin.cacheable())
-                    .map(|sc| &mut sc.plugins[pi]);
-                score_one_plugin(
-                    plugin.as_ref(),
-                    &ctx,
-                    task,
-                    sig,
-                    &self.feasible,
-                    &self.placements,
-                    cache,
-                    if plugin.cacheable() { shards } else { 1 },
-                    &mut self.raw,
-                    &mut self.miss_scratch,
-                    &mut stats,
-                );
-                normalize_scores(&mut self.raw);
-                if let Some(c) = &mut cap {
-                    c.norm_rows.push(self.raw.clone());
-                }
-                for (c, r) in self.combined.iter_mut().zip(&self.raw) {
-                    *c += weight * r;
-                }
-            }
-        } else {
+        if let Some(modulator) = per_node_mod {
             // Per-node modulation (e.g. per-lattice α): normalization is
             // still per plugin across nodes, so keep every normalized
             // row and combine with a node-specific weight vector.
@@ -816,7 +799,6 @@ impl Scheduler {
                 }
                 self.norm_rows.extend_from_slice(&self.raw);
             }
-            let modulator = self.modulator.as_deref().expect("per_node implies modulator");
             let n_plugins = self.plugins.len();
             for i in 0..k {
                 self.node_weights.clear();
@@ -831,6 +813,33 @@ impl Scheduler {
                     acc += self.node_weights[p] * self.norm_rows[p * k + i];
                 }
                 self.combined[i] = acc;
+            }
+        } else {
+            for (pi, (plugin, &weight)) in self.plugins.iter().zip(&self.eff_weights).enumerate() {
+                let cache = score_cache
+                    .as_mut()
+                    .filter(|_| plugin.cacheable())
+                    .map(|sc| &mut sc.plugins[pi]);
+                score_one_plugin(
+                    plugin.as_ref(),
+                    &ctx,
+                    task,
+                    sig,
+                    &self.feasible,
+                    &self.placements,
+                    cache,
+                    if plugin.cacheable() { shards } else { 1 },
+                    &mut self.raw,
+                    &mut self.miss_scratch,
+                    &mut stats,
+                );
+                normalize_scores(&mut self.raw);
+                if let Some(c) = &mut cap {
+                    c.norm_rows.push(self.raw.clone());
+                }
+                for (c, r) in self.combined.iter_mut().zip(&self.raw) {
+                    *c += weight * r;
+                }
             }
         }
         // Flush the per-decision scoring tallies in one shot each (the
@@ -908,7 +917,7 @@ impl Scheduler {
             candidates[0].clone()
         } else {
             let bctx = BindCtx {
-                prepared: &self.prepared_cache.as_ref().unwrap().1,
+                prepared: ctx.prepared,
                 alpha_override: bind_alpha_override,
             };
             self.binder.bind(&bctx, &dc.nodes[node_id], task, candidates)
@@ -1335,6 +1344,7 @@ fn score_targets_sharded(
             })
             .collect();
         for h in handles {
+            // lint:allow(hot-path-hygiene) propagating a shard thread's panic is the correct failure mode
             computed.push(h.join().expect("score shard panicked"));
         }
     });

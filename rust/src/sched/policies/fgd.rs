@@ -68,6 +68,14 @@ impl ScorePlugin for FgdPlugin {
             .fold(f64::INFINITY, f64::min);
         -delta
     }
+
+    /// The `Mutex` above guards a generation-keyed memo of the pure
+    /// `F_n(M)` function — identical inputs yield bit-identical scores
+    /// whichever thread computes them, so revision-cached reuse is
+    /// sound. `tests/purity_check.rs` pins this claim dynamically.
+    fn cacheable(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

@@ -734,6 +734,15 @@ pub fn registry_catalog() -> Vec<(&'static str, String, String)> {
     out
 }
 
+/// One freshly built instance of every built-in score plugin, keyed by
+/// its registry name. Backs the dynamic purity cross-check
+/// (`rust/tests/purity_check.rs`), which exercises each cacheable
+/// plugin for bit-identical scores under cache reuse and shard
+/// permutation.
+pub fn builtin_score_plugins() -> Vec<(&'static str, Box<dyn ScorePlugin>)> {
+    BUILTIN_SCORE.iter().map(|(k, _, f)| (*k, f())).collect()
+}
+
 fn no_params(params: &[f64], key: &str) -> Result<(), String> {
     if params.is_empty() {
         Ok(())
@@ -1165,6 +1174,31 @@ mod tests {
 
     #[test]
     fn catalog_covers_every_builtin_key() {
+        // Drift-proofing is now owned by the shared static-analysis
+        // rules (`repro lint`): catalog-drift cross-checks metric keys
+        // in the sources against `METRICS_CATALOG` and
+        // `docs/observability.md`, and dsl-docs-drift cross-checks the
+        // `BUILTIN_*` tables and `parse_dsl` sections against
+        // `docs/scheduler.md`. Running the same rules here keeps
+        // `cargo test` self-contained (no CI dependency) and pins that
+        // the rules accept the real tree.
+        use crate::analysis::{lint, RepoTree};
+        let tree = RepoTree::load(std::path::Path::new(env!("CARGO_MANIFEST_DIR")))
+            .expect("repo tree readable");
+        let findings = lint::registry_drift(&tree);
+        assert!(
+            findings.is_empty(),
+            "registry/catalog drift:\n{}",
+            findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+        );
+        // The statically parsed builtin keys must all resolve through
+        // the runtime registry (⊆, not ==: other tests may have
+        // runtime-registered extra keys in this process).
+        let sf = tree
+            .source("rust/src/sched/profile.rs")
+            .expect("profile.rs in tree");
+        let parsed = lint::builtin_keys_by_point(&sf);
+        assert!(!parsed.is_empty(), "could not parse any BUILTIN_* table");
         let cat = registry_catalog();
         let keys_of = |kind: &str| -> Vec<String> {
             cat.iter()
@@ -1172,17 +1206,11 @@ mod tests {
                 .map(|(_, key, _)| key.clone())
                 .collect()
         };
-        for key in ["pwr", "fgd", "slicefit", "consolidate"] {
-            assert!(keys_of("score").contains(&key.to_string()), "missing score/{key}");
-        }
-        assert!(keys_of("bind").contains(&"weighted".to_string()));
-        assert!(keys_of("mod").contains(&"loadalpha".to_string()));
-        assert!(keys_of("mod").contains(&"latticealpha".to_string()));
-        for key in ["repartition", "drs"] {
-            assert!(keys_of("hook").contains(&key.to_string()), "missing hook/{key}");
-        }
-        for key in ["resources", "gpumodel", "miglattice", "labels", "affinity", "drs"] {
-            assert!(keys_of("filter").contains(&key.to_string()), "missing filter/{key}");
+        for (point, keys) in &parsed {
+            let runtime = keys_of(point);
+            for key in keys {
+                assert!(runtime.contains(key), "parsed {point}/{key} not in registry_catalog");
+            }
         }
         // The default chain's plugin names must all resolve as registry
         // keys (names double as keys; this is what keeps
@@ -1196,29 +1224,6 @@ mod tests {
         }
         // Every row carries a non-empty description.
         assert!(cat.iter().all(|(_, _, d)| !d.is_empty()));
-        // The metrics catalog (crate::obs) is held to the same
-        // drift-proofing bar: the counters the framework maintains must
-        // all be catalogued with non-empty descriptions, and the keys
-        // the simulator's result structs read through shims must
-        // resolve.
-        let metric_keys: Vec<&str> =
-            crate::obs::catalog().iter().map(|(k, _, _)| *k).collect();
-        for key in [
-            "sched_places", "sched_releases", "sched_failures", "sched_retries",
-            "sched_prefilter_rejections", "constraint_unschedulable", "trace_events",
-            "mig_scorer_fallbacks", "repartitions", "proactive_repartitions",
-            "migrated_slices", "drs_sleeps", "drs_wakes", "drs_drains",
-            "drs_wake_cancels", "drs_transition_j", "score_cache_hits",
-            "score_cache_misses", "sched_sampled_sweeps", "score_shard_batches",
-            "phase_filter_ns", "phase_score_ns", "phase_bind_ns", "phase_hooks_ns",
-            "place_ns",
-        ] {
-            assert!(metric_keys.contains(&key), "missing metrics-catalog key {key}");
-            assert!(
-                crate::obs::describe(key).is_some_and(|d| !d.is_empty()),
-                "metrics-catalog key {key} lacks a description"
-            );
-        }
     }
 
     #[test]

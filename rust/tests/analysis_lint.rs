@@ -1,0 +1,365 @@
+//! Fixture tests for the `repro lint` static-analysis rules
+//! (`rust/src/analysis/`): each rule fires exactly once on a
+//! seeded-bad in-memory tree, an inline `// lint:allow(<rule>) reason`
+//! suppresses it, a reasonless directive is itself a finding — and the
+//! real repository tree is clean under every rule.
+
+use repro::analysis::{lint, Finding, RepoTree};
+
+fn findings_for(rule: &str, tree: &RepoTree) -> Vec<Finding> {
+    let (_, _, check) = lint::RULES
+        .iter()
+        .find(|(name, _, _)| *name == rule)
+        .unwrap_or_else(|| panic!("rule '{rule}' not registered"));
+    check(tree)
+}
+
+fn render(findings: &[Finding]) -> String {
+    findings.iter().map(|f| format!("  {f}\n")).collect()
+}
+
+// ---------------------------------------------------------------- catalog
+
+const OBS_FIXTURE: &str = r##"
+pub const METRICS_CATALOG: &[(&str, MetricKind, &str)] = &[
+    ("good_key", MetricKind::Counter, "a catalogued counter"),
+];
+"##;
+
+const OBS_DOC_FIXTURE: &str = r##"
+| kind | key | meaning |
+|------|-----|---------|
+| counter | `good_key` | a catalogued counter |
+"##;
+
+fn catalog_tree(caller: &str) -> RepoTree {
+    RepoTree::from_files(&[
+        ("rust/src/obs/mod.rs", OBS_FIXTURE),
+        ("docs/observability.md", OBS_DOC_FIXTURE),
+        ("rust/src/sim.rs", caller),
+    ])
+}
+
+#[test]
+fn catalog_drift_fires_once_on_an_uncatalogued_key() {
+    let tree = catalog_tree(
+        "fn f(r: &Registry) {\n    r.inc(\"good_key\", 1);\n    r.inc(\"rogue_key\", 1);\n}\n",
+    );
+    let f = findings_for("catalog-drift", &tree);
+    assert_eq!(f.len(), 1, "expected exactly one finding:\n{}", render(&f));
+    assert!(f[0].message.contains("rogue_key"), "{}", f[0]);
+    assert_eq!(f[0].file, "rust/src/sim.rs");
+    assert_eq!(f[0].line, 3);
+}
+
+#[test]
+fn catalog_drift_reports_zombie_and_undocumented_entries() {
+    // The catalogued key is never referenced and never documented.
+    let tree = RepoTree::from_files(&[
+        ("rust/src/obs/mod.rs", OBS_FIXTURE),
+        ("docs/observability.md", "| kind | key | meaning |\n"),
+        ("rust/src/sim.rs", "fn f() {}\n"),
+    ]);
+    let f = findings_for("catalog-drift", &tree);
+    assert_eq!(f.len(), 2, "zombie + missing doc row:\n{}", render(&f));
+    assert!(f.iter().any(|x| x.message.contains("never referenced")));
+    assert!(f.iter().any(|x| x.message.contains("missing from the metrics table")));
+}
+
+#[test]
+fn catalog_drift_allowlist_requires_a_reason() {
+    let with_reason = catalog_tree(
+        "fn f(r: &Registry) {\n    // lint:allow(catalog-drift) fixture: suppression test\n    r.inc(\"rogue_key\", 1);\n    r.inc(\"good_key\", 1);\n}\n",
+    );
+    let f = findings_for("catalog-drift", &with_reason);
+    assert!(f.is_empty(), "reasoned allowlist must suppress:\n{}", render(&f));
+
+    let reasonless = catalog_tree(
+        "fn f(r: &Registry) {\n    // lint:allow(catalog-drift)\n    r.inc(\"rogue_key\", 1);\n    r.inc(\"good_key\", 1);\n}\n",
+    );
+    let f = findings_for("catalog-drift", &reasonless);
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert!(f[0].message.contains("without a reason"), "{}", f[0]);
+}
+
+// ---------------------------------------------------- test registration
+
+const MANIFEST_FIXTURE: &str = r##"
+[package]
+name = "fixture"
+
+[[test]]
+name = "a"
+path = "rust/tests/a.rs"
+"##;
+
+const CI_FIXTURE: &str = r##"
+jobs:
+  tier1:
+    steps:
+      - run: cargo test -q --test a
+"##;
+
+#[test]
+fn test_registration_fires_once_on_an_orphan_test_file() {
+    let tree = RepoTree::from_files(&[
+        ("Cargo.toml", MANIFEST_FIXTURE),
+        (".github/workflows/ci.yml", CI_FIXTURE),
+        ("rust/tests/a.rs", "// registered"),
+        ("rust/tests/b.rs", "// orphan"),
+    ]);
+    let f = findings_for("test-registration", &tree);
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert_eq!(f[0].file, "rust/tests/b.rs");
+    assert!(f[0].message.contains("no [[test]] target"), "{}", f[0]);
+}
+
+#[test]
+fn test_registration_fires_once_on_a_missing_ci_step() {
+    let manifest = r##"
+[[test]]
+name = "a"
+path = "rust/tests/a.rs"
+
+[[test]]
+name = "b"
+path = "rust/tests/b.rs"
+"##;
+    // The `b` step is commented out, which must not satisfy the rule.
+    let ci = "steps:\n  - run: cargo test -q --test a\n  # - run: cargo test -q --test b\n";
+    let tree = RepoTree::from_files(&[
+        ("Cargo.toml", manifest),
+        (".github/workflows/ci.yml", ci),
+        ("rust/tests/a.rs", "//"),
+        ("rust/tests/b.rs", "//"),
+    ]);
+    let f = findings_for("test-registration", &tree);
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert!(f[0].message.contains("\"b\" has no `--test b` step"), "{}", f[0]);
+}
+
+// ------------------------------------------------------ hot-path hygiene
+
+fn hotpath_tree(framework: &str) -> RepoTree {
+    RepoTree::from_files(&[
+        ("rust/src/sched/framework.rs", framework),
+        ("rust/src/sched/filter.rs", "pub fn ok() {}\n"),
+        ("rust/src/sched/bind.rs", "pub fn ok() {}\n"),
+        ("rust/src/sched/drs.rs", "pub fn ok() {}\n"),
+    ])
+}
+
+#[test]
+fn hot_path_hygiene_fires_once_on_an_unwrap() {
+    let tree = hotpath_tree("pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n");
+    let f = findings_for("hot-path-hygiene", &tree);
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert_eq!((f[0].file.as_str(), f[0].line), ("rust/src/sched/framework.rs", 2));
+}
+
+#[test]
+fn hot_path_hygiene_skips_tests_strings_and_comments() {
+    let tree = hotpath_tree(concat!(
+        "pub fn ok() -> &'static str {\n",
+        "    // a comment saying unwrap() and panic! is fine\n",
+        "    \"so is unsafe in a string\"\n",
+        "}\n",
+        "#[cfg(test)]\n",
+        "mod tests {\n",
+        "    #[test]\n",
+        "    fn t() {\n",
+        "        Some(1).unwrap();\n",
+        "        panic!(\"test-only\");\n",
+        "    }\n",
+        "}\n",
+    ));
+    let f = findings_for("hot-path-hygiene", &tree);
+    assert!(f.is_empty(), "{}", render(&f));
+}
+
+#[test]
+fn hot_path_hygiene_allowlist_requires_a_reason() {
+    let with_reason = hotpath_tree(concat!(
+        "pub fn f(x: Option<u32>) -> u32 {\n",
+        "    // lint:allow(hot-path-hygiene) fixture: documented invariant\n",
+        "    x.unwrap()\n",
+        "}\n",
+    ));
+    assert!(findings_for("hot-path-hygiene", &with_reason).is_empty());
+
+    let reasonless = hotpath_tree(concat!(
+        "pub fn f(x: Option<u32>) -> u32 {\n",
+        "    // lint:allow(hot-path-hygiene)\n",
+        "    x.unwrap()\n",
+        "}\n",
+    ));
+    let f = findings_for("hot-path-hygiene", &reasonless);
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert!(f[0].message.contains("without a reason"), "{}", f[0]);
+}
+
+#[test]
+fn hot_path_hygiene_reports_missing_protocol_files() {
+    let tree = RepoTree::from_files(&[("rust/src/sched/framework.rs", "pub fn ok() {}\n")]);
+    let f = findings_for("hot-path-hygiene", &tree);
+    assert_eq!(f.len(), 3, "filter/bind/drs missing:\n{}", render(&f));
+    assert!(f.iter().all(|x| x.message.contains("missing")));
+}
+
+// ----------------------------------------------------- cacheable purity
+
+#[test]
+fn cacheable_purity_fires_once_without_an_override() {
+    let tree = RepoTree::from_files(&[(
+        "rust/src/sched/policies/p.rs",
+        concat!(
+            "use std::sync::Mutex;\n",
+            "pub struct StatefulPlugin {\n",
+            "    cache: Mutex<Vec<f64>>,\n",
+            "}\n",
+            "impl ScorePlugin for StatefulPlugin {\n",
+            "    fn name(&self) -> &'static str {\n",
+            "        \"stateful\"\n",
+            "    }\n",
+            "}\n",
+        ),
+    )]);
+    let f = findings_for("cacheable-purity", &tree);
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert!(f[0].message.contains("StatefulPlugin"), "{}", f[0]);
+}
+
+#[test]
+fn cacheable_purity_accepts_an_explicit_override_or_a_pure_plugin() {
+    let tree = RepoTree::from_files(&[(
+        "rust/src/sched/policies/p.rs",
+        concat!(
+            "use std::sync::atomic::AtomicU64;\n",
+            "pub struct StatefulPlugin {\n",
+            "    calls: AtomicU64,\n",
+            "}\n",
+            "impl ScorePlugin for StatefulPlugin {\n",
+            "    fn cacheable(&self) -> bool {\n",
+            "        false\n",
+            "    }\n",
+            "}\n",
+            "pub struct PurePlugin;\n",
+            "impl ScorePlugin for PurePlugin {\n",
+            "    fn name(&self) -> &'static str {\n",
+            "        \"pure\"\n",
+            "    }\n",
+            "}\n",
+        ),
+    )]);
+    let f = findings_for("cacheable-purity", &tree);
+    assert!(f.is_empty(), "{}", render(&f));
+}
+
+// ------------------------------------------------------- dsl-docs drift
+
+const PROFILE_FIXTURE: &str = r##"
+const BUILTIN_SCORE: &[Entry] = &[
+    ("pwr", "power delta objective", new_pwr),
+    ("fgd", "fragmentation delta objective", new_fgd),
+];
+const BUILTIN_BIND: &[Entry] = &[
+    ("bestfit", "tightest candidate placement", new_bf),
+];
+const BUILTIN_MODULATOR: &[Entry] = &[
+    ("loadalpha", "load adaptive alpha", new_la),
+];
+const BUILTIN_HOOK: &[Entry] = &[
+    ("drs", "sleep wake lifecycle", new_drs),
+];
+const BUILTIN_FILTER: &[Entry] = &[
+    ("resources", "cpu mem gpu fit", new_res),
+];
+
+fn parse_dsl(name: &str) {
+    match name {
+        "score" => (),
+        "bind" => (),
+        "mod" => (),
+        "hook" => (),
+        "filter" => (),
+        _ => (),
+    }
+}
+"##;
+
+const SCHED_DOC_FIXTURE: &str = r##"
+## Extension points
+
+| point | phase | built-in keys |
+|-------|-------|---------------|
+| `score` | scoring | `pwr` |
+| `bind` | binding | `bestfit` |
+| `weightModulator` | modulate | `loadalpha` |
+| `postPlace`/`postFail` | hooks | `drs` |
+| `filter` | feasibility | `resources` |
+
+## DSL grammar
+
+```text
+policy   := section ('|' section)*
+section  := 'score(' list ')' | 'bind(' key ')' | 'mod(' key ')'
+          | 'hook(' key ')' | 'filter(' list ')'
+```
+"##;
+
+#[test]
+fn dsl_docs_drift_fires_once_on_an_undocumented_registry_key() {
+    // `fgd` is in BUILTIN_SCORE but not in the doc's score row.
+    let tree = RepoTree::from_files(&[
+        ("rust/src/sched/profile.rs", PROFILE_FIXTURE),
+        ("docs/scheduler.md", SCHED_DOC_FIXTURE),
+    ]);
+    let f = findings_for("dsl-docs-drift", &tree);
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert!(f[0].message.contains("score/fgd"), "{}", f[0]);
+}
+
+#[test]
+fn dsl_docs_drift_fires_on_a_grammar_only_section() {
+    // Grammar documents 'sample(' but parse_dsl has no such arm.
+    let doc = SCHED_DOC_FIXTURE.replace(
+        "| 'hook(' key ')' | 'filter(' list ')'",
+        "| 'hook(' key ')' | 'filter(' list ')' | 'sample(' pct ')'",
+    );
+    let fixed_profile = PROFILE_FIXTURE.replace(
+        "(\"pwr\", \"power delta objective\", new_pwr),\n    (\"fgd\", \"fragmentation delta objective\", new_fgd),",
+        "(\"pwr\", \"power delta objective\", new_pwr),",
+    );
+    let tree = RepoTree::from_files(&[
+        ("rust/src/sched/profile.rs", fixed_profile.as_str()),
+        ("docs/scheduler.md", doc.as_str()),
+    ]);
+    let f = findings_for("dsl-docs-drift", &tree);
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert!(f[0].message.contains("'sample('"), "{}", f[0]);
+}
+
+// ------------------------------------------------------------ real tree
+
+#[test]
+fn rule_table_is_well_formed() {
+    assert_eq!(lint::RULES.len(), 5);
+    let mut names: Vec<&str> = lint::RULES.iter().map(|(n, _, _)| *n).collect();
+    names.sort();
+    names.dedup();
+    assert_eq!(names.len(), 5, "duplicate rule names");
+    assert!(lint::RULES.iter().all(|(_, d, _)| !d.is_empty()));
+}
+
+#[test]
+fn real_tree_is_clean_under_every_rule() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let tree = RepoTree::load(root).expect("repo tree readable");
+    assert!(tree.get("Cargo.toml").is_some(), "tree must include the manifest");
+    assert!(
+        tree.files.keys().any(|p| p.starts_with("rust/src/")),
+        "tree must include the sources"
+    );
+    let findings = lint::run_all(&tree);
+    assert!(findings.is_empty(), "repro lint found:\n{}", render(&findings));
+}

@@ -1,0 +1,129 @@
+//! Dynamic half of the `cacheable-purity` contract (the static half is
+//! `repro lint`'s rule over `impl ScorePlugin` blocks): the
+//! revision-keyed score cache and the sharded scoring path both assume
+//! a plugin whose `cacheable()` is `true` computes scores as a pure
+//! function of (cluster state, workload, node generation, task
+//! signature). This test pins that claim with exact f64 *bit* equality
+//! — first per plugin (scoring order permuted and repeated, as shard
+//! threads and cache replays would), then end-to-end through the
+//! scheduler (cache on/off × shard counts over a fleet large enough to
+//! clear the shard engagement threshold).
+
+use repro::cluster::ClusterSpec;
+use repro::frag::PreparedWorkload;
+use repro::sched::framework::ClusterCaps;
+use repro::sched::profile::builtin_score_plugins;
+use repro::sched::{PolicyKind, SchedCtx, Scheduler, ScorePlugin};
+use repro::tasks::{GpuDemand, Task, Workload};
+
+/// Every built-in cacheable plugin must return bit-identical scores
+/// whatever order (or multiplicity) the per-node score calls arrive in
+/// — exactly the freedoms the shard splitter and the cache replay take.
+#[test]
+fn cacheable_plugins_score_bit_identically_under_permutation() {
+    let mut dc = ClusterSpec::tiny(12, 4, 2).build();
+    // Load a few nodes so scores actually differ across the fleet.
+    for (i, node) in [0usize, 3, 5].into_iter().enumerate() {
+        let t = Task::new(100 + i as u64, 2.0, 1024.0, GpuDemand::Frac(0.5));
+        let p = dc.nodes[node]
+            .candidate_placements(&t)
+            .pop()
+            .expect("seed placement fits");
+        dc.allocate(&t, node, &p);
+    }
+    let w = Workload::default();
+    let pw = PreparedWorkload::new(&w);
+    let generations = vec![0u64; dc.nodes.len()];
+    let ctx = SchedCtx {
+        dc: &dc,
+        workload: &w,
+        prepared: &pw,
+        generations: &generations,
+        caps: ClusterCaps::of(&dc),
+    };
+    let tasks = [
+        Task::new(0, 2.0, 512.0, GpuDemand::Frac(0.5)),
+        Task::new(1, 4.0, 1024.0, GpuDemand::Whole(1)),
+    ];
+    let mut checked = 0;
+    for (key, plugin) in builtin_score_plugins() {
+        if !plugin.cacheable() {
+            // `random` declares itself impure; the cache and the
+            // equivalence tests already treat it specially.
+            continue;
+        }
+        checked += 1;
+        for task in &tasks {
+            let sweep: Vec<(usize, Vec<_>)> = dc
+                .nodes
+                .iter()
+                .map(|n| (n.id, n.candidate_placements(task)))
+                .filter(|(_, ps)| !ps.is_empty())
+                .collect();
+            assert!(!sweep.is_empty(), "{key}: nothing feasible to score");
+            // Score the sweep in the given visiting order; report
+            // node→bits sorted so orders are comparable.
+            let score_in_order = |idxs: &[usize]| -> Vec<(usize, u64)> {
+                let mut out: Vec<(usize, u64)> = idxs
+                    .iter()
+                    .map(|&si| {
+                        let (nid, ps) = &sweep[si];
+                        (*nid, plugin.score(&ctx, &dc.nodes[*nid], task, ps).to_bits())
+                    })
+                    .collect();
+                out.sort();
+                out
+            };
+            let order: Vec<usize> = (0..sweep.len()).collect();
+            let baseline = score_in_order(&order);
+            // Repeated (cache replay), reversed and shard-interleaved
+            // (two shards visiting even/odd) orders.
+            assert_eq!(baseline, score_in_order(&order), "{key}: repeat drifted");
+            let reversed: Vec<usize> = order.iter().rev().copied().collect();
+            assert_eq!(baseline, score_in_order(&reversed), "{key}: reverse drifted");
+            let interleaved: Vec<usize> = order
+                .iter()
+                .copied()
+                .filter(|i| i % 2 == 0)
+                .chain(order.iter().copied().filter(|i| i % 2 == 1))
+                .collect();
+            assert_eq!(baseline, score_in_order(&interleaved), "{key}: shard split drifted");
+        }
+    }
+    assert!(checked >= 8, "expected most built-ins cacheable, saw {checked}");
+}
+
+/// End-to-end: a long placement sequence must produce identical
+/// decisions (node *and* placement) with the score cache on or off and
+/// with any shard count. 128 nodes clears `SHARD_MIN_WORK`, so
+/// `shards(4)`/`shards(7)` really run scoped scoring threads.
+#[test]
+fn decisions_identical_across_cache_and_shard_configs() {
+    let w = Workload::default();
+    let run = |cache: bool, shards: usize| -> Vec<(usize, String)> {
+        let mut dc = ClusterSpec::tiny(128, 2, 0).build();
+        let mut s = Scheduler::from_policy(PolicyKind::PwrFgd { alpha: 0.5 });
+        s.set_deterministic_ties(true);
+        s.set_score_cache(cache);
+        s.set_score_shards(shards);
+        let mut out = Vec::new();
+        for i in 0..48u64 {
+            let demand =
+                if i % 3 == 0 { GpuDemand::Whole(1) } else { GpuDemand::Frac(0.5) };
+            let t = Task::new(i, 2.0, 512.0, demand);
+            match s.place(&mut dc, &w, &t) {
+                Some(d) => out.push((d.node, format!("{:?}", d.placement))),
+                None => out.push((usize::MAX, String::new())),
+            }
+        }
+        out
+    };
+    let baseline = run(false, 1);
+    assert!(
+        baseline.iter().any(|(n, _)| *n != usize::MAX),
+        "sequence placed nothing — fixture broken"
+    );
+    assert_eq!(baseline, run(true, 1), "cache-on drifted from naive");
+    assert_eq!(baseline, run(false, 4), "shards(4) drifted from naive");
+    assert_eq!(baseline, run(true, 7), "cache-on + shards(7) drifted from naive");
+}
