@@ -10,10 +10,13 @@ reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
 Outputs (per size variant)::
 
     artifacts/<variant>/scorer.hlo.txt     the compiled scoring graph
-    artifacts/<variant>/scorer_meta.json   {"n":..,"g":..,"m":..}
+    artifacts/<variant>/scorer_meta.json   {"n":..,"g":..,"m":..,"mig":..}
 
 Variants: ``small`` (N=64 — integration tests, benches) and ``full``
-(N=1280 ≥ the paper's 1,213 nodes).
+(N=1280 ≥ the paper's 1,213 nodes). Both now lower the MIG-aware
+encoding (task slot 7 = 1 + MigProfile index for slice demands);
+``"mig": true`` in the meta is how the Rust loader detects it — legacy
+artifacts without the key keep the native-fallback path.
 """
 
 import argparse
@@ -27,8 +30,8 @@ from jax._src.lib import xla_client as xc
 from compile.model import make_scorer
 
 VARIANTS = {
-    "small": dict(n=64, g=8, m=64, block_n=32),
-    "full": dict(n=1280, g=8, m=64, block_n=32),
+    "small": dict(n=64, g=8, m=64, block_n=32, mig=True),
+    "full": dict(n=1280, g=8, m=64, block_n=32, mig=True),
 }
 
 
@@ -42,9 +45,9 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
-def lower_variant(n: int, g: int, m: int, block_n: int, use_pallas: bool = True):
+def lower_variant(n: int, g: int, m: int, block_n: int, use_pallas: bool = True, mig: bool = False):
     """Lower one artifact variant; returns the HLO text."""
-    scorer = make_scorer(n, g, m, use_pallas=use_pallas, block_n=block_n)
+    scorer = make_scorer(n, g, m, use_pallas=use_pallas, block_n=block_n, mig=mig)
     f32 = jnp.float32
     specs = (
         jax.ShapeDtypeStruct((n, g), f32),  # gpu_free
@@ -63,13 +66,23 @@ def build(out_root: str, variants=None) -> list:
             continue
         out_dir = os.path.join(out_root, name)
         os.makedirs(out_dir, exist_ok=True)
-        text = lower_variant(cfg["n"], cfg["g"], cfg["m"], cfg["block_n"])
+        text = lower_variant(
+            cfg["n"], cfg["g"], cfg["m"], cfg["block_n"], mig=cfg.get("mig", False)
+        )
         hlo_path = os.path.join(out_dir, "scorer.hlo.txt")
         with open(hlo_path, "w") as f:
             f.write(text)
         meta_path = os.path.join(out_dir, "scorer_meta.json")
         with open(meta_path, "w") as f:
-            json.dump({"n": cfg["n"], "g": cfg["g"], "m": cfg["m"]}, f)
+            json.dump(
+                {
+                    "n": cfg["n"],
+                    "g": cfg["g"],
+                    "m": cfg["m"],
+                    "mig": bool(cfg.get("mig", False)),
+                },
+                f,
+            )
         print(f"wrote {hlo_path} ({len(text)} chars) + {meta_path}")
         written.extend([hlo_path, meta_path])
     return written

@@ -47,11 +47,24 @@ def _normalize_k8s(raw, feas):
     return jnp.where(flat, 100.0, jnp.round(100.0 * (raw - lo) / safe))
 
 
-def score_cluster(gpu_free, node_aux, classes, task, alpha, *, use_pallas=True, block_n=32):
+def score_cluster(
+    gpu_free, node_aux, classes, task, alpha, *, use_pallas=True, block_n=32, mig=False
+):
     """Score every node for one task. See module docstring.
+
+    With ``mig=True`` (MIG-aware artifacts; ``"mig": true`` in the
+    meta), task slot 7 carries ``1 + MigProfile index`` for slice
+    demands. A slice demand scores like a fractional demand of its
+    slice fraction — per-GPU free capacity is the dense relaxation of
+    the occupancy mask; the Rust decode reconstructs the concrete legal
+    window first-fit from the real masks. ``mig=False`` lowers the
+    exact legacy graph (slot 7 is always 0 there).
 
     Returns (score [N], best_gpu [N], feasible [N]) — all f32.
     """
+    if mig:
+        is_mig = task[7] > 0.5
+        task = task.at[3].set(jnp.where(is_mig, 1.0, task[3]))
     cpu_free = node_aux[:, 0]
     mem_free = node_aux[:, 1]
     cpu_alloc = node_aux[:, 2]
@@ -128,7 +141,7 @@ def score_cluster(gpu_free, node_aux, classes, task, alpha, *, use_pallas=True, 
     return score, best_gpu, jnp.where(feas, 1.0, 0.0)
 
 
-def make_scorer(n, g, m, *, use_pallas=True, block_n=32):
+def make_scorer(n, g, m, *, use_pallas=True, block_n=32, mig=False):
     """Bind static shapes; returns `f(gpu_free, node_aux, classes, task,
     alpha)` ready for `jax.jit(...).lower(...)`."""
     del n, g, m  # shapes are carried by the example args at lower time
@@ -136,7 +149,7 @@ def make_scorer(n, g, m, *, use_pallas=True, block_n=32):
     def scorer(gpu_free, node_aux, classes, task, alpha):
         return score_cluster(
             gpu_free, node_aux, classes, task, alpha,
-            use_pallas=use_pallas, block_n=block_n,
+            use_pallas=use_pallas, block_n=block_n, mig=mig,
         )
 
     return scorer

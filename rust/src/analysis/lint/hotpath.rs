@@ -3,7 +3,7 @@
 //! there turns an internal invariant slip into a scheduler crash that
 //! takes the whole simulated (or served) fleet down. Production
 //! schedulers treat this path as no-panic territory; so do we. The
-//! rule bans `unwrap()` / `expect(` / `panic!` / `unsafe` in the four
+//! rule bans `unwrap()` / `expect(` / `panic!` / `unsafe` in the five
 //! protocol files outside `#[cfg(test)]` blocks, unless an inline
 //! `// lint:allow(hot-path-hygiene) <reason>` documents why the panic
 //! is genuinely unreachable or the right failure mode (e.g. a poisoned
@@ -22,6 +22,7 @@ pub const HOT_PATH_FILES: &[&str] = &[
     "rust/src/sched/filter.rs",
     "rust/src/sched/bind.rs",
     "rust/src/sched/drs.rs",
+    "rust/src/sched/gang.rs",
 ];
 
 /// Banned tokens. `.unwrap()` with the parens so `unwrap_or…`

@@ -22,6 +22,28 @@ use crate::cluster::node::{class_count_add, class_count_remove, Node, Placement,
 use crate::cluster::types::GpuModel;
 use crate::tasks::Task;
 
+/// Interconnect bandwidth tiers of the cluster (GB/s per link class):
+/// intra-node NVLink, intra-zone node-to-node fabric (InfiniBand /
+/// RoCE), and the slower inter-zone spine. Queried via
+/// [`Datacenter::bandwidth_between`] by the gang scheduler's `topo`
+/// score plugin (`docs/gang.md`); defaults approximate an NVLink-4 +
+/// HDR-InfiniBand pod design (SNIPPETS.md snippet 3).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Topology {
+    /// GPU-to-GPU bandwidth inside one node's NVLink domain.
+    pub nvlink_gbps: f64,
+    /// Node-to-node bandwidth inside one zone.
+    pub fabric_gbps: f64,
+    /// Node-to-node bandwidth across zones.
+    pub interzone_gbps: f64,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology { nvlink_gbps: 600.0, fabric_gbps: 100.0, interzone_gbps: 25.0 }
+    }
+}
+
 /// The simulated datacenter.
 #[derive(Clone, Debug)]
 pub struct Datacenter {
@@ -62,6 +84,14 @@ pub struct Datacenter {
     class_counts: HashMap<String, u32>,
     /// Tasks currently resident.
     pub n_tasks: u64,
+    /// Interconnect bandwidth tiers (structural; set by
+    /// [`crate::cluster::ClusterSpec::build`], defaults to
+    /// [`Topology::default`]).
+    pub topology: Topology,
+    /// Static index: zone id per node, derived from the `zone` label
+    /// (distinct values numbered 1.. in first-seen order; unlabeled
+    /// nodes share zone 0). Rebuilt with the other static indexes.
+    zone_of: Vec<u32>,
 }
 
 /// Next process-unique fleet revision (same discipline as
@@ -94,6 +124,8 @@ impl Datacenter {
             revision: next_fleet_revision(),
             class_counts: HashMap::new(),
             n_tasks: 0,
+            topology: Topology::default(),
+            zone_of: Vec::new(),
         };
         dc.rebuild_static_indexes();
         dc
@@ -129,6 +161,14 @@ impl Datacenter {
         self.model_nodes = vec![Vec::new(); GpuModel::ALL.len()];
         self.lattice_nodes = [Vec::new(), Vec::new()];
         self.label_nodes.clear();
+        self.zone_of = vec![0; self.nodes.len()];
+        let mut zone_ids: HashMap<&str, u32> = HashMap::new();
+        for n in &self.nodes {
+            if let Some((_, v)) = n.labels.iter().find(|(k, _)| k == "zone") {
+                let next = zone_ids.len() as u32 + 1;
+                self.zone_of[n.id] = *zone_ids.entry(v.as_str()).or_insert(next);
+            }
+        }
         for n in &self.nodes {
             let id = n.id as u32;
             if let Some(m) = n.gpu_model {
@@ -246,6 +286,25 @@ impl Datacenter {
             .and_then(|values| values.get(value))
             .map(Vec::as_slice)
             .unwrap_or(&[])
+    }
+
+    /// The zone id of a node (static index from the `zone` label; 0 for
+    /// unlabeled nodes and out-of-range ids).
+    pub fn zone_of(&self, node_id: usize) -> u32 {
+        self.zone_of.get(node_id).copied().unwrap_or(0)
+    }
+
+    /// Effective GPU-to-GPU bandwidth between two nodes (GB/s): the
+    /// NVLink tier within one node, the fabric tier between nodes of
+    /// one zone, the inter-zone tier otherwise (see [`Topology`]).
+    pub fn bandwidth_between(&self, a: usize, b: usize) -> f64 {
+        if a == b {
+            self.topology.nvlink_gbps
+        } else if self.zone_of(a) == self.zone_of(b) {
+            self.topology.fabric_gbps
+        } else {
+            self.topology.interzone_gbps
+        }
     }
 
     /// Cluster-wide resident task count of a constraint class.
@@ -404,6 +463,29 @@ mod tests {
         assert_eq!(dc.nodes_with_model(GpuModel::G2), 1);
         assert_eq!(dc.nodes_of_model(GpuModel::G2), &[0]);
         assert_eq!(dc.nodes_of_model(GpuModel::T4), &[1]);
+    }
+
+    #[test]
+    fn bandwidth_tiers_follow_zone_structure() {
+        let dc = ClusterSpec::tiny(4, 2, 0).with_zones(2).build();
+        let topo = dc.topology;
+        // Same node → NVLink; same zone (0 and 2 are both z0) → fabric;
+        // different zones (0 and 1) → inter-zone spine.
+        assert_eq!(dc.bandwidth_between(0, 0), topo.nvlink_gbps);
+        assert_eq!(dc.bandwidth_between(0, 2), topo.fabric_gbps);
+        assert_eq!(dc.bandwidth_between(0, 1), topo.interzone_gbps);
+        assert_eq!(dc.bandwidth_between(1, 0), topo.interzone_gbps);
+        // Unzoned fleets share zone 0 everywhere: fabric between nodes.
+        let flat = ClusterSpec::tiny(2, 2, 0).build();
+        assert_eq!(flat.zone_of(0), 0);
+        assert_eq!(flat.bandwidth_between(0, 1), flat.topology.fabric_gbps);
+        // Zone ids rebuild with the other static indexes.
+        let mut dc = dc;
+        assert_ne!(dc.zone_of(0), dc.zone_of(1));
+        dc.nodes[1].labels.retain(|(k, _)| k != "zone");
+        dc.nodes[1].labels.push(("zone".to_string(), "z0".to_string()));
+        dc.note_fleet_changed();
+        assert_eq!(dc.zone_of(0), dc.zone_of(1));
     }
 
     #[test]

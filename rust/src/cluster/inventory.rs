@@ -6,6 +6,7 @@
 //! packs each model into standard node sizes (documented per pool below);
 //! the construction is asserted to hit the published totals exactly.
 
+use crate::cluster::datacenter::Topology;
 use crate::cluster::node::Node;
 use crate::cluster::types::{CpuModel, GpuModel};
 use crate::cluster::Datacenter;
@@ -40,6 +41,10 @@ pub struct ClusterSpec {
     /// topology for node-selector experiments; see
     /// [`ClusterSpec::with_zones`]).
     pub zones: usize,
+    /// Interconnect bandwidth tiers carried onto the built
+    /// [`Datacenter`] (`None` = [`Topology::default`]; see
+    /// [`ClusterSpec::with_topology`]).
+    pub topology: Option<Topology>,
 }
 
 impl ClusterSpec {
@@ -72,6 +77,7 @@ impl ClusterSpec {
         };
         ClusterSpec {
             zones: 0,
+            topology: None,
             pools: vec![
                 p(24, 64.0, 262_144.0, Some(V100M16), 8),
                 p(1, 64.0, 262_144.0, Some(V100M16), 3),
@@ -106,6 +112,7 @@ impl ClusterSpec {
     pub fn tiny(n_gpu_nodes: usize, gpus_per_node: usize, n_cpu_nodes: usize) -> ClusterSpec {
         ClusterSpec {
             zones: 0,
+            topology: None,
             pools: vec![
                 NodePool {
                     count: n_gpu_nodes,
@@ -136,6 +143,13 @@ impl ClusterSpec {
         self
     }
 
+    /// Override the interconnect bandwidth tiers carried onto the built
+    /// [`Datacenter`] (see [`Topology`]).
+    pub fn with_topology(mut self, topology: Topology) -> ClusterSpec {
+        self.topology = Some(topology);
+        self
+    }
+
     /// A MIG-partitioned cluster: `n_mig_nodes` A100-class nodes (the
     /// G3 power profile of Table II, 128 vCPUs / 768 GiB, up to 8 GPUs
     /// each, every GPU MIG-enabled) plus optional CPU-only nodes.
@@ -147,6 +161,7 @@ impl ClusterSpec {
         assert!(gpus_per_node <= crate::frag::MAX_GPUS);
         ClusterSpec {
             zones: 0,
+            topology: None,
             pools: vec![
                 NodePool {
                     count: n_mig_nodes,
@@ -185,6 +200,7 @@ impl ClusterSpec {
         assert!(gpus_per_node <= crate::frag::MAX_GPUS);
         ClusterSpec {
             zones: 0,
+            topology: None,
             pools: vec![
                 NodePool {
                     count: n_a100_nodes,
@@ -272,7 +288,11 @@ impl ClusterSpec {
                 nodes.push(node);
             }
         }
-        Datacenter::new(nodes)
+        let mut dc = Datacenter::new(nodes);
+        if let Some(topology) = self.topology {
+            dc.topology = topology;
+        }
+        dc
     }
 }
 
@@ -362,6 +382,15 @@ mod tests {
         spec.pools[0].labels.push(("tenant".to_string(), "acme".to_string()));
         let dc = spec.build();
         assert!(dc.nodes[0].has_label("tenant", "acme"));
+    }
+
+    #[test]
+    fn with_topology_overrides_build_defaults() {
+        let dc = ClusterSpec::tiny(2, 2, 0).build();
+        assert_eq!(dc.topology, Topology::default());
+        let custom = Topology { nvlink_gbps: 900.0, fabric_gbps: 200.0, interzone_gbps: 50.0 };
+        let dc = ClusterSpec::tiny(2, 2, 0).with_topology(custom).build();
+        assert_eq!(dc.topology, custom);
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod mig;
 pub mod node;
 pub mod types;
 
-pub use datacenter::Datacenter;
+pub use datacenter::{Datacenter, Topology};
 pub use inventory::ClusterSpec;
 pub use mig::{MigGpu, MigInstance, MigLattice, MigProfile};
 pub use node::{Node, Placement, PowerState, ResourceView};

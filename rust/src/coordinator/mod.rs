@@ -214,6 +214,7 @@ fn task_from_json(v: &Json) -> Result<Task, String> {
         } else {
             Some(Box::new(constraints))
         },
+        gang: None,
     })
 }
 

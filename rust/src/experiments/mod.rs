@@ -23,8 +23,9 @@
 //!
 //! Beyond the paper: `ext-dynalpha`, `ext-steady`, `ext-mig`,
 //! `ext-mig-het`, `ext-profiles`, `ext-filters`, `ext-drs` (the DRS
-//! sleep/wake sweep on diurnal load — `docs/power.md`) and
-//! `ablation-tiebreak`.
+//! sleep/wake sweep on diurnal load — `docs/power.md`), `ext-gang`
+//! (topology-aware gang scheduling on the `gang-<pct>` trace family —
+//! `docs/gang.md`) and `ablation-tiebreak`.
 
 use std::collections::HashMap;
 
@@ -92,6 +93,12 @@ pub const EXT_FILTERS_PCTS: [f64; 3] = [0.0, 0.25, 0.5];
 pub const EXT_DRS_TIMEOUTS: [f64; 3] = [50.0, 200.0, 800.0];
 pub const EXT_DRS_LATENCIES: [u64; 2] = [0, 100];
 pub const EXT_DRS_AMPLITUDE: f64 = 0.6;
+
+/// `ext-gang` knobs: gang shares swept over the `gang-<pct>` trace
+/// family, and the zone count stamped on the cluster so the topology
+/// tiers (NVLink / fabric / inter-zone) all appear in the topo scores.
+pub const EXT_GANG_PCTS: [f64; 3] = [0.0, 0.3, 0.6];
+pub const EXT_GANG_ZONES: usize = 4;
 
 /// The three selected combinations (§VI-B) + the four competitors used
 /// in Figs. 3–10.
@@ -233,13 +240,14 @@ impl Harness {
             "ext-profiles" => self.ext_profiles(),
             "ext-filters" => self.ext_filters(),
             "ext-drs" => self.ext_drs(),
+            "ext-gang" => self.ext_gang(),
             "ablation-tiebreak" => self.ablation_tiebreak(),
             "all" => {
                 let ids = [
                     "table1", "table2", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
                     "fig7", "fig8", "fig9", "fig10", "ext-dynalpha", "ext-steady",
                     "ext-mig", "ext-mig-het", "ext-profiles", "ext-filters", "ext-drs",
-                    "ablation-tiebreak",
+                    "ext-gang", "ablation-tiebreak",
                 ];
                 let mut out = Vec::new();
                 for id in ids {
@@ -879,6 +887,142 @@ impl Harness {
             eprintln!("[experiment]   series cell: {drs_label}");
             out.push(path);
         }
+        Ok(out)
+    }
+
+    /// Extension: topology-aware gang scheduling (`docs/gang.md`). Runs
+    /// mixed gang/singleton traces (`gang-<pct>`, 0 / 30 / 60% of the
+    /// whole-GPU population replaced by TP×PP×DP gangs) over a zoned
+    /// cluster, sweeping the `topo` score weight against plain PWR⊕FGD
+    /// and a DRS consolidation profile. Emits EOPC, fragmentation and
+    /// GRAR series per (trace, profile) plus a gang counter table —
+    /// placement rate, mean PP span (distinct nodes per placed gang)
+    /// and the cross-node-TP violation count, which must be zero by
+    /// construction (the run aborts otherwise rather than reporting a
+    /// broken invariant as data). The gang-0 column is the
+    /// legacy-equivalence anchor: `tests/gang_equivalence.rs` pins it
+    /// bit-identical to the pre-gang scheduler.
+    fn ext_gang(&mut self) -> Result<Vec<String>> {
+        use crate::sim::{run_repetitions, RepeatConfig};
+        let cluster = self.cluster.clone().with_zones(EXT_GANG_ZONES);
+        let traces: Vec<TraceSpec> =
+            EXT_GANG_PCTS.iter().map(|&p| TraceSpec::gang_trace(p)).collect();
+        let profiles: Vec<SchedulerProfile> = [
+            "score(pwr=0.1,fgd=0.9)",
+            "score(pwr=0.1,fgd=0.6,topo=0.3)",
+            "score(pwr=0.1,fgd=0.3,topo=0.6)",
+            "score(pwr=0.3,fgd=0.3,consolidate=0.2,topo=0.2)|hook(drs:200:0)",
+        ]
+        .iter()
+        .map(|&s| SchedulerProfile::parse(s).map_err(anyhow::Error::msg))
+        .collect::<Result<_>>()?;
+        let rcfg = RepeatConfig {
+            reps: self.cfg.reps,
+            base_seed: self.cfg.seed,
+            target_ratio: self.cfg.target,
+            record_frag: true,
+            trace: self.cfg.trace_sink.clone(),
+            ..Default::default()
+        };
+        let mut headers = vec!["x".to_string()];
+        for trace in &traces {
+            for p in &profiles {
+                headers.push(format!("{}/{}", trace.name, p.label));
+            }
+        }
+        let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut eopc_cols: Vec<Vec<f64>> = Vec::new();
+        let mut frag_cols: Vec<Vec<f64>> = Vec::new();
+        let mut grar_cols: Vec<Vec<f64>> = Vec::new();
+        let mut counter_rows = Vec::new();
+        for trace in &traces {
+            for profile in &profiles {
+                eprintln!(
+                    "[experiment] running {} / {} ({} reps, {} nodes, {} zones)…",
+                    trace.name,
+                    profile.label,
+                    rcfg.reps,
+                    cluster.total_nodes(),
+                    EXT_GANG_ZONES
+                );
+                let runs = run_repetitions(&cluster, trace, profile.clone(), &rcfg);
+                let n = runs.len().max(1) as f64;
+                let mean_of = |f: &dyn Fn(&crate::sim::RunResult) -> f64| -> f64 {
+                    runs.iter().map(f).sum::<f64>() / n
+                };
+                let violations: u64 = runs.iter().map(|r| r.gang_tp_violations).sum();
+                if violations > 0 {
+                    bail!(
+                        "{} / {}: {} cross-node TP violations — the gang binder \
+                         must keep every TP group on one NVLink domain",
+                        trace.name,
+                        profile.label,
+                        violations
+                    );
+                }
+                let placed = mean_of(&|r| r.gangs_placed as f64);
+                let gang_failed = mean_of(&|r| r.gangs_failed as f64);
+                let span_sum = mean_of(&|r| r.gang_pp_span_sum as f64);
+                counter_rows.push((
+                    trace.name.clone(),
+                    profile.label.clone(),
+                    placed,
+                    gang_failed,
+                    if placed + gang_failed > 0.0 {
+                        format!("{:.4}", placed / (placed + gang_failed))
+                    } else {
+                        "-".to_string()
+                    },
+                    if placed > 0.0 {
+                        format!("{:.3}", span_sum / placed)
+                    } else {
+                        "-".to_string()
+                    },
+                ));
+                let series: Vec<_> = runs.into_iter().map(|r| r.series).collect();
+                eopc_cols.push(average_on_grid(&series, Column::Eopc, &self.grid));
+                frag_cols.push(average_on_grid(&series, Column::Frag, &self.grid));
+                grar_cols.push(average_on_grid(&series, Column::Grar, &self.grid));
+            }
+        }
+        let mut out = Vec::new();
+        for (name, cols, scale) in [
+            ("ext_gang_eopc_kw.csv", &eopc_cols, 1e-3),
+            ("ext_gang_frag_gpus.csv", &frag_cols, 1.0),
+            ("ext_gang_grar.csv", &grar_cols, 1.0),
+        ] {
+            let path = self.out_path(name);
+            let mut w = CsvWriter::create(&path, &header_refs)?;
+            for (i, &x) in self.grid.iter().enumerate() {
+                let mut row = vec![x];
+                for c in cols.iter() {
+                    row.push(c[i] * scale);
+                }
+                w.row(&row)?;
+            }
+            w.flush()?;
+            out.push(path);
+        }
+        let path = self.out_path("ext_gang_counters.csv");
+        let mut w = CsvWriter::create(
+            &path,
+            &[
+                "trace", "policy", "gangs_placed", "gangs_failed",
+                "gang_placement_rate", "mean_pp_span",
+            ],
+        )?;
+        for (trace, policy, placed, gang_failed, rate, span) in &counter_rows {
+            w.row_str(&[
+                trace.clone(),
+                policy.clone(),
+                format!("{placed:.1}"),
+                format!("{gang_failed:.1}"),
+                rate.clone(),
+                span.clone(),
+            ])?;
+        }
+        w.flush()?;
+        out.push(path);
         Ok(out)
     }
 

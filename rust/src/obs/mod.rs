@@ -168,6 +168,26 @@ pub const METRICS_CATALOG: &[(&str, MetricKind, &str)] = &[
         MetricKind::Histogram,
         "end-to-end place protocol latency (ns)",
     ),
+    (
+        "gangs_placed",
+        MetricKind::Counter,
+        "gangs committed atomically through the place_gang protocol",
+    ),
+    (
+        "gangs_failed",
+        MetricKind::Counter,
+        "gangs rolled back with no member committed",
+    ),
+    (
+        "gang_tp_violations",
+        MetricKind::Counter,
+        "gang members placed outside one whole-GPU NVLink domain (must stay 0)",
+    ),
+    (
+        "gang_pp_span_sum",
+        MetricKind::Counter,
+        "distinct nodes summed over placed gangs (mean PP span = sum / gangs_placed)",
+    ),
 ];
 
 /// The catalog, for callers that iterate it (`repro list-plugins`).

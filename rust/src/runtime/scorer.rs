@@ -16,7 +16,10 @@
 //! * `classes    [M, 7]` — `[cpu, mem, gpu_units, is_frac, is_whole,
 //!   pop, constraint_idx]`; padding classes have `pop = 0`.
 //! * `task       [8]` — `[cpu, mem, gpu_units, is_frac, is_whole,
-//!   whole_k, constraint_idx, 0]`.
+//!   whole_k, constraint_idx, mig_profile]`; `mig_profile` is
+//!   `1 + MigProfile::index()` for slice demands on a MIG-aware
+//!   artifact (`"mig": true` in the meta) and `0` otherwise — legacy
+//!   artifacts never see a non-zero slot 7.
 //! * `alpha      [1]` — the PWR weight α.
 //!
 //! Outputs: `(score [N], best_gpu [N], feasible [N])` where `score` is
@@ -47,6 +50,10 @@ pub struct ScorerConfig {
     pub g: usize,
     /// Workload-class slots.
     pub m: usize,
+    /// The artifact encodes MIG slice demands (task slot 7). Absent
+    /// from legacy metas → `false`, which preserves the native-fallback
+    /// behavior (and its `mig_scorer_fallbacks` accounting) exactly.
+    pub mig: bool,
 }
 
 impl ScorerConfig {
@@ -59,18 +66,21 @@ impl ScorerConfig {
                 .map(|x| x as usize)
                 .with_context(|| format!("meta key {k}"))
         };
-        Ok(ScorerConfig { n: get("n")?, g: get("g")?, m: get("m")? })
+        let mig = v.get("mig").and_then(|x| x.as_bool()).unwrap_or(false);
+        Ok(ScorerConfig { n: get("n")?, g: get("g")?, m: get("m")?, mig })
     }
 }
 
 /// Sentinel score for infeasible nodes (mirrors the Python side).
 pub const NEG_INF_SCORE: f32 = -1.0e9;
 
-/// MIG demands routed past the XLA scorer (its AOT dense encoding
-/// predates the MIG subsystem, so slice demands fall back to the native
-/// scheduler). Previously this was a silent `None`; mixed-fleet runs
-/// now read the counter to report how many placements bypassed the
-/// compiled path.
+/// MIG demands routed past the XLA scorer because the loaded artifact's
+/// dense encoding predates the MIG subsystem (`"mig"` absent from its
+/// meta): such slice demands fall back to the native scheduler.
+/// MIG-aware artifacts score slice demands in-graph and never touch
+/// this counter. Previously the fallback was a silent `None`;
+/// mixed-fleet runs now read the counter to report how many placements
+/// bypassed the compiled path.
 static MIG_SCORER_FALLBACKS: AtomicU64 = AtomicU64::new(0);
 
 /// Cumulative count of MIG demands the scorer declined (process-wide).
@@ -175,6 +185,7 @@ impl XlaScorer {
     }
 
     fn encode_task(&mut self, task: &Task) {
+        let mig = self.config.mig;
         let t = &mut self.task_buf;
         t.iter_mut().for_each(|x| *x = 0.0);
         t[0] = task.cpu as f32;
@@ -184,6 +195,13 @@ impl XlaScorer {
         t[4] = matches!(task.gpu, GpuDemand::Whole(_)) as u8 as f32;
         t[5] = if let GpuDemand::Whole(k) = task.gpu { k as f32 } else { 0.0 };
         t[6] = task.gpu_model.map(|m| m.index() as f32).unwrap_or(-1.0);
+        // Slot 7 stays 0 on legacy artifacts so their baked HLO never
+        // sees an input it predates.
+        if mig {
+            if let GpuDemand::Mig(p) = task.gpu {
+                t[7] = 1.0 + p.index() as f32;
+            }
+        }
     }
 
     /// Run the compiled scoring pass for one task.
@@ -230,15 +248,25 @@ impl XlaScorer {
         self.encode_cluster(dc)?;
         self.encode_workload(workload);
         let out = self.score(task, alpha)?;
-        Ok(decode_decision(dc, task, &out))
+        Ok(decode_decision(dc, task, &out, self.config.mig))
     }
 }
 
 /// Pick the arg-max feasible node and rebuild the concrete placement.
-/// MIG demands are counted into [`mig_scorer_fallbacks`] and return
-/// `None` — the caller must fall back to the native scheduler.
-pub fn decode_decision(dc: &Datacenter, task: &Task, out: &ScoreOutput) -> Option<Decision> {
-    if matches!(task.gpu, GpuDemand::Mig(_)) {
+/// On legacy artifacts (`mig_encoded = false`) MIG demands are counted
+/// into [`mig_scorer_fallbacks`] and return `None` — the caller must
+/// fall back to the native scheduler. MIG-aware artifacts score slice
+/// demands in-graph; the concrete slice window is reconstructed here
+/// via first-fit on the chosen node's real occupancy masks (preferring
+/// the graph's `best_gpu` hint), mirroring how fractional placements
+/// are rebuilt.
+pub fn decode_decision(
+    dc: &Datacenter,
+    task: &Task,
+    out: &ScoreOutput,
+    mig_encoded: bool,
+) -> Option<Decision> {
+    if matches!(task.gpu, GpuDemand::Mig(_)) && !mig_encoded {
         MIG_SCORER_FALLBACKS.fetch_add(1, Ordering::Relaxed);
         return None;
     }
@@ -279,8 +307,25 @@ pub fn decode_decision(dc: &Datacenter, task: &Task, out: &ScoreOutput) -> Optio
             }
             Placement::Whole { gpus }
         }
-        // Counted and rejected at the top of the function.
-        GpuDemand::Mig(_) => unreachable!("MIG demand past the fallback gate"),
+        // Legacy artifacts were counted and rejected at the top of the
+        // function; here the artifact scored the slice demand, so
+        // rebuild a legal window from the node's occupancy masks.
+        GpuDemand::Mig(p) => {
+            let migs = node.mig.as_ref()?;
+            let hint = out.best_gpu[node_id];
+            let hinted = if hint >= 0.0 {
+                let g = hint as usize;
+                migs.get(g).and_then(|mg| mg.can_place(p)).map(|s| (g, s))
+            } else {
+                None
+            };
+            let (gpu, start) = hinted.or_else(|| {
+                migs.iter()
+                    .enumerate()
+                    .find_map(|(g, mg)| mg.can_place(p).map(|s| (g, s)))
+            })?;
+            Placement::MigSlice { gpu, start }
+        }
     };
     Some(Decision { node: node_id, placement })
 }
@@ -373,7 +418,7 @@ pub fn parity_check(
         scorer.encode_cluster(&dc)?;
         scorer.encode_workload(&workload);
         let out = scorer.score(&task, alpha)?;
-        let xd = decode_decision(&dc, &task, &out);
+        let xd = decode_decision(&dc, &task, &out, scorer.config.mig);
         report.decisions += 1;
         match (&nd, &xd) {
             (None, None) => report.both_infeasible += 1,
@@ -419,7 +464,9 @@ mod tests {
     #[test]
     fn meta_parses() {
         let c = ScorerConfig::from_meta(r#"{"n": 64, "g": 8, "m": 32}"#).unwrap();
-        assert_eq!(c, ScorerConfig { n: 64, g: 8, m: 32 });
+        assert_eq!(c, ScorerConfig { n: 64, g: 8, m: 32, mig: false });
+        let c = ScorerConfig::from_meta(r#"{"n": 64, "g": 8, "m": 32, "mig": true}"#).unwrap();
+        assert!(c.mig, "MIG-aware artifacts advertise the encoding in the meta");
         assert!(ScorerConfig::from_meta("{}").is_err());
     }
 
@@ -432,7 +479,7 @@ mod tests {
             best_gpu: vec![0.0, 1.0, 0.0],
             feasible: vec![1.0, 1.0, 1.0],
         };
-        let d = decode_decision(&dc, &t, &out).unwrap();
+        let d = decode_decision(&dc, &t, &out, false).unwrap();
         assert_eq!(d.node, 1); // ties → lowest id among the 90s
         assert_eq!(d.placement, Placement::Shared { gpu: 1 });
     }
@@ -449,16 +496,47 @@ mod tests {
         // Delta-based so the assertion is robust to the process-wide
         // counter being touched by concurrently-running tests.
         let before = mig_scorer_fallbacks();
-        // Both lattices' demands bypass the scorer and are counted.
+        // Both lattices' demands bypass the legacy scorer and are
+        // counted.
         for p in [MigProfile::P3g, MigProfile::A30P2g] {
             let t = Task::new(0, 1.0, 0.0, GpuDemand::Mig(p));
-            assert!(decode_decision(&dc, &t, &out).is_none());
+            assert!(decode_decision(&dc, &t, &out, false).is_none());
         }
         assert!(mig_scorer_fallbacks() - before >= 2);
         // Non-MIG demands decode normally (and this test adds no more
         // fallbacks itself).
         let t = Task::new(1, 1.0, 0.0, GpuDemand::Zero);
-        assert!(decode_decision(&dc, &t, &out).is_some());
+        assert!(decode_decision(&dc, &t, &out, false).is_some());
+    }
+
+    #[test]
+    fn mig_aware_encoding_decodes_slices_without_fallbacks() {
+        use crate::cluster::mig::MigProfile;
+        let dc = crate::cluster::ClusterSpec::mig_cluster(2, 2, 0).build();
+        let out = ScoreOutput {
+            score: vec![90.0, 50.0],
+            best_gpu: vec![1.0, -1.0],
+            feasible: vec![1.0, 1.0],
+        };
+        let before = mig_scorer_fallbacks();
+        // The graph's best_gpu hint is honored when the slice fits there.
+        let t = Task::new(0, 1.0, 0.0, GpuDemand::Mig(MigProfile::P3g));
+        let d = decode_decision(&dc, &t, &out, true).unwrap();
+        assert_eq!(d.node, 0);
+        match d.placement {
+            Placement::MigSlice { gpu, start } => {
+                assert_eq!(gpu, 1);
+                assert!(dc.nodes[0].mig.as_ref().unwrap()[gpu].can_place(MigProfile::P3g)
+                    == Some(start));
+            }
+            other => panic!("expected a MIG slice, got {other:?}"),
+        }
+        // A foreign-lattice demand on this fleet has no legal window on
+        // the chosen node: decode declines, still without a fallback.
+        let t = Task::new(1, 1.0, 0.0, GpuDemand::Mig(MigProfile::A30P2g));
+        assert!(decode_decision(&dc, &t, &out, true).is_none());
+        // The pin: a MIG-aware artifact never counts native fallbacks.
+        assert_eq!(mig_scorer_fallbacks() - before, 0);
     }
 
     #[test]

@@ -58,14 +58,14 @@
 //! [`crate::obs::METRICS_CATALOG`], so they surface in `obs_summary.json`
 //! and the coordinator's Prometheus exposition without extra plumbing.
 
-use crate::cluster::node::{Node, Placement, PowerState};
+use crate::cluster::node::{Node, Placement, PowerState, ResourceView};
 use crate::cluster::Datacenter;
 use crate::power;
 use crate::sched::filter::{
     AffinityFilter, FilterCtx, FilterPlugin, GpuModelFilter, LabelsFilter,
 };
 use crate::sched::framework::{PostHook, SchedCtx, ScorePlugin};
-use crate::tasks::Task;
+use crate::tasks::{GpuDemand, Task};
 
 /// Whether waking node `i` could actually help `task`: resource fit
 /// (`can_fit`) plus the task's own node-local declarative constraints
@@ -108,6 +108,48 @@ fn wake_could_help_chained(
     let ok = node.can_fit(task) && filters.iter().all(|f| f.feasible(&ctx, node, task));
     dc.nodes[i].power_state = prev;
     ok
+}
+
+/// How many copies of gang member `member` node `i` could host were it
+/// `Active`: the min of whole-GPU groups (`⌊fully_free/tp⌋`), CPU and
+/// memory headroom — zero when the (hypothetically `Active`) node fails
+/// the real filter chain at all. Like [`wake_could_help_chained`], the
+/// power-state flip is visible only to this evaluation.
+fn gang_capacity_if_active(
+    dc: &mut Datacenter,
+    i: usize,
+    member: &Task,
+    filters: &[Box<dyn FilterPlugin>],
+) -> u32 {
+    let prev = dc.nodes[i].power_state;
+    dc.nodes[i].power_state = PowerState::Active;
+    let cap = {
+        let ctx = FilterCtx { dc: &*dc };
+        let node = &ctx.dc.nodes[i];
+        if !node.can_fit(member) || !filters.iter().all(|f| f.feasible(&ctx, node, member)) {
+            0
+        } else {
+            let by_gpu = match member.gpu {
+                GpuDemand::Whole(tp) if tp > 0 => (node.gpus_fully_free() / tp as usize) as u32,
+                // Members are `Whole(tp)` by construction; anything
+                // else fits at least the one copy `can_fit` admitted.
+                _ => 1,
+            };
+            let by_cpu = if member.cpu > 0.0 {
+                (node.cpu_free() / member.cpu).floor() as u32
+            } else {
+                u32::MAX
+            };
+            let by_mem = if member.mem > 0.0 {
+                (node.mem_free() / member.mem).floor() as u32
+            } else {
+                u32::MAX
+            };
+            by_gpu.min(by_cpu).min(by_mem)
+        }
+    };
+    dc.nodes[i].power_state = prev;
+    cap
 }
 
 /// Configuration of the [`DrsHook`] sleep/wake lifecycle.
@@ -369,6 +411,110 @@ impl PostHook for DrsHook {
             &mut |dc, i| wake_could_help_chained(dc, i, task, filters),
             invalidate,
         )
+    }
+
+    /// Gang-aware wake sizing, called from the `place_gang` protocol's
+    /// `postFail` round: the singleton paths above wake exactly one
+    /// node per failure, but a gang member failing with `remaining`
+    /// members still to place may need *several* nodes booted at once —
+    /// and a wake that cannot reach the full residual demand is futile
+    /// (the gang rolls back atomically and every booted node goes back
+    /// to sleep unused). So: size a wake *set* against `remaining`
+    /// using chain-vetted per-node member capacity
+    /// ([`gang_capacity_if_active`]), spend free drain cancellations
+    /// first, then the cheapest sleepers by wake-cost estimate (ties by
+    /// lowest id, as in the singleton pass), and decline entirely —
+    /// waking nothing — when even the whole admissible fleet cannot
+    /// host the remainder.
+    fn post_fail_gang(
+        &mut self,
+        dc: &mut Datacenter,
+        member: &Task,
+        remaining: u32,
+        filters: &[Box<dyn FilterPlugin>],
+        invalidate: &mut dyn FnMut(usize),
+    ) -> bool {
+        if remaining <= 1 {
+            // The last member is exactly the singleton problem.
+            return self.post_fail_chained(dc, member, filters, invalidate);
+        }
+        self.ensure_tracking(dc);
+        let mut active_cap: u32 = 0;
+        let mut drains: Vec<(usize, u32)> = Vec::new();
+        let mut sleepers: Vec<(usize, u32, f64)> = Vec::new();
+        for i in 0..dc.nodes.len() {
+            match dc.nodes[i].power_state {
+                PowerState::Active => {
+                    active_cap = active_cap
+                        .saturating_add(gang_capacity_if_active(dc, i, member, filters));
+                }
+                PowerState::Draining => {
+                    let cap = gang_capacity_if_active(dc, i, member, filters);
+                    if cap > 0 {
+                        drains.push((i, cap));
+                    }
+                }
+                PowerState::Asleep => {
+                    let cap = gang_capacity_if_active(dc, i, member, filters);
+                    if cap > 0 {
+                        let est = self.wake_cost_estimate_j(&dc.nodes[i]);
+                        sleepers.push((i, cap, est));
+                    }
+                }
+                // Already booting: future capacity, not wakeable again.
+                PowerState::Waking { .. } => {}
+            }
+        }
+        let mut needed = remaining.saturating_sub(active_cap);
+        if needed == 0 {
+            // Capacity was never the problem (this member's failure has
+            // some other cause) — waking cannot help.
+            return false;
+        }
+        let reachable: u32 = drains
+            .iter()
+            .map(|&(_, c)| c)
+            .chain(sleepers.iter().map(|&(_, c, _)| c))
+            .fold(0, u32::saturating_add);
+        if reachable < needed {
+            // Even the full fleet cannot host the residual gang:
+            // decline, spending no wake energy on a doomed attempt.
+            return false;
+        }
+        let mut retry = false;
+        for &(i, cap) in &drains {
+            if needed == 0 {
+                break;
+            }
+            dc.nodes[i].power_state = PowerState::Active;
+            self.wake_cancels += 1;
+            self.idle_since[i] = Some(self.now);
+            invalidate(i);
+            needed = needed.saturating_sub(cap);
+            retry = true;
+        }
+        // Cheapest sleepers next; the scan above is id-ordered and the
+        // sort is stable, so cost ties break by lowest id.
+        sleepers.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap_or(core::cmp::Ordering::Equal));
+        for &(i, cap, _) in &sleepers {
+            if needed == 0 {
+                break;
+            }
+            self.wakes += 1;
+            self.transition_j += self.cfg.wake_cost_j;
+            self.idle_since[i] = Some(self.now);
+            invalidate(i);
+            if self.cfg.wake_latency == 0 {
+                dc.nodes[i].power_state = PowerState::Active;
+                retry = true;
+            } else {
+                dc.nodes[i].power_state =
+                    PowerState::Waking { ready_at: self.now + self.cfg.wake_latency };
+                self.maybe_non_active = true;
+            }
+            needed = needed.saturating_sub(cap);
+        }
+        retry
     }
 
     fn post_place(
@@ -817,11 +963,173 @@ mod tests {
             prepared: &pw,
             generations: &[0, 0, 0],
             caps: crate::sched::framework::ClusterCaps::of(&dc),
+            gang: None,
         };
         let score_of = |node: usize| {
             ConsolidatePlugin.score(&ctx, &dc.nodes[node], &t, &[])
         };
         assert!(score_of(0) > score_of(1));
         assert!(score_of(1) > score_of(2));
+    }
+
+    #[test]
+    fn gang_wake_boots_a_set_sized_to_the_remaining_members() {
+        use crate::sched::filter::default_filter_chain;
+        // 4 sleeping 2-GPU nodes; a member needs 2 whole GPUs, so each
+        // node hosts exactly one. 3 residual members must wake exactly
+        // 3 nodes (the old one-wake-per-failure path stranded the gang).
+        let mut dc = ClusterSpec::tiny(4, 2, 0).build();
+        let mut h = DrsHook::new(DrsConfig::with_timeout(1.0, 0));
+        let mut inval = |_n: usize| {};
+        for now in 1..=3 {
+            h.on_tick(&mut dc, now, &mut inval);
+        }
+        assert!(dc.nodes.iter().all(|n| n.power_state == PowerState::Asleep));
+        let chain = default_filter_chain();
+        let member = Task::new(9, 1.0, 0.0, GpuDemand::Whole(2));
+        assert!(h.post_fail_gang(&mut dc, &member, 3, &chain, &mut inval));
+        let active =
+            dc.nodes.iter().filter(|n| n.power_state == PowerState::Active).count();
+        assert_eq!(active, 3, "wake set sized to the residual gang");
+        assert_eq!(dc.nodes[3].power_state, PowerState::Asleep, "cost ties: lowest ids");
+        assert!(h.counters().contains(&("drs_wakes", 3)));
+    }
+
+    #[test]
+    fn gang_wake_declines_when_the_fleet_cannot_host_the_remainder() {
+        use crate::sched::filter::default_filter_chain;
+        // Only 4 nodes can host one member each; 5 residual members are
+        // unreachable, so the hook must wake *nothing* (a partial wake
+        // spree would be rolled back unused by the atomic gang).
+        let mut dc = ClusterSpec::tiny(4, 2, 0).build();
+        let mut h = DrsHook::new(DrsConfig::with_timeout(1.0, 0));
+        let mut inval = |_n: usize| {};
+        for now in 1..=3 {
+            h.on_tick(&mut dc, now, &mut inval);
+        }
+        let chain = default_filter_chain();
+        let member = Task::new(9, 1.0, 0.0, GpuDemand::Whole(2));
+        assert!(!h.post_fail_gang(&mut dc, &member, 5, &chain, &mut inval));
+        assert!(dc.nodes.iter().all(|n| n.power_state == PowerState::Asleep));
+        assert!(h.counters().contains(&("drs_wakes", 0)));
+        assert!((h.transition_energy_j() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gang_wake_spends_free_drain_cancellations_before_sleepers() {
+        use crate::sched::filter::default_filter_chain;
+        let mut dc = ClusterSpec::tiny(4, 2, 0).build();
+        let mut h = DrsHook::new(DrsConfig {
+            idle_timeout: 1.0,
+            wake_latency: 0,
+            sleep_cost_j: 0.0,
+            wake_cost_j: 30.0,
+        });
+        let mut inval = |_n: usize| {};
+        for now in 1..=3 {
+            h.on_tick(&mut dc, now, &mut inval);
+        }
+        // Node 2 is mid-drain (never slept): cancelling it is free.
+        dc.nodes[2].power_state = PowerState::Draining;
+        let chain = default_filter_chain();
+        let member = Task::new(9, 1.0, 0.0, GpuDemand::Whole(2));
+        assert!(h.post_fail_gang(&mut dc, &member, 2, &chain, &mut inval));
+        assert_eq!(dc.nodes[2].power_state, PowerState::Active, "drain cancelled");
+        assert_eq!(dc.nodes[0].power_state, PowerState::Active, "one sleeper booted");
+        assert_eq!(dc.nodes[1].power_state, PowerState::Asleep);
+        assert_eq!(dc.nodes[3].power_state, PowerState::Asleep);
+        assert!(h.counters().contains(&("drs_wake_cancels", 1)));
+        // Energy: one paid wake only — the cancellation was free.
+        assert!((h.transition_energy_j() - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gang_wake_with_latency_boots_future_capacity_without_retry() {
+        use crate::sched::filter::default_filter_chain;
+        let mut dc = ClusterSpec::tiny(4, 2, 0).build();
+        let mut h = DrsHook::new(DrsConfig::with_timeout(1.0, 4));
+        let mut inval = |_n: usize| {};
+        for now in 1..=3 {
+            h.on_tick(&mut dc, now, &mut inval);
+        }
+        let chain = default_filter_chain();
+        let member = Task::new(9, 1.0, 0.0, GpuDemand::Whole(2));
+        // Booting takes 4 ticks: the wakes are committed (future
+        // capacity for the gang's next arrival) but no retry now.
+        assert!(!h.post_fail_gang(&mut dc, &member, 2, &chain, &mut inval));
+        let waking = dc
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.power_state, PowerState::Waking { .. }))
+            .count();
+        assert_eq!(waking, 2);
+    }
+
+    #[test]
+    fn gang_wake_for_the_last_member_is_the_singleton_path() {
+        use crate::sched::filter::default_filter_chain;
+        let mut dc = ClusterSpec::tiny(3, 2, 0).build();
+        let mut h = DrsHook::new(DrsConfig::with_timeout(1.0, 0));
+        let mut inval = |_n: usize| {};
+        for now in 1..=3 {
+            h.on_tick(&mut dc, now, &mut inval);
+        }
+        let chain = default_filter_chain();
+        let member = Task::new(9, 1.0, 0.0, GpuDemand::Whole(2));
+        assert!(h.post_fail_gang(&mut dc, &member, 1, &chain, &mut inval));
+        let active =
+            dc.nodes.iter().filter(|n| n.power_state == PowerState::Active).count();
+        assert_eq!(active, 1, "one member, one wake");
+    }
+
+    #[test]
+    fn place_gang_wakes_a_sleeping_fleet_end_to_end() {
+        use crate::sched::gang::{gang_task, tp_violations};
+        use crate::tasks::GangSpec;
+        let mut dc = ClusterSpec::tiny(4, 2, 0).build();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(PolicyKind::FirstFit);
+        s.add_post_hook(Box::new(DrsHook::new(DrsConfig::with_timeout(1.0, 0))));
+        // Tick the fleet to sleep with protocol entries placing nothing.
+        for i in 0..4 {
+            let big = Task::new(i, 1.0, 0.0, GpuDemand::Whole(64));
+            assert!(s.place(&mut dc, &w, &big).is_none());
+        }
+        assert!(dc.nodes.iter().all(|n| n.power_state == PowerState::Asleep));
+        // A 2-member gang (tp=2, pp=2, dp=1) needs two nodes awake at
+        // once; the gang-aware wake must boot both.
+        let spec = GangSpec::new(2, 2, 1).unwrap();
+        let g = gang_task(9, 1.0, 0.0, spec);
+        let d = s.place_gang(&mut dc, &w, &g).expect("gang-aware wake places the gang");
+        assert_eq!(d.members.len(), 2);
+        assert_ne!(d.members[0].node, d.members[1].node, "2-GPU nodes host one member");
+        assert_eq!(tp_violations(&d.members, spec), 0);
+        assert_eq!(dc.nodes[2].power_state, PowerState::Asleep);
+        assert_eq!(dc.nodes[3].power_state, PowerState::Asleep);
+    }
+
+    #[test]
+    fn place_gang_declines_cpu_bound_gangs_without_spending_wakes() {
+        use crate::sched::gang::gang_task;
+        use crate::tasks::GangSpec;
+        // The `gang` PreFilter's GPU-contiguity bound passes (8 groups
+        // of 2 across 4×4 GPUs ≥ 5 members) and so do the aggregate
+        // CPU sums (300 ≤ 384), but per-node CPU caps each node at one
+        // 60-vCPU member — 4 < 5: the wake pass must recognize the
+        // shortfall and leave the whole fleet asleep.
+        let mut dc = ClusterSpec::tiny(4, 4, 0).build();
+        let w = Workload::default();
+        let mut s = Scheduler::from_policy(PolicyKind::FirstFit);
+        s.add_post_hook(Box::new(DrsHook::new(DrsConfig::with_timeout(1.0, 0))));
+        for i in 0..4 {
+            let big = Task::new(i, 1.0, 0.0, GpuDemand::Whole(64));
+            assert!(s.place(&mut dc, &w, &big).is_none());
+        }
+        assert!(dc.nodes.iter().all(|n| n.power_state == PowerState::Asleep));
+        let spec = GangSpec::new(2, 5, 1).unwrap();
+        let g = gang_task(9, 60.0, 0.0, spec);
+        assert!(s.place_gang(&mut dc, &w, &g).is_none());
+        assert!(dc.nodes.iter().all(|n| n.power_state == PowerState::Asleep));
+        assert_eq!(s.hook_counter("drs_wakes"), 0, "no energy spent on a doomed gang");
     }
 }

@@ -308,7 +308,9 @@ impl FilterPlugin for AffinityFilter {
 /// placements are bit-identical) plus the `drs` power-state gate (a
 /// no-op while every node is `Active`, i.e. whenever no DRS hook is
 /// attached — same bit-identity argument, pinned by
-/// `rust/tests/drs_equivalence.rs`).
+/// `rust/tests/drs_equivalence.rs`) plus the `gang` aggregate PreFilter
+/// (a no-op for every non-gang task, pinned by
+/// `rust/tests/gang_equivalence.rs`).
 pub fn default_filter_chain() -> Vec<Box<dyn FilterPlugin>> {
     vec![
         Box::new(ResourcesFilter),
@@ -317,6 +319,7 @@ pub fn default_filter_chain() -> Vec<Box<dyn FilterPlugin>> {
         Box::new(LabelsFilter { selector: Vec::new() }),
         Box::new(AffinityFilter),
         Box::new(crate::sched::drs::DrsFilter),
+        Box::new(crate::sched::gang::GangFilter),
     ]
 }
 

@@ -72,6 +72,11 @@ pub struct SchedCtx<'a> {
     pub generations: &'a [u64],
     /// Cluster-wide normalization constants (largest node shapes).
     pub caps: ClusterCaps,
+    /// In-flight gang placement progress (`None` for ordinary
+    /// decisions): which member is being placed and where the committed
+    /// members sit. Read by topology-aware plugins
+    /// ([`crate::sched::gang::TopoPlugin`]).
+    pub gang: Option<&'a crate::sched::gang::GangProgress>,
 }
 
 /// Largest node shapes in the cluster, for dimension normalization.
@@ -239,6 +244,24 @@ pub trait PostHook: Send {
         self.post_fail(dc, task, invalidate)
     }
 
+    /// A gang *member* failed with `remaining` members (this one
+    /// included) still to place. Unlike the single-task post-fail, a
+    /// useful remedy may need to free capacity for *several* members at
+    /// once (the DRS hook wakes a whole set of sleepers sized to the
+    /// residual gang — see [`crate::sched::drs::DrsHook`]). The default
+    /// forwards to [`PostHook::post_fail_chained`], so hooks unaware of
+    /// gangs keep their single-task behavior.
+    fn post_fail_gang(
+        &mut self,
+        dc: &mut Datacenter,
+        member: &Task,
+        _remaining: u32,
+        filters: &[Box<dyn FilterPlugin>],
+        invalidate: &mut dyn FnMut(usize),
+    ) -> bool {
+        self.post_fail_chained(dc, member, filters, invalidate)
+    }
+
     /// After `node_id`'s allocation changed (commit or release): e.g.
     /// proactive defragmentation. Report each mutated node via
     /// `invalidate` (a hook may touch nodes other than `node_id`).
@@ -343,6 +366,10 @@ pub struct Scheduler {
     /// protocol entry. The DRS subsystem's time unit (`docs/power.md`);
     /// identical semantics in both simulation loops.
     events: u64,
+    /// In-flight gang placement progress ([`Scheduler::place_gang`]);
+    /// exposed to plugins through [`SchedCtx::gang`]. Always `None`
+    /// outside the gang member loop.
+    gang_progress: Option<crate::sched::gang::GangProgress>,
     /// Seeded RNG for the k8s-style random tie-break (reproducible).
     tie_rng: Rng,
     /// Ablation switch: pick the lowest-id node among ties instead of
@@ -385,6 +412,7 @@ impl Scheduler {
             filter_constrains: Vec::new(),
             miss_scratch: Vec::new(),
             events: 0,
+            gang_progress: None,
             tie_rng: Rng::new(0xC0FFEE),
             deterministic_ties: false,
             label: label.to_string(),
@@ -746,6 +774,7 @@ impl Scheduler {
             prepared,
             generations: &self.generations,
             caps: *caps,
+            gang: self.gang_progress.as_ref(),
         };
         let t_score = PhaseTimer::start(prof);
         // --- 2. WeightModulator extension point: retarget the plugin
@@ -1058,6 +1087,142 @@ impl Scheduler {
                 self.obs.registry.inc("trace_events", 1);
             }
         }
+    }
+
+    /// The all-or-nothing gang protocol: one clock tick, the PreFilter
+    /// chain on the gang *parent* (aggregate capacity including the
+    /// `gang` filter's NVLink-contiguous bound), then each member —
+    /// one TP group, [`crate::sched::gang::member_task`] — through the
+    /// full decision pipeline in member order, committing as it goes so
+    /// later members see earlier ones. A member failure first offers
+    /// every hook a gang-aware remedy ([`PostHook::post_fail_gang`],
+    /// one retry), and a definitive failure rolls the committed prefix
+    /// back in reverse — counters, per-node state and revision stamps
+    /// return to their pre-call values, so a failed gang is
+    /// indistinguishable from one never attempted (pinned by
+    /// `rust/tests/gang_equivalence.rs`). `postPlace` hooks run only
+    /// after the whole gang commits. Tasks without a gang fall through
+    /// to the ordinary [`Scheduler::place`] protocol as a one-member
+    /// gang. Gang decisions currently emit no JSONL trace events (the
+    /// per-member captures are not flushed).
+    pub fn place_gang(
+        &mut self,
+        dc: &mut Datacenter,
+        workload: &Workload,
+        task: &Task,
+    ) -> Option<crate::sched::gang::GangDecision> {
+        use crate::sched::gang::{member_task, pp_span, tp_violations, GangDecision, GangProgress};
+        let Some(spec) = task.gang else {
+            return self
+                .place(dc, workload, task)
+                .map(|d| GangDecision { members: vec![d] });
+        };
+        self.advance_clock(dc);
+        // PreFilter the parent: its demand fields carry the gang
+        // totals, so aggregate checks need no special casing, and the
+        // `gang` filter adds the contiguous-capacity bound.
+        {
+            let fctx = FilterCtx { dc };
+            for f in &self.filters {
+                if !f.pre_filter(&fctx, task) {
+                    self.obs.registry.inc("sched_prefilter_rejections", 1);
+                    self.obs.registry.inc("gangs_failed", 1);
+                    self.obs.registry.inc("sched_failures", 1);
+                    return None;
+                }
+            }
+        }
+        let n_members = spec.n_members();
+        let mut members: Vec<Decision> = Vec::with_capacity(n_members as usize);
+        for i in 0..n_members {
+            let member = member_task(task, i);
+            self.gang_progress = Some(GangProgress {
+                spec,
+                member: i,
+                nodes: members.iter().map(|d| d.node).collect(),
+            });
+            let decision = match self.schedule(dc, workload, &member) {
+                Some(d) => Some(d),
+                None => {
+                    let filters = &self.filters;
+                    let mut invalidate = bump_generation(&mut self.generations);
+                    let mut retry = false;
+                    for h in &mut self.hooks {
+                        if h.post_fail_gang(dc, &member, n_members - i, filters, &mut invalidate) {
+                            retry = true;
+                            break;
+                        }
+                    }
+                    if retry {
+                        self.obs.registry.inc("sched_retries", 1);
+                        self.schedule(dc, workload, &member)
+                    } else {
+                        None
+                    }
+                }
+            };
+            let Some(d) = decision else {
+                // All-or-nothing: unwind the committed prefix in
+                // reverse, restoring every counter exactly.
+                self.gang_progress = None;
+                for (j, dj) in members.iter().enumerate().rev() {
+                    let m = member_task(task, j as u32);
+                    dc.deallocate(&m, dj.node, &dj.placement);
+                }
+                let touched: Vec<usize> = members.iter().map(|d| d.node).collect();
+                for n in touched {
+                    self.notify_node_changed(n);
+                }
+                if self.last_reject_constrained {
+                    self.obs.registry.inc("constraint_unschedulable", 1);
+                }
+                self.obs.registry.inc("gangs_failed", 1);
+                self.obs.registry.inc("sched_failures", 1);
+                return None;
+            };
+            dc.allocate(&member, d.node, &d.placement);
+            self.notify_node_changed(d.node);
+            members.push(d);
+        }
+        self.gang_progress = None;
+        // `postPlace` hooks run once per member, only now that the gang
+        // is committed (a hook mutating the cluster mid-gang would make
+        // rollback inexact).
+        let touched: Vec<usize> = members.iter().map(|d| d.node).collect();
+        for n in touched {
+            self.run_post_place(dc, n);
+        }
+        self.obs.registry.inc("gang_pp_span_sum", pp_span(&members));
+        let violations = tp_violations(&members, spec);
+        if violations > 0 {
+            self.obs.registry.inc("gang_tp_violations", violations);
+        }
+        self.obs.registry.inc("gangs_placed", 1);
+        self.obs.registry.inc("sched_places", 1);
+        Some(GangDecision { members })
+    }
+
+    /// Departure of a committed gang: one clock tick, every member
+    /// released (members are rebuilt deterministically from the parent),
+    /// then the `postPlace` hooks per touched node — the mirror of
+    /// [`Scheduler::place_gang`], counted as one `sched_releases`.
+    pub fn release_gang(
+        &mut self,
+        dc: &mut Datacenter,
+        task: &Task,
+        decision: &crate::sched::gang::GangDecision,
+    ) {
+        self.advance_clock(dc);
+        for (i, d) in decision.members.iter().enumerate() {
+            let member = crate::sched::gang::member_task(task, i as u32);
+            dc.deallocate(&member, d.node, &d.placement);
+            self.notify_node_changed(d.node);
+        }
+        let touched: Vec<usize> = decision.members.iter().map(|d| d.node).collect();
+        for n in touched {
+            self.run_post_place(dc, n);
+        }
+        self.obs.registry.inc("sched_releases", 1);
     }
 
     /// Turn the capture of the just-finished decision into a JSONL

@@ -1,0 +1,378 @@
+//! Topology-aware gang scheduling for model-parallel jobs.
+//!
+//! The paper schedules single-node tasks, but the LLM workloads behind
+//! its power/fragmentation problem arrive as *gangs*: a TP×PP×DP
+//! parallelism split ([`GangSpec`]) where each tensor-parallel group
+//! (`tp` whole GPUs) must share one node's NVLink domain, pipeline
+//! stages prefer locality, and data-parallel replicas can go anywhere.
+//! This module supplies the gang-specific pieces the framework composes
+//! (`rust/src/sched/framework.rs` owns the
+//! [`Scheduler::place_gang`](crate::sched::Scheduler::place_gang) /
+//! [`Scheduler::release_gang`](crate::sched::Scheduler::release_gang)
+//! protocol; `docs/gang.md` has the full model):
+//!
+//! * [`member_task`] / [`gang_task`] — the deterministic decomposition
+//!   of a gang-carrying [`Task`] into `pp·dp` identical member tasks
+//!   (`Whole(tp)` GPUs, per-member CPU/memory shares). Rollback and
+//!   release rebuild members from the parent, so no per-member state
+//!   needs to be stored.
+//! * [`GangFilter`] — the PreFilter aggregate check (registry key
+//!   `gang`): a gang is hopeless unless the fleet holds enough
+//!   NVLink-contiguous capacity, Σ_n ⌊free_whole_gpus(n)/tp⌋ ≥ pp·dp.
+//!   A no-op for ordinary tasks, so the default chain stays
+//!   placement-identical on gang-free traces.
+//! * [`TopoPlugin`] — the `topo` score plugin: prices a candidate
+//!   node for the member being placed by estimated communication cost
+//!   over the committed members ([`GangProgress`]), pipeline edges at
+//!   [`PP_TRAFFIC`] and data-parallel edges at [`DP_TRAFFIC`] units,
+//!   each divided by [`crate::cluster::Topology`] bandwidth. TP groups
+//!   never cross a node by construction (a member *is* one TP group),
+//!   so the hard requirement costs nothing to enforce.
+//! * [`ZonespreadPlugin`] — the `zonespread` score plugin: softens the
+//!   hard per-node spread cap of the `affinity` filter into a score
+//!   penalty (−1 per resident task of the same class), so classes
+//!   spread when possible without becoming unschedulable when not.
+
+use crate::cluster::node::{Node, Placement, ResourceView};
+use crate::sched::filter::{FilterCtx, FilterPlugin};
+use crate::sched::framework::{Decision, SchedCtx, ScorePlugin};
+use crate::tasks::{GangSpec, GpuDemand, Task};
+
+/// Relative traffic of one pipeline-parallel edge (activations flow
+/// every microbatch — the expensive span).
+pub const PP_TRAFFIC: f64 = 1.0;
+
+/// Relative traffic of one data-parallel edge (gradient all-reduce once
+/// per step — cheaper than the pipeline hop).
+pub const DP_TRAFFIC: f64 = 0.5;
+
+/// An atomically committed gang placement: one [`Decision`] per member,
+/// in member order (`i = replica·pp + stage`). Release via
+/// [`crate::sched::Scheduler::release_gang`] with the parent task.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GangDecision {
+    pub members: Vec<Decision>,
+}
+
+/// Progress of an in-flight gang placement, exposed to score plugins
+/// through [`SchedCtx::gang`] so they can see which member is being
+/// placed and where the committed members sit.
+#[derive(Clone, Debug)]
+pub struct GangProgress {
+    /// The gang's parallelism split.
+    pub spec: GangSpec,
+    /// Index of the member currently being scheduled.
+    pub member: u32,
+    /// Hosting node of each already-committed member (`len == member`).
+    pub nodes: Vec<usize>,
+}
+
+/// Build a gang-carrying task from *per-member* demand: the returned
+/// task's demand fields hold the gang totals (so aggregate accounting —
+/// GRAR denominators, PreFilter capacity sums — needs no special case)
+/// and its [`Task::gang`] carries the split.
+pub fn gang_task(id: u64, member_cpu: f64, member_mem: f64, spec: GangSpec) -> Task {
+    let n = spec.n_members() as f64;
+    Task::new(id, member_cpu * n, member_mem * n, GpuDemand::Whole(spec.total_gpus()))
+        .with_gang(spec)
+}
+
+/// Member `member` of a gang-carrying task: one tensor-parallel group —
+/// `Whole(tp)` GPUs on a single node — with an even share of the
+/// parent's CPU/memory and the parent's constraints. Deterministic, so
+/// rollback and release rebuild the exact task that was allocated. For
+/// a task without a gang the parent itself is returned unchanged.
+pub fn member_task(parent: &Task, member: u32) -> Task {
+    let Some(spec) = parent.gang else { return parent.clone() };
+    let n = spec.n_members() as f64;
+    let mut t = parent.clone();
+    // Members share the parent's identity for accounting; the low bits
+    // carry the member index purely for debuggability (nothing keys on
+    // task ids).
+    t.id = parent.id.wrapping_mul(64).wrapping_add(member as u64);
+    t.cpu = parent.cpu / n;
+    t.mem = parent.mem / n;
+    t.gpu = GpuDemand::Whole(spec.tp);
+    t.gang = None;
+    t
+}
+
+/// Distinct hosting nodes of a committed gang — the communication
+/// footprint (1 = fully node-local). Reported as `gang_pp_span_sum`
+/// so experiments can derive the mean span per placed gang.
+pub fn pp_span(members: &[Decision]) -> u64 {
+    let mut nodes: Vec<usize> = members.iter().map(|d| d.node).collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+    nodes.len() as u64
+}
+
+/// Members whose placement is *not* one whole-GPU group of exactly `tp`
+/// GPUs on a single node. Structurally impossible through
+/// `place_gang` (a member is one TP group by construction); counted
+/// defensively as `gang_tp_violations`, which experiments assert is 0.
+pub fn tp_violations(members: &[Decision], spec: GangSpec) -> u64 {
+    members
+        .iter()
+        .filter(|d| {
+            !matches!(&d.placement, Placement::Whole { gpus } if gpus.len() == spec.tp as usize)
+        })
+        .count() as u64
+}
+
+/// The `gang` filter: PreFilter-only aggregate feasibility for gang
+/// tasks. A gang of `pp·dp` members, each needing `tp` whole GPUs on
+/// one node, is cluster-wide infeasible unless
+/// Σ_n ⌊free_whole_gpus(n)/tp⌋ ≥ pp·dp. Conservative by contract:
+/// power states and CPU/memory are deliberately ignored here (a DRS
+/// hook may wake sleepers, and per-member feasibility is the node
+/// loop's job), so a `false` really means no placement could exist.
+/// Both phases are no-ops for ordinary tasks.
+pub struct GangFilter;
+
+impl FilterPlugin for GangFilter {
+    fn name(&self) -> &'static str {
+        "gang"
+    }
+
+    fn pre_filter(&self, ctx: &FilterCtx, task: &Task) -> bool {
+        let Some(spec) = task.gang else { return true };
+        let mut groups: u32 = 0;
+        for node in &ctx.dc.nodes {
+            groups += node.gpus_fully_free() as u32 / spec.tp;
+            if groups >= spec.n_members() {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn feasible(&self, _ctx: &FilterCtx, _node: &Node, _task: &Task) -> bool {
+        // Per-node feasibility of a *member* is entirely Cond. 1–3
+        // (`resources` sees `Whole(tp)`); the gang parent never enters
+        // the node loop.
+        true
+    }
+}
+
+/// The `topo` score plugin: estimated communication cost of hosting
+/// the member being placed on `node`, given the committed members in
+/// [`SchedCtx::gang`]. The cost of each edge is its traffic divided by
+/// the bandwidth tier between the endpoints
+/// ([`crate::cluster::Datacenter::bandwidth_between`]): the previous
+/// pipeline stage of the same replica at [`PP_TRAFFIC`], and the
+/// same-stage member of every earlier replica at [`DP_TRAFFIC`].
+/// Scores are negated costs (higher is better), so co-located members
+/// win and cross-zone spans lose. 0 for ordinary tasks and for member
+/// 0 (no peers yet), which normalizes to a constant 100 — composing
+/// `topo` into a profile leaves gang-free decisions bit-identical.
+pub struct TopoPlugin;
+
+impl ScorePlugin for TopoPlugin {
+    fn name(&self) -> &'static str {
+        "topo"
+    }
+
+    /// Not cacheable: the score depends on the in-flight gang progress
+    /// (which member, where its peers sit), which the raw-score cache
+    /// key (demand signature × node generation) cannot see — all
+    /// members share one signature, yet their topology costs differ.
+    fn cacheable(&self) -> bool {
+        false
+    }
+
+    fn score(&self, ctx: &SchedCtx, node: &Node, _task: &Task, _placements: &[Placement]) -> f64 {
+        let Some(g) = ctx.gang else { return 0.0 };
+        if g.member == 0 {
+            return 0.0;
+        }
+        let spec = g.spec;
+        let stage = spec.stage_of(g.member);
+        let replica = spec.replica_of(g.member);
+        let mut cost = 0.0;
+        // Pipeline edge: the previous stage of this replica (member
+        // order is replica-major, so that is the immediately preceding
+        // member).
+        if stage > 0 {
+            if let Some(&peer) = g.nodes.get(g.member as usize - 1) {
+                cost += PP_TRAFFIC / ctx.dc.bandwidth_between(node.id, peer);
+            }
+        }
+        // Data-parallel edges: the same stage of every earlier replica
+        // (the gradient all-reduce ring).
+        for r in 0..replica {
+            if let Some(&peer) = g.nodes.get((r * spec.pp + stage) as usize) {
+                cost += DP_TRAFFIC / ctx.dc.bandwidth_between(node.id, peer);
+            }
+        }
+        -cost
+    }
+}
+
+/// The `zonespread` score plugin: a *soft* spread preference. Where the
+/// `affinity` filter's `max_per_node` cap makes a class-keyed task
+/// unschedulable once every node reaches the cap, this plugin merely
+/// penalizes a candidate by the number of same-class tasks it already
+/// hosts (−1 each), spreading the class while it can and degrading
+/// gracefully when it cannot. 0 for tasks without a class key, so
+/// unkeyed traces are bit-identical under any `zonespread` weight.
+pub struct ZonespreadPlugin;
+
+impl ScorePlugin for ZonespreadPlugin {
+    fn name(&self) -> &'static str {
+        "zonespread"
+    }
+
+    fn score(&self, _ctx: &SchedCtx, node: &Node, task: &Task, _placements: &[Placement]) -> f64 {
+        match task.constraints.as_deref().and_then(|c| c.class_key.as_deref()) {
+            Some(key) => -f64::from(node.class_count(key)),
+            None => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, Datacenter};
+    use crate::sched::framework::ClusterCaps;
+    use crate::tasks::{TaskConstraints, Workload};
+
+    fn spec(tp: u32, pp: u32, dp: u32) -> GangSpec {
+        GangSpec::new(tp, pp, dp).expect("valid spec")
+    }
+
+    #[test]
+    fn member_decomposition_conserves_totals() {
+        let parent = gang_task(7, 8.0, 24_576.0, spec(2, 2, 2));
+        assert_eq!(parent.cpu, 32.0);
+        assert_eq!(parent.mem, 98_304.0);
+        assert_eq!(parent.gpu, GpuDemand::Whole(8));
+        let members: Vec<Task> = (0..4).map(|i| member_task(&parent, i)).collect();
+        let cpu: f64 = members.iter().map(|m| m.cpu).sum();
+        let gpus: f64 = members.iter().map(|m| m.gpu.units()).sum();
+        assert_eq!(cpu, parent.cpu);
+        assert_eq!(gpus, parent.gpu.units());
+        assert!(members.iter().all(|m| m.gpu == GpuDemand::Whole(2) && m.gang.is_none()));
+        // Deterministic: rollback/release rebuild the identical task.
+        assert_eq!(member_task(&parent, 3), member_task(&parent, 3));
+        // Non-gang tasks pass through unchanged.
+        let plain = Task::new(1, 2.0, 512.0, GpuDemand::Whole(1));
+        assert_eq!(member_task(&plain, 0), plain);
+    }
+
+    #[test]
+    fn gang_prefilter_counts_contiguous_whole_gpu_capacity() {
+        // Two 4-GPU nodes: ⌊4/4⌋+⌊4/4⌋ = 2 four-GPU groups.
+        let mut dc = ClusterSpec::tiny(2, 4, 0).build();
+        let ctx = FilterCtx { dc: &dc };
+        let fits = |s: GangSpec| {
+            GangFilter.pre_filter(&ctx, &gang_task(0, 1.0, 0.0, s))
+        };
+        assert!(fits(spec(4, 2, 1))); // 2 members of 4
+        assert!(!fits(spec(4, 2, 2))); // 4 members of 4: too many
+        assert!(fits(spec(2, 2, 2))); // 4 members of 2: ⌊4/2⌋·2 = 4
+        assert!(!fits(spec(3, 3, 1))); // ⌊4/3⌋·2 = 2 < 3 members
+        // Fragmented capacity: one GPU busy per node kills 4-GPU groups
+        // but leaves 2-GPU ones.
+        let filler = Task::new(9, 1.0, 0.0, GpuDemand::Whole(1));
+        let p = Placement::Whole { gpus: vec![0] };
+        dc.allocate(&filler, 0, &p);
+        dc.allocate(&filler, 1, &p);
+        let ctx = FilterCtx { dc: &dc };
+        let fits = |s: GangSpec| {
+            GangFilter.pre_filter(&ctx, &gang_task(0, 1.0, 0.0, s))
+        };
+        assert!(!fits(spec(4, 2, 1)));
+        assert!(fits(spec(2, 2, 1)));
+        // Ordinary tasks are never vetoed.
+        assert!(GangFilter.pre_filter(&ctx, &Task::new(1, 1.0, 0.0, GpuDemand::Whole(64))));
+    }
+
+    fn ctx_with<'a>(
+        dc: &'a Datacenter,
+        w: &'a Workload,
+        pw: &'a crate::frag::PreparedWorkload,
+        gens: &'a [u64],
+        gang: Option<&'a GangProgress>,
+    ) -> SchedCtx<'a> {
+        SchedCtx { dc, workload: w, prepared: pw, generations: gens, caps: ClusterCaps::of(dc), gang }
+    }
+
+    #[test]
+    fn topo_plugin_prices_spans_by_bandwidth_tier() {
+        // 4 nodes across 2 zones: 0,2 in z0; 1,3 in z1.
+        let dc = ClusterSpec::tiny(4, 4, 0).with_zones(2).build();
+        let w = Workload::default();
+        let pw = crate::frag::PreparedWorkload::new(&w);
+        let gens = vec![0u64; 4];
+        let t = Task::new(0, 1.0, 0.0, GpuDemand::Whole(2));
+        // Member 1 = stage 1 of replica 0; member 0 sits on node 0.
+        let g = GangProgress { spec: spec(2, 2, 2), member: 1, nodes: vec![0] };
+        let ctx = ctx_with(&dc, &w, &pw, &gens, Some(&g));
+        let score = |n: usize| TopoPlugin.score(&ctx, &dc.nodes[n], &t, &[]);
+        let (same, zone, cross) = (score(0), score(2), score(1));
+        assert_eq!(same, -PP_TRAFFIC / 600.0);
+        assert_eq!(zone, -PP_TRAFFIC / 100.0);
+        assert_eq!(cross, -PP_TRAFFIC / 25.0);
+        assert!(same > zone && zone > cross);
+        // Member 2 = stage 0 of replica 1: a DP edge to member 0 only.
+        let g = GangProgress { spec: spec(2, 2, 2), member: 2, nodes: vec![0, 2] };
+        let ctx = ctx_with(&dc, &w, &pw, &gens, Some(&g));
+        assert_eq!(TopoPlugin.score(&ctx, &dc.nodes[0], &t, &[]), -DP_TRAFFIC / 600.0);
+        // Member 3 = stage 1 of replica 1: PP edge to member 2 and DP
+        // edge to member 1.
+        let g = GangProgress { spec: spec(2, 2, 2), member: 3, nodes: vec![0, 2, 1] };
+        let ctx = ctx_with(&dc, &w, &pw, &gens, Some(&g));
+        assert_eq!(
+            TopoPlugin.score(&ctx, &dc.nodes[1], &t, &[]),
+            -(PP_TRAFFIC / 25.0 + DP_TRAFFIC / 600.0)
+        );
+        // Member 0 and non-gang decisions are flat zero.
+        let g0 = GangProgress { spec: spec(2, 2, 2), member: 0, nodes: vec![] };
+        let ctx = ctx_with(&dc, &w, &pw, &gens, Some(&g0));
+        assert_eq!(TopoPlugin.score(&ctx, &dc.nodes[3], &t, &[]), 0.0);
+        let ctx = ctx_with(&dc, &w, &pw, &gens, None);
+        assert_eq!(TopoPlugin.score(&ctx, &dc.nodes[3], &t, &[]), 0.0);
+        assert!(!TopoPlugin.cacheable());
+    }
+
+    #[test]
+    fn zonespread_penalizes_resident_class_counts() {
+        let mut dc = ClusterSpec::tiny(2, 4, 0).build();
+        let keyed = |id: u64| {
+            Task::new(id, 1.0, 0.0, GpuDemand::Frac(0.25)).with_constraints(TaskConstraints {
+                class_key: Some("job-a".to_string()),
+                ..Default::default()
+            })
+        };
+        dc.allocate(&keyed(1), 0, &Placement::Shared { gpu: 0 });
+        dc.allocate(&keyed(2), 0, &Placement::Shared { gpu: 0 });
+        let w = Workload::default();
+        let pw = crate::frag::PreparedWorkload::new(&w);
+        let gens = vec![0u64; 2];
+        let ctx = ctx_with(&dc, &w, &pw, &gens, None);
+        let t = keyed(3);
+        assert_eq!(ZonespreadPlugin.score(&ctx, &dc.nodes[0], &t, &[]), -2.0);
+        assert_eq!(ZonespreadPlugin.score(&ctx, &dc.nodes[1], &t, &[]), 0.0);
+        // Unkeyed tasks see a flat surface (bit-identity under weight).
+        let plain = Task::new(4, 1.0, 0.0, GpuDemand::Frac(0.25));
+        assert_eq!(ZonespreadPlugin.score(&ctx, &dc.nodes[0], &plain, &[]), 0.0);
+        assert!(ZonespreadPlugin.cacheable());
+    }
+
+    #[test]
+    fn span_and_violation_helpers() {
+        let whole = |node: usize, gpus: Vec<usize>| Decision {
+            node,
+            placement: Placement::Whole { gpus },
+        };
+        let members = vec![whole(0, vec![0, 1]), whole(0, vec![2, 3]), whole(2, vec![0, 1])];
+        assert_eq!(pp_span(&members), 2);
+        assert_eq!(tp_violations(&members, spec(2, 3, 1)), 0);
+        // A member holding the wrong group width is a violation.
+        assert_eq!(tp_violations(&members, spec(4, 3, 1)), 3);
+        let shared = vec![Decision { node: 0, placement: Placement::Shared { gpu: 0 } }];
+        assert_eq!(tp_violations(&shared, spec(1, 1, 1)), 1);
+    }
+}

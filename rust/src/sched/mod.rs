@@ -32,6 +32,7 @@ pub mod bind;
 pub mod drs;
 pub mod filter;
 pub mod framework;
+pub mod gang;
 pub mod modulate;
 pub mod policies;
 pub mod profile;
@@ -40,6 +41,7 @@ pub use bind::{BindCtx, BindPlugin};
 pub use drs::{ConsolidatePlugin, DrsConfig, DrsFilter, DrsHook};
 pub use filter::{FilterCtx, FilterPlugin};
 pub use framework::{Decision, PostHook, SchedCtx, Scheduler, ScorePlugin};
+pub use gang::{GangDecision, GangFilter, GangProgress, TopoPlugin, ZonespreadPlugin};
 pub use modulate::{LatticeAlphaModulator, LoadAlphaModulator, WeightModulator};
 pub use profile::SchedulerProfile;
 

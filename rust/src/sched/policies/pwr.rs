@@ -104,6 +104,7 @@ mod tests {
             prepared: &pw,
             generations: &[0],
             caps: crate::sched::framework::ClusterCaps::of(&dc),
+            gang: None,
         };
         let t = Task::new(0, 2.0, 512.0, GpuDemand::Whole(2));
         let ps = node.candidate_placements(&t);

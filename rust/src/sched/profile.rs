@@ -418,6 +418,12 @@ const BUILTIN_SCORE: &[(&str, &str, fn() -> Box<dyn ScorePlugin>)] = &[
     ("consolidate", "bias placements onto already-active nodes so DRS sleepers stay asleep", || {
         Box::new(ConsolidatePlugin)
     }),
+    ("topo", "gang communication cost: PP/DP spans priced by topology bandwidth", || {
+        Box::new(crate::sched::gang::TopoPlugin)
+    }),
+    ("zonespread", "soft class spreading: penalize nodes by resident same-class count", || {
+        Box::new(crate::sched::gang::ZonespreadPlugin)
+    }),
 ];
 
 type BindBuilder = fn(&[f64]) -> Result<Box<dyn BindPlugin>, String>;
@@ -593,6 +599,10 @@ const BUILTIN_FILTER: &[(&str, &str, FilterBuilder)] = &[
     ("drs", "only Active power-state nodes accept placements (DRS sleep/wake)", |params| {
         no_filter_params(params, "drs")?;
         Ok(Box::new(DrsFilter))
+    }),
+    ("gang", "gangs need Σ ⌊free whole GPUs / tp⌋ ≥ members (aggregate PreFilter)", |params| {
+        no_filter_params(params, "gang")?;
+        Ok(Box::new(crate::sched::gang::GangFilter))
     }),
 ];
 
@@ -1118,13 +1128,13 @@ mod tests {
         p.build().unwrap();
         // Explicit default-equivalent chain lowers to the default label.
         let p = SchedulerProfile::parse(
-            "score(fgd)|filter(resources,gpumodel,miglattice,labels,affinity,drs)",
+            "score(fgd)|filter(resources,gpumodel,miglattice,labels,affinity,drs,gang)",
         )
         .unwrap();
         assert_eq!(p.filters, default_filter_keys());
         assert!(!p.label.contains("filter"));
-        // Dropping the drs gate is an explicit (labeled) non-default
-        // chain now that the default includes it.
+        // Dropping the drs/gang gates is an explicit (labeled)
+        // non-default chain now that the default includes them.
         let p = SchedulerProfile::parse(
             "score(fgd)|filter(resources,gpumodel,miglattice,labels,affinity)",
         )

@@ -122,6 +122,14 @@ pub struct SteadyResult {
     /// hook; see [`crate::sched::drs`]).
     pub drs_sleeps: u64,
     pub drs_wakes: u64,
+    /// Gang scheduling activity under churn (zero on gang-free
+    /// traces; see [`crate::sched::gang`]). A gang is one arrival and
+    /// one scheduled/failed outcome, but commits (and on departure
+    /// releases) one member placement per TP group.
+    pub gangs_placed: u64,
+    pub gangs_failed: u64,
+    pub gang_tp_violations: u64,
+    pub gang_pp_span_sum: u64,
     /// Cumulative GPU units requested by arrivals / allocated to
     /// scheduled tasks — the churn loop's GRAR numerator/denominator.
     pub arrived_gpu_units: f64,
@@ -149,6 +157,16 @@ impl SteadyResult {
     }
 }
 
+/// How a resident task holds its resources — singletons commit one
+/// placement on one node, gangs commit one member placement per TP
+/// group and must be released through the same all-or-nothing path
+/// ([`Scheduler::release_gang`]) so every member's GPUs come back.
+#[derive(Clone, Debug)]
+enum Resident {
+    Single { node: usize, placement: Placement },
+    Gang(crate::sched::gang::GangDecision),
+}
+
 /// Run an arrivals+departures simulation for one policy.
 pub struct SteadySim {
     dc: Datacenter,
@@ -157,7 +175,7 @@ pub struct SteadySim {
     sampler: InflationSampler,
     rng: Rng,
     queue: BinaryHeap<Scheduled>,
-    running: std::collections::HashMap<u64, (Task, usize, Placement)>,
+    running: std::collections::HashMap<u64, (Task, Resident)>,
     now: f64,
     seq: u64,
     /// Arrival-rate modulation of the `diurnal-<amp>` trace family;
@@ -266,11 +284,23 @@ impl SteadySim {
                     // The full per-task protocol (onTick wake/sleep,
                     // schedule, postFail repack-and-retry, commit,
                     // postPlace defrag) lives in the framework —
-                    // nothing to remember here.
-                    match self.sched.place(&mut self.dc, &self.workload, &task) {
-                        Some(d) => {
+                    // nothing to remember here. Gang arrivals take the
+                    // all-or-nothing multi-node protocol instead; the
+                    // non-gang branch is byte-for-byte the legacy call
+                    // so gang-free traces reproduce bit-identically.
+                    let resident = if task.gang.is_some() {
+                        self.sched
+                            .place_gang(&mut self.dc, &self.workload, &task)
+                            .map(Resident::Gang)
+                    } else {
+                        self.sched
+                            .place(&mut self.dc, &self.workload, &task)
+                            .map(|d| Resident::Single { node: d.node, placement: d.placement })
+                    };
+                    match resident {
+                        Some(r) => {
                             out.allocated_gpu_units += task.gpu.units();
-                            self.running.insert(id, (task, d.node, d.placement));
+                            self.running.insert(id, (task, r));
                             out.scheduled += 1;
                             let dur = self.exp(cfg.mean_duration_s);
                             self.push(self.now + dur, Event::Departure { task_id: id });
@@ -281,11 +311,18 @@ impl SteadySim {
                     self.push(self.now + gap, Event::Arrival);
                 }
                 Event::Departure { task_id } => {
-                    if let Some((task, node, placement)) = self.running.remove(&task_id) {
+                    if let Some((task, resident)) = self.running.remove(&task_id) {
                         // Departures are where lattice holes open up —
                         // release() runs the postPlace hooks (proactive
                         // defrag's main use under churn).
-                        self.sched.release(&mut self.dc, &task, node, &placement);
+                        match resident {
+                            Resident::Single { node, placement } => {
+                                self.sched.release(&mut self.dc, &task, node, &placement);
+                            }
+                            Resident::Gang(d) => {
+                                self.sched.release_gang(&mut self.dc, &task, &d);
+                            }
+                        }
                         out.departures += 1;
                     }
                 }
@@ -304,6 +341,11 @@ impl SteadySim {
         out.constraint_unschedulable = self.sched.constraint_unschedulable();
         out.drs_sleeps = self.sched.hook_counter("drs_sleeps");
         out.drs_wakes = self.sched.hook_counter("drs_wakes");
+        let m = self.sched.metrics();
+        out.gangs_placed = m.counter("gangs_placed");
+        out.gangs_failed = m.counter("gangs_failed");
+        out.gang_tp_violations = m.counter("gang_tp_violations");
+        out.gang_pp_span_sum = m.counter("gang_pp_span_sum");
         out
     }
 
@@ -379,6 +421,38 @@ mod tests {
         let (gpu, cpu) = sim.dc.recompute_caches();
         assert!((gpu - sim.dc.gpu_allocated_units()).abs() < 1e-6);
         assert!((cpu - sim.dc.cpu_allocated_units()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gang_churn_conserves_resources_member_wise() {
+        let cfg = SteadyConfig {
+            mean_interarrival_s: 2.0,
+            mean_duration_s: 100.0,
+            horizon_s: 2_000.0,
+            sample_every_s: 100.0,
+            seed: 3,
+        };
+        let dc = ClusterSpec::tiny(8, 4, 0).build();
+        let sched = Scheduler::from_policy(PolicyKind::PwrFgd { alpha: 0.1 });
+        let mut sim = SteadySim::new(dc, sched, &TraceSpec::gang_trace(0.5), &cfg);
+        let r = sim.run(&cfg);
+        // A gang is one scheduled arrival but binds one task per member,
+        // so the ledger is member-wise: resident members == dc.n_tasks.
+        let resident_members: u64 = sim
+            .running
+            .values()
+            .map(|(_, res)| match res {
+                Resident::Single { .. } => 1,
+                Resident::Gang(d) => d.members.len() as u64,
+            })
+            .sum();
+        assert_eq!(resident_members, sim.dc.n_tasks);
+        assert_eq!(r.scheduled, r.departures + sim.running.len() as u64);
+        let (gpu, cpu) = sim.dc.recompute_caches();
+        assert!((gpu - sim.dc.gpu_allocated_units()).abs() < 1e-6);
+        assert!((cpu - sim.dc.cpu_allocated_units()).abs() < 1e-6);
+        assert!(r.gangs_placed > 0, "gang-50 churn should place gangs");
+        assert_eq!(r.gang_tp_violations, 0);
     }
 
     #[test]

@@ -61,6 +61,16 @@ pub struct RunResult {
     /// [`crate::sched::drs`]).
     pub drs_sleeps: u64,
     pub drs_wakes: u64,
+    /// Gang scheduling activity (zero on gang-free traces; see
+    /// [`crate::sched::gang`]): gangs atomically committed / failed,
+    /// members whose placement is not one whole-GPU TP group on a
+    /// single node (must stay 0 — `ext-gang` asserts it), and the sum
+    /// of distinct-node spans over placed gangs (mean span =
+    /// `gang_pp_span_sum / gangs_placed`).
+    pub gangs_placed: u64,
+    pub gangs_failed: u64,
+    pub gang_tp_violations: u64,
+    pub gang_pp_span_sum: u64,
 }
 
 impl RunResult {
@@ -134,7 +144,10 @@ impl Simulation {
 
     /// Submit one sampled task; returns whether it was scheduled. The
     /// whole per-task protocol — schedule, postFail repack-and-retry,
-    /// commit, postPlace defrag — lives in [`Scheduler::place`].
+    /// commit, postPlace defrag — lives in [`Scheduler::place`];
+    /// gang-carrying arrivals take the all-or-nothing
+    /// [`Scheduler::place_gang`] protocol instead (one submission, one
+    /// atomic multi-node decision).
     pub fn step(&mut self) -> bool {
         let task = self.sampler.next_task();
         self.submitted += 1;
@@ -142,16 +155,17 @@ impl Simulation {
         if let crate::tasks::GpuDemand::Mig(p) = task.gpu {
             self.arrived_mig_units[p.lattice().index()] += p.units();
         }
-        match self.sched.place(&mut self.dc, &self.workload, &task) {
-            Some(_) => {
-                self.scheduled += 1;
-                true
-            }
-            None => {
-                self.failed += 1;
-                false
-            }
+        let placed = if task.gang.is_some() {
+            self.sched.place_gang(&mut self.dc, &self.workload, &task).is_some()
+        } else {
+            self.sched.place(&mut self.dc, &self.workload, &task).is_some()
+        };
+        if placed {
+            self.scheduled += 1;
+        } else {
+            self.failed += 1;
         }
+        placed
     }
 
     /// Replay the inflation run up to the `nth` sampled arrival
@@ -249,6 +263,7 @@ impl Simulation {
             }
         }
         series.points.push(self.sample());
+        let m = self.sched.metrics();
         RunResult {
             series,
             submitted: self.submitted,
@@ -262,6 +277,10 @@ impl Simulation {
             constraint_unschedulable: self.sched.constraint_unschedulable(),
             drs_sleeps: self.sched.hook_counter("drs_sleeps"),
             drs_wakes: self.sched.hook_counter("drs_wakes"),
+            gangs_placed: m.counter("gangs_placed"),
+            gangs_failed: m.counter("gangs_failed"),
+            gang_tp_violations: m.counter("gang_tp_violations"),
+            gang_pp_span_sum: m.counter("gang_pp_span_sum"),
         }
     }
 }
@@ -379,6 +398,24 @@ mod tests {
         let r = small_run(PolicyKind::FirstFit);
         assert!(r.arrived_gpu_units >= 32.0);
         assert!(r.submitted > 0);
+        assert_eq!(r.submitted, r.scheduled + r.failed);
+    }
+
+    #[test]
+    fn gang_traces_place_gangs_with_zero_tp_violations() {
+        let dc = ClusterSpec::tiny(8, 4, 0).build();
+        let spec = TraceSpec::gang_trace(0.5);
+        let workload = spec.synthesize(1).workload();
+        let sched = Scheduler::from_policy(PolicyKind::PwrFgd { alpha: 0.5 });
+        let mut sim = Simulation::with_spec(dc, sched, &spec, workload, 7);
+        sim.record_frag = false;
+        let r = sim.run_inflation(1.0);
+        assert!(r.gangs_placed > 0, "gang-50 should place at least one gang");
+        assert_eq!(r.gang_tp_violations, 0, "TP groups must never cross a node");
+        assert!(
+            r.gang_pp_span_sum >= r.gangs_placed,
+            "each placed gang spans at least one node"
+        );
         assert_eq!(r.submitted, r.scheduled + r.failed);
     }
 

@@ -78,6 +78,59 @@ impl GpuDemand {
 /// Number of Table-I buckets.
 pub const NUM_BUCKETS: usize = 6;
 
+/// The parallelism split of a gang task (an LLM training/inference
+/// job): `tp` GPUs per tensor-parallel group, `pp` pipeline stages,
+/// `dp` data-parallel replicas. One *member* of the gang is one TP
+/// group — `tp` whole GPUs that must share a node's NVLink domain —
+/// so a gang places `pp × dp` members for `tp × pp × dp` GPUs total.
+/// Carried on [`Task::gang`]; the demand vector of the carrying task
+/// holds the *gang totals* (GPU = `Whole(total_gpus)`), so aggregate
+/// accounting (GRAR, PreFilter capacity checks) needs no special case.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GangSpec {
+    /// GPUs per tensor-parallel group (all on one node).
+    pub tp: u32,
+    /// Pipeline-parallel stages per replica.
+    pub pp: u32,
+    /// Data-parallel replicas.
+    pub dp: u32,
+}
+
+impl GangSpec {
+    /// Validated constructor: every degree ≥ 1 and the total GPU count
+    /// within the demand domain (≤ 64, matching
+    /// [`GpuDemand::from_units`]).
+    pub fn new(tp: u32, pp: u32, dp: u32) -> Option<GangSpec> {
+        let spec = GangSpec { tp, pp, dp };
+        if tp >= 1 && pp >= 1 && dp >= 1 && spec.total_gpus() <= 64 {
+            Some(spec)
+        } else {
+            None
+        }
+    }
+
+    /// Members to place: one per (replica, stage) pair.
+    pub fn n_members(self) -> u32 {
+        self.pp * self.dp
+    }
+
+    /// Total GPUs across the gang.
+    pub fn total_gpus(self) -> u32 {
+        self.tp * self.pp * self.dp
+    }
+
+    /// Member `i`'s data-parallel replica index (members are laid out
+    /// replica-major: `i = replica·pp + stage`).
+    pub fn replica_of(self, member: u32) -> u32 {
+        member / self.pp
+    }
+
+    /// Member `i`'s pipeline-stage index.
+    pub fn stage_of(self, member: u32) -> u32 {
+        member % self.pp
+    }
+}
+
 /// Declarative feasibility constraints (`C_t` beyond the demand vector),
 /// evaluated by the scheduler's `filter` extension point
 /// ([`crate::sched::filter`]). Every field is optional; the default is
@@ -155,12 +208,26 @@ pub struct Task {
     /// Declarative constraints (`None` = unconstrained; boxed so the
     /// common unconstrained task stays one pointer wide).
     pub constraints: Option<Box<TaskConstraints>>,
+    /// Gang shape (`None` = ordinary single-node task). When set, the
+    /// demand fields above hold the *gang totals* and placement goes
+    /// through the all-or-nothing gang path
+    /// ([`crate::sched::Scheduler::place_gang`]).
+    pub gang: Option<GangSpec>,
 }
 
 impl Task {
     /// Convenience constructor for tests and examples.
     pub fn new(id: u64, cpu: f64, mem: f64, gpu: GpuDemand) -> Task {
-        Task { id, cpu, mem, gpu, gpu_model: None, constraints: None }
+        Task { id, cpu, mem, gpu, gpu_model: None, constraints: None, gang: None }
+    }
+
+    /// With a gang shape (builder style). The demand fields are
+    /// reinterpreted as gang totals; callers normally build gang tasks
+    /// via [`crate::sched::gang::gang_task`], which derives the totals
+    /// from the spec.
+    pub fn with_gang(mut self, spec: GangSpec) -> Task {
+        self.gang = Some(spec);
+        self
     }
 
     /// With a GPU-model constraint.
@@ -206,6 +273,7 @@ impl TaskClass {
             gpu: self.gpu,
             gpu_model: self.gpu_model,
             constraints: None,
+            gang: None,
         }
     }
 }
@@ -274,7 +342,7 @@ impl Workload {
         // lattices (e.g. 7g vs a30-4g, both 1.0 units) stay distinct
         // classes — their feasibility differs per node. Constraint-free
         // tasks hash to 0, so legacy grouping is unchanged.
-        let mut groups: BTreeMap<(u64, u64, u8, u8, u64), (Task, usize)> = BTreeMap::new();
+        let mut groups: BTreeMap<(u64, u64, u8, u8, u64, u32), (Task, usize)> = BTreeMap::new();
         for t in tasks {
             let sig = (
                 (t.cpu * 4.0).round() as u64,
@@ -286,6 +354,9 @@ impl Workload {
                 },
                 t.gpu_model.map(|m| m.index() as u8 + 1).unwrap_or(0),
                 t.constraints.as_deref().map(TaskConstraints::signature).unwrap_or(0),
+                // Gang shapes with equal totals but different splits
+                // stay distinct classes (gang-free tasks tag 0).
+                t.gang.map(|g| (g.tp << 16) | (g.pp << 8) | g.dp).unwrap_or(0),
             );
             groups.entry(sig).and_modify(|e| e.1 += 1).or_insert((t.clone(), 1));
         }
@@ -477,6 +548,37 @@ mod tests {
         // Signature is deterministic and content-keyed.
         assert_eq!(c.signature(), c.clone().signature());
         assert_ne!(c.signature(), TaskConstraints::default().signature());
+    }
+
+    #[test]
+    fn gang_spec_domain_and_layout() {
+        let g = GangSpec::new(2, 2, 2).unwrap();
+        assert_eq!(g.n_members(), 4);
+        assert_eq!(g.total_gpus(), 8);
+        // Replica-major member layout: (replica, stage) pairs.
+        assert_eq!((g.replica_of(0), g.stage_of(0)), (0, 0));
+        assert_eq!((g.replica_of(1), g.stage_of(1)), (0, 1));
+        assert_eq!((g.replica_of(2), g.stage_of(2)), (1, 0));
+        assert_eq!((g.replica_of(3), g.stage_of(3)), (1, 1));
+        // Domain: zero degrees and >64-GPU totals are rejected.
+        assert!(GangSpec::new(0, 1, 1).is_none());
+        assert!(GangSpec::new(8, 4, 4).is_none());
+        assert!(GangSpec::new(8, 4, 2).is_some());
+    }
+
+    #[test]
+    fn workload_distinguishes_gang_splits() {
+        let shape = |tp, pp, dp| {
+            Task::new(0, 8.0, 1024.0, GpuDemand::Whole(8))
+                .with_gang(GangSpec::new(tp, pp, dp).unwrap())
+        };
+        let tasks = vec![
+            shape(2, 2, 2),
+            shape(4, 2, 1),
+            Task::new(2, 8.0, 1024.0, GpuDemand::Whole(8)),
+        ];
+        let w = Workload::from_tasks(&tasks);
+        assert_eq!(w.classes.len(), 3);
     }
 
     #[test]

@@ -57,7 +57,7 @@ pub fn parse_csv(name: &str, text: &str) -> Result<Trace> {
                 spec.split('|').find_map(GpuModel::parse)
             }
         };
-        tasks.push(Task { id: i as u64, cpu, mem, gpu, gpu_model, constraints: None });
+        tasks.push(Task { id: i as u64, cpu, mem, gpu, gpu_model, constraints: None, gang: None });
     }
     Ok(Trace { name: name.to_string(), tasks })
 }

@@ -17,7 +17,7 @@ pub mod io;
 
 use crate::cluster::mig::MigProfile;
 use crate::cluster::types::GpuModel;
-use crate::tasks::{GpuDemand, Task, TaskConstraints, Workload, NUM_BUCKETS};
+use crate::tasks::{GangSpec, GpuDemand, Task, TaskConstraints, Workload, NUM_BUCKETS};
 use crate::util::rng::{Rng, WeightedIndex};
 
 /// How sampled tasks of a profile get their declarative
@@ -78,6 +78,10 @@ pub struct TaskProfile {
     pub constrained: bool,
     /// Declarative-constraint generator for sampled tasks.
     pub constraint: ConstraintGen,
+    /// Model-parallel gang shape (the `gang-<pct>` family). The
+    /// profile's demand fields hold the gang *totals*, matching
+    /// [`crate::sched::gang::gang_task`]; `None` for ordinary tasks.
+    pub gang: Option<GangSpec>,
 }
 
 /// A declarative trace: weighted profile catalog + nominal size.
@@ -118,6 +122,20 @@ const ONE_GPU_CPU_WEIGHTS: [f64; 5] = [0.20, 0.30, 0.20, 0.20, 0.10];
 /// non-binding, matching the paper's CPU/GPU-centric analysis.
 const MEM_PER_VCPU_MIB: f64 = 3072.0;
 
+/// Per-member vCPU demand of the `gang-<pct>` family's gang shapes
+/// (memory follows [`MEM_PER_VCPU_MIB`], like every other profile).
+pub const GANG_MEMBER_VCPUS: f64 = 8.0;
+
+/// The four gang shapes of the `gang-<pct>` family, with their share of
+/// the converted whole-GPU mass: (tp, pp, dp, share). Spans 4–16 GPUs,
+/// mixing NVLink-only (dp=1, pp=2 fits two nodes) and replicated jobs.
+pub const GANG_SHAPES: [(u32, u32, u32, f64); 4] = [
+    (2, 2, 1, 0.35), // 4 GPUs: 2 members of 2
+    (4, 2, 1, 0.25), // 8 GPUs: 2 members of 4
+    (2, 2, 2, 0.25), // 8 GPUs: 4 members of 2
+    (4, 2, 2, 0.15), // 16 GPUs: 4 members of 4
+];
+
 fn profile(cpu: f64, gpu: GpuDemand) -> TaskProfile {
     TaskProfile {
         cpu,
@@ -125,6 +143,7 @@ fn profile(cpu: f64, gpu: GpuDemand) -> TaskProfile {
         gpu,
         constrained: false,
         constraint: ConstraintGen::None,
+        gang: None,
     }
 }
 
@@ -381,9 +400,45 @@ impl TraceSpec {
         }
     }
 
+    /// **Gang** derived trace (`gang-<pct>`): `pct` of the whole-GPU
+    /// *population* mass arrives as model-parallel gangs — the four
+    /// [`GANG_SHAPES`] TP×PP×DP splits, [`GANG_MEMBER_VCPUS`] vCPUs
+    /// per member — while CPU-only and sharing demand stays exactly
+    /// Default's. `gang-0` carries the gang profiles at weight zero,
+    /// so it samples no gang tasks; the `ext-gang` experiment sweeps
+    /// `pct` ∈ {0, 30, 60}%.
+    pub fn gang_trace(pct: f64) -> TraceSpec {
+        assert!((0.0..=1.0).contains(&pct));
+        let mut spec = Self::default_trace();
+        let whole_pop: f64 = (2..NUM_BUCKETS).map(|b| spec.bucket_pop(b)).sum();
+        for (p, w) in &mut spec.profiles {
+            if matches!(p.gpu, GpuDemand::Whole(_)) {
+                *w *= 1.0 - pct;
+            }
+        }
+        for (tp, pp, dp, share) in GANG_SHAPES {
+            let Some(g) = GangSpec::new(tp, pp, dp) else { continue };
+            let cpu = GANG_MEMBER_VCPUS * g.n_members() as f64;
+            spec.profiles.push((
+                TaskProfile {
+                    cpu,
+                    mem: cpu * MEM_PER_VCPU_MIB,
+                    gpu: GpuDemand::Whole(g.total_gpus()),
+                    constrained: false,
+                    constraint: ConstraintGen::None,
+                    gang: Some(g),
+                },
+                whole_pop * pct * share,
+            ));
+        }
+        spec.name = format!("gang-{:.0}", pct * 100.0);
+        spec
+    }
+
     /// Reconstruct a spec from a trace name (`default`,
     /// `multi-gpu-20`, `sharing-gpu-100`, `constrained-gpu-33`,
-    /// `mig-30`/`mig-default`, `mig-het-40`, `diurnal-60`, …).
+    /// `mig-30`/`mig-default`, `mig-het-40`, `diurnal-60`, `gang-50`,
+    /// …).
     pub fn by_name(name: &str) -> Option<TraceSpec> {
         if name == "default" {
             return Some(Self::default_trace());
@@ -408,6 +463,13 @@ impl TraceSpec {
         }
         if let Some(pct) = name.strip_prefix("constrained-") {
             return pct.parse::<f64>().ok().map(|p| Self::constrained(p / 100.0));
+        }
+        if let Some(pct) = name.strip_prefix("gang-") {
+            return pct
+                .parse::<f64>()
+                .ok()
+                .filter(|p| (0.0..=100.0).contains(p))
+                .map(|p| Self::gang_trace(p / 100.0));
         }
         if let Some(rest) = name.strip_prefix("diurnal-") {
             // `diurnal-<amp>` (default period) or `diurnal-<amp>-p<period>`.
@@ -530,6 +592,7 @@ impl TraceSpec {
             gpu: p.gpu,
             gpu_model,
             constraints: constraints.map(Box::new),
+            gang: p.gang,
         }
     }
 
@@ -852,6 +915,44 @@ mod tests {
         for (i, (&got, &want)) in pop.iter().zip(&TABLE1_POPULATION).enumerate() {
             assert!((got - want).abs() < 0.05, "bucket {i}: {got} vs {want}");
         }
+    }
+
+    #[test]
+    fn gang_trace_mixes_gangs_with_singletons() {
+        let spec = TraceSpec::gang_trace(0.5);
+        assert_eq!(spec.name, "gang-50");
+        let back = TraceSpec::by_name("gang-50").unwrap();
+        assert_eq!(back.profiles.len(), spec.profiles.len());
+        assert!(TraceSpec::by_name("gang-150").is_none());
+        // Gang mass = 50% of Default's whole-GPU population mass;
+        // CPU-only and sharing demand untouched.
+        let base = TraceSpec::default_trace();
+        let whole_pop: f64 = (2..NUM_BUCKETS).map(|b| base.bucket_pop(b)).sum();
+        let gang_mass: f64 = spec
+            .profiles
+            .iter()
+            .filter(|(p, _)| p.gang.is_some())
+            .map(|(_, w)| w)
+            .sum();
+        assert!((gang_mass - 0.5 * whole_pop).abs() < 1e-9);
+        assert!((spec.bucket_pop(0) - base.bucket_pop(0)).abs() < 1e-12);
+        assert!((spec.bucket_pop(1) - base.bucket_pop(1)).abs() < 1e-12);
+        // Synthesis: gang tasks carry the gang *totals* (the shape
+        // `place_gang` decomposes), and all four shapes can appear.
+        let trace = spec.synthesize(21);
+        let mut shapes = std::collections::BTreeSet::new();
+        for t in &trace.tasks {
+            if let Some(g) = t.gang {
+                assert_eq!(t.gpu, GpuDemand::Whole(g.total_gpus()));
+                assert_eq!(t.cpu, GANG_MEMBER_VCPUS * g.n_members() as f64);
+                assert_eq!(t.mem, t.cpu * MEM_PER_VCPU_MIB);
+                shapes.insert((g.tp, g.pp, g.dp));
+            }
+        }
+        assert_eq!(shapes.len(), GANG_SHAPES.len(), "all shapes sampled");
+        // gang-0 keeps its gang profiles at weight zero: no gang tasks.
+        let zero = TraceSpec::gang_trace(0.0).synthesize(21);
+        assert!(zero.tasks.iter().all(|t| t.gang.is_none()));
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Gang-subsystem equivalence + atomicity suite (`docs/gang.md`).
+//!
+//! The gang machinery must be strictly additive:
+//!
+//! * **Gang-free traces are bit-identical to the pre-gang scheduler.**
+//!   Singleton arrivals route through the unchanged `place`/`release`
+//!   protocol, `gang-0` synthesizes the exact Default trace, and the
+//!   `topo`/`zonespread` score plugins are flat surfaces on gang-free
+//!   load (0 raw → constant 100 normalized), so composing them at any
+//!   weight changes no decision — across policies × traces × seeds, in
+//!   both simulation loops.
+//! * **All-or-nothing.** A gang that fails mid-placement rolls its
+//!   committed prefix back exactly: task counts, allocation caches,
+//!   per-node free state and the fleet revision stamp return to their
+//!   pre-call values, and subsequent decisions are indistinguishable
+//!   from a scheduler that never saw the gang.
+//! * **TP locality.** Placed gangs never split a tensor-parallel group
+//!   across nodes (`gang_tp_violations` stays 0 on a `gang-50` run).
+//! * **Fast-path safety.** The score cache, sharding, and
+//!   `sample(100)` stay bit-identical on gang traces (the
+//!   non-cacheable `topo` plugin is bypassed, not frozen).
+
+use repro::cluster::node::{Placement, ResourceView};
+use repro::cluster::ClusterSpec;
+use repro::sched::gang::gang_task;
+use repro::sched::{Scheduler, SchedulerProfile};
+use repro::sim::events::{SteadyConfig, SteadySim};
+use repro::sim::{RunResult, Simulation};
+use repro::tasks::{GangSpec, GpuDemand, Task, Workload};
+use repro::trace::TraceSpec;
+
+fn sched(policy: &str) -> Scheduler {
+    SchedulerProfile::parse(policy).unwrap().build().unwrap()
+}
+
+fn run_inflation(
+    policy: &str,
+    cluster: &ClusterSpec,
+    trace: &TraceSpec,
+    seed: u64,
+    target: f64,
+) -> RunResult {
+    let dc = cluster.build();
+    let workload = trace.synthesize(seed ^ 0x57AB1E).workload();
+    let mut sim = Simulation::with_spec(dc, sched(policy), trace, workload, seed);
+    sim.record_frag = false;
+    sim.run_inflation(target)
+}
+
+fn assert_bit_identical(what: &str, a: &RunResult, b: &RunResult) {
+    assert_eq!(a.submitted, b.submitted, "{what}: submitted diverged");
+    assert_eq!(a.scheduled, b.scheduled, "{what}: scheduled diverged");
+    assert_eq!(a.failed, b.failed, "{what}: failed diverged");
+    assert_eq!(
+        a.allocated_gpu_units.to_bits(),
+        b.allocated_gpu_units.to_bits(),
+        "{what}: allocated units diverged"
+    );
+    assert_eq!(
+        a.final_eopc().to_bits(),
+        b.final_eopc().to_bits(),
+        "{what}: final EOPC diverged"
+    );
+    assert_eq!(a.final_grar().to_bits(), b.final_grar().to_bits(), "{what}: GRAR diverged");
+    assert_eq!(a.gangs_placed, b.gangs_placed, "{what}: gangs_placed diverged");
+    assert_eq!(a.gangs_failed, b.gangs_failed, "{what}: gangs_failed diverged");
+    assert_eq!(a.gang_pp_span_sum, b.gang_pp_span_sum, "{what}: span sum diverged");
+}
+
+/// `topo` and `zonespread` composed at any weight are invisible on
+/// gang-free, class-free traces: both plugins raw-score 0 everywhere,
+/// which normalizes to a constant 100 on every node — the argmax, the
+/// tie sets and therefore the tie-break RNG stream are untouched.
+#[test]
+fn topo_and_zonespread_are_inert_on_gang_free_traces() {
+    let cluster = ClusterSpec::tiny(6, 4, 1);
+    let traces = [
+        TraceSpec::default_trace(),
+        TraceSpec::sharing_gpu(1.0),
+        TraceSpec::multi_gpu(0.2),
+    ];
+    let pairs = [
+        (
+            "score(pwr=0.1,fgd=0.9)|bind(weighted:0.1)",
+            "score(pwr=0.1,fgd=0.9,topo=0.4,zonespread=0.2)|bind(weighted:0.1)",
+        ),
+        ("score(fgd)", "score(fgd,topo=1,zonespread=1)"),
+    ];
+    for (base_policy, with_policy) in pairs {
+        for trace in &traces {
+            for seed in [1u64, 42] {
+                let what = format!("{with_policy}/{}/seed{seed}", trace.name);
+                let base = run_inflation(base_policy, &cluster, trace, seed, 0.7);
+                assert!(base.submitted > 0, "{what}: empty run");
+                assert_eq!(base.gangs_placed + base.gangs_failed, 0, "{what}: gangs?");
+                let with = run_inflation(with_policy, &cluster, trace, seed, 0.7);
+                assert_bit_identical(&what, &base, &with);
+            }
+        }
+    }
+}
+
+/// `gang-0` carries the gang profiles at weight zero: it samples the
+/// byte-identical task stream Default does, and the run decides
+/// bit-identically — the gang machinery never engages.
+#[test]
+fn gang_zero_trace_is_bit_identical_to_default() {
+    let cluster = ClusterSpec::tiny(6, 4, 1);
+    let default = TraceSpec::default_trace();
+    let gang0 = TraceSpec::gang_trace(0.0);
+    for seed in [1u64, 42] {
+        let a = default.synthesize(seed);
+        let b = gang0.synthesize(seed);
+        assert_eq!(a.tasks, b.tasks, "seed {seed}: task streams diverged");
+    }
+    for policy in ["pwrfgd:0.1", "bestfit"] {
+        for seed in [7u64, 42] {
+            let what = format!("{policy}/seed{seed}");
+            let base = run_inflation(policy, &cluster, &default, seed, 0.7);
+            let with = run_inflation(policy, &cluster, &gang0, seed, 0.7);
+            assert_bit_identical(&what, &base, &with);
+        }
+    }
+}
+
+/// The second loop: steady-state churn on gang-free load must agree bit
+/// for bit too, both for the `gang-0` trace and for composed
+/// `topo`/`zonespread` weights.
+#[test]
+fn gang_free_churn_is_bit_identical() {
+    let cfg = SteadyConfig {
+        mean_interarrival_s: 1.0,
+        mean_duration_s: 250.0,
+        horizon_s: 2_500.0,
+        sample_every_s: 50.0,
+        seed: 9,
+    };
+    let cluster = ClusterSpec::tiny(8, 4, 2);
+    let run = |policy: &str, trace: &TraceSpec| {
+        let mut sim = SteadySim::new(cluster.build(), sched(policy), trace, &cfg);
+        sim.run(&cfg)
+    };
+    let base = run("pwrfgd:0.1", &TraceSpec::default_trace());
+    assert!(base.arrivals > 1_000, "arrivals {}", base.arrivals);
+    let variants = [
+        run("pwrfgd:0.1", &TraceSpec::gang_trace(0.0)),
+        run(
+            "score(pwr=0.1,fgd=0.9,topo=0.4,zonespread=0.2)|bind(weighted:0.1)",
+            &TraceSpec::default_trace(),
+        ),
+    ];
+    for (vi, b) in variants.iter().enumerate() {
+        assert_eq!(base.arrivals, b.arrivals, "variant{vi}");
+        assert_eq!(base.scheduled, b.scheduled, "variant{vi}");
+        assert_eq!(base.failed, b.failed, "variant{vi}");
+        assert_eq!(base.departures, b.departures, "variant{vi}");
+        assert_eq!(
+            base.steady_eopc_w.to_bits(),
+            b.steady_eopc_w.to_bits(),
+            "variant{vi}: steady EOPC diverged"
+        );
+        assert_eq!(b.gangs_placed + b.gangs_failed, 0, "variant{vi}: gangs?");
+    }
+}
+
+/// A gang that fails mid-placement is indistinguishable from one never
+/// attempted: the committed prefix unwinds exactly (task count,
+/// allocation caches, per-node free state, fleet revision), and a
+/// control scheduler that never saw the gang makes the identical next
+/// decision.
+#[test]
+fn failed_gang_rolls_back_exactly() {
+    // Two 4-GPU/96-vCPU nodes; node 1 pre-loaded with a 20-vCPU
+    // CPU-only filler. A 2-member gang of Whole(4) + 80 vCPUs per
+    // member passes every PreFilter (aggregate CPU 160 ≤ 172, two
+    // NVLink-contiguous 4-GPU groups free) but only node 0 can host a
+    // member — member 1 must fail and unwind member 0.
+    let spec = GangSpec::new(4, 2, 1).unwrap();
+    let build_dc = || {
+        let mut dc = ClusterSpec::tiny(2, 4, 0).build();
+        let filler = Task::new(99, 20.0, 0.0, GpuDemand::Zero);
+        dc.allocate(&filler, 1, &Placement::CpuOnly);
+        dc
+    };
+    let mut dc = build_dc();
+    let w = Workload::default();
+    let mut s = sched("score(pwr=0.1,fgd=0.9)");
+
+    let n_tasks_before = dc.n_tasks;
+    let caches_before = dc.recompute_caches();
+    let revision_before = dc.revision();
+    let free_before: Vec<(f64, usize)> =
+        dc.nodes.iter().map(|n| (n.cpu_free(), n.gpus_fully_free())).collect();
+
+    let doomed = gang_task(1, 80.0, 1_024.0, spec);
+    assert!(s.place_gang(&mut dc, &w, &doomed).is_none(), "doomed gang placed?");
+
+    assert_eq!(dc.n_tasks, n_tasks_before, "partial gang left committed");
+    assert_eq!(dc.recompute_caches(), caches_before, "allocation caches drifted");
+    assert_eq!(dc.revision(), revision_before, "fleet revision drifted");
+    let free_after: Vec<(f64, usize)> =
+        dc.nodes.iter().map(|n| (n.cpu_free(), n.gpus_fully_free())).collect();
+    assert_eq!(free_after, free_before, "per-node free state drifted");
+    let m = s.metrics();
+    assert_eq!(m.counter("gangs_failed"), 1);
+    assert_eq!(m.counter("gangs_placed"), 0);
+    assert_eq!(m.counter("gang_tp_violations"), 0);
+
+    // Control: a scheduler + datacenter that never saw the gang must
+    // make the identical next decision (state, caches and the
+    // tie-break RNG stream all agree). CPU-only so both nodes stay
+    // fully GPU-free for the fitting gang below — and so both nodes
+    // are candidates, exercising the tie-break stream.
+    let mut control_dc = build_dc();
+    let mut control = sched("score(pwr=0.1,fgd=0.9)");
+    let probe = Task::new(2, 4.0, 8_192.0, GpuDemand::Zero);
+    let d_rolled = s.place(&mut dc, &w, &probe);
+    let d_control = control.place(&mut control_dc, &w, &probe);
+    assert_eq!(d_rolled, d_control, "post-rollback decision diverged from control");
+
+    // And a gang that fits commits whole: both members, one TP group
+    // of exactly `tp` whole GPUs each, on single nodes.
+    let fits = gang_task(3, 10.0, 512.0, spec);
+    let d = s.place_gang(&mut dc, &w, &fits).expect("feasible gang failed");
+    assert_eq!(d.members.len(), 2);
+    for member in &d.members {
+        match &member.placement {
+            Placement::Whole { gpus } => assert_eq!(gpus.len(), 4, "TP group split"),
+            other => panic!("gang member bound to {other:?}"),
+        }
+    }
+    assert_ne!(d.members[0].node, d.members[1].node, "4+4 GPUs cannot share a node");
+    let m = s.metrics();
+    assert_eq!(m.counter("gangs_placed"), 1);
+    assert_eq!(m.counter("gang_tp_violations"), 0);
+    assert_eq!(m.counter("gang_pp_span_sum"), 2);
+    assert_eq!(dc.n_tasks, n_tasks_before + 3, "probe + both members resident");
+}
+
+/// Cluster-wide hopeless gangs die in PreFilter: no member is ever
+/// attempted, nothing is committed.
+#[test]
+fn hopeless_gang_is_prefiltered_without_commits() {
+    // One GPU busy per node: 6 whole GPUs free in aggregate, so the
+    // `resources` PreFilter passes a 3×Whole(2) gang — but only
+    // ⌊3/2⌋·2 = 2 NVLink-contiguous pairs exist, so the `gang`
+    // PreFilter is the decisive cluster-wide veto.
+    let mut dc = ClusterSpec::tiny(2, 4, 0).build();
+    let filler = Task::new(99, 1.0, 0.0, GpuDemand::Whole(1));
+    dc.allocate(&filler, 0, &Placement::Whole { gpus: vec![0] });
+    dc.allocate(&filler, 1, &Placement::Whole { gpus: vec![0] });
+    let n_before = dc.n_tasks;
+    let w = Workload::default();
+    let mut s = sched("score(fgd)");
+    let gang = gang_task(1, 1.0, 0.0, GangSpec::new(2, 3, 1).unwrap());
+    assert!(s.place_gang(&mut dc, &w, &gang).is_none());
+    assert_eq!(dc.n_tasks, n_before, "prefiltered gang committed state");
+    let m = s.metrics();
+    assert_eq!(m.counter("gangs_failed"), 1);
+    assert_eq!(m.counter("sched_prefilter_rejections"), 1);
+}
+
+/// A task without a gang through `place_gang` is exactly `place`: the
+/// one-member fall-through.
+#[test]
+fn singleton_through_place_gang_matches_place() {
+    let w = Workload::default();
+    let t = Task::new(5, 4.0, 8_192.0, GpuDemand::Whole(2));
+    let mut dc_a = ClusterSpec::tiny(4, 4, 0).build();
+    let mut s_a = sched("pwrfgd:0.1");
+    let direct = s_a.place(&mut dc_a, &w, &t).expect("place failed");
+    let mut dc_b = ClusterSpec::tiny(4, 4, 0).build();
+    let mut s_b = sched("pwrfgd:0.1");
+    let via_gang = s_b.place_gang(&mut dc_b, &w, &t).expect("place_gang failed");
+    assert_eq!(via_gang.members, vec![direct]);
+    // The fall-through counts as an ordinary place, not a gang.
+    assert_eq!(s_b.metrics().counter("gangs_placed"), 0);
+}
+
+/// End to end on a `gang-50` trace with `topo` composed in: gangs
+/// place, no TP group ever crosses a node, and the mean PP span is
+/// sane (≥ 1 node per gang).
+#[test]
+fn gang50_places_gangs_with_zero_cross_node_tp_groups() {
+    let cluster = ClusterSpec::tiny(8, 4, 0).with_zones(2);
+    let trace = TraceSpec::gang_trace(0.5);
+    for policy in ["score(pwr=0.1,fgd=0.9)", "score(pwr=0.1,fgd=0.6,topo=0.3)"] {
+        let out = run_inflation(policy, &cluster, &trace, 7, 0.8);
+        assert!(out.gangs_placed > 0, "{policy}: no gang placed");
+        assert_eq!(out.gang_tp_violations, 0, "{policy}: TP group crossed a node");
+        assert!(
+            out.gang_pp_span_sum >= out.gangs_placed,
+            "{policy}: span sum {} < gangs {}",
+            out.gang_pp_span_sum,
+            out.gangs_placed
+        );
+    }
+}
+
+/// The scale-out fast path on gang traces: score cache and sharded
+/// scoring at `sample(100)` stay bit-identical to the naive loop —
+/// the non-cacheable `topo` plugin is rescored, never cached, and
+/// member commits invalidate the touched nodes.
+#[test]
+fn fast_path_is_bit_identical_on_gang_traces() {
+    let cluster = ClusterSpec::tiny(8, 4, 0).with_zones(2);
+    let trace = TraceSpec::gang_trace(0.5);
+    let run = |policy: &str, cache: bool, shards: usize| {
+        let mut s = sched(policy);
+        s.set_score_cache(cache);
+        s.set_score_shards(shards);
+        s.set_sample_pct(100);
+        let dc = cluster.build();
+        let workload = trace.synthesize(7 ^ 0x57AB1E).workload();
+        let mut sim = Simulation::with_spec(dc, s, &trace, workload, 7);
+        sim.record_frag = false;
+        sim.run_inflation(0.8)
+    };
+    for policy in ["score(pwr=0.1,fgd=0.9)", "score(pwr=0.1,fgd=0.6,topo=0.3,zonespread=0.1)"] {
+        let base = run(policy, false, 1);
+        assert!(base.gangs_placed > 0, "{policy}: no gang placed");
+        for (vi, (cache, shards)) in [(true, 1), (false, 4), (true, 4)].iter().enumerate() {
+            let with = run(policy, *cache, *shards);
+            assert_bit_identical(&format!("{policy}/variant{vi}"), &base, &with);
+            assert_eq!(
+                base.gang_tp_violations, with.gang_tp_violations,
+                "{policy}/variant{vi}"
+            );
+        }
+    }
+}

@@ -40,6 +40,7 @@ fn cacheable_plugins_score_bit_identically_under_permutation() {
         prepared: &pw,
         generations: &generations,
         caps: ClusterCaps::of(&dc),
+        gang: None,
     };
     let tasks = [
         Task::new(0, 2.0, 512.0, GpuDemand::Frac(0.5)),
