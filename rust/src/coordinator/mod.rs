@@ -38,7 +38,7 @@ use std::sync::{Arc, Mutex};
 use crate::cluster::node::Placement;
 use crate::cluster::Datacenter;
 use crate::power;
-use crate::sched::{Scheduler, SchedulerProfile};
+use crate::sched::{FairnessConfig, FairnessState, Scheduler, SchedulerProfile};
 use crate::tasks::{GpuDemand, Task, Workload};
 use crate::util::json::{parse, Json};
 
@@ -49,7 +49,17 @@ pub struct CoordinatorState {
     pub workload: Workload,
     /// Live allocations: task id → (task, node, placement).
     allocations: HashMap<u64, (Task, usize, Placement)>,
-    /// Counters.
+    /// Pending-queue fairness state: unschedulable submissions park
+    /// here (priority-ordered, FIFO within priority) and are retried
+    /// after every `release` frees capacity. The queue is *not* bound
+    /// into the scheduler via `bind_fairness`, so `mod(starve)` /
+    /// `hook(preempt)` sections in a served profile stay inert — the
+    /// coordinator has no eviction path back to its clients yet.
+    fairness: FairnessState,
+    /// Counters. `failed` counts submit-time refusals; a refused task
+    /// that later drains from the pending queue also counts in
+    /// `scheduled` (clients observe placement via a fresh `stats` /
+    /// `metrics` poll, the original reply stays `ok:false`).
     pub submitted: u64,
     pub scheduled: u64,
     pub failed: u64,
@@ -76,6 +86,7 @@ impl CoordinatorState {
             sched: policy.into().build().expect("invalid scheduler profile"),
             workload,
             allocations: HashMap::new(),
+            fairness: FairnessState::new(FairnessConfig::default()),
             submitted: 0,
             scheduled: 0,
             failed: 0,
@@ -97,20 +108,54 @@ impl CoordinatorState {
             }
             None => {
                 self.failed += 1;
+                let now = self.submitted as f64;
+                self.fairness.with_core(|c| {
+                    c.set_now(now);
+                    c.enqueue(task, false);
+                });
                 None
             }
         }
     }
 
     /// Release a previously scheduled task (departure; runs the
-    /// scheduler's postPlace hooks).
+    /// scheduler's postPlace hooks), then retry the pending queue
+    /// against the freed capacity.
     pub fn release(&mut self, task_id: u64) -> bool {
         match self.allocations.remove(&task_id) {
             Some((task, node, placement)) => {
                 self.sched.release(&mut self.dc, &task, node, &placement);
+                self.drain_pending();
                 true
             }
             None => false,
+        }
+    }
+
+    /// Place queued tasks highest-priority-first (FIFO within a
+    /// priority) until the head fails again; placed tasks join the
+    /// live allocation table and count as `scheduled`. The queue clock
+    /// is the submission count, matching the scheduler's event-count
+    /// notion of time.
+    fn drain_pending(&mut self) {
+        let now = self.submitted as f64;
+        loop {
+            let Some(task) = self.fairness.with_core(|c| {
+                c.set_now(now);
+                c.head()
+            }) else {
+                break;
+            };
+            let Some(d) = self.sched.place(&mut self.dc, &self.workload, &task) else {
+                break;
+            };
+            let Some(entry) = self.fairness.with_core(|c| c.pop_placed()) else {
+                break;
+            };
+            if !entry.requeued {
+                self.scheduled += 1;
+            }
+            self.allocations.insert(entry.task.id, (entry.task, d.node, d.placement));
         }
     }
 
@@ -131,6 +176,7 @@ impl CoordinatorState {
             ("tasks", Json::Num(self.dc.n_tasks as f64)),
             ("submitted", Json::Num(self.submitted as f64)),
             ("failed", Json::Num(self.failed as f64)),
+            ("pending", Json::Num(self.fairness.with_core(|c| c.pending_depth()) as f64)),
             ("active_gpus", Json::Num(self.dc.active_gpus() as f64)),
             ("active_nodes", Json::Num(self.dc.active_nodes() as f64)),
         ])
@@ -157,6 +203,12 @@ impl CoordinatorState {
         reg.set_gauge("coordinator_failed", self.failed as f64);
         reg.set_gauge("coordinator_active_gpus", self.dc.active_gpus() as f64);
         reg.set_gauge("coordinator_active_nodes", self.dc.active_nodes() as f64);
+        // Pending-queue starvation gauges/counters (pending_depth,
+        // p99_wait, oldest_pending_age, starvation_events, …) ride on
+        // the same body.
+        if let Ok(core) = self.fairness.shared().lock() {
+            core.publish(&mut reg);
+        }
         reg.to_prometheus("repro_")
     }
 }
@@ -203,6 +255,18 @@ fn task_from_json(v: &Json) -> Result<Task, String> {
     if let Some(anti) = v.get("anti_affinity").and_then(|x| x.as_str()) {
         constraints.anti_affinity.push(anti.to_string());
     }
+    // Optional tenant priority (0 = best-effort default, 255 = highest);
+    // consumed by the pending-queue ordering and `hook(preempt)`.
+    let priority = match v.get("priority") {
+        Some(p) => {
+            let n = p.as_f64().ok_or("priority must be a number")?;
+            if !(0.0..=255.0).contains(&n) || n.fract() != 0.0 {
+                return Err(format!("priority must be an integer in 0..=255, got {n}"));
+            }
+            n as u8
+        }
+        None => 0,
+    };
     Ok(Task {
         id,
         cpu,
@@ -215,6 +279,7 @@ fn task_from_json(v: &Json) -> Result<Task, String> {
             Some(Box::new(constraints))
         },
         gang: None,
+        priority,
     })
 }
 
@@ -491,6 +556,55 @@ mod tests {
                 "bad metric name {name:?}"
             );
             assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
+        }
+    }
+
+    #[test]
+    fn pending_queue_drains_on_release_and_exports_gauges() {
+        // One 4-GPU node: fill it, then the second submission parks in
+        // the pending queue instead of vanishing.
+        let st = Mutex::new(CoordinatorState::new(
+            ClusterSpec::tiny(1, 4, 0).build(),
+            PolicyKind::PwrFgd { alpha: 0.1 },
+            Workload::default(),
+        ));
+        let (resp, _) =
+            handle_request(&st, r#"{"op":"submit","id":1,"cpu":2,"mem":512,"gpu":4}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let (resp, _) = handle_request(
+            &st,
+            r#"{"op":"submit","id":2,"cpu":2,"mem":512,"gpu":4,"priority":3}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Parked, not lost: queue gauges are live in the metrics body
+        // and the stats snapshot.
+        let (resp, _) = handle_request(&st, r#"{"op":"metrics"}"#);
+        let body = resp.get("body").and_then(|b| b.as_str()).expect("body");
+        assert!(body.contains("repro_pending_depth 1"), "missing live pending gauge");
+        assert!(body.contains("repro_pending_enqueues 1"));
+        let (resp, _) = handle_request(&st, r#"{"op":"stats"}"#);
+        assert_eq!(resp.get("pending").and_then(|p| p.as_f64()), Some(1.0));
+        // The departure frees the node; the queued task places and can
+        // then be released like any other allocation.
+        let (resp, _) = handle_request(&st, r#"{"op":"release","id":1}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        {
+            let s = st.lock().unwrap();
+            assert_eq!(s.dc.n_tasks, 1);
+            assert_eq!(s.scheduled, 2);
+            assert_eq!(s.fairness.with_core(|c| c.pending_depth()), 0);
+        }
+        let (resp, _) = handle_request(&st, r#"{"op":"release","id":2}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(st.lock().unwrap().dc.n_tasks, 0);
+        // Out-of-range / fractional priorities are rejected at parse.
+        for bad in [
+            r#"{"op":"submit","id":3,"cpu":1,"priority":300}"#,
+            r#"{"op":"submit","id":3,"cpu":1,"priority":1.5}"#,
+            r#"{"op":"submit","id":3,"cpu":1,"priority":-1}"#,
+        ] {
+            let (resp, _) = handle_request(&st, bad);
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "accepted {bad}");
         }
     }
 

@@ -25,7 +25,8 @@
 //! `ext-mig-het`, `ext-profiles`, `ext-filters`, `ext-drs` (the DRS
 //! sleep/wake sweep on diurnal load — `docs/power.md`), `ext-gang`
 //! (topology-aware gang scheduling on the `gang-<pct>` trace family —
-//! `docs/gang.md`) and `ablation-tiebreak`.
+//! `docs/gang.md`), `ext-fairness` (the pending-queue fairness sweep on
+//! `priority-<pct>` churn — `docs/fairness.md`) and `ablation-tiebreak`.
 
 use std::collections::HashMap;
 
@@ -99,6 +100,17 @@ pub const EXT_DRS_AMPLITUDE: f64 = 0.6;
 /// tiers (NVLink / fabric / inter-zone) all appear in the topo scores.
 pub const EXT_GANG_PCTS: [f64; 3] = [0.0, 0.3, 0.6];
 pub const EXT_GANG_ZONES: usize = 4;
+
+/// `ext-fairness` knobs: the starvation-threshold × preemption-budget
+/// grid swept over `priority-50` churn. Thresholds are p99 queue waits
+/// in simulated seconds (both the `mod(starve)` trigger and the
+/// starvation-ledger cutoff); budgets are `hook(preempt:n)` eviction
+/// caps per failed placement (0 = queue only, no preemption). The
+/// boost is the PWR-weight fraction shifted onto packing while starved.
+pub const EXT_FAIRNESS_THRESHOLDS: [f64; 2] = [500.0, 2_000.0];
+pub const EXT_FAIRNESS_BUDGETS: [u64; 3] = [0, 2, 8];
+pub const EXT_FAIRNESS_PRIORITY_PCT: f64 = 0.5;
+pub const EXT_FAIRNESS_BOOST: f64 = 0.5;
 
 /// The three selected combinations (§VI-B) + the four competitors used
 /// in Figs. 3–10.
@@ -241,13 +253,14 @@ impl Harness {
             "ext-filters" => self.ext_filters(),
             "ext-drs" => self.ext_drs(),
             "ext-gang" => self.ext_gang(),
+            "ext-fairness" => self.ext_fairness(),
             "ablation-tiebreak" => self.ablation_tiebreak(),
             "all" => {
                 let ids = [
                     "table1", "table2", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
                     "fig7", "fig8", "fig9", "fig10", "ext-dynalpha", "ext-steady",
                     "ext-mig", "ext-mig-het", "ext-profiles", "ext-filters", "ext-drs",
-                    "ext-gang", "ablation-tiebreak",
+                    "ext-gang", "ext-fairness", "ablation-tiebreak",
                 ];
                 let mut out = Vec::new();
                 for id in ids {
@@ -888,6 +901,131 @@ impl Harness {
             out.push(path);
         }
         Ok(out)
+    }
+
+    /// Extension: the pending-queue fairness subsystem
+    /// (`docs/fairness.md`) under multi-tenant churn. Steady-state
+    /// `priority-50` arrivals against a PWR⊕FGD baseline that drops
+    /// unschedulable tasks (the seed behavior), then the
+    /// starvation-threshold × preemption-budget grid with the pending
+    /// queue enabled, `mod(starve)` weight modulation and
+    /// `hook(preempt)` priority eviction. One summary CSV: EOPC,
+    /// fragmentation and GRAR alongside the starvation metrics (p99
+    /// wait, pending depth, starvation events, preemptions) per cell.
+    fn ext_fairness(&mut self) -> Result<Vec<String>> {
+        use crate::sim::events::{SteadyConfig, SteadyResult, SteadySim};
+        let scale = self.cfg.scale.min(1.0);
+        let trace = TraceSpec::priority_trace(EXT_FAIRNESS_PRIORITY_PCT);
+        // Wall-clock-bound like ext-steady/ext-drs: cap repetitions.
+        let reps = self.cfg.reps.min(5).max(1);
+        let run = |policy: &SchedulerProfile,
+                   fairness: Option<crate::sched::FairnessConfig>|
+         -> Vec<SteadyResult> {
+            (0..reps)
+                .map(|rep| {
+                    let cfg = SteadyConfig {
+                        mean_interarrival_s: 1.0,
+                        mean_duration_s: 2_000.0 * scale,
+                        horizon_s: 20_000.0 * scale,
+                        sample_every_s: 200.0 * scale,
+                        seed: self.cfg.seed + rep as u64,
+                    };
+                    let mut sched = policy.build().expect("valid ext-fairness profile");
+                    self.attach_trace(&mut sched, cfg.seed);
+                    let mut sim = SteadySim::new(self.cluster.build(), sched, &trace, &cfg);
+                    if let Some(fc) = fairness {
+                        sim.enable_fairness(fc);
+                    }
+                    sim.run(&cfg)
+                })
+                .collect()
+        };
+        let mean = crate::util::stats::mean;
+        // Fragmentation over the warmed-up second half of the series.
+        let frag_mean = |r: &SteadyResult| -> f64 {
+            let pts = &r.series.points;
+            if pts.is_empty() {
+                return 0.0;
+            }
+            let tail = &pts[pts.len() / 2..];
+            tail.iter().map(|p| p.frag).sum::<f64>() / tail.len() as f64
+        };
+        let summarize = |runs: &[SteadyResult]| -> [f64; 8] {
+            [
+                mean(&runs.iter().map(|r| r.steady_eopc_w).collect::<Vec<_>>()),
+                mean(&runs.iter().map(frag_mean).collect::<Vec<_>>()),
+                mean(&runs.iter().map(|r| r.final_grar()).collect::<Vec<_>>()),
+                mean(&runs
+                    .iter()
+                    .map(|r| r.failed as f64 / r.arrivals.max(1) as f64)
+                    .collect::<Vec<_>>()),
+                mean(&runs.iter().map(|r| r.p99_wait).collect::<Vec<_>>()),
+                mean(&runs.iter().map(|r| r.pending_depth as f64).collect::<Vec<_>>()),
+                mean(&runs.iter().map(|r| r.starvation_events as f64).collect::<Vec<_>>()),
+                mean(&runs.iter().map(|r| r.preemptions as f64).collect::<Vec<_>>()),
+            ]
+        };
+        let path = self.out_path("ext_fairness.csv");
+        let mut w = CsvWriter::create(
+            &path,
+            &[
+                "policy", "starve_threshold", "preempt_budget", "steady_eopc_kw",
+                "steady_frag_gpus", "grar", "failure_rate", "p99_wait_s",
+                "pending_depth", "starvation_events", "preemptions",
+            ],
+        )?;
+        let row = |w: &mut CsvWriter,
+                   label: &str,
+                   thr: &str,
+                   budget: &str,
+                   s: &[f64; 8]|
+         -> Result<()> {
+            w.row_str(&[
+                label.to_string(),
+                thr.to_string(),
+                budget.to_string(),
+                format!("{:.1}", s[0] / 1e3),
+                format!("{:.2}", s[1]),
+                format!("{:.4}", s[2]),
+                format!("{:.4}", s[3]),
+                format!("{:.1}", s[4]),
+                format!("{:.1}", s[5]),
+                format!("{:.1}", s[6]),
+                format!("{:.1}", s[7]),
+            ])?;
+            Ok(())
+        };
+        let base_profile: SchedulerProfile = PolicyKind::PwrFgd { alpha: 0.1 }.into();
+        eprintln!(
+            "[experiment] running {} / {} (baseline drop, {} reps, {} nodes)…",
+            trace.name,
+            base_profile.label,
+            reps,
+            self.cluster.total_nodes()
+        );
+        let b = summarize(&run(&base_profile, None));
+        row(&mut w, &base_profile.label, "-", "-", &b)?;
+        for &threshold in &EXT_FAIRNESS_THRESHOLDS {
+            for &budget in &EXT_FAIRNESS_BUDGETS {
+                let profile = SchedulerProfile::parse(&format!(
+                    "score(pwr=0.1,fgd=0.9)|bind(weighted:0.1)\
+                     |mod(starve:{threshold}:{boost})|hook(preempt:{budget})",
+                    boost = EXT_FAIRNESS_BOOST,
+                ))
+                .expect("valid ext-fairness profile");
+                eprintln!(
+                    "[experiment] running {} / {} (threshold {threshold}, budget {budget})…",
+                    trace.name, profile.label
+                );
+                let s = summarize(&run(
+                    &profile,
+                    Some(crate::sched::FairnessConfig { starve_threshold: threshold }),
+                ));
+                row(&mut w, &profile.label, &format!("{threshold}"), &format!("{budget}"), &s)?;
+            }
+        }
+        w.flush()?;
+        Ok(vec![path])
     }
 
     /// Extension: topology-aware gang scheduling (`docs/gang.md`). Runs

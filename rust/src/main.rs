@@ -2,13 +2,14 @@
 //!
 //! ```text
 //! repro simulate   --policy pwrfgd:0.1 --trace default --seed 42 [--scale 0.25] [--target 1.02] [--trace-decisions t.jsonl] [--obs-summary obs_summary.json]
-//! repro experiment <table1|table2|fig1..fig10|ext-mig|ext-mig-het|ext-profiles|ext-filters|ext-drs|ext-gang|all> [--reps 10] [--scale 1.0] [--out results] [--trace-decisions t.jsonl]
+//! repro experiment <table1|table2|fig1..fig10|ext-mig|ext-mig-het|ext-profiles|ext-filters|ext-drs|ext-gang|ext-fairness|all> [--reps 10] [--scale 1.0] [--out results] [--trace-decisions t.jsonl]
 //! repro ext-mig    [--reps 10] [--scale 1.0] [--out results]   (MIG subsystem end-to-end)
 //! repro ext-mig-het [--reps 10] [--scale 1.0] [--out results]  (mixed A100+A30 MIG fleet)
 //! repro ext-profiles [--reps 10] [--scale 1.0] [--out results] (composite profile DSL sweep)
 //! repro ext-filters [--reps 10] [--scale 1.0] [--out results]  (constraint-aware filter sweep)
 //! repro ext-drs    [--reps 10] [--scale 1.0] [--out results]   (DRS sleep/wake on diurnal load)
 //! repro ext-gang   [--reps 10] [--scale 1.0] [--out results]   (topology-aware gang scheduling)
+//! repro ext-fairness [--reps 10] [--scale 1.0] [--out results] (pending-queue fairness sweep)
 //! repro list-plugins [--check]                                 (every registry key + description; --check exits non-zero on registry/docs/catalog drift)
 //! repro lint       [--json] [--fix-hints] [--root DIR]         (repo-invariant static analysis — docs/analysis.md)
 //! repro explain    [--policy pwrfgd:0.1] [--trace default] [--seed 42] [--at 1] [--top 5]
@@ -61,6 +62,7 @@ fn main() -> Result<()> {
         Some("ext-filters") => cmd_experiment(&args, Some("ext-filters")),
         Some("ext-drs") => cmd_experiment(&args, Some("ext-drs")),
         Some("ext-gang") => cmd_experiment(&args, Some("ext-gang")),
+        Some("ext-fairness") => cmd_experiment(&args, Some("ext-fairness")),
         Some("list-plugins") => cmd_list_plugins(&args),
         Some("lint") => cmd_lint(&args),
         Some("explain") => cmd_explain(&args),
@@ -72,7 +74,7 @@ fn main() -> Result<()> {
         Some("plot") => cmd_plot(&args),
         _ => {
             eprintln!(
-                "usage: repro <simulate|experiment|ext-mig|ext-mig-het|ext-profiles|ext-filters|ext-drs|ext-gang|list-plugins|lint|explain|bench-scale|trace|inventory|serve|scorer-check|plot> [options]\n\
+                "usage: repro <simulate|experiment|ext-mig|ext-mig-het|ext-profiles|ext-filters|ext-drs|ext-gang|ext-fairness|list-plugins|lint|explain|bench-scale|trace|inventory|serve|scorer-check|plot> [options]\n\
                  see rust/src/main.rs header for details"
             );
             Ok(())

@@ -188,6 +188,46 @@ pub const METRICS_CATALOG: &[(&str, MetricKind, &str)] = &[
         MetricKind::Counter,
         "distinct nodes summed over placed gangs (mean PP span = sum / gangs_placed)",
     ),
+    (
+        "pending_depth",
+        MetricKind::Gauge,
+        "tasks currently waiting in the fairness pending queue",
+    ),
+    (
+        "p99_wait",
+        MetricKind::Gauge,
+        "p99 queue wait over completed waits plus current pending ages",
+    ),
+    (
+        "oldest_pending_age",
+        MetricKind::Gauge,
+        "age of the oldest task still waiting in the pending queue",
+    ),
+    (
+        "starvation_events",
+        MetricKind::Counter,
+        "pending tasks whose wait crossed the starvation threshold",
+    ),
+    (
+        "pending_enqueues",
+        MetricKind::Counter,
+        "tasks entering the pending queue (failed arrivals + preemption requeues)",
+    ),
+    (
+        "pending_drains",
+        MetricKind::Counter,
+        "pending tasks later placed on a capacity event retry",
+    ),
+    (
+        "preempt_evictions",
+        MetricKind::Counter,
+        "lower-priority residents evicted by the preempt postFail hook",
+    ),
+    (
+        "preempt_triggers",
+        MetricKind::Counter,
+        "failed placements that triggered at least one preemption",
+    ),
 ];
 
 /// The catalog, for callers that iterate it (`repro list-plugins`).

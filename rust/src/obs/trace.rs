@@ -303,6 +303,39 @@ pub fn place_event(
 /// Build the `release` event (departures carry no scoring table, but
 /// hook actions — DRS idling a node to sleep, proactive repartitions —
 /// still show up in the deltas).
+/// One committed gang as a single JSONL event: the parent task plus a
+/// per-member bind record (member index, node, placement) for every TP
+/// group of the [`crate::sched::gang::GangDecision`]. Emitted only
+/// after the all-or-nothing protocol commits — failed/rolled-back
+/// gangs leave no event (`rust/tests/gang_equivalence.rs` pins
+/// `gangs_placed == gang events`).
+pub fn gang_event(
+    task: &Task,
+    members: &[crate::sched::framework::Decision],
+    now: u64,
+    hook_deltas: &[(String, u64)],
+) -> Json {
+    let member_rows = members
+        .iter()
+        .enumerate()
+        .map(|(i, d)| {
+            Json::obj(vec![
+                ("member", num(i as u64)),
+                ("node", num(d.node as u64)),
+                ("placement", Json::Str(format!("{:?}", d.placement))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("event", Json::Str("gang".to_string())),
+        ("now", num(now)),
+        ("task", task_json(task)),
+        ("n_members", num(members.len() as u64)),
+        ("members", Json::Arr(member_rows)),
+        ("hooks", hooks_json(hook_deltas)),
+    ])
+}
+
 pub fn release_event(
     task: &Task,
     node: usize,

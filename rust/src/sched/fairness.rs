@@ -1,0 +1,772 @@
+//! Multi-tenant fairness subsystem: pending queue, starvation metrics,
+//! dynamic multi-objective modulation, and priority preemption.
+//!
+//! Without this module a task that fails placement (after the postFail
+//! retry) simply vanishes from the allocated count, so the simulator
+//! cannot express the queueing/starvation dynamics that dominate real
+//! multi-tenant GPU clusters near saturation. The subsystem has three
+//! cooperating parts, all sharing one [`FairnessCore`] behind an
+//! `Arc<Mutex<_>>` ([`FairnessShared`]):
+//!
+//! 1. **Pending queue** — failed arrivals enqueue instead of dropping
+//!    and are retried on every capacity event (release / tick). The
+//!    queue is ordered priority-first, FIFO within a priority tier, and
+//!    carries wait-time accounting surfaced as catalogued starvation
+//!    metrics (`pending_depth`, `p99_wait`, `oldest_pending_age`,
+//!    `starvation_events`).
+//! 2. **[`StarveModulator`]** (`mod(starve:<threshold>:<boost>)`) — a
+//!    dynamic [`WeightModulator`] that shifts a `boost` fraction of the
+//!    power weight onto the packing/FGD objectives while the observed
+//!    p99 wait exceeds `threshold` (the 2512.10980 dynamic
+//!    multi-objective idea).
+//! 3. **[`PreemptHook`]** (`hook(preempt:<max_evictions>)`) — a
+//!    postFail hook that evicts strictly-lower-priority residents
+//!    (victims re-enter the pending queue, never lost) so the failed
+//!    arrival can retry against the freed capacity.
+//!
+//! Plugins find the shared core via
+//! [`crate::sched::framework::Scheduler::bind_fairness`]; unbound
+//! plugins are inert, and a simulation that never installs a
+//! [`FairnessState`] is bit-identical to the historical drop behavior
+//! (pinned by `tests/fairness_equivalence.rs`).
+//!
+//! See `docs/fairness.md` for the queue model and knob reference.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::{Datacenter, Node, Placement};
+use crate::obs::MetricsRegistry;
+use crate::sched::framework::PostHook;
+use crate::sched::modulate::WeightModulator;
+use crate::tasks::{GpuDemand, Task};
+
+/// Tunables for the fairness subsystem.
+#[derive(Debug, Clone, Copy)]
+pub struct FairnessConfig {
+    /// Wait time beyond which a pending task is counted as *starved*
+    /// (one `starvation_events` increment per task, at the moment its
+    /// age first crosses the threshold).
+    pub starve_threshold: f64,
+}
+
+impl Default for FairnessConfig {
+    fn default() -> FairnessConfig {
+        FairnessConfig { starve_threshold: 1000.0 }
+    }
+}
+
+/// One queued task awaiting retry.
+#[derive(Debug, Clone)]
+pub struct PendingEntry {
+    /// The task awaiting placement.
+    pub task: Task,
+    /// Clock value when the task entered the queue (this stint).
+    pub enqueued_at: f64,
+    /// Monotone admission ticket — FIFO order within a priority tier.
+    pub seq: u64,
+    /// True when the entry is a preemption victim re-entering the
+    /// queue (its first placement was already counted by the caller).
+    pub requeued: bool,
+    /// Whether this entry already fired its starvation event.
+    starved: bool,
+}
+
+/// Bookkeeping for a placed task, so the preemption hook can evict it
+/// with an exact resource restore.
+#[derive(Debug, Clone)]
+pub struct ResidentRecord {
+    /// The resident task (priority decides preemptability).
+    pub task: Task,
+    /// Node it occupies.
+    pub node: usize,
+    /// Exact placement, replayed through `Datacenter::deallocate` on
+    /// eviction.
+    pub placement: Placement,
+}
+
+/// Shared handle to the fairness core: the sim loop, the
+/// [`StarveModulator`] and the [`PreemptHook`] all hold clones.
+pub type FairnessShared = Arc<Mutex<FairnessCore>>;
+
+/// Build a fresh shared fairness core.
+pub fn shared(cfg: FairnessConfig) -> FairnessShared {
+    Arc::new(Mutex::new(FairnessCore::new(cfg)))
+}
+
+/// The single source of truth for pending/resident/evicted tasks and
+/// all wait-time accounting. Lives behind [`FairnessShared`]; callers
+/// must never hold the lock across a `Scheduler::place` call (the
+/// preemption hook re-locks it from inside the postFail phase).
+#[derive(Debug)]
+pub struct FairnessCore {
+    cfg: FairnessConfig,
+    now: f64,
+    seq: u64,
+    /// Sorted: priority descending, then seq ascending (FIFO within a
+    /// tier). `head()` is always `pending[0]`.
+    pending: Vec<PendingEntry>,
+    residents: HashMap<u64, ResidentRecord>,
+    /// Eviction outbox: records the hook moved out of `residents`,
+    /// awaiting `requeue_evicted` by the sim loop.
+    evicted: Vec<ResidentRecord>,
+    /// Completed queue waits, kept sorted ascending.
+    completed_waits: Vec<f64>,
+    p99_cache: f64,
+    enqueues: u64,
+    requeues: u64,
+    drains: u64,
+    preemptions: u64,
+    starvation_events: u64,
+}
+
+impl FairnessCore {
+    /// Fresh core at clock zero.
+    pub fn new(cfg: FairnessConfig) -> FairnessCore {
+        FairnessCore {
+            cfg,
+            now: 0.0,
+            seq: 0,
+            pending: Vec::new(),
+            residents: HashMap::new(),
+            evicted: Vec::new(),
+            completed_waits: Vec::new(),
+            p99_cache: 0.0,
+            enqueues: 0,
+            requeues: 0,
+            drains: 0,
+            preemptions: 0,
+            starvation_events: 0,
+        }
+    }
+
+    /// Advance the fairness clock (monotone), refresh the starvation
+    /// ledger and the cached p99 wait.
+    pub fn set_now(&mut self, now: f64) {
+        if now > self.now {
+            self.now = now;
+        }
+        for e in &mut self.pending {
+            if !e.starved && self.now - e.enqueued_at > self.cfg.starve_threshold {
+                e.starved = true;
+                self.starvation_events += 1;
+            }
+        }
+        self.p99_cache = self.compute_p99();
+    }
+
+    /// Current fairness clock.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Enqueue a task that failed placement. `requeued` marks
+    /// preemption victims re-entering the queue (so result counters
+    /// are not double-counted on their second placement).
+    pub fn enqueue(&mut self, task: Task, requeued: bool) {
+        self.seq += 1;
+        let entry = PendingEntry {
+            enqueued_at: self.now,
+            seq: self.seq,
+            requeued,
+            starved: false,
+            task,
+        };
+        // Keep (priority desc, seq asc): insert before the first entry
+        // of strictly lower priority; ties on priority keep arrival
+        // order because seq grows monotonically.
+        let at = self
+            .pending
+            .iter()
+            .position(|e| e.task.priority < entry.task.priority)
+            .unwrap_or(self.pending.len());
+        self.pending.insert(at, entry);
+        if requeued {
+            self.requeues += 1;
+        } else {
+            self.enqueues += 1;
+        }
+    }
+
+    /// The next task to retry (highest priority, oldest within the
+    /// tier), cloned so the caller can drop the lock before placing.
+    pub fn head(&self) -> Option<Task> {
+        self.pending.first().map(|e| e.task.clone())
+    }
+
+    /// Remove the head after a successful placement, recording its
+    /// completed wait. Returns the entry so the caller can tell fresh
+    /// arrivals from requeued victims.
+    pub fn pop_placed(&mut self) -> Option<PendingEntry> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let entry = self.pending.remove(0);
+        let wait = (self.now - entry.enqueued_at).max(0.0);
+        let at = self.completed_waits.partition_point(|w| *w <= wait);
+        self.completed_waits.insert(at, wait);
+        self.drains += 1;
+        Some(entry)
+    }
+
+    /// Register a placed task so the preemption hook can later evict
+    /// it with an exact restore.
+    pub fn note_resident(&mut self, task: &Task, node: usize, placement: &Placement) {
+        self.residents.insert(
+            task.id,
+            ResidentRecord { task: task.clone(), node, placement: placement.clone() },
+        );
+    }
+
+    /// Drop the resident record on departure (no-op if unknown).
+    pub fn forget_resident(&mut self, id: u64) -> Option<ResidentRecord> {
+        self.residents.remove(&id)
+    }
+
+    /// Move everything in the eviction outbox back into the pending
+    /// queue (as requeued entries) and return the victim task ids so
+    /// the sim loop can drop them from its running ledger.
+    pub fn requeue_evicted(&mut self) -> Vec<u64> {
+        let victims = std::mem::take(&mut self.evicted);
+        let mut ids = Vec::with_capacity(victims.len());
+        for v in victims {
+            ids.push(v.task.id);
+            self.enqueue(v.task, true);
+        }
+        ids
+    }
+
+    /// Evict up to `budget` strictly-lower-priority residents from one
+    /// node so `task` has a coarse chance of fitting there, restoring
+    /// each victim's resources exactly via `Datacenter::deallocate`.
+    /// Victims land in the eviction outbox (see [`Self::requeue_evicted`]);
+    /// returns the number evicted (0 = no viable node within budget,
+    /// in which case nothing was touched).
+    pub fn preempt_for(
+        &mut self,
+        dc: &mut Datacenter,
+        task: &Task,
+        budget: u64,
+        invalidate: &mut dyn FnMut(usize),
+    ) -> u64 {
+        if budget == 0 || task.priority == 0 {
+            return 0;
+        }
+        // Group preemptable residents per node (BTreeMap: deterministic
+        // ascending node order for tie-breaks).
+        let mut by_node: BTreeMap<usize, Vec<&ResidentRecord>> = BTreeMap::new();
+        for r in self.residents.values() {
+            if r.task.priority < task.priority {
+                by_node.entry(r.node).or_default().push(r);
+            }
+        }
+        let mut best: Option<(usize, Vec<u64>)> = None;
+        for (&node, victims) in &mut by_node {
+            // Cheapest tenants first: lowest priority, then youngest
+            // (highest id) — deterministic regardless of map order.
+            victims.sort_by(|a, b| {
+                a.task
+                    .priority
+                    .cmp(&b.task.priority)
+                    .then(b.task.id.cmp(&a.task.id))
+            });
+            let mut chosen: Vec<&ResidentRecord> = Vec::new();
+            let mut fits = false;
+            for &v in victims.iter().take(budget as usize) {
+                chosen.push(v);
+                if fits_after_eviction(&dc.nodes[node], task, &chosen) {
+                    fits = true;
+                    break;
+                }
+            }
+            if fits {
+                let ids: Vec<u64> = chosen.iter().map(|v| v.task.id).collect();
+                let better = match &best {
+                    None => true,
+                    Some((_, b)) => ids.len() < b.len(),
+                };
+                if better {
+                    best = Some((node, ids));
+                }
+            }
+        }
+        let Some((_, ids)) = best else { return 0 };
+        let n = ids.len() as u64;
+        for id in ids {
+            if let Some(r) = self.residents.remove(&id) {
+                dc.deallocate(&r.task, r.node, &r.placement);
+                invalidate(r.node);
+                self.evicted.push(r);
+                self.preemptions += 1;
+            }
+        }
+        n
+    }
+
+    /// Number of tasks currently waiting.
+    pub fn pending_depth(&self) -> u64 {
+        self.pending.len() as u64
+    }
+
+    /// Age of the oldest pending task (0 when the queue is empty).
+    /// Within one queue stint this is monotone in the clock: entries
+    /// keep their `enqueued_at` across failed retries.
+    pub fn oldest_pending_age(&self) -> f64 {
+        self.pending
+            .iter()
+            .map(|e| self.now - e.enqueued_at)
+            .fold(0.0, f64::max)
+    }
+
+    /// Cached p99 wait over completed waits plus current pending ages
+    /// (refreshed by [`Self::set_now`]).
+    pub fn p99_wait(&self) -> f64 {
+        self.p99_cache
+    }
+
+    fn compute_p99(&self) -> f64 {
+        let mut waits: Vec<f64> = self.completed_waits.clone();
+        waits.extend(self.pending.iter().map(|e| self.now - e.enqueued_at));
+        if waits.is_empty() {
+            return 0.0;
+        }
+        waits.sort_by(|a, b| a.total_cmp(b));
+        // Nearest-rank p99.
+        let rank = ((0.99 * waits.len() as f64).ceil() as usize).max(1);
+        waits[rank.min(waits.len()) - 1]
+    }
+
+    /// Tasks that crossed the starvation threshold (one event per
+    /// queue stint).
+    pub fn starvation_events(&self) -> u64 {
+        self.starvation_events
+    }
+
+    /// Fresh-arrival enqueues (excludes preemption requeues).
+    pub fn enqueues(&self) -> u64 {
+        self.enqueues
+    }
+
+    /// Preemption-victim requeues.
+    pub fn requeues(&self) -> u64 {
+        self.requeues
+    }
+
+    /// Successful drains (pending tasks later placed).
+    pub fn drains(&self) -> u64 {
+        self.drains
+    }
+
+    /// Residents evicted by the preemption hook so far.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// Entries currently queued, in retry order (tests/diagnostics).
+    pub fn pending_entries(&self) -> &[PendingEntry] {
+        &self.pending
+    }
+
+    /// Resident record for a task id (tests/diagnostics).
+    pub fn resident(&self, id: u64) -> Option<&ResidentRecord> {
+        self.residents.get(&id)
+    }
+
+    /// Write the starvation gauges/counters into a metrics registry
+    /// (keys are pre-registered in the obs catalog).
+    pub fn publish(&self, reg: &mut MetricsRegistry) {
+        reg.set_gauge("pending_depth", self.pending_depth() as f64);
+        reg.set_gauge("p99_wait", self.p99_wait());
+        reg.set_gauge("oldest_pending_age", self.oldest_pending_age());
+        reg.set_counter("starvation_events", self.starvation_events);
+        reg.set_counter("pending_enqueues", self.enqueues + self.requeues);
+        reg.set_counter("pending_drains", self.drains);
+    }
+}
+
+/// Coarse feasibility after hypothetically removing `victims` from
+/// `node`: scalar cpu/mem headroom plus a demand-shaped GPU check on a
+/// simulated allocation vector. Deliberately conservative/coarse — the
+/// real placement retry (filters + scoring) remains the authority; this
+/// only avoids evicting tenants when no amount of budgeted eviction
+/// could possibly help.
+fn fits_after_eviction(node: &Node, task: &Task, victims: &[&ResidentRecord]) -> bool {
+    const EPS: f64 = 1e-9;
+    let freed_cpu: f64 = victims.iter().map(|v| v.task.cpu).sum();
+    let freed_mem: f64 = victims.iter().map(|v| v.task.mem).sum();
+    if node.vcpus - node.cpu_alloc + freed_cpu + EPS < task.cpu {
+        return false;
+    }
+    if node.mem - node.mem_alloc + freed_mem + EPS < task.mem {
+        return false;
+    }
+    let mut alloc = node.gpu_alloc.clone();
+    for v in victims {
+        match &v.placement {
+            Placement::CpuOnly => {}
+            Placement::Shared { gpu } => {
+                alloc[*gpu] = (alloc[*gpu] - v.task.gpu.units()).max(0.0);
+            }
+            Placement::Whole { gpus } => {
+                for &g in gpus {
+                    alloc[g] = 0.0;
+                }
+            }
+            Placement::MigSlice { gpu, .. } => {
+                alloc[*gpu] = (alloc[*gpu] - v.task.gpu.units()).max(0.0);
+            }
+        }
+    }
+    match task.gpu {
+        GpuDemand::Zero => true,
+        GpuDemand::Whole(k) => alloc.iter().filter(|a| **a <= EPS).count() >= k as usize,
+        GpuDemand::Frac(f) => alloc.iter().any(|a| 1.0 - *a + EPS >= f),
+        GpuDemand::Mig(p) => alloc.iter().any(|a| 1.0 - *a + EPS >= p.units()),
+    }
+}
+
+/// Sim-loop driver state: owns the shared core plus per-task placement
+/// epochs (so a departure event scheduled for an evicted-and-replaced
+/// task can be recognized as stale and skipped).
+#[derive(Debug)]
+pub struct FairnessState {
+    shared: FairnessShared,
+    epochs: HashMap<u64, u64>,
+}
+
+impl FairnessState {
+    /// Fresh driver state with its own shared core.
+    pub fn new(cfg: FairnessConfig) -> FairnessState {
+        FairnessState { shared: shared(cfg), epochs: HashMap::new() }
+    }
+
+    /// Handle for [`crate::sched::framework::Scheduler::bind_fairness`]
+    /// and direct core access.
+    pub fn shared(&self) -> &FairnessShared {
+        &self.shared
+    }
+
+    /// Run `f` with the locked core (panic-free: a poisoned lock —
+    /// impossible in the single-threaded sim loops — yields the
+    /// default).
+    pub fn with_core<T: Default>(&self, f: impl FnOnce(&mut FairnessCore) -> T) -> T {
+        match self.shared.lock() {
+            Ok(mut core) => f(&mut core),
+            Err(_) => T::default(),
+        }
+    }
+
+    /// Advance the shared fairness clock.
+    pub fn set_now(&self, now: f64) {
+        self.with_core(|c| c.set_now(now));
+    }
+
+    /// Current placement epoch of a task (0 before first placement).
+    pub fn epoch(&self, id: u64) -> u64 {
+        self.epochs.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Bump and return the placement epoch for a (re)placed task.
+    pub fn bump_epoch(&mut self, id: u64) -> u64 {
+        let e = self.epochs.entry(id).or_insert(0);
+        *e += 1;
+        *e
+    }
+}
+
+/// `mod(starve:<threshold>:<boost>)` — while the observed p99 wait
+/// exceeds `threshold`, shift a `boost` fraction of the power weight
+/// (slot 0, `PWR`) onto the remaining packing/FGD objectives,
+/// proportionally to their base weights (equal split when all zero).
+/// Inert until bound to a fairness core.
+pub struct StarveModulator {
+    threshold: f64,
+    boost: f64,
+    shared: Option<FairnessShared>,
+}
+
+impl StarveModulator {
+    /// `threshold` must be positive and finite; `boost` in `[0, 1]`.
+    pub fn new(threshold: f64, boost: f64) -> StarveModulator {
+        StarveModulator { threshold, boost, shared: None }
+    }
+}
+
+impl WeightModulator for StarveModulator {
+    fn name(&self) -> &'static str {
+        "starve"
+    }
+
+    fn check_layout(&self, plugin_names: &[&str]) -> Result<(), String> {
+        if plugin_names.first() != Some(&"PWR") || plugin_names.len() < 2 {
+            return Err(format!(
+                "mod(starve) expects score layout [PWR, <packing>, ...], got {plugin_names:?}"
+            ));
+        }
+        Ok(())
+    }
+
+    fn bind_fairness(&mut self, shared: &FairnessShared) {
+        self.shared = Some(shared.clone());
+    }
+
+    fn modulate(&self, _dc: &Datacenter, base: &[f64], weights: &mut [f64]) -> Option<f64> {
+        let Some(shared) = &self.shared else { return None };
+        let p99 = match shared.lock() {
+            Ok(core) => core.p99_wait(),
+            Err(_) => return None,
+        };
+        if !(p99 > self.threshold) || base.len() < 2 {
+            return None;
+        }
+        let freed = base[0] * self.boost;
+        weights[0] = base[0] - freed;
+        let rest: f64 = base[1..].iter().sum();
+        if rest > 0.0 {
+            for (w, b) in weights[1..].iter_mut().zip(&base[1..]) {
+                *w = *b + freed * (*b / rest);
+            }
+        } else {
+            let share = freed / (base.len() - 1) as f64;
+            for w in weights[1..].iter_mut() {
+                *w = share;
+            }
+        }
+        None
+    }
+}
+
+/// `hook(preempt:<max_evictions>)` — postFail hook that frees capacity
+/// for a failed non-best-effort arrival by evicting up to
+/// `max_evictions` strictly-lower-priority residents from a single
+/// node (victims re-enter the pending queue via the fairness core's
+/// eviction outbox). Inert until bound to a fairness core.
+pub struct PreemptHook {
+    max_evictions: u64,
+    shared: Option<FairnessShared>,
+    evictions: u64,
+    triggers: u64,
+}
+
+impl PreemptHook {
+    /// Budget of evictions per failed placement.
+    pub fn new(max_evictions: u64) -> PreemptHook {
+        PreemptHook { max_evictions, shared: None, evictions: 0, triggers: 0 }
+    }
+}
+
+impl PostHook for PreemptHook {
+    fn name(&self) -> &'static str {
+        "preempt"
+    }
+
+    fn bind_fairness(&mut self, shared: &FairnessShared) {
+        self.shared = Some(shared.clone());
+    }
+
+    fn post_fail(
+        &mut self,
+        dc: &mut Datacenter,
+        task: &Task,
+        invalidate: &mut dyn FnMut(usize),
+    ) -> bool {
+        let Some(shared) = &self.shared else { return false };
+        let Ok(mut core) = shared.lock() else { return false };
+        let n = core.preempt_for(dc, task, self.max_evictions, invalidate);
+        if n == 0 {
+            return false;
+        }
+        self.triggers += 1;
+        self.evictions += n;
+        true
+    }
+
+    fn counters(&self) -> Vec<(&'static str, u64)> {
+        vec![("preempt_evictions", self.evictions), ("preempt_triggers", self.triggers)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+
+    fn t(id: u64, prio: u8) -> Task {
+        Task::new(id, 2.0, 512.0, GpuDemand::Whole(1)).with_priority(prio)
+    }
+
+    #[test]
+    fn queue_is_fifo_within_priority() {
+        let mut core = FairnessCore::new(FairnessConfig::default());
+        core.enqueue(t(0, 0), false);
+        core.enqueue(t(1, 2), false);
+        core.enqueue(t(2, 1), false);
+        core.enqueue(t(3, 2), false);
+        core.enqueue(t(4, 0), false);
+        let order: Vec<u64> = core.pending_entries().iter().map(|e| e.task.id).collect();
+        assert_eq!(order, vec![1, 3, 2, 0, 4]);
+        assert_eq!(core.head().unwrap().id, 1);
+        assert_eq!(core.pop_placed().unwrap().task.id, 1);
+        assert_eq!(core.head().unwrap().id, 3);
+    }
+
+    #[test]
+    fn starvation_ledger_fires_once_per_entry() {
+        let mut core = FairnessCore::new(FairnessConfig { starve_threshold: 10.0 });
+        core.enqueue(t(0, 0), false);
+        core.set_now(5.0);
+        assert_eq!(core.starvation_events(), 0);
+        core.set_now(11.0);
+        assert_eq!(core.starvation_events(), 1);
+        core.set_now(500.0);
+        assert_eq!(core.starvation_events(), 1, "one event per queue stint");
+        core.enqueue(t(1, 0), false);
+        core.set_now(511.0);
+        assert_eq!(core.starvation_events(), 2);
+    }
+
+    #[test]
+    fn wait_accounting_p99_and_oldest_age() {
+        let mut core = FairnessCore::new(FairnessConfig::default());
+        core.enqueue(t(0, 0), false);
+        core.set_now(40.0);
+        core.enqueue(t(1, 0), false);
+        core.set_now(100.0);
+        assert!((core.oldest_pending_age() - 100.0).abs() < 1e-9);
+        // p99 over pending ages {100, 60} → nearest-rank max.
+        assert!((core.p99_wait() - 100.0).abs() < 1e-9);
+        core.pop_placed();
+        core.pop_placed();
+        assert_eq!(core.pending_depth(), 0);
+        assert_eq!(core.oldest_pending_age(), 0.0);
+        core.set_now(101.0);
+        // Completed waits {100, 61} persist in the p99 sample.
+        assert!((core.p99_wait() - 100.0).abs() < 1e-9);
+        assert_eq!(core.drains(), 2);
+    }
+
+    #[test]
+    fn oldest_age_monotone_across_failed_retries() {
+        let mut core = FairnessCore::new(FairnessConfig::default());
+        core.enqueue(t(0, 0), false);
+        let mut last = 0.0;
+        for step in 1..20 {
+            core.set_now(step as f64 * 3.0);
+            let age = core.oldest_pending_age();
+            assert!(age >= last, "age must not shrink while the entry waits");
+            last = age;
+        }
+    }
+
+    #[test]
+    fn preempt_evicts_only_lower_priority_and_restores_resources() {
+        let mut dc = ClusterSpec::tiny(1, 4, 0).build();
+        let mut core = FairnessCore::new(FairnessConfig::default());
+        // Fill the node: 3 best-effort + 1 high-priority whole-GPU tasks.
+        for id in 0..4u64 {
+            let prio = if id == 3 { 2 } else { 0 };
+            let task = t(id, prio);
+            let p = dc.nodes[0].candidate_placements(&task).pop().unwrap();
+            dc.allocate(&task, 0, &p);
+            core.note_resident(&task, 0, &p);
+        }
+        let free_before = dc.gpu_free_units();
+        assert!(free_before < 1.0, "node saturated");
+        let mut invalidated = Vec::new();
+        let arrival = t(10, 1);
+        let n = core.preempt_for(&mut dc, &arrival, 2, &mut |n| invalidated.push(n));
+        assert_eq!(n, 1, "one eviction frees one whole GPU");
+        assert_eq!(invalidated, vec![0]);
+        assert!((dc.gpu_free_units() - (free_before + 1.0)).abs() < 1e-9);
+        let ids = core.requeue_evicted();
+        assert_eq!(ids.len(), 1);
+        let victim = &core.pending_entries()[0];
+        assert!(victim.requeued);
+        assert_eq!(victim.task.priority, 0, "never evict equal-or-higher priority");
+        assert!(ids[0] != 3, "the priority-2 resident survives");
+        // A same-priority arrival finds nothing to evict (only the
+        // priority-2 task and the arrival's own tier remain eligible).
+        core.forget_resident(ids[0]);
+        let blocked = core.preempt_for(&mut dc, &t(11, 0), 4, &mut |_| {});
+        assert_eq!(blocked, 0, "best-effort arrivals never preempt");
+    }
+
+    #[test]
+    fn preempt_budget_respected_and_noop_when_infeasible() {
+        let mut dc = ClusterSpec::tiny(1, 4, 0).build();
+        let mut core = FairnessCore::new(FairnessConfig::default());
+        for id in 0..4u64 {
+            let task = t(id, 0);
+            let p = dc.nodes[0].candidate_placements(&task).pop().unwrap();
+            dc.allocate(&task, 0, &p);
+            core.note_resident(&task, 0, &p);
+        }
+        let free = dc.gpu_free_units();
+        // Needs 3 GPUs freed but budget is 2 → refuse, touch nothing.
+        let big = Task::new(20, 2.0, 512.0, GpuDemand::Whole(3)).with_priority(1);
+        let n = core.preempt_for(&mut dc, &big, 2, &mut |_| {});
+        assert_eq!(n, 0);
+        assert_eq!(dc.gpu_free_units(), free, "no partial evictions");
+        assert_eq!(core.preemptions(), 0);
+        // Budget 3 suffices; youngest best-effort tenants go first.
+        let n = core.preempt_for(&mut dc, &big, 3, &mut |_| {});
+        assert_eq!(n, 3);
+        let ids = core.requeue_evicted();
+        assert_eq!(ids, vec![3, 2, 1], "youngest (highest id) evicted first");
+    }
+
+    #[test]
+    fn starve_modulator_shifts_weight_only_past_threshold() {
+        let fs = shared(FairnessConfig::default());
+        let mut m = StarveModulator::new(50.0, 0.5);
+        assert!(m.check_layout(&["PWR", "FGD"]).is_ok());
+        assert!(m.check_layout(&["FGD", "PWR"]).is_err());
+        assert!(m.check_layout(&["PWR"]).is_err());
+        let dc = ClusterSpec::tiny(1, 2, 0).build();
+        let base = [0.8, 0.2];
+        let mut w = base;
+        // Unbound → inert.
+        assert!(m.modulate(&dc, &base, &mut w).is_none());
+        assert_eq!(w, base);
+        m.bind_fairness(&fs);
+        // Bound but p99 below threshold → still inert.
+        m.modulate(&dc, &base, &mut w);
+        assert_eq!(w, base);
+        // Push p99 past the threshold.
+        if let Ok(mut core) = fs.lock() {
+            core.enqueue(Task::new(0, 1.0, 1.0, GpuDemand::Zero), false);
+            core.set_now(100.0);
+            assert!(core.p99_wait() > 50.0);
+        }
+        m.modulate(&dc, &base, &mut w);
+        assert!((w[0] - 0.4).abs() < 1e-9, "half the PWR mass moved");
+        assert!((w[1] - 0.6).abs() < 1e-9, "packing weight absorbs it");
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn preempt_hook_inert_until_bound() {
+        let mut dc = ClusterSpec::tiny(1, 2, 0).build();
+        let mut hook = PreemptHook::new(4);
+        let arrival = t(0, 2);
+        let mut calls = 0usize;
+        assert!(!hook.post_fail(&mut dc, &arrival, &mut |_| calls += 1));
+        assert_eq!(calls, 0);
+        assert_eq!(hook.counters(), vec![("preempt_evictions", 0), ("preempt_triggers", 0)]);
+    }
+
+    #[test]
+    fn publish_writes_catalogued_keys() {
+        let mut core = FairnessCore::new(FairnessConfig { starve_threshold: 1.0 });
+        core.enqueue(t(0, 0), false);
+        core.set_now(5.0);
+        let mut reg = MetricsRegistry::with_catalog();
+        core.publish(&mut reg);
+        assert_eq!(reg.gauge("pending_depth"), 1.0);
+        assert!(reg.gauge("p99_wait") > 0.0);
+        assert!(reg.gauge("oldest_pending_age") > 0.0);
+        assert_eq!(reg.counter("starvation_events"), 1);
+        assert_eq!(reg.counter("pending_enqueues"), 1);
+        assert_eq!(reg.counter("pending_drains"), 0);
+    }
+}

@@ -200,6 +200,12 @@ struct ScoreStats {
 pub trait PostHook: Send {
     fn name(&self) -> &'static str;
 
+    /// Receive the shared fairness core ([`Scheduler::bind_fairness`]).
+    /// Hooks that participate in the fairness subsystem (e.g.
+    /// [`crate::sched::fairness::PreemptHook`]) override this; all
+    /// others ignore it and stay fairness-agnostic.
+    fn bind_fairness(&mut self, _shared: &crate::sched::fairness::FairnessShared) {}
+
     /// Advance the hook's clock to `now` — the scheduler-event clock,
     /// bumped once per [`Scheduler::place`] / [`Scheduler::release`]
     /// protocol entry and delivered *before* the decision, so
@@ -494,6 +500,23 @@ impl Scheduler {
         self.hooks.push(h);
     }
 
+    /// Hand the shared fairness core to every attached plugin that
+    /// wants one: the modulator and all post hooks get
+    /// `bind_fairness`, which is a documented no-op everywhere except
+    /// the fairness plugins ([`crate::sched::fairness::StarveModulator`],
+    /// [`crate::sched::fairness::PreemptHook`]). Call after the profile
+    /// is built and hooks are attached; schedulers that never bind
+    /// leave every plugin inert and behave exactly as before the
+    /// fairness subsystem existed.
+    pub fn bind_fairness(&mut self, shared: &crate::sched::fairness::FairnessShared) {
+        if let Some(m) = &mut self.modulator {
+            m.bind_fairness(shared);
+        }
+        for h in &mut self.hooks {
+            h.bind_fairness(shared);
+        }
+    }
+
     /// Sum of the named counter over all attached hooks (see
     /// [`PostHook::counters`]).
     pub fn hook_counter(&self, name: &str) -> u64 {
@@ -539,6 +562,14 @@ impl Scheduler {
     /// merged here — use [`Scheduler::metrics`] for the full snapshot).
     pub fn registry(&self) -> &MetricsRegistry {
         &self.obs.registry
+    }
+
+    /// Mutably borrow the scheduler-owned registry, so run drivers can
+    /// publish end-of-run gauges (the fairness subsystem writes
+    /// `pending_depth`/`p99_wait`/`oldest_pending_age` here via
+    /// [`crate::sched::fairness::FairnessCore::publish`]).
+    pub fn registry_mut(&mut self) -> &mut MetricsRegistry {
+        &mut self.obs.registry
     }
 
     /// Toggle phase-latency profiling: filter / score / bind / hook
@@ -1103,8 +1134,10 @@ impl Scheduler {
     /// `rust/tests/gang_equivalence.rs`). `postPlace` hooks run only
     /// after the whole gang commits. Tasks without a gang fall through
     /// to the ordinary [`Scheduler::place`] protocol as a one-member
-    /// gang. Gang decisions currently emit no JSONL trace events (the
-    /// per-member captures are not flushed).
+    /// gang. A committed gang emits one JSONL `gang` trace event with a
+    /// per-member bind record (node + placement) for every TP group
+    /// ([`crate::obs::trace::gang_event`]); failed or rolled-back gangs
+    /// emit nothing.
     pub fn place_gang(
         &mut self,
         dc: &mut Datacenter,
@@ -1117,6 +1150,8 @@ impl Scheduler {
                 .place(dc, workload, task)
                 .map(|d| GangDecision { members: vec![d] });
         };
+        let tracing = self.obs.tracer.is_some();
+        let hooks_before = if tracing { self.hook_counters_snapshot() } else { Vec::new() };
         self.advance_clock(dc);
         // PreFilter the parent: its demand fields carry the gang
         // totals, so aggregate checks need no special casing, and the
@@ -1199,6 +1234,15 @@ impl Scheduler {
         }
         self.obs.registry.inc("gangs_placed", 1);
         self.obs.registry.inc("sched_places", 1);
+        if tracing {
+            let after = self.hook_counters_snapshot();
+            let deltas = hook_counter_deltas(&hooks_before, &after);
+            let event = obs::trace::gang_event(task, &members, self.events, &deltas);
+            if let Some(t) = self.obs.tracer.as_mut() {
+                t.emit(event);
+                self.obs.registry.inc("trace_events", 1);
+            }
+        }
         Some(GangDecision { members })
     }
 

@@ -14,6 +14,9 @@
 //! * [`bind`] — the `bind` extension point (five built-in binders).
 //! * [`modulate`] — the `weightModulator` extension point (load-adaptive
 //!   α, per-lattice α).
+//! * [`fairness`] — the multi-tenant fairness subsystem: pending queue
+//!   with starvation metrics, the `starve` dynamic modulator and the
+//!   `preempt` postFail hook (`docs/fairness.md`).
 //! * [`drs`] — the Dynamic Resource Scaling subsystem: the node
 //!   sleep/wake lifecycle hook, the `drs` power-state filter and the
 //!   `consolidate` score plugin (`docs/power.md`).
@@ -30,6 +33,7 @@
 
 pub mod bind;
 pub mod drs;
+pub mod fairness;
 pub mod filter;
 pub mod framework;
 pub mod gang;
@@ -39,6 +43,9 @@ pub mod profile;
 
 pub use bind::{BindCtx, BindPlugin};
 pub use drs::{ConsolidatePlugin, DrsConfig, DrsFilter, DrsHook};
+pub use fairness::{
+    FairnessConfig, FairnessCore, FairnessShared, FairnessState, PreemptHook, StarveModulator,
+};
 pub use filter::{FilterCtx, FilterPlugin};
 pub use framework::{Decision, PostHook, SchedCtx, Scheduler, ScorePlugin};
 pub use gang::{GangDecision, GangFilter, GangProgress, TopoPlugin, ZonespreadPlugin};

@@ -37,6 +37,13 @@ pub trait WeightModulator: Send {
         Ok(())
     }
 
+    /// Receive the shared fairness core
+    /// ([`crate::sched::framework::Scheduler::bind_fairness`]).
+    /// Modulators that read starvation state (e.g.
+    /// [`crate::sched::fairness::StarveModulator`]) override this;
+    /// everything else ignores it and stays fairness-agnostic.
+    fn bind_fairness(&mut self, _shared: &crate::sched::fairness::FairnessShared) {}
+
     fn modulate(&self, dc: &Datacenter, base: &[f64], weights: &mut [f64]) -> Option<f64>;
 
     /// Whether [`Self::modulate_node`] refines weights per node. The

@@ -72,6 +72,7 @@ use crate::sched::bind::{
     BestFitBinder, BindPlugin, FirstBinder, PackOccupiedBinder, RandomBinder, WeightedBinder,
 };
 use crate::sched::drs::{ConsolidatePlugin, DrsConfig, DrsFilter, DrsHook};
+use crate::sched::fairness::{PreemptHook, StarveModulator};
 use crate::sched::filter::{
     AffinityFilter, FilterPlugin, GpuModelFilter, LabelsFilter, MigLatticeFilter,
     ResourcesFilter,
@@ -490,6 +491,27 @@ const BUILTIN_MODULATOR: &[(&str, &str, ModulatorBuilder)] = &[
             }))
         },
     ),
+    (
+        "starve",
+        "starvation-adaptive weights: shift PWR weight toward packing when \
+         pending p99 wait crosses threshold (starve:threshold:boost)",
+        |params| {
+            let [threshold, boost] = params else {
+                return Err(format!(
+                    "modulator 'starve' takes exactly two params (threshold:boost), got {}",
+                    params.len()
+                ));
+            };
+            if !(*threshold > 0.0) || !threshold.is_finite() {
+                return Err(format!(
+                    "mod(starve:threshold:·): threshold must be positive and finite, \
+                     got {threshold}"
+                ));
+            }
+            validate_alpha(*boost, "mod(starve:·:boost)")?;
+            Ok(Box::new(StarveModulator::new(*threshold, *boost)))
+        },
+    ),
 ];
 
 type HookBuilder = fn(&[f64]) -> Result<Box<dyn PostHook>, String>;
@@ -572,6 +594,25 @@ const BUILTIN_HOOK: &[(&str, &str, HookBuilder)] = &[(
             return Err(format!("hook 'drs' takes at most 4 params, got {}", params.len()));
         }
         Ok(Box::new(DrsHook::new(cfg)))
+    },
+),
+(
+    "preempt",
+    "priority preemption: postFail evict lower-priority tenants into the \
+     pending queue, then retry (preempt:max_evictions)",
+    |params| {
+        let [budget] = params else {
+            return Err(format!(
+                "hook 'preempt' takes exactly one param (max_evictions), got {}",
+                params.len()
+            ));
+        };
+        if !(*budget >= 0.0) || !budget.is_finite() || budget.fract() != 0.0 {
+            return Err(format!(
+                "preempt max_evictions must be a whole number, got {budget}"
+            ));
+        }
+        Ok(Box::new(PreemptHook::new(*budget as u64)))
     },
 )];
 
@@ -1069,6 +1110,18 @@ mod tests {
     }
 
     #[test]
+    fn dsl_fairness_sections_parse_and_build() {
+        let p = SchedulerProfile::parse(
+            "score(pwr=0.7,fgd=0.3)|mod(starve:1000:0.5)|hook(preempt:4)",
+        )
+        .unwrap();
+        assert_eq!(p.label, "PWR700+FGD300|bestfit|starve:1000000-500|preempt:4");
+        let sched = p.build().unwrap();
+        assert_eq!(sched.hook_counter("preempt_evictions"), 0);
+        assert_eq!(sched.hook_counter("preempt_triggers"), 0);
+    }
+
+    #[test]
     fn dsl_rejects_malformed_profiles() {
         for bad in [
             "score()",                                   // empty entry
@@ -1088,6 +1141,13 @@ mod tests {
             "score(pwr)|mod(latticealpha:0.5)",          // latticealpha needs 3
             "score(pwr)|mod(latticealpha:0.5:1.2:0.1)",  // α_a100 out of range
             "score(fgd)|mod(latticealpha:0.5:0.5:0.5)",  // latticealpha needs pwr first
+            "score(pwr)|mod(starve:100)",                // starve needs 2 params
+            "score(pwr=0.5,fgd=0.5)|mod(starve:0:0.5)",  // non-positive threshold
+            "score(pwr=0.5,fgd=0.5)|mod(starve:100:1.5)", // boost out of range
+            "score(fgd=0.7,pwr=0.3)|mod(starve:100:0.5)", // starve needs pwr first
+            "score(fgd)|hook(preempt)",                  // preempt needs a budget
+            "score(fgd)|hook(preempt:1.5)",              // fractional eviction budget
+            "score(fgd)|hook(preempt:-1)",               // negative eviction budget
             "score(fgd)|hook(drs:nan)",                  // drs timeout must be a number
             "score(fgd)|hook(drs:100:1.5)",              // fractional wake latency
             "score(fgd)|hook(drs:100:-2)",               // negative wake latency

@@ -35,8 +35,13 @@ use crate::util::rng::Rng;
 enum Event {
     /// A new task arrives.
     Arrival,
-    /// A running task completes and releases its resources.
-    Departure { task_id: u64 },
+    /// A running task completes and releases its resources. `epoch` is
+    /// the task's placement epoch at scheduling time: with the fairness
+    /// subsystem on, a preempted-and-replaced task gets a fresh epoch,
+    /// so the departure scheduled for its *old* placement no longer
+    /// matches and is skipped as stale. Without fairness the epoch is
+    /// always 0 and the comparison never fires.
+    Departure { task_id: u64, epoch: u64 },
 }
 
 /// Heap entry ordered by time (min-heap via reversed comparison).
@@ -130,6 +135,17 @@ pub struct SteadyResult {
     pub gangs_failed: u64,
     pub gang_tp_violations: u64,
     pub gang_pp_span_sum: u64,
+    /// Fairness pending-queue state at end of run (all zero unless
+    /// [`SteadySim::enable_fairness`] was called; see
+    /// [`crate::sched::fairness`]). Waits are in simulated seconds.
+    pub pending_depth: u64,
+    pub p99_wait: f64,
+    pub oldest_pending_age: f64,
+    pub starvation_events: u64,
+    pub pending_enqueues: u64,
+    pub pending_drains: u64,
+    /// Residents evicted by the `preempt` postFail hook (and requeued).
+    pub preemptions: u64,
     /// Cumulative GPU units requested by arrivals / allocated to
     /// scheduled tasks — the churn loop's GRAR numerator/denominator.
     pub arrived_gpu_units: f64,
@@ -182,6 +198,9 @@ pub struct SteadySim {
     /// `None` leaves the arrival process exactly as before (the gap
     /// computation must stay bit-identical for legacy traces).
     diurnal: Option<DiurnalMod>,
+    /// Fairness pending queue (`None` = historical drop behavior,
+    /// bit-identical to pre-fairness runs).
+    fairness: Option<crate::sched::FairnessState>,
 }
 
 impl SteadySim {
@@ -198,7 +217,27 @@ impl SteadySim {
             now: 0.0,
             seq: 0,
             diurnal: spec.diurnal,
+            fairness: None,
         }
+    }
+
+    /// Switch the run from drop-on-failure to the fairness pending
+    /// queue ([`crate::sched::fairness`]): failed non-gang arrivals
+    /// enqueue and are retried after every departure (the churn loop's
+    /// capacity event), preemption victims are requeued (never lost,
+    /// their stale departures skipped via placement epochs), and the
+    /// scheduler's plugins get the shared core (arming
+    /// `mod(starve:…)` / `hook(preempt:…)` if the profile carries
+    /// them). Gang arrivals keep the legacy all-or-nothing drop.
+    pub fn enable_fairness(&mut self, cfg: crate::sched::FairnessConfig) {
+        let fs = crate::sched::FairnessState::new(cfg);
+        self.sched.bind_fairness(fs.shared());
+        self.fairness = Some(fs);
+    }
+
+    /// Shared fairness core, when enabled (tests/diagnostics).
+    pub fn fairness_shared(&self) -> Option<&crate::sched::FairnessShared> {
+        self.fairness.as_ref().map(|f| f.shared())
     }
 
     /// The cluster state (for post-run invariant checks in tests).
@@ -300,32 +339,95 @@ impl SteadySim {
                     match resident {
                         Some(r) => {
                             out.allocated_gpu_units += task.gpu.units();
+                            let mut epoch = 0;
+                            let mut victims: Vec<u64> = Vec::new();
+                            if let Some(fs) = &mut self.fairness {
+                                if let Resident::Single { node, placement } = &r {
+                                    fs.with_core(|c| {
+                                        c.set_now(at);
+                                        c.note_resident(&task, *node, placement);
+                                    });
+                                }
+                                epoch = fs.bump_epoch(id);
+                                // A postFail preemption may have cleared
+                                // the way for this very placement.
+                                victims = fs.with_core(|c| c.requeue_evicted());
+                            }
+                            for vid in victims {
+                                self.running.remove(&vid);
+                            }
                             self.running.insert(id, (task, r));
                             out.scheduled += 1;
                             let dur = self.exp(cfg.mean_duration_s);
-                            self.push(self.now + dur, Event::Departure { task_id: id });
+                            self.push(self.now + dur, Event::Departure { task_id: id, epoch });
                         }
-                        None => out.failed += 1,
+                        None => {
+                            if self.fairness.is_some() && task.gang.is_none() {
+                                // Enqueue instead of dropping; a failed
+                                // retry may still have evicted victims.
+                                let tnow = self.now;
+                                let mut victims: Vec<u64> = Vec::new();
+                                if let Some(fs) = &self.fairness {
+                                    victims = fs.with_core(|c| {
+                                        c.set_now(tnow);
+                                        let v = c.requeue_evicted();
+                                        c.enqueue(task, false);
+                                        v
+                                    });
+                                }
+                                for vid in victims {
+                                    self.running.remove(&vid);
+                                }
+                            } else {
+                                out.failed += 1;
+                            }
+                        }
                     }
                     let gap = self.next_arrival_gap(cfg);
                     self.push(self.now + gap, Event::Arrival);
                 }
-                Event::Departure { task_id } => {
-                    if let Some((task, resident)) = self.running.remove(&task_id) {
-                        // Departures are where lattice holes open up —
-                        // release() runs the postPlace hooks (proactive
-                        // defrag's main use under churn).
-                        match resident {
-                            Resident::Single { node, placement } => {
-                                self.sched.release(&mut self.dc, &task, node, &placement);
+                Event::Departure { task_id, epoch } => {
+                    // Stale-departure guard: only fires with fairness on
+                    // (epochs are 0 on both sides otherwise).
+                    let current =
+                        self.fairness.as_ref().map(|f| f.epoch(task_id)).unwrap_or(0);
+                    if epoch == current {
+                        if let Some((task, resident)) = self.running.remove(&task_id) {
+                            // Departures are where lattice holes open up —
+                            // release() runs the postPlace hooks (proactive
+                            // defrag's main use under churn).
+                            match resident {
+                                Resident::Single { node, placement } => {
+                                    self.sched.release(&mut self.dc, &task, node, &placement);
+                                }
+                                Resident::Gang(d) => {
+                                    self.sched.release_gang(&mut self.dc, &task, &d);
+                                }
                             }
-                            Resident::Gang(d) => {
-                                self.sched.release_gang(&mut self.dc, &task, &d);
+                            out.departures += 1;
+                            if let Some(fs) = &self.fairness {
+                                fs.with_core(|c| {
+                                    c.forget_resident(task_id);
+                                });
                             }
+                            // The freed capacity is the queue's retry
+                            // signal (no-op without fairness).
+                            self.drain_pending(cfg, &mut out);
                         }
-                        out.departures += 1;
                     }
                 }
+            }
+            #[cfg(debug_assertions)]
+            if let Some(fs) = &self.fairness {
+                // Conservation at every step: each arrival is exactly
+                // one of running / departed / pending / failed(gang).
+                let depth = fs.with_core(|c| c.pending_depth());
+                debug_assert_eq!(
+                    out.arrivals,
+                    self.running.len() as u64 + out.departures + depth + out.failed,
+                    "fairness conservation violated at t={}",
+                    self.now
+                );
             }
         }
         if !steady_samples.is_empty() {
@@ -334,6 +436,32 @@ impl SteadySim {
             out.steady_util = steady_samples.iter().map(|s| s.1).sum::<f64>() / n;
             out.steady_eopc_drs_w = steady_samples.iter().map(|s| s.2).sum::<f64>() / n;
             out.mean_asleep_nodes = steady_samples.iter().map(|s| s.3).sum::<f64>() / n;
+        }
+        if let Some(fs) = &self.fairness {
+            fs.set_now(self.now);
+            let fair = fs.with_core(|c| {
+                (
+                    c.pending_depth(),
+                    c.p99_wait(),
+                    c.oldest_pending_age(),
+                    c.starvation_events(),
+                    c.enqueues() + c.requeues(),
+                    c.drains(),
+                    c.preemptions(),
+                )
+            });
+            out.pending_depth = fair.0;
+            out.p99_wait = fair.1;
+            out.oldest_pending_age = fair.2;
+            out.starvation_events = fair.3;
+            out.pending_enqueues = fair.4;
+            out.pending_drains = fair.5;
+            out.preemptions = fair.6;
+        }
+        if let Some(shared) = self.fairness.as_ref().map(|f| f.shared().clone()) {
+            if let Ok(core) = shared.lock() {
+                core.publish(self.sched.registry_mut());
+            }
         }
         out.repartitions = self.sched.hook_counter("repartitions");
         out.proactive_repartitions = self.sched.hook_counter("proactive_repartitions");
@@ -347,6 +475,47 @@ impl SteadySim {
         out.gang_tp_violations = m.counter("gang_tp_violations");
         out.gang_pp_span_sum = m.counter("gang_pp_span_sum");
         out
+    }
+
+    /// Retry queued tasks in priority/FIFO order until one fails (no
+    /// bypass) or the queue empties. Takes the fairness state out of
+    /// `self` for the duration so the place/push/exp calls below can
+    /// borrow `self` mutably; the shared core itself stays reachable by
+    /// the scheduler's bound plugins (it is behind an `Arc`). Never
+    /// holds the core lock across a `place` call — the preempt hook
+    /// re-locks the core from inside the postFail phase.
+    fn drain_pending(&mut self, cfg: &SteadyConfig, out: &mut SteadyResult) {
+        let Some(mut fs) = self.fairness.take() else { return };
+        fs.set_now(self.now);
+        loop {
+            let Some(task) = fs.with_core(|c| c.head()) else { break };
+            let decision = self.sched.place(&mut self.dc, &self.workload, &task);
+            // Preemption evictions from this attempt (whether or not
+            // the retry then succeeded): requeue the victims and drop
+            // them from the running ledger — their queued departures
+            // are now stale by epoch.
+            for vid in fs.with_core(|c| c.requeue_evicted()) {
+                self.running.remove(&vid);
+            }
+            let Some(d) = decision else { break };
+            let requeued =
+                fs.with_core(|c| c.pop_placed()).map(|e| e.requeued).unwrap_or(false);
+            if !requeued {
+                // First placement of this arrival: count it now (a
+                // requeued victim was already counted when it first
+                // placed).
+                out.scheduled += 1;
+                out.allocated_gpu_units += task.gpu.units();
+            }
+            fs.with_core(|c| c.note_resident(&task, d.node, &d.placement));
+            let epoch = fs.bump_epoch(task.id);
+            let id = task.id;
+            self.running
+                .insert(id, (task, Resident::Single { node: d.node, placement: d.placement }));
+            let dur = self.exp(cfg.mean_duration_s);
+            self.push(self.now + dur, Event::Departure { task_id: id, epoch });
+        }
+        self.fairness = Some(fs);
     }
 
     fn sample(&self, x: f64) -> SeriesPoint {

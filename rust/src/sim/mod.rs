@@ -71,6 +71,18 @@ pub struct RunResult {
     pub gangs_failed: u64,
     pub gang_tp_violations: u64,
     pub gang_pp_span_sum: u64,
+    /// Fairness pending-queue state at end of run (all zero unless
+    /// [`Simulation::enable_fairness`] was called; see
+    /// [`crate::sched::fairness`]). The inflation loop's clock is the
+    /// arrival count, so waits are measured in arrivals.
+    pub pending_depth: u64,
+    pub p99_wait: f64,
+    pub oldest_pending_age: f64,
+    pub starvation_events: u64,
+    pub pending_enqueues: u64,
+    pub pending_drains: u64,
+    /// Residents evicted by the `preempt` postFail hook (and requeued).
+    pub preemptions: u64,
 }
 
 impl RunResult {
@@ -104,6 +116,9 @@ pub struct Simulation {
     submitted: u64,
     /// Record full `F_dc` series (O(N·M) per sample; off for benches).
     pub record_frag: bool,
+    /// Fairness pending queue (`None` = historical drop behavior,
+    /// bit-identical to pre-fairness runs).
+    fairness: Option<crate::sched::FairnessState>,
 }
 
 impl Simulation {
@@ -139,6 +154,51 @@ impl Simulation {
             scheduled: 0,
             submitted: 0,
             record_frag: true,
+            fairness: None,
+        }
+    }
+
+    /// Switch the run from drop-on-failure to the fairness pending
+    /// queue ([`crate::sched::fairness`]): failed non-gang arrivals
+    /// enqueue and are retried at every subsequent arrival (the
+    /// inflation loop's capacity tick), and the scheduler's plugins get
+    /// the shared core (arming `mod(starve:…)` / `hook(preempt:…)` if
+    /// the profile carries them). Gang arrivals keep the legacy
+    /// all-or-nothing drop (queueing partial gangs is future work).
+    pub fn enable_fairness(&mut self, cfg: crate::sched::FairnessConfig) {
+        let fs = crate::sched::FairnessState::new(cfg);
+        self.sched.bind_fairness(fs.shared());
+        self.fairness = Some(fs);
+    }
+
+    /// Shared fairness core, when enabled (tests/diagnostics).
+    pub fn fairness_shared(&self) -> Option<&crate::sched::FairnessShared> {
+        self.fairness.as_ref().map(|f| f.shared())
+    }
+
+    /// Retry queued tasks in priority/FIFO order until one fails (no
+    /// bypass) or the queue empties. The inflation clock is the arrival
+    /// count. Never holds the core lock across a `place` call — the
+    /// preempt hook re-locks the core from inside the postFail phase.
+    fn drain_pending(&mut self) {
+        let Some(fs) = &self.fairness else { return };
+        fs.set_now(self.submitted as f64);
+        loop {
+            let Some(task) = fs.with_core(|c| c.head()) else { break };
+            let Some(d) = self.sched.place(&mut self.dc, &self.workload, &task) else {
+                break;
+            };
+            let requeued =
+                fs.with_core(|c| c.pop_placed()).map(|e| e.requeued).unwrap_or(false);
+            if !requeued {
+                self.scheduled += 1;
+            }
+            fs.with_core(|c| c.note_resident(&task, d.node, &d.placement));
+            // The placement may itself have preempted lower-priority
+            // residents; move them from the outbox into the queue.
+            fs.with_core(|c| {
+                c.requeue_evicted();
+            });
         }
     }
 
@@ -149,23 +209,52 @@ impl Simulation {
     /// [`Scheduler::place_gang`] protocol instead (one submission, one
     /// atomic multi-node decision).
     pub fn step(&mut self) -> bool {
+        // With fairness on, every arrival doubles as the capacity tick
+        // that retries the pending queue.
+        self.drain_pending();
         let task = self.sampler.next_task();
         self.submitted += 1;
         self.arrived_gpu_units += task.gpu.units();
         if let crate::tasks::GpuDemand::Mig(p) = task.gpu {
             self.arrived_mig_units[p.lattice().index()] += p.units();
         }
-        let placed = if task.gang.is_some() {
-            self.sched.place_gang(&mut self.dc, &self.workload, &task).is_some()
-        } else {
-            self.sched.place(&mut self.dc, &self.workload, &task).is_some()
-        };
-        if placed {
-            self.scheduled += 1;
-        } else {
-            self.failed += 1;
+        if task.gang.is_some() {
+            // Gang arrivals keep the legacy all-or-nothing drop even
+            // under fairness (queueing partial gangs is future work).
+            let placed = self.sched.place_gang(&mut self.dc, &self.workload, &task).is_some();
+            if placed {
+                self.scheduled += 1;
+            } else {
+                self.failed += 1;
+            }
+            return placed;
         }
-        placed
+        let decision = self.sched.place(&mut self.dc, &self.workload, &task);
+        match (&self.fairness, &decision) {
+            (None, Some(_)) => self.scheduled += 1,
+            (None, None) => self.failed += 1,
+            (Some(fs), Some(d)) => {
+                self.scheduled += 1;
+                fs.with_core(|c| {
+                    c.set_now(self.submitted as f64);
+                    c.note_resident(&task, d.node, &d.placement);
+                    // A postFail preemption may have cleared the way
+                    // for this very placement: requeue its victims.
+                    c.requeue_evicted();
+                });
+            }
+            (Some(fs), None) => {
+                // Enqueue instead of dropping; a failed retry may
+                // still have evicted victims (freed capacity drains
+                // on the next tick).
+                fs.with_core(|c| {
+                    c.set_now(self.submitted as f64);
+                    c.requeue_evicted();
+                    c.enqueue(task.clone(), false);
+                });
+            }
+        }
+        decision.is_some()
     }
 
     /// Replay the inflation run up to the `nth` sampled arrival
@@ -263,6 +352,25 @@ impl Simulation {
             }
         }
         series.points.push(self.sample());
+        let mut fair = (0u64, 0.0f64, 0.0f64, 0u64, 0u64, 0u64, 0u64);
+        if let Some(fs) = &self.fairness {
+            fs.set_now(self.submitted as f64);
+            fair = fs.with_core(|c| {
+                (
+                    c.pending_depth(),
+                    c.p99_wait(),
+                    c.oldest_pending_age(),
+                    c.starvation_events(),
+                    c.enqueues() + c.requeues(),
+                    c.drains(),
+                    c.preemptions(),
+                )
+            });
+            let reg = self.sched.registry_mut();
+            if let Ok(core) = fs.shared().lock() {
+                core.publish(reg);
+            }
+        }
         let m = self.sched.metrics();
         RunResult {
             series,
@@ -281,6 +389,13 @@ impl Simulation {
             gangs_failed: m.counter("gangs_failed"),
             gang_tp_violations: m.counter("gang_tp_violations"),
             gang_pp_span_sum: m.counter("gang_pp_span_sum"),
+            pending_depth: fair.0,
+            p99_wait: fair.1,
+            oldest_pending_age: fair.2,
+            starvation_events: fair.3,
+            pending_enqueues: fair.4,
+            pending_drains: fair.5,
+            preemptions: fair.6,
         }
     }
 }

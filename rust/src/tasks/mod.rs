@@ -213,12 +213,24 @@ pub struct Task {
     /// through the all-or-nothing gang path
     /// ([`crate::sched::Scheduler::place_gang`]).
     pub gang: Option<GangSpec>,
+    /// Tenant priority (higher = more important; 0 = best-effort, the
+    /// default). Read by the fairness subsystem: the pending queue
+    /// orders retries priority-first and the `preempt` postFail hook
+    /// may evict strictly-lower-priority residents
+    /// ([`crate::sched::fairness`]).
+    pub priority: u8,
 }
 
 impl Task {
     /// Convenience constructor for tests and examples.
     pub fn new(id: u64, cpu: f64, mem: f64, gpu: GpuDemand) -> Task {
-        Task { id, cpu, mem, gpu, gpu_model: None, constraints: None, gang: None }
+        Task { id, cpu, mem, gpu, gpu_model: None, constraints: None, gang: None, priority: 0 }
+    }
+
+    /// With a tenant priority (builder style).
+    pub fn with_priority(mut self, priority: u8) -> Task {
+        self.priority = priority;
+        self
     }
 
     /// With a gang shape (builder style). The demand fields are
@@ -274,6 +286,7 @@ impl TaskClass {
             gpu_model: self.gpu_model,
             constraints: None,
             gang: None,
+            priority: 0,
         }
     }
 }

@@ -57,7 +57,16 @@ pub fn parse_csv(name: &str, text: &str) -> Result<Trace> {
                 spec.split('|').find_map(GpuModel::parse)
             }
         };
-        tasks.push(Task { id: i as u64, cpu, mem, gpu, gpu_model, constraints: None, gang: None });
+        tasks.push(Task {
+            id: i as u64,
+            cpu,
+            mem,
+            gpu,
+            gpu_model,
+            constraints: None,
+            gang: None,
+            priority: 0,
+        });
     }
     Ok(Trace { name: name.to_string(), tasks })
 }

@@ -82,6 +82,10 @@ pub struct TaskProfile {
     /// profile's demand fields hold the gang *totals*, matching
     /// [`crate::sched::gang::gang_task`]; `None` for ordinary tasks.
     pub gang: Option<GangSpec>,
+    /// Tenant priority stamped on sampled tasks (the `priority-<pct>`
+    /// family; 0 everywhere else). Assigned statically per profile, so
+    /// priority-free traces draw no extra randomness.
+    pub priority: u8,
 }
 
 /// A declarative trace: weighted profile catalog + nominal size.
@@ -144,8 +148,15 @@ fn profile(cpu: f64, gpu: GpuDemand) -> TaskProfile {
         constrained: false,
         constraint: ConstraintGen::None,
         gang: None,
+        priority: 0,
     }
 }
+
+/// The priority tiers of the `priority-<pct>` family and their share of
+/// the elevated mass: a deliberately skewed tenant mix — a thin
+/// latency-critical tier over a broad production tier, with the
+/// remaining `1 − pct` of GPU demand staying best-effort (priority 0).
+pub const PRIORITY_TIERS: [(u8, f64); 2] = [(2, 0.25), (1, 0.75)];
 
 impl TraceSpec {
     /// The **Default** trace calibrated to Table I.
@@ -427,6 +438,7 @@ impl TraceSpec {
                     constrained: false,
                     constraint: ConstraintGen::None,
                     gang: Some(g),
+                    priority: 0,
                 },
                 whole_pop * pct * share,
             ));
@@ -435,10 +447,38 @@ impl TraceSpec {
         spec
     }
 
+    /// **Priority** derived trace (`priority-<pct>`): `pct` of the GPU
+    /// demand mass carries an elevated tenant priority, split across
+    /// the skewed [`PRIORITY_TIERS`] mix; everything else matches
+    /// Default (priority 0, best-effort). Like `gang-0`, `priority-0`
+    /// carries the elevated profiles at weight zero and samples no
+    /// prioritized tasks — and priorities are assigned statically per
+    /// profile, so sampling draws no extra randomness. Feeds the
+    /// fairness subsystem's `preempt` hook (`docs/fairness.md`); the
+    /// `ext-fairness` experiment runs `priority-50` churn.
+    pub fn priority_trace(pct: f64) -> TraceSpec {
+        assert!((0.0..=1.0).contains(&pct));
+        let mut spec = Self::default_trace();
+        let mut extra = Vec::new();
+        for (p, w) in &mut spec.profiles {
+            if p.gpu.is_gpu() {
+                for (prio, share) in PRIORITY_TIERS {
+                    let mut elevated = p.clone();
+                    elevated.priority = prio;
+                    extra.push((elevated, *w * pct * share));
+                }
+                *w *= 1.0 - pct;
+            }
+        }
+        spec.profiles.extend(extra);
+        spec.name = format!("priority-{:.0}", pct * 100.0);
+        spec
+    }
+
     /// Reconstruct a spec from a trace name (`default`,
     /// `multi-gpu-20`, `sharing-gpu-100`, `constrained-gpu-33`,
     /// `mig-30`/`mig-default`, `mig-het-40`, `diurnal-60`, `gang-50`,
-    /// …).
+    /// `priority-50`, …).
     pub fn by_name(name: &str) -> Option<TraceSpec> {
         if name == "default" {
             return Some(Self::default_trace());
@@ -463,6 +503,13 @@ impl TraceSpec {
         }
         if let Some(pct) = name.strip_prefix("constrained-") {
             return pct.parse::<f64>().ok().map(|p| Self::constrained(p / 100.0));
+        }
+        if let Some(pct) = name.strip_prefix("priority-") {
+            return pct
+                .parse::<f64>()
+                .ok()
+                .filter(|p| (0.0..=100.0).contains(p))
+                .map(|p| Self::priority_trace(p / 100.0));
         }
         if let Some(pct) = name.strip_prefix("gang-") {
             return pct
@@ -593,6 +640,7 @@ impl TraceSpec {
             gpu_model,
             constraints: constraints.map(Box::new),
             gang: p.gang,
+            priority: p.priority,
         }
     }
 

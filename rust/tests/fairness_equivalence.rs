@@ -1,0 +1,330 @@
+//! Fairness equivalence + conservation suite (`docs/fairness.md`).
+//!
+//! The pending-queue fairness subsystem (`rust/src/sched/fairness.rs`)
+//! must be invisible when disabled: a scheduler carrying `mod(starve)`
+//! and `hook(preempt)` sections that were never bound to a fairness
+//! core — and a simulation that never calls `enable_fairness` — has to
+//! produce **bit-identical** fixed-seed runs against the plain
+//! profile, across policies × trace families × seeds, in both
+//! simulation loops (inflation and steady-state churn).
+//!
+//! The suite also pins the active side under `priority-<pct>` churn:
+//! every arrival is exactly one of allocated / pending / departed
+//! (nothing vanishes once the queue is on), the enqueue/drain ledger
+//! is consistent with the starvation counters, preemption never evicts
+//! an equal-or-higher-priority resident, and victims' resources are
+//! restored exactly.
+
+use repro::cluster::ClusterSpec;
+use repro::sched::{FairnessConfig, FairnessState, SchedulerProfile};
+use repro::sim::events::{SteadyConfig, SteadySim};
+use repro::sim::{RunResult, Simulation};
+use repro::trace::TraceSpec;
+
+/// Inflation run; `fairness_off_extras` appends inert (unbound)
+/// fairness sections to the profile without enabling the queue.
+fn run_inflation(
+    policy: &str,
+    cluster: &ClusterSpec,
+    trace: &TraceSpec,
+    seed: u64,
+    target: f64,
+) -> RunResult {
+    let sched = SchedulerProfile::parse(policy).unwrap().build().unwrap();
+    let dc = cluster.build();
+    let workload = trace.synthesize(seed ^ 0x57AB1E).workload();
+    let mut sim = Simulation::with_spec(dc, sched, trace, workload, seed);
+    sim.record_frag = false;
+    sim.run_inflation(target)
+}
+
+fn assert_bit_identical(what: &str, a: &RunResult, b: &RunResult) {
+    assert_eq!(a.submitted, b.submitted, "{what}: submitted diverged");
+    assert_eq!(a.scheduled, b.scheduled, "{what}: scheduled diverged");
+    assert_eq!(a.failed, b.failed, "{what}: failed diverged");
+    assert_eq!(
+        a.allocated_gpu_units.to_bits(),
+        b.allocated_gpu_units.to_bits(),
+        "{what}: allocated units diverged"
+    );
+    assert_eq!(
+        a.final_eopc().to_bits(),
+        b.final_eopc().to_bits(),
+        "{what}: final EOPC diverged ({} vs {})",
+        a.final_eopc(),
+        b.final_eopc()
+    );
+    assert_eq!(
+        a.final_grar().to_bits(),
+        b.final_grar().to_bits(),
+        "{what}: final GRAR diverged"
+    );
+}
+
+/// Unbound fairness plugins are inert: bit-identical inflation runs
+/// with and without `mod(starve)`/`hook(preempt)` in the profile,
+/// across weight mixes × traces × seeds. The queue itself is never
+/// enabled, so the run also pins the fairness-off (seed) behavior of
+/// the refactored step loop.
+#[test]
+fn unbound_fairness_plugins_are_bit_identical_in_inflation() {
+    let cluster = ClusterSpec::tiny(6, 4, 1);
+    let traces = [
+        TraceSpec::default_trace(),
+        TraceSpec::sharing_gpu(1.0),
+        TraceSpec::multi_gpu(0.2),
+        TraceSpec::priority_trace(0.5),
+    ];
+    let pairs = [
+        (
+            "score(pwr=0.1,fgd=0.9)|bind(weighted:0.1)",
+            "score(pwr=0.1,fgd=0.9)|bind(weighted:0.1)|mod(starve:100:0.5)|hook(preempt:4)",
+        ),
+        (
+            "score(pwr=0.5,fgd=0.3,dotprod=0.2)|bind(weighted:0.5)",
+            "score(pwr=0.5,fgd=0.3,dotprod=0.2)|bind(weighted:0.5)|mod(starve:1:1.0)|hook(preempt:8)",
+        ),
+        ("bestfit", "score(bestfit)|hook(preempt:2)"),
+    ];
+    for (base_policy, with_policy) in pairs {
+        for trace in &traces {
+            for seed in [1u64, 42] {
+                let what = format!("{base_policy}/{}/seed{seed}", trace.name);
+                let base = run_inflation(base_policy, &cluster, trace, seed, 0.7);
+                let with = run_inflation(with_policy, &cluster, trace, seed, 0.7);
+                assert!(base.submitted > 0, "{what}: empty run");
+                assert_bit_identical(&what, &base, &with);
+                assert_eq!(with.pending_depth, 0, "{what}: queue grew while disabled");
+                assert_eq!(with.pending_enqueues, 0, "{what}: enqueued while disabled");
+                assert_eq!(with.preemptions, 0, "{what}: preempted while unbound");
+                assert_eq!(with.starvation_events, 0, "{what}: starved while disabled");
+            }
+        }
+    }
+}
+
+/// The same pin under churn: the steady-state loop (arrivals +
+/// departures through `Scheduler::place`/`release`) with unbound
+/// fairness plugins and no `enable_fairness` call must agree bit for
+/// bit with the plain profile.
+#[test]
+fn fairness_off_is_bit_identical_under_churn() {
+    let cluster = ClusterSpec::tiny(8, 4, 2);
+    let run = |policy: &str, trace: &TraceSpec, seed: u64| {
+        let cfg = SteadyConfig {
+            mean_interarrival_s: 1.0,
+            mean_duration_s: 250.0,
+            horizon_s: 2_500.0,
+            sample_every_s: 50.0,
+            seed,
+        };
+        let sched = SchedulerProfile::parse(policy).unwrap().build().unwrap();
+        let mut sim = SteadySim::new(cluster.build(), sched, trace, &cfg);
+        sim.run(&cfg)
+    };
+    for trace in [TraceSpec::default_trace(), TraceSpec::priority_trace(0.5)] {
+        for seed in [9u64, 23] {
+            let what = format!("{}/seed{seed}", trace.name);
+            let a = run("score(pwr=0.1,fgd=0.9)|bind(weighted:0.1)", &trace, seed);
+            let b = run(
+                "score(pwr=0.1,fgd=0.9)|bind(weighted:0.1)|mod(starve:50:0.5)|hook(preempt:4)",
+                &trace,
+                seed,
+            );
+            assert!(a.arrivals > 1_000, "{what}: arrivals {}", a.arrivals);
+            assert_eq!(a.arrivals, b.arrivals, "{what}: arrivals diverged");
+            assert_eq!(a.scheduled, b.scheduled, "{what}: scheduled diverged");
+            assert_eq!(a.failed, b.failed, "{what}: failed diverged");
+            assert_eq!(a.departures, b.departures, "{what}: departures diverged");
+            assert_eq!(
+                a.steady_eopc_w.to_bits(),
+                b.steady_eopc_w.to_bits(),
+                "{what}: steady EOPC diverged"
+            );
+            assert_eq!(
+                a.allocated_gpu_units.to_bits(),
+                b.allocated_gpu_units.to_bits(),
+                "{what}: allocated units diverged"
+            );
+            assert_eq!(b.pending_enqueues, 0, "{what}: enqueued while disabled");
+            assert_eq!(b.preemptions, 0, "{what}: preempted while disabled");
+        }
+    }
+}
+
+/// Conservation under `priority-50` churn with the full subsystem on
+/// (queue + `mod(starve)` + `hook(preempt)`), heavily overloaded so the
+/// queue, the starvation ledger and the preemption path all engage:
+/// * nothing vanishes — every arrival is allocated, departed or
+///   pending (`failed` stays 0 on a gang-free trace),
+/// * the enqueue/drain ledger balances (`enqueues + requeues =
+///   drains + depth`),
+/// * the starvation ledger is consistent (at most one event per queue
+///   stint) and actually fired under overload.
+#[test]
+fn conservation_under_priority_churn() {
+    let cfg = SteadyConfig {
+        mean_interarrival_s: 1.0,
+        mean_duration_s: 400.0,
+        horizon_s: 4_000.0,
+        sample_every_s: 100.0,
+        seed: 7,
+    };
+    let trace = TraceSpec::priority_trace(0.5);
+    let sched = SchedulerProfile::parse(
+        "score(pwr=0.1,fgd=0.9)|bind(weighted:0.1)|mod(starve:50:0.5)|hook(preempt:8)",
+    )
+    .unwrap()
+    .build()
+    .unwrap();
+    let mut sim = SteadySim::new(ClusterSpec::tiny(4, 4, 1).build(), sched, &trace, &cfg);
+    sim.enable_fairness(FairnessConfig { starve_threshold: 50.0 });
+    let r = sim.run(&cfg);
+    assert!(r.arrivals > 2_000, "arrivals {}", r.arrivals);
+    assert_eq!(r.failed, 0, "gang-free arrivals must never be dropped");
+    // Every arrival is exactly one of: still allocated, departed,
+    // or waiting in the queue. (Gang-free trace: one task = one
+    // datacenter allocation.)
+    assert_eq!(
+        r.arrivals,
+        sim.dc().n_tasks as u64 + r.departures + r.pending_depth,
+        "arrivals leaked (running {} departed {} pending {})",
+        sim.dc().n_tasks,
+        r.departures,
+        r.pending_depth
+    );
+    // Enqueue/drain ledger: everything that entered the queue either
+    // drained into a placement or is still waiting.
+    let (enq, req, drains, starved) = sim
+        .fairness_shared()
+        .map(|s| {
+            let core = s.lock().unwrap();
+            (core.enqueues(), core.requeues(), core.drains(), core.starvation_events())
+        })
+        .expect("fairness enabled");
+    assert_eq!(
+        enq + req,
+        drains + r.pending_depth,
+        "pending ledger out of balance"
+    );
+    assert_eq!(r.pending_enqueues, enq + req, "result snapshot diverged from core");
+    assert_eq!(r.pending_drains, drains, "result snapshot diverged from core");
+    assert!(enq > 0, "overloaded run never used the queue");
+    assert!(starved <= enq + req, "more starvation events than queue stints");
+    assert!(
+        r.starvation_events > 0,
+        "50s threshold never fired under sustained overload"
+    );
+    // Waits are real observations, not sentinel values.
+    assert!(r.p99_wait >= 0.0 && r.p99_wait.is_finite());
+    assert!(r.oldest_pending_age >= 0.0 && r.oldest_pending_age.is_finite());
+}
+
+/// Preemption end to end through the scheduler's postFail phase:
+/// a high-priority arrival on a full node evicts only
+/// strictly-lower-priority residents, victims re-enter the pending
+/// queue as requeued entries, and the datacenter accounting after the
+/// dust settles matches the surviving task set exactly.
+#[test]
+fn preemption_never_evicts_equal_or_higher_priority_and_restores_exactly() {
+    use repro::cluster::Placement;
+    use repro::tasks::{GpuDemand, Task, Workload};
+    let mut dc = ClusterSpec::tiny(1, 4, 0).build();
+    let w = Workload::default();
+    let mut sched = SchedulerProfile::parse(
+        "score(pwr=0.1,fgd=0.9)|bind(weighted:0.1)|hook(preempt:2)",
+    )
+    .unwrap()
+    .build()
+    .unwrap();
+    let fs = FairnessState::new(FairnessConfig::default());
+    sched.bind_fairness(fs.shared());
+    // Fill the single node: priorities [0, 0, 1, 2], one whole GPU each.
+    let mk = |id: u64, prio: u8| {
+        Task::new(id, 2.0, 512.0, GpuDemand::Whole(1)).with_priority(prio)
+    };
+    for (id, prio) in [(0u64, 0u8), (1, 0), (2, 1), (3, 2)] {
+        let task = mk(id, prio);
+        let d = sched.place(&mut dc, &w, &task).expect("fill placement");
+        fs.with_core(|c| c.note_resident(&task, d.node, &d.placement));
+    }
+    assert_eq!(dc.gpu_free_units(), 0.0);
+    // High-priority two-GPU arrival: must evict exactly the two
+    // cheapest best-effort tenants (never the priority-1/2 residents —
+    // budget 2 cannot free two GPUs from the lone priority-1 victim
+    // plus an equal-priority one, and equal priority is off-limits).
+    let big = Task::new(10, 2.0, 512.0, GpuDemand::Whole(2)).with_priority(2);
+    let d = sched.place(&mut dc, &w, &big).expect("preemption must free capacity");
+    fs.with_core(|c| c.note_resident(&big, d.node, &d.placement));
+    let victims = fs.with_core(|c| c.requeue_evicted());
+    assert_eq!(victims.len(), 2, "expected exactly two evictions");
+    assert!(
+        victims.iter().all(|id| *id <= 1),
+        "evicted a priority>=2 resident: {victims:?}"
+    );
+    let (depth, all_requeued, requeues) = fs.with_core(|c| {
+        (
+            c.pending_depth(),
+            c.pending_entries().iter().all(|e| e.requeued && e.task.priority == 0),
+            c.requeues(),
+        )
+    });
+    assert_eq!(depth, 2, "victims must land in the pending queue");
+    assert!(all_requeued, "victims must be marked as requeued best-effort entries");
+    assert_eq!(requeues, 2);
+    // Surviving set: tasks 2, 3 (one GPU each) + the new two-GPU task.
+    // All sizes are exactly-representable integers, so the accounting
+    // must match to the bit.
+    assert_eq!(dc.n_tasks, 3);
+    let node = &dc.nodes[0];
+    assert_eq!(node.cpu_alloc, 6.0, "cpu not restored exactly");
+    assert_eq!(node.mem_alloc, 1536.0, "mem not restored exactly");
+    assert_eq!(node.gpu_alloc.iter().filter(|a| **a == 1.0).count(), 4);
+    assert_eq!(node.gpu_alloc.iter().filter(|a| **a == 0.0).count(), 0);
+    // A best-effort arrival must never trigger preemption, and with the
+    // node full it simply fails.
+    let be = Task::new(11, 1.0, 128.0, GpuDemand::Whole(1));
+    assert!(sched.place(&mut dc, &w, &be).is_none());
+    assert_eq!(fs.with_core(|c| c.preemptions()), 2, "best-effort arrival preempted");
+    // Draining the queue after departures places the victims again.
+    match d.placement {
+        Placement::Whole { ref gpus } => assert_eq!(gpus.len(), 2),
+        ref p => panic!("expected whole-GPU placement, got {p:?}"),
+    }
+    sched.release(&mut dc, &big, d.node, &d.placement);
+    let head = fs.with_core(|c| c.head()).expect("queue has victims");
+    let rd = sched.place(&mut dc, &w, &head).expect("freed capacity hosts a victim");
+    let entry = fs.with_core(|c| c.pop_placed()).unwrap();
+    assert!(entry.requeued, "drained entry must keep its requeued mark");
+    assert_eq!(entry.task.id, head.id);
+    fs.with_core(|c| c.note_resident(&entry.task, rd.node, &rd.placement));
+    assert_eq!(fs.with_core(|c| c.pending_depth()), 1);
+}
+
+/// The inflation loop with the queue on: failed placements park in the
+/// queue instead of counting as failures, and the arrival ledger
+/// balances at the end of the run.
+#[test]
+fn inflation_queue_conserves_arrivals() {
+    let cluster = ClusterSpec::tiny(2, 4, 0);
+    let trace = TraceSpec::priority_trace(0.5);
+    let sched = SchedulerProfile::parse("score(pwr=0.1,fgd=0.9)|bind(weighted:0.1)")
+        .unwrap()
+        .build()
+        .unwrap();
+    let workload = trace.synthesize(5 ^ 0x57AB1E).workload();
+    let mut sim = Simulation::with_spec(cluster.build(), sched, &trace, workload, 5);
+    sim.record_frag = false;
+    sim.enable_fairness(FairnessConfig { starve_threshold: 100.0 });
+    let r = sim.run_inflation(2.0);
+    assert!(r.submitted > 0);
+    assert_eq!(r.failed, 0, "queued arrivals must not count as failed");
+    assert_eq!(
+        r.submitted,
+        r.scheduled + r.pending_depth,
+        "inflation arrivals leaked (pending {})",
+        r.pending_depth
+    );
+    assert!(r.pending_depth > 0, "2× capacity inflation never queued anything");
+    assert!(r.pending_enqueues >= r.pending_depth);
+}

@@ -329,3 +329,64 @@ fn fast_path_is_bit_identical_on_gang_traces() {
         }
     }
 }
+
+/// Decision tracing on gangs: every committed gang emits exactly one
+/// JSONL event with a per-member bind record, the event count equals
+/// `gangs_placed` (failed/rolled-back gangs leave no event), and each
+/// event round-trips the schema in `docs/observability.md` — tracer
+/// stamps, `now`, the parent task, and `n_members` consistent member
+/// rows carrying node + placement.
+#[test]
+fn traced_gang50_run_roundtrips_gang_events() {
+    use repro::obs::{DecisionTracer, TraceSink};
+    use repro::util::json::{self, Json};
+
+    let cluster = ClusterSpec::tiny(8, 4, 0).with_zones(2);
+    let trace = TraceSpec::gang_trace(0.5);
+    let profile = SchedulerProfile::parse("score(pwr=0.1,fgd=0.9)").unwrap();
+    let mut s = profile.build().unwrap();
+    let sink = TraceSink::memory();
+    s.set_tracer(DecisionTracer::new(sink.clone(), &profile.label, 7));
+    let dc = cluster.build();
+    let workload = trace.synthesize(7 ^ 0x57AB1E).workload();
+    let mut sim = Simulation::with_spec(dc, s, &trace, workload, 7);
+    sim.record_frag = false;
+    let out = sim.run_inflation(0.8);
+    assert!(out.gangs_placed > 0, "no gang placed");
+
+    let text = sink.contents();
+    let mut gang_events = 0u64;
+    for line in text.lines() {
+        let ev = json::parse(line).expect("traced line parses as JSON");
+        if ev.get("event").and_then(Json::as_str) != Some("gang") {
+            continue;
+        }
+        gang_events += 1;
+        // Tracer stamps shared with every traced event.
+        assert_eq!(ev.get("policy").and_then(Json::as_str), Some(profile.label.as_str()));
+        assert_eq!(ev.get("seed").and_then(Json::as_u64), Some(7));
+        assert!(ev.get("seq").and_then(Json::as_u64).is_some(), "missing seq");
+        // Gang schema: clock, parent task, per-member bind records.
+        assert!(ev.get("now").and_then(Json::as_u64).is_some(), "missing now");
+        let task_id =
+            ev.get("task").and_then(|t| t.get("id")).and_then(Json::as_u64);
+        assert!(task_id.is_some(), "missing task.id");
+        let n = ev.get("n_members").and_then(Json::as_u64).expect("n_members");
+        let members = ev.get("members").and_then(Json::as_arr).expect("members array");
+        assert_eq!(members.len() as u64, n, "n_members != members.len()");
+        assert!(n >= 1, "gang event with no members");
+        for (i, m) in members.iter().enumerate() {
+            assert_eq!(
+                m.get("member").and_then(Json::as_u64),
+                Some(i as u64),
+                "member rows out of order"
+            );
+            assert!(m.get("node").and_then(Json::as_u64).is_some(), "missing node");
+            // TP groups bind whole GPUs, never shared slices.
+            let placement = m.get("placement").and_then(Json::as_str).expect("placement");
+            assert!(placement.contains("Whole"), "gang member bound to {placement}");
+        }
+        assert!(matches!(ev.get("hooks"), Some(Json::Obj(_))), "missing hooks");
+    }
+    assert_eq!(gang_events, out.gangs_placed, "gang events != gangs_placed");
+}

@@ -213,3 +213,85 @@ fn trace_derivations_hold_for_arbitrary_knobs() {
         assert!(p_new[3] + p_new[4] + p_new[5] > p_base[3] + p_base[4] + p_base[5]);
     }
 }
+
+/// Randomized pending-queue invariants (`rust/src/sched/fairness.rs`):
+/// under any interleaving of enqueue (a failed placement), drain (a
+/// successful retry after a release) and clock ticks, the queue stays
+/// ordered priority-descending / FIFO within a priority tier, drains
+/// always serve the head, the queue tracks a plain reference model
+/// exactly, and `oldest_pending_age` is monotone between retries while
+/// the oldest entry keeps waiting.
+#[test]
+fn pending_queue_invariants_under_random_interleavings() {
+    use repro::sched::{FairnessConfig, FairnessCore};
+    for round in 0..10u64 {
+        let mut rng = Rng::new(4_000 + round);
+        let mut core = FairnessCore::new(FairnessConfig { starve_threshold: 25.0 });
+        let mut now = 0.0;
+        let mut next_id = 0u64;
+        let mut last_oldest = 0.0;
+        // Reference model: (priority, id) with the same insertion rule.
+        let mut expected: Vec<(u8, u64)> = Vec::new();
+        for _ in 0..600 {
+            match rng.next_u64() % 4 {
+                0 | 1 => {
+                    // Failed placement: enqueue with a random priority.
+                    let prio = (rng.next_u64() % 3) as u8;
+                    let task = Task::new(next_id, 1.0, 64.0, GpuDemand::Frac(0.25))
+                        .with_priority(prio);
+                    core.enqueue(task, false);
+                    let at = expected
+                        .iter()
+                        .position(|(p, _)| *p < prio)
+                        .unwrap_or(expected.len());
+                    expected.insert(at, (prio, next_id));
+                    next_id += 1;
+                }
+                2 => {
+                    // Successful retry: the drained entry must be the head.
+                    if let Some(head) = core.head() {
+                        let popped = core.pop_placed().unwrap();
+                        assert_eq!(popped.task.id, head.id, "round {round}: pop != head");
+                        let (prio, id) = expected.remove(0);
+                        assert_eq!(
+                            (popped.task.priority, popped.task.id),
+                            (prio, id),
+                            "round {round}: drain order diverged from the model"
+                        );
+                        // The pop may have removed the oldest entry —
+                        // reset the monotonicity baseline.
+                        last_oldest = 0.0;
+                    }
+                }
+                _ => {
+                    // Tick: the clock only moves forward, ages only grow.
+                    now += rng.range_f64(0.1, 5.0);
+                    core.set_now(now);
+                }
+            }
+            // FIFO within priority: (priority desc, seq asc) everywhere.
+            let entries = core.pending_entries();
+            for w in entries.windows(2) {
+                assert!(
+                    w[0].task.priority > w[1].task.priority
+                        || (w[0].task.priority == w[1].task.priority
+                            && w[0].seq < w[1].seq),
+                    "round {round}: queue not (priority desc, FIFO) ordered"
+                );
+            }
+            let got: Vec<(u8, u64)> =
+                entries.iter().map(|e| (e.task.priority, e.task.id)).collect();
+            assert_eq!(got, expected, "round {round}: queue diverged from the model");
+            // oldest_pending_age never shrinks while the oldest waits.
+            let oldest = core.oldest_pending_age();
+            assert!(
+                oldest + 1e-9 >= last_oldest,
+                "round {round}: oldest age shrank without a drain \
+                 ({oldest} < {last_oldest})"
+            );
+            last_oldest = if core.pending_depth() > 0 { oldest } else { 0.0 };
+            // The starvation ledger fires at most once per queue stint.
+            assert!(core.starvation_events() <= core.enqueues() + core.requeues());
+        }
+    }
+}
